@@ -1,0 +1,66 @@
+//! Fig. 11 in your terminal: replay failure trace-a or trace-b against all
+//! five recovery policies and chart the cluster WAF over time.
+//!
+//!     cargo run --release --example trace_replay -- [a|b] [seed]
+
+use unicron::config::{table3_case, ClusterSpec, UnicronConfig};
+use unicron::failure::{Severity, Trace, TraceConfig};
+use unicron::metrics::Figure;
+use unicron::simulator::{compare_policies, PolicyKind};
+use unicron::util::{fmt_duration, fmt_si};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let which = args.first().map(String::as_str).unwrap_or("a");
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(42);
+    let tc = match which {
+        "a" => TraceConfig::trace_a(),
+        "b" => TraceConfig::trace_b(),
+        other => {
+            eprintln!("unknown trace {other:?} (want a|b)");
+            std::process::exit(1);
+        }
+    };
+
+    let trace = Trace::generate(tc.clone(), seed);
+    println!(
+        "{}: {} over {} — {} SEV1 (node drain), {} SEV2/SEV3",
+        tc.name,
+        trace.events.len(),
+        fmt_duration(tc.duration_s),
+        trace.count_by_severity(Severity::Sev1),
+        trace.events.len() - trace.count_by_severity(Severity::Sev1),
+    );
+
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let results = compare_policies(&cluster, &cfg, &specs, &trace);
+    let uni = results.iter().find(|r| r.policy == PolicyKind::Unicron).unwrap().accumulated_waf;
+
+    println!("\n{:<10} {:>14} {:>18} {:>11} {:>10}", "system", "mean WAF", "accumulated", "reduction", "Unicron ×");
+    for r in &results {
+        println!(
+            "{:<10} {:>11}FL/s {:>15}FL·s {:>10.1}% {:>9.1}×",
+            r.policy.name(),
+            fmt_si(r.mean_waf()),
+            fmt_si(r.accumulated_waf),
+            r.reduction() * 100.0,
+            uni / r.accumulated_waf.max(1.0),
+        );
+    }
+
+    let mut fig = Figure::new(&format!("WAF over time — {}", tc.name), "days", "PFLOP/s");
+    for r in &results {
+        let s = fig.series_mut(r.policy.name());
+        let step = (r.waf_series.len() / 200).max(1);
+        for (i, &(t, w)) in r.waf_series.iter().enumerate() {
+            if i % step == 0 {
+                s.push(t / 86400.0, w / 1e15);
+            }
+        }
+    }
+    println!("\n{}", fig.ascii_chart(110, 20));
+    fig.save_csv(format!("trace_{which}_waf.csv")).ok();
+    println!("series written to trace_{which}_waf.csv");
+}

@@ -1,0 +1,126 @@
+"""AOT compile path: lower the L2 training graphs to HLO **text** artifacts.
+
+Run once by ``make artifacts``; Python never runs again after this. For every
+named :data:`compile.model.CONFIGS` entry it writes
+
+    artifacts/<name>/micro_step.hlo.txt     (params…, tokens) -> (loss, grads…)
+    artifacts/<name>/apply_update.hlo.txt   (params…, m…, v…, grads…, step, lr)
+                                            -> (params…, m…, v…)
+    artifacts/<name>/manifest.json          tensor table + io orders + config
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_manifest(cfg: M.GptConfig) -> dict:
+    table = cfg.param_table()
+    names = [name for name, _, _, _ in table]
+    return {
+        "format_version": 1,
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len,
+            "micro_batch": cfg.micro_batch,
+            "n_params": cfg.n_params(),
+            "flops_per_token": cfg.flops_per_token(),
+            "beta1": cfg.beta1,
+            "beta2": cfg.beta2,
+            "eps": cfg.eps,
+            "weight_decay": cfg.weight_decay,
+        },
+        "params": [
+            {"name": name, "shape": list(shape), "init": init, "decay": decay,
+             "elems": math.prod(shape)}
+            for name, shape, init, decay in table
+        ],
+        "micro_step": {
+            "inputs": [f"param:{n}" for n in names] + ["tokens"],
+            "outputs": ["loss"] + [f"grad:{n}" for n in names],
+            "tokens_shape": [cfg.micro_batch, cfg.seq_len + 1],
+            "tokens_dtype": "s32",
+        },
+        "apply_update": {
+            "inputs": ([f"param:{n}" for n in names] + [f"m:{n}" for n in names]
+                        + [f"v:{n}" for n in names] + [f"grad:{n}" for n in names]
+                        + ["step", "lr"]),
+            "outputs": ([f"param:{n}" for n in names] + [f"m:{n}" for n in names]
+                         + [f"v:{n}" for n in names]),
+        },
+    }
+
+
+def lower_config(cfg: M.GptConfig, outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    t0 = time.time()
+
+    spec = {name: jax.ShapeDtypeStruct(shape, jnp.float32)
+            for name, shape, _, _ in cfg.param_table()}
+    tokens_spec = jax.ShapeDtypeStruct((cfg.micro_batch, cfg.seq_len + 1), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    micro = jax.jit(lambda p, t: M.micro_step(cfg, p, t)).lower(spec, tokens_spec)
+    with open(os.path.join(outdir, "micro_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(micro))
+
+    upd = jax.jit(lambda p, m, v, g, s, lr: M.apply_update(cfg, p, m, v, g, s, lr)).lower(
+        spec, spec, spec, spec, scalar, scalar)
+    with open(os.path.join(outdir, "apply_update.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(upd))
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(build_manifest(cfg), f, indent=1)
+
+    print(f"[aot] {cfg.name}: {cfg.n_params():,} params lowered in {time.time()-t0:.1f}s "
+          f"-> {outdir}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--configs", default="tiny,mini,gpt100m",
+                    help="comma-separated config names (see compile.model.CONFIGS)")
+    args = ap.parse_args()
+
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in M.CONFIGS:
+            sys.exit(f"unknown config {name!r}; known: {sorted(M.CONFIGS)}")
+        lower_config(M.CONFIGS[name], os.path.join(args.out, name))
+
+
+if __name__ == "__main__":
+    main()

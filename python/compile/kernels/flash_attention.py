@@ -1,0 +1,285 @@
+"""Flash attention as a Pallas kernel (forward + backward, custom_vjp).
+
+Hardware adaptation (paper targets A800/CUDA; see DESIGN.md §5): the tiled
+online-softmax schedule CUDA implementations express with threadblocks and
+shared memory is expressed here with a Pallas ``grid`` + ``BlockSpec`` over
+VMEM tiles, shaped for the TPU MXU:
+
+  * grid ``(batch*heads, seq/block_q)``; each program owns one ``(block_q, d)``
+    query tile resident in VMEM and streams ``(block_k, d)`` key/value tiles
+    with ``pl.dslice`` loads — the HBM→VMEM pipeline that threadblocks +
+    cp.async do on GPUs.
+  * block sizes default to 128 (MXU systolic array edge) clipped to the
+    sequence length; accumulators are f32 as they would be on the MXU.
+  * the causal variant skips entirely-masked key blocks (``hi`` loop bound),
+    the same work-skipping as FlashAttention's causal kernel.
+
+All kernels run with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute, while interpret-mode lowers to
+plain HLO that runs anywhere (and is what ``aot.py`` bakes into artifacts).
+
+VMEM footprint estimate per program (f32, d=64, block=128):
+  q tile 32 KiB + k/v tiles 64 KiB + acc 32 KiB + m/l 1 KiB ≈ 130 KiB
+— far under the ~16 MiB VMEM budget, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+DEFAULT_BLOCK = 128
+
+
+def _block_sizes(seq: int, block_q: int | None, block_k: int | None) -> Tuple[int, int]:
+    bq = min(block_q or DEFAULT_BLOCK, seq)
+    bk = min(block_k or DEFAULT_BLOCK, seq)
+    if seq % bq or seq % bk:
+        raise ValueError(f"seq={seq} must be a multiple of block_q={bq} and block_k={bk}")
+    return bq, bk
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_q, block_k, seq, causal):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # (block_q, d)
+    d = q.shape[-1]
+
+    num_kv = seq // block_k
+    if causal:
+        # Highest kv block that intersects the visible (lower-triangular)
+        # region of this q tile; later blocks are fully masked -> skipped.
+        hi = (qi * block_q + block_q + block_k - 1) // block_k
+    else:
+        hi = num_kv
+
+    q_idx = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (block_q, block_k)
+        if causal:
+            k_idx = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_idx[:, None] >= k_idx[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        return acc_new, m_new, l_new
+
+    init = (
+        jnp.zeros((block_q, d), jnp.float32),
+        jnp.full((block_q,), NEG_INF, jnp.float32),
+        jnp.zeros((block_q,), jnp.float32),
+    )
+    acc, m, l = jax.lax.fori_loop(0, hi, body, init)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def _fwd(q, k, v, *, causal, block_q, block_k):
+    b, h, s, d = q.shape
+    bq, bk = _block_sizes(s, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_q=bq, block_k=bk, seq=s, causal=causal
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bq), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, s), jnp.float32),
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    return o.reshape(b, h, s, d), lse.reshape(b, h, s)
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, scale, block_q, block_k, seq, causal):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    d = q.shape[-1]
+
+    num_kv = seq // block_k
+    hi = (qi * block_q + block_q + block_k - 1) // block_k if causal else num_kv
+    q_idx = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, dq):
+        k = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            k_idx = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            z = jnp.where(q_idx[:, None] >= k_idx[None, :], z, NEG_INF)
+        p = jnp.exp(z - lse[:, None])
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        dz = p * (dp - delta[:, None]) * scale
+        return dq + jax.lax.dot_general(dz, k, (((1,), (0,)), ((), ())))
+
+    dq = jax.lax.fori_loop(0, hi, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, scale, block_q, block_k, seq, causal):
+    ki = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)
+    d = k.shape[-1]
+
+    num_q = seq // block_q
+    # Causal: q tiles strictly before this kv tile see none of it.
+    lo = (ki * block_k) // block_q if causal else 0
+    k_idx = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (0, pl.dslice(i * block_q, block_q), slice(None))).astype(jnp.float32)
+        do = pl.load(do_ref, (0, pl.dslice(i * block_q, block_q), slice(None))).astype(jnp.float32)
+        lse = pl.load(lse_ref, (0, pl.dslice(i * block_q, block_q)))
+        delta = pl.load(delta_ref, (0, pl.dslice(i * block_q, block_q)))
+        z = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (block_q, block_k)
+        if causal:
+            q_idx = i * block_q + jax.lax.iota(jnp.int32, block_q)
+            z = jnp.where(q_idx[:, None] >= k_idx[None, :], z, NEG_INF)
+        p = jnp.exp(z - lse[:, None])
+        dv_new = dv + jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))  # (block_k, d)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        dz = p * (dp - delta[:, None]) * scale
+        dk_new = dk + jax.lax.dot_general(dz, q, (((0,), (0,)), ((), ())))
+        return dk_new, dv_new
+
+    init = (jnp.zeros((block_k, d), jnp.float32), jnp.zeros((block_k, d), jnp.float32))
+    dk, dv = jax.lax.fori_loop(lo, num_q, body, init)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(causal, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    b, h, s, d = q.shape
+    bq, bk = _block_sizes(s, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    # delta_i = rowsum(dO_i * O_i) — tiny elementwise reduction; computed in
+    # plain jnp (fuses into the surrounding HLO) rather than its own kernel.
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # (b,h,s)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    dof = do.reshape(b * h, s, d)
+    lsef = lse.reshape(b * h, s)
+    deltaf = delta.reshape(b * h, s)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, block_q=bq, block_k=bk, seq=s, causal=causal),
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bq), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bq), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, dof, lsef, deltaf)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, block_q=bq, block_k=bk, seq=s, causal=causal),
+        grid=(b * h, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        ],
+        interpret=True,
+    )(qf, kf, vf, dof, lsef, deltaf)
+
+    return (
+        dq.reshape(b, h, s, d),
+        dk.reshape(b, h, s, d),
+        dv.reshape(b, h, s, d),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, block_q: int | None = None, block_k: int | None = None):
+    """Tiled online-softmax attention; differentiable via custom flash bwd.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``; seq must be a multiple of
+        the block sizes (defaults: min(128, seq)).
+      causal: lower-triangular masking with masked-block skipping.
+
+    Returns:
+      ``(batch, heads, seq, head_dim)``, same dtype as ``q``.
+    """
+    o, _ = _fwd(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, block_q, block_k):
+    o, lse = _fwd(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, block_q, block_k, res, do):
+    return _bwd(causal, block_q, block_k, res, do)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

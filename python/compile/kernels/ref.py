@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+the most obvious way possible. pytest/hypothesis compare kernel outputs (and
+gradients, via ``jax.grad``) against these oracles with ``assert_allclose`` —
+this is the core correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() exactly zero
+# without generating NaNs via (-inf) - (-inf) in fully-masked rows.
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Plain softmax attention.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``.
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      ``(batch, heads, seq, head_dim)`` attention output.
+    """
+    *_, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-token softmax cross-entropy.
+
+    Args:
+      logits: ``(tokens, vocab)`` float.
+      targets: ``(tokens,)`` int class ids.
+
+    Returns:
+      ``(tokens,)`` float32 loss per token.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return lse - picked
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Row-wise layer normalization over the last axis."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)

@@ -1,0 +1,223 @@
+"""Layer 2: GPT (decoder-only transformer) forward/backward + AdamW in JAX.
+
+This is the Megatron-equivalent compute graph the Unicron coordinator manages.
+It is authored here, lowered once by ``aot.py`` to HLO text, and executed at
+run time by the Rust trainer through PJRT — Python never touches the request
+path.
+
+The training step is split in two artifacts on purpose (see DESIGN.md §2):
+
+  * ``micro_step(params, tokens) -> (loss, grads)`` — one micro-batch forward
+    + backward. Gradient *accumulation* across micro-batches and the DP
+    all-reduce happen in Rust, which is exactly what lets the coordinator
+    redistribute a failed DP rank's micro-batches mid-iteration (paper §6.2,
+    Eq. 7) with bit-exact optimizer semantics.
+  * ``apply_update(params, m, v, grads, step, lr) -> (params, m, v)`` — AdamW,
+    applied once per global batch after the all-reduce.
+
+Parameters live in a *flat name->array dict*; JAX flattens dicts in sorted
+key order, and names are zero-padded so that order is stable. ``aot.py``
+writes the same order into the artifact manifest for the Rust side.
+
+The attention and LM-head loss hot spots call the Pallas kernels from
+``kernels/`` so they lower into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.softmax_xent import softmax_xent
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    """Model + micro-batch shape; fully determines the lowered artifacts."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    micro_batch: int
+    block_q: int = 128
+    block_k: int = 128
+    block_t: int = 8
+    # AdamW hyper-parameters are baked into apply_update; lr and step are
+    # runtime scalars so Rust owns the schedule.
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    use_pallas: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_table(self) -> List[Tuple[str, Tuple[int, ...], str, bool]]:
+        """(name, shape, init, weight_decay?) for every parameter.
+
+        init is one of ``normal:<std>``, ``zeros``, ``ones`` — the Rust side
+        materializes initial values from this table (no multi-hundred-MB
+        params.bin artifact needed).
+        """
+        d, v, s = self.d_model, self.vocab, self.seq_len
+        std = 0.02
+        # residual-projection init scaled GPT-2 style
+        pstd = 0.02 / math.sqrt(2.0 * self.n_layers)
+        table: List[Tuple[str, Tuple[int, ...], str, bool]] = [
+            ("tok_emb", (v, d), f"normal:{std}", False),
+            ("pos_emb", (s, d), f"normal:{std}", False),
+            ("lnf_g", (d,), "ones", False),
+            ("lnf_b", (d,), "zeros", False),
+        ]
+        for i in range(self.n_layers):
+            p = f"h{i:02d}_"
+            table += [
+                (p + "ln1_g", (d,), "ones", False),
+                (p + "ln1_b", (d,), "zeros", False),
+                (p + "qkv_w", (d, 3 * d), f"normal:{std}", True),
+                (p + "qkv_b", (3 * d,), "zeros", False),
+                (p + "proj_w", (d, d), f"normal:{pstd}", True),
+                (p + "proj_b", (d,), "zeros", False),
+                (p + "ln2_g", (d,), "ones", False),
+                (p + "ln2_b", (d,), "zeros", False),
+                (p + "fc_w", (d, 4 * d), f"normal:{std}", True),
+                (p + "fc_b", (4 * d,), "zeros", False),
+                (p + "out_w", (4 * d, d), f"normal:{pstd}", True),
+                (p + "out_b", (d,), "zeros", False),
+            ]
+        return sorted(table)  # dict-flatten order
+
+    def n_params(self) -> int:
+        return sum(math.prod(shape) for _, shape, _, _ in self.param_table())
+
+    def flops_per_token(self) -> float:
+        """Approximate training FLOPs per token (fwd+bwd ≈ 6N + attention)."""
+        n = self.n_params()
+        attn = 12 * self.n_layers * self.d_model * self.seq_len  # qk^T + pv, fwd+bwd
+        return 6.0 * n + attn
+
+
+def init_params(cfg: GptConfig, key: jax.Array) -> Params:
+    """Reference initializer (tests only; Rust has its own from the manifest)."""
+    params: Params = {}
+    for name, shape, init, _ in cfg.param_table():
+        if init == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = float(init.split(":")[1])
+            key, sub = jax.random.split(key)
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * std
+    return params
+
+
+def _layer_norm(x, g, b):
+    return ref.layer_norm(x, g, b)
+
+
+def _attention(cfg: GptConfig, x: jax.Array, p: Params, prefix: str) -> jax.Array:
+    bsz, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ p[prefix + "qkv_w"] + p[prefix + "qkv_b"]  # (b, s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (b, s, d) -> (b, h, s, hd)
+        return t.reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)
+
+    if cfg.use_pallas:
+        o = flash_attention(heads(q), heads(k), heads(v), True, cfg.block_q, cfg.block_k)
+    else:
+        o = ref.attention(heads(q), heads(k), heads(v), causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, s, d)
+    return o @ p[prefix + "proj_w"] + p[prefix + "proj_b"]
+
+
+def _mlp(x: jax.Array, p: Params, prefix: str) -> jax.Array:
+    hmid = jax.nn.gelu(x @ p[prefix + "fc_w"] + p[prefix + "fc_b"])
+    return hmid @ p[prefix + "out_w"] + p[prefix + "out_b"]
+
+
+def forward_loss(cfg: GptConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """Mean LM loss for a ``(micro_batch, seq_len+1)`` int32 token block."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    bsz, s = inputs.shape
+    x = params["tok_emb"][inputs] + params["pos_emb"][None, :s]
+    for i in range(cfg.n_layers):
+        pfx = f"h{i:02d}_"
+        x = x + _attention(cfg, _layer_norm(x, params[pfx + "ln1_g"], params[pfx + "ln1_b"]), params, pfx)
+        x = x + _mlp(_layer_norm(x, params[pfx + "ln2_g"], params[pfx + "ln2_b"]), params, pfx)
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = (x @ params["tok_emb"].T).reshape(bsz * s, cfg.vocab)
+    if cfg.use_pallas:
+        losses = softmax_xent(logits, targets.reshape(-1), cfg.block_t)
+    else:
+        losses = ref.softmax_xent(logits, targets.reshape(-1))
+    return jnp.mean(losses)
+
+
+def micro_step(cfg: GptConfig, params: Params, tokens: jax.Array):
+    """One micro-batch: ``(loss, grads)``. Lowered to ``micro_step.hlo.txt``."""
+    loss, grads = jax.value_and_grad(lambda p: forward_loss(cfg, p, tokens))(params)
+    return loss, grads
+
+
+def apply_update(cfg: GptConfig, params: Params, m: Params, v: Params, grads: Params,
+                 step: jax.Array, lr: jax.Array):
+    """AdamW with bias correction; decay mask from the param table.
+
+    ``step`` is the 1-based update index as f32; ``lr`` the learning rate.
+    Lowered to ``apply_update.hlo.txt``.
+    """
+    decay = {name: wd for name, _, _, wd in cfg.param_table()}
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - jnp.power(b1, step)
+    bc2 = 1.0 - jnp.power(b2, step)
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name]
+        m2 = b1 * m[name] + (1.0 - b1) * g
+        v2 = b2 * v[name] + (1.0 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if decay[name]:
+            upd = upd + cfg.weight_decay * params[name]
+        new_p[name] = params[name] - lr * upd
+        new_m[name] = m2
+        new_v[name] = v2
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Named configurations (the artifact set). ``tiny`` is the cargo-test model,
+# ``mini`` the quickstart, ``gpt100m`` the end-to-end validation model
+# (~110M params — GPT-2-small-shaped with a 32k vocab and short context).
+# ---------------------------------------------------------------------------
+
+CONFIGS: Dict[str, GptConfig] = {
+    c.name: c
+    for c in [
+        GptConfig(name="tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                  seq_len=32, micro_batch=4, block_q=32, block_k=32, block_t=8),
+        GptConfig(name="mini", vocab=512, d_model=128, n_layers=4, n_heads=4,
+                  seq_len=64, micro_batch=4, block_q=64, block_k=64, block_t=8),
+        GptConfig(name="gpt100m", vocab=32768, d_model=768, n_layers=12, n_heads=12,
+                  seq_len=128, micro_batch=1, block_q=128, block_k=128, block_t=8),
+    ]
+}

@@ -1,0 +1,68 @@
+"""Artifact/manifest consistency: what aot.py writes is what Rust will read."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest_for(name):
+    path = os.path.join(ART, name, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"artifacts for {name!r} not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", ["tiny", "mini", "gpt100m"])
+def test_manifest_matches_config(name):
+    cfg = M.CONFIGS[name]
+    man = manifest_for(name)
+    assert man["config"]["n_params"] == cfg.n_params()
+    assert [p["name"] for p in man["params"]] == [n for n, *_ in cfg.param_table()]
+    n = len(man["params"])
+    ms = man["micro_step"]
+    assert len(ms["inputs"]) == n + 1 and ms["inputs"][-1] == "tokens"
+    assert len(ms["outputs"]) == n + 1 and ms["outputs"][0] == "loss"
+    au = man["apply_update"]
+    assert len(au["inputs"]) == 4 * n + 2
+    assert len(au["outputs"]) == 3 * n
+    assert ms["tokens_shape"] == [cfg.micro_batch, cfg.seq_len + 1]
+
+
+@pytest.mark.parametrize("name", ["tiny", "mini"])
+def test_hlo_entry_layout_matches_manifest(name):
+    """The HLO entry computation must have exactly the parameter count and
+    shapes the manifest promises, in manifest order."""
+    cfg = M.CONFIGS[name]
+    man = manifest_for(name)
+    path = os.path.join(ART, name, "micro_step.hlo.txt")
+    with open(path) as f:
+        head = f.read(200_000)
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", head, re.S)
+    assert m, "no entry_computation_layout in HLO text"
+    args = re.findall(r"(f32|s32)\[([\d,]*)\]", m.group(1))
+    assert len(args) == len(man["params"]) + 1
+    for (dt, dims), spec in zip(args[:-1], man["params"]):
+        assert dt == "f32"
+        shape = [int(x) for x in dims.split(",")] if dims else []
+        assert shape == spec["shape"], spec["name"]
+    assert args[-1][0] == "s32"
+    assert [int(x) for x in args[-1][1].split(",")] == [cfg.micro_batch, cfg.seq_len + 1]
+
+
+def test_build_manifest_roundtrips_json():
+    man = aot.build_manifest(M.CONFIGS["tiny"])
+    assert json.loads(json.dumps(man)) == man
+
+
+def test_flops_per_token_dominated_by_6n():
+    cfg = M.CONFIGS["gpt100m"]
+    assert cfg.flops_per_token() >= 6 * cfg.n_params()
+    assert cfg.flops_per_token() < 8 * cfg.n_params()

@@ -1,0 +1,175 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (``ref.py``).
+
+Hypothesis sweeps shapes/dtypes; every comparison is an ``assert_allclose``
+against the oracle, including gradients through the custom VJPs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.softmax_xent import softmax_xent
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention — forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,s,d,bq,bk", [
+    (1, 1, 32, 16, 32, 32),
+    (2, 2, 64, 32, 32, 32),
+    (1, 3, 128, 64, 64, 64),
+    (2, 1, 128, 32, 128, 64),   # single q block, multiple k blocks
+    (1, 2, 128, 64, 32, 128),   # multiple q blocks, single k block
+])
+def test_flash_fwd_matches_ref(causal, b, h, s, d, bq, bk):
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (rand(kk, (b, h, s, d)) for kk in keys)
+    out = flash_attention(q, k, v, causal, bq, bk)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    s_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_fwd_hypothesis(b, h, s_blocks, block, d, causal, seed):
+    s = s_blocks * block
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(kk, (b, h, s, d)) for kk in keys)
+    out = flash_attention(q, k, v, causal, block, block)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_fwd_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (rand(kk, (2, 2, 64, 32), jnp.bfloat16) for kk in keys)
+    out = flash_attention(q, k, v, True, 32, 32)
+    want = ref.attention(q, k, v, causal=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(out.astype(np.float32), want.astype(np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_flash_rejects_ragged_seq():
+    q = jnp.zeros((1, 1, 48, 16))
+    with pytest.raises(ValueError, match="multiple"):
+        flash_attention(q, q, q, True, 32, 32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention — backward (custom_vjp vs autodiff through the oracle)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,s,d,bq,bk", [
+    (1, 1, 32, 16, 32, 32),
+    (2, 2, 64, 32, 32, 32),
+    (1, 2, 128, 64, 64, 64),
+    (1, 1, 128, 32, 32, 64),   # asymmetric blocks
+])
+def test_flash_bwd_matches_ref(causal, b, h, s, d, bq, bk):
+    keys = jax.random.split(jax.random.PRNGKey(11), 4)
+    q, k, v = (rand(kk, (b, h, s, d)) for kk in keys[:3])
+    w = rand(keys[3], (b, h, s, d))  # random cotangent via weighted sum
+
+    def scalar(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) * w)
+
+    got = jax.grad(scalar(lambda q, k, v: flash_attention(q, k, v, causal, bq, bk)),
+                   argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(scalar(lambda q, k, v: ref.attention(q, k, v, causal=causal)),
+                    argnums=(0, 1, 2))(q, k, v)
+    for g, wnt, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(g, wnt, atol=5e-4, rtol=5e-4,
+                                   err_msg=f"d{name} mismatch")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s_blocks=st.integers(1, 3),
+    block=st.sampled_from([16, 32]),
+    d=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_bwd_hypothesis(s_blocks, block, d, causal, seed):
+    s = s_blocks * block
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q, k, v = (rand(kk, (1, 2, s, d)) for kk in keys[:3])
+    w = rand(keys[3], (1, 2, s, d))
+    got = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v, causal, block, block) * w))(q)
+    want = jax.grad(lambda q: jnp.sum(ref.attention(q, k, v, causal=causal) * w))(q)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,v,bt", [(8, 64, 8), (32, 512, 8), (16, 1000, 4), (64, 256, 16)])
+def test_xent_fwd_matches_ref(t, v, bt):
+    key = jax.random.PRNGKey(5)
+    logits = rand(key, (t, v), scale=3.0)
+    targets = jax.random.randint(key, (t,), 0, v)
+    got = softmax_xent(logits, targets, bt)
+    want = ref.softmax_xent(logits, targets)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t_blocks=st.integers(1, 4),
+    bt=st.sampled_from([2, 4, 8]),
+    v=st.sampled_from([17, 64, 257, 1024]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_hypothesis(t_blocks, bt, v, scale, seed):
+    t = t_blocks * bt
+    key = jax.random.PRNGKey(seed)
+    logits = rand(key, (t, v), scale=scale)
+    targets = jax.random.randint(key, (t,), 0, v)
+    got = softmax_xent(logits, targets, bt)
+    want = ref.softmax_xent(logits, targets)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+    dg = jax.grad(lambda x: jnp.mean(softmax_xent(x, targets, bt)))(logits)
+    dw = jax.grad(lambda x: jnp.mean(ref.softmax_xent(x, targets)))(logits)
+    np.testing.assert_allclose(dg, dw, atol=3e-5, rtol=3e-5)
+
+
+def test_xent_extreme_logits_stable():
+    # Large-magnitude logits must not overflow (max-subtraction inside kernel).
+    logits = jnp.array([[1e4, -1e4, 0.0, 5e3]] * 4, jnp.float32)
+    targets = jnp.array([0, 1, 2, 3], jnp.int32)
+    got = softmax_xent(logits, targets, 4)
+    want = ref.softmax_xent(logits, targets)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_xent_rejects_ragged_tokens():
+    with pytest.raises(ValueError, match="multiple"):
+        softmax_xent(jnp.zeros((10, 8)), jnp.zeros((10,), jnp.int32), 4)

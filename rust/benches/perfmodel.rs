@@ -1,0 +1,29 @@
+//! Fig. 4 — the configuration search itself: cost of `best_config` across
+//! the model zoo and the full `throughput_table` calibration pass the
+//! coordinator runs per task, plus the Fig. 4 table output.
+
+use unicron::bench::Bencher;
+use unicron::config::{ClusterSpec, ModelSpec};
+use unicron::perfmodel::{best_config, throughput_table};
+
+fn main() {
+    let cluster = ClusterSpec::default();
+    let mut b = Bencher::new("perfmodel").with_samples(3, 20);
+
+    for name in ModelSpec::zoo() {
+        let model = ModelSpec::gpt3(name).unwrap();
+        b.bench(&format!("best_config_{name}_128"), || {
+            std::hint::black_box(best_config(&model, &cluster, 128));
+        });
+    }
+
+    let m7 = ModelSpec::gpt3("gpt3-7b").unwrap();
+    b.bench("throughput_table_7b_0..128", || {
+        let t = throughput_table(&m7, &cluster, 128);
+        assert_eq!(t.len(), 129);
+    });
+
+    // print the Fig. 4 rows (the repro harness shares this path)
+    println!();
+    println!("{}", unicron::repro::run("fig4", 42).unwrap());
+}

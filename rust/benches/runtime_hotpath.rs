@@ -1,0 +1,133 @@
+//! L3 hot-path microbenchmarks (the §Perf targets of DESIGN.md §7):
+//! PJRT micro-step / optimizer dispatch, host-side gradient all-reduce
+//! bandwidth, checkpoint encode/decode throughput, kvstore op rate, and
+//! simulator event rate.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use unicron::bench::Bencher;
+use unicron::checkpoint::{decode, encode};
+use unicron::kvstore::Store;
+use unicron::runtime::{allreduce_sum, ModelRuntime, TrainState};
+use unicron::util::{fmt_bytes, RealClock, SimClock};
+
+fn artifact(name: &str) -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn main() {
+    let mut b = Bencher::new("runtime_hotpath").with_samples(2, 15);
+
+    // -- PJRT dispatch -------------------------------------------------------
+    if let Some(dir) = artifact("tiny") {
+        let rt = ModelRuntime::load(&dir).unwrap();
+        let state = rt.init_state(0);
+        let tokens: Vec<i32> = (0..rt.manifest.tokens_shape.iter().product::<usize>())
+            .map(|i| (i % rt.manifest.vocab) as i32)
+            .collect();
+        let mut grads = None;
+        b.bench("pjrt_micro_step_tiny", || {
+            grads = Some(rt.micro_step(&state.params, &tokens).unwrap().grads);
+        });
+        let grads = grads.unwrap();
+        let mut st = state.clone();
+        b.bench("pjrt_apply_update_tiny", || {
+            rt.apply_update(&mut st, &grads, 1e-3).unwrap();
+        });
+    } else {
+        eprintln!("artifacts/tiny missing — PJRT section skipped");
+    }
+
+    // -- host all-reduce (Eq. 6) ---------------------------------------------
+    // 110M-parameter-class gradient set: 4 ranks × 110 MB of f32.
+    let tensor: Vec<f32> = vec![1.0; 27_580_032];
+    let rank: Vec<Vec<f32>> = vec![tensor; 4];
+    // pure accumulate bandwidth (the actual hot-loop op; no clone traffic)
+    {
+        let mut dst = rank.clone();
+        let st = b
+            .bench("add_assign_110MB", || {
+                unicron::runtime::add_assign(&mut dst, &rank);
+            })
+            .unwrap();
+        let bytes = 27_580_032u64 * 4 * 4 * 3; // 4 tensors × (2 reads + 1 write)
+        println!("  -> add_assign bandwidth: {}/s", fmt_bytes((bytes as f64 / st.median) as u64));
+    }
+    let bytes_moved = 4u64 * 27_580_032 * 4 * 4; // read 4 rank copies + write
+    let st = b
+        .bench("allreduce_4x110MB", || {
+            let ranks: Vec<Vec<Vec<f32>>> =
+                (0..4).map(|_| rank.clone()).collect::<Vec<_>>();
+            std::hint::black_box(allreduce_sum(ranks, 8));
+        })
+        .unwrap();
+    println!(
+        "  -> all-reduce effective bandwidth: {}/s (incl. clone traffic)",
+        fmt_bytes((bytes_moved as f64 / st.median) as u64)
+    );
+
+    // -- checkpoint codec ------------------------------------------------------
+    let state = TrainState {
+        params: vec![vec![0.5; 1 << 20]; 8], // 32 MiB params
+        m: vec![vec![0.1; 1 << 20]; 8],
+        v: vec![vec![0.2; 1 << 20]; 8],
+        step: 7,
+    };
+    let total = state.size_bytes();
+    let st = b.bench("checkpoint_encode_96MiB", || {
+        std::hint::black_box(encode(&state));
+    });
+    if let Some(st) = st {
+        println!("  -> encode throughput: {}/s", fmt_bytes((total as f64 / st.median) as u64));
+    }
+    let blob = encode(&state);
+    let st = b.bench("checkpoint_decode_96MiB", || {
+        std::hint::black_box(decode(&blob).unwrap());
+    });
+    if let Some(st) = st {
+        println!("  -> decode throughput: {}/s", fmt_bytes((total as f64 / st.median) as u64));
+    }
+
+    // -- kvstore op rate -------------------------------------------------------
+    let store = Store::new(Arc::new(RealClock::new()));
+    let mut i = 0u64;
+    let st = b
+        .bench("kvstore_put_get_x1000", || {
+            for _ in 0..1000 {
+                i += 1;
+                let key = format!("/status/{}/{}", i % 16, i);
+                store.put(&key, "ok", None).unwrap();
+                std::hint::black_box(store.get(&key));
+            }
+        })
+        .unwrap();
+    println!("  -> kvstore: {:.0} op-pairs/s", 1000.0 / st.median);
+
+    // -- simulator event rate ---------------------------------------------------
+    let trace = unicron::failure::Trace::generate(
+        unicron::failure::TraceConfig::trace_b(),
+        3,
+    );
+    let cluster = unicron::config::ClusterSpec::default();
+    let cfg = unicron::config::UnicronConfig::default();
+    let specs = unicron::config::table3_case(5);
+    let st = b
+        .bench("simulate_trace_b_unicron", || {
+            let s = unicron::simulator::Simulator::new(
+                cluster.clone(),
+                cfg.clone(),
+                unicron::simulator::PolicyKind::Unicron,
+                &specs,
+            );
+            std::hint::black_box(s.run(&trace).accumulated_waf);
+        })
+        .unwrap();
+    println!(
+        "  -> simulator: {} events in {:.1} ms",
+        trace.events.len(),
+        st.median * 1e3
+    );
+    let _ = SimClock::new(); // referenced: sim clock used by tests
+}

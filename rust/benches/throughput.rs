@@ -1,0 +1,53 @@
+//! Figs. 3a / 10a / 10b — healthy-state throughput.
+//!
+//! * **real**: samples/s of the actual PJRT trainer on the tiny/mini GPT
+//!   artifacts (Unicron-on-Megatron introduces no overhead on the training
+//!   path — the trainer *is* the execution engine here);
+//! * **modeled**: paper-scale samples/s and FLOP/s ratios from the
+//!   calibrated cost model (the repro-harness rows for Figs. 3a/10a/10b).
+
+use std::path::PathBuf;
+
+use unicron::bench::Bencher;
+use unicron::trainer::{DpTrainer, LrSchedule, TrainerConfig};
+
+fn artifact(name: &str) -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn main() {
+    let mut b = Bencher::new("throughput").with_samples(2, 10);
+
+    for name in ["tiny", "mini"] {
+        let Some(dir) = artifact(name) else {
+            eprintln!("artifacts/{name} missing — skipped");
+            continue;
+        };
+        let mut t = DpTrainer::new(TrainerConfig {
+            artifact_dir: dir,
+            dp: 2,
+            micro_batches: 4,
+            schedule: LrSchedule { base: 1e-3, warmup_steps: 0, total_steps: 0 },
+            init_seed: 0,
+            data_seed: 0,
+        })
+        .unwrap();
+        let seqs_per_step = (4 * t.manifest.micro_batch) as f64;
+        let flops_per_step = t.manifest.flops_per_micro_step() * 4.0;
+        let st = b.bench(&format!("train_step_{name}_dp2"), || {
+            t.train_step().unwrap();
+        });
+        if let Some(st) = st {
+            println!(
+                "  -> {name}: {:.1} samples/s, ~{} useful FLOP/s through PJRT-CPU",
+                seqs_per_step / st.median,
+                unicron::util::fmt_si(flops_per_step / st.median)
+            );
+        }
+    }
+
+    println!("\n{}", unicron::repro::run("fig3a", 42).unwrap());
+    println!("{}", unicron::repro::run("fig10a", 42).unwrap());
+    println!("{}", unicron::repro::run("fig10b", 42).unwrap());
+}

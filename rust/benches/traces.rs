@@ -1,0 +1,58 @@
+//! Fig. 11 — overall training efficiency under trace-a / trace-b, all five
+//! policies, plus the simulator's own replay throughput (an 8-week trace
+//! must replay in milliseconds for the lookup-table planner to stay O(1)
+//! in practice).
+
+use unicron::bench::Bencher;
+use unicron::config::{table3_case, ClusterSpec, UnicronConfig};
+use unicron::failure::{Trace, TraceConfig};
+use unicron::metrics::Table;
+use unicron::simulator::{PolicyKind, Simulator};
+
+fn main() {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let mut b = Bencher::new("fig11_traces").with_samples(1, 5);
+
+    // replay cost per policy (trace-a, one seed)
+    let trace_a = Trace::generate(TraceConfig::trace_a(), 42);
+    for kind in PolicyKind::all() {
+        b.bench(&format!("replay_trace_a_{}", kind.name()), || {
+            let r = Simulator::new(cluster.clone(), cfg.clone(), kind, &specs).run(&trace_a);
+            std::hint::black_box(r.accumulated_waf);
+        });
+    }
+
+    // headline table: mean accumulated-WAF advantage over 6 seeds
+    let seeds = [1u64, 7, 42, 99, 123, 2024];
+    let mut table = Table::new(&["trace", "vs Megatron", "vs Oobleck", "vs Varuna", "vs Bamboo", "paper"]);
+    for (name, tc, paper) in [
+        ("trace-a", TraceConfig::trace_a(), "1.2 / 3.7 / 4.8 / 4.6"),
+        ("trace-b", TraceConfig::trace_b(), "1.9 / 3.8 / 5.8 / 4.8"),
+    ] {
+        let mut sums = [0.0f64; 4];
+        for &seed in &seeds {
+            let trace = Trace::generate(tc.clone(), seed);
+            let acc = |k: PolicyKind| {
+                Simulator::new(cluster.clone(), cfg.clone(), k, &specs).run(&trace).accumulated_waf
+            };
+            let u = acc(PolicyKind::Unicron);
+            sums[0] += u / acc(PolicyKind::Megatron);
+            sums[1] += u / acc(PolicyKind::Oobleck);
+            sums[2] += u / acc(PolicyKind::Varuna);
+            sums[3] += u / acc(PolicyKind::Bamboo);
+        }
+        let n = seeds.len() as f64;
+        table.row(&[
+            name.into(),
+            format!("{:.2}×", sums[0] / n),
+            format!("{:.2}×", sums[1] / n),
+            format!("{:.2}×", sums[2] / n),
+            format!("{:.2}×", sums[3] / n),
+            paper.into(),
+        ]);
+    }
+    println!("\nFig. 11 — accumulated-WAF advantage of Unicron (mean over {} seeds)\n{}",
+             seeds.len(), table.render());
+}

@@ -1,0 +1,51 @@
+//! Fig. 10c — multi-task WAF across the Table 3 cases: the real planner vs
+//! the equally/weighted/sized baselines, plus the solve-time cost of each.
+
+use unicron::bench::Bencher;
+use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
+use unicron::perfmodel::throughput_table;
+use unicron::planner::{baselines, solve, PlanTask};
+
+fn main() {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let n = cluster.total_gpus();
+    let mut b = Bencher::new("fig10c_waf").with_samples(2, 10);
+
+    for case in 1..=5u32 {
+        let tasks: Vec<PlanTask> = table3_case(case)
+            .into_iter()
+            .map(|spec| {
+                let model = ModelSpec::gpt3(&spec.model).unwrap();
+                PlanTask {
+                    throughput: throughput_table(&model, &cluster, n),
+                    spec,
+                    current: 0,
+                    fault: false,
+                }
+            })
+            .collect();
+        b.bench(&format!("solve_case{case}"), || {
+            std::hint::black_box(solve(&tasks, n, &cfg));
+        });
+        // correctness along the way: Unicron ≥ every baseline
+        let uni = solve(&tasks, n, &cfg).total_waf;
+        let waf_of = |alloc: &[u32]| tasks.iter().zip(alloc).map(|(t, &x)| t.waf(x)).sum::<f64>();
+        let sizes: Vec<f64> = table3_case(case)
+            .iter()
+            .map(|s| ModelSpec::gpt3(&s.model).unwrap().n_params)
+            .collect();
+        for (name, alloc) in [
+            ("equally", baselines::equally(&tasks, n)),
+            ("weighted", baselines::weighted(&tasks, n)),
+            ("sized", baselines::sized(&tasks, n, &sizes)),
+        ] {
+            assert!(
+                uni >= waf_of(&alloc) - 1e-6,
+                "case {case}: {name} beat the planner"
+            );
+        }
+    }
+
+    println!("\n{}", unicron::repro::run("fig10c", 42).unwrap());
+}

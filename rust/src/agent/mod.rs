@@ -1,0 +1,271 @@
+//! The Unicron agent (§3.1): the per-machine daemon. It keeps a persistent
+//! (lease-backed) connection to the coordinator, runs one monitoring thread
+//! per GPU process, propagates exceptions the instant they are raised, and
+//! executes recovery actions the coordinator sends back.
+//!
+//! Monitored "training processes" are [`ProcessHandle`]s — the seam through
+//! which tests and benches inject every Table 1 failure class: `kill()`
+//! (process supervision), `throw()` (exception propagation), iteration
+//! stalls (online statistical monitoring), and agent death itself (node
+//! health, by dropping the whole agent).
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::UnicronConfig;
+use crate::detect::StatMonitor;
+use crate::kvstore::net::KvClient;
+use crate::membership::{NodeInfo, NODES_PREFIX};
+use crate::ser::Value;
+use crate::util::Clock;
+
+/// Handle to one supervised training process (one GPU's worth).
+#[derive(Clone)]
+pub struct ProcessHandle {
+    pub task: u32,
+    alive: Arc<AtomicBool>,
+    exception: Arc<Mutex<Option<String>>>,
+    /// Completed-iteration durations feed the stat monitor.
+    iter_durations: Arc<Mutex<Vec<f64>>>,
+    /// Clock time the current iteration started (None = idle).
+    iter_started: Arc<Mutex<Option<f64>>>,
+    restarts: Arc<AtomicU32>,
+}
+
+impl ProcessHandle {
+    pub fn new(task: u32) -> ProcessHandle {
+        ProcessHandle {
+            task,
+            alive: Arc::new(AtomicBool::new(true)),
+            exception: Arc::new(Mutex::new(None)),
+            iter_durations: Arc::new(Mutex::new(Vec::new())),
+            iter_started: Arc::new(Mutex::new(None)),
+            restarts: Arc::new(AtomicU32::new(0)),
+        }
+    }
+
+    /// Simulate abnormal process termination (SEV2 via process supervision).
+    pub fn kill(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+    }
+
+    /// Simulate a raised exception (exception propagation path).
+    pub fn throw(&self, msg: &str) {
+        *self.exception.lock().unwrap() = Some(msg.to_string());
+    }
+
+    /// Training-loop hooks (normally called by the worker).
+    pub fn begin_iteration(&self, now: f64) {
+        *self.iter_started.lock().unwrap() = Some(now);
+    }
+
+    pub fn end_iteration(&self, now: f64) {
+        let mut started = self.iter_started.lock().unwrap();
+        if let Some(t0) = started.take() {
+            self.iter_durations.lock().unwrap().push(now - t0);
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Recovery: the agent restarts the process in place.
+    pub fn restart(&self) {
+        self.alive.store(true, Ordering::SeqCst);
+        *self.exception.lock().unwrap() = None;
+        *self.iter_started.lock().unwrap() = None;
+        self.restarts.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn restart_count(&self) -> u32 {
+        self.restarts.load(Ordering::SeqCst)
+    }
+}
+
+/// A running agent (threads stop when the handle is dropped or `stop()`ed).
+pub struct Agent {
+    pub node_id: u32,
+    stop: Arc<AtomicBool>,
+    crashed: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Agent {
+    /// Start an agent for `node_id`, monitoring `processes`, against the
+    /// coordinator's kvstore at `coord_addr`.
+    pub fn start(
+        node_id: u32,
+        gpus: u32,
+        coord_addr: std::net::SocketAddr,
+        cfg: &UnicronConfig,
+        processes: Vec<ProcessHandle>,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Agent> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let crashed = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // -- node health: register + heartbeat (persistent connection) ------
+        let mut kv = KvClient::connect(coord_addr)?;
+        let lease = kv.lease_grant(cfg.lease_ttl_s)?;
+        let info = NodeInfo { id: node_id.to_string(), gpus, addr: String::new() };
+        kv.put(&format!("{NODES_PREFIX}{node_id}"), &info.to_json().encode(), Some(lease))?;
+        {
+            let stop = stop.clone();
+            let crashed = crashed.clone();
+            let period = Duration::from_secs_f64(cfg.heartbeat_period_s.min(0.2));
+            threads.push(std::thread::Builder::new().name(format!("agent{node_id}-hb")).spawn(
+                move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        if kv.keepalive(lease).is_err() {
+                            return; // declared dead; stop heartbeating
+                        }
+                        std::thread::sleep(period);
+                    }
+                    // crash(): abandon the lease so it expires (SEV1 path);
+                    // stop(): revoke it (clean leave).
+                    if !crashed.load(Ordering::Relaxed) {
+                        let _ = kv.lease_revoke(lease);
+                    }
+                },
+            )?);
+        }
+
+        // -- one monitoring thread per GPU process --------------------------
+        let seq = Arc::new(AtomicU32::new(0));
+        for (gpu_idx, proc_) in processes.into_iter().enumerate() {
+            let stop = stop.clone();
+            let clock = clock.clone();
+            let seq = seq.clone();
+            let mut kv = KvClient::connect(coord_addr)?;
+            let warn = cfg.stat_warn_factor;
+            let fail = cfg.stat_fail_factor;
+            threads.push(
+                std::thread::Builder::new().name(format!("agent{node_id}-mon{gpu_idx}")).spawn(
+                    move || {
+                        let mut stat = StatMonitor::new(warn, fail);
+                        let mut reported_dead = false;
+                        let mut reported_stall = false;
+                        let mut fed = 0usize;
+                        while !stop.load(Ordering::Relaxed) {
+                            // exception propagation: immediate
+                            if let Some(msg) = proc_.exception.lock().unwrap().take() {
+                                report(&mut kv, node_id, &seq, proc_.task, "exception", &msg);
+                            }
+                            // process supervision
+                            if !proc_.is_alive() && !reported_dead {
+                                reported_dead = true;
+                                report(&mut kv, node_id, &seq, proc_.task, "exit", "");
+                            } else if proc_.is_alive() {
+                                reported_dead = false;
+                            }
+                            // online statistical monitoring
+                            {
+                                let durations = {
+                                    let mut g = proc_.iter_durations.lock().unwrap();
+                                    std::mem::take(&mut *g)
+                                };
+                                for d in durations {
+                                    stat.record(d);
+                                    fed += 1;
+                                    reported_stall = false;
+                                }
+                                let _ = fed;
+                                let started = *proc_.iter_started.lock().unwrap();
+                                if let (Some(t0), Some(_avg)) = (started, stat.average()) {
+                                    let elapsed = clock.now() - t0;
+                                    if stat.check(elapsed) == crate::detect::StatStatus::Failed
+                                        && !reported_stall
+                                    {
+                                        reported_stall = true;
+                                        report(&mut kv, node_id, &seq, proc_.task, "stall", "");
+                                    }
+                                }
+                            }
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                    },
+                )?,
+            );
+        }
+
+        Ok(Agent { node_id, stop, crashed, threads })
+    }
+
+    /// Graceful stop: heartbeat revokes the lease (clean leave, not SEV1).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Simulate the whole node dying: threads are *abandoned* (no lease
+    /// revoke) so the coordinator only finds out via lease expiry — exactly
+    /// the paper's case-1 detection path.
+    pub fn crash(mut self) {
+        self.crashed.store(true, Ordering::Relaxed);
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // note: no lease_revoke — the lease is left to expire.
+    }
+}
+
+impl Drop for Agent {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn report(kv: &mut KvClient, node: u32, seq: &AtomicU32, task: u32, class: &str, msg: &str) {
+    let n = seq.fetch_add(1, Ordering::Relaxed);
+    let body = Value::obj().with("task", task as u64).with("class", class).with("msg", msg);
+    let _ = kv.put(&format!("/status/{node}/{n}"), &body.encode(), None);
+}
+
+// Live end-to-end tests (agent + coordinator over TCP) are in
+// rust/tests/coordinator_e2e.rs; unit tests cover the handle mechanics.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn process_handle_lifecycle() {
+        let p = ProcessHandle::new(3);
+        assert!(p.is_alive());
+        p.kill();
+        assert!(!p.is_alive());
+        p.restart();
+        assert!(p.is_alive());
+        assert_eq!(p.restart_count(), 1);
+    }
+
+    #[test]
+    fn exception_is_taken_once() {
+        let p = ProcessHandle::new(0);
+        p.throw("CUDA error");
+        assert_eq!(p.exception.lock().unwrap().take(), Some("CUDA error".into()));
+        assert_eq!(p.exception.lock().unwrap().take(), None);
+    }
+
+    #[test]
+    fn iteration_hooks_record_durations() {
+        let p = ProcessHandle::new(0);
+        p.begin_iteration(10.0);
+        p.end_iteration(12.5);
+        p.begin_iteration(13.0);
+        // second iteration still running
+        let d = p.iter_durations.lock().unwrap().clone();
+        assert_eq!(d, vec![2.5]);
+        assert!(p.iter_started.lock().unwrap().is_some());
+    }
+}

@@ -1,0 +1,191 @@
+//! Mini-criterion: the timing harness behind `cargo bench`.
+//!
+//! No `criterion` in the vendored registry, so benches use this: warmup,
+//! fixed sample count, robust summary statistics (mean/median/p95/min), and
+//! an optional `BENCH_FILTER` env var to select benchmarks by substring.
+//! Results print in a criterion-like one-line format and can be dumped as
+//! JSON for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::ser::Value;
+
+/// Summary statistics over per-iteration runtimes (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            samples: n,
+            mean,
+            median: pct(0.5),
+            p95: pct(0.95),
+            min: xs[0],
+            max: xs[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+
+    pub fn to_json(&self, name: &str) -> Value {
+        Value::obj()
+            .with("name", name)
+            .with("samples", self.samples)
+            .with("mean_s", self.mean)
+            .with("median_s", self.median)
+            .with("p95_s", self.p95)
+            .with("min_s", self.min)
+            .with("max_s", self.max)
+            .with("stddev_s", self.stddev)
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// A bench group; mirrors criterion's `Criterion` entry point.
+pub struct Bencher {
+    pub group: String,
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    filter: Option<String>,
+    pub results: Vec<(String, Stats)>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Bencher {
+        Bencher {
+            group: group.to_string(),
+            warmup_iters: 3,
+            sample_iters: 20,
+            filter: std::env::var("BENCH_FILTER").ok(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, warmup: usize, samples: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.sample_iters = samples;
+        self
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()) || self.group.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Time `f` (one call = one sample). Returns stats (also stored/printed).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<Stats> {
+        if !self.selected(name) {
+            return None;
+        }
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let st = Stats::from_samples(samples);
+        println!(
+            "{:<40} time: [{} {} {}]  p95: {}",
+            format!("{}/{}", self.group, name),
+            fmt_time(st.min),
+            fmt_time(st.median),
+            fmt_time(st.max),
+            fmt_time(st.p95),
+        );
+        self.results.push((name.to_string(), st.clone()));
+        Some(st)
+    }
+
+    /// Record an externally-measured set of samples (e.g. latencies harvested
+    /// from a running system rather than a closure loop).
+    pub fn record(&mut self, name: &str, samples: Vec<f64>) -> Option<Stats> {
+        if !self.selected(name) || samples.is_empty() {
+            return None;
+        }
+        let st = Stats::from_samples(samples);
+        println!(
+            "{:<40} time: [{} {} {}]  p95: {} ({} samples)",
+            format!("{}/{}", self.group, name),
+            fmt_time(st.min),
+            fmt_time(st.median),
+            fmt_time(st.max),
+            fmt_time(st.p95),
+            st.samples,
+        );
+        self.results.push((name.to_string(), st.clone()));
+        Some(st)
+    }
+
+    /// JSON report of all results in this group.
+    pub fn report(&self) -> Value {
+        Value::obj().with("group", self.group.as_str()).with(
+            "results",
+            Value::Arr(self.results.iter().map(|(n, s)| s.to_json(n)).collect()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+        assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.samples, 4);
+        assert!((s.mean - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::new("test").with_samples(1, 3);
+        let mut count = 0;
+        let st = b.bench("noop", || count += 1).unwrap();
+        assert_eq!(count, 4); // 1 warmup + 3 samples
+        assert!(st.mean >= 0.0);
+        assert_eq!(b.results.len(), 1);
+        let report = b.report();
+        assert_eq!(report.get("group").unwrap().as_str(), Some("test"));
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal command-line parser (no `clap` in the vendored registry).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative description of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse `argv` (without the program name) against the option specs.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in specs {
+            if let (true, Some(d)) = (spec.takes_value, spec.default) {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError(format!("missing --{name}")))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.str(name)?.parse().map_err(|_| CliError(format!("--{name}: expected integer")))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        Ok(self.u64(name)? as usize)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)?.parse().map_err(|_| CliError(format!("--{name}: expected number")))
+    }
+}
+
+/// Render a usage block for `specs`.
+pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{about}\n\nUSAGE: {program} [OPTIONS]\n\nOPTIONS:");
+    for s in specs {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        let dflt = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        let _ = writeln!(out, "  {arg:<24} {}{dflt}", s.help);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "model", help: "model name", takes_value: true, default: Some("tiny") },
+            OptSpec { name: "steps", help: "step count", takes_value: true, default: None },
+            OptSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let a = Args::parse(&sv(&["--model", "mini", "--verbose", "pos1", "--steps=7"]), &specs())
+            .unwrap();
+        assert_eq!(a.str("model").unwrap(), "mini");
+        assert_eq!(a.u64("steps").unwrap(), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.str("model").unwrap(), "tiny");
+        assert!(a.get("steps").is_none());
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--steps"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+        let a = Args::parse(&sv(&["--steps", "abc"]), &specs()).unwrap();
+        assert!(a.u64("steps").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_every_option() {
+        let u = usage("unicron train", "Train.", &specs());
+        for s in specs() {
+            assert!(u.contains(s.name));
+        }
+    }
+}

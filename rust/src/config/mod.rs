@@ -1,0 +1,411 @@
+//! Typed configuration: model zoo, cluster hardware, tasks, Unicron knobs.
+//!
+//! Mirrors the paper's §7.1 experimental setup: GPT-3-family models
+//! (1.3B…175B), A800 nodes (8 GPUs, NVSwitch intra-node, 4×200 Gbps
+//! inter-node), 20 GB/s remote checkpoint storage — plus the Table 3
+//! multi-task cases used by Figs. 10c and 11. Everything round-trips
+//! through [`crate::ser::Value`] so configs can be given as JSON files.
+
+use crate::ser::{JsonError, Value};
+
+/// Transformer shape for the analytical performance model (perfmodel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total parameter count.
+    pub n_params: f64,
+    pub n_layers: u32,
+    pub hidden: u32,
+    pub heads: u32,
+    pub seq_len: u32,
+    /// Global batch size in sequences (Megatron-style).
+    pub global_batch: u32,
+    pub vocab: u32,
+}
+
+impl ModelSpec {
+    /// GPT-3 family, shapes from the GPT-3 paper table 2.1 (vocab 51200 as
+    /// in Megatron's GPT-3 configs; 2048 sequence length).
+    pub fn gpt3(name: &str) -> Option<ModelSpec> {
+        let (n_layers, hidden, heads, global_batch) = match name {
+            "gpt3-1.3b" => (24, 2048, 16, 512),
+            "gpt3-7b" => (32, 4096, 32, 1024),
+            "gpt3-13b" => (40, 5120, 40, 1024),
+            "gpt3-70b" => (80, 8192, 64, 1536),
+            "gpt3-175b" => (96, 12288, 96, 1536),
+            _ => return None,
+        };
+        let mut spec = ModelSpec {
+            name: name.to_string(),
+            n_params: 0.0,
+            n_layers,
+            hidden,
+            heads,
+            seq_len: 2048,
+            global_batch,
+            vocab: 51200,
+        };
+        spec.n_params = spec.count_params();
+        Some(spec)
+    }
+
+    /// All zoo names in ascending size.
+    pub fn zoo() -> Vec<&'static str> {
+        vec!["gpt3-1.3b", "gpt3-7b", "gpt3-13b", "gpt3-70b", "gpt3-175b"]
+    }
+
+    /// Parameter count from shape: 12·l·h²·(1 + 13/(12h)) + (v+s)·h.
+    pub fn count_params(&self) -> f64 {
+        let (l, h) = (self.n_layers as f64, self.hidden as f64);
+        let (v, s) = (self.vocab as f64, self.seq_len as f64);
+        12.0 * l * h * h * (1.0 + 13.0 / (12.0 * h)) + (v + s) * h
+    }
+
+    /// Training FLOPs per token (Megatron paper formula, fwd+bwd with
+    /// activation recomputation disabled):
+    /// `96·l·h²·(1 + s/(6h) + V/(16·l·h)) · B·s` per iteration → per token.
+    pub fn flops_per_token(&self) -> f64 {
+        let (l, h) = (self.n_layers as f64, self.hidden as f64);
+        let (v, s) = (self.vocab as f64, self.seq_len as f64);
+        72.0 * l * h * h * (1.0 + s / (6.0 * h) + v / (12.0 * l * h))
+    }
+
+    pub fn tokens_per_iteration(&self) -> f64 {
+        self.global_batch as f64 * self.seq_len as f64
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("name", self.name.as_str())
+            .with("n_params", self.n_params)
+            .with("n_layers", self.n_layers as u64)
+            .with("hidden", self.hidden as u64)
+            .with("heads", self.heads as u64)
+            .with("seq_len", self.seq_len as u64)
+            .with("global_batch", self.global_batch as u64)
+            .with("vocab", self.vocab as u64)
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelSpec, JsonError> {
+        Ok(ModelSpec {
+            name: v.req("name")?.as_str().unwrap_or_default().to_string(),
+            n_params: v.req("n_params")?.as_f64().unwrap_or(0.0),
+            n_layers: v.req("n_layers")?.as_u64().unwrap_or(0) as u32,
+            hidden: v.req("hidden")?.as_u64().unwrap_or(0) as u32,
+            heads: v.req("heads")?.as_u64().unwrap_or(0) as u32,
+            seq_len: v.req("seq_len")?.as_u64().unwrap_or(0) as u32,
+            global_batch: v.req("global_batch")?.as_u64().unwrap_or(0) as u32,
+            vocab: v.req("vocab")?.as_u64().unwrap_or(0) as u32,
+        })
+    }
+}
+
+/// Hardware description of the training cluster (defaults = paper §7.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub n_nodes: u32,
+    pub gpus_per_node: u32,
+    /// Peak dense bf16 TFLOP/s per GPU (A800 ≈ A100: 312).
+    pub gpu_peak_tflops: f64,
+    /// HBM per GPU in GiB.
+    pub hbm_gib: f64,
+    /// Intra-node (NVSwitch) bandwidth per GPU, GB/s (A800: 400).
+    pub intra_bw_gbs: f64,
+    /// Inter-node NIC bandwidth per node, GB/s (4×200 Gbps = 100 GB/s).
+    pub inter_bw_gbs: f64,
+    /// Remote persistent checkpoint storage bandwidth, GB/s (paper: 20).
+    pub remote_ckpt_bw_gbs: f64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            n_nodes: 16,
+            gpus_per_node: 8,
+            gpu_peak_tflops: 312.0,
+            hbm_gib: 80.0,
+            intra_bw_gbs: 400.0,
+            inter_bw_gbs: 100.0,
+            remote_ckpt_bw_gbs: 20.0,
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn with_nodes(n_nodes: u32) -> ClusterSpec {
+        ClusterSpec { n_nodes, ..Default::default() }
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    /// Aggregate peak FLOP/s of `x` healthy GPUs.
+    pub fn peak_flops(&self, x: u32) -> f64 {
+        x as f64 * self.gpu_peak_tflops * 1e12
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("n_nodes", self.n_nodes as u64)
+            .with("gpus_per_node", self.gpus_per_node as u64)
+            .with("gpu_peak_tflops", self.gpu_peak_tflops)
+            .with("hbm_gib", self.hbm_gib)
+            .with("intra_bw_gbs", self.intra_bw_gbs)
+            .with("inter_bw_gbs", self.inter_bw_gbs)
+            .with("remote_ckpt_bw_gbs", self.remote_ckpt_bw_gbs)
+    }
+
+    pub fn from_json(v: &Value) -> Result<ClusterSpec, JsonError> {
+        let d = ClusterSpec::default();
+        let f = |k: &str, dflt: f64| v.get(k).and_then(Value::as_f64).unwrap_or(dflt);
+        Ok(ClusterSpec {
+            n_nodes: f("n_nodes", d.n_nodes as f64) as u32,
+            gpus_per_node: f("gpus_per_node", d.gpus_per_node as f64) as u32,
+            gpu_peak_tflops: f("gpu_peak_tflops", d.gpu_peak_tflops),
+            hbm_gib: f("hbm_gib", d.hbm_gib),
+            intra_bw_gbs: f("intra_bw_gbs", d.intra_bw_gbs),
+            inter_bw_gbs: f("inter_bw_gbs", d.inter_bw_gbs),
+            remote_ckpt_bw_gbs: f("remote_ckpt_bw_gbs", d.remote_ckpt_bw_gbs),
+        })
+    }
+}
+
+/// One training task in the multi-task cluster (§5.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub id: u32,
+    pub model: String,
+    /// Priority weight w(t) ∈ [0.5, 2.0] by recommendation.
+    pub weight: f64,
+    /// Minimum workers (T_necessary): below this, F(t,x) = 0.
+    pub min_workers: u32,
+}
+
+impl TaskSpec {
+    pub fn new(id: u32, model: &str, weight: f64, min_workers: u32) -> TaskSpec {
+        TaskSpec { id, model: model.to_string(), weight, min_workers }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("id", self.id as u64)
+            .with("model", self.model.as_str())
+            .with("weight", self.weight)
+            .with("min_workers", self.min_workers as u64)
+    }
+
+    pub fn from_json(v: &Value) -> Result<TaskSpec, JsonError> {
+        Ok(TaskSpec {
+            id: v.req("id")?.as_u64().unwrap_or(0) as u32,
+            model: v.req("model")?.as_str().unwrap_or_default().to_string(),
+            weight: v.req("weight")?.as_f64().unwrap_or(1.0),
+            min_workers: v.req("min_workers")?.as_u64().unwrap_or(1) as u32,
+        })
+    }
+}
+
+/// The five multi-task cases of Table 3 (model sizes S. and weights W.).
+/// Minimum workers are set to the smallest GPU count the perfmodel can fit
+/// the model on (8 for 1.3B/7B, 16 for 13B) — the paper leaves these implicit.
+pub fn table3_case(case: u32) -> Vec<TaskSpec> {
+    let mk = |specs: &[(&str, f64)]| -> Vec<TaskSpec> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, (m, w))| {
+                let min = match *m {
+                    "gpt3-13b" => 16,
+                    _ => 8,
+                };
+                TaskSpec::new(i as u32, m, *w, min)
+            })
+            .collect()
+    };
+    match case {
+        1 => mk(&[("gpt3-7b", 1.0); 6]),
+        2 => mk(&[
+            ("gpt3-1.3b", 1.0),
+            ("gpt3-1.3b", 1.0),
+            ("gpt3-1.3b", 1.0),
+            ("gpt3-7b", 1.0),
+            ("gpt3-7b", 1.0),
+            ("gpt3-13b", 1.0),
+        ]),
+        3 => mk(&[
+            ("gpt3-7b", 0.5),
+            ("gpt3-7b", 0.8),
+            ("gpt3-7b", 1.1),
+            ("gpt3-7b", 1.4),
+            ("gpt3-7b", 1.7),
+            ("gpt3-7b", 2.0),
+        ]),
+        4 => mk(&[
+            ("gpt3-1.3b", 0.5),
+            ("gpt3-1.3b", 0.8),
+            ("gpt3-1.3b", 1.1),
+            ("gpt3-7b", 1.4),
+            ("gpt3-7b", 1.7),
+            ("gpt3-13b", 2.0),
+        ]),
+        5 => mk(&[
+            ("gpt3-1.3b", 2.0),
+            ("gpt3-1.3b", 1.7),
+            ("gpt3-1.3b", 1.4),
+            ("gpt3-7b", 1.1),
+            ("gpt3-7b", 0.8),
+            ("gpt3-13b", 0.5),
+        ]),
+        _ => panic!("table 3 defines cases 1..=5, got {case}"),
+    }
+}
+
+/// Unicron runtime knobs (detection thresholds from §4.1, GEMINI-style
+/// checkpointing cadence, planner horizon).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnicronConfig {
+    /// Agent→coordinator heartbeat period (seconds).
+    pub heartbeat_period_s: f64,
+    /// Lease TTL after which a silent node is SEV1 (seconds).
+    pub lease_ttl_s: f64,
+    /// Online statistical monitor: warn threshold × average iter time.
+    pub stat_warn_factor: f64,
+    /// Online statistical monitor: failure threshold × average iter time.
+    pub stat_fail_factor: f64,
+    /// Persistent checkpoint interval (seconds). Paper: 30 min.
+    pub ckpt_interval_s: f64,
+    /// Estimated transition duration D_transition for the planner (seconds).
+    pub d_transition_s: f64,
+    /// Mean time between failures per GPU (seconds) for D_running(n').
+    pub mtbf_per_gpu_s: f64,
+    /// In-place reattempt budget before escalating SEV3→SEV2.
+    pub max_reattempts: u32,
+    /// Process-restart budget before escalating SEV2→SEV1.
+    pub max_restarts: u32,
+}
+
+impl Default for UnicronConfig {
+    fn default() -> Self {
+        UnicronConfig {
+            heartbeat_period_s: 1.0,
+            lease_ttl_s: 5.0,
+            stat_warn_factor: 1.1,
+            stat_fail_factor: 3.0,
+            ckpt_interval_s: 30.0 * 60.0,
+            d_transition_s: 60.0,
+            // 128 GPUs fail 1–7×/week => per-GPU MTBF ≈ 128 weeks / 4 ≈ 1.9e7 s
+            mtbf_per_gpu_s: 1.9e7,
+            max_reattempts: 3,
+            max_restarts: 1,
+        }
+    }
+}
+
+impl UnicronConfig {
+    /// Expected run duration D_running for a plan using `n` workers: the
+    /// expected time to the next failure somewhere in the cluster, capped at
+    /// the planning horizon. Larger pools fail sooner (paper §5.1).
+    pub fn d_running(&self, n: u32) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        self.mtbf_per_gpu_s / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt3_param_counts_are_close_to_nominal() {
+        // name encodes the nominal size; computed count within 20%.
+        for (name, nominal) in [
+            ("gpt3-1.3b", 1.3e9),
+            ("gpt3-7b", 7e9),
+            ("gpt3-13b", 13e9),
+            ("gpt3-70b", 70e9),
+            ("gpt3-175b", 175e9),
+        ] {
+            let m = ModelSpec::gpt3(name).unwrap();
+            let ratio = m.n_params / nominal;
+            assert!((0.8..1.25).contains(&ratio), "{name}: {:.2e} vs {nominal:.2e}", m.n_params);
+        }
+        assert!(ModelSpec::gpt3("gpt3-9000b").is_none());
+    }
+
+    #[test]
+    fn flops_per_token_roughly_6n() {
+        for name in ModelSpec::zoo() {
+            let m = ModelSpec::gpt3(name).unwrap();
+            let r = m.flops_per_token() / (6.0 * m.n_params);
+            assert!((0.8..1.6).contains(&r), "{name} ratio {r}");
+        }
+    }
+
+    #[test]
+    fn cluster_defaults_match_paper() {
+        let c = ClusterSpec::default();
+        assert_eq!(c.total_gpus(), 128);
+        assert_eq!(c.gpus_per_node, 8);
+        assert_eq!(c.remote_ckpt_bw_gbs, 20.0);
+        assert!((c.peak_flops(64) - 64.0 * 312e12).abs() < 1.0);
+    }
+
+    #[test]
+    fn model_spec_json_roundtrip() {
+        let m = ModelSpec::gpt3("gpt3-7b").unwrap();
+        let j = m.to_json().encode();
+        let back = ModelSpec::from_json(&Value::parse(&j).unwrap()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn cluster_spec_json_roundtrip() {
+        let c = ClusterSpec::with_nodes(4);
+        let back = ClusterSpec::from_json(&Value::parse(&c.to_json().encode()).unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn task_spec_json_roundtrip() {
+        let t = TaskSpec::new(3, "gpt3-7b", 1.4, 8);
+        let back = TaskSpec::from_json(&Value::parse(&t.to_json().encode()).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn table3_matches_paper() {
+        for case in 1..=5 {
+            let tasks = table3_case(case);
+            assert_eq!(tasks.len(), 6, "case {case}");
+        }
+        // case 1: six 7B tasks, all weight 1.0
+        assert!(table3_case(1).iter().all(|t| t.model == "gpt3-7b" && t.weight == 1.0));
+        // case 5: descending weights on mixed sizes
+        let c5 = table3_case(5);
+        assert_eq!(c5[0].weight, 2.0);
+        assert_eq!(c5[5].weight, 0.5);
+        assert_eq!(c5[5].model, "gpt3-13b");
+        // weights in recommended range
+        for case in 1..=5 {
+            assert!(table3_case(case).iter().all(|t| (0.5..=2.0).contains(&t.weight)));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cases 1..=5")]
+    fn table3_rejects_bad_case() {
+        table3_case(6);
+    }
+
+    #[test]
+    fn d_running_shrinks_with_cluster_size() {
+        let u = UnicronConfig::default();
+        assert!(u.d_running(128) < u.d_running(64));
+        assert_eq!(u.d_running(0), 0.0);
+        // 128 GPUs: expected failure gap slightly over a day — matches §2.2.
+        let days = u.d_running(128) / 86400.0;
+        assert!((1.0..3.0).contains(&days), "{days} days");
+    }
+}

@@ -1,0 +1,232 @@
+//! Live driver: runs the [`Coordinator`] state machine against real agents
+//! over TCP (kvstore wire protocol). This is the deployment shape of Fig. 5:
+//! the coordinator embeds the status monitor (kvstore), agents connect over
+//! the network, and every detection path of Table 2 flows through here.
+//!
+//! Key layout:
+//!   /nodes/<id>            lease-attached registration (node health)
+//!   /status/<id>/<seq>     agent error reports (process/exception/stall)
+//!   /cmd/<id>/<seq>        coordinator -> agent recovery instructions
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{Action, CoordEvent, Coordinator};
+use crate::config::UnicronConfig;
+use crate::detect::classify_exception;
+use crate::failure::ErrorKind;
+use crate::kvstore::{net, Event, Store};
+use crate::membership::{membership_event, MembershipEvent, NODES_PREFIX};
+use crate::ser::Value;
+use crate::util::Clock;
+
+pub const STATUS_PREFIX: &str = "/status/";
+pub const CMD_PREFIX: &str = "/cmd/";
+
+/// Timestamped record of a detected event (Table 2's measurement hook).
+#[derive(Debug, Clone)]
+pub struct Detection {
+    pub at_s: f64,
+    pub event: CoordEvent,
+    pub actions: Vec<Action>,
+}
+
+/// A running live coordinator.
+pub struct CoordinatorLive {
+    pub store: Store,
+    pub addr: std::net::SocketAddr,
+    detections: Arc<Mutex<Vec<Detection>>>,
+    stop: Arc<AtomicBool>,
+    server: Option<crate::rpc::Server>,
+    loop_thread: Option<JoinHandle<()>>,
+}
+
+impl CoordinatorLive {
+    /// Start the coordinator: kvstore server on `addr` + event loop.
+    pub fn start(
+        cfg: UnicronConfig,
+        available_workers: u32,
+        gpus_per_node: u32,
+        clock: Arc<dyn Clock>,
+        addr: &str,
+    ) -> Result<CoordinatorLive> {
+        let store = Store::new(clock.clone());
+        let server = net::serve(store.clone(), addr)?;
+        let server_addr = server.addr;
+
+        let detections = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let store2 = store.clone();
+        let det2 = detections.clone();
+        let stop2 = stop.clone();
+        let seq2 = Arc::new(AtomicU64::new(0));
+        let clock2 = clock.clone();
+        let loop_thread = std::thread::Builder::new().name("coord-loop".into()).spawn(move || {
+            let mut coord = Coordinator::new(cfg, available_workers, gpus_per_node);
+            let nodes_rx = store2.watch(NODES_PREFIX);
+            let status_rx = store2.watch(STATUS_PREFIX);
+            while !stop2.load(Ordering::Relaxed) {
+                store2.tick(); // lease expiry -> Delete{expired} events
+                let mut events: Vec<CoordEvent> = Vec::new();
+                for ev in nodes_rx.try_iter() {
+                    match membership_event(&ev) {
+                        Some(MembershipEvent::Joined(info)) => {
+                            events.push(CoordEvent::NodeJoined {
+                                node: info.id.parse().unwrap_or(0),
+                            });
+                        }
+                        Some(MembershipEvent::Left { id, expired }) if expired => {
+                            events.push(CoordEvent::NodeLost { node: id.parse().unwrap_or(0) });
+                        }
+                        _ => {}
+                    }
+                }
+                for ev in status_rx.try_iter() {
+                    if let Event::Put { key, value, .. } = ev {
+                        if let Some(e) = parse_status(&key, &value) {
+                            events.push(e);
+                        }
+                    }
+                }
+                for event in events {
+                    let actions = coord.handle(event.clone());
+                    dispatch_actions(&store2, &seq2, &actions);
+                    det2.lock().unwrap().push(Detection {
+                        at_s: clock2.now(),
+                        event,
+                        actions,
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })?;
+
+        Ok(CoordinatorLive {
+            store,
+            addr: server_addr,
+            detections,
+            stop,
+            server: Some(server),
+            loop_thread: Some(loop_thread),
+        })
+    }
+
+    /// Snapshot of everything detected so far.
+    pub fn detections(&self) -> Vec<Detection> {
+        self.detections.lock().unwrap().clone()
+    }
+
+    /// Block until a detection matching `pred` appears (or timeout). Returns
+    /// the matching record.
+    pub fn wait_for<F: Fn(&Detection) -> bool>(
+        &self,
+        pred: F,
+        timeout: Duration,
+    ) -> Option<Detection> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(d) = self.detections.lock().unwrap().iter().find(|d| pred(d)) {
+                return Some(d.clone());
+            }
+            if std::time::Instant::now() > deadline {
+                return None;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.loop_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(mut s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+}
+
+impl Drop for CoordinatorLive {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// `/status/<node>/<seq>` + JSON body -> coordinator event.
+fn parse_status(key: &str, value: &str) -> Option<CoordEvent> {
+    let rest = key.strip_prefix(STATUS_PREFIX)?;
+    let node: u32 = rest.split('/').next()?.parse().ok()?;
+    let v = Value::parse(value).ok()?;
+    let task = v.get("task").and_then(Value::as_u64).unwrap_or(0) as u32;
+    let class = v.get("class").and_then(Value::as_str).unwrap_or("");
+    let msg = v.get("msg").and_then(Value::as_str).unwrap_or("");
+    let kind = match class {
+        "exception" => classify_exception(msg),
+        "exit" => ErrorKind::ExitedAbnormally,
+        "stall" => ErrorKind::TaskHang,
+        _ => return None,
+    };
+    Some(CoordEvent::ErrorReport { node, task, kind })
+}
+
+/// Publish agent-executable actions under `/cmd/<node>/<seq>`.
+fn dispatch_actions(store: &Store, seq: &AtomicU64, actions: &[Action]) {
+    for a in actions {
+        let (node, body) = match a {
+            Action::InstructReattempt { node, task } => {
+                (*node, Value::obj().with("op", "reattempt").with("task", *task as u64))
+            }
+            Action::InstructRestart { node, task } => {
+                (*node, Value::obj().with("op", "restart").with("task", *task as u64))
+            }
+            Action::IsolateNode { node } => (*node, Value::obj().with("op", "isolate")),
+            // plans and alerts are coordinator-local records
+            Action::ApplyPlan { .. } | Action::AlertOps { .. } => continue,
+        };
+        let n = seq.fetch_add(1, Ordering::Relaxed);
+        let _ = store.put(&format!("{CMD_PREFIX}{node}/{n}"), &body.encode(), None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::RealClock;
+
+    #[test]
+    fn parse_status_variants() {
+        assert_eq!(
+            parse_status("/status/3/0", r#"{"task":1,"class":"exception","msg":"ECC error"}"#),
+            Some(CoordEvent::ErrorReport { node: 3, task: 1, kind: ErrorKind::EccError })
+        );
+        assert_eq!(
+            parse_status("/status/2/9", r#"{"task":0,"class":"exit","msg":""}"#),
+            Some(CoordEvent::ErrorReport { node: 2, task: 0, kind: ErrorKind::ExitedAbnormally })
+        );
+        assert_eq!(
+            parse_status("/status/2/9", r#"{"task":0,"class":"stall","msg":""}"#),
+            Some(CoordEvent::ErrorReport { node: 2, task: 0, kind: ErrorKind::TaskHang })
+        );
+        assert_eq!(parse_status("/status/2/9", r#"{"class":"bogus"}"#), None);
+        assert_eq!(parse_status("/other/2", "{}"), None);
+    }
+
+    #[test]
+    fn live_coordinator_starts_and_stops() {
+        let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+        let mut live = CoordinatorLive::start(
+            UnicronConfig::default(),
+            16,
+            8,
+            clock,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        assert!(live.detections().is_empty());
+        live.shutdown();
+    }
+}

@@ -1,0 +1,342 @@
+//! The Unicron coordinator (§3.2): consolidates agent status, classifies
+//! errors, drives the §4.2 handling workflow (Fig. 7), and triggers
+//! cost-aware reconfiguration through the [`crate::planner`].
+//!
+//! The core is a synchronous, fully-deterministic state machine —
+//! [`Coordinator::handle`] maps one [`CoordEvent`] to a list of [`Action`]s.
+//! The live TCP driver ([`live`]) feeds it from kvstore watches; the
+//! discrete-event simulator feeds it directly. Same code path either way,
+//! which is what makes the Table 2 / Fig. 9 / Fig. 11 experiments exercise
+//! the *actual* coordinator.
+
+pub mod live;
+
+use std::collections::BTreeMap;
+
+use crate::config::UnicronConfig;
+use crate::failure::{ErrorKind, Severity};
+use crate::planner::{solve, Plan, PlanTask};
+
+/// Events the coordinator reacts to. ①–⑥ refer to Fig. 7's triggers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoordEvent {
+    /// An agent reported an error observed on `node` for `task` (①②③ by
+    /// the kind's severity).
+    ErrorReport { node: u32, task: u32, kind: ErrorKind },
+    /// A node's lease expired — SEV1 lost connection (①).
+    NodeLost { node: u32 },
+    /// A repaired or new node joined (④).
+    NodeJoined { node: u32 },
+    /// A task completed (⑤).
+    TaskFinished { task: u32 },
+    /// A new task was submitted (⑥).
+    TaskLaunched { task: u32 },
+    /// Outcome of a previously-instructed reattempt/restart.
+    ReattemptResult { node: u32, task: u32, ok: bool },
+    RestartResult { node: u32, task: u32, ok: bool },
+}
+
+/// Instructions the coordinator emits (executed by agents / the simulator).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// SEV3 ①: retry the failed operation where it failed.
+    InstructReattempt { node: u32, task: u32 },
+    /// SEV2 ②: restart the training process on the node, same configuration;
+    /// state recovers from a DP replica or checkpoint (§6.3).
+    InstructRestart { node: u32, task: u32 },
+    /// SEV1 ③: fence the node out of the cluster.
+    IsolateNode { node: u32 },
+    /// Reconfigure affected tasks to a new plan (assignments per task id).
+    ApplyPlan { plan: Plan, reason: &'static str },
+    /// Page the humans (§3.2 "other external interactions").
+    AlertOps { message: String },
+}
+
+/// Per-(task, node) escalation bookkeeping.
+#[derive(Debug, Default, Clone)]
+struct EscalationState {
+    reattempts: u32,
+    restarts: u32,
+}
+
+/// The coordinator state machine.
+pub struct Coordinator {
+    pub cfg: UnicronConfig,
+    /// Planner inputs for every task currently in the cluster.
+    tasks: BTreeMap<u32, PlanTask>,
+    /// Healthy workers (GPUs) currently available.
+    pub available_workers: u32,
+    /// GPUs contributed per node (to size NodeLost effects).
+    pub gpus_per_node: u32,
+    /// Nodes currently isolated (fenced off).
+    pub isolated: Vec<u32>,
+    escalations: BTreeMap<(u32, u32), EscalationState>,
+    /// Audit log of (event, actions) — the tests' and benches' ground truth.
+    pub log: Vec<(CoordEvent, Vec<Action>)>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: UnicronConfig, available_workers: u32, gpus_per_node: u32) -> Coordinator {
+        Coordinator {
+            cfg,
+            tasks: BTreeMap::new(),
+            available_workers,
+            gpus_per_node,
+            isolated: Vec::new(),
+            escalations: BTreeMap::new(),
+            log: Vec::new(),
+        }
+    }
+
+    /// Register a task (with its calibrated throughput table) for planning.
+    pub fn add_task(&mut self, task: PlanTask) {
+        self.tasks.insert(task.spec.id, task);
+    }
+
+    pub fn task_assignment(&self, task: u32) -> Option<u32> {
+        self.tasks.get(&task).map(|t| t.current)
+    }
+
+    pub fn tasks(&self) -> impl Iterator<Item = &PlanTask> {
+        self.tasks.values()
+    }
+
+    /// Total WAF of the current assignments (cluster health metric).
+    pub fn current_waf(&self) -> f64 {
+        self.tasks.values().map(|t| t.waf(t.current)).sum()
+    }
+
+    /// Process one event; returns the actions (also appended to `log`).
+    pub fn handle(&mut self, event: CoordEvent) -> Vec<Action> {
+        let actions = self.dispatch(&event);
+        self.log.push((event, actions.clone()));
+        actions
+    }
+
+    fn dispatch(&mut self, event: &CoordEvent) -> Vec<Action> {
+        match *event {
+            CoordEvent::ErrorReport { node, task, kind } => match kind.severity() {
+                Severity::Sev3 => self.on_sev3(node, task),
+                Severity::Sev2 => self.on_sev2(node, task),
+                Severity::Sev1 => self.on_sev1(node, Some(task)),
+            },
+            CoordEvent::NodeLost { node } => self.on_sev1(node, None),
+            CoordEvent::NodeJoined { node } => {
+                self.isolated.retain(|&n| n != node);
+                self.available_workers += self.gpus_per_node;
+                self.reconfigure("node joined", None)
+            }
+            CoordEvent::TaskFinished { task } => {
+                self.tasks.remove(&task);
+                self.reconfigure("task finished", None)
+            }
+            CoordEvent::TaskLaunched { .. } => {
+                // caller adds the PlanTask via add_task before this event
+                self.reconfigure("task launched", None)
+            }
+            CoordEvent::ReattemptResult { node, task, ok } => {
+                if ok {
+                    self.escalations.remove(&(task, node));
+                    vec![]
+                } else {
+                    // §4.2: failed reattempt upgrades SEV3 -> SEV2
+                    self.on_sev2(node, task)
+                }
+            }
+            CoordEvent::RestartResult { node, task, ok } => {
+                if ok {
+                    self.escalations.remove(&(task, node));
+                    vec![]
+                } else {
+                    // §4.2: failed restart upgrades SEV2 -> SEV1
+                    self.on_sev1(node, Some(task))
+                }
+            }
+        }
+    }
+
+    fn on_sev3(&mut self, node: u32, task: u32) -> Vec<Action> {
+        let esc = self.escalations.entry((task, node)).or_default();
+        if esc.reattempts < self.cfg.max_reattempts {
+            esc.reattempts += 1;
+            vec![Action::InstructReattempt { node, task }]
+        } else {
+            self.on_sev2(node, task)
+        }
+    }
+
+    fn on_sev2(&mut self, node: u32, task: u32) -> Vec<Action> {
+        let esc = self.escalations.entry((task, node)).or_default();
+        if esc.restarts < self.cfg.max_restarts {
+            esc.restarts += 1;
+            vec![Action::InstructRestart { node, task }]
+        } else {
+            self.on_sev1(node, Some(task))
+        }
+    }
+
+    fn on_sev1(&mut self, node: u32, task: Option<u32>) -> Vec<Action> {
+        if self.isolated.contains(&node) {
+            return vec![]; // already fenced; duplicate report
+        }
+        self.isolated.push(node);
+        self.available_workers = self.available_workers.saturating_sub(self.gpus_per_node);
+        let mut actions = vec![
+            Action::IsolateNode { node },
+            Action::AlertOps { message: format!("SEV1: node {node} isolated; maintenance required") },
+        ];
+        actions.extend(self.reconfigure("SEV1 failure", task));
+        actions
+    }
+
+    /// Cost-aware plan generation (§5) + bookkeeping of the new assignments.
+    fn reconfigure(&mut self, reason: &'static str, faulted_task: Option<u32>) -> Vec<Action> {
+        if self.tasks.is_empty() {
+            return vec![];
+        }
+        if let Some(t) = faulted_task {
+            if let Some(pt) = self.tasks.get_mut(&t) {
+                pt.fault = true;
+            }
+        }
+        let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
+        let plan = solve(&ordered, self.available_workers, &self.cfg);
+        // commit the new assignments; clear fault flags (handled)
+        for (pt, &x) in self.tasks.values_mut().zip(plan.assignment.iter()) {
+            pt.current = x;
+            pt.fault = false;
+        }
+        vec![Action::ApplyPlan { plan, reason }]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskSpec;
+
+    fn plan_task(id: u32, min: u32, current: u32, n: u32) -> PlanTask {
+        let throughput =
+            (0..=n).map(|x| if x >= min { 1e12 * (x as f64).powf(0.9) } else { 0.0 }).collect();
+        PlanTask { spec: TaskSpec::new(id, "m", 1.0, min), throughput, current, fault: false }
+    }
+
+    fn coord(workers: u32) -> Coordinator {
+        let mut c = Coordinator::new(UnicronConfig::default(), workers, 8);
+        c.add_task(plan_task(0, 2, workers / 2, workers + 16));
+        c.add_task(plan_task(1, 2, workers / 2, workers + 16));
+        c
+    }
+
+    #[test]
+    fn sev3_reattempts_then_escalates() {
+        let mut c = coord(32);
+        // three reattempts allowed
+        for i in 0..3 {
+            let a = c.handle(CoordEvent::ErrorReport {
+                node: 1,
+                task: 0,
+                kind: ErrorKind::ConnectionRefused,
+            });
+            assert_eq!(a, vec![Action::InstructReattempt { node: 1, task: 0 }], "attempt {i}");
+        }
+        // fourth SEV3 -> restart (SEV2 path)
+        let a = c.handle(CoordEvent::ErrorReport {
+            node: 1,
+            task: 0,
+            kind: ErrorKind::ConnectionRefused,
+        });
+        assert_eq!(a, vec![Action::InstructRestart { node: 1, task: 0 }]);
+    }
+
+    #[test]
+    fn reattempt_success_resets_budget() {
+        let mut c = coord(32);
+        for _ in 0..3 {
+            c.handle(CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::LinkFlapping });
+        }
+        c.handle(CoordEvent::ReattemptResult { node: 1, task: 0, ok: true });
+        let a = c.handle(CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::LinkFlapping });
+        assert_eq!(a, vec![Action::InstructReattempt { node: 1, task: 0 }]);
+    }
+
+    #[test]
+    fn sev2_restarts_then_escalates_to_sev1() {
+        let mut c = coord(32);
+        let a = c.handle(CoordEvent::ErrorReport { node: 2, task: 1, kind: ErrorKind::CudaError });
+        assert_eq!(a, vec![Action::InstructRestart { node: 2, task: 1 }]);
+        // restart failed -> SEV1: isolate + alert + replan
+        let a = c.handle(CoordEvent::RestartResult { node: 2, task: 1, ok: false });
+        assert!(matches!(a[0], Action::IsolateNode { node: 2 }));
+        assert!(matches!(a[1], Action::AlertOps { .. }));
+        assert!(matches!(a[2], Action::ApplyPlan { .. }));
+        assert_eq!(c.available_workers, 24);
+        assert_eq!(c.isolated, vec![2]);
+    }
+
+    #[test]
+    fn sev1_reconfigures_within_reduced_capacity() {
+        let mut c = coord(32);
+        let a = c.handle(CoordEvent::ErrorReport { node: 0, task: 0, kind: ErrorKind::EccError });
+        let plan = a
+            .iter()
+            .find_map(|x| match x {
+                Action::ApplyPlan { plan, .. } => Some(plan.clone()),
+                _ => None,
+            })
+            .expect("SEV1 must replan");
+        assert!(plan.workers_used <= 24);
+        // assignments were committed
+        let total: u32 =
+            (0..=1).map(|t| c.task_assignment(t).unwrap()).sum();
+        assert!(total <= 24);
+    }
+
+    #[test]
+    fn duplicate_sev1_for_same_node_is_idempotent() {
+        let mut c = coord(32);
+        c.handle(CoordEvent::NodeLost { node: 3 });
+        let before = c.available_workers;
+        let a = c.handle(CoordEvent::NodeLost { node: 3 });
+        assert!(a.is_empty());
+        assert_eq!(c.available_workers, before);
+    }
+
+    #[test]
+    fn node_join_triggers_reconfiguration() {
+        let mut c = coord(32);
+        c.handle(CoordEvent::NodeLost { node: 1 });
+        assert_eq!(c.available_workers, 24);
+        let a = c.handle(CoordEvent::NodeJoined { node: 1 });
+        assert_eq!(c.available_workers, 32);
+        assert!(c.isolated.is_empty());
+        assert!(matches!(a[0], Action::ApplyPlan { reason: "node joined", .. }));
+    }
+
+    #[test]
+    fn task_lifecycle_triggers_reconfiguration() {
+        let mut c = coord(32);
+        let a = c.handle(CoordEvent::TaskFinished { task: 0 });
+        assert!(matches!(a[0], Action::ApplyPlan { reason: "task finished", .. }));
+        assert!(c.task_assignment(0).is_none());
+        // remaining task can now take everything useful
+        c.add_task(plan_task(2, 2, 0, 48));
+        let a = c.handle(CoordEvent::TaskLaunched { task: 2 });
+        assert!(matches!(a[0], Action::ApplyPlan { reason: "task launched", .. }));
+        assert!(c.task_assignment(2).unwrap() > 0);
+    }
+
+    #[test]
+    fn waf_drops_after_sev1_and_recovers_after_join() {
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: 99 }); // force initial plan
+        let healthy = c.current_waf();
+        c.handle(CoordEvent::NodeLost { node: 0 });
+        let degraded = c.current_waf();
+        assert!(degraded < healthy);
+        c.handle(CoordEvent::NodeJoined { node: 0 });
+        let recovered = c.current_waf();
+        assert!(recovered >= degraded);
+        assert!((recovered - healthy).abs() < 1e-6 * healthy);
+    }
+}

@@ -1,0 +1,227 @@
+//! In-band error detection (§4.1): the analysis pieces behind the four
+//! detection methods. The *wiring* (heartbeat threads, process polling)
+//! lives in [`crate::agent`]; this module holds the testable logic:
+//!
+//! * [`StatMonitor`] — online statistical monitoring of iteration completion
+//!   times (Fig. 6): warn at `1.1×` the running average, declare failure at
+//!   `3×` (both configurable; §4.1 found 3× the practical balance).
+//! * [`classify_exception`] — exception propagation: map a raised exception
+//!   string to the Table 1 [`ErrorKind`].
+
+use std::collections::VecDeque;
+
+use crate::failure::ErrorKind;
+
+/// Health verdict from the statistical monitor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatStatus {
+    /// Within the normal band.
+    Normal,
+    /// Above `warn_factor ×` average — network variation/congestion; keep
+    /// going (the red-dot region of Fig. 6).
+    Degraded,
+    /// Above `fail_factor ×` average — declare a failure (grey line).
+    Failed,
+    /// Not enough samples to judge yet.
+    Unknown,
+}
+
+/// Online statistical monitor over iteration completion times.
+#[derive(Debug, Clone)]
+pub struct StatMonitor {
+    window: VecDeque<f64>,
+    capacity: usize,
+    min_samples: usize,
+    warn_factor: f64,
+    fail_factor: f64,
+    sum: f64,
+}
+
+impl StatMonitor {
+    pub fn new(warn_factor: f64, fail_factor: f64) -> StatMonitor {
+        assert!(fail_factor > warn_factor && warn_factor >= 1.0);
+        StatMonitor {
+            window: VecDeque::new(),
+            capacity: 100,
+            min_samples: 5,
+            warn_factor,
+            fail_factor,
+            sum: 0.0,
+        }
+    }
+
+    /// Paper defaults: 1.1× warn, 3× fail.
+    pub fn paper_defaults() -> StatMonitor {
+        Self::new(1.1, 3.0)
+    }
+
+    /// Record a *completed* iteration's duration.
+    pub fn record(&mut self, duration_s: f64) {
+        assert!(duration_s.is_finite() && duration_s >= 0.0);
+        self.window.push_back(duration_s);
+        self.sum += duration_s;
+        if self.window.len() > self.capacity {
+            self.sum -= self.window.pop_front().unwrap();
+        }
+    }
+
+    pub fn average(&self) -> Option<f64> {
+        if self.window.len() < self.min_samples {
+            None
+        } else {
+            Some(self.sum / self.window.len() as f64)
+        }
+    }
+
+    /// Judge the *currently running* iteration given how long it has been
+    /// executing so far.
+    pub fn check(&self, elapsed_s: f64) -> StatStatus {
+        match self.average() {
+            None => StatStatus::Unknown,
+            Some(avg) => {
+                if elapsed_s >= self.fail_factor * avg {
+                    StatStatus::Failed
+                } else if elapsed_s >= self.warn_factor * avg {
+                    StatStatus::Degraded
+                } else {
+                    StatStatus::Normal
+                }
+            }
+        }
+    }
+
+    /// Seconds after which the running iteration becomes `Failed` —
+    /// Table 2's case-4 detection time (`3 × D_iter`).
+    pub fn failure_deadline(&self) -> Option<f64> {
+        self.average().map(|avg| self.fail_factor * avg)
+    }
+
+    pub fn samples(&self) -> usize {
+        self.window.len()
+    }
+}
+
+/// Exception propagation (§4.1): classify a raised exception message.
+///
+/// Matching is deliberately substring-based and case-insensitive — this is
+/// what production log classifiers do, and it keeps the table auditable.
+pub fn classify_exception(msg: &str) -> ErrorKind {
+    let m = msg.to_ascii_lowercase();
+    let has = |pat: &str| m.contains(pat);
+    if has("ecc") {
+        ErrorKind::EccError
+    } else if has("nvlink") {
+        ErrorKind::NvlinkError
+    } else if has("dma") {
+        ErrorKind::InvalidDmaMapping
+    } else if has("driver") {
+        ErrorKind::GpuDriverError
+    } else if has("illegal memory") || has("illegal address") {
+        ErrorKind::IllegalMemoryAccess
+    } else if has("cuda") {
+        ErrorKind::CudaError
+    } else if has("nccl") && (has("timeout") || has("timed out")) {
+        ErrorKind::NcclTimeout
+    } else if has("connection refused") || has("connection reset") {
+        ErrorKind::ConnectionRefused
+    } else if has("link") && has("flap") {
+        ErrorKind::LinkFlapping
+    } else if has("network") || has("socket") || has("unreachable") {
+        ErrorKind::OtherNetworkError
+    } else if has("hang") || has("stall") {
+        ErrorKind::TaskHang
+    } else {
+        ErrorKind::OtherSoftwareError
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::Severity;
+
+    #[test]
+    fn monitor_needs_minimum_samples() {
+        let mut m = StatMonitor::paper_defaults();
+        assert_eq!(m.check(100.0), StatStatus::Unknown);
+        for _ in 0..4 {
+            m.record(10.0);
+        }
+        assert_eq!(m.check(100.0), StatStatus::Unknown);
+        m.record(10.0);
+        assert_eq!(m.check(100.0), StatStatus::Failed);
+    }
+
+    #[test]
+    fn thresholds_match_fig6() {
+        let mut m = StatMonitor::paper_defaults();
+        for _ in 0..10 {
+            m.record(10.0);
+        }
+        assert_eq!(m.average(), Some(10.0));
+        assert_eq!(m.check(10.5), StatStatus::Normal);
+        assert_eq!(m.check(11.0), StatStatus::Degraded); // 1.1×: keep going
+        assert_eq!(m.check(29.9), StatStatus::Degraded);
+        assert_eq!(m.check(30.0), StatStatus::Failed); // 3×: failure
+        assert_eq!(m.failure_deadline(), Some(30.0));
+    }
+
+    #[test]
+    fn window_adapts_to_new_regime() {
+        let mut m = StatMonitor::paper_defaults();
+        for _ in 0..100 {
+            m.record(10.0);
+        }
+        // workload legitimately slows (reconfiguration to fewer GPUs)
+        for _ in 0..200 {
+            m.record(20.0);
+        }
+        let avg = m.average().unwrap();
+        assert!((avg - 20.0).abs() < 0.5, "window should track the new regime, avg={avg}");
+    }
+
+    #[test]
+    fn minor_fluctuation_stays_normal() {
+        let mut m = StatMonitor::paper_defaults();
+        for i in 0..50 {
+            m.record(10.0 + 0.3 * ((i % 5) as f64 - 2.0)); // ±0.6 jitter
+        }
+        assert_eq!(m.check(10.4), StatStatus::Normal);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_inverted_thresholds() {
+        StatMonitor::new(3.0, 1.1);
+    }
+
+    #[test]
+    fn exception_classification_table1() {
+        use ErrorKind::*;
+        let cases = [
+            ("GPU 3: uncorrectable ECC error encountered", EccError),
+            ("NVLink transmission error on link 2", NvlinkError),
+            ("invalid DMA mapping for buffer", InvalidDmaMapping),
+            ("NVIDIA driver wedged, reinitializing", GpuDriverError),
+            ("CUDA error: an illegal memory access was encountered", IllegalMemoryAccess),
+            ("CUDA_ERROR_LAUNCH_FAILED", CudaError),
+            ("NCCL watchdog: collective timed out after 1800s", NcclTimeout),
+            ("connect: Connection refused", ConnectionRefused),
+            ("eth2: link flap detected", LinkFlapping),
+            ("socket closed by peer", OtherNetworkError),
+            ("training loop hang detected", TaskHang),
+            ("KeyError: 'optimizer'", OtherSoftwareError),
+        ];
+        for (msg, want) in cases {
+            assert_eq!(classify_exception(msg), want, "{msg}");
+        }
+    }
+
+    #[test]
+    fn classified_severities_sane() {
+        // ECC must be SEV1, CUDA SEV2, NCCL timeout SEV3 (Table 1)
+        assert_eq!(classify_exception("double-bit ECC").severity(), Severity::Sev1);
+        assert_eq!(classify_exception("CUDA error 700").severity(), Severity::Sev2);
+        assert_eq!(classify_exception("NCCL timeout").severity(), Severity::Sev3);
+    }
+}

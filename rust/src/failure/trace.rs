@@ -1,0 +1,231 @@
+//! Failure traces (paper §7.5): *trace-a* — 8 weeks, 10 SEV1 + 33 other
+//! failures on a 128-GPU/16-node cluster, node repair uniform in 1–7 days;
+//! *trace-b* — the same cluster with failure frequency amplified 20×,
+//! 7 days, ~26 SEV1 + ~80 other failures, repaired nodes rejoining at a
+//! similar rate. Arrivals are Poisson; all draws are seeded.
+
+use crate::failure::{ErrorKind, Severity};
+use crate::rng::{Rand, Xoshiro256};
+
+/// One failure occurrence in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureEvent {
+    /// Seconds from trace start.
+    pub at_s: f64,
+    pub kind: ErrorKind,
+    /// Node index the failure hits.
+    pub node: u32,
+    /// For SEV1 (node-drain) failures: seconds until the node is repaired
+    /// and rejoins. 0 for SEV2/SEV3.
+    pub repair_after_s: f64,
+}
+
+impl FailureEvent {
+    pub fn severity(&self) -> Severity {
+        self.kind.severity()
+    }
+}
+
+/// Parameters of a synthetic trace.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub name: String,
+    pub duration_s: f64,
+    pub n_nodes: u32,
+    /// Expected SEV1 count over the whole duration.
+    pub expect_sev1: f64,
+    /// Expected SEV2+SEV3 count over the whole duration.
+    pub expect_other: f64,
+    /// Repair time bounds for SEV1 (uniform draw), seconds.
+    pub repair_min_s: f64,
+    pub repair_max_s: f64,
+}
+
+impl TraceConfig {
+    /// trace-a: 8 weeks, 10 SEV1 + 33 others, repairs 1–7 days (§7.5).
+    pub fn trace_a() -> TraceConfig {
+        TraceConfig {
+            name: "trace-a".into(),
+            duration_s: 8.0 * 7.0 * 86400.0,
+            n_nodes: 16,
+            expect_sev1: 10.0,
+            expect_other: 33.0,
+            repair_min_s: 1.0 * 86400.0,
+            repair_max_s: 7.0 * 86400.0,
+        }
+    }
+
+    /// trace-b: trace-a's *rate* ×20, over 7 days (≈26 SEV1 + ≈80 others);
+    /// repairs arrive fast enough to keep the pool roughly stable (§7.5).
+    pub fn trace_b() -> TraceConfig {
+        let a = Self::trace_a();
+        let scale = 7.0 / (8.0 * 7.0); // duration ratio
+        TraceConfig {
+            name: "trace-b".into(),
+            duration_s: 7.0 * 86400.0,
+            n_nodes: 16,
+            expect_sev1: a.expect_sev1 * 20.0 * scale,  // = 25
+            expect_other: a.expect_other * 20.0 * scale, // = 82.5
+            repair_min_s: 0.1 * 86400.0,
+            repair_max_s: 0.5 * 86400.0,
+        }
+    }
+}
+
+/// A generated (or replayed) trace: failure events sorted by time.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub config: TraceConfig,
+    pub events: Vec<FailureEvent>,
+}
+
+impl Trace {
+    /// Generate a seeded trace: Poisson arrivals for each class, error kinds
+    /// drawn uniformly within the class, node uniform, SEV1 repairs uniform
+    /// in `[repair_min, repair_max]`.
+    pub fn generate(config: TraceConfig, seed: u64) -> Trace {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut events = Vec::new();
+
+        let sev1_kinds: Vec<ErrorKind> = ErrorKind::all()
+            .iter()
+            .copied()
+            .filter(|k| k.severity() == Severity::Sev1)
+            .collect();
+        let other_kinds: Vec<ErrorKind> = ErrorKind::all()
+            .iter()
+            .copied()
+            .filter(|k| k.severity() != Severity::Sev1)
+            .collect();
+
+        // Poisson process: exponential inter-arrivals with the class rate.
+        let emit = |kinds: &[ErrorKind], expect: f64, rng: &mut Xoshiro256, out: &mut Vec<FailureEvent>| {
+            if expect <= 0.0 {
+                return;
+            }
+            let rate = expect / config.duration_s;
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(rate);
+                if t >= config.duration_s {
+                    break;
+                }
+                let kind = *rng.choose(kinds);
+                let repair = if kind.severity() == Severity::Sev1 {
+                    rng.uniform(config.repair_min_s, config.repair_max_s)
+                } else {
+                    0.0
+                };
+                out.push(FailureEvent {
+                    at_s: t,
+                    kind,
+                    node: rng.below(config.n_nodes as u64) as u32,
+                    repair_after_s: repair,
+                });
+            }
+        };
+        emit(&sev1_kinds, config.expect_sev1, &mut rng, &mut events);
+        emit(&other_kinds, config.expect_other, &mut rng, &mut events);
+
+        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        Trace { config, events }
+    }
+
+    pub fn count_by_severity(&self, sev: Severity) -> usize {
+        self.events.iter().filter(|e| e.severity() == sev).count()
+    }
+
+    /// Available-GPU timeline: (time, available GPU count) steps, starting
+    /// from full capacity — the y-axis of Fig. 11a/11d. Only SEV1 failures
+    /// remove capacity (§7.5); repairs restore it.
+    pub fn availability_timeline(&self, gpus_per_node: u32) -> Vec<(f64, u32)> {
+        let total = self.config.n_nodes * gpus_per_node;
+        let mut deltas: Vec<(f64, i64)> = Vec::new();
+        for e in &self.events {
+            if e.severity() == Severity::Sev1 {
+                deltas.push((e.at_s, -(gpus_per_node as i64)));
+                let back = e.at_s + e.repair_after_s;
+                if back < self.config.duration_s {
+                    deltas.push((back, gpus_per_node as i64));
+                }
+            }
+        }
+        deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut timeline = vec![(0.0, total)];
+        let mut cur = total as i64;
+        for (t, d) in deltas {
+            cur = (cur + d).clamp(0, total as i64);
+            timeline.push((t, cur as u32));
+        }
+        timeline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_a_counts_near_paper() {
+        // Average over seeds: expectation 10 SEV1 / 33 other.
+        let mut sev1 = 0usize;
+        let mut other = 0usize;
+        let n = 40;
+        for seed in 0..n {
+            let t = Trace::generate(TraceConfig::trace_a(), seed);
+            sev1 += t.count_by_severity(Severity::Sev1);
+            other += t.count_by_severity(Severity::Sev2) + t.count_by_severity(Severity::Sev3);
+        }
+        let mean_sev1 = sev1 as f64 / n as f64;
+        let mean_other = other as f64 / n as f64;
+        assert!((8.0..12.0).contains(&mean_sev1), "mean SEV1 {mean_sev1}");
+        assert!((29.0..37.0).contains(&mean_other), "mean other {mean_other}");
+    }
+
+    #[test]
+    fn trace_b_is_20x_denser() {
+        let a = TraceConfig::trace_a();
+        let b = TraceConfig::trace_b();
+        let rate_a = (a.expect_sev1 + a.expect_other) / a.duration_s;
+        let rate_b = (b.expect_sev1 + b.expect_other) / b.duration_s;
+        assert!((rate_b / rate_a - 20.0).abs() < 0.5, "ratio {}", rate_b / rate_a);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t1 = Trace::generate(TraceConfig::trace_a(), 99);
+        let t2 = Trace::generate(TraceConfig::trace_a(), 99);
+        assert_eq!(t1.events, t2.events);
+        let t3 = Trace::generate(TraceConfig::trace_a(), 100);
+        assert_ne!(t1.events, t3.events);
+    }
+
+    #[test]
+    fn events_sorted_and_in_bounds() {
+        let t = Trace::generate(TraceConfig::trace_b(), 7);
+        let cfg = &t.config;
+        let mut prev = 0.0;
+        for e in &t.events {
+            assert!(e.at_s >= prev);
+            assert!(e.at_s < cfg.duration_s);
+            assert!(e.node < cfg.n_nodes);
+            if e.severity() == Severity::Sev1 {
+                assert!(e.repair_after_s >= cfg.repair_min_s && e.repair_after_s <= cfg.repair_max_s);
+            } else {
+                assert_eq!(e.repair_after_s, 0.0);
+            }
+            prev = e.at_s;
+        }
+    }
+
+    #[test]
+    fn availability_timeline_steps_down_and_up() {
+        let t = Trace::generate(TraceConfig::trace_a(), 3);
+        let tl = t.availability_timeline(8);
+        assert_eq!(tl[0], (0.0, 128));
+        let min = tl.iter().map(|&(_, g)| g).min().unwrap();
+        assert!(min < 128, "SEV1 failures must reduce availability");
+        // capacity never exceeds total or goes negative (clamped)
+        assert!(tl.iter().all(|&(_, g)| g <= 128));
+    }
+}

@@ -1,0 +1,333 @@
+//! etcd-like distributed key-value store — the *status monitor* substrate of
+//! §3.2. The paper uses etcd; we build the subset Unicron needs:
+//!
+//! * revisioned puts/gets/deletes over string keys,
+//! * **leases** with TTLs — a key attached to a lease disappears when the
+//!   lease expires (node-health detection rides on this),
+//! * **watches** on key prefixes — the coordinator consolidates agent status
+//!   reports by watching `/status/…`,
+//! * a TCP wire protocol ([`net`]) so agents on other "machines" talk to it.
+//!
+//! Expiry is clock-driven via [`Store::tick`], which both the live
+//! coordinator loop and the tests (with [`crate::util::SimClock`]) call.
+
+pub mod net;
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::util::Clock;
+
+/// A watch notification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Put { key: String, value: String, revision: u64 },
+    Delete { key: String, revision: u64, expired: bool },
+}
+
+impl Event {
+    pub fn key(&self) -> &str {
+        match self {
+            Event::Put { key, .. } | Event::Delete { key, .. } => key,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    value: String,
+    lease: Option<u64>,
+    mod_revision: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Lease {
+    ttl_s: f64,
+    expires_at: f64,
+    keys: Vec<String>,
+}
+
+struct Watcher {
+    prefix: String,
+    tx: Sender<Event>,
+}
+
+struct Inner {
+    map: BTreeMap<String, Entry>,
+    leases: BTreeMap<u64, Lease>,
+    watchers: Vec<Watcher>,
+    revision: u64,
+    next_lease: u64,
+}
+
+/// Thread-safe store handle (clone freely).
+#[derive(Clone)]
+pub struct Store {
+    inner: Arc<Mutex<Inner>>,
+    clock: Arc<dyn Clock>,
+}
+
+impl Store {
+    pub fn new(clock: Arc<dyn Clock>) -> Store {
+        Store {
+            inner: Arc::new(Mutex::new(Inner {
+                map: BTreeMap::new(),
+                leases: BTreeMap::new(),
+                watchers: Vec::new(),
+                revision: 0,
+                next_lease: 1,
+            })),
+            clock,
+        }
+    }
+
+    /// Put a key, optionally attached to a lease. Returns the new revision.
+    pub fn put(&self, key: &str, value: &str, lease: Option<u64>) -> Result<u64, String> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(id) = lease {
+            let l = g.leases.get_mut(&id).ok_or_else(|| format!("no such lease {id}"))?;
+            if !l.keys.iter().any(|k| k == key) {
+                l.keys.push(key.to_string());
+            }
+        }
+        g.revision += 1;
+        let rev = g.revision;
+        g.map.insert(key.to_string(), Entry { value: value.to_string(), lease, mod_revision: rev });
+        notify(&mut g, Event::Put { key: key.into(), value: value.into(), revision: rev });
+        Ok(rev)
+    }
+
+    pub fn get(&self, key: &str) -> Option<(String, u64)> {
+        let g = self.inner.lock().unwrap();
+        g.map.get(key).map(|e| (e.value.clone(), e.mod_revision))
+    }
+
+    /// All key/value pairs under a prefix (sorted by key).
+    pub fn get_prefix(&self, prefix: &str) -> Vec<(String, String)> {
+        let g = self.inner.lock().unwrap();
+        g.map
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, e)| (k.clone(), e.value.clone()))
+            .collect()
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.map.remove(key).is_some() {
+            g.revision += 1;
+            let rev = g.revision;
+            notify(&mut g, Event::Delete { key: key.into(), revision: rev, expired: false });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Grant a lease with the given TTL; returns the lease id.
+    pub fn grant_lease(&self, ttl_s: f64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.next_lease;
+        g.next_lease += 1;
+        let expires_at = self.clock.now() + ttl_s;
+        g.leases.insert(id, Lease { ttl_s, expires_at, keys: Vec::new() });
+        id
+    }
+
+    /// Refresh a lease (heartbeat). Errors if the lease already expired.
+    pub fn keepalive(&self, id: u64) -> Result<(), String> {
+        let mut g = self.inner.lock().unwrap();
+        let now = self.clock.now();
+        match g.leases.get_mut(&id) {
+            Some(l) if l.expires_at >= now => {
+                l.expires_at = now + l.ttl_s;
+                Ok(())
+            }
+            Some(_) => Err(format!("lease {id} expired")),
+            None => Err(format!("no such lease {id}")),
+        }
+    }
+
+    /// Revoke a lease, deleting its keys (clean agent shutdown).
+    pub fn revoke_lease(&self, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(l) = g.leases.remove(&id) {
+            for key in l.keys {
+                if g.map.get(&key).map_or(false, |e| e.lease == Some(id)) {
+                    g.map.remove(&key);
+                    g.revision += 1;
+                    let rev = g.revision;
+                    notify(&mut g, Event::Delete { key, revision: rev, expired: false });
+                }
+            }
+        }
+    }
+
+    /// Expire overdue leases; their keys are deleted with `expired: true`
+    /// (the node-health SEV1 signal). Returns expired lease ids.
+    pub fn tick(&self) -> Vec<u64> {
+        let now = self.clock.now();
+        let mut g = self.inner.lock().unwrap();
+        let overdue: Vec<u64> =
+            g.leases.iter().filter(|(_, l)| l.expires_at < now).map(|(&id, _)| id).collect();
+        for id in &overdue {
+            if let Some(l) = g.leases.remove(id) {
+                for key in l.keys {
+                    if g.map.get(&key).map_or(false, |e| e.lease == Some(*id)) {
+                        g.map.remove(&key);
+                        g.revision += 1;
+                        let rev = g.revision;
+                        notify(&mut g, Event::Delete { key, revision: rev, expired: true });
+                    }
+                }
+            }
+        }
+        overdue
+    }
+
+    /// Subscribe to events whose key starts with `prefix`.
+    pub fn watch(&self, prefix: &str) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        let mut g = self.inner.lock().unwrap();
+        g.watchers.push(Watcher { prefix: prefix.to_string(), tx });
+        rx
+    }
+
+    pub fn revision(&self) -> u64 {
+        self.inner.lock().unwrap().revision
+    }
+
+    pub fn lease_count(&self) -> usize {
+        self.inner.lock().unwrap().leases.len()
+    }
+}
+
+fn notify(inner: &mut Inner, event: Event) {
+    inner.watchers.retain(|w| {
+        if event.key().starts_with(&w.prefix) {
+            w.tx.send(event.clone()).is_ok() // drop dead watchers
+        } else {
+            true
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SimClock;
+
+    fn store() -> (Store, Arc<SimClock>) {
+        let clock = SimClock::new();
+        (Store::new(clock.clone()), clock)
+    }
+
+    #[test]
+    fn put_get_delete_with_revisions() {
+        let (s, _) = store();
+        let r1 = s.put("/a", "1", None).unwrap();
+        let r2 = s.put("/a", "2", None).unwrap();
+        assert!(r2 > r1);
+        assert_eq!(s.get("/a"), Some(("2".into(), r2)));
+        assert!(s.delete("/a"));
+        assert!(!s.delete("/a"));
+        assert_eq!(s.get("/a"), None);
+    }
+
+    #[test]
+    fn prefix_scan_sorted() {
+        let (s, _) = store();
+        s.put("/nodes/2", "b", None).unwrap();
+        s.put("/nodes/1", "a", None).unwrap();
+        s.put("/tasks/1", "t", None).unwrap();
+        let nodes = s.get_prefix("/nodes/");
+        assert_eq!(nodes, vec![("/nodes/1".into(), "a".into()), ("/nodes/2".into(), "b".into())]);
+    }
+
+    #[test]
+    fn lease_expiry_deletes_keys() {
+        let (s, clock) = store();
+        let lease = s.grant_lease(5.0);
+        s.put("/nodes/n1", "alive", Some(lease)).unwrap();
+        clock.advance(3.0);
+        assert_eq!(s.tick(), Vec::<u64>::new());
+        assert!(s.get("/nodes/n1").is_some());
+        clock.advance(3.0);
+        assert_eq!(s.tick(), vec![lease]);
+        assert!(s.get("/nodes/n1").is_none());
+        assert_eq!(s.lease_count(), 0);
+    }
+
+    #[test]
+    fn keepalive_extends_lease() {
+        let (s, clock) = store();
+        let lease = s.grant_lease(5.0);
+        s.put("/n", "x", Some(lease)).unwrap();
+        for _ in 0..5 {
+            clock.advance(3.0);
+            s.keepalive(lease).unwrap();
+            s.tick();
+        }
+        assert!(s.get("/n").is_some(), "kept alive for 15s on a 5s TTL");
+        clock.advance(6.0);
+        s.tick();
+        assert!(s.keepalive(lease).is_err());
+    }
+
+    #[test]
+    fn watch_sees_puts_deletes_and_expiry() {
+        let (s, clock) = store();
+        let rx = s.watch("/status/");
+        s.put("/status/n1", "ok", None).unwrap();
+        s.put("/other/x", "ignored", None).unwrap();
+        s.delete("/status/n1");
+        let lease = s.grant_lease(1.0);
+        s.put("/status/n2", "ok", Some(lease)).unwrap();
+        clock.advance(2.0);
+        s.tick();
+
+        let events: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(events.len(), 4);
+        assert!(matches!(&events[0], Event::Put { key, .. } if key == "/status/n1"));
+        assert!(matches!(&events[1], Event::Delete { key, expired: false, .. } if key == "/status/n1"));
+        assert!(matches!(&events[2], Event::Put { key, .. } if key == "/status/n2"));
+        assert!(matches!(&events[3], Event::Delete { key, expired: true, .. } if key == "/status/n2"));
+    }
+
+    #[test]
+    fn revoke_lease_cleans_up() {
+        let (s, _) = store();
+        let lease = s.grant_lease(100.0);
+        s.put("/a", "1", Some(lease)).unwrap();
+        s.put("/b", "2", None).unwrap();
+        s.revoke_lease(lease);
+        assert!(s.get("/a").is_none());
+        assert!(s.get("/b").is_some());
+    }
+
+    #[test]
+    fn put_on_missing_lease_fails() {
+        let (s, _) = store();
+        assert!(s.put("/a", "1", Some(42)).is_err());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let (s, _) = store();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s2 = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    s2.put(&format!("/t{t}/k{i}"), &i.to_string(), None).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.revision(), 400);
+        assert_eq!(s.get_prefix("/t0/").len(), 100);
+    }
+}

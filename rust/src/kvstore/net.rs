@@ -1,0 +1,259 @@
+//! TCP wire protocol for [`Store`]: what makes the status monitor a
+//! *distributed* KV store the agents can reach from other machines.
+//!
+//! Methods: `put`, `get`, `get_prefix`, `delete`, `lease_grant`,
+//! `keepalive`, `lease_revoke`, `watch` (the connection switches to a push
+//! stream of events after the ack).
+
+use anyhow::{anyhow, Result};
+use std::net::ToSocketAddrs;
+use std::time::Duration;
+
+use super::{Event, Store};
+use crate::rpc::{self, err_response, ok_response, Client};
+use crate::ser::Value;
+
+/// Serve `store` on `addr`; returns the RPC server handle (shuts down on drop).
+pub fn serve(store: Store, addr: impl ToSocketAddrs) -> Result<rpc::Server> {
+    rpc::Server::serve(addr, move |req, stream| {
+        let method = req.get("method").and_then(Value::as_str).unwrap_or("");
+        match method {
+            "put" => {
+                let key = req.get("key").and_then(Value::as_str).unwrap_or("");
+                let value = req.get("value").and_then(Value::as_str).unwrap_or("");
+                let lease = req.get("lease").and_then(Value::as_u64);
+                Some(match store.put(key, value, lease) {
+                    Ok(rev) => ok_response().with("revision", rev),
+                    Err(e) => err_response(&e),
+                })
+            }
+            "get" => {
+                let key = req.get("key").and_then(Value::as_str).unwrap_or("");
+                Some(match store.get(key) {
+                    Some((value, rev)) => {
+                        ok_response().with("value", value).with("revision", rev).with("found", true)
+                    }
+                    None => ok_response().with("found", false),
+                })
+            }
+            "get_prefix" => {
+                let prefix = req.get("prefix").and_then(Value::as_str).unwrap_or("");
+                let kvs: Vec<Value> = store
+                    .get_prefix(prefix)
+                    .into_iter()
+                    .map(|(k, v)| Value::obj().with("key", k).with("value", v))
+                    .collect();
+                Some(ok_response().with("kvs", Value::Arr(kvs)))
+            }
+            "delete" => {
+                let key = req.get("key").and_then(Value::as_str).unwrap_or("");
+                Some(ok_response().with("deleted", store.delete(key)))
+            }
+            "lease_grant" => {
+                let ttl = req.get("ttl_s").and_then(Value::as_f64).unwrap_or(5.0);
+                Some(ok_response().with("lease", store.grant_lease(ttl)))
+            }
+            "keepalive" => {
+                let id = req.get("lease").and_then(Value::as_u64).unwrap_or(0);
+                Some(match store.keepalive(id) {
+                    Ok(()) => ok_response(),
+                    Err(e) => err_response(&e),
+                })
+            }
+            "lease_revoke" => {
+                let id = req.get("lease").and_then(Value::as_u64).unwrap_or(0);
+                store.revoke_lease(id);
+                Some(ok_response())
+            }
+            "watch" => {
+                // ack, then stream events on this connection until it drops
+                let prefix =
+                    req.get("prefix").and_then(Value::as_str).unwrap_or("").to_string();
+                let rx = store.watch(&prefix);
+                if rpc::send_msg(stream, &ok_response()).is_err() {
+                    return None;
+                }
+                stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+                loop {
+                    match rx.recv_timeout(Duration::from_millis(200)) {
+                        Ok(ev) => {
+                            if rpc::send_msg(stream, &event_to_json(&ev)).is_err() {
+                                return None;
+                            }
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            // connection liveness check: peek for EOF
+                            let mut probe = [0u8; 1];
+                            use std::io::Read;
+                            match stream.read(&mut probe) {
+                                Ok(0) => return None, // peer closed
+                                Ok(_) => {}           // ignore stray bytes
+                                Err(e)
+                                    if matches!(
+                                        e.kind(),
+                                        std::io::ErrorKind::WouldBlock
+                                            | std::io::ErrorKind::TimedOut
+                                    ) => {}
+                                Err(_) => return None,
+                            }
+                        }
+                        Err(_) => return None,
+                    }
+                }
+            }
+            other => Some(err_response(&format!("unknown method {other:?}"))),
+        }
+    })
+    .map_err(|e| anyhow!("kvstore serve: {e}"))
+}
+
+fn event_to_json(ev: &Event) -> Value {
+    match ev {
+        Event::Put { key, value, revision } => Value::obj()
+            .with("type", "put")
+            .with("key", key.as_str())
+            .with("value", value.as_str())
+            .with("revision", *revision),
+        Event::Delete { key, revision, expired } => Value::obj()
+            .with("type", "delete")
+            .with("key", key.as_str())
+            .with("revision", *revision)
+            .with("expired", *expired),
+    }
+}
+
+/// Parse a pushed watch frame back into an [`Event`].
+pub fn event_from_json(v: &Value) -> Option<Event> {
+    let key = v.get("key")?.as_str()?.to_string();
+    let revision = v.get("revision")?.as_u64()?;
+    match v.get("type")?.as_str()? {
+        "put" => Some(Event::Put { key, value: v.get("value")?.as_str()?.to_string(), revision }),
+        "delete" => Some(Event::Delete {
+            key,
+            revision,
+            expired: v.get("expired").and_then(Value::as_bool).unwrap_or(false),
+        }),
+        _ => None,
+    }
+}
+
+/// Typed client for the wire protocol.
+pub struct KvClient {
+    client: Client,
+}
+
+impl KvClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<KvClient> {
+        Ok(KvClient { client: Client::connect(addr)? })
+    }
+
+    fn expect_ok(resp: Value) -> Result<Value> {
+        if rpc::is_ok(&resp) {
+            Ok(resp)
+        } else {
+            Err(anyhow!(
+                "kv error: {}",
+                resp.get("error").and_then(Value::as_str).unwrap_or("unknown")
+            ))
+        }
+    }
+
+    pub fn put(&mut self, key: &str, value: &str, lease: Option<u64>) -> Result<u64> {
+        let mut req = rpc::request("put").with("key", key).with("value", value);
+        if let Some(l) = lease {
+            req.set("lease", l);
+        }
+        let resp = Self::expect_ok(self.client.call(&req)?)?;
+        resp.get("revision").and_then(Value::as_u64).ok_or_else(|| anyhow!("no revision"))
+    }
+
+    pub fn get(&mut self, key: &str) -> Result<Option<String>> {
+        let resp = Self::expect_ok(self.client.call(&rpc::request("get").with("key", key))?)?;
+        if resp.get("found").and_then(Value::as_bool).unwrap_or(false) {
+            Ok(resp.get("value").and_then(Value::as_str).map(String::from))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn get_prefix(&mut self, prefix: &str) -> Result<Vec<(String, String)>> {
+        let resp =
+            Self::expect_ok(self.client.call(&rpc::request("get_prefix").with("prefix", prefix))?)?;
+        Ok(resp
+            .get("kvs")
+            .and_then(Value::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|kv| {
+                Some((kv.get("key")?.as_str()?.to_string(), kv.get("value")?.as_str()?.to_string()))
+            })
+            .collect())
+    }
+
+    pub fn delete(&mut self, key: &str) -> Result<bool> {
+        let resp = Self::expect_ok(self.client.call(&rpc::request("delete").with("key", key))?)?;
+        Ok(resp.get("deleted").and_then(Value::as_bool).unwrap_or(false))
+    }
+
+    pub fn lease_grant(&mut self, ttl_s: f64) -> Result<u64> {
+        let resp =
+            Self::expect_ok(self.client.call(&rpc::request("lease_grant").with("ttl_s", ttl_s))?)?;
+        resp.get("lease").and_then(Value::as_u64).ok_or_else(|| anyhow!("no lease id"))
+    }
+
+    pub fn keepalive(&mut self, lease: u64) -> Result<()> {
+        Self::expect_ok(self.client.call(&rpc::request("keepalive").with("lease", lease))?)?;
+        Ok(())
+    }
+
+    pub fn lease_revoke(&mut self, lease: u64) -> Result<()> {
+        Self::expect_ok(self.client.call(&rpc::request("lease_revoke").with("lease", lease))?)?;
+        Ok(())
+    }
+
+    /// Subscribe; this client becomes a push stream (use `next_event`).
+    pub fn watch(mut self, prefix: &str) -> Result<WatchStream> {
+        let resp = self.client.call(&rpc::request("watch").with("prefix", prefix))?;
+        Self::expect_ok(resp)?;
+        Ok(WatchStream { client: self.client })
+    }
+}
+
+/// Blocking stream of watch events.
+pub struct WatchStream {
+    client: Client,
+}
+
+impl WatchStream {
+    pub fn next_event(&mut self) -> Result<Event> {
+        let v = self.client.next_push()?;
+        event_from_json(&v).ok_or_else(|| anyhow!("bad watch frame: {}", v.encode()))
+    }
+
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.client.set_read_timeout(t)
+    }
+}
+
+// Integration tests over real TCP live in rust/tests/kvstore_tcp.rs.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_roundtrip() {
+        for ev in [
+            Event::Put { key: "/k".into(), value: "v".into(), revision: 3 },
+            Event::Delete { key: "/k".into(), revision: 4, expired: true },
+        ] {
+            let j = event_to_json(&ev);
+            assert_eq!(event_from_json(&j).unwrap(), ev);
+        }
+    }
+
+    #[test]
+    fn bad_event_json_rejected() {
+        assert!(event_from_json(&Value::obj().with("type", "nope")).is_none());
+        assert!(event_from_json(&Value::Null).is_none());
+    }
+}

@@ -1,0 +1,43 @@
+//! # Unicron — economizing self-healing LLM training at scale
+//!
+//! Reproduction of *Unicron: Economizing Self-Healing LLM Training at Scale*
+//! (He et al., Alibaba, 2023) as a three-layer Rust + JAX + Pallas system.
+//!
+//! This crate is Layer 3: the workload manager that owns the request path.
+//! The JAX/Pallas layers (under `python/`) run only at build time and produce
+//! HLO-text artifacts that [`runtime`] loads through PJRT.
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//!
+//! * substrates: [`util`], [`rng`], [`ser`], [`config`], [`cli`], [`bench`],
+//!   [`proptest`], [`metrics`]
+//! * distributed plumbing: [`kvstore`], [`rpc`], [`membership`], [`checkpoint`]
+//! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
+//!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
+//! * execution: [`runtime`], [`trainer`], [`data`]
+//! * evaluation: [`simulator`], [`repro`]
+
+pub mod agent;
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod detect;
+pub mod failure;
+pub mod kvstore;
+pub mod membership;
+pub mod metrics;
+pub mod perfmodel;
+pub mod planner;
+pub mod proptest;
+pub mod repro;
+pub mod rng;
+pub mod rpc;
+pub mod runtime;
+pub mod ser;
+pub mod simulator;
+pub mod trainer;
+pub mod transition;
+pub mod util;

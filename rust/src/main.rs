@@ -1,0 +1,304 @@
+//! `unicron` — the workload-manager CLI (launcher, Fig. 5's entry point).
+//!
+//! Subcommands:
+//!   repro <exp>      regenerate a paper table/figure (see `repro list`)
+//!   train            run the real DP trainer on an AOT'd model artifact
+//!   simulate         replay a failure trace under a recovery policy
+//!   plan             solve a multi-task reconfiguration plan (Table 3 cases)
+//!   perfmodel        query the Megatron cost model T(t, x)
+//!   coordinator      start a live coordinator (TCP kvstore + event loop)
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use unicron::cli::{usage, Args, OptSpec};
+use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
+use unicron::coordinator::live::CoordinatorLive;
+use unicron::failure::{Trace, TraceConfig};
+use unicron::perfmodel::best_config;
+use unicron::simulator::{PolicyKind, Simulator};
+use unicron::trainer::{DpTrainer, LrSchedule, TrainerConfig};
+use unicron::util::{fmt_duration, fmt_si, RealClock};
+
+const ABOUT: &str = "Unicron: economizing self-healing LLM training at scale (reproduction)";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_help();
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "repro" => cmd_repro(&rest),
+        "train" => cmd_train(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "plan" => cmd_plan(&rest),
+        "perfmodel" => cmd_perfmodel(&rest),
+        "coordinator" => cmd_coordinator(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!("{ABOUT}\n");
+    println!("USAGE: unicron <command> [options]\n");
+    println!("COMMANDS:");
+    println!("  repro <exp|list>   regenerate a paper table/figure");
+    println!("  train              train a GPT artifact with the self-healing DP engine");
+    println!("  simulate           replay a failure trace under a recovery policy");
+    println!("  plan               multi-task WAF plan for a Table 3 case");
+    println!("  perfmodel          query T(model, gpus) and the best 3D config");
+    println!("  coordinator        start a live coordinator (TCP)");
+}
+
+fn cmd_repro(argv: &[String]) -> Result<(), String> {
+    let specs = [OptSpec { name: "seed", help: "trace seed", takes_value: true, default: Some("42") }];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let exp = args.positional.first().map(String::as_str).unwrap_or("list");
+    if exp == "list" {
+        println!("experiments: {}", unicron::repro::EXPERIMENTS.join(", "));
+        return Ok(());
+    }
+    let seed = args.u64("seed").map_err(|e| e.to_string())?;
+    if exp == "all" {
+        for &e in unicron::repro::EXPERIMENTS {
+            println!("{}\n", unicron::repro::run(e, seed)?);
+        }
+        return Ok(());
+    }
+    println!("{}", unicron::repro::run(exp, seed)?);
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "model", help: "artifact name under artifacts/", takes_value: true, default: Some("tiny") },
+        OptSpec { name: "dp", help: "data-parallel workers", takes_value: true, default: Some("2") },
+        OptSpec { name: "micro-batches", help: "micro-batches per global batch", takes_value: true, default: Some("4") },
+        OptSpec { name: "steps", help: "optimizer steps", takes_value: true, default: Some("20") },
+        OptSpec { name: "lr", help: "peak learning rate", takes_value: true, default: Some("1e-3") },
+        OptSpec { name: "seed", help: "init seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "fail-at", help: "inject: step:rank:after_mbs (e.g. 3:1:2)", takes_value: true, default: None },
+        OptSpec { name: "artifacts", help: "artifacts root", takes_value: true, default: Some("artifacts") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let model = args.str("model").map_err(|e| e.to_string())?;
+    let steps = args.u64("steps").map_err(|e| e.to_string())?;
+    let dp = args.usize("dp").map_err(|e| e.to_string())?;
+    let micro = args.usize("micro-batches").map_err(|e| e.to_string())?;
+    let lr = args.f64("lr").map_err(|e| e.to_string())? as f32;
+    let seed = args.u64("seed").map_err(|e| e.to_string())?;
+    let fail: Option<(u64, usize, usize)> = match args.get("fail-at") {
+        Some(s) => {
+            let parts: Vec<&str> = s.split(':').collect();
+            if parts.len() != 3 {
+                return Err("--fail-at expects step:rank:after_mbs".into());
+            }
+            Some((
+                parts[0].parse().map_err(|_| "bad step")?,
+                parts[1].parse().map_err(|_| "bad rank")?,
+                parts[2].parse().map_err(|_| "bad after_mbs")?,
+            ))
+        }
+        None => None,
+    };
+
+    let cfg = TrainerConfig {
+        artifact_dir: std::path::Path::new(args.str("artifacts").unwrap()).join(model),
+        dp,
+        micro_batches: micro,
+        schedule: LrSchedule { base: lr, warmup_steps: steps / 10, total_steps: steps },
+        init_seed: seed,
+        data_seed: seed ^ 0xDA7A,
+    };
+    let mut trainer = DpTrainer::new(cfg).map_err(|e| e.to_string())?;
+    println!(
+        "training {model}: {} params, dp={dp}, {micro} micro-batches/step",
+        trainer.manifest.n_params
+    );
+    for step in 0..steps {
+        if let Some((s, rank, after)) = fail {
+            if s == step {
+                println!("injecting failure: rank {rank} dies after {after} micro-batches");
+                trainer.inject_failure(rank, after);
+            }
+        }
+        let rep = trainer.train_step().map_err(|e| e.to_string())?;
+        println!(
+            "step {:>4}  loss {:.4}  |g| {:.3e}  lr {:.2e}  {}  alive={:?}{}",
+            rep.step,
+            rep.loss,
+            rep.grad_norm,
+            rep.lr,
+            fmt_duration(rep.duration_s),
+            trainer.alive_ranks(),
+            if rep.failures.is_empty() {
+                String::new()
+            } else {
+                format!("  FAILED {:?}, redistributed {}", rep.failures, rep.redistributed)
+            }
+        );
+        // self-heal: revive dead ranks via nearest-principle state migration
+        if !rep.failures.is_empty() {
+            for rank in rep.failures {
+                trainer.revive(rank).map_err(|e| e.to_string())?;
+                println!("revived rank {rank} from healthy DP replica");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "trace", help: "a | b", takes_value: true, default: Some("a") },
+        OptSpec { name: "policy", help: "unicron|megatron|oobleck|varuna|bamboo|all", takes_value: true, default: Some("all") },
+        OptSpec { name: "case", help: "Table 3 case (1-5)", takes_value: true, default: Some("5") },
+        OptSpec { name: "seed", help: "trace seed", takes_value: true, default: Some("42") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let tc = match args.str("trace").unwrap() {
+        "a" => TraceConfig::trace_a(),
+        "b" => TraceConfig::trace_b(),
+        other => return Err(format!("unknown trace {other:?}")),
+    };
+    let seed = args.u64("seed").map_err(|e| e.to_string())?;
+    let case = args.u64("case").map_err(|e| e.to_string())? as u32;
+    let trace = Trace::generate(tc, seed);
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let tasks = table3_case(case);
+    let kinds: Vec<PolicyKind> = match args.str("policy").unwrap() {
+        "all" => PolicyKind::all().to_vec(),
+        name => vec![parse_policy(name)?],
+    };
+    for kind in kinds {
+        let r = Simulator::new(cluster.clone(), cfg.clone(), kind, &tasks).run(&trace);
+        println!(
+            "{:<10} mean WAF {}FLOP/s   accumulated {}FLOP·s   reduction {:.1}%   transitions {}",
+            kind.name(),
+            fmt_si(r.mean_waf()),
+            fmt_si(r.accumulated_waf),
+            r.reduction() * 100.0,
+            r.transitions.len()
+        );
+    }
+    Ok(())
+}
+
+fn parse_policy(name: &str) -> Result<PolicyKind, String> {
+    Ok(match name {
+        "unicron" => PolicyKind::Unicron,
+        "megatron" => PolicyKind::Megatron,
+        "oobleck" => PolicyKind::Oobleck,
+        "varuna" => PolicyKind::Varuna,
+        "bamboo" => PolicyKind::Bamboo,
+        other => return Err(format!("unknown policy {other:?}")),
+    })
+}
+
+fn cmd_plan(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "case", help: "Table 3 case (1-5)", takes_value: true, default: Some("5") },
+        OptSpec { name: "gpus", help: "available workers", takes_value: true, default: Some("128") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let case = args.u64("case").map_err(|e| e.to_string())? as u32;
+    let gpus = args.u64("gpus").map_err(|e| e.to_string())? as u32;
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let tasks: Vec<unicron::planner::PlanTask> = table3_case(case)
+        .into_iter()
+        .map(|spec| {
+            let model = ModelSpec::gpt3(&spec.model).unwrap();
+            unicron::planner::PlanTask {
+                throughput: unicron::perfmodel::throughput_table(&model, &cluster, gpus),
+                spec,
+                current: 0,
+                fault: false,
+            }
+        })
+        .collect();
+    let plan = unicron::planner::solve(&tasks, gpus, &cfg);
+    for (t, &x) in tasks.iter().zip(&plan.assignment) {
+        println!(
+            "task {} ({:<10} w={:.1}): {:>3} workers  F = {}FLOP/s",
+            t.spec.id,
+            t.spec.model,
+            t.spec.weight,
+            x,
+            fmt_si(t.waf(x))
+        );
+    }
+    println!("total WAF {}FLOP/s, workers used {}/{gpus}", fmt_si(plan.total_waf), plan.workers_used);
+    Ok(())
+}
+
+fn cmd_perfmodel(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "model", help: "gpt3-{1.3b,7b,13b,70b,175b}", takes_value: true, default: Some("gpt3-7b") },
+        OptSpec { name: "gpus", help: "GPU count", takes_value: true, default: Some("64") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let model = ModelSpec::gpt3(args.str("model").unwrap())
+        .ok_or_else(|| format!("unknown model; zoo: {:?}", ModelSpec::zoo()))?;
+    let gpus = args.u64("gpus").map_err(|e| e.to_string())? as u32;
+    let cluster = ClusterSpec::default();
+    match best_config(&model, &cluster, gpus) {
+        Some(e) => {
+            println!("model {} ({} params)", model.name, fmt_si(model.n_params));
+            println!(
+                "best config on {gpus} GPUs: tp={} pp={} dp={} mbs={}",
+                e.config.tp, e.config.pp, e.config.dp, e.config.mbs
+            );
+            println!("iteration time {}", fmt_duration(e.iter_time_s));
+            println!("achieved {}FLOP/s ({:.1}% of peak)", fmt_si(e.achieved_flops), e.flops_ratio * 100.0);
+            println!("samples/s {:.2}   memory {:.1} GiB/GPU", e.samples_per_s, e.memory_gib);
+        }
+        None => println!("infeasible: {} does not fit on {gpus} GPUs", model.name),
+    }
+    Ok(())
+}
+
+fn cmd_coordinator(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "listen", help: "bind address", takes_value: true, default: Some("127.0.0.1:7077") },
+        OptSpec { name: "workers", help: "initial healthy workers", takes_value: true, default: Some("128") },
+        OptSpec { name: "duration", help: "seconds to run (0 = forever)", takes_value: true, default: Some("0") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let clock = Arc::new(RealClock::new());
+    let live = CoordinatorLive::start(
+        UnicronConfig::default(),
+        args.u64("workers").map_err(|e| e.to_string())? as u32,
+        8,
+        clock,
+        args.str("listen").unwrap(),
+    )
+    .map_err(|e| e.to_string())?;
+    println!("coordinator listening on {} (kvstore wire protocol)", live.addr);
+    let duration = args.f64("duration").map_err(|e| e.to_string())?;
+    if duration > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let _ = usage; // referenced to keep the helper exported
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Cluster membership over kvstore leases — the node-health half of §4.1.
+//!
+//! An agent registers its node under `/nodes/<id>` attached to a TTL lease
+//! and keeps the lease alive with heartbeats (its "persistent connection" to
+//! the coordinator). If the agent dies or the machine drops off the network,
+//! the lease expires, the key is deleted with `expired: true`, and the
+//! coordinator's watch turns that into a SEV1 `LostConnection` within one
+//! lease TTL — the 5–6 s detection row of Table 2.
+
+use anyhow::{anyhow, Result};
+
+use crate::kvstore::{Event, Store};
+use crate::ser::Value;
+
+pub const NODES_PREFIX: &str = "/nodes/";
+
+/// What a node advertises when joining.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeInfo {
+    pub id: String,
+    pub gpus: u32,
+    /// RPC address of the node's agent.
+    pub addr: String,
+}
+
+impl NodeInfo {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("id", self.id.as_str())
+            .with("gpus", self.gpus as u64)
+            .with("addr", self.addr.as_str())
+    }
+
+    pub fn from_json(v: &Value) -> Option<NodeInfo> {
+        Some(NodeInfo {
+            id: v.get("id")?.as_str()?.to_string(),
+            gpus: v.get("gpus")?.as_u64()? as u32,
+            addr: v.get("addr")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Membership change derived from the store's watch stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MembershipEvent {
+    Joined(NodeInfo),
+    /// `expired == true` means the lease lapsed (crash/partition — SEV1);
+    /// `false` means a clean deregistration.
+    Left { id: String, expired: bool },
+}
+
+/// Translate a raw kv event under `/nodes/` into a membership event.
+pub fn membership_event(ev: &Event) -> Option<MembershipEvent> {
+    match ev {
+        Event::Put { key, value, .. } if key.starts_with(NODES_PREFIX) => {
+            let info = NodeInfo::from_json(&Value::parse(value).ok()?)?;
+            Some(MembershipEvent::Joined(info))
+        }
+        Event::Delete { key, expired, .. } if key.starts_with(NODES_PREFIX) => Some(
+            MembershipEvent::Left { id: key[NODES_PREFIX.len()..].to_string(), expired: *expired },
+        ),
+        _ => None,
+    }
+}
+
+/// Agent-side registration handle (in-process store variant; the TCP variant
+/// goes through [`crate::kvstore::net::KvClient`] with the same keys).
+pub struct Registration {
+    store: Store,
+    pub lease: u64,
+    pub key: String,
+}
+
+impl Registration {
+    /// Register `info` with a lease of `ttl_s`.
+    pub fn register(store: &Store, info: &NodeInfo, ttl_s: f64) -> Result<Registration> {
+        let lease = store.grant_lease(ttl_s);
+        let key = format!("{NODES_PREFIX}{}", info.id);
+        store.put(&key, &info.to_json().encode(), Some(lease)).map_err(|e| anyhow!(e))?;
+        Ok(Registration { store: store.clone(), lease, key })
+    }
+
+    /// Heartbeat. Errors once the lease has already expired (the agent must
+    /// then re-register — it was declared dead).
+    pub fn heartbeat(&self) -> Result<()> {
+        self.store.keepalive(self.lease).map_err(|e| anyhow!(e))
+    }
+
+    /// Clean shutdown: revoke the lease (reported as non-expired Left).
+    pub fn deregister(self) {
+        self.store.revoke_lease(self.lease);
+    }
+}
+
+/// Coordinator-side view: list the currently-registered nodes.
+pub fn list_nodes(store: &Store) -> Vec<NodeInfo> {
+    store
+        .get_prefix(NODES_PREFIX)
+        .into_iter()
+        .filter_map(|(_, v)| NodeInfo::from_json(&Value::parse(&v).ok()?))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SimClock;
+    use std::sync::Arc;
+
+    fn setup() -> (Store, Arc<SimClock>) {
+        let clock = SimClock::new();
+        (Store::new(clock.clone()), clock)
+    }
+
+    fn info(id: &str) -> NodeInfo {
+        NodeInfo { id: id.into(), gpus: 8, addr: format!("10.0.0.{id}:9000") }
+    }
+
+    #[test]
+    fn register_list_deregister() {
+        let (store, _) = setup();
+        let r1 = Registration::register(&store, &info("1"), 5.0).unwrap();
+        let _r2 = Registration::register(&store, &info("2"), 5.0).unwrap();
+        let mut nodes = list_nodes(&store);
+        nodes.sort_by(|a, b| a.id.cmp(&b.id));
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0], info("1"));
+        r1.deregister();
+        assert_eq!(list_nodes(&store).len(), 1);
+    }
+
+    #[test]
+    fn crash_detected_via_lease_expiry() {
+        let (store, clock) = setup();
+        let rx = store.watch(NODES_PREFIX);
+        let reg = Registration::register(&store, &info("7"), 5.0).unwrap();
+        // heartbeats keep it alive
+        for _ in 0..3 {
+            clock.advance(3.0);
+            reg.heartbeat().unwrap();
+            store.tick();
+        }
+        // crash: no more heartbeats
+        clock.advance(6.0);
+        store.tick();
+        let events: Vec<MembershipEvent> = rx.try_iter().filter_map(|e| membership_event(&e)).collect();
+        assert_eq!(events.first(), Some(&MembershipEvent::Joined(info("7"))));
+        assert_eq!(
+            events.last(),
+            Some(&MembershipEvent::Left { id: "7".into(), expired: true })
+        );
+        assert!(reg.heartbeat().is_err(), "declared dead; heartbeat must fail");
+    }
+
+    #[test]
+    fn clean_leave_is_not_expired() {
+        let (store, _) = setup();
+        let rx = store.watch(NODES_PREFIX);
+        let reg = Registration::register(&store, &info("3"), 5.0).unwrap();
+        reg.deregister();
+        let events: Vec<MembershipEvent> = rx.try_iter().filter_map(|e| membership_event(&e)).collect();
+        assert_eq!(
+            events.last(),
+            Some(&MembershipEvent::Left { id: "3".into(), expired: false })
+        );
+    }
+
+    #[test]
+    fn node_info_roundtrip_and_garbage() {
+        let i = info("9");
+        assert_eq!(NodeInfo::from_json(&Value::parse(&i.to_json().encode()).unwrap()), Some(i));
+        assert_eq!(NodeInfo::from_json(&Value::Null), None);
+        // non-node keys ignored
+        let ev = Event::Put { key: "/tasks/1".into(), value: "{}".into(), revision: 1 };
+        assert_eq!(membership_event(&ev), None);
+    }
+}

@@ -1,0 +1,269 @@
+//! Metrics: time series, summaries, CSV/JSON export, and ASCII charts.
+//!
+//! The repro harness uses this to print the paper's figures as tables and
+//! quick terminal plots (WAF-over-time for Fig. 11, bars for Figs. 3/9/10).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::ser::Value;
+
+/// An (x, y) series with a name — one line/bar group of a figure.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Trapezoidal integral — "accumulated WAF" in Fig. 11 terms.
+    pub fn integral(&self) -> f64 {
+        self.points.windows(2).map(|w| 0.5 * (w[0].1 + w[1].1) * (w[1].0 - w[0].0)).sum()
+    }
+
+    /// Mean of y values (unweighted).
+    pub fn mean_y(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.1).sum::<f64>() / self.points.len() as f64
+    }
+
+    pub fn max_y(&self) -> f64 {
+        self.points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj().with("name", self.name.as_str()).with(
+            "points",
+            Value::Arr(
+                self.points.iter().map(|(x, y)| Value::Arr(vec![Value::Num(*x), Value::Num(*y)])).collect(),
+            ),
+        )
+    }
+}
+
+/// A figure: several series plus axis labels; exportable as CSV/JSON/ASCII.
+#[derive(Debug, Clone, Default)]
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Figure {
+        Figure { title: title.into(), x_label: x_label.into(), y_label: y_label.into(), series: Vec::new() }
+    }
+
+    pub fn series_mut(&mut self, name: &str) -> &mut Series {
+        if let Some(i) = self.series.iter().position(|s| s.name == name) {
+            return &mut self.series[i];
+        }
+        self.series.push(Series::new(name));
+        self.series.last_mut().unwrap()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// CSV: header `x,<name1>,<name2>…` aligned on shared x (union of xs).
+    pub fn to_csv(&self) -> String {
+        let mut xs: Vec<f64> = self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        let mut out = String::new();
+        let _ = write!(out, "{}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, ",{}", s.name);
+        }
+        out.push('\n');
+        for &x in &xs {
+            let _ = write!(out, "{x}");
+            for s in &self.series {
+                match s.points.iter().find(|p| (p.0 - x).abs() < 1e-12) {
+                    Some((_, y)) => {
+                        let _ = write!(out, ",{y}");
+                    }
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("title", self.title.as_str())
+            .with("x_label", self.x_label.as_str())
+            .with("y_label", self.y_label.as_str())
+            .with("series", Value::Arr(self.series.iter().map(|s| s.to_json()).collect()))
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        fs::write(path, self.to_csv())
+    }
+
+    /// Terminal line chart (one char per column, one glyph per series).
+    pub fn ascii_chart(&self, width: usize, height: usize) -> String {
+        let glyphs = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+        let all: Vec<(f64, f64)> = self.series.iter().flat_map(|s| s.points.iter().copied()).collect();
+        if all.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (x0, x1) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.0), hi.max(p.0)));
+        let (y0, y1) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.1), hi.max(p.1)));
+        let xspan = (x1 - x0).max(1e-12);
+        let yspan = (y1 - y0).max(1e-12);
+        let mut grid = vec![vec![' '; width]; height];
+        for (si, s) in self.series.iter().enumerate() {
+            let g = glyphs[si % glyphs.len()];
+            for &(x, y) in &s.points {
+                let cx = (((x - x0) / xspan) * (width - 1) as f64).round() as usize;
+                let cy = (((y - y0) / yspan) * (height - 1) as f64).round() as usize;
+                grid[height - 1 - cy][cx.min(width - 1)] = g;
+            }
+        }
+        let mut out = format!("{}  [y: {} .. {} {}]\n", self.title, fmt3(y0), fmt3(y1), self.y_label);
+        for row in grid {
+            out.push('|');
+            out.extend(row);
+            out.push('\n');
+        }
+        let _ = writeln!(out, "+{}", "-".repeat(width));
+        let _ = writeln!(out, " x: {} .. {} {}", fmt3(x0), fmt3(x1), self.x_label);
+        for (si, s) in self.series.iter().enumerate() {
+            let _ = writeln!(out, "   {} {}", glyphs[si % glyphs.len()], s.name);
+        }
+        out
+    }
+}
+
+fn fmt3(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1e5 || x.abs() < 1e-2 {
+        format!("{x:.2e}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Fixed-width table printer for the `repro` harness (paper-style rows).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:<w$} ", c, w = widths[i]);
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.headers);
+        let _ = writeln!(out, "|{}|", widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_integral_trapezoid() {
+        let mut s = Series::new("s");
+        s.push(0.0, 0.0);
+        s.push(1.0, 2.0);
+        s.push(3.0, 2.0);
+        assert!((s.integral() - (1.0 + 4.0)).abs() < 1e-12);
+        assert!((s.mean_y() - 4.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.max_y(), 2.0);
+    }
+
+    #[test]
+    fn figure_csv_alignment() {
+        let mut f = Figure::new("t", "x", "y");
+        f.series_mut("a").push(0.0, 1.0);
+        f.series_mut("a").push(1.0, 2.0);
+        f.series_mut("b").push(1.0, 5.0);
+        let csv = f.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "1,2,5");
+    }
+
+    #[test]
+    fn figure_json_roundtrip() {
+        let mut f = Figure::new("t", "x", "y");
+        f.series_mut("a").push(0.5, 1.5);
+        let j = f.to_json().encode();
+        let v = Value::parse(&j).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("t"));
+    }
+
+    #[test]
+    fn ascii_chart_contains_series_glyphs() {
+        let mut f = Figure::new("chart", "t", "v");
+        for i in 0..10 {
+            f.series_mut("up").push(i as f64, i as f64);
+            f.series_mut("down").push(i as f64, 9.0 - i as f64);
+        }
+        let art = f.ascii_chart(40, 10);
+        assert!(art.contains('*') && art.contains('+'));
+        assert!(art.contains("up") && art.contains("down"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["case", "value"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("| case   |"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,369 @@
+//! Optimal reconfiguration plan generation (paper §5).
+//!
+//! Implements the WAF metric (Eq. 2), the reward `G(t, x→x')` with its
+//! transition penalty (Eq. 3/4), the dynamic-programming solver over
+//! `S(i,j) = max_k S(i-1, j-k) + G(t_i, k)` (Eq. 5) with traceback, and the
+//! precomputed lookup table that gives O(1) plan retrieval when a failure
+//! actually happens (§5.2).
+
+use crate::config::{TaskSpec, UnicronConfig};
+
+/// Everything the solver needs to know about one task.
+#[derive(Debug, Clone)]
+pub struct PlanTask {
+    pub spec: TaskSpec,
+    /// Calibrated `T(t, x)` table, FLOP/s, indexed by worker count
+    /// (from [`crate::perfmodel::throughput_table`]).
+    pub throughput: Vec<f64>,
+    /// Workers currently assigned (before reconfiguration).
+    pub current: u32,
+    /// True if one of this task's workers is the faulting one — forces the
+    /// transition penalty even when the worker count stays the same (Eq. 4).
+    pub fault: bool,
+}
+
+impl PlanTask {
+    /// WAF — Eq. 2: `F(t,x) = w(t)·T(t,x)` if `x` meets `T_necessary`, else 0.
+    pub fn waf(&self, x: u32) -> f64 {
+        if x < self.spec.min_workers {
+            return 0.0;
+        }
+        let t = self.throughput.get(x as usize).copied().unwrap_or(0.0);
+        if t <= 0.0 {
+            return 0.0; // infeasible (memory wall) — requirement not met
+        }
+        self.spec.weight * t
+    }
+
+    /// Transition indicator — Eq. 4.
+    pub fn transitions_to(&self, x_new: u32) -> bool {
+        self.fault || x_new != self.current
+    }
+}
+
+/// The produced plan: a worker count per task plus diagnostic totals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub assignment: Vec<u32>,
+    /// Σ G(tᵢ, xᵢ') — the DP objective (FLOP·s units: FLOP/s × seconds).
+    pub objective: f64,
+    /// Σ F(tᵢ, xᵢ') — cluster WAF after the plan is applied (FLOP/s).
+    pub total_waf: f64,
+    pub workers_used: u32,
+}
+
+/// Reward `G(tᵢ, xᵢ → xᵢ')` — Eq. 3.
+pub fn reward(task: &PlanTask, x_new: u32, d_running: f64, d_transition: f64) -> f64 {
+    let gain = task.waf(x_new) * d_running;
+    let penalty = if task.transitions_to(x_new) { task.waf(task.current) * d_transition } else { 0.0 };
+    gain - penalty
+}
+
+/// Solve Eq. 3 for `n_workers` available workers via the Eq. 5 DP.
+///
+/// Complexity O(m·n²) (m tasks, n workers), as analyzed in §5.2.
+pub fn solve(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> Plan {
+    let n = n_workers as usize;
+    let m = tasks.len();
+    let d_running = cfg.d_running(n_workers);
+    let d_transition = cfg.d_transition_s;
+
+    // S[i][j]: best value of first i tasks with j workers; choice[i][j] = k.
+    let mut s = vec![vec![0.0f64; n + 1]; m + 1];
+    let mut choice = vec![vec![0u32; n + 1]; m + 1];
+    for i in 1..=m {
+        let t = &tasks[i - 1];
+        // G(t, 0) may be negative (losing a running task still pays its
+        // penalty) but assigning zero is always *allowed*.
+        for j in 0..=n {
+            let mut best = f64::NEG_INFINITY;
+            let mut best_k = 0;
+            for k in 0..=j {
+                let g = reward(t, k as u32, d_running, d_transition);
+                let v = s[i - 1][j - k] + g;
+                if v > best {
+                    best = v;
+                    best_k = k as u32;
+                }
+            }
+            s[i][j] = best;
+            choice[i][j] = best_k;
+        }
+    }
+
+    // Traceback from S(m, n).
+    let mut assignment = vec![0u32; m];
+    let mut j = n;
+    for i in (1..=m).rev() {
+        let k = choice[i][j];
+        assignment[i - 1] = k;
+        j -= k as usize;
+    }
+
+    let total_waf = tasks.iter().zip(&assignment).map(|(t, &x)| t.waf(x)).sum();
+    let workers_used = assignment.iter().sum();
+    Plan { assignment, objective: s[m][n], total_waf, workers_used }
+}
+
+/// Brute-force reference solver (exponential; tests only — DESIGN.md §8).
+pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> Plan {
+    let d_running = cfg.d_running(n_workers);
+    let d_transition = cfg.d_transition_s;
+    let m = tasks.len();
+    let mut best_assign = vec![0u32; m];
+    let mut best_val = f64::NEG_INFINITY;
+    let mut assign = vec![0u32; m];
+
+    fn rec(
+        i: usize,
+        left: u32,
+        tasks: &[PlanTask],
+        d_running: f64,
+        d_transition: f64,
+        assign: &mut Vec<u32>,
+        best_val: &mut f64,
+        best_assign: &mut Vec<u32>,
+    ) {
+        if i == tasks.len() {
+            let v: f64 = tasks
+                .iter()
+                .zip(assign.iter())
+                .map(|(t, &x)| reward(t, x, d_running, d_transition))
+                .sum();
+            if v > *best_val {
+                *best_val = v;
+                best_assign.clone_from(assign);
+            }
+            return;
+        }
+        for k in 0..=left {
+            assign[i] = k;
+            rec(i + 1, left - k, tasks, d_running, d_transition, assign, best_val, best_assign);
+        }
+        assign[i] = 0;
+    }
+    rec(0, n_workers, tasks, d_running, d_transition, &mut assign, &mut best_val, &mut best_assign);
+
+    let total_waf = tasks.iter().zip(&best_assign).map(|(t, &x)| t.waf(x)).sum();
+    let workers_used = best_assign.iter().sum();
+    Plan { assignment: best_assign, objective: best_val, total_waf, workers_used }
+}
+
+/// Precomputed lookup table (§5.2): plans for every cluster size the next
+/// event could leave us with, so dispatch on failure/join is O(1).
+#[derive(Debug)]
+pub struct PlanLookup {
+    /// plans[j] = plan for a cluster of j available workers.
+    plans: Vec<Plan>,
+}
+
+impl PlanLookup {
+    /// Precompute plans for all worker counts 0..=max_workers.
+    ///
+    /// The paper precomputes "potential failure scenarios of any task or
+    /// joining node"; sizes n'−k (failures) and n'+k (joins) cover those —
+    /// we simply cover the full range.
+    pub fn precompute(tasks: &[PlanTask], max_workers: u32, cfg: &UnicronConfig) -> PlanLookup {
+        let plans = (0..=max_workers).map(|n| solve(tasks, n, cfg)).collect();
+        PlanLookup { plans }
+    }
+
+    /// O(1) retrieval.
+    pub fn plan_for(&self, n_workers: u32) -> &Plan {
+        &self.plans[(n_workers as usize).min(self.plans.len() - 1)]
+    }
+
+    pub fn max_workers(&self) -> u32 {
+        (self.plans.len() - 1) as u32
+    }
+}
+
+/// Baseline allocation strategies from §7.4's Fig. 10c comparison.
+pub mod baselines {
+    use super::PlanTask;
+
+    /// Largest-remainder apportionment of `n` workers proportional to `score`,
+    /// respecting each task's minimum; returns worker counts.
+    fn proportional(tasks: &[PlanTask], n: u32, score: impl Fn(&PlanTask) -> f64) -> Vec<u32> {
+        let total: f64 = tasks.iter().map(&score).sum();
+        if total <= 0.0 {
+            return vec![0; tasks.len()];
+        }
+        let ideal: Vec<f64> = tasks.iter().map(|t| score(t) / total * n as f64).collect();
+        let mut alloc: Vec<u32> = ideal.iter().map(|x| x.floor() as u32).collect();
+        let mut left = n - alloc.iter().sum::<u32>();
+        // distribute remainders by largest fraction
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        order.sort_by(|&a, &b| {
+            (ideal[b] - ideal[b].floor()).partial_cmp(&(ideal[a] - ideal[a].floor())).unwrap()
+        });
+        for &i in order.iter().cycle() {
+            if left == 0 {
+                break;
+            }
+            alloc[i] += 1;
+            left -= 1;
+        }
+        alloc
+    }
+
+    /// "equally": even split regardless of task shape.
+    pub fn equally(tasks: &[PlanTask], n: u32) -> Vec<u32> {
+        proportional(tasks, n, |_| 1.0)
+    }
+
+    /// "weighted": proportional to w(t).
+    pub fn weighted(tasks: &[PlanTask], n: u32) -> Vec<u32> {
+        proportional(tasks, n, |t| t.spec.weight)
+    }
+
+    /// "sized": proportional to model size (min_workers as its proxy here is
+    /// too coarse; use the first feasible throughput point's memory need —
+    /// we approximate with min_workers which tracks model size).
+    pub fn sized(tasks: &[PlanTask], n: u32, sizes: &[f64]) -> Vec<u32> {
+        let sizes = sizes.to_vec();
+        proportional(tasks, n, move |t| sizes[t.spec.id as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskSpec;
+
+    /// Synthetic concave-ish throughput: T(x) = s·x^0.9 above min, 0 below.
+    fn task(id: u32, weight: f64, min: u32, scale: f64, current: u32, fault: bool, n: u32) -> PlanTask {
+        let throughput = (0..=n)
+            .map(|x| if x >= min { scale * (x as f64).powf(0.9) } else { 0.0 })
+            .collect();
+        PlanTask {
+            spec: TaskSpec::new(id, "synthetic", weight, min),
+            throughput,
+            current,
+            fault,
+        }
+    }
+
+    fn cfg() -> UnicronConfig {
+        UnicronConfig { d_transition_s: 60.0, mtbf_per_gpu_s: 1e6, ..Default::default() }
+    }
+
+    #[test]
+    fn waf_zero_below_minimum() {
+        let t = task(0, 1.5, 4, 10.0, 0, false, 16);
+        assert_eq!(t.waf(3), 0.0);
+        assert!(t.waf(4) > 0.0);
+        assert_eq!(t.waf(4), 1.5 * 10.0 * 4f64.powf(0.9));
+    }
+
+    #[test]
+    fn dp_matches_brute_force_small() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 4, false, 12),
+            task(1, 2.0, 3, 8.0, 4, true, 12),
+            task(2, 0.5, 1, 20.0, 4, false, 12),
+        ];
+        for n in [0u32, 3, 7, 12] {
+            let dp = solve(&tasks, n, &cfg());
+            let bf = solve_brute(&tasks, n, &cfg());
+            assert!((dp.objective - bf.objective).abs() < 1e-6 * bf.objective.abs().max(1.0),
+                    "n={n}: dp {} vs brute {}", dp.objective, bf.objective);
+        }
+    }
+
+    #[test]
+    fn constraint_respected() {
+        let tasks = vec![task(0, 1.0, 1, 5.0, 0, false, 32), task(1, 1.0, 1, 5.0, 0, false, 32)];
+        let plan = solve(&tasks, 9, &cfg());
+        assert!(plan.workers_used <= 9);
+        assert_eq!(plan.assignment.iter().sum::<u32>(), plan.workers_used);
+    }
+
+    #[test]
+    fn transition_penalty_discourages_churn() {
+        // Healthy task at its optimum; a second task could marginally gain by
+        // stealing one worker, but the penalty should block the reshuffle.
+        let n = 16u32;
+        let healthy = task(0, 1.0, 1, 10.0, 8, false, n);
+        let greedy = task(1, 1.0, 1, 10.1, 8, false, n);
+        let mut c = cfg();
+        c.d_transition_s = 1e5; // huge transition cost
+        let plan = solve(&[healthy, greedy], n, &c);
+        assert_eq!(plan.assignment, vec![8, 8], "penalty should keep the status quo");
+    }
+
+    #[test]
+    fn faulted_task_pays_penalty_even_when_size_unchanged() {
+        let t_ok = task(0, 1.0, 1, 10.0, 8, false, 16);
+        let t_bad = task(1, 1.0, 1, 10.0, 8, true, 16);
+        let c = cfg();
+        let d_run = c.d_running(16);
+        let g_ok = reward(&t_ok, 8, d_run, c.d_transition_s);
+        let g_bad = reward(&t_bad, 8, d_run, c.d_transition_s);
+        assert!(g_bad < g_ok);
+    }
+
+    #[test]
+    fn weights_steer_allocation() {
+        let n = 10u32;
+        // identical tasks except weight; the heavier one must get ≥ workers.
+        let tasks =
+            vec![task(0, 0.5, 1, 10.0, 0, false, n), task(1, 2.0, 1, 10.0, 0, false, n)];
+        let plan = solve(&tasks, n, &cfg());
+        assert!(plan.assignment[1] >= plan.assignment[0]);
+    }
+
+    #[test]
+    fn lookup_table_consistent_with_solve() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 4, false, 16),
+            task(1, 1.3, 2, 9.0, 6, false, 16),
+        ];
+        let c = cfg();
+        let lut = PlanLookup::precompute(&tasks, 16, &c);
+        for n in [0u32, 5, 11, 16] {
+            assert_eq!(lut.plan_for(n).assignment, solve(&tasks, n, &c).assignment, "n={n}");
+        }
+        assert_eq!(lut.max_workers(), 16);
+        // out-of-range clamps
+        assert_eq!(lut.plan_for(99).assignment, solve(&tasks, 16, &c).assignment);
+    }
+
+    #[test]
+    fn baseline_allocations_sum_to_n() {
+        let n = 13u32;
+        let tasks = vec![
+            task(0, 0.5, 1, 10.0, 0, false, n),
+            task(1, 1.0, 1, 10.0, 0, false, n),
+            task(2, 2.0, 1, 10.0, 0, false, n),
+        ];
+        for alloc in [
+            baselines::equally(&tasks, n),
+            baselines::weighted(&tasks, n),
+            baselines::sized(&tasks, n, &[1.0, 2.0, 4.0]),
+        ] {
+            assert_eq!(alloc.iter().sum::<u32>(), n, "{alloc:?}");
+        }
+        let w = baselines::weighted(&tasks, n);
+        assert!(w[2] > w[0]);
+    }
+
+    #[test]
+    fn unicron_beats_baselines_on_waf() {
+        // Heterogeneous tasks: unicron's plan must dominate naive splits.
+        let n = 24u32;
+        let tasks = vec![
+            task(0, 2.0, 2, 14.0, 0, false, n),
+            task(1, 1.0, 4, 6.0, 0, false, n),
+            task(2, 0.5, 8, 30.0, 0, false, n),
+        ];
+        let c = cfg();
+        let plan = solve(&tasks, n, &c);
+        let waf_of = |alloc: &[u32]| -> f64 {
+            tasks.iter().zip(alloc).map(|(t, &x)| t.waf(x)).sum()
+        };
+        for alloc in [baselines::equally(&tasks, n), baselines::weighted(&tasks, n)] {
+            assert!(plan.total_waf >= waf_of(&alloc) - 1e-9, "{alloc:?}");
+        }
+    }
+}

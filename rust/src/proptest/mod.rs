@@ -1,0 +1,205 @@
+//! Mini property-testing framework (no `proptest` in the vendored registry).
+//!
+//! Provides seeded generators and a runner with greedy shrinking: on failure,
+//! the runner re-generates inputs with progressively smaller size hints and
+//! reports the smallest failing case it found. Used for the coordinator
+//! invariants DESIGN.md §8 lists (planner optimality, micro-batch
+//! conservation, perfmodel feasibility, …).
+
+use crate::rng::{Rand, Xoshiro256};
+
+/// Size-aware generator: `gen(rng, size)` where `size` shrinks toward 0.
+pub trait Gen {
+    type Output;
+    fn generate(&self, rng: &mut Xoshiro256, size: usize) -> Self::Output;
+}
+
+impl<T, F: Fn(&mut Xoshiro256, usize) -> T> Gen for F {
+    type Output = T;
+    fn generate(&self, rng: &mut Xoshiro256, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Outcome of a property over one input.
+pub enum Prop {
+    Pass,
+    /// Property failed with a message describing what went wrong.
+    Fail(String),
+    /// Input rejected (precondition not met); does not count as a case.
+    Discard,
+}
+
+impl Prop {
+    pub fn check(cond: bool, msg: impl FnOnce() -> String) -> Prop {
+        if cond {
+            Prop::Pass
+        } else {
+            Prop::Fail(msg())
+        }
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+    pub max_discards: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed overridable for CI reproduction of failures.
+        let seed = std::env::var("PROPTEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE);
+        Config { cases: 100, seed, max_size: 64, max_discards: 1000 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with the smallest failing
+/// input's debug string on failure.
+pub fn run<G, P>(name: &str, cfg: Config, gen: G, prop: P)
+where
+    G: Gen,
+    G::Output: std::fmt::Debug,
+    P: Fn(&G::Output) -> Prop,
+{
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed ^ hash_name(name));
+    let mut done = 0;
+    let mut discards = 0;
+    let mut case_idx = 0u64;
+    while done < cfg.cases {
+        // size ramps up over the run: small cases first (cheap smoke), then big.
+        let size = 1 + (cfg.max_size * done) / cfg.cases.max(1);
+        let mut case_rng = rng.fork(case_idx);
+        case_idx += 1;
+        let input = gen.generate(&mut case_rng, size);
+        match prop(&input) {
+            Prop::Pass => done += 1,
+            Prop::Discard => {
+                discards += 1;
+                if discards > cfg.max_discards {
+                    panic!("property {name}: too many discards ({discards})");
+                }
+            }
+            Prop::Fail(msg) => {
+                // Greedy shrink: retry with smaller sizes from the same stream,
+                // keeping the smallest failure found.
+                let mut smallest = (size, input, msg);
+                let mut shrink_size = size;
+                let mut budget = 200;
+                while shrink_size > 1 && budget > 0 {
+                    shrink_size /= 2;
+                    for sub in 0..8 {
+                        budget -= 1;
+                        let mut srng = case_rng.fork(1000 + shrink_size as u64 * 16 + sub);
+                        let candidate = gen.generate(&mut srng, shrink_size);
+                        if let Prop::Fail(m) = prop(&candidate) {
+                            smallest = (shrink_size, candidate, m);
+                            break;
+                        }
+                    }
+                }
+                panic!(
+                    "property {name} failed (seed {}, case {}):\n  input (size {}): {:?}\n  reason: {}",
+                    cfg.seed, done, smallest.0, smallest.1, smallest.2
+                );
+            }
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, just to decorrelate properties sharing a seed.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Vec of u64 in `[lo, hi]`, length in `[0, size]`.
+pub fn vec_u64(lo: u64, hi: u64) -> impl Gen<Output = Vec<u64>> {
+    move |rng: &mut Xoshiro256, size: usize| {
+        let len = rng.below(size as u64 + 1) as usize;
+        (0..len).map(|_| rng.range_inclusive(lo, hi)).collect()
+    }
+}
+
+/// Vec of f64 in `[lo, hi)`, length in `[1, size]`.
+pub fn vec_f64(lo: f64, hi: f64) -> impl Gen<Output = Vec<f64>> {
+    move |rng: &mut Xoshiro256, size: usize| {
+        let len = 1 + rng.below(size as u64 + 1) as usize;
+        (0..len).map(|_| rng.uniform(lo, hi)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        run("sum_nonneg", Config { cases: 50, ..Default::default() }, vec_u64(0, 100), |xs| {
+            Prop::check(xs.iter().sum::<u64>() as i64 >= 0, || "negative sum".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property short_vecs failed")]
+    fn failing_property_panics_with_input() {
+        run("short_vecs", Config { cases: 100, ..Default::default() }, vec_u64(0, 10), |xs| {
+            Prop::check(xs.len() < 3, || format!("len {}", xs.len()))
+        });
+    }
+
+    #[test]
+    fn shrinking_reports_smaller_case() {
+        // Capture the panic message and assert the shrunk size is small.
+        let result = std::panic::catch_unwind(|| {
+            run(
+                "any_nonempty",
+                Config { cases: 100, max_size: 64, ..Default::default() },
+                vec_u64(0, 10),
+                |xs| Prop::check(xs.is_empty(), || format!("len {}", xs.len())),
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the shrinker should get well below the max size of 64
+        let size: usize = msg.split("(size ").nth(1).unwrap().split(')').next().unwrap().parse().unwrap();
+        assert!(size <= 8, "shrunk size {size} too large\n{msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn discard_limit_enforced() {
+        run("discards", Config { cases: 10, max_discards: 5, ..Default::default() }, vec_u64(0, 1), |_| {
+            Prop::Discard
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Two identical runs must generate identical sequences: we assert by
+        // collecting the inputs via a side channel.
+        use std::sync::Mutex;
+        let seen: Mutex<Vec<Vec<u64>>> = Mutex::new(Vec::new());
+        let collect = |xs: &Vec<u64>| {
+            seen.lock().unwrap().push(xs.clone());
+            Prop::Pass
+        };
+        run("det_a", Config { cases: 20, seed: 7, ..Default::default() }, vec_u64(0, 9), collect);
+        let first: Vec<_> = std::mem::take(&mut *seen.lock().unwrap());
+        let collect2 = |xs: &Vec<u64>| {
+            seen.lock().unwrap().push(xs.clone());
+            Prop::Pass
+        };
+        run("det_a", Config { cases: 20, seed: 7, ..Default::default() }, vec_u64(0, 9), collect2);
+        assert_eq!(first, *seen.lock().unwrap());
+    }
+}

@@ -1,0 +1,476 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§7) as terminal tables/series. `unicron repro <exp>` is the
+//! CLI entry; each function returns the rendered text so tests can assert on
+//! the rows. DESIGN.md §6 maps experiments to modules.
+
+use std::fmt::Write as _;
+
+use crate::config::{table3_case, ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
+use crate::failure::{ErrorKind, TerminationStats, Trace, TraceConfig};
+use crate::metrics::{Figure, Table};
+use crate::perfmodel::{best_config, throughput_table};
+use crate::planner::{baselines, solve, PlanTask};
+use crate::simulator::{compare_policies, PolicyKind, PolicyParams, Simulator};
+use crate::util::{fmt_duration, fmt_si};
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "fig1", "fig2", "fig3a", "fig3b", "fig4", "fig6", "table2-model", "fig9",
+    "fig10a", "fig10b", "fig10c", "fig11a", "fig11b",
+];
+
+/// Dispatch by experiment id (`table2-model` is the analytic view; the live
+/// TCP measurement is `cargo bench --bench detection`).
+pub fn run(exp: &str, seed: u64) -> Result<String, String> {
+    match exp {
+        "table1" => Ok(table1()),
+        "fig1" => Ok(fig1()),
+        "fig2" => Ok(fig2()),
+        "fig3a" => Ok(fig3a()),
+        "fig3b" => Ok(fig3b(seed)),
+        "fig4" => Ok(fig4()),
+        "fig6" => Ok(fig6(seed)),
+        "table2-model" => Ok(table2_model()),
+        "fig9" => Ok(fig9(seed)),
+        "fig10a" => Ok(fig10a()),
+        "fig10b" => Ok(fig10b()),
+        "fig10c" => Ok(fig10c()),
+        "fig11a" => Ok(fig11(TraceConfig::trace_a(), seed)),
+        "fig11b" => Ok(fig11(TraceConfig::trace_b(), seed)),
+        other => Err(format!("unknown experiment {other:?}; known: {EXPERIMENTS:?}")),
+    }
+}
+
+/// Table 1: detection methods and severity levels.
+pub fn table1() -> String {
+    let mut t = Table::new(&["Detection method", "Error status", "Severity"]);
+    for &k in ErrorKind::all() {
+        t.row(&[
+            format!("{:?}", k.detector()),
+            format!("{k:?}"),
+            format!("{:?}", k.severity()).to_uppercase(),
+        ]);
+    }
+    format!("Table 1 — detection methods and severity levels\n{}", t.render())
+}
+
+/// Fig. 1: distribution of task termination statistics.
+pub fn fig1() -> String {
+    let stats = TerminationStats::published();
+    let mut t = Table::new(&["resource percentile", "abnormal-termination rate"]);
+    for (bucket, rate) in &stats.buckets {
+        t.row(&[bucket.to_string(), format!("{:.1}%", rate * 100.0)]);
+    }
+    format!(
+        "Fig. 1 — task termination statistics (top-5%: {:.1}%)\n{}",
+        stats.top5_rate() * 100.0,
+        t.render()
+    )
+}
+
+/// Fig. 2: the manual-recovery timeline Unicron eliminates.
+pub fn fig2() -> String {
+    let phases: &[(&str, f64)] = &[
+        ("system hang until NCCL timeout", 30.0 * 60.0),
+        ("task resubmission wait", 9.0 * 60.0),
+        ("environment + CUDA setup", 14.0 * 60.0),
+        ("recompute lost progress", 15.0 * 60.0),
+    ];
+    let total: f64 = phases.iter().map(|p| p.1).sum();
+    let mut t = Table::new(&["phase", "duration"]);
+    for (name, d) in phases {
+        t.row(&[name.to_string(), fmt_duration(*d)]);
+    }
+    t.row(&["TOTAL (transient-fault downtime)".into(), fmt_duration(total)]);
+    format!("Fig. 2 — manual failure recovery on Megatron (transient fault)\n{}", t.render())
+}
+
+/// Fig. 3a: healthy throughput of each system (GPT-3 7B, 64 GPUs).
+pub fn fig3a() -> String {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let model = ModelSpec::gpt3("gpt3-7b").unwrap();
+    let est = best_config(&model, &cluster, 64).expect("7B fits on 64 GPUs");
+    let mut t = Table::new(&["system", "samples/s", "vs Megatron"]);
+    for kind in PolicyKind::all() {
+        let p = PolicyParams::for_kind(kind, &cfg);
+        let sps = est.samples_per_s * p.efficiency;
+        t.row(&[kind.name().into(), format!("{sps:.1}"), format!("{:.2}×", p.efficiency)]);
+    }
+    format!(
+        "Fig. 3a — throughput w/o failures (GPT-3 7B, 64 GPUs; best config {:?}, {:.0}% of peak)\n{}",
+        est.config,
+        est.flops_ratio * 100.0,
+        t.render()
+    )
+}
+
+/// Fig. 3b: FLOP/s reduction under ~10 node faults in 7 days (64 GPUs).
+pub fn fig3b(seed: u64) -> String {
+    let cluster = ClusterSpec { n_nodes: 8, ..Default::default() }; // 64 GPUs
+    let cfg = UnicronConfig::default();
+    let specs = vec![TaskSpec::new(0, "gpt3-7b", 1.0, 8)];
+    let tc = TraceConfig {
+        name: "fig3b".into(),
+        duration_s: 7.0 * 86400.0,
+        n_nodes: 8,
+        expect_sev1: 10.0,
+        expect_other: 0.0,
+        repair_min_s: 0.25 * 86400.0,
+        repair_max_s: 1.0 * 86400.0,
+    };
+    let trace = Trace::generate(tc, seed);
+    // theoretical reduction: GPU-hours unavailable / total GPU-hours
+    let tl = trace.availability_timeline(cluster.gpus_per_node);
+    let mut lost = 0.0;
+    for w in tl.windows(2) {
+        lost += (64.0 - w[0].1 as f64) * (w[1].0 - w[0].0);
+    }
+    let theo = lost / (64.0 * trace.config.duration_s);
+    let mut t = Table::new(&["system", "FLOP/s reduction", "vs theoretical"]);
+    t.row(&["theoretical (hardware loss)".into(), format!("{:.1}%", theo * 100.0), "1.0×".into()]);
+    for r in compare_policies(&cluster, &cfg, &specs, &trace) {
+        t.row(&[
+            r.policy.name().into(),
+            format!("{:.1}%", r.reduction() * 100.0),
+            format!("{:.1}×", r.reduction() / theo.max(1e-9)),
+        ]);
+    }
+    format!(
+        "Fig. 3b — FLOP/s reduction from failures (7B, 64 GPUs, 7 days, {} SEV1)\n{}",
+        trace.count_by_severity(crate::failure::Severity::Sev1),
+        t.render()
+    )
+}
+
+/// Fig. 4: achieved FLOP/s ratio + aggregate vs GPU count, per model size.
+pub fn fig4() -> String {
+    let cluster = ClusterSpec::default();
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig. 4 — achieved FLOP/s ratio and aggregate FLOP/s (Megatron model)");
+    let mut t = Table::new(&["model", "GPUs", "config (tp,pp,dp,mbs)", "ratio", "aggregate"]);
+    for name in ModelSpec::zoo() {
+        let model = ModelSpec::gpt3(name).unwrap();
+        for x in [8u32, 16, 24, 32, 40, 48, 56, 64, 96, 128] {
+            match best_config(&model, &cluster, x) {
+                Some(e) => t.row(&[
+                    name.to_string(),
+                    x.to_string(),
+                    format!(
+                        "({},{},{},{})",
+                        e.config.tp, e.config.pp, e.config.dp, e.config.mbs
+                    ),
+                    format!("{:.1}%", e.flops_ratio * 100.0),
+                    format!("{}FLOP/s", fmt_si(e.achieved_flops)),
+                ]),
+                None => t.row(&[
+                    name.to_string(),
+                    x.to_string(),
+                    "infeasible (memory)".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+    }
+    out.push_str(&t.render());
+    // highlight the non-monotonicity the paper calls out
+    let m7 = ModelSpec::gpt3("gpt3-7b").unwrap();
+    let tab = throughput_table(&m7, &cluster, 64);
+    for x in 9..=64usize {
+        if tab[x] < tab[x - 1] && tab[x - 1] > 0.0 {
+            let _ = writeln!(
+                out,
+                "note: non-monotonic point for 7B: {} GPUs achieve {}FLOP/s vs {}FLOP/s at {} \
+                 (awkward factorization / memory wall)",
+                x,
+                fmt_si(tab[x]),
+                fmt_si(tab[x - 1]),
+                x - 1
+            );
+            break;
+        }
+    }
+    out
+}
+
+/// Fig. 6: iteration-time consistency + the 1.1× / 3× thresholds.
+pub fn fig6(seed: u64) -> String {
+    use crate::detect::{StatMonitor, StatStatus};
+    use crate::rng::{Rand, Xoshiro256};
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut mon = StatMonitor::paper_defaults();
+    let base = 45.0; // seconds per iteration (GPT-3 175B-ish on 256 GPUs)
+    let mut fig = Figure::new("Fig. 6 — completion time per iteration", "iteration", "seconds");
+    for i in 0..60 {
+        let jitter = 1.0 + 0.02 * rng.normal();
+        let d = base * jitter;
+        mon.record(d);
+        fig.series_mut("normal").push(i as f64, d);
+    }
+    // a switch goes down: iterations slow ~1.6× but training persists
+    for i in 60..70 {
+        let d = base * (1.6 + 0.05 * rng.normal());
+        fig.series_mut("degraded").push(i as f64, d);
+        mon.record(d);
+    }
+    let avg = mon.average().unwrap();
+    let mut out = fig.ascii_chart(72, 12);
+    let _ = writeln!(out, "average D_iter: {avg:.1}s");
+    let _ = writeln!(out, "warn  (1.1×): {:.1}s", 1.1 * avg);
+    let _ = writeln!(out, "fail  (3.0×): {:.1}s  (grey line — declare failure)", 3.0 * avg);
+    let _ = writeln!(
+        out,
+        "status at 1.2×avg: {:?}; at 3.5×avg: {:?}",
+        mon.check(1.2 * avg),
+        mon.check(3.5 * avg)
+    );
+    debug_assert_eq!(mon.check(3.5 * avg), StatStatus::Failed);
+    out
+}
+
+/// Table 2 (model view): detection times per method. The measured-over-TCP
+/// version is `cargo bench --bench detection`.
+pub fn table2_model() -> String {
+    let cfg = UnicronConfig::default();
+    let d_iter = 45.0;
+    let mut t = Table::new(&["case", "method", "Unicron", "w/o Unicron"]);
+    t.row(&["1".into(), "Node health monitoring".into(), format!("~{:.1}s (lease TTL)", cfg.lease_ttl_s), "~5.7s".into()]);
+    t.row(&["2".into(), "Process supervision".into(), "~1.8s (poll)".into(), "D_timeout (30m)".into()]);
+    t.row(&["3".into(), "Exception propagation".into(), "~0.3s (immediate)".into(), "D_timeout (30m)".into()]);
+    t.row(&["4".into(), "Online statistical monitoring".into(), format!("3×D_iter = {}", fmt_duration(3.0 * d_iter)), "D_timeout (30m)".into()]);
+    format!("Table 2 — failure detection time (model; run the detection bench for live numbers)\n{}", t.render())
+}
+
+/// Fig. 9: transition time under a SEV1 failure vs cluster size.
+pub fn fig9(seed: u64) -> String {
+    let cfg = UnicronConfig::default();
+    let mut t = Table::new(&["GPUs", "Unicron", "Bamboo", "Oobleck", "Varuna", "Megatron"]);
+    for nodes in [2u32, 4, 8] {
+        let gpus = nodes * 8;
+        let cluster = ClusterSpec { n_nodes: nodes, ..Default::default() };
+        let specs = vec![TaskSpec::new(0, "gpt3-7b", 1.0, 8)];
+        let tc = TraceConfig {
+            name: "fig9".into(),
+            duration_s: 4.0 * 3600.0,
+            n_nodes: nodes,
+            expect_sev1: 1.0,
+            expect_other: 0.0,
+            repair_min_s: 3600.0,
+            repair_max_s: 7200.0,
+        };
+        // force exactly one SEV1 by regenerating until the trace has one
+        let mut trace = Trace::generate(tc.clone(), seed);
+        let mut s = seed;
+        while trace.count_by_severity(crate::failure::Severity::Sev1) == 0 {
+            s += 1;
+            trace = Trace::generate(tc.clone(), s);
+        }
+        let mut row = vec![gpus.to_string()];
+        for kind in [
+            PolicyKind::Unicron,
+            PolicyKind::Bamboo,
+            PolicyKind::Oobleck,
+            PolicyKind::Varuna,
+            PolicyKind::Megatron,
+        ] {
+            let r = Simulator::new(cluster.clone(), cfg.clone(), kind, &specs).run(&trace);
+            match r.transitions.first() {
+                Some(&(_, d)) => row.push(fmt_duration(d)),
+                None => row.push("-".into()),
+            }
+        }
+        t.row(&row);
+    }
+    format!(
+        "Fig. 9 — transition time after a SEV1 failure (GPT-3 7B; detection included)\n{}\n\
+         (Megatron time excludes its wait for a spare node, matching the paper's footnote;\n  \
+         its recompute-from-checkpoint dominates.)\n",
+        t.render()
+    )
+}
+
+/// Fig. 10a: single-task training throughput, Unicron vs Megatron.
+pub fn fig10a() -> String {
+    let cluster = ClusterSpec::default();
+    let model = ModelSpec::gpt3("gpt3-7b").unwrap();
+    let mut t = Table::new(&["GPUs", "Megatron samples/s", "Unicron samples/s", "overhead"]);
+    for x in [8u32, 16, 32, 64, 128] {
+        if let Some(e) = best_config(&model, &cluster, x) {
+            // Unicron inherits Megatron's execution path: no overhead (§7.4)
+            t.row(&[
+                x.to_string(),
+                format!("{:.1}", e.samples_per_s),
+                format!("{:.1}", e.samples_per_s),
+                "0.0%".into(),
+            ]);
+        }
+    }
+    format!("Fig. 10a — training throughput, GPT-3 7B (Unicron on par with Megatron)\n{}", t.render())
+}
+
+/// Fig. 10b: achieved FLOP/s ratio by model size on 64 GPUs.
+pub fn fig10b() -> String {
+    let cluster = ClusterSpec::default();
+    let mut t = Table::new(&["model", "Megatron ratio", "Unicron ratio"]);
+    for name in ModelSpec::zoo() {
+        let model = ModelSpec::gpt3(name).unwrap();
+        match best_config(&model, &cluster, 64) {
+            Some(e) => {
+                let r = format!("{:.1}%", e.flops_ratio * 100.0);
+                t.row(&[name.into(), r.clone(), r]);
+            }
+            None => t.row(&[name.into(), "OOM @64".into(), "OOM @64".into()]),
+        }
+    }
+    format!("Fig. 10b — achieved FLOP/s ratio on 64 GPUs\n{}", t.render())
+}
+
+/// Fig. 10c: multi-task WAF for Table 3 cases vs allocation baselines.
+pub fn fig10c() -> String {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let n = cluster.total_gpus();
+    let mut t = Table::new(&["case", "Unicron", "equally", "weighted", "sized"]);
+    for case in 1..=5u32 {
+        let specs = table3_case(case);
+        let tasks: Vec<PlanTask> = specs
+            .iter()
+            .map(|s| {
+                let model = ModelSpec::gpt3(&s.model).unwrap();
+                PlanTask {
+                    throughput: throughput_table(&model, &cluster, n),
+                    spec: s.clone(),
+                    current: 0,
+                    fault: false,
+                }
+            })
+            .collect();
+        let sizes: Vec<f64> =
+            specs.iter().map(|s| ModelSpec::gpt3(&s.model).unwrap().n_params).collect();
+        let waf_of = |alloc: &[u32]| -> f64 {
+            tasks.iter().zip(alloc).map(|(t, &x)| t.waf(x)).sum()
+        };
+        let uni = solve(&tasks, n, &cfg).total_waf;
+        let eq = waf_of(&baselines::equally(&tasks, n));
+        let we = waf_of(&baselines::weighted(&tasks, n));
+        let si = waf_of(&baselines::sized(&tasks, n, &sizes));
+        t.row(&[
+            case.to_string(),
+            format!("{}FLOP/s", fmt_si(uni)),
+            format!("{}FLOP/s ({:.2}×)", fmt_si(eq), uni / eq.max(1.0)),
+            format!("{}FLOP/s ({:.2}×)", fmt_si(we), uni / we.max(1.0)),
+            format!("{}FLOP/s ({:.2}×)", fmt_si(si), uni / si.max(1.0)),
+        ]);
+    }
+    format!("Fig. 10c — cluster WAF across Table 3 cases (128 GPUs; ratios = Unicron/baseline)\n{}", t.render())
+}
+
+/// Fig. 11: overall training efficiency under a failure trace.
+pub fn fig11(tc: TraceConfig, seed: u64) -> String {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5); // §7.5 uses Case #5
+    let trace = Trace::generate(tc.clone(), seed);
+    let results = compare_policies(&cluster, &cfg, &specs, &trace);
+    let uni = results.iter().find(|r| r.policy == PolicyKind::Unicron).unwrap().accumulated_waf;
+
+    let mut out = format!(
+        "Fig. 11 ({}) — {} SEV1 + {} other failures over {}\n",
+        tc.name,
+        trace.count_by_severity(crate::failure::Severity::Sev1),
+        trace.events.len() - trace.count_by_severity(crate::failure::Severity::Sev1),
+        fmt_duration(tc.duration_s),
+    );
+    let mut fig = Figure::new(
+        &format!("WAF over time ({})", tc.name),
+        "hours",
+        "weighted PFLOP/s",
+    );
+    let mut t = Table::new(&["system", "mean WAF", "accumulated WAF", "Unicron advantage"]);
+    for r in &results {
+        t.row(&[
+            r.policy.name().into(),
+            format!("{}FLOP/s", fmt_si(r.mean_waf())),
+            format!("{}FLOP·s", fmt_si(r.accumulated_waf)),
+            format!("{:.1}×", uni / r.accumulated_waf.max(1.0)),
+        ]);
+        // subsample the series for the ascii chart
+        let s = fig.series_mut(r.policy.name());
+        let step = (r.waf_series.len() / 120).max(1);
+        for (i, &(tt, w)) in r.waf_series.iter().enumerate() {
+            if i % step == 0 {
+                s.push(tt / 3600.0, w / 1e15);
+            }
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str(&fig.ascii_chart(100, 16));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_experiment_runs() {
+        for &exp in EXPERIMENTS {
+            let out = run(exp, 42).unwrap_or_else(|e| panic!("{exp}: {e}"));
+            assert!(!out.is_empty(), "{exp} produced no output");
+        }
+        assert!(run("fig99", 0).is_err());
+    }
+
+    #[test]
+    fn fig1_contains_headline_rate() {
+        assert!(fig1().contains("43.4%"));
+    }
+
+    #[test]
+    fn fig2_totals_68_minutes() {
+        assert!(fig2().contains("1h08m00s"));
+    }
+
+    #[test]
+    fn fig3a_orders_systems() {
+        let out = fig3a();
+        let pos = |s: &str| out.find(s).unwrap();
+        assert!(pos("Unicron") < pos("Oobleck"));
+        assert!(out.contains("1.00×"));
+        assert!(out.contains("0.28×"), "Oobleck efficiency row: {out}");
+    }
+
+    #[test]
+    fn fig4_reports_infeasible_and_feasible() {
+        let out = fig4();
+        assert!(out.contains("infeasible"));
+        assert!(out.contains("%"));
+        assert!(out.contains("non-monotonic"), "should flag the Fig.4 dip");
+    }
+
+    #[test]
+    fn fig10c_unicron_never_loses() {
+        let out = fig10c();
+        // every ratio printed is >= 1.0 (Unicron plan dominates)
+        for cap in out.match_indices('(').map(|(i, _)| &out[i + 1..]) {
+            if let Some(x) = cap.split('×').next() {
+                if let Ok(v) = x.parse::<f64>() {
+                    assert!(v >= 0.999, "ratio {v} < 1 in {out}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig11a_headline_band() {
+        let out = fig11(TraceConfig::trace_a(), 42);
+        assert!(out.contains("Unicron"));
+        assert!(out.contains("Megatron"));
+        // the Megatron advantage row should be ~1.1-1.6×
+        let idx = out.find("Megatron").unwrap();
+        let row = &out[idx..out[idx..].find('\n').unwrap() + idx];
+        let adv: f64 = row.rsplit('|').nth(1).unwrap().trim().trim_end_matches('×').parse().unwrap();
+        assert!((1.05..1.7).contains(&adv), "trace-a advantage {adv} from row {row:?}");
+    }
+}

@@ -1,0 +1,258 @@
+//! Framed-JSON RPC over TCP: the wire substrate for agent↔coordinator and
+//! the kvstore protocol (no tokio in the vendored registry — blocking I/O,
+//! one thread per connection, which is fine at workload-manager scale:
+//! one connection per *node*, not per request).
+//!
+//! Frame format: `u32` little-endian payload length, then that many bytes of
+//! UTF-8 JSON. Max frame 64 MiB (guards against corrupt length prefixes).
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::ser::Value;
+
+const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// Write one JSON frame.
+pub fn send_msg(stream: &mut TcpStream, msg: &Value) -> Result<()> {
+    let body = msg.encode();
+    let len = body.len() as u32;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len} bytes");
+    }
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one JSON frame (blocking; respects the stream's read timeout).
+pub fn recv_msg(stream: &mut TcpStream) -> Result<Value> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("frame too large: {len} bytes");
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body)?;
+    let text = String::from_utf8(body)?;
+    Value::parse(&text).map_err(|e| anyhow!("bad frame: {e}"))
+}
+
+/// Request helper: adds a `method` tag.
+pub fn request(method: &str) -> Value {
+    Value::obj().with("method", method)
+}
+
+/// Response helpers.
+pub fn ok_response() -> Value {
+    Value::obj().with("ok", true)
+}
+
+pub fn err_response(msg: &str) -> Value {
+    Value::obj().with("ok", false).with("error", msg)
+}
+
+/// True if a response frame signals success.
+pub fn is_ok(v: &Value) -> bool {
+    v.get("ok").and_then(Value::as_bool).unwrap_or(false)
+}
+
+/// A blocking RPC server: one handler thread per connection.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving on `addr` (use port 0 for an ephemeral port). The
+    /// handler is invoked per request frame; its return value is the
+    /// response frame. A handler may take over the connection for streaming
+    /// by returning `None` from `on_connect`-style logic — here we keep the
+    /// simple request/response discipline and let kvstore watches run on a
+    /// dedicated subscription connection.
+    pub fn serve<F>(addr: impl ToSocketAddrs, handler: F) -> Result<Server>
+    where
+        F: Fn(Value, &mut TcpStream) -> Option<Value> + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handler = Arc::new(handler);
+        let accept_thread = std::thread::Builder::new()
+            .name("rpc-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _peer)) => {
+                            let h = handler.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new().name("rpc-conn".into()).spawn(
+                                move || {
+                                    stream.set_nodelay(true).ok();
+                                    // periodic timeout so the thread notices shutdown
+                                    stream
+                                        .set_read_timeout(Some(Duration::from_millis(200)))
+                                        .ok();
+                                    loop {
+                                        if stop3.load(Ordering::Relaxed) {
+                                            return;
+                                        }
+                                        match recv_msg(&mut stream) {
+                                            Ok(req) => {
+                                                if let Some(resp) = h(req, &mut stream) {
+                                                    if send_msg(&mut stream, &resp).is_err() {
+                                                        return;
+                                                    }
+                                                }
+                                            }
+                                            Err(e) => {
+                                                // timeout => retry; disconnect => exit
+                                                if let Some(ioe) =
+                                                    e.downcast_ref::<std::io::Error>()
+                                                {
+                                                    if matches!(
+                                                        ioe.kind(),
+                                                        std::io::ErrorKind::WouldBlock
+                                                            | std::io::ErrorKind::TimedOut
+                                                    ) {
+                                                        continue;
+                                                    }
+                                                }
+                                                return;
+                                            }
+                                        }
+                                    }
+                                },
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => return,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Blocking RPC client with one persistent connection.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    pub fn connect_timeout(addr: &std::net::SocketAddr, timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(addr, timeout)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    /// One request/response round trip.
+    pub fn call(&mut self, req: &Value) -> Result<Value> {
+        send_msg(&mut self.stream, req)?;
+        recv_msg(&mut self.stream)
+    }
+
+    /// Read the next pushed frame (subscription streams).
+    pub fn next_push(&mut self) -> Result<Value> {
+        recv_msg(&mut self.stream)
+    }
+
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(t)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_echo() {
+        let mut server = Server::serve("127.0.0.1:0", |req, _s| {
+            Some(ok_response().with("echo", req.get("msg").cloned().unwrap_or(Value::Null)))
+        })
+        .unwrap();
+        let mut c = Client::connect(server.addr).unwrap();
+        let resp = c.call(&request("echo").with("msg", "hello")).unwrap();
+        assert!(is_ok(&resp));
+        assert_eq!(resp.get("echo").unwrap().as_str(), Some("hello"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_clients_and_requests() {
+        let server = Server::serve("127.0.0.1:0", |req, _s| {
+            let x = req.get("x").and_then(Value::as_f64).unwrap_or(0.0);
+            Some(ok_response().with("y", x * 2.0))
+        })
+        .unwrap();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let addr = server.addr;
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for j in 0..10 {
+                    let v = (i * 10 + j) as f64;
+                    let resp = c.call(&request("double").with("x", v)).unwrap();
+                    assert_eq!(resp.get("y").unwrap().as_f64(), Some(v * 2.0));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let e = err_response("boom");
+        assert!(!is_ok(&e));
+        assert_eq!(e.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn oversize_frame_rejected() {
+        // construct a client-side check: sending is refused before the wire
+        let huge = "x".repeat((MAX_FRAME + 1) as usize);
+        let v = Value::obj().with("data", huge.as_str());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _accept = std::thread::spawn(move || {
+            let _ = listener.accept();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        assert!(send_msg(&mut stream, &v).is_err());
+    }
+}

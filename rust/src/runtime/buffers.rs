@@ -1,0 +1,94 @@
+//! Host-side tensor math for the L3 hot path: gradient accumulation and the
+//! data-parallel all-reduce (paper Eq. 6) are done here, in Rust, so the
+//! coordinator can split a global batch across DP workers and merge partial
+//! results even when a worker dies mid-iteration (Eq. 7).
+
+/// `dst += src`, elementwise over a tensor list.
+pub fn add_assign(dst: &mut [Vec<f32>], src: &[Vec<f32>]) {
+    assert_eq!(dst.len(), src.len(), "tensor-list arity mismatch");
+    for (d, s) in dst.iter_mut().zip(src) {
+        assert_eq!(d.len(), s.len(), "tensor length mismatch");
+        for (x, y) in d.iter_mut().zip(s) {
+            *x += *y;
+        }
+    }
+}
+
+/// `dst *= k`, elementwise over a tensor list.
+pub fn scale(dst: &mut [Vec<f32>], k: f32) {
+    for d in dst.iter_mut() {
+        for x in d.iter_mut() {
+            *x *= k;
+        }
+    }
+}
+
+/// Sum-reduce the gradient sets of all DP ranks into one (ranks may be empty
+/// when workers died; at least one contribution is required), then divide by
+/// `total_micro_batches` to recover the mean over the global batch.
+///
+/// This mirrors Eq. 6: `grad = (1/B) Σ_i Σ_j grad_{i,j}` where each rank's
+/// contribution is already a *sum* over its micro-batches.
+pub fn allreduce_sum(mut ranks: Vec<Vec<Vec<f32>>>, total_micro_batches: usize) -> Vec<Vec<f32>> {
+    assert!(!ranks.is_empty(), "allreduce over zero contributions");
+    assert!(total_micro_batches > 0);
+    let mut acc = ranks.remove(0);
+    for r in ranks {
+        add_assign(&mut acc, &r);
+    }
+    scale(&mut acc, 1.0 / total_micro_batches as f32);
+    acc
+}
+
+/// Global L2 norm across a tensor list (diagnostics / grad-norm logging).
+pub fn l2_norm(xs: &[Vec<f32>]) -> f64 {
+    xs.iter().flat_map(|t| t.iter()).map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Allocate a zeroed gradient accumulator shaped like `like`.
+pub fn zeros_like(like: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    like.iter().map(|t| vec![0.0; t.len()]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_elementwise() {
+        let mut a = vec![vec![1.0, 2.0], vec![3.0]];
+        add_assign(&mut a, &[vec![10.0, 20.0], vec![30.0]]);
+        assert_eq!(a, vec![vec![11.0, 22.0], vec![33.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn add_assign_rejects_arity_mismatch() {
+        let mut a = vec![vec![1.0]];
+        add_assign(&mut a, &[vec![1.0], vec![2.0]]);
+    }
+
+    #[test]
+    fn allreduce_means_over_microbatches() {
+        // two ranks, each the sum of 2 micro-batches; 4 total micro-batches
+        let r1 = vec![vec![4.0, 8.0]];
+        let r2 = vec![vec![0.0, 4.0]];
+        let out = allreduce_sum(vec![r1, r2], 4);
+        assert_eq!(out, vec![vec![1.0, 3.0]]);
+    }
+
+    #[test]
+    fn allreduce_single_rank() {
+        let out = allreduce_sum(vec![vec![vec![2.0, 4.0]]], 2);
+        assert_eq!(out, vec![vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn l2_norm_and_zeros() {
+        let xs = vec![vec![3.0, 0.0], vec![4.0]];
+        assert!((l2_norm(&xs) - 5.0).abs() < 1e-12);
+        let z = zeros_like(&xs);
+        assert_eq!(z, vec![vec![0.0, 0.0], vec![0.0]]);
+        assert_eq!(l2_norm(&z), 0.0);
+    }
+}

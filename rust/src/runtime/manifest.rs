@@ -1,0 +1,234 @@
+//! Artifact manifest: the contract between `aot.py` and the Rust runtime.
+//!
+//! `manifest.json` pins the parameter tensor order (JAX dict-flatten order),
+//! shapes, initializer specs, the micro-batch token shape, and the model
+//! hyper-parameters — everything Rust needs to construct literals, initialize
+//! state, and budget memory without ever importing Python.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs;
+use std::path::Path;
+
+use crate::ser::Value;
+
+/// Initializer of one tensor (`init` column of the manifest).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitKind {
+    Zeros,
+    Ones,
+    Normal(f32),
+}
+
+impl InitKind {
+    pub fn parse(s: &str) -> Result<InitKind> {
+        if s == "zeros" {
+            Ok(InitKind::Zeros)
+        } else if s == "ones" {
+            Ok(InitKind::Ones)
+        } else if let Some(std) = s.strip_prefix("normal:") {
+            Ok(InitKind::Normal(std.parse().with_context(|| format!("bad init {s:?}"))?))
+        } else {
+            bail!("unknown init kind {s:?}")
+        }
+    }
+}
+
+/// One parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub elems: usize,
+    pub init: InitKind,
+    pub decay: bool,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub n_params: u64,
+    pub flops_per_token: f64,
+    pub params: Vec<ParamSpec>,
+    /// `(micro_batch, seq_len + 1)`.
+    pub tokens_shape: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let cfg = v.req("config").map_err(|e| anyhow!("{e}"))?;
+        let num = |k: &str| -> Result<f64> {
+            cfg.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_f64()
+                .ok_or_else(|| anyhow!("config.{k} not a number"))
+        };
+
+        let mut params = Vec::new();
+        for p in v
+            .req("params")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not an array"))?
+        {
+            let name = p
+                .req("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("param name not a string"))?
+                .to_string();
+            let shape: Vec<usize> = p
+                .req("shape")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                .collect::<Result<_>>()?;
+            let elems: usize = shape.iter().product::<usize>().max(1);
+            let init = InitKind::parse(
+                p.req("init").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default(),
+            )?;
+            let decay = p.get("decay").and_then(Value::as_bool).unwrap_or(false);
+            params.push(ParamSpec { name, shape, elems, init, decay });
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        // order must match JAX dict-flatten (sorted by name)
+        for w in params.windows(2) {
+            if w[0].name >= w[1].name {
+                bail!("manifest params not sorted: {} >= {}", w[0].name, w[1].name);
+            }
+        }
+
+        let ms = v.req("micro_step").map_err(|e| anyhow!("{e}"))?;
+        let tokens_shape: Vec<usize> = ms
+            .req("tokens_shape")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tokens_shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad tokens dim")))
+            .collect::<Result<_>>()?;
+
+        let man = Manifest {
+            name: cfg.req("name").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default().into(),
+            vocab: num("vocab")? as usize,
+            d_model: num("d_model")? as usize,
+            n_layers: num("n_layers")? as usize,
+            n_heads: num("n_heads")? as usize,
+            seq_len: num("seq_len")? as usize,
+            micro_batch: num("micro_batch")? as usize,
+            n_params: num("n_params")? as u64,
+            flops_per_token: num("flops_per_token")?,
+            params,
+            tokens_shape,
+        };
+        let total: u64 = man.params.iter().map(|p| p.elems as u64).sum();
+        if total != man.n_params {
+            bail!("manifest n_params {} != sum of tensor elems {total}", man.n_params);
+        }
+        if man.tokens_shape != vec![man.micro_batch, man.seq_len + 1] {
+            bail!("tokens_shape {:?} inconsistent with config", man.tokens_shape);
+        }
+        Ok(man)
+    }
+
+    /// Tokens per micro-batch (training positions, i.e. seq_len per row).
+    pub fn tokens_per_micro_batch(&self) -> usize {
+        self.micro_batch * self.seq_len
+    }
+
+    /// Estimated training FLOPs of one micro-step.
+    pub fn flops_per_micro_step(&self) -> f64 {
+        self.flops_per_token * self.tokens_per_micro_batch() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+          "format_version": 1,
+          "config": {"name":"t","vocab":16,"d_model":4,"n_layers":1,"n_heads":1,
+                     "seq_len":8,"micro_batch":2,"n_params":20,"flops_per_token":120.0,
+                     "beta1":0.9,"beta2":0.95,"eps":1e-8,"weight_decay":0.1},
+          "params": [
+            {"name":"a_w","shape":[4,4],"init":"normal:0.02","decay":true,"elems":16},
+            {"name":"b_b","shape":[4],"init":"zeros","decay":false,"elems":4}
+          ],
+          "micro_step": {"inputs":["param:a_w","param:b_b","tokens"],
+                          "outputs":["loss","grad:a_w","grad:b_b"],
+                          "tokens_shape":[2,9],"tokens_dtype":"s32"},
+          "apply_update": {"inputs":[],"outputs":[]}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].init, InitKind::Normal(0.02));
+        assert_eq!(m.params[1].init, InitKind::Zeros);
+        assert!(m.params[0].decay && !m.params[1].decay);
+        assert_eq!(m.tokens_shape, vec![2, 9]);
+        assert_eq!(m.tokens_per_micro_batch(), 16);
+        assert!((m.flops_per_micro_step() - 120.0 * 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_unsorted_params() {
+        let bad = sample().replace("a_w", "z_w");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let bad = sample().replace("\"n_params\":20", "\"n_params\":21");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_tokens_shape() {
+        let bad = sample().replace("[2,9]", "[2,8]");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn init_kind_parsing() {
+        assert_eq!(InitKind::parse("zeros").unwrap(), InitKind::Zeros);
+        assert_eq!(InitKind::parse("ones").unwrap(), InitKind::Ones);
+        assert_eq!(InitKind::parse("normal:0.5").unwrap(), InitKind::Normal(0.5));
+        assert!(InitKind::parse("uniform").is_err());
+        assert!(InitKind::parse("normal:x").is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny/manifest.json");
+        if std::path::Path::new(path).exists() {
+            let m = Manifest::load(path).unwrap();
+            assert_eq!(m.name, "tiny");
+            assert_eq!(m.n_params, 118_528);
+            assert_eq!(m.params.len(), 4 + 12 * m.n_layers);
+        }
+    }
+}

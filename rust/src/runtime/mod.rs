@@ -1,0 +1,256 @@
+//! PJRT runtime: load the AOT'd HLO-text artifacts and run them on CPU.
+//!
+//! This is the L2↔L3 bridge: `make artifacts` (Python, build time) writes
+//! `artifacts/<model>/{micro_step,apply_update}.hlo.txt` + `manifest.json`;
+//! this module loads them with the `xla` crate
+//! (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`) and exposes typed entry points over plain `Vec<f32>` tensors.
+//!
+//! XLA handles are *not* `Send` (raw C pointers), so each DP worker thread
+//! owns its own [`ModelRuntime`]; training state crosses threads as
+//! [`TrainState`] (plain vectors), which is also what the checkpointing and
+//! state-migration paths serialize.
+
+pub mod buffers;
+pub mod manifest;
+
+pub use buffers::{add_assign, allreduce_sum, l2_norm, scale};
+pub use manifest::{InitKind, Manifest, ParamSpec};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::rng::{Rand, Xoshiro256};
+
+/// Training state for one model replica: flat f32 tensors in manifest order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// 1-based optimizer step (the next `apply_update` uses `step + 1`).
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Total bytes of all tensors (params + optimizer state).
+    pub fn size_bytes(&self) -> u64 {
+        let count = |xs: &Vec<Vec<f32>>| xs.iter().map(|t| t.len() as u64 * 4).sum::<u64>();
+        count(&self.params) + count(&self.m) + count(&self.v)
+    }
+}
+
+/// Result of one micro-batch step.
+pub struct MicroStepOut {
+    pub loss: f32,
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// A loaded model: PJRT client + compiled executables + manifest.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    micro_step: xla::PjRtLoadedExecutable,
+    apply_update: xla::PjRtLoadedExecutable,
+    pub artifact_dir: PathBuf,
+}
+
+impl ModelRuntime {
+    /// Load and compile the artifacts in `dir` (e.g. `artifacts/tiny`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        // Silence TF/XLA INFO chatter (client created/destroyed) unless the
+        // user asked for it.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+        }
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        let micro_step = compile(&client, &dir.join("micro_step.hlo.txt"))?;
+        let apply_update = compile(&client, &dir.join("apply_update.hlo.txt"))?;
+        Ok(ModelRuntime { manifest, client, micro_step, apply_update, artifact_dir: dir })
+    }
+
+    /// Materialize the initial [`TrainState`] from the manifest's init table.
+    /// Deterministic in `seed` — every DP replica must call this with the
+    /// same seed to start bit-identical.
+    pub fn init_state(&self, seed: u64) -> TrainState {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut params = Vec::with_capacity(self.manifest.params.len());
+        for p in &self.manifest.params {
+            // Per-tensor forked stream => adding/removing tensors elsewhere
+            // does not shift this tensor's values.
+            let mut trng = rng.fork(hash64(&p.name));
+            let data: Vec<f32> = match p.init {
+                InitKind::Zeros => vec![0.0; p.elems],
+                InitKind::Ones => vec![1.0; p.elems],
+                InitKind::Normal(std) => {
+                    (0..p.elems).map(|_| (trng.normal() * std as f64) as f32).collect()
+                }
+            };
+            params.push(data);
+        }
+        let zeros: Vec<Vec<f32>> = self.manifest.params.iter().map(|p| vec![0.0; p.elems]).collect();
+        TrainState { params, m: zeros.clone(), v: zeros, step: 0 }
+    }
+
+    /// Forward+backward for one micro-batch: `(params, tokens) -> (loss, grads)`.
+    ///
+    /// `tokens` is row-major `(micro_batch, seq_len + 1)` int32.
+    pub fn micro_step(&self, params: &[Vec<f32>], tokens: &[i32]) -> Result<MicroStepOut> {
+        let man = &self.manifest;
+        if params.len() != man.params.len() {
+            bail!("micro_step: got {} param tensors, manifest has {}", params.len(), man.params.len());
+        }
+        let want_tokens: usize = man.tokens_shape.iter().product();
+        if tokens.len() != want_tokens {
+            bail!("micro_step: got {} tokens, expected {:?}", tokens.len(), man.tokens_shape);
+        }
+        let mut args = Vec::with_capacity(params.len() + 1);
+        for (spec, data) in man.params.iter().zip(params) {
+            args.push(f32_literal(&spec.shape, data)?);
+        }
+        args.push(i32_literal(&man.tokens_shape, tokens)?);
+
+        let mut outs = run_tuple(&self.micro_step, &args)?;
+        if outs.len() != man.params.len() + 1 {
+            bail!("micro_step returned {} outputs, expected {}", outs.len(), man.params.len() + 1);
+        }
+        let loss: f32 = outs.remove(0).to_vec::<f32>().map_err(wrap_xla)?[0];
+        let grads = outs
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(wrap_xla))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MicroStepOut { loss, grads })
+    }
+
+    /// AdamW update in place: consumes averaged grads, advances `state.step`.
+    pub fn apply_update(&self, state: &mut TrainState, grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        let man = &self.manifest;
+        let n = man.params.len();
+        if grads.len() != n {
+            bail!("apply_update: got {} grad tensors, expected {n}", grads.len());
+        }
+        let step = (state.step + 1) as f32;
+        let mut args = Vec::with_capacity(4 * n + 2);
+        for (spec, data) in man.params.iter().zip(&state.params) {
+            args.push(f32_literal(&spec.shape, data)?);
+        }
+        for (spec, data) in man.params.iter().zip(&state.m) {
+            args.push(f32_literal(&spec.shape, data)?);
+        }
+        for (spec, data) in man.params.iter().zip(&state.v) {
+            args.push(f32_literal(&spec.shape, data)?);
+        }
+        for (spec, data) in man.params.iter().zip(grads) {
+            args.push(f32_literal(&spec.shape, data)?);
+        }
+        args.push(xla::Literal::scalar(step));
+        args.push(xla::Literal::scalar(lr));
+
+        let outs = run_tuple(&self.apply_update, &args)?;
+        if outs.len() != 3 * n {
+            bail!("apply_update returned {} outputs, expected {}", outs.len(), 3 * n);
+        }
+        for (i, lit) in outs.into_iter().enumerate() {
+            let data = lit.to_vec::<f32>().map_err(wrap_xla)?;
+            let (which, idx) = (i / n, i % n);
+            match which {
+                0 => state.params[idx] = data,
+                1 => state.m[idx] = data,
+                _ => state.v[idx] = data,
+            }
+        }
+        state.step += 1;
+        Ok(())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(wrap_xla)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(wrap_xla).with_context(|| format!("compiling {}", path.display()))
+}
+
+/// Execute and unpack the 1-tuple-of-N-results convention produced by
+/// `return_tuple=True` in aot.py.
+fn run_tuple(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args).map_err(wrap_xla)?;
+    let buffer = result
+        .first()
+        .and_then(|per_device| per_device.first())
+        .ok_or_else(|| anyhow!("executable produced no output buffers"))?;
+    let mut tuple = buffer.to_literal_sync().map_err(wrap_xla)?;
+    tuple.decompose_tuple().map_err(wrap_xla)
+}
+
+fn f32_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let want: usize = shape.iter().product();
+    if data.len() != want {
+        bail!("tensor has {} elems, shape {:?} wants {want}", data.len(), shape);
+    }
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(wrap_xla)
+}
+
+fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let want: usize = shape.iter().product();
+    if data.len() != want {
+        bail!("tokens have {} elems, shape {:?} wants {want}", data.len(), shape);
+    }
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(wrap_xla)
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+fn hash64(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trip tests live in rust/tests/runtime_exactness.rs
+    // (they need `make artifacts`). Here: the pure-host pieces.
+
+    #[test]
+    fn hash64_distinct() {
+        assert_ne!(hash64("tok_emb"), hash64("pos_emb"));
+        assert_eq!(hash64("x"), hash64("x"));
+    }
+
+    #[test]
+    fn train_state_size() {
+        let s = TrainState {
+            params: vec![vec![0.0; 10], vec![0.0; 6]],
+            m: vec![vec![0.0; 10], vec![0.0; 6]],
+            v: vec![vec![0.0; 10], vec![0.0; 6]],
+            step: 0,
+        };
+        assert_eq!(s.size_bytes(), 3 * 16 * 4);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(f32_literal(&[2, 2], &[0.0; 3]).is_err());
+        assert!(i32_literal(&[4], &[0; 3]).is_err());
+    }
+}

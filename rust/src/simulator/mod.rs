@@ -1,0 +1,614 @@
+//! Discrete-event cluster simulator — the §7.5 evaluation substrate.
+//!
+//! Replays a failure [`Trace`] against a multi-task cluster under one of the
+//! five recovery policies ([`policies::PolicyKind`]) and accounts WAF
+//! (weighted achieved FLOP/s) over time. Per-task healthy throughput comes
+//! from the same calibrated [`crate::perfmodel`] tables the planner uses;
+//! Unicron's reconfiguration decisions run the *actual* planner
+//! ([`crate::planner::solve`]), not a model of it.
+//!
+//! Outputs: WAF time series + accumulated WAF (Fig. 11), FLOP/s-reduction
+//! summaries (Fig. 3b), transition-time views (Fig. 9 cross-check).
+
+pub mod policies;
+
+pub use policies::{PolicyKind, PolicyParams};
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+
+use crate::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
+use crate::failure::{Severity, Trace};
+use crate::perfmodel::throughput_table;
+use crate::planner::{solve, PlanTask};
+
+/// Per-task simulation state.
+#[derive(Debug, Clone)]
+struct SimTask {
+    spec: TaskSpec,
+    /// Megatron-level `T(t,x)` table (FLOP/s) indexed by worker count.
+    throughput: Vec<f64>,
+    /// Currently assigned workers (GPUs).
+    workers: u32,
+    /// Workers the task will run with once its pending recovery completes.
+    pending_workers: u32,
+    /// If `Some(t)`, the task produces zero WAF until simulated time `t`.
+    down_until: Option<f64>,
+    /// Megatron-style waiting: needs `pending_workers` free GPUs to restart.
+    waiting_for_capacity: bool,
+    /// Time this task was first affected (baseline reclaim priority, §7.5).
+    first_affected_at: Option<f64>,
+    /// Recovery generation: stale RecoveryDone events are ignored.
+    epoch: u64,
+}
+
+impl SimTask {
+    /// Instantaneous WAF under `eff` policy efficiency.
+    fn waf(&self, now: f64, eff: f64) -> f64 {
+        if self.waiting_for_capacity {
+            return 0.0;
+        }
+        if let Some(t) = self.down_until {
+            if now < t {
+                return 0.0;
+            }
+        }
+        if self.workers < self.spec.min_workers {
+            return 0.0;
+        }
+        let t = self.throughput.get(self.workers as usize).copied().unwrap_or(0.0);
+        self.spec.weight * eff * t
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Ev {
+    Failure(usize),           // index into trace.events
+    Repair { node: u32 },
+    RecoveryDone { task: usize, workers: u32, epoch: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct Scheduled {
+    at: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap by (time, seq)
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(CmpOrdering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub policy: PolicyKind,
+    /// Piecewise-constant total-WAF series: (seconds, FLOP/s).
+    pub waf_series: Vec<(f64, f64)>,
+    /// ∫ WAF dt over the whole trace (FLOP·s of weighted useful work).
+    pub accumulated_waf: f64,
+    /// WAF of the failure-free cluster (constant), for reduction ratios.
+    pub healthy_waf: f64,
+    pub duration_s: f64,
+    /// SEV1 transitions performed: (time, seconds the transition took).
+    pub transitions: Vec<(f64, f64)>,
+}
+
+impl SimResult {
+    /// Fraction of the ideal (failure-free) weighted work that was lost —
+    /// Fig. 3b's y-axis.
+    pub fn reduction(&self) -> f64 {
+        let ideal = self.healthy_waf * self.duration_s;
+        if ideal <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.accumulated_waf / ideal
+    }
+
+    /// Mean WAF over the run.
+    pub fn mean_waf(&self) -> f64 {
+        self.accumulated_waf / self.duration_s
+    }
+}
+
+/// The simulator.
+pub struct Simulator {
+    cluster: ClusterSpec,
+    cfg: UnicronConfig,
+    params: PolicyParams,
+    tasks: Vec<SimTask>,
+    /// node -> isolated?
+    node_down: Vec<bool>,
+    available: u32,
+    now: f64,
+    queue: BinaryHeap<Scheduled>,
+    seq: u64,
+    series: Vec<(f64, f64)>,
+    accumulated: f64,
+    last_waf: f64,
+    last_t: f64,
+    transitions: Vec<(f64, f64)>,
+}
+
+impl Simulator {
+    /// Build a simulator. Initial worker assignment is the Unicron-optimal
+    /// plan for the full cluster (§7.5 gives the same initial plan to every
+    /// policy).
+    pub fn new(
+        cluster: ClusterSpec,
+        cfg: UnicronConfig,
+        kind: PolicyKind,
+        specs: &[TaskSpec],
+    ) -> Simulator {
+        let n = cluster.total_gpus();
+        let mut plan_tasks = Vec::new();
+        let mut tables = Vec::new();
+        for spec in specs {
+            let model = ModelSpec::gpt3(&spec.model)
+                .unwrap_or_else(|| panic!("unknown model {}", spec.model));
+            let table = throughput_table(&model, &cluster, n);
+            tables.push(table.clone());
+            plan_tasks.push(PlanTask { spec: spec.clone(), throughput: table, current: 0, fault: false });
+        }
+        let initial = solve(&plan_tasks, n, &cfg);
+        let tasks = specs
+            .iter()
+            .zip(tables)
+            .zip(&initial.assignment)
+            .map(|((spec, throughput), &workers)| SimTask {
+                spec: spec.clone(),
+                throughput,
+                workers,
+                pending_workers: workers,
+                down_until: None,
+                waiting_for_capacity: false,
+                first_affected_at: None,
+                epoch: 0,
+            })
+            .collect();
+        let params = PolicyParams::for_kind(kind, &cfg);
+        Simulator {
+            node_down: vec![false; cluster.n_nodes as usize],
+            available: n,
+            cluster,
+            cfg,
+            params,
+            tasks,
+            now: 0.0,
+            queue: BinaryHeap::new(),
+            seq: 0,
+            series: Vec::new(),
+            accumulated: 0.0,
+            last_waf: 0.0,
+            last_t: 0.0,
+            transitions: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, at: f64, ev: Ev) {
+        self.seq += 1;
+        self.queue.push(Scheduled { at, seq: self.seq, ev });
+    }
+
+    fn total_waf(&self) -> f64 {
+        self.tasks.iter().map(|t| t.waf(self.now, self.params.efficiency)).sum()
+    }
+
+    fn record(&mut self) {
+        // integrate the previous segment, then note the new level
+        self.accumulated += self.last_waf * (self.now - self.last_t);
+        self.last_t = self.now;
+        self.last_waf = self.total_waf();
+        self.series.push((self.now, self.last_waf));
+    }
+
+    /// Which task owns `node` under the current assignment: tasks take nodes
+    /// in id order, `ceil(workers/8)` nodes each, over the healthy nodes.
+    fn owner_of(&self, node: u32) -> Option<usize> {
+        let healthy: Vec<u32> =
+            (0..self.cluster.n_nodes).filter(|&n| !self.node_down[n as usize]).collect();
+        let mut cursor = 0usize;
+        for (ti, t) in self.tasks.iter().enumerate() {
+            let nodes_needed =
+                ((t.workers + self.cluster.gpus_per_node - 1) / self.cluster.gpus_per_node) as usize;
+            for k in 0..nodes_needed {
+                if let Some(&n) = healthy.get(cursor + k) {
+                    if n == node {
+                        return Some(ti);
+                    }
+                }
+            }
+            cursor += nodes_needed;
+        }
+        None
+    }
+
+    /// Run the trace to completion.
+    pub fn run(mut self, trace: &Trace) -> SimResult {
+        for (i, e) in trace.events.iter().enumerate() {
+            self.push(e.at_s, Ev::Failure(i));
+        }
+        self.record(); // t=0 healthy level
+        let healthy_waf = self.last_waf;
+
+        while let Some(s) = self.queue.pop() {
+            if s.at > trace.config.duration_s {
+                break;
+            }
+            self.now = s.at;
+            match s.ev {
+                Ev::Failure(i) => self.on_failure(trace, i),
+                Ev::Repair { node } => self.on_repair(node),
+                Ev::RecoveryDone { task, workers, epoch } => {
+                    let t = &mut self.tasks[task];
+                    if t.epoch == epoch {
+                        t.workers = workers;
+                        t.pending_workers = workers;
+                        t.down_until = None;
+                    }
+                }
+            }
+            self.record();
+        }
+        self.now = trace.config.duration_s;
+        self.record();
+
+        SimResult {
+            policy: self.params.kind,
+            waf_series: self.series,
+            accumulated_waf: self.accumulated,
+            healthy_waf,
+            duration_s: trace.config.duration_s,
+            transitions: self.transitions,
+        }
+    }
+
+    fn on_failure(&mut self, trace: &Trace, idx: usize) {
+        let ev = &trace.events[idx];
+        match ev.severity() {
+            Severity::Sev1 => {
+                let node = ev.node;
+                if self.node_down[node as usize] {
+                    return; // node already out; failure has no additional effect
+                }
+                let affected = self.owner_of(node);
+                self.node_down[node as usize] = true;
+                self.available = self.available.saturating_sub(self.cluster.gpus_per_node);
+                self.push(self.now + ev.repair_after_s, Ev::Repair { node });
+                self.apply_sev1(affected);
+            }
+            _ => {
+                // SEV2/SEV3: process-level; hits whatever task owns the node
+                if self.node_down[ev.node as usize] {
+                    return;
+                }
+                if let Some(ti) = self.owner_of(ev.node) {
+                    let t = &mut self.tasks[ti];
+                    if t.waiting_for_capacity {
+                        return; // stalled anyway; nothing more to lose
+                    }
+                    // A failure mid-recovery restarts the recovery (the new
+                    // process dies during setup/recompute) — this compounds
+                    // under trace-b's failure rates.
+                    let dt = self.params.detect_s(ev.severity()) + self.params.restart_recovery_s();
+                    let until = self.now + dt;
+                    let w = t.pending_workers.max(t.workers).max(
+                        if t.down_until.map_or(false, |u| u > self.now) { t.pending_workers } else { t.workers });
+                    t.down_until = Some(until);
+                    t.epoch += 1;
+                    let epoch = t.epoch;
+                    self.push(until, Ev::RecoveryDone { task: ti, workers: w, epoch });
+                }
+            }
+        }
+    }
+
+    fn apply_sev1(&mut self, affected: Option<usize>) {
+        let detect = self.params.detect_s(Severity::Sev1);
+        if self.params.global_replan {
+            // Unicron: cost-aware cluster-wide replan (the real planner).
+            let plan_tasks: Vec<PlanTask> = self
+                .tasks
+                .iter()
+                .enumerate()
+                .map(|(i, t)| PlanTask {
+                    spec: t.spec.clone(),
+                    throughput: t.throughput.clone(),
+                    current: t.workers,
+                    fault: Some(i) == affected,
+                })
+                .collect();
+            let plan = solve(&plan_tasks, self.available, &self.cfg);
+            for (ti, &new_w) in plan.assignment.iter().enumerate() {
+                let changed = new_w != self.tasks[ti].workers || Some(ti) == affected;
+                if changed {
+                    let moved = self.tasks[ti].workers.abs_diff(new_w).max(
+                        if Some(ti) == affected { self.cluster.gpus_per_node } else { 0 },
+                    );
+                    let trans = self.params.sev1_transition_s(moved);
+                    let until = self.now + detect + trans;
+                    self.tasks[ti].down_until = Some(until);
+                    self.tasks[ti].pending_workers = new_w;
+                    self.tasks[ti].epoch += 1;
+                    let epoch = self.tasks[ti].epoch;
+                    self.push(until, Ev::RecoveryDone { task: ti, workers: new_w, epoch });
+                    if Some(ti) == affected {
+                        self.transitions.push((self.now, detect + trans));
+                    }
+                }
+            }
+        } else if let Some(ti) = affected {
+            let gpn = self.cluster.gpus_per_node;
+            let t = &mut self.tasks[ti];
+            if t.first_affected_at.is_none() {
+                t.first_affected_at = Some(self.now);
+            }
+            if self.params.elastic {
+                //
+
+                // Oobleck/Varuna/Bamboo: shrink the affected task only.
+                let new_w = t.workers.saturating_sub(gpn);
+                let feasible = new_w >= t.spec.min_workers
+                    && t.throughput.get(new_w as usize).copied().unwrap_or(0.0) > 0.0;
+                let target = if feasible { new_w } else { 0 };
+                let trans = self.params.sev1_transition_s(gpn);
+                let until = self.now + detect + trans;
+                t.down_until = Some(until);
+                t.pending_workers = target;
+                t.waiting_for_capacity = !feasible;
+                t.epoch += 1;
+                let epoch = t.epoch;
+                self.transitions.push((self.now, detect + trans));
+                self.push(until, Ev::RecoveryDone { task: ti, workers: target, epoch });
+            } else {
+                // Megatron: cannot shrink; the task hangs until capacity for
+                // its full configuration is free again (hot spare / repair).
+                t.waiting_for_capacity = true;
+                t.down_until = Some(f64::INFINITY);
+                t.workers = t.pending_workers; // frozen config
+                self.transitions.push((self.now, detect)); // transition completes on repair
+            }
+        }
+        // if the failed node was idle, capacity just shrinks silently
+    }
+
+    fn on_repair(&mut self, node: u32) {
+        if !self.node_down[node as usize] {
+            return;
+        }
+        self.node_down[node as usize] = false;
+        self.available = (self.available + self.cluster.gpus_per_node).min(self.cluster.total_gpus());
+
+        if self.params.global_replan {
+            self.apply_join_replan();
+            return;
+        }
+
+        // §7.5: baselines give the earliest-affected waiting/shrunk task
+        // priority to reclaim the recovered capacity.
+        let mut candidates: Vec<usize> = (0..self.tasks.len())
+            .filter(|&i| {
+                let t = &self.tasks[i];
+                t.waiting_for_capacity || t.pending_workers < t.spec.min_workers.max(t.pending_workers)
+                    || t.first_affected_at.is_some()
+            })
+            .collect();
+        candidates.sort_by(|&a, &b| {
+            let fa = self.tasks[a].first_affected_at.unwrap_or(f64::INFINITY);
+            let fb = self.tasks[b].first_affected_at.unwrap_or(f64::INFINITY);
+            fa.partial_cmp(&fb).unwrap()
+        });
+        let used: u32 = self
+            .tasks
+            .iter()
+            .map(|t| if t.waiting_for_capacity { 0 } else { t.pending_workers.max(t.workers) })
+            .sum();
+        let mut free = self.available.saturating_sub(used);
+        for ti in candidates {
+            if free == 0 {
+                break;
+            }
+            let gpn = self.cluster.gpus_per_node;
+            let t = &mut self.tasks[ti];
+            if t.waiting_for_capacity {
+                // restart at the original scale if it fits
+                let want = if self.params.elastic {
+                    (t.pending_workers.max(t.spec.min_workers) + gpn - 1) / gpn * gpn
+                } else {
+                    t.workers.max(t.pending_workers) // Megatron: exact original
+                };
+                let want = want.max(t.spec.min_workers);
+                if want <= free {
+                    free -= want;
+                    t.waiting_for_capacity = false;
+                    t.first_affected_at = None;
+                    let trans = self.params.sev1_transition_s(want)
+                        + if self.params.elastic { 0.0 } else { 0.0 };
+                    let until = self.now + trans;
+                    t.down_until = Some(until);
+                    t.pending_workers = want;
+                    t.epoch += 1;
+                    let epoch = t.epoch;
+                    self.push(until, Ev::RecoveryDone { task: ti, workers: want, epoch });
+                }
+            } else if self.params.elastic && free >= gpn {
+                // grow a previously-shrunk task back by one node
+                let want = t.pending_workers.max(t.workers) + gpn;
+                if t.throughput.get(want as usize).copied().unwrap_or(0.0) > 0.0 {
+                    free -= gpn;
+                    t.first_affected_at = None;
+                    let trans = self.params.sev1_transition_s(gpn);
+                    let until = self.now + trans;
+                    t.down_until = Some(until);
+                    t.pending_workers = want;
+                    t.epoch += 1;
+                    let epoch = t.epoch;
+                    self.push(until, Ev::RecoveryDone { task: ti, workers: want, epoch });
+                }
+            }
+        }
+    }
+
+    fn apply_join_replan(&mut self) {
+        let plan_tasks: Vec<PlanTask> = self
+            .tasks
+            .iter()
+            .map(|t| PlanTask {
+                spec: t.spec.clone(),
+                throughput: t.throughput.clone(),
+                current: t.workers,
+                fault: false,
+            })
+            .collect();
+        let plan = solve(&plan_tasks, self.available, &self.cfg);
+        for (ti, &new_w) in plan.assignment.iter().enumerate() {
+            if new_w != self.tasks[ti].workers {
+                let moved = self.tasks[ti].workers.abs_diff(new_w);
+                let trans = self.params.sev1_transition_s(moved);
+                let until = self.now + trans;
+                self.tasks[ti].down_until = Some(until);
+                self.tasks[ti].pending_workers = new_w;
+                self.tasks[ti].epoch += 1;
+                let epoch = self.tasks[ti].epoch;
+                self.push(until, Ev::RecoveryDone { task: ti, workers: new_w, epoch });
+            }
+        }
+    }
+}
+
+/// Convenience: run one trace under every policy.
+pub fn compare_policies(
+    cluster: &ClusterSpec,
+    cfg: &UnicronConfig,
+    specs: &[TaskSpec],
+    trace: &Trace,
+) -> Vec<SimResult> {
+    PolicyKind::all()
+        .iter()
+        .map(|&k| Simulator::new(cluster.clone(), cfg.clone(), k, specs).run(trace))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::table3_case;
+    use crate::failure::TraceConfig;
+
+    fn setup() -> (ClusterSpec, UnicronConfig, Vec<TaskSpec>) {
+        (ClusterSpec::default(), UnicronConfig::default(), table3_case(5))
+    }
+
+    fn run(kind: PolicyKind, trace: &Trace) -> SimResult {
+        let (cluster, cfg, specs) = setup();
+        Simulator::new(cluster, cfg, kind, &specs).run(trace)
+    }
+
+    #[test]
+    fn healthy_cluster_efficiencies_ordered() {
+        // with an empty trace the accumulated WAF ratio equals the efficiency
+        let mut tc = TraceConfig::trace_a();
+        tc.expect_sev1 = 0.0;
+        tc.expect_other = 0.0;
+        let trace = Trace::generate(tc, 1);
+        let uni = run(PolicyKind::Unicron, &trace);
+        let meg = run(PolicyKind::Megatron, &trace);
+        let oob = run(PolicyKind::Oobleck, &trace);
+        assert!((uni.accumulated_waf - meg.accumulated_waf).abs() < 1e-6 * meg.accumulated_waf);
+        assert!(meg.accumulated_waf > 2.0 * oob.accumulated_waf);
+        assert!(uni.reduction().abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_trace() {
+        let trace = Trace::generate(TraceConfig::trace_a(), 11);
+        let a = run(PolicyKind::Unicron, &trace);
+        let b = run(PolicyKind::Unicron, &trace);
+        assert_eq!(a.accumulated_waf, b.accumulated_waf);
+        assert_eq!(a.waf_series, b.waf_series);
+    }
+
+    #[test]
+    fn failures_reduce_waf() {
+        let trace = Trace::generate(TraceConfig::trace_a(), 5);
+        let r = run(PolicyKind::Unicron, &trace);
+        assert!(r.reduction() > 0.0, "SEV1s must cost something");
+        assert!(r.reduction() < 0.5, "Unicron should keep most of the work: {}", r.reduction());
+    }
+
+    #[test]
+    fn unicron_beats_megatron_on_trace_a_by_fig11_margin() {
+        let trace = Trace::generate(TraceConfig::trace_a(), 42);
+        let uni = run(PolicyKind::Unicron, &trace);
+        let meg = run(PolicyKind::Megatron, &trace);
+        let ratio = uni.accumulated_waf / meg.accumulated_waf;
+        // paper: 1.2× on trace-a; accept a band around it
+        assert!((1.05..1.6).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn unicron_margin_grows_on_trace_b() {
+        let ta = Trace::generate(TraceConfig::trace_a(), 42);
+        let tb = Trace::generate(TraceConfig::trace_b(), 42);
+        let ratio_a = run(PolicyKind::Unicron, &ta).accumulated_waf
+            / run(PolicyKind::Megatron, &ta).accumulated_waf;
+        let ratio_b = run(PolicyKind::Unicron, &tb).accumulated_waf
+            / run(PolicyKind::Megatron, &tb).accumulated_waf;
+        assert!(ratio_b > ratio_a, "trace-b {ratio_b} should exceed trace-a {ratio_a}");
+        assert!((1.3..3.0).contains(&ratio_b), "trace-b ratio {ratio_b}");
+    }
+
+    #[test]
+    fn unicron_dominates_resilient_baselines() {
+        let trace = Trace::generate(TraceConfig::trace_a(), 7);
+        let uni = run(PolicyKind::Unicron, &trace);
+        for k in [PolicyKind::Oobleck, PolicyKind::Varuna, PolicyKind::Bamboo] {
+            let r = run(k, &trace);
+            let ratio = uni.accumulated_waf / r.accumulated_waf;
+            assert!((2.0..8.0).contains(&ratio), "{k:?} ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn series_is_time_ordered_and_nonnegative() {
+        let trace = Trace::generate(TraceConfig::trace_b(), 3);
+        let r = run(PolicyKind::Varuna, &trace);
+        let mut prev = 0.0;
+        for &(t, w) in &r.waf_series {
+            assert!(t >= prev);
+            assert!(w >= 0.0);
+            prev = t;
+        }
+        assert!(r.accumulated_waf > 0.0);
+    }
+
+    #[test]
+    fn transitions_recorded_for_sev1() {
+        let trace = Trace::generate(TraceConfig::trace_a(), 9);
+        let sev1s = trace.count_by_severity(Severity::Sev1);
+        let r = run(PolicyKind::Unicron, &trace);
+        assert!(!r.transitions.is_empty());
+        assert!(r.transitions.len() <= sev1s + 2);
+        for &(_, d) in &r.transitions {
+            assert!(d > 0.0 && d < 600.0, "unicron transition {d}s");
+        }
+    }
+}

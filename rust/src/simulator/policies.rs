@@ -1,0 +1,226 @@
+//! Recovery-policy models: Unicron plus the four baselines of §7
+//! (Megatron checkpoint-restart, Oobleck, Varuna, Bamboo).
+//!
+//! Baseline constants are calibrated to the paper's published relative
+//! numbers, not to their absolute testbed values:
+//!
+//! * **efficiency** — Fig. 3a / Fig. 11: Megatron-class throughput ≈ 3.6×
+//!   Oobleck, ≈ 4.3× Bamboo, ≈ 4.7× Varuna (back-solved from the paper's
+//!   accumulated-WAF ratios of 3.7× / 4.6× / 4.8× on trace-a, which are
+//!   dominated by healthy-state efficiency). Unicron inherits Megatron's
+//!   efficiency (§3).
+//! * **detection** — Table 2: Unicron detects in 0.3–5.6 s (case-dependent);
+//!   systems without in-band detection hit the NCCL/Megatron timeout
+//!   (`D_timeout`, 30 min default) for everything except node loss.
+//!   Oobleck/Varuna/Bamboo ship their own supervision: tens of seconds.
+//! * **transition** — Fig. 9: Unicron sustains a roughly flat, sub-minute
+//!   transition by reusing partial iterations and nearest-source migration;
+//!   Oobleck/Bamboo reconfigure dynamically in minutes; Varuna and Megatron
+//!   reload checkpoints and recompute (~15 min mean for 30-min intervals,
+//!   footnote 2) plus resubmission/environment setup for Megatron (Fig. 2).
+
+use crate::config::UnicronConfig;
+use crate::failure::Severity;
+
+/// Which system's recovery behaviour to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    Unicron,
+    Megatron,
+    Oobleck,
+    Varuna,
+    Bamboo,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Unicron => "Unicron",
+            PolicyKind::Megatron => "Megatron",
+            PolicyKind::Oobleck => "Oobleck",
+            PolicyKind::Varuna => "Varuna",
+            PolicyKind::Bamboo => "Bamboo",
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 5] {
+        [PolicyKind::Unicron, PolicyKind::Megatron, PolicyKind::Oobleck, PolicyKind::Varuna, PolicyKind::Bamboo]
+    }
+}
+
+/// Behavioural constants for one policy.
+#[derive(Debug, Clone)]
+pub struct PolicyParams {
+    pub kind: PolicyKind,
+    /// Healthy throughput as a fraction of Megatron's (Fig. 3a).
+    pub efficiency: f64,
+    /// Can the system keep training on fewer workers (elastic)?
+    pub elastic: bool,
+    /// Does the whole cluster replan (Unicron) or only the affected task?
+    pub global_replan: bool,
+    /// Detection latency by severity, seconds.
+    pub detect_sev1_s: f64,
+    pub detect_sev23_s: f64,
+    /// Base reconfiguration/transition time on SEV1 (seconds), before the
+    /// per-GPU migration term.
+    pub transition_base_s: f64,
+    /// Extra transition seconds per GPU being reconfigured (state movement).
+    pub transition_per_gpu_s: f64,
+    /// Recovery time for SEV2/SEV3 (restart-in-place class), seconds.
+    pub restart_s: f64,
+    /// Lost-progress recomputation after a restart from checkpoint, seconds
+    /// (0 for systems that reuse partial iterations or hot state).
+    pub recompute_s: f64,
+}
+
+impl PolicyParams {
+    pub fn for_kind(kind: PolicyKind, cfg: &UnicronConfig) -> PolicyParams {
+        let d_timeout = 30.0 * 60.0; // Megatron NCCL timeout default (Table 2)
+        // mean recompute for checkpoint-interval/2 (footnote 2: ~15 min)
+        let recompute = cfg.ckpt_interval_s / 2.0;
+        match kind {
+            PolicyKind::Unicron => PolicyParams {
+                kind,
+                efficiency: 1.0,
+                elastic: true,
+                global_replan: true,
+                detect_sev1_s: 5.6,   // Table 2 case 1
+                detect_sev23_s: 1.8,  // cases 2/3 (0.3–1.8 s); stalls: 3×D_iter ≈ 60 s handled upstream
+                transition_base_s: 25.0,
+                transition_per_gpu_s: 0.4, // nearest-source state migration
+                restart_s: 15.0,           // in-place restart, state from DP replica
+                recompute_s: 0.0,          // partial-iteration reuse (§6.2)
+            },
+            PolicyKind::Megatron => PolicyParams {
+                kind,
+                efficiency: 1.0,
+                elastic: false,
+                global_replan: false,
+                detect_sev1_s: d_timeout, // hang until the collective times out
+                detect_sev23_s: d_timeout,
+                // Fig. 2: resubmission (9 min) + environment/CUDA (14 min)
+                transition_base_s: (9.0 + 14.0) * 60.0,
+                transition_per_gpu_s: 0.0,
+                restart_s: (9.0 + 14.0) * 60.0,
+                recompute_s: recompute, // restart from last persistent ckpt
+            },
+            PolicyKind::Oobleck => PolicyParams {
+                kind,
+                efficiency: 0.28,
+                elastic: true,
+                global_replan: false,
+                detect_sev1_s: 30.0,
+                detect_sev23_s: 30.0,
+                transition_base_s: 90.0, // pipeline re-instantiation (Fig. 9)
+                transition_per_gpu_s: 1.5,
+                restart_s: 60.0,
+                recompute_s: 0.0, // pipeline templates avoid ckpt reload
+            },
+            PolicyKind::Varuna => PolicyParams {
+                kind,
+                efficiency: 0.215,
+                elastic: true,
+                global_replan: false,
+                detect_sev1_s: 60.0,
+                detect_sev23_s: 60.0,
+                transition_base_s: 180.0, // job morphing + ckpt reload
+                transition_per_gpu_s: 2.0,
+                restart_s: 120.0,
+                recompute_s: recompute * 0.2, // frequent async checkpoints
+            },
+            PolicyKind::Bamboo => PolicyParams {
+                kind,
+                efficiency: 0.23, // redundant computation tax on top of low base
+                elastic: true,
+                global_replan: false,
+                detect_sev1_s: 30.0,
+                detect_sev23_s: 30.0,
+                transition_base_s: 60.0, // hot standby via redundancy
+                transition_per_gpu_s: 1.0,
+                restart_s: 45.0,
+                recompute_s: 0.0,
+            },
+        }
+    }
+
+    /// Detection latency for a failure of the given severity.
+    pub fn detect_s(&self, sev: Severity) -> f64 {
+        match sev {
+            Severity::Sev1 => self.detect_sev1_s,
+            _ => self.detect_sev23_s,
+        }
+    }
+
+    /// SEV1 transition duration when `moved_gpus` workers change hands.
+    pub fn sev1_transition_s(&self, moved_gpus: u32) -> f64 {
+        self.transition_base_s + self.transition_per_gpu_s * moved_gpus as f64 + self.recompute_s
+    }
+
+    /// SEV2/SEV3 recovery duration.
+    pub fn restart_recovery_s(&self) -> f64 {
+        self.restart_s + self.recompute_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> UnicronConfig {
+        UnicronConfig::default()
+    }
+
+    #[test]
+    fn efficiency_ordering_matches_fig3a() {
+        let c = cfg();
+        let eff = |k| PolicyParams::for_kind(k, &c).efficiency;
+        assert_eq!(eff(PolicyKind::Unicron), eff(PolicyKind::Megatron));
+        assert!(eff(PolicyKind::Megatron) > eff(PolicyKind::Oobleck));
+        // Fig. 11 trace-a ordering: Oobleck (3.7×) > Bamboo (4.6×) > Varuna (4.8×)
+        assert!(eff(PolicyKind::Oobleck) > eff(PolicyKind::Bamboo));
+        assert!(eff(PolicyKind::Bamboo) > eff(PolicyKind::Varuna));
+        // Fig. 3a: Megatron ≥ ~2.5× the resilient-training systems
+        assert!(eff(PolicyKind::Megatron) / eff(PolicyKind::Oobleck) >= 2.0);
+    }
+
+    #[test]
+    fn detection_matches_table2_shape() {
+        let c = cfg();
+        let uni = PolicyParams::for_kind(PolicyKind::Unicron, &c);
+        let meg = PolicyParams::for_kind(PolicyKind::Megatron, &c);
+        assert!(uni.detect_s(Severity::Sev2) < 10.0);
+        assert_eq!(meg.detect_s(Severity::Sev2), 1800.0); // D_timeout
+        // node loss: similar for both (baseline also sees the dead node)
+        assert!(uni.detect_s(Severity::Sev1) < 10.0);
+    }
+
+    #[test]
+    fn transition_ordering_matches_fig9() {
+        let c = cfg();
+        let t = |k| PolicyParams::for_kind(k, &c).sev1_transition_s(16);
+        assert!(t(PolicyKind::Unicron) < t(PolicyKind::Bamboo));
+        assert!(t(PolicyKind::Bamboo) <= t(PolicyKind::Oobleck));
+        assert!(t(PolicyKind::Oobleck) < t(PolicyKind::Varuna));
+        assert!(t(PolicyKind::Varuna) < t(PolicyKind::Megatron));
+        // Unicron stays sub-minute at moderate scale
+        assert!(t(PolicyKind::Unicron) < 60.0);
+    }
+
+    #[test]
+    fn unicron_is_the_only_global_replanner() {
+        let c = cfg();
+        for k in PolicyKind::all() {
+            let p = PolicyParams::for_kind(k, &c);
+            assert_eq!(p.global_replan, k == PolicyKind::Unicron, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn megatron_is_the_only_inelastic_policy() {
+        let c = cfg();
+        for k in PolicyKind::all() {
+            let p = PolicyParams::for_kind(k, &c);
+            assert_eq!(p.elastic, k != PolicyKind::Megatron, "{k:?}");
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Transition strategy (paper §6): squeeze every reusable partial result out
+//! of an interrupted iteration, then migrate state by the nearest principle.
+//!
+//! * [`IterationTracker`] — the micro-batch iteration scheduler of §6.2: it
+//!   knows which micro-batch ran on which DP rank, marks completions, and on
+//!   a rank failure redistributes that rank's share to the survivors
+//!   round-robin (Eq. 7), distinguishing scenario #1 (failure before the
+//!   all-reduce: the dead rank's accumulated gradients are lost, its whole
+//!   share is recomputed) from scenario #2 (failure after the all-reduce
+//!   started: only unreduced gradient segments are recomputed).
+//! * [`StateSource`] / [`migration`] — §6.3's nearest principle: DP replica
+//!   (in-cluster copy) → GEMINI in-memory checkpoint → remote persistent
+//!   checkpoint, with transition-time estimates used by Fig. 9.
+
+use std::collections::BTreeSet;
+
+/// Where an iteration stood when a failure hit (§6.2's two scenarios).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailurePhase {
+    /// Scenario #1: before the all-reduce started.
+    BeforeAllReduce,
+    /// Scenario #2: all-reduce in flight; `reduced_fraction` of gradient
+    /// segments already reduced.
+    DuringAllReduce,
+    /// After the all-reduce completed: the dead rank is simply omitted.
+    AfterAllReduce,
+}
+
+/// What must be recomputed after a rank failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Redistribution {
+    /// (surviving rank, micro-batches appended to its queue).
+    pub extra: Vec<(usize, Vec<usize>)>,
+    /// True if the failed rank's contribution was already merged and nothing
+    /// needs recomputation (scenario #2 with reduced gradients).
+    pub nothing_lost: bool,
+}
+
+/// Tracks one global-batch iteration across DP ranks.
+#[derive(Debug, Clone)]
+pub struct IterationTracker {
+    /// assignment[r] = micro-batch ids queued on rank r (dead ranks keep an
+    /// empty list).
+    assignment: Vec<Vec<usize>>,
+    done: Vec<BTreeSet<usize>>,
+    alive: Vec<bool>,
+    n_micro: usize,
+    phase: FailurePhase,
+}
+
+impl IterationTracker {
+    /// Split `n_micro` micro-batches over `ranks` DP ranks contiguously
+    /// (Megatron-style: rank i owns the i-th slab; Fig. 8).
+    pub fn new(n_micro: usize, ranks: usize) -> IterationTracker {
+        assert!(ranks > 0 && n_micro > 0);
+        let mut assignment = vec![Vec::new(); ranks];
+        for mb in 0..n_micro {
+            // contiguous slabs, remainder spread to the front ranks
+            let r = (mb * ranks) / n_micro;
+            assignment[r].push(mb);
+        }
+        IterationTracker {
+            assignment,
+            done: vec![BTreeSet::new(); ranks],
+            alive: vec![true; ranks],
+            n_micro,
+            phase: FailurePhase::BeforeAllReduce,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn alive_ranks(&self) -> Vec<usize> {
+        (0..self.ranks()).filter(|&r| self.alive[r]).collect()
+    }
+
+    pub fn assignment(&self, rank: usize) -> &[usize] {
+        &self.assignment[rank]
+    }
+
+    /// Remaining (not yet completed) micro-batches of `rank`, in order.
+    pub fn remaining(&self, rank: usize) -> Vec<usize> {
+        self.assignment[rank].iter().copied().filter(|mb| !self.done[rank].contains(mb)).collect()
+    }
+
+    pub fn mark_done(&mut self, rank: usize, mb: usize) {
+        assert!(self.alive[rank], "dead rank reporting completion");
+        assert!(self.assignment[rank].contains(&mb), "mb {mb} not assigned to rank {rank}");
+        self.done[rank].insert(mb);
+    }
+
+    /// All ranks finished their queues (ready for the all-reduce).
+    pub fn compute_complete(&self) -> bool {
+        (0..self.ranks())
+            .filter(|&r| self.alive[r])
+            .all(|r| self.done[r].len() == self.assignment[r].len())
+    }
+
+    pub fn set_phase(&mut self, phase: FailurePhase) {
+        self.phase = phase;
+    }
+
+    pub fn phase(&self) -> FailurePhase {
+        self.phase
+    }
+
+    /// Handle the failure of `rank` per §6.2 and return what the survivors
+    /// must absorb. Round-robin across surviving ranks, smallest-queue first
+    /// (keeps the post-failure load within ±1 micro-batch).
+    pub fn fail_rank(&mut self, rank: usize) -> Redistribution {
+        assert!(self.alive[rank], "rank {rank} already failed");
+        self.alive[rank] = false;
+
+        let survivors = self.alive_ranks();
+        if survivors.is_empty() {
+            // nothing to redistribute to; iteration is lost (caller restarts
+            // from checkpoint)
+            self.assignment[rank].clear();
+            self.done[rank].clear();
+            return Redistribution { extra: Vec::new(), nothing_lost: false };
+        }
+
+        // Scenario #2 with this rank's gradients already reduced: its work is
+        // already in the global sum — omit the worker, recompute nothing.
+        if self.phase == FailurePhase::AfterAllReduce {
+            self.assignment[rank].clear();
+            self.done[rank].clear();
+            return Redistribution { extra: Vec::new(), nothing_lost: true };
+        }
+
+        // Scenario #1 (and #2 with unreduced gradients): the dead rank's
+        // accumulated gradient sum is gone — every micro-batch it owned must
+        // be recomputed elsewhere (Eq. 7's redistributed terms).
+        let lost: Vec<usize> = std::mem::take(&mut self.assignment[rank]);
+        self.done[rank].clear();
+
+        // order survivors by current queue length for balance
+        let mut order = survivors.clone();
+        order.sort_by_key(|&r| self.assignment[r].len());
+        let mut extra: Vec<(usize, Vec<usize>)> = order.iter().map(|&r| (r, Vec::new())).collect();
+        for (i, mb) in lost.into_iter().enumerate() {
+            let slot = i % extra.len();
+            extra[slot].1.push(mb);
+        }
+        for (r, mbs) in &extra {
+            self.assignment[*r].extend(mbs.iter().copied());
+        }
+        extra.retain(|(_, mbs)| !mbs.is_empty());
+        Redistribution { extra, nothing_lost: false }
+    }
+
+    /// Invariant check: every micro-batch is owned by exactly one live rank
+    /// (used by tests and the property suite).
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let mut seen = BTreeSet::new();
+        for r in 0..self.ranks() {
+            if !self.alive[r] && !self.assignment[r].is_empty() {
+                return Err(format!("dead rank {r} still owns micro-batches"));
+            }
+            for &mb in &self.assignment[r] {
+                if !seen.insert(mb) {
+                    return Err(format!("micro-batch {mb} assigned twice"));
+                }
+            }
+        }
+        let alive_any = self.alive.iter().any(|&a| a);
+        if alive_any && seen.len() != self.n_micro {
+            return Err(format!("{} of {} micro-batches owned", seen.len(), self.n_micro));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Nearest-principle state migration (§6.3)
+// ---------------------------------------------------------------------------
+
+/// Source a joining/restarted worker pulls training state from, nearest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StateSource {
+    /// A healthy DP replica already holds the full state (fastest).
+    DpReplica,
+    /// GEMINI-style in-memory checkpoint on a peer node.
+    InMemoryCheckpoint,
+    /// Remote persistent storage (slowest; paper: 20 GB/s shared).
+    RemoteCheckpoint,
+}
+
+/// Pick the nearest available source (§6.3 decision chain).
+pub fn choose_source(healthy_replica: bool, inmem_ckpt: bool) -> StateSource {
+    if healthy_replica {
+        StateSource::DpReplica
+    } else if inmem_ckpt {
+        StateSource::InMemoryCheckpoint
+    } else {
+        StateSource::RemoteCheckpoint
+    }
+}
+
+/// Estimated seconds to materialize `state_bytes` from `source`.
+///
+/// Replica/in-memory pulls ride the training interconnect; remote rides the
+/// shared checkpoint store. Concurrent pulls share bandwidth (`pullers`),
+/// which is why Unicron's simultaneous-replication trick (§6.3) still scales.
+pub fn migration_time_s(
+    source: StateSource,
+    state_bytes: u64,
+    cluster: &crate::config::ClusterSpec,
+    pullers: u32,
+) -> f64 {
+    let gb = state_bytes as f64 / 1e9;
+    let pullers = pullers.max(1) as f64;
+    match source {
+        // peer-to-peer over NICs; each pair gets the node NIC share
+        StateSource::DpReplica => gb / cluster.inter_bw_gbs,
+        // in-memory checkpoint also peer-to-peer, plus a small lookup cost
+        StateSource::InMemoryCheckpoint => 1.0 + gb / cluster.inter_bw_gbs,
+        // remote storage is shared by all pullers
+        StateSource::RemoteCheckpoint => gb * pullers / cluster.remote_ckpt_bw_gbs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    #[test]
+    fn initial_split_is_balanced_and_total() {
+        let t = IterationTracker::new(8, 4);
+        for r in 0..4 {
+            assert_eq!(t.assignment(r).len(), 2);
+        }
+        t.check_conservation().unwrap();
+        // uneven split: 10 over 4 => 3,2,3,2 or similar with total 10
+        let t = IterationTracker::new(10, 4);
+        let total: usize = (0..4).map(|r| t.assignment(r).len()).sum();
+        assert_eq!(total, 10);
+        let max = (0..4).map(|r| t.assignment(r).len()).max().unwrap();
+        let min = (0..4).map(|r| t.assignment(r).len()).min().unwrap();
+        assert!(max - min <= 1);
+        t.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn scenario1_redistributes_whole_share() {
+        // Eq. 7: k' = k + k/(DP-1) after one failure
+        let mut t = IterationTracker::new(8, 4); // k = 2
+        t.mark_done(1, t.assignment(1)[0]); // progress on the failing rank is lost
+        let red = t.fail_rank(1);
+        assert!(!red.nothing_lost);
+        let redistributed: usize = red.extra.iter().map(|(_, m)| m.len()).sum();
+        assert_eq!(redistributed, 2, "whole share recomputed");
+        t.check_conservation().unwrap();
+        // k' = 2 + 2/3 -> ranks get ceil/floor within 1
+        for &r in &t.alive_ranks() {
+            assert!(t.assignment(r).len() >= 2 && t.assignment(r).len() <= 3);
+        }
+    }
+
+    #[test]
+    fn scenario2_after_reduce_omits_worker() {
+        let mut t = IterationTracker::new(8, 4);
+        for r in 0..4 {
+            for mb in t.assignment(r).to_vec() {
+                t.mark_done(r, mb);
+            }
+        }
+        t.set_phase(FailurePhase::AfterAllReduce);
+        let red = t.fail_rank(2);
+        assert!(red.nothing_lost);
+        assert!(red.extra.is_empty());
+    }
+
+    #[test]
+    fn scenario2_during_reduce_recomputes() {
+        let mut t = IterationTracker::new(6, 3);
+        t.set_phase(FailurePhase::DuringAllReduce);
+        let red = t.fail_rank(0);
+        assert!(!red.nothing_lost);
+        assert_eq!(red.extra.iter().map(|(_, m)| m.len()).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn cascading_failures_conserve_microbatches() {
+        let mut t = IterationTracker::new(12, 4);
+        t.fail_rank(3);
+        t.check_conservation().unwrap();
+        t.fail_rank(0);
+        t.check_conservation().unwrap();
+        t.fail_rank(1);
+        t.check_conservation().unwrap();
+        // last rank owns everything
+        assert_eq!(t.assignment(2).len(), 12);
+        // all ranks dead: iteration abandoned
+        let red = t.fail_rank(2);
+        assert!(red.extra.is_empty());
+    }
+
+    #[test]
+    fn completion_tracking() {
+        let mut t = IterationTracker::new(4, 2);
+        assert!(!t.compute_complete());
+        for r in 0..2 {
+            for mb in t.assignment(r).to_vec() {
+                t.mark_done(r, mb);
+            }
+        }
+        assert!(t.compute_complete());
+        assert!(t.remaining(0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "not assigned")]
+    fn mark_done_validates_ownership() {
+        let mut t = IterationTracker::new(4, 2);
+        let other = t.assignment(1)[0];
+        t.mark_done(0, other);
+    }
+
+    #[test]
+    fn nearest_principle_ordering() {
+        assert_eq!(choose_source(true, true), StateSource::DpReplica);
+        assert_eq!(choose_source(false, true), StateSource::InMemoryCheckpoint);
+        assert_eq!(choose_source(false, false), StateSource::RemoteCheckpoint);
+    }
+
+    #[test]
+    fn migration_times_ordered_by_distance() {
+        let c = ClusterSpec::default();
+        let bytes = 100e9 as u64; // 100 GB of optimizer state
+        let t_rep = migration_time_s(StateSource::DpReplica, bytes, &c, 1);
+        let t_mem = migration_time_s(StateSource::InMemoryCheckpoint, bytes, &c, 1);
+        let t_rem = migration_time_s(StateSource::RemoteCheckpoint, bytes, &c, 1);
+        assert!(t_rep < t_mem && t_mem < t_rem, "{t_rep} {t_mem} {t_rem}");
+        // concurrent pullers hurt remote the most
+        assert!(migration_time_s(StateSource::RemoteCheckpoint, bytes, &c, 8) > 7.9 * t_rem);
+    }
+}

@@ -1,0 +1,237 @@
+//! Small shared utilities: logging, clocks, duration/size formatting.
+//!
+//! The [`Clock`] abstraction lets the same coordinator/detector code run
+//! against wall-clock time (live mode) and simulated time (the discrete-event
+//! simulator and fast tests).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Log verbosity, settable once at startup (default: Info).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LOG_LEVEL: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the global log level.
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// True if `level` messages are currently emitted.
+pub fn log_enabled(level: Level) -> bool {
+    level as usize >= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Timestamped stderr logger used by the `logln!` macro.
+pub fn log_line(level: Level, module: &str, msg: &str) {
+    if !log_enabled(level) {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{:>10.3} {} {}] {}", t.as_secs_f64() % 100_000.0, tag, module, msg);
+}
+
+/// `logln!(Level::Info, "module", "formatted {}", arg)`
+#[macro_export]
+macro_rules! logln {
+    ($level:expr, $module:expr, $($arg:tt)*) => {
+        $crate::util::log_line($level, $module, &format!($($arg)*))
+    };
+}
+
+/// Monotonic seconds source; real or simulated.
+pub trait Clock: Send + Sync {
+    /// Seconds since an arbitrary epoch (monotonic).
+    fn now(&self) -> f64;
+    /// Sleep (live) or no-op (simulated; the sim engine advances time itself).
+    fn sleep(&self, seconds: f64);
+}
+
+/// Wall-clock backed [`Clock`].
+pub struct RealClock {
+    origin: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        Self { origin: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+    fn sleep(&self, seconds: f64) {
+        if seconds > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(seconds));
+        }
+    }
+}
+
+/// Manually-advanced [`Clock`] (microsecond resolution) for tests/simulation.
+pub struct SimClock {
+    micros: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { micros: AtomicU64::new(0) })
+    }
+    /// Advance simulated time by `seconds`.
+    pub fn advance(&self, seconds: f64) {
+        self.micros.fetch_add((seconds * 1e6) as u64, Ordering::SeqCst);
+    }
+    /// Jump to an absolute simulated time (must not go backwards).
+    pub fn set(&self, seconds: f64) {
+        let target = (seconds * 1e6) as u64;
+        let prev = self.micros.swap(target, Ordering::SeqCst);
+        debug_assert!(target >= prev, "SimClock moved backwards");
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        self.micros.load(Ordering::SeqCst) as f64 / 1e6
+    }
+    fn sleep(&self, _seconds: f64) {}
+}
+
+/// `3661.0 -> "1h01m01s"`, `0.25 -> "250ms"` — used in reports and figures.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 0.0 {
+        return format!("-{}", fmt_duration(-seconds));
+    }
+    if seconds < 1.0 {
+        return format!("{:.0}ms", seconds * 1e3);
+    }
+    if seconds < 60.0 {
+        return format!("{:.1}s", seconds);
+    }
+    let total = seconds.round() as u64;
+    let (h, m, s) = (total / 3600, (total % 3600) / 60, total % 60);
+    if h > 0 {
+        format!("{}h{:02}m{:02}s", h, m, s)
+    } else {
+        format!("{}m{:02}s", m, s)
+    }
+}
+
+/// `1234567.0 -> "1.23M"` with SI suffixes; used for FLOP/s reporting.
+pub fn fmt_si(x: f64) -> String {
+    let ax = x.abs();
+    let (scale, suffix) = if ax >= 1e15 {
+        (1e15, "P")
+    } else if ax >= 1e12 {
+        (1e12, "T")
+    } else if ax >= 1e9 {
+        (1e9, "G")
+    } else if ax >= 1e6 {
+        (1e6, "M")
+    } else if ax >= 1e3 {
+        (1e3, "K")
+    } else {
+        (1.0, "")
+    };
+    format!("{:.2}{}", x / scale, suffix)
+}
+
+/// `1536 -> "1.5 KiB"`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.set(10.0);
+        assert!((c.now() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.25), "250ms");
+        assert_eq!(fmt_duration(5.0), "5.0s");
+        assert_eq!(fmt_duration(65.0), "1m05s");
+        assert_eq!(fmt_duration(3661.0), "1h01m01s");
+        assert_eq!(fmt_duration(-5.0), "-5.0s");
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(1_234.0), "1.23K");
+        assert_eq!(fmt_si(2.5e12), "2.50T");
+        assert_eq!(fmt_si(12.0), "12.00");
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(10), "10 B");
+        assert_eq!(fmt_bytes(1536), "1.5 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
+    fn log_level_gating() {
+        set_log_level(Level::Warn);
+        assert!(!log_enabled(Level::Info));
+        assert!(log_enabled(Level::Error));
+        set_log_level(Level::Info);
+    }
+}

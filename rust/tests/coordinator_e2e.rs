@@ -1,0 +1,149 @@
+//! End-to-end detection + handling over TCP: live coordinator, live agents,
+//! injected Table 1 failures — the four §4.1 detection paths land as the
+//! right coordinator events and the §4.2 workflow emits the right actions.
+//! (This is the live half of Table 2; the bench measures the latencies.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unicron::agent::{Agent, ProcessHandle};
+use unicron::config::UnicronConfig;
+use unicron::coordinator::live::CoordinatorLive;
+use unicron::coordinator::{Action, CoordEvent};
+use unicron::failure::ErrorKind;
+use unicron::util::{Clock, RealClock};
+
+fn fast_cfg() -> UnicronConfig {
+    UnicronConfig {
+        heartbeat_period_s: 0.05,
+        lease_ttl_s: 0.4,
+        ..Default::default()
+    }
+}
+
+fn start_coordinator(cfg: &UnicronConfig) -> (CoordinatorLive, Arc<dyn Clock>) {
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let live =
+        CoordinatorLive::start(cfg.clone(), 16, 8, clock.clone(), "127.0.0.1:0").unwrap();
+    (live, clock)
+}
+
+#[test]
+fn process_kill_is_detected_and_restart_instructed() {
+    let cfg = fast_cfg();
+    let (live, clock) = start_coordinator(&cfg);
+    let proc0 = ProcessHandle::new(0);
+    let agent =
+        Agent::start(1, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
+
+    proc0.kill();
+    let det = live
+        .wait_for(
+            |d| {
+                matches!(d.event, CoordEvent::ErrorReport { node: 1, kind: ErrorKind::ExitedAbnormally, .. })
+            },
+            Duration::from_secs(5),
+        )
+        .expect("process death must be detected");
+    // SEV2 -> restart instruction
+    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructRestart { node: 1, .. })));
+    // the instruction lands in the command namespace for the agent
+    std::thread::sleep(Duration::from_millis(50));
+    let cmds = live.store.get_prefix("/cmd/1/");
+    assert!(!cmds.is_empty());
+    assert!(cmds[0].1.contains("restart"));
+    agent.stop();
+}
+
+#[test]
+fn exception_classified_by_severity() {
+    let cfg = fast_cfg();
+    let (live, clock) = start_coordinator(&cfg);
+    let proc0 = ProcessHandle::new(2);
+    let agent =
+        Agent::start(4, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
+
+    // SEV1 exception: ECC -> isolate + replan
+    proc0.throw("GPU 2: double-bit ECC error");
+    let det = live
+        .wait_for(
+            |d| matches!(d.event, CoordEvent::ErrorReport { node: 4, kind: ErrorKind::EccError, .. }),
+            Duration::from_secs(5),
+        )
+        .expect("ECC must be detected");
+    assert!(det.actions.iter().any(|a| matches!(a, Action::IsolateNode { node: 4 })));
+    assert!(det.actions.iter().any(|a| matches!(a, Action::AlertOps { .. })));
+
+    // SEV3 exception: connection reset -> reattempt in place
+    proc0.throw("recv: Connection reset by peer");
+    let det = live
+        .wait_for(
+            |d| {
+                matches!(d.event,
+                    CoordEvent::ErrorReport { node: 4, kind: ErrorKind::ConnectionRefused, .. })
+            },
+            Duration::from_secs(5),
+        )
+        .expect("SEV3 must be detected");
+    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructReattempt { node: 4, .. })));
+    agent.stop();
+}
+
+#[test]
+fn node_crash_detected_via_lease_expiry() {
+    let cfg = fast_cfg();
+    let (live, clock) = start_coordinator(&cfg);
+    let agent = Agent::start(9, 8, live.addr, &cfg, vec![], clock.clone()).unwrap();
+
+    // joined first
+    live.wait_for(|d| matches!(d.event, CoordEvent::NodeJoined { node: 9 }), Duration::from_secs(5))
+        .expect("join must be seen");
+    // crash: heartbeats stop without lease revoke
+    agent.crash();
+    let det = live
+        .wait_for(|d| matches!(d.event, CoordEvent::NodeLost { node: 9 }), Duration::from_secs(5))
+        .expect("lease expiry must surface as NodeLost");
+    assert!(det.actions.iter().any(|a| matches!(a, Action::IsolateNode { node: 9 })));
+}
+
+#[test]
+fn clean_agent_stop_is_not_a_failure() {
+    let cfg = fast_cfg();
+    let (live, clock) = start_coordinator(&cfg);
+    let agent = Agent::start(5, 8, live.addr, &cfg, vec![], clock.clone()).unwrap();
+    live.wait_for(|d| matches!(d.event, CoordEvent::NodeJoined { node: 5 }), Duration::from_secs(5))
+        .expect("join");
+    agent.stop(); // revokes the lease
+    std::thread::sleep(Duration::from_millis(600));
+    assert!(
+        !live.detections().iter().any(|d| matches!(d.event, CoordEvent::NodeLost { node: 5 })),
+        "clean deregistration must not be treated as SEV1"
+    );
+}
+
+#[test]
+fn stall_detected_by_statistical_monitor() {
+    let cfg = fast_cfg();
+    let (live, clock) = start_coordinator(&cfg);
+    let proc0 = ProcessHandle::new(1);
+    let agent =
+        Agent::start(6, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
+
+    // establish a baseline of fast iterations (~30 ms each)
+    for _ in 0..8 {
+        let t0 = clock.now();
+        proc0.begin_iteration(t0);
+        std::thread::sleep(Duration::from_millis(30));
+        proc0.end_iteration(clock.now());
+    }
+    // now hang: begin an iteration and never finish it
+    proc0.begin_iteration(clock.now());
+    let det = live.wait_for(
+        |d| matches!(d.event, CoordEvent::ErrorReport { node: 6, kind: ErrorKind::TaskHang, .. }),
+        Duration::from_secs(10),
+    );
+    let det = det.expect("stall must trip the 3x-average monitor");
+    // TaskHang is SEV2 -> restart
+    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructRestart { node: 6, .. })));
+    agent.stop();
+}

@@ -1,0 +1,143 @@
+//! Cross-module scenario tests: planner + perfmodel + coordinator +
+//! checkpoint working together on paper-shaped scenarios.
+
+use unicron::checkpoint::{CheckpointManager, InMemoryTier, RestoredFrom};
+use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
+use unicron::coordinator::{Action, CoordEvent, Coordinator};
+use unicron::failure::ErrorKind;
+use unicron::perfmodel::throughput_table;
+use unicron::planner::{PlanLookup, PlanTask};
+use unicron::runtime::TrainState;
+
+fn real_plan_tasks(case: u32, n: u32) -> Vec<PlanTask> {
+    let cluster = ClusterSpec::default();
+    table3_case(case)
+        .into_iter()
+        .map(|spec| {
+            let model = ModelSpec::gpt3(&spec.model).unwrap();
+            PlanTask {
+                throughput: throughput_table(&model, &cluster, n),
+                spec,
+                current: 0,
+                fault: false,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn coordinator_drives_real_planner_through_failure_storm() {
+    // Case 5 on 128 GPUs; three SEV1s then two joins. The coordinator must
+    // keep the assignment within capacity at every step, with WAF recovering
+    // after joins.
+    let mut coord = Coordinator::new(UnicronConfig::default(), 128, 8);
+    for t in real_plan_tasks(5, 128) {
+        coord.add_task(t);
+    }
+    coord.handle(CoordEvent::TaskLaunched { task: 0 });
+    let healthy = coord.current_waf();
+    assert!(healthy > 0.0);
+
+    for node in [3, 7, 12] {
+        let actions = coord.handle(CoordEvent::NodeLost { node });
+        let total: u32 = coord.tasks().map(|t| t.current).sum();
+        assert!(total <= coord.available_workers, "over-committed after losing node {node}");
+        assert!(actions.iter().any(|a| matches!(a, Action::ApplyPlan { .. })));
+    }
+    assert_eq!(coord.available_workers, 104);
+    let degraded = coord.current_waf();
+    assert!(degraded < healthy);
+
+    for node in [3, 7] {
+        coord.handle(CoordEvent::NodeJoined { node });
+    }
+    assert_eq!(coord.available_workers, 120);
+    assert!(coord.current_waf() > degraded);
+}
+
+#[test]
+fn lookup_table_covers_failure_and_join_scenarios() {
+    let tasks = real_plan_tasks(2, 64);
+    let cfg = UnicronConfig::default();
+    let lut = PlanLookup::precompute(&tasks, 64, &cfg);
+    // one-step scenarios: n-8 (node loss), n+8 (join) — O(1) retrieval
+    for n in [40u32, 48, 56, 64] {
+        let plan = lut.plan_for(n);
+        assert!(plan.workers_used <= n);
+        assert_eq!(plan.assignment.len(), tasks.len());
+    }
+    // The *objective* is not monotone in n (D_running(n) = MTBF/n shrinks as
+    // the pool grows — Eq. 3 trades WAF against expected run length), but the
+    // lookup table must agree with a fresh solve at every size.
+    for n in (0..=64u32).step_by(8) {
+        let fresh = unicron::planner::solve(&tasks, n, &cfg);
+        assert_eq!(lut.plan_for(n).assignment, fresh.assignment, "n={n}");
+        assert!((lut.plan_for(n).objective - fresh.objective).abs() <= 1e-9 * fresh.objective.abs().max(1.0));
+    }
+}
+
+#[test]
+fn severity_escalation_chain_ends_in_reconfiguration() {
+    let mut coord = Coordinator::new(UnicronConfig::default(), 32, 8);
+    for t in real_plan_tasks(1, 32) {
+        coord.add_task(t);
+    }
+    // SEV3 storm exhausts reattempts, escalates to restart, restart fails,
+    // node is isolated and the cluster replans — the full Fig. 7 path.
+    let mut saw_restart = false;
+    let mut saw_isolate = false;
+    for _ in 0..10 {
+        let actions =
+            coord.handle(CoordEvent::ErrorReport { node: 2, task: 0, kind: ErrorKind::NcclTimeout });
+        if actions.iter().any(|a| matches!(a, Action::InstructRestart { .. })) {
+            saw_restart = true;
+            let a2 = coord.handle(CoordEvent::RestartResult { node: 2, task: 0, ok: false });
+            if a2.iter().any(|a| matches!(a, Action::IsolateNode { .. })) {
+                saw_isolate = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_restart && saw_isolate, "escalation chain incomplete");
+    assert_eq!(coord.available_workers, 24);
+}
+
+#[test]
+fn gemini_hierarchy_survives_peer_loss_then_remote_fallback() {
+    let tier = InMemoryTier::new();
+    let dir = std::env::temp_dir().join(format!("unicron-int-{}", std::process::id()));
+    let mgr = CheckpointManager::new("task-7b", tier.clone(), &dir).unwrap();
+
+    let state = TrainState {
+        params: vec![vec![0.5; 1024]],
+        m: vec![vec![0.0; 1024]],
+        v: vec![vec![0.0; 1024]],
+        step: 123,
+    };
+    // GEMINI: replicate in memory on two peers + async remote
+    mgr.save_inmem(&state, &["node1", "node2"]);
+    mgr.save_remote(&state).unwrap();
+
+    // lose one peer: still in-memory
+    tier.drop_peer("node1");
+    assert_eq!(mgr.restore().unwrap().1, RestoredFrom::InMemory);
+    // lose both: remote fallback, content identical
+    tier.drop_peer("node2");
+    let (restored, from) = mgr.restore().unwrap();
+    assert_eq!(from, RestoredFrom::Remote);
+    assert_eq!(restored, state);
+}
+
+#[test]
+fn fig4_sweep_consistent_with_planner_tables() {
+    // throughput_table (planner input) must agree point-wise with
+    // best_config (Fig. 4 driver) — they are the same search.
+    let cluster = ClusterSpec::default();
+    let model = ModelSpec::gpt3("gpt3-13b").unwrap();
+    let table = throughput_table(&model, &cluster, 64);
+    for x in [0u32, 8, 13, 16, 32, 64] {
+        let direct = unicron::perfmodel::best_config(&model, &cluster, x)
+            .map_or(0.0, |e| e.achieved_flops);
+        assert_eq!(table[x as usize], direct, "x={x}");
+    }
+}

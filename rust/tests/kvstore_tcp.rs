@@ -1,0 +1,100 @@
+//! Integration: the etcd-like store over real TCP — puts, prefix scans,
+//! leases kept alive over the wire, and watch streams (the transport the
+//! agent↔coordinator status monitor rides on).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unicron::kvstore::net::{serve, KvClient};
+use unicron::kvstore::{Event, Store};
+use unicron::util::{Clock, RealClock};
+
+fn start() -> (Store, std::net::SocketAddr, unicron::rpc::Server) {
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let store = Store::new(clock);
+    let server = serve(store.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+    (store, addr, server)
+}
+
+#[test]
+fn put_get_delete_over_wire() {
+    let (_store, addr, _srv) = start();
+    let mut kv = KvClient::connect(addr).unwrap();
+    let rev1 = kv.put("/a", "1", None).unwrap();
+    let rev2 = kv.put("/a", "2", None).unwrap();
+    assert!(rev2 > rev1);
+    assert_eq!(kv.get("/a").unwrap(), Some("2".into()));
+    assert_eq!(kv.get("/missing").unwrap(), None);
+    assert!(kv.delete("/a").unwrap());
+    assert!(!kv.delete("/a").unwrap());
+}
+
+#[test]
+fn prefix_scan_over_wire() {
+    let (_store, addr, _srv) = start();
+    let mut kv = KvClient::connect(addr).unwrap();
+    kv.put("/status/1/0", "x", None).unwrap();
+    kv.put("/status/2/0", "y", None).unwrap();
+    kv.put("/nodes/1", "z", None).unwrap();
+    let kvs = kv.get_prefix("/status/").unwrap();
+    assert_eq!(kvs.len(), 2);
+    assert_eq!(kvs[0].0, "/status/1/0");
+}
+
+#[test]
+fn lease_expiry_detected_server_side() {
+    let (store, addr, _srv) = start();
+    let mut kv = KvClient::connect(addr).unwrap();
+    let lease = kv.lease_grant(0.3).unwrap();
+    kv.put("/nodes/7", "alive", Some(lease)).unwrap();
+    // keep alive a few rounds
+    for _ in 0..3 {
+        std::thread::sleep(Duration::from_millis(100));
+        kv.keepalive(lease).unwrap();
+        store.tick();
+    }
+    assert_eq!(kv.get("/nodes/7").unwrap(), Some("alive".into()));
+    // stop heartbeating: expires within TTL + one tick
+    std::thread::sleep(Duration::from_millis(500));
+    store.tick();
+    assert_eq!(kv.get("/nodes/7").unwrap(), None);
+    assert!(kv.keepalive(lease).is_err());
+}
+
+#[test]
+fn watch_stream_over_wire() {
+    let (store, addr, _srv) = start();
+    let watcher = KvClient::connect(addr).unwrap();
+    let mut stream = watcher.watch("/status/").unwrap();
+
+    let mut kv = KvClient::connect(addr).unwrap();
+    kv.put("/status/3/0", "report", None).unwrap();
+    kv.put("/other", "ignored", None).unwrap();
+    kv.delete("/status/3/0").unwrap();
+    store.tick();
+
+    let ev1 = stream.next_event().unwrap();
+    assert!(matches!(ev1, Event::Put { ref key, ref value, .. }
+                     if key == "/status/3/0" && value == "report"));
+    let ev2 = stream.next_event().unwrap();
+    assert!(matches!(ev2, Event::Delete { ref key, expired: false, .. } if key == "/status/3/0"));
+}
+
+#[test]
+fn many_concurrent_wire_clients() {
+    let (_store, addr, _srv) = start();
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        handles.push(std::thread::spawn(move || {
+            let mut kv = KvClient::connect(addr).unwrap();
+            for i in 0..50 {
+                kv.put(&format!("/c{t}/k{i}"), &format!("{i}"), None).unwrap();
+            }
+            assert_eq!(kv.get_prefix(&format!("/c{t}/")).unwrap().len(), 50);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,239 @@
+//! Property-based tests (mini-proptest) on the coordinator-side invariants
+//! DESIGN.md §8 lists: DP-planner optimality vs brute force, worker
+//! conservation, micro-batch conservation under arbitrary failure sequences,
+//! perfmodel feasibility, severity totality, JSON round-trips.
+
+use unicron::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
+use unicron::planner::{solve, solve_brute, PlanTask};
+use unicron::proptest::{run, Config, Prop};
+use rand_core::RngCore as _;
+use unicron::rng::{Rand, Xoshiro256};
+use unicron::ser::Value;
+use unicron::transition::IterationTracker;
+
+/// Random small planner instance: up to 4 tasks, up to 10 workers.
+fn gen_planner(rng: &mut Xoshiro256, size: usize) -> (Vec<PlanTask>, u32) {
+    let m = 1 + rng.below(4.min(size as u64 + 1)) as usize;
+    let n = 1 + rng.below(10) as u32;
+    let tasks = (0..m)
+        .map(|i| {
+            let min = rng.below(4) as u32;
+            let scale = rng.uniform(1.0, 20.0);
+            let concavity = rng.uniform(0.5, 1.0);
+            let current = rng.below(n as u64 + 1) as u32;
+            let fault = rng.f64() < 0.3;
+            let weight = rng.uniform(0.5, 2.0);
+            let throughput = (0..=n)
+                .map(|x| if x >= min { scale * (x as f64).powf(concavity) } else { 0.0 })
+                .collect();
+            PlanTask {
+                spec: TaskSpec::new(i as u32, "synthetic", weight, min),
+                throughput,
+                current,
+                fault,
+            }
+        })
+        .collect();
+    (tasks, n)
+}
+
+#[test]
+fn planner_dp_equals_brute_force() {
+    run(
+        "planner_dp_equals_brute_force",
+        Config { cases: 60, ..Default::default() },
+        gen_planner,
+        |(tasks, n)| {
+            let cfg = UnicronConfig { d_transition_s: 120.0, mtbf_per_gpu_s: 5e5, ..Default::default() };
+            let dp = solve(tasks, *n, &cfg);
+            let bf = solve_brute(tasks, *n, &cfg);
+            let tol = 1e-6 * bf.objective.abs().max(1.0);
+            Prop::check(
+                (dp.objective - bf.objective).abs() <= tol,
+                || format!("dp {} != brute {}", dp.objective, bf.objective),
+            )
+        },
+    );
+}
+
+#[test]
+fn planner_respects_worker_budget_and_minimums() {
+    run(
+        "planner_budget",
+        Config { cases: 100, ..Default::default() },
+        gen_planner,
+        |(tasks, n)| {
+            let cfg = UnicronConfig::default();
+            let plan = solve(tasks, *n, &cfg);
+            if plan.assignment.iter().sum::<u32>() > *n {
+                return Prop::Fail(format!("assignment {:?} exceeds {n}", plan.assignment));
+            }
+            // no assignment strictly between 0 and min_workers should be
+            // *beneficial*; the solver may still emit it only if WAF = 0 and
+            // it is harmless — we require it simply never hurts the target:
+            for (t, &x) in tasks.iter().zip(&plan.assignment) {
+                if x > 0 && x < t.spec.min_workers && t.waf(x) != 0.0 {
+                    return Prop::Fail(format!("waf below minimum for {x} workers"));
+                }
+            }
+            Prop::Pass
+        },
+    );
+}
+
+/// Random failure schedule for the micro-batch tracker.
+fn gen_tracker(rng: &mut Xoshiro256, size: usize) -> (usize, usize, Vec<usize>, u64) {
+    let ranks = 2 + rng.below(6) as usize;
+    let micro = ranks * (1 + rng.below(1 + size as u64 / 4) as usize);
+    let kills = rng.below(ranks as u64) as usize;
+    let order: Vec<usize> = {
+        let mut v: Vec<usize> = (0..ranks).collect();
+        rng.shuffle(&mut v);
+        v.truncate(kills);
+        v
+    };
+    (micro, ranks, order, rng.next_u64())
+}
+
+#[test]
+fn microbatch_conservation_under_any_failure_sequence() {
+    run(
+        "microbatch_conservation",
+        Config { cases: 120, ..Default::default() },
+        gen_tracker,
+        |(micro, ranks, kills, seed)| {
+            let mut t = IterationTracker::new(*micro, *ranks);
+            let mut rng = Xoshiro256::seed_from_u64(*seed);
+            for &victim in kills {
+                // random progress before the kill
+                for r in t.alive_ranks() {
+                    for mb in t.remaining(r) {
+                        if rng.f64() < 0.5 {
+                            t.mark_done(r, mb);
+                        }
+                    }
+                }
+                t.fail_rank(victim);
+                if let Err(e) = t.check_conservation() {
+                    return Prop::Fail(e);
+                }
+            }
+            Prop::Pass
+        },
+    );
+}
+
+#[test]
+fn redistribution_balances_within_one() {
+    run(
+        "redistribution_balance",
+        Config { cases: 80, ..Default::default() },
+        |rng: &mut Xoshiro256, _size| {
+            let ranks = 3 + rng.below(6) as usize;
+            let per = 1 + rng.below(4) as usize;
+            (ranks, ranks * per, rng.below(ranks as u64) as usize)
+        },
+        |(ranks, micro, victim)| {
+            let mut t = IterationTracker::new(*micro, *ranks);
+            t.fail_rank(*victim);
+            let lens: Vec<usize> =
+                t.alive_ranks().iter().map(|&r| t.assignment(r).len()).collect();
+            let max = *lens.iter().max().unwrap();
+            let min = *lens.iter().min().unwrap();
+            Prop::check(max - min <= 1, || format!("unbalanced after failure: {lens:?}"))
+        },
+    );
+}
+
+#[test]
+fn perfmodel_feasible_configs_fit_memory() {
+    run(
+        "perfmodel_memory",
+        Config { cases: 60, ..Default::default() },
+        |rng: &mut Xoshiro256, _| {
+            let zoo = ModelSpec::zoo();
+            let name = *rng.choose(&zoo);
+            let gpus = 1 + rng.below(128) as u32;
+            (name, gpus)
+        },
+        |(name, gpus)| {
+            let cluster = ClusterSpec::default();
+            let model = ModelSpec::gpt3(name).unwrap();
+            match unicron::perfmodel::best_config(&model, &cluster, *gpus) {
+                None => Prop::Pass, // infeasible is allowed
+                Some(e) => {
+                    if e.memory_gib > cluster.hbm_gib {
+                        return Prop::Fail(format!("{name}@{gpus}: {} GiB > HBM", e.memory_gib));
+                    }
+                    if e.config.gpus() != *gpus {
+                        return Prop::Fail(format!("config uses {} of {gpus}", e.config.gpus()));
+                    }
+                    if !(e.flops_ratio > 0.0 && e.flops_ratio < 1.0) {
+                        return Prop::Fail(format!("ratio {} out of (0,1)", e.flops_ratio));
+                    }
+                    Prop::Pass
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    fn gen_value(rng: &mut Xoshiro256, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.f64() < 0.5),
+            2 => Value::Num((rng.below(2_000_001) as f64 - 1e6) / 64.0),
+            3 => {
+                let len = rng.below(8) as usize;
+                Value::Str((0..len).map(|_| *rng.choose(&['a', 'é', '"', '\\', '\n', '😀'])).collect())
+            }
+            4 => Value::Arr((0..rng.below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                Value::Obj(m)
+            }
+        }
+    }
+    run(
+        "json_roundtrip",
+        Config { cases: 200, ..Default::default() },
+        |rng: &mut Xoshiro256, _| gen_value(rng, 3),
+        |v| {
+            let enc = v.encode();
+            match Value::parse(&enc) {
+                Ok(back) if back == *v => Prop::Pass,
+                Ok(back) => Prop::Fail(format!("{enc} reparsed as {}", back.encode())),
+                Err(e) => Prop::Fail(format!("{enc}: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn trace_generation_invariants() {
+    run(
+        "trace_invariants",
+        Config { cases: 40, ..Default::default() },
+        |rng: &mut Xoshiro256, _| rng.next_u64(),
+        |&seed| {
+            let trace =
+                unicron::failure::Trace::generate(unicron::failure::TraceConfig::trace_b(), seed);
+            let mut prev = 0.0;
+            for e in &trace.events {
+                if e.at_s < prev || e.at_s >= trace.config.duration_s {
+                    return Prop::Fail(format!("event at {} out of order/bounds", e.at_s));
+                }
+                if e.node >= trace.config.n_nodes {
+                    return Prop::Fail(format!("node {} out of range", e.node));
+                }
+                prev = e.at_s;
+            }
+            Prop::Pass
+        },
+    );
+}
