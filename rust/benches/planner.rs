@@ -5,7 +5,7 @@
 use unicron::bench::Bencher;
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
 use unicron::perfmodel::throughput_table;
-use unicron::planner::{solve, PlanLookup, PlanTask};
+use unicron::planner::{solve, PlanLookup, PlanTask, ScenarioLookup};
 
 fn tasks(case: u32, n: u32) -> Vec<PlanTask> {
     let cluster = ClusterSpec::default();
@@ -75,4 +75,52 @@ fn main() {
         (solve_t / disp_t) as u64
     );
     assert!(disp_t * 50.0 < solve_t, "lookup should be far cheaper than solving");
+
+    // SEV1 replan hot path (§5.2, coordinator-shaped): 4 tasks / 64 workers.
+    // "solve" is what a cold coordinator does per SEV1 (fault-flag + DP);
+    // "lookup" is the warm path — fault-aware table retrieval + plan commit
+    // clone. Acceptance: lookup ≥ 5× faster.
+    let cluster = ClusterSpec::default();
+    let tasks4: Vec<PlanTask> = table3_case(4)
+        .into_iter()
+        .take(4)
+        .map(|spec| {
+            let model = ModelSpec::gpt3(&spec.model).unwrap();
+            PlanTask {
+                throughput: throughput_table(&model, &cluster, 64),
+                spec,
+                current: 16,
+                fault: false,
+            }
+        })
+        .collect();
+    let mut faulted = tasks4.clone();
+    faulted[1].fault = true;
+
+    let mut b3 = Bencher::new("planner").with_samples(3, 30);
+    b3.bench("sev1_replan_via_solve_4tasks_64workers", || {
+        // node lost: 64 -> 56 workers, task 1 faulted
+        let plan = solve(&faulted, 56, &cfg);
+        std::hint::black_box(plan.workers_used);
+    });
+    let replan_table = ScenarioLookup::precompute(&tasks4, 64, &cfg);
+    b3.bench("sev1_replan_via_lookup_4tasks_64workers", || {
+        let plan = replan_table.plan_for(Some(1), 56).clone();
+        std::hint::black_box(plan.workers_used);
+    });
+    let replan_solve =
+        b3.results.iter().find(|(n, _)| n.contains("via_solve")).unwrap().1.median;
+    let replan_lookup =
+        b3.results.iter().find(|(n, _)| n.contains("via_lookup")).unwrap().1.median;
+    let speedup = replan_solve / replan_lookup.max(1e-12);
+    println!(
+        "SEV1 replan (4 tasks, 64 workers): {:.2} µs via lookup vs {:.2} µs via solve \
+         ({speedup:.0}× faster)",
+        replan_lookup * 1e6,
+        replan_solve * 1e6,
+    );
+    assert!(
+        speedup >= 5.0,
+        "precomputed SEV1 replan must be ≥5× faster than per-event solve, got {speedup:.1}×"
+    );
 }

@@ -3,6 +3,11 @@
 //! the coordinator embeds the status monitor (kvstore), agents connect over
 //! the network, and every detection path of Table 2 flows through here.
 //!
+//! Timed work (lease-expiry sweeps) runs on the same
+//! [`crate::engine::EventQueue`] the simulator advances — here it is drained
+//! against wall-clock `now`, there against simulated time, with identical
+//! `(time, seq)` ordering. One scheduling substrate, two drivers.
+//!
 //! Key layout:
 //!   /nodes/<id>            lease-attached registration (node health)
 //!   /status/<id>/<seq>     agent error reports (process/exception/stall)
@@ -17,6 +22,7 @@ use std::time::Duration;
 use super::{Action, CoordEvent, Coordinator};
 use crate::config::UnicronConfig;
 use crate::detect::classify_exception;
+use crate::engine::EventQueue;
 use crate::failure::ErrorKind;
 use crate::kvstore::{net, Event, Store};
 use crate::membership::{membership_event, MembershipEvent, NODES_PREFIX};
@@ -25,6 +31,13 @@ use crate::util::Clock;
 
 pub const STATUS_PREFIX: &str = "/status/";
 pub const CMD_PREFIX: &str = "/cmd/";
+
+/// Timed work the live loop schedules on the shared engine queue.
+#[derive(Debug, Clone, Copy)]
+enum LoopTask {
+    /// Lease-expiry sweep: drives SEV1 `NodeLost` detection (Table 2 case 1).
+    LeaseSweep,
+}
 
 /// Timestamped record of a detected event (Table 2's measurement hook).
 #[derive(Debug, Clone)]
@@ -66,11 +79,24 @@ impl CoordinatorLive {
         let seq2 = Arc::new(AtomicU64::new(0));
         let clock2 = clock.clone();
         let loop_thread = std::thread::Builder::new().name("coord-loop".into()).spawn(move || {
+            // sweep leases at half the heartbeat period (floored at the poll
+            // interval) — frequent enough that expiry detection stays well
+            // inside the lease TTL
+            let sweep_period = (cfg.heartbeat_period_s * 0.5).max(0.005);
             let mut coord = Coordinator::new(cfg, available_workers, gpus_per_node);
             let nodes_rx = store2.watch(NODES_PREFIX);
             let status_rx = store2.watch(STATUS_PREFIX);
+            let mut timers: EventQueue<LoopTask> = EventQueue::new();
+            timers.schedule(clock2.now(), LoopTask::LeaseSweep);
             while !stop2.load(Ordering::Relaxed) {
-                store2.tick(); // lease expiry -> Delete{expired} events
+                for (_, task) in timers.pop_due(clock2.now()) {
+                    match task {
+                        LoopTask::LeaseSweep => {
+                            store2.tick(); // lease expiry -> Delete{expired} events
+                            timers.schedule(clock2.now() + sweep_period, LoopTask::LeaseSweep);
+                        }
+                    }
+                }
                 let mut events: Vec<CoordEvent> = Vec::new();
                 for ev in nodes_rx.try_iter() {
                     match membership_event(&ev) {

@@ -3,11 +3,29 @@
 //! cost-aware reconfiguration through the [`crate::planner`].
 //!
 //! The core is a synchronous, fully-deterministic state machine —
-//! [`Coordinator::handle`] maps one [`CoordEvent`] to a list of [`Action`]s.
-//! The live TCP driver ([`live`]) feeds it from kvstore watches; the
-//! discrete-event simulator feeds it directly. Same code path either way,
-//! which is what makes the Table 2 / Fig. 9 / Fig. 11 experiments exercise
-//! the *actual* coordinator.
+//! [`Coordinator::handle`] maps one [`CoordEvent`] to a list of [`Action`]s;
+//! it never reads a clock, a thread, or a socket. Two drivers feed it:
+//!
+//! * the live TCP driver ([`live`]) translates kvstore watches into
+//!   [`CoordEvent`]s and publishes the returned [`Action`]s to agents over
+//!   the wire, with its timed work ordered by the shared
+//!   [`crate::engine::EventQueue`];
+//! * the discrete-event environment model ([`crate::simulator`]) translates
+//!   failure-trace events into the same [`CoordEvent`]s and executes the
+//!   same [`Action`]s against simulated time from the same engine.
+//!
+//! Both run this exact state machine. `rust/tests/sim_unification.rs`
+//! asserts the simulator's executed action sequence is identical to the
+//! audit [`Coordinator::log`] replayed standalone — the property that makes
+//! the Table 2 / Fig. 9 / Fig. 11 experiments exercise the *actual*
+//! coordinator rather than a hand-maintained model of it.
+//!
+//! Hot path (§5.2): between events the owner calls
+//! [`Coordinator::precompute_plans`] to build a [`ScenarioLookup`] covering
+//! every `(faulted task, worker count)` the next event could produce; a
+//! SEV1 replan then commits a precomputed plan in O(1) table time instead of
+//! running the O(m·n²) DP inside the failure-handling window. The table
+//! invalidates itself whenever committed assignments change.
 
 pub mod live;
 
@@ -15,7 +33,7 @@ use std::collections::BTreeMap;
 
 use crate::config::UnicronConfig;
 use crate::failure::{ErrorKind, Severity};
-use crate::planner::{solve, Plan, PlanTask};
+use crate::planner::{solve, Plan, PlanTask, ScenarioLookup};
 
 /// Events the coordinator reacts to. ①–⑥ refer to Fig. 7's triggers.
 #[derive(Debug, Clone, PartialEq)]
@@ -73,6 +91,13 @@ pub struct Coordinator {
     escalations: BTreeMap<(u32, u32), EscalationState>,
     /// Audit log of (event, actions) — the tests' and benches' ground truth.
     pub log: Vec<(CoordEvent, Vec<Action>)>,
+    /// §5.2 precomputed plan table; `None` when stale (assignments changed
+    /// since the last [`Coordinator::precompute_plans`]).
+    lookup: Option<ScenarioLookup>,
+    /// Replans served from the precomputed table (observability/benches).
+    pub lookup_hits: u64,
+    /// Replans that fell back to a fresh DP solve.
+    pub solve_calls: u64,
 }
 
 impl Coordinator {
@@ -85,12 +110,45 @@ impl Coordinator {
             isolated: Vec::new(),
             escalations: BTreeMap::new(),
             log: Vec::new(),
+            lookup: None,
+            lookup_hits: 0,
+            solve_calls: 0,
         }
     }
 
     /// Register a task (with its calibrated throughput table) for planning.
     pub fn add_task(&mut self, task: PlanTask) {
         self.tasks.insert(task.spec.id, task);
+        self.lookup = None; // task set changed: precomputed plans are stale
+    }
+
+    /// Full cluster capacity (healthy + isolated nodes' GPUs) — the upper
+    /// bound a join can restore the pool to, and the precompute range.
+    fn capacity_ceiling(&self) -> u32 {
+        self.available_workers + self.gpus_per_node * self.isolated.len() as u32
+    }
+
+    /// Build the §5.2 scenario table for the current assignments. Call this
+    /// off the failure path (the paper runs it in the background after every
+    /// reconfiguration); subsequent replans are O(1) table commits until the
+    /// assignments change again.
+    pub fn precompute_plans(&mut self) {
+        if self.tasks.is_empty() {
+            self.lookup = None;
+            return;
+        }
+        let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
+        self.lookup = Some(ScenarioLookup::precompute(&ordered, self.capacity_ceiling(), &self.cfg));
+    }
+
+    /// True if the next replan will be served from the precomputed table:
+    /// the table matches the current task set and covers the current pool
+    /// size (a brand-new node joining past the precomputed ceiling falls
+    /// back to a live solve rather than silently clamping).
+    pub fn lookup_is_fresh(&self) -> bool {
+        self.lookup.as_ref().is_some_and(|l| {
+            l.n_tasks() == self.tasks.len() && self.available_workers <= l.max_workers()
+        })
     }
 
     pub fn task_assignment(&self, task: u32) -> Option<u32> {
@@ -128,6 +186,7 @@ impl Coordinator {
             }
             CoordEvent::TaskFinished { task } => {
                 self.tasks.remove(&task);
+                self.lookup = None; // task set changed
                 self.reconfigure("task finished", None)
             }
             CoordEvent::TaskLaunched { .. } => {
@@ -190,21 +249,40 @@ impl Coordinator {
     }
 
     /// Cost-aware plan generation (§5) + bookkeeping of the new assignments.
+    ///
+    /// Served from the precomputed [`ScenarioLookup`] when it is fresh (an
+    /// O(1) table commit — the §5.2 hot path), falling back to a live DP
+    /// [`solve`] otherwise. Both paths produce the identical plan for the
+    /// same state; `coordinator::tests::lookup_path_is_equivalent` holds
+    /// them to that.
     fn reconfigure(&mut self, reason: &'static str, faulted_task: Option<u32>) -> Vec<Action> {
         if self.tasks.is_empty() {
             return vec![];
         }
-        if let Some(t) = faulted_task {
-            if let Some(pt) = self.tasks.get_mut(&t) {
-                pt.fault = true;
+        // map the faulted task id to its position in id-ordered iteration
+        let fault_idx = faulted_task.and_then(|t| self.tasks.keys().position(|&k| k == t));
+        let plan = if self.lookup_is_fresh() {
+            self.lookup_hits += 1;
+            let lut = self.lookup.as_ref().unwrap();
+            lut.plan_for(fault_idx, self.available_workers).clone()
+        } else {
+            self.solve_calls += 1;
+            let mut ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
+            if let Some(i) = fault_idx {
+                ordered[i].fault = true;
             }
-        }
-        let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
-        let plan = solve(&ordered, self.available_workers, &self.cfg);
-        // commit the new assignments; clear fault flags (handled)
+            solve(&ordered, self.available_workers, &self.cfg)
+        };
+        // commit the new assignments; clear fault flags (handled). The
+        // precomputed table remains valid only if nothing actually moved.
+        let mut changed = false;
         for (pt, &x) in self.tasks.values_mut().zip(plan.assignment.iter()) {
+            changed |= pt.current != x;
             pt.current = x;
             pt.fault = false;
+        }
+        if changed {
+            self.lookup = None;
         }
         vec![Action::ApplyPlan { plan, reason }]
     }
@@ -324,6 +402,51 @@ mod tests {
         let a = c.handle(CoordEvent::TaskLaunched { task: 2 });
         assert!(matches!(a[0], Action::ApplyPlan { reason: "task launched", .. }));
         assert!(c.task_assignment(2).unwrap() > 0);
+    }
+
+    #[test]
+    fn lookup_path_is_equivalent_to_solve_path() {
+        // Same event storm, one coordinator precomputing between events, one
+        // always solving live — the audit logs must be identical.
+        let events = [
+            CoordEvent::TaskLaunched { task: 0 },
+            CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::EccError },
+            CoordEvent::NodeLost { node: 2 },
+            CoordEvent::NodeJoined { node: 1 },
+            CoordEvent::ErrorReport { node: 3, task: 1, kind: ErrorKind::NvlinkError },
+            CoordEvent::TaskFinished { task: 0 },
+            CoordEvent::NodeJoined { node: 2 },
+        ];
+        let mut warm = coord(32);
+        let mut cold = coord(32);
+        for ev in &events {
+            warm.precompute_plans(); // the §5.2 background step
+            assert!(warm.lookup_is_fresh());
+            let a = warm.handle(ev.clone());
+            let b = cold.handle(ev.clone());
+            assert_eq!(a, b, "divergence at {ev:?}");
+        }
+        assert_eq!(warm.log, cold.log);
+        assert!(warm.lookup_hits >= 6, "replans should hit the table: {}", warm.lookup_hits);
+        // the one allowed miss: TaskFinished shrinks the task set between the
+        // precompute and the replan, so that replan must re-solve
+        assert!(warm.solve_calls <= 1, "unexpected hot-path solves: {}", warm.solve_calls);
+        assert!(cold.lookup_hits == 0 && cold.solve_calls > 0);
+    }
+
+    #[test]
+    fn lookup_invalidates_when_assignments_move() {
+        let mut c = coord(32);
+        c.precompute_plans();
+        assert!(c.lookup_is_fresh());
+        // a SEV1 shrinks the pool and moves workers: the table must go stale
+        c.handle(CoordEvent::NodeLost { node: 0 });
+        assert!(!c.lookup_is_fresh(), "stale table must not survive a commit");
+        // adding a task also invalidates
+        c.precompute_plans();
+        assert!(c.lookup_is_fresh());
+        c.add_task(plan_task(7, 2, 0, 48));
+        assert!(!c.lookup_is_fresh());
     }
 
     #[test]

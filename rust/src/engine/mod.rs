@@ -1,0 +1,313 @@
+//! Deterministic event engine — the one clock every healing decision runs on.
+//!
+//! FoundationDB-style deterministic simulation only pays off if the *same*
+//! scheduling substrate drives production and test code. This module owns
+//! the seeded, totally-ordered event queue that used to live inside the
+//! discrete-event simulator:
+//!
+//! * [`EventQueue`] — a min-heap of `(time, seq)`-ordered events. Time is
+//!   compared with [`f64::total_cmp`], so NaN/-0.0 can never corrupt heap
+//!   order (a NaN comparing `Equal` to everything silently breaks the heap
+//!   invariant and with it replay determinism). `seq` breaks ties FIFO, so
+//!   two events at the same instant always pop in schedule order.
+//! * Scheduled events are cancelable: [`EventQueue::schedule`] returns an
+//!   [`EventId`]; [`EventQueue::cancel`] tombstones it and pop skips it.
+//!   (The simulator currently supersedes stale `RecoveryDone` events with
+//!   its per-task epoch counters; cancelation is the engine-level
+//!   alternative for callers that hold on to their `EventId`s. `cancel` is
+//!   O(pending) per call — fine at trace scale, not for hot loops.)
+//! * [`EngineClock`] — a [`crate::util::Clock`] view of the queue's current
+//!   time, so components written against the clock abstraction (detectors,
+//!   the live loop's lease logic) read simulated time transparently.
+//!
+//! The discrete-event simulator ([`crate::simulator`]) advances the queue to
+//! exhaustion; the live driver ([`crate::coordinator::live`]) uses the same
+//! queue for its timed work (due-date ordering of deferred commands) against
+//! wall-clock `now`. Same ordering rules either way — which is what makes a
+//! recorded simulation seed a faithful regression test of production logic.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::Clock;
+
+/// Handle to a scheduled event; pass to [`EventQueue::cancel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EventId(u64);
+
+/// One queue entry: an event `ev` due at simulated/wall time `at`.
+#[derive(Debug, Clone)]
+struct Scheduled<E> {
+    at: f64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at.total_cmp(&other.at) == CmpOrdering::Equal && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap by (time, seq): reverse both operands. `total_cmp` is a
+        // total order over all f64 bit patterns — no NaN escape hatch.
+        other.at.total_cmp(&self.at).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic `(time, seq)`-ordered event queue with cancelation.
+///
+/// Determinism contract: given the same sequence of `schedule`/`cancel`
+/// calls, `pop` returns the same events at the same times, bit-for-bit.
+/// There is no wall-clock, thread, or hash-order dependence anywhere in the
+/// dispatch path (`HashSet` is only membership-tested, never iterated).
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    /// Monotone tie-breaker; doubles as the `EventId` namespace.
+    seq: u64,
+    canceled: HashSet<u64>,
+    /// Time of the most recently popped event (the engine's "now").
+    now: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, canceled: HashSet::new(), now: 0.0 }
+    }
+
+    /// Current engine time: the timestamp of the last popped event (0 before
+    /// the first pop). The simulator treats this as simulated "now".
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of live (not-yet-canceled) pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len() - self.canceled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Schedule `ev` at absolute time `at`. Returns a cancelation handle.
+    ///
+    /// `at` may be in the past (≤ `now`); the event still pops, at its
+    /// scheduled position in the total order — deterministic replay must not
+    /// silently drop late work.
+    pub fn schedule(&mut self, at: f64, ev: E) -> EventId {
+        assert!(!at.is_nan(), "event time must not be NaN");
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq: self.seq, ev });
+        EventId(self.seq)
+    }
+
+    /// Cancel a previously scheduled event. Returns true if the event was
+    /// still pending (false if it already popped or was already canceled).
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if id.0 == 0 || id.0 > self.seq {
+            return false;
+        }
+        // An id can only be tombstoned while its entry is still in the heap;
+        // pop() removes tombstones as it encounters them.
+        if self.heap.iter().any(|s| s.seq == id.0) {
+            self.canceled.insert(id.0)
+        } else {
+            false
+        }
+    }
+
+    /// Pop the earliest live event, advancing `now` to its timestamp.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        while let Some(s) = self.heap.pop() {
+            if self.canceled.remove(&s.seq) {
+                continue; // tombstoned
+            }
+            self.now = s.at;
+            return Some((s.at, s.ev));
+        }
+        None
+    }
+
+    /// Earliest pending event time without popping (skips canceled entries).
+    pub fn peek_time(&mut self) -> Option<f64> {
+        while let Some(s) = self.heap.peek() {
+            if self.canceled.contains(&s.seq) {
+                let seq = s.seq;
+                self.heap.pop();
+                self.canceled.remove(&seq);
+                continue;
+            }
+            return Some(s.at);
+        }
+        None
+    }
+
+    /// Drain every event due at or before `deadline`, in order. Used by the
+    /// live loop: each tick collects the work that has come due.
+    pub fn pop_due(&mut self, deadline: f64) -> Vec<(f64, E)> {
+        let mut due = Vec::new();
+        while matches!(self.peek_time(), Some(t) if t.total_cmp(&deadline) != CmpOrdering::Greater)
+        {
+            if let Some(e) = self.pop() {
+                due.push(e);
+            }
+        }
+        due
+    }
+}
+
+/// Shared, thread-safe view of engine time implementing [`Clock`].
+///
+/// `sleep` is a no-op: under the engine, time advances only when the queue
+/// pops an event, never by blocking.
+#[derive(Debug, Default)]
+pub struct EngineClock {
+    micros: AtomicU64,
+}
+
+impl EngineClock {
+    pub fn new() -> Arc<EngineClock> {
+        Arc::new(EngineClock { micros: AtomicU64::new(0) })
+    }
+
+    /// Advance the clock to `t` seconds (monotone; earlier values ignored).
+    pub fn advance_to(&self, t: f64) {
+        let target = (t * 1e6).max(0.0) as u64;
+        self.micros.fetch_max(target, Ordering::Relaxed);
+    }
+}
+
+impl Clock for EngineClock {
+    fn now(&self) -> f64 {
+        self.micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    fn sleep(&self, _seconds: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, "b");
+        q.schedule(1.0, "a");
+        q.schedule(5.0, "c"); // same instant as "b": FIFO by seq
+        q.schedule(0.5, "first");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["first", "a", "b", "c"]);
+    }
+
+    #[test]
+    fn now_tracks_last_pop() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.now(), 0.0);
+        q.schedule(2.5, ());
+        q.schedule(7.0, ());
+        q.pop();
+        assert_eq!(q.now(), 2.5);
+        q.pop();
+        assert_eq!(q.now(), 7.0);
+    }
+
+    #[test]
+    fn cancel_skips_event() {
+        let mut q = EventQueue::new();
+        let a = q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert!(q.cancel(a));
+        assert!(!q.cancel(a), "double-cancel is a no-op");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancel_after_pop_is_noop() {
+        let mut q = EventQueue::new();
+        let a = q.schedule(1.0, "a");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert!(!q.cancel(a));
+    }
+
+    #[test]
+    fn negative_zero_and_subnormals_keep_total_order() {
+        // total_cmp: -0.0 < +0.0, and neither compares Equal to the other —
+        // the partial_cmp(..).unwrap_or(Equal) bug class this engine fixes.
+        let mut q = EventQueue::new();
+        q.schedule(0.0, "pos");
+        q.schedule(-0.0, "neg");
+        assert_eq!(q.pop().unwrap().1, "neg");
+        assert_eq!(q.pop().unwrap().1, "pos");
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn nan_times_are_rejected_at_the_door() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, ());
+    }
+
+    #[test]
+    fn pop_due_drains_only_due_work() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1u32);
+        q.schedule(2.0, 2u32);
+        q.schedule(3.0, 3u32);
+        let due = q.pop_due(2.0);
+        assert_eq!(due, vec![(1.0, 1), (2.0, 2)]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_under_identical_schedules() {
+        let run = || {
+            let mut q = EventQueue::new();
+            let mut ids = Vec::new();
+            for i in 0..200u64 {
+                // adversarial times: duplicates and reverse order
+                let t = ((i * 7919) % 97) as f64 / 3.0;
+                ids.push(q.schedule(t, i));
+            }
+            for id in ids.iter().step_by(3) {
+                q.cancel(*id);
+            }
+            let mut out = Vec::new();
+            while let Some((t, e)) = q.pop() {
+                out.push((t.to_bits(), e));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn engine_clock_is_monotone() {
+        let c = EngineClock::new();
+        c.advance_to(4.0);
+        c.advance_to(2.0); // ignored: never goes backwards
+        assert!((c.now() - 4.0).abs() < 1e-9);
+        c.sleep(100.0); // no-op, returns immediately
+        assert!((c.now() - 4.0).abs() < 1e-9);
+    }
+}

@@ -6,7 +6,7 @@
 
 pub mod trace;
 
-pub use trace::{FailureEvent, Trace, TraceConfig};
+pub use trace::{FailureEvent, LifecycleKind, TaskLifecycle, Trace, TraceConfig};
 
 /// Severity drives the §4.2 handling workflow: SEV3 → reattempt in place,
 /// SEV2 → restart process, SEV1 → isolate node + reconfigure cluster.

@@ -72,11 +72,38 @@ impl TraceConfig {
     }
 }
 
-/// A generated (or replayed) trace: failure events sorted by time.
+/// Whether a task enters or leaves the cluster (Fig. 7 triggers ⑥ and ⑤).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleKind {
+    /// A new task is submitted (⑥) — the coordinator replans to admit it.
+    Arrival,
+    /// A task completes (⑤) — its workers are redistributed.
+    Departure,
+}
+
+/// One task arrival/departure in a trace. `task` refers to the index of the
+/// task in the simulated cluster's spec list: a task with an [`Arrival`]
+/// event is inactive before `at_s`; a [`Departure`] deactivates it.
+///
+/// [`Arrival`]: LifecycleKind::Arrival
+/// [`Departure`]: LifecycleKind::Departure
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskLifecycle {
+    /// Seconds from trace start.
+    pub at_s: f64,
+    /// Task index (into the simulation's `TaskSpec` list / planner id).
+    pub task: u32,
+    pub kind: LifecycleKind,
+}
+
+/// A generated (or replayed) trace: failure events sorted by time, plus the
+/// task arrival/departure schedule (empty for single-cohort traces like the
+/// stock trace-a/trace-b).
 #[derive(Debug, Clone)]
 pub struct Trace {
     pub config: TraceConfig,
     pub events: Vec<FailureEvent>,
+    pub lifecycle: Vec<TaskLifecycle>,
 }
 
 impl Trace {
@@ -127,8 +154,58 @@ impl Trace {
         emit(&sev1_kinds, config.expect_sev1, &mut rng, &mut events);
         emit(&other_kinds, config.expect_other, &mut rng, &mut events);
 
-        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
-        Trace { config, events }
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        Trace { config, events, lifecycle: Vec::new() }
+    }
+
+    /// Attach a task arrival/departure schedule (Fig. 7 ⑤⑥ — the multi-task
+    /// scenarios of §7.5). Events are kept time-sorted; out-of-range times
+    /// are clamped to the trace duration.
+    pub fn with_lifecycle(mut self, mut lifecycle: Vec<TaskLifecycle>) -> Trace {
+        for l in &mut lifecycle {
+            l.at_s = l.at_s.clamp(0.0, self.config.duration_s);
+        }
+        lifecycle.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.task.cmp(&b.task)));
+        self.lifecycle = lifecycle;
+        self
+    }
+
+    /// Seeded helper for the ⑤⑥ experiments: the last `n_late` of `n_tasks`
+    /// arrive at uniformly-drawn times in the first half of the trace, and
+    /// `n_finish` of the initially-running tasks depart in the second half.
+    pub fn with_task_churn(self, n_tasks: u32, n_late: u32, n_finish: u32, seed: u64) -> Trace {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5F5C_A11E);
+        let d = self.config.duration_s;
+        let mut lifecycle = Vec::new();
+        let n_late = n_late.min(n_tasks);
+        for task in n_tasks - n_late..n_tasks {
+            lifecycle.push(TaskLifecycle {
+                at_s: rng.uniform(0.0, d * 0.5),
+                task,
+                kind: LifecycleKind::Arrival,
+            });
+        }
+        for task in 0..n_finish.min(n_tasks - n_late) {
+            lifecycle.push(TaskLifecycle {
+                at_s: rng.uniform(d * 0.5, d),
+                task,
+                kind: LifecycleKind::Departure,
+            });
+        }
+        self.with_lifecycle(lifecycle)
+    }
+
+    /// Task indices that are active at t = 0 (no pending Arrival event).
+    pub fn initially_active(&self, n_tasks: usize) -> Vec<bool> {
+        let mut active = vec![true; n_tasks];
+        for l in &self.lifecycle {
+            if l.kind == LifecycleKind::Arrival {
+                if let Some(a) = active.get_mut(l.task as usize) {
+                    *a = false;
+                }
+            }
+        }
+        active
     }
 
     pub fn count_by_severity(&self, sev: Severity) -> usize {
@@ -216,6 +293,49 @@ mod tests {
             }
             prev = e.at_s;
         }
+    }
+
+    #[test]
+    fn lifecycle_sorted_clamped_and_deterministic() {
+        let mk = || {
+            Trace::generate(TraceConfig::trace_a(), 4).with_lifecycle(vec![
+                TaskLifecycle { at_s: 9e99, task: 1, kind: LifecycleKind::Departure },
+                TaskLifecycle { at_s: 100.0, task: 2, kind: LifecycleKind::Arrival },
+                TaskLifecycle { at_s: -5.0, task: 3, kind: LifecycleKind::Arrival },
+            ])
+        };
+        let t = mk();
+        assert_eq!(t.lifecycle.len(), 3);
+        let mut prev = 0.0;
+        for l in &t.lifecycle {
+            assert!(l.at_s >= prev && l.at_s <= t.config.duration_s);
+            prev = l.at_s;
+        }
+        assert_eq!(t.lifecycle, mk().lifecycle);
+    }
+
+    #[test]
+    fn task_churn_schedule_shape() {
+        let t = Trace::generate(TraceConfig::trace_a(), 7).with_task_churn(6, 2, 1, 7);
+        let d = t.config.duration_s;
+        let arrivals: Vec<_> =
+            t.lifecycle.iter().filter(|l| l.kind == LifecycleKind::Arrival).collect();
+        let departures: Vec<_> =
+            t.lifecycle.iter().filter(|l| l.kind == LifecycleKind::Departure).collect();
+        assert_eq!(arrivals.len(), 2);
+        assert_eq!(departures.len(), 1);
+        // the late cohort is the highest-indexed tasks, in the first half
+        assert!(arrivals.iter().all(|l| l.task >= 4 && l.at_s <= d * 0.5));
+        // departures come from the initially-running cohort, second half
+        assert!(departures.iter().all(|l| l.task < 4 && l.at_s >= d * 0.5));
+        assert_eq!(t.initially_active(6), vec![true, true, true, true, false, false]);
+    }
+
+    #[test]
+    fn stock_traces_have_empty_lifecycle() {
+        let t = Trace::generate(TraceConfig::trace_b(), 1);
+        assert!(t.lifecycle.is_empty());
+        assert_eq!(t.initially_active(4), vec![true; 4]);
     }
 
     #[test]

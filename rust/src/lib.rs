@@ -11,11 +11,14 @@
 //!
 //! * substrates: [`util`], [`rng`], [`ser`], [`config`], [`cli`], [`bench`],
 //!   [`proptest`], [`metrics`]
+//! * deterministic scheduling: [`engine`] — the seeded `(time, seq)` event
+//!   queue both the simulator and the live coordinator loop run on
 //! * distributed plumbing: [`kvstore`], [`rpc`], [`membership`], [`checkpoint`]
 //! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
 //!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
 //! * execution: [`runtime`], [`trainer`], [`data`]
-//! * evaluation: [`simulator`], [`repro`]
+//! * evaluation: [`simulator`] (environment model around the production
+//!   coordinator), [`repro`]
 
 pub mod agent;
 pub mod bench;
@@ -25,6 +28,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod detect;
+pub mod engine;
 pub mod failure;
 pub mod kvstore;
 pub mod membership;

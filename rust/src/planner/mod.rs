@@ -178,6 +178,75 @@ impl PlanLookup {
     }
 }
 
+/// Fault-aware precomputed plan table (§5.2, full form): one [`Plan`] per
+/// `(faulted task, available workers)` scenario, so the coordinator's SEV1
+/// hot path is a table index instead of an O(m·n²) solve.
+///
+/// [`PlanLookup`] covers the "cluster shrank/grew" axis only; a SEV1 replan
+/// additionally flags the affected task as faulted (Eq. 4 forces its
+/// transition penalty even at an unchanged worker count), which changes the
+/// optimum. This table enumerates both axes. It is valid for exactly one
+/// snapshot of `(current assignments, fault-free task set)` — any commit of
+/// new assignments invalidates it, after which the owner recomputes in the
+/// background (the paper's "proactive plan generation").
+#[derive(Debug, Clone)]
+pub struct ScenarioLookup {
+    /// plans[f][j]: plan for `j` available workers with task `f-1` faulted
+    /// (`f = 0` means no task faulted — joins, launches, finishes).
+    plans: Vec<Vec<Plan>>,
+}
+
+impl ScenarioLookup {
+    /// Precompute plans for every fault scenario × worker count 0..=max.
+    ///
+    /// O((m+1)·n·m·n²) total — expensive, which is exactly why it runs off
+    /// the failure path (between events), not on it.
+    pub fn precompute(tasks: &[PlanTask], max_workers: u32, cfg: &UnicronConfig) -> ScenarioLookup {
+        let mut scenario: Vec<PlanTask> = tasks.to_vec();
+        for t in &mut scenario {
+            t.fault = false;
+        }
+        let mut plans = Vec::with_capacity(tasks.len() + 1);
+        for f in 0..=tasks.len() {
+            if f > 0 {
+                scenario[f - 1].fault = true;
+            }
+            plans.push((0..=max_workers).map(|n| solve(&scenario, n, cfg)).collect());
+            if f > 0 {
+                scenario[f - 1].fault = false;
+            }
+        }
+        ScenarioLookup { plans }
+    }
+
+    /// O(1) retrieval for the scenario `(faulted, n_workers)`. Worker counts
+    /// above the precomputed range clamp to the largest table entry; a fault
+    /// index outside the table (caller holds a stale table for a different
+    /// task set) falls back to the no-fault row rather than charging the
+    /// penalty to an arbitrary task.
+    pub fn plan_for(&self, faulted: Option<usize>, n_workers: u32) -> &Plan {
+        let f = match faulted {
+            Some(i) if i < self.n_tasks() => i + 1,
+            Some(_) => {
+                debug_assert!(false, "fault index out of range for this table");
+                0
+            }
+            None => 0,
+        };
+        let row = &self.plans[f];
+        &row[(n_workers as usize).min(row.len() - 1)]
+    }
+
+    pub fn max_workers(&self) -> u32 {
+        (self.plans[0].len() - 1) as u32
+    }
+
+    /// Number of task slots this table was built for.
+    pub fn n_tasks(&self) -> usize {
+        self.plans.len() - 1
+    }
+}
+
 /// Baseline allocation strategies from §7.4's Fig. 10c comparison.
 pub mod baselines {
     use super::PlanTask;
@@ -327,6 +396,55 @@ mod tests {
         assert_eq!(lut.max_workers(), 16);
         // out-of-range clamps
         assert_eq!(lut.plan_for(99).assignment, solve(&tasks, 16, &c).assignment);
+    }
+
+    #[test]
+    fn scenario_lookup_matches_fresh_solves_per_fault() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 16),
+            task(1, 1.3, 2, 9.0, 6, false, 16),
+            task(2, 0.7, 4, 12.0, 4, false, 16),
+        ];
+        let c = cfg();
+        let lut = ScenarioLookup::precompute(&tasks, 16, &c);
+        assert_eq!(lut.max_workers(), 16);
+        assert_eq!(lut.n_tasks(), 3);
+        for faulted in [None, Some(0), Some(1), Some(2)] {
+            let mut scenario = tasks.clone();
+            if let Some(i) = faulted {
+                scenario[i].fault = true;
+            }
+            for n in [0u32, 7, 8, 15, 16] {
+                let fresh = solve(&scenario, n, &c);
+                let looked = lut.plan_for(faulted, n);
+                assert_eq!(looked.assignment, fresh.assignment, "fault {faulted:?} n={n}");
+                assert!((looked.objective - fresh.objective).abs() <= 1e-9 * fresh.objective.abs().max(1.0));
+            }
+        }
+        // clamping on both axes
+        assert_eq!(lut.plan_for(None, 99).assignment, solve(&tasks, 16, &c).assignment);
+    }
+
+    #[test]
+    fn scenario_lookup_fault_axis_changes_the_plan_when_it_should() {
+        // A faulted task pays the transition penalty regardless, so with a
+        // huge d_transition the optimum can shift relative to the no-fault
+        // scenario at the same worker count.
+        let tasks = vec![
+            task(0, 1.0, 1, 10.0, 8, false, 16),
+            task(1, 1.0, 1, 10.0, 8, false, 16),
+        ];
+        let mut c = cfg();
+        c.d_transition_s = 1e5;
+        let lut = ScenarioLookup::precompute(&tasks, 16, &c);
+        let no_fault = lut.plan_for(None, 16);
+        assert_eq!(no_fault.assignment, vec![8, 8], "status quo is optimal unfaulted");
+        // fault scenarios must at minimum reproduce the dedicated solve
+        for i in 0..2 {
+            let mut scenario = tasks.clone();
+            scenario[i].fault = true;
+            assert_eq!(lut.plan_for(Some(i), 16).assignment, solve(&scenario, 16, &c).assignment);
+        }
     }
 
     #[test]

@@ -1,51 +1,68 @@
-//! Discrete-event cluster simulator — the §7.5 evaluation substrate.
+//! Discrete-event *environment model* — the §7.5 evaluation substrate.
 //!
-//! Replays a failure [`Trace`] against a multi-task cluster under one of the
-//! five recovery policies ([`policies::PolicyKind`]) and accounts WAF
-//! (weighted achieved FLOP/s) over time. Per-task healthy throughput comes
-//! from the same calibrated [`crate::perfmodel`] tables the planner uses;
-//! Unicron's reconfiguration decisions run the *actual* planner
-//! ([`crate::planner::solve`]), not a model of it.
+//! This module no longer makes recovery decisions. It models the cluster
+//! environment around a [`RecoveryPolicy`]:
+//!
+//! 1. trace events ([`crate::failure::Trace`]) are translated into the
+//!    production [`CoordEvent`] vocabulary (SEV1 node drains become
+//!    `ErrorReport`/`NodeLost`, repairs `NodeJoined`, task churn
+//!    `TaskLaunched`/`TaskFinished`);
+//! 2. the policy decides — for [`PolicyKind::Unicron`] that policy *is* the
+//!    production [`crate::coordinator::Coordinator`] state machine, so the
+//!    simulated decision path is byte-for-byte the deployed one; the §7
+//!    baselines (Megatron/Oobleck/Varuna/Bamboo) implement the same trait
+//!    in [`policies`];
+//! 3. the returned [`Action`]s are executed against simulated time from the
+//!    shared [`crate::engine::EventQueue`], with policy-specific timing
+//!    ([`PolicyParams`]): detection latency, transition duration per moved
+//!    GPU, restart/recompute cost.
+//!
+//! Every `(event, actions)` pair is recorded in [`SimResult::decision_log`];
+//! `rust/tests/sim_unification.rs` replays that log through a standalone
+//! [`crate::coordinator::Coordinator`] and asserts identical actions — the
+//! guarantee that Fig. 9 / Fig. 11 numbers exercise real coordinator code.
 //!
 //! Outputs: WAF time series + accumulated WAF (Fig. 11), FLOP/s-reduction
-//! summaries (Fig. 3b), transition-time views (Fig. 9 cross-check).
+//! summaries (Fig. 3b), transition-time views (Fig. 9 cross-check). Runs are
+//! bit-deterministic per `(trace, policy)`; `rust/tests/sim_determinism.rs`
+//! keeps a recorded-seed regression corpus.
 
 pub mod policies;
 
-pub use policies::{PolicyKind, PolicyParams};
-
-use std::cmp::Ordering as CmpOrdering;
-use std::collections::BinaryHeap;
+pub use policies::{
+    build as build_policy, BaselinePolicy, PolicyKind, PolicyParams, RecoveryPolicy, UnicronPolicy,
+};
 
 use crate::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
-use crate::failure::{Severity, Trace};
+use crate::coordinator::{Action, CoordEvent};
+use crate::engine::EventQueue;
+use crate::failure::{LifecycleKind, Severity, Trace};
 use crate::perfmodel::throughput_table;
-use crate::planner::{solve, PlanTask};
+use crate::planner::{Plan, PlanTask};
 
-/// Per-task simulation state.
+/// Per-task environment state (what is physically running, not what the
+/// policy has decided — decisions live in the policy).
 #[derive(Debug, Clone)]
 struct SimTask {
     spec: TaskSpec,
     /// Megatron-level `T(t,x)` table (FLOP/s) indexed by worker count.
     throughput: Vec<f64>,
-    /// Currently assigned workers (GPUs).
+    /// Workers (GPUs) the task is currently running with.
     workers: u32,
     /// Workers the task will run with once its pending recovery completes.
     pending_workers: u32,
     /// If `Some(t)`, the task produces zero WAF until simulated time `t`.
     down_until: Option<f64>,
-    /// Megatron-style waiting: needs `pending_workers` free GPUs to restart.
-    waiting_for_capacity: bool,
-    /// Time this task was first affected (baseline reclaim priority, §7.5).
-    first_affected_at: Option<f64>,
-    /// Recovery generation: stale RecoveryDone events are ignored.
+    /// Recovery generation: stale `RecoveryDone` events are ignored.
     epoch: u64,
+    /// False before a task's Arrival and after its Departure (Fig. 7 ⑤⑥).
+    active: bool,
 }
 
 impl SimTask {
     /// Instantaneous WAF under `eff` policy efficiency.
     fn waf(&self, now: f64, eff: f64) -> f64 {
-        if self.waiting_for_capacity {
+        if !self.active {
             return 0.0;
         }
         if let Some(t) = self.down_until {
@@ -61,39 +78,40 @@ impl SimTask {
     }
 }
 
+/// Environment events on the engine queue.
 #[derive(Debug, Clone, PartialEq)]
-enum Ev {
-    Failure(usize),           // index into trace.events
+enum EnvEvent {
+    /// index into `trace.events`
+    Failure(usize),
+    /// index into `trace.lifecycle`
+    Lifecycle(usize),
     Repair { node: u32 },
     RecoveryDone { task: usize, workers: u32, epoch: u64 },
+    /// Deferred outcome report back to the policy (restart completed).
+    PolicyResult { result: CoordEvent },
 }
 
-#[derive(Debug, Clone)]
-struct Scheduled {
-    at: f64,
-    seq: u64,
-    ev: Ev,
+/// Execution context for a batch of policy actions: what triggered them and
+/// therefore which timing applies.
+#[derive(Debug, Clone, Copy, Default)]
+struct Ctx {
+    /// Severity of the triggering failure (None for joins/lifecycle).
+    severity: Option<Severity>,
+    /// Task *index* the failure hit (transition-penalty + Fig. 9 recording).
+    affected: Option<usize>,
+    /// Bootstrap: apply assignments instantly with no downtime (t = 0).
+    instant: bool,
 }
 
-impl PartialEq for Scheduled {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+impl Ctx {
+    fn bootstrap() -> Ctx {
+        Ctx { instant: true, ..Default::default() }
     }
-}
-impl Eq for Scheduled {}
-impl PartialOrd for Scheduled {
-    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
-        Some(self.cmp(other))
+    fn failure(severity: Severity, affected: Option<usize>) -> Ctx {
+        Ctx { severity: Some(severity), affected, ..Default::default() }
     }
-}
-impl Ord for Scheduled {
-    fn cmp(&self, other: &Self) -> CmpOrdering {
-        // min-heap by (time, seq)
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(CmpOrdering::Equal)
-            .then(other.seq.cmp(&self.seq))
+    fn quiet() -> Ctx {
+        Ctx::default() // joins, task churn, result notifications: no detection delay
     }
 }
 
@@ -110,6 +128,11 @@ pub struct SimResult {
     pub duration_s: f64,
     /// SEV1 transitions performed: (time, seconds the transition took).
     pub transitions: Vec<(f64, f64)>,
+    /// Every (event, actions) decision the policy made, in delivery order —
+    /// for the Unicron policy this is exactly the coordinator's audit log.
+    pub decision_log: Vec<(CoordEvent, Vec<Action>)>,
+    /// `AlertOps` pages raised (SEV1 isolations).
+    pub alerts: usize,
 }
 
 impl SimResult {
@@ -129,83 +152,104 @@ impl SimResult {
     }
 }
 
-/// The simulator.
+/// The environment model. Owns physical cluster state (which nodes are up,
+/// what each task is running with) and the engine event queue; defers every
+/// recovery decision to the [`RecoveryPolicy`].
 pub struct Simulator {
     cluster: ClusterSpec,
-    cfg: UnicronConfig,
+    policy: Box<dyn RecoveryPolicy>,
+    /// Cached copy of the policy's timing constants.
     params: PolicyParams,
     tasks: Vec<SimTask>,
-    /// node -> isolated?
+    /// Planner inputs per task (handed to the policy at init/admission).
+    plan_inputs: Vec<PlanTask>,
+    /// node -> down/isolated?
     node_down: Vec<bool>,
     available: u32,
     now: f64,
-    queue: BinaryHeap<Scheduled>,
-    seq: u64,
+    queue: EventQueue<EnvEvent>,
+    /// Repair delay for nodes isolated by policy escalation (not by a trace
+    /// SEV1, which carries its own repair time).
+    default_repair_s: f64,
     series: Vec<(f64, f64)>,
     accumulated: f64,
     last_waf: f64,
     last_t: f64,
     transitions: Vec<(f64, f64)>,
+    decision_log: Vec<(CoordEvent, Vec<Action>)>,
+    alerts: usize,
 }
 
 impl Simulator {
-    /// Build a simulator. Initial worker assignment is the Unicron-optimal
-    /// plan for the full cluster (§7.5 gives the same initial plan to every
-    /// policy).
+    /// Build the environment for one of the five stock policies. Task specs
+    /// must be in ascending-id order (the assignment-vector contract).
     pub fn new(
         cluster: ClusterSpec,
         cfg: UnicronConfig,
         kind: PolicyKind,
         specs: &[TaskSpec],
     ) -> Simulator {
+        let policy = policies::build(kind, &cfg, cluster.gpus_per_node);
+        Simulator::with_policy(cluster, policy, specs)
+    }
+
+    /// Build the environment around any [`RecoveryPolicy`] implementation.
+    /// (The policy carries its own config; the environment needs none.)
+    pub fn with_policy(
+        cluster: ClusterSpec,
+        policy: Box<dyn RecoveryPolicy>,
+        specs: &[TaskSpec],
+    ) -> Simulator {
+        debug_assert!(
+            specs.windows(2).all(|w| w[0].id < w[1].id),
+            "task specs must be in ascending-id order"
+        );
         let n = cluster.total_gpus();
-        let mut plan_tasks = Vec::new();
-        let mut tables = Vec::new();
-        for spec in specs {
-            let model = ModelSpec::gpt3(&spec.model)
-                .unwrap_or_else(|| panic!("unknown model {}", spec.model));
-            let table = throughput_table(&model, &cluster, n);
-            tables.push(table.clone());
-            plan_tasks.push(PlanTask { spec: spec.clone(), throughput: table, current: 0, fault: false });
-        }
-        let initial = solve(&plan_tasks, n, &cfg);
-        let tasks = specs
+        let plan_inputs: Vec<PlanTask> = specs
             .iter()
-            .zip(tables)
-            .zip(&initial.assignment)
-            .map(|((spec, throughput), &workers)| SimTask {
-                spec: spec.clone(),
-                throughput,
-                workers,
-                pending_workers: workers,
-                down_until: None,
-                waiting_for_capacity: false,
-                first_affected_at: None,
-                epoch: 0,
+            .map(|spec| {
+                let model = ModelSpec::gpt3(&spec.model)
+                    .unwrap_or_else(|| panic!("unknown model {}", spec.model));
+                PlanTask {
+                    throughput: throughput_table(&model, &cluster, n),
+                    spec: spec.clone(),
+                    current: 0,
+                    fault: false,
+                }
             })
             .collect();
-        let params = PolicyParams::for_kind(kind, &cfg);
+        let tasks = plan_inputs
+            .iter()
+            .map(|pt| SimTask {
+                spec: pt.spec.clone(),
+                throughput: pt.throughput.clone(),
+                workers: 0,
+                pending_workers: 0,
+                down_until: None,
+                epoch: 0,
+                active: true,
+            })
+            .collect();
+        let params = policy.params().clone();
         Simulator {
             node_down: vec![false; cluster.n_nodes as usize],
             available: n,
             cluster,
-            cfg,
+            policy,
             params,
             tasks,
+            plan_inputs,
             now: 0.0,
-            queue: BinaryHeap::new(),
-            seq: 0,
+            queue: EventQueue::new(),
+            default_repair_s: 86400.0,
             series: Vec::new(),
             accumulated: 0.0,
             last_waf: 0.0,
             last_t: 0.0,
             transitions: Vec::new(),
+            decision_log: Vec::new(),
+            alerts: 0,
         }
-    }
-
-    fn push(&mut self, at: f64, ev: Ev) {
-        self.seq += 1;
-        self.queue.push(Scheduled { at, seq: self.seq, ev });
     }
 
     fn total_waf(&self) -> f64 {
@@ -220,20 +264,20 @@ impl Simulator {
         self.series.push((self.now, self.last_waf));
     }
 
-    /// Which task owns `node` under the current assignment: tasks take nodes
-    /// in id order, `ceil(workers/8)` nodes each, over the healthy nodes.
+    /// Which task owns `node` under the current assignment: active tasks
+    /// take nodes in id order, `ceil(workers/gpn)` nodes each, over the
+    /// healthy nodes. Returns a task *index*.
     fn owner_of(&self, node: u32) -> Option<usize> {
         let healthy: Vec<u32> =
             (0..self.cluster.n_nodes).filter(|&n| !self.node_down[n as usize]).collect();
+        let gpn = self.cluster.gpus_per_node;
         let mut cursor = 0usize;
-        for (ti, t) in self.tasks.iter().enumerate() {
-            let nodes_needed =
-                ((t.workers + self.cluster.gpus_per_node - 1) / self.cluster.gpus_per_node) as usize;
+        for ti in self.active_indices() {
+            let t = &self.tasks[ti];
+            let nodes_needed = ((t.workers + gpn - 1) / gpn) as usize;
             for k in 0..nodes_needed {
-                if let Some(&n) = healthy.get(cursor + k) {
-                    if n == node {
-                        return Some(ti);
-                    }
+                if healthy.get(cursor + k) == Some(&node) {
+                    return Some(ti);
                 }
             }
             cursor += nodes_needed;
@@ -241,29 +285,172 @@ impl Simulator {
         None
     }
 
+    /// Indices of active tasks in ascending-id order — the order every
+    /// `ApplyPlan.assignment` vector uses.
+    fn active_indices(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.tasks.len()).filter(|&i| self.tasks[i].active).collect();
+        idx.sort_by_key(|&i| self.tasks[i].spec.id);
+        idx
+    }
+
+    fn index_of(&self, task_id: u32) -> Option<usize> {
+        self.tasks.iter().position(|t| t.spec.id == task_id)
+    }
+
+    /// Feed one event to the policy; log and return its decisions.
+    fn decide(&mut self, ev: CoordEvent) -> Vec<Action> {
+        let actions = self.policy.on_event(ev.clone());
+        self.decision_log.push((ev, actions.clone()));
+        actions
+    }
+
+    /// Execute policy actions under `ctx` timing.
+    fn execute(&mut self, actions: &[Action], ctx: &Ctx) {
+        for a in actions {
+            match a {
+                Action::ApplyPlan { plan, .. } => self.apply_plan(plan, ctx),
+                Action::InstructReattempt { node, task } => {
+                    self.instruct_recovery(*task, *node, true, ctx)
+                }
+                Action::InstructRestart { node, task } => {
+                    self.instruct_recovery(*task, *node, false, ctx)
+                }
+                Action::IsolateNode { node } => self.isolate(*node),
+                Action::AlertOps { .. } => self.alerts += 1,
+            }
+        }
+    }
+
+    /// Reconfigure the cluster to `plan`. Each task whose worker count
+    /// changes (or that hosts the fault) goes down for detection + a
+    /// transition proportional to the GPUs it moves, then resumes at the new
+    /// size — the Fig. 9 cost model.
+    fn apply_plan(&mut self, plan: &Plan, ctx: &Ctx) {
+        let active = self.active_indices();
+        debug_assert_eq!(active.len(), plan.assignment.len(), "policy assignment order contract");
+        let detect = match ctx.severity {
+            Some(sev) if !ctx.instant => self.params.detect_s(sev),
+            _ => 0.0,
+        };
+        let gpn = self.cluster.gpus_per_node;
+        for (k, &ti) in active.iter().enumerate() {
+            let new_w = plan.assignment.get(k).copied().unwrap_or(0);
+            let old_w = self.tasks[ti].workers;
+            let affected = ctx.affected == Some(ti);
+            if new_w == old_w && !affected {
+                continue;
+            }
+            if ctx.instant {
+                let t = &mut self.tasks[ti];
+                t.workers = new_w;
+                t.pending_workers = new_w;
+                t.down_until = None;
+                continue;
+            }
+            // the faulted task pays at least a node's worth of migration
+            let moved = old_w.abs_diff(new_w).max(if affected { gpn } else { 0 });
+            let trans = self.params.sev1_transition_s(moved);
+            let until = self.now + detect + trans;
+            let t = &mut self.tasks[ti];
+            t.down_until = Some(until);
+            t.pending_workers = new_w;
+            t.epoch += 1;
+            let epoch = t.epoch;
+            self.queue.schedule(until, EnvEvent::RecoveryDone { task: ti, workers: new_w, epoch });
+            if affected {
+                self.transitions.push((self.now, detect + trans));
+            }
+        }
+    }
+
+    /// Execute an in-place reattempt/restart instruction: the task is down
+    /// for detection + restart + recompute, then resumes at its pending
+    /// size, and the outcome is reported back to the policy.
+    fn instruct_recovery(&mut self, task_id: u32, node: u32, reattempt: bool, ctx: &Ctx) {
+        let Some(ti) = self.index_of(task_id) else { return };
+        let sev = ctx.severity.unwrap_or(Severity::Sev2);
+        let dt = self.params.detect_s(sev) + self.params.restart_recovery_s();
+        let until = self.now + dt;
+        let t = &mut self.tasks[ti];
+        // A failure mid-recovery restarts the recovery (the new process dies
+        // during setup/recompute) — this compounds under trace-b's rates.
+        // Resume at whichever size the task was headed for.
+        let w = t.pending_workers.max(t.workers);
+        t.down_until = Some(until);
+        t.epoch += 1;
+        let epoch = t.epoch;
+        self.queue.schedule(until, EnvEvent::RecoveryDone { task: ti, workers: w, epoch });
+        let result = if reattempt {
+            CoordEvent::ReattemptResult { node, task: task_id, ok: true }
+        } else {
+            CoordEvent::RestartResult { node, task: task_id, ok: true }
+        };
+        self.queue.schedule(until, EnvEvent::PolicyResult { result });
+    }
+
+    /// Fence a node. Idempotent: trace SEV1s pre-mark the node (hardware is
+    /// down whatever the policy says), so the policy's `IsolateNode` is a
+    /// no-op then; a policy-escalated isolation (failed restart chain) marks
+    /// it here and schedules a repair at the environment's default delay.
+    fn isolate(&mut self, node: u32) {
+        let idx = node as usize;
+        if idx >= self.node_down.len() || self.node_down[idx] {
+            return;
+        }
+        self.node_down[idx] = true;
+        self.available = self.available.saturating_sub(self.cluster.gpus_per_node);
+        self.queue.schedule(self.now + self.default_repair_s, EnvEvent::Repair { node });
+    }
+
     /// Run the trace to completion.
     pub fn run(mut self, trace: &Trace) -> SimResult {
+        self.default_repair_s = 0.5 * (trace.config.repair_min_s + trace.config.repair_max_s);
+        let active = trace.initially_active(self.tasks.len());
+        for (t, &a) in self.tasks.iter_mut().zip(&active) {
+            t.active = a;
+        }
+        self.policy.init(&self.plan_inputs, &active, self.available);
+
         for (i, e) in trace.events.iter().enumerate() {
-            self.push(e.at_s, Ev::Failure(i));
+            self.queue.schedule(e.at_s, EnvEvent::Failure(i));
+        }
+        for (i, l) in trace.lifecycle.iter().enumerate() {
+            self.queue.schedule(l.at_s, EnvEvent::Lifecycle(i));
+        }
+
+        // Bootstrap: the initial assignment is itself a policy decision (a
+        // TaskLaunched replan), applied instantly — §7.5 starts every policy
+        // from the same healthy plan.
+        if let Some(&first) = self.active_indices().first() {
+            let ev = CoordEvent::TaskLaunched { task: self.tasks[first].spec.id };
+            let actions = self.decide(ev);
+            self.execute(&actions, &Ctx::bootstrap());
         }
         self.record(); // t=0 healthy level
         let healthy_waf = self.last_waf;
 
-        while let Some(s) = self.queue.pop() {
-            if s.at > trace.config.duration_s {
+        while let Some((at, ev)) = self.queue.pop() {
+            if at > trace.config.duration_s {
                 break;
             }
-            self.now = s.at;
-            match s.ev {
-                Ev::Failure(i) => self.on_failure(trace, i),
-                Ev::Repair { node } => self.on_repair(node),
-                Ev::RecoveryDone { task, workers, epoch } => {
+            self.now = at;
+            match ev {
+                EnvEvent::Failure(i) => self.on_trace_failure(trace, i),
+                EnvEvent::Lifecycle(i) => self.on_lifecycle(trace, i),
+                EnvEvent::Repair { node } => self.on_repair(node),
+                EnvEvent::RecoveryDone { task, workers, epoch } => {
                     let t = &mut self.tasks[task];
-                    if t.epoch == epoch {
+                    if t.epoch == epoch && t.active {
                         t.workers = workers;
                         t.pending_workers = workers;
                         t.down_until = None;
                     }
+                }
+                EnvEvent::PolicyResult { result } => {
+                    let actions = self.decide(result);
+                    // success reports ask for nothing, but execute whatever
+                    // the policy returns (defensive: escalations)
+                    self.execute(&actions, &Ctx::quiet());
                 }
             }
             self.record();
@@ -278,116 +465,49 @@ impl Simulator {
             healthy_waf,
             duration_s: trace.config.duration_s,
             transitions: self.transitions,
+            decision_log: self.decision_log,
+            alerts: self.alerts,
         }
     }
 
-    fn on_failure(&mut self, trace: &Trace, idx: usize) {
+    /// Translate one trace failure into the coordinator vocabulary and run
+    /// the decide → execute cycle.
+    fn on_trace_failure(&mut self, trace: &Trace, idx: usize) {
         let ev = &trace.events[idx];
+        let node = ev.node;
+        if self.node_down[node as usize] {
+            return; // node already out; failure has no additional effect
+        }
         match ev.severity() {
             Severity::Sev1 => {
-                let node = ev.node;
-                if self.node_down[node as usize] {
-                    return; // node already out; failure has no additional effect
-                }
                 let affected = self.owner_of(node);
+                // hardware state changes regardless of any policy decision
                 self.node_down[node as usize] = true;
                 self.available = self.available.saturating_sub(self.cluster.gpus_per_node);
-                self.push(self.now + ev.repair_after_s, Ev::Repair { node });
-                self.apply_sev1(affected);
+                self.queue.schedule(self.now + ev.repair_after_s, EnvEvent::Repair { node });
+                let coord_ev = match affected {
+                    Some(ti) => CoordEvent::ErrorReport {
+                        node,
+                        task: self.tasks[ti].spec.id,
+                        kind: ev.kind,
+                    },
+                    None => CoordEvent::NodeLost { node },
+                };
+                let actions = self.decide(coord_ev);
+                self.execute(&actions, &Ctx::failure(Severity::Sev1, affected));
             }
-            _ => {
+            sev => {
                 // SEV2/SEV3: process-level; hits whatever task owns the node
-                if self.node_down[ev.node as usize] {
-                    return;
+                let Some(ti) = self.owner_of(node) else { return };
+                if self.tasks[ti].pending_workers == 0 {
+                    return; // stalled anyway; nothing more to lose
                 }
-                if let Some(ti) = self.owner_of(ev.node) {
-                    let t = &mut self.tasks[ti];
-                    if t.waiting_for_capacity {
-                        return; // stalled anyway; nothing more to lose
-                    }
-                    // A failure mid-recovery restarts the recovery (the new
-                    // process dies during setup/recompute) — this compounds
-                    // under trace-b's failure rates.
-                    let dt = self.params.detect_s(ev.severity()) + self.params.restart_recovery_s();
-                    let until = self.now + dt;
-                    let w = t.pending_workers.max(t.workers).max(
-                        if t.down_until.map_or(false, |u| u > self.now) { t.pending_workers } else { t.workers });
-                    t.down_until = Some(until);
-                    t.epoch += 1;
-                    let epoch = t.epoch;
-                    self.push(until, Ev::RecoveryDone { task: ti, workers: w, epoch });
-                }
+                let coord_ev =
+                    CoordEvent::ErrorReport { node, task: self.tasks[ti].spec.id, kind: ev.kind };
+                let actions = self.decide(coord_ev);
+                self.execute(&actions, &Ctx::failure(sev, Some(ti)));
             }
         }
-    }
-
-    fn apply_sev1(&mut self, affected: Option<usize>) {
-        let detect = self.params.detect_s(Severity::Sev1);
-        if self.params.global_replan {
-            // Unicron: cost-aware cluster-wide replan (the real planner).
-            let plan_tasks: Vec<PlanTask> = self
-                .tasks
-                .iter()
-                .enumerate()
-                .map(|(i, t)| PlanTask {
-                    spec: t.spec.clone(),
-                    throughput: t.throughput.clone(),
-                    current: t.workers,
-                    fault: Some(i) == affected,
-                })
-                .collect();
-            let plan = solve(&plan_tasks, self.available, &self.cfg);
-            for (ti, &new_w) in plan.assignment.iter().enumerate() {
-                let changed = new_w != self.tasks[ti].workers || Some(ti) == affected;
-                if changed {
-                    let moved = self.tasks[ti].workers.abs_diff(new_w).max(
-                        if Some(ti) == affected { self.cluster.gpus_per_node } else { 0 },
-                    );
-                    let trans = self.params.sev1_transition_s(moved);
-                    let until = self.now + detect + trans;
-                    self.tasks[ti].down_until = Some(until);
-                    self.tasks[ti].pending_workers = new_w;
-                    self.tasks[ti].epoch += 1;
-                    let epoch = self.tasks[ti].epoch;
-                    self.push(until, Ev::RecoveryDone { task: ti, workers: new_w, epoch });
-                    if Some(ti) == affected {
-                        self.transitions.push((self.now, detect + trans));
-                    }
-                }
-            }
-        } else if let Some(ti) = affected {
-            let gpn = self.cluster.gpus_per_node;
-            let t = &mut self.tasks[ti];
-            if t.first_affected_at.is_none() {
-                t.first_affected_at = Some(self.now);
-            }
-            if self.params.elastic {
-                //
-
-                // Oobleck/Varuna/Bamboo: shrink the affected task only.
-                let new_w = t.workers.saturating_sub(gpn);
-                let feasible = new_w >= t.spec.min_workers
-                    && t.throughput.get(new_w as usize).copied().unwrap_or(0.0) > 0.0;
-                let target = if feasible { new_w } else { 0 };
-                let trans = self.params.sev1_transition_s(gpn);
-                let until = self.now + detect + trans;
-                t.down_until = Some(until);
-                t.pending_workers = target;
-                t.waiting_for_capacity = !feasible;
-                t.epoch += 1;
-                let epoch = t.epoch;
-                self.transitions.push((self.now, detect + trans));
-                self.push(until, Ev::RecoveryDone { task: ti, workers: target, epoch });
-            } else {
-                // Megatron: cannot shrink; the task hangs until capacity for
-                // its full configuration is free again (hot spare / repair).
-                t.waiting_for_capacity = true;
-                t.down_until = Some(f64::INFINITY);
-                t.workers = t.pending_workers; // frozen config
-                self.transitions.push((self.now, detect)); // transition completes on repair
-            }
-        }
-        // if the failed node was idle, capacity just shrinks silently
     }
 
     fn on_repair(&mut self, node: u32) {
@@ -395,100 +515,38 @@ impl Simulator {
             return;
         }
         self.node_down[node as usize] = false;
-        self.available = (self.available + self.cluster.gpus_per_node).min(self.cluster.total_gpus());
-
-        if self.params.global_replan {
-            self.apply_join_replan();
-            return;
-        }
-
-        // §7.5: baselines give the earliest-affected waiting/shrunk task
-        // priority to reclaim the recovered capacity.
-        let mut candidates: Vec<usize> = (0..self.tasks.len())
-            .filter(|&i| {
-                let t = &self.tasks[i];
-                t.waiting_for_capacity || t.pending_workers < t.spec.min_workers.max(t.pending_workers)
-                    || t.first_affected_at.is_some()
-            })
-            .collect();
-        candidates.sort_by(|&a, &b| {
-            let fa = self.tasks[a].first_affected_at.unwrap_or(f64::INFINITY);
-            let fb = self.tasks[b].first_affected_at.unwrap_or(f64::INFINITY);
-            fa.partial_cmp(&fb).unwrap()
-        });
-        let used: u32 = self
-            .tasks
-            .iter()
-            .map(|t| if t.waiting_for_capacity { 0 } else { t.pending_workers.max(t.workers) })
-            .sum();
-        let mut free = self.available.saturating_sub(used);
-        for ti in candidates {
-            if free == 0 {
-                break;
-            }
-            let gpn = self.cluster.gpus_per_node;
-            let t = &mut self.tasks[ti];
-            if t.waiting_for_capacity {
-                // restart at the original scale if it fits
-                let want = if self.params.elastic {
-                    (t.pending_workers.max(t.spec.min_workers) + gpn - 1) / gpn * gpn
-                } else {
-                    t.workers.max(t.pending_workers) // Megatron: exact original
-                };
-                let want = want.max(t.spec.min_workers);
-                if want <= free {
-                    free -= want;
-                    t.waiting_for_capacity = false;
-                    t.first_affected_at = None;
-                    let trans = self.params.sev1_transition_s(want)
-                        + if self.params.elastic { 0.0 } else { 0.0 };
-                    let until = self.now + trans;
-                    t.down_until = Some(until);
-                    t.pending_workers = want;
-                    t.epoch += 1;
-                    let epoch = t.epoch;
-                    self.push(until, Ev::RecoveryDone { task: ti, workers: want, epoch });
-                }
-            } else if self.params.elastic && free >= gpn {
-                // grow a previously-shrunk task back by one node
-                let want = t.pending_workers.max(t.workers) + gpn;
-                if t.throughput.get(want as usize).copied().unwrap_or(0.0) > 0.0 {
-                    free -= gpn;
-                    t.first_affected_at = None;
-                    let trans = self.params.sev1_transition_s(gpn);
-                    let until = self.now + trans;
-                    t.down_until = Some(until);
-                    t.pending_workers = want;
-                    t.epoch += 1;
-                    let epoch = t.epoch;
-                    self.push(until, Ev::RecoveryDone { task: ti, workers: want, epoch });
-                }
-            }
-        }
+        self.available =
+            (self.available + self.cluster.gpus_per_node).min(self.cluster.total_gpus());
+        let actions = self.decide(CoordEvent::NodeJoined { node });
+        self.execute(&actions, &Ctx::quiet());
     }
 
-    fn apply_join_replan(&mut self) {
-        let plan_tasks: Vec<PlanTask> = self
-            .tasks
-            .iter()
-            .map(|t| PlanTask {
-                spec: t.spec.clone(),
-                throughput: t.throughput.clone(),
-                current: t.workers,
-                fault: false,
-            })
-            .collect();
-        let plan = solve(&plan_tasks, self.available, &self.cfg);
-        for (ti, &new_w) in plan.assignment.iter().enumerate() {
-            if new_w != self.tasks[ti].workers {
-                let moved = self.tasks[ti].workers.abs_diff(new_w);
-                let trans = self.params.sev1_transition_s(moved);
-                let until = self.now + trans;
-                self.tasks[ti].down_until = Some(until);
-                self.tasks[ti].pending_workers = new_w;
-                self.tasks[ti].epoch += 1;
-                let epoch = self.tasks[ti].epoch;
-                self.push(until, Ev::RecoveryDone { task: ti, workers: new_w, epoch });
+    /// Fig. 7 triggers ⑤⑥: task departure/arrival mid-trace.
+    fn on_lifecycle(&mut self, trace: &Trace, idx: usize) {
+        let l = &trace.lifecycle[idx];
+        let Some(ti) = self.index_of(l.task) else { return };
+        match l.kind {
+            LifecycleKind::Arrival => {
+                if self.tasks[ti].active {
+                    return;
+                }
+                self.tasks[ti].active = true;
+                self.policy.admit_task(self.plan_inputs[ti].clone());
+                let actions = self.decide(CoordEvent::TaskLaunched { task: l.task });
+                self.execute(&actions, &Ctx::quiet());
+            }
+            LifecycleKind::Departure => {
+                if !self.tasks[ti].active {
+                    return;
+                }
+                let t = &mut self.tasks[ti];
+                t.active = false;
+                t.workers = 0;
+                t.pending_workers = 0;
+                t.down_until = None;
+                t.epoch += 1; // orphan any in-flight recovery
+                let actions = self.decide(CoordEvent::TaskFinished { task: l.task });
+                self.execute(&actions, &Ctx::quiet());
             }
         }
     }
@@ -544,6 +602,7 @@ mod tests {
         let b = run(PolicyKind::Unicron, &trace);
         assert_eq!(a.accumulated_waf, b.accumulated_waf);
         assert_eq!(a.waf_series, b.waf_series);
+        assert_eq!(a.decision_log, b.decision_log);
     }
 
     #[test]
@@ -610,5 +669,95 @@ mod tests {
         for &(_, d) in &r.transitions {
             assert!(d > 0.0 && d < 600.0, "unicron transition {d}s");
         }
+    }
+
+    #[test]
+    fn compare_policies_preserves_paper_ordering_on_trace_a() {
+        let (cluster, cfg, specs) = setup();
+        let trace = Trace::generate(TraceConfig::trace_a(), 42);
+        let results = compare_policies(&cluster, &cfg, &specs, &trace);
+        let acc =
+            |k: PolicyKind| results.iter().find(|r| r.policy == k).unwrap().accumulated_waf;
+        let uni = acc(PolicyKind::Unicron);
+        for k in
+            [PolicyKind::Megatron, PolicyKind::Oobleck, PolicyKind::Varuna, PolicyKind::Bamboo]
+        {
+            assert!(uni > acc(k), "Unicron must accumulate the most WAF (vs {k:?})");
+        }
+        // Fig. 11 trace-a baseline ordering: Megatron > Oobleck > Bamboo > Varuna
+        assert!(acc(PolicyKind::Megatron) > acc(PolicyKind::Oobleck));
+        assert!(acc(PolicyKind::Oobleck) > acc(PolicyKind::Bamboo));
+        assert!(acc(PolicyKind::Bamboo) > acc(PolicyKind::Varuna));
+    }
+
+    #[test]
+    fn unicron_decisions_flow_through_coordinator_actions() {
+        // No inline SEV1/SEV2/SEV3 branching for Unicron anymore: every
+        // effect the environment applies is justified by a logged
+        // coordinator action.
+        let trace = Trace::generate(TraceConfig::trace_a(), 42);
+        let r = run(PolicyKind::Unicron, &trace);
+        assert!(!r.decision_log.is_empty());
+        let isolations = r
+            .decision_log
+            .iter()
+            .flat_map(|(_, a)| a)
+            .filter(|a| matches!(a, Action::IsolateNode { .. }))
+            .count();
+        assert_eq!(isolations, r.alerts, "every isolation pages ops");
+        assert!(
+            r.decision_log.iter().any(|(_, a)| a
+                .iter()
+                .any(|x| matches!(x, Action::ApplyPlan { reason: "SEV1 failure", .. }))),
+            "SEV1 replans must come from the coordinator"
+        );
+        // bootstrap decision is the first log entry
+        assert!(matches!(r.decision_log[0].0, CoordEvent::TaskLaunched { .. }));
+    }
+
+    #[test]
+    fn task_churn_is_simulated_end_to_end() {
+        let (cluster, cfg, specs) = setup();
+        let trace = Trace::generate(TraceConfig::trace_a(), 13).with_task_churn(6, 2, 2, 13);
+        let r = Simulator::new(cluster, cfg, PolicyKind::Unicron, &specs).run(&trace);
+        let launches = r
+            .decision_log
+            .iter()
+            .filter(|(e, _)| matches!(e, CoordEvent::TaskLaunched { .. }))
+            .count();
+        let finishes = r
+            .decision_log
+            .iter()
+            .filter(|(e, _)| matches!(e, CoordEvent::TaskFinished { .. }))
+            .count();
+        assert_eq!(launches, 3, "bootstrap + two arrivals");
+        assert_eq!(finishes, 2, "two departures");
+        assert!(r.accumulated_waf > 0.0);
+        // arriving work raises cluster WAF over the pre-arrival level at
+        // some point (the late tasks actually get scheduled)
+        let healthy0 = r.waf_series[0].1;
+        let peak = r.waf_series.iter().map(|&(_, w)| w).fold(0.0, f64::max);
+        assert!(peak > healthy0, "late arrivals must add WAF: {peak} vs {healthy0}");
+    }
+
+    #[test]
+    fn departures_release_capacity_to_survivors() {
+        let (cluster, cfg, specs) = setup();
+        let mut tc = TraceConfig::trace_a();
+        tc.expect_sev1 = 0.0;
+        tc.expect_other = 0.0;
+        // no failures: three tasks leave halfway; survivors replan upward
+        let trace = Trace::generate(tc, 3).with_task_churn(6, 0, 3, 3);
+        let r = Simulator::new(cluster, cfg, PolicyKind::Unicron, &specs).run(&trace);
+        let first = r.waf_series.first().unwrap().1;
+        let last = r.waf_series.last().unwrap().1;
+        assert!(last > 0.0, "survivors keep training");
+        assert!(last < first, "fewer tasks -> less total weighted work");
+        // the replans grew at least one surviving task beyond its t=0 share
+        let grew = r.decision_log.iter().any(|(e, a)| {
+            matches!(e, CoordEvent::TaskFinished { .. })
+                && a.iter().any(|x| matches!(x, Action::ApplyPlan { .. }))
+        });
+        assert!(grew, "task finish must trigger a coordinator replan");
     }
 }

@@ -1,5 +1,13 @@
-//! Recovery-policy models: Unicron plus the four baselines of §7
+//! Recovery policies: Unicron plus the four baselines of §7
 //! (Megatron checkpoint-restart, Oobleck, Varuna, Bamboo).
+//!
+//! Every policy implements [`RecoveryPolicy`]: the environment model
+//! ([`crate::simulator`]) feeds it [`CoordEvent`]s and executes the
+//! [`Action`]s it returns. The Unicron policy ([`UnicronPolicy`]) is a thin
+//! wrapper over the *production* [`Coordinator`] state machine — simulation
+//! exercises the exact §4.2 decision path, not a reimplementation. The
+//! baselines ([`BaselinePolicy`]) speak the same action vocabulary but make
+//! their decisions from the behavioural constants below.
 //!
 //! Baseline constants are calibrated to the paper's published relative
 //! numbers, not to their absolute testbed values:
@@ -19,8 +27,12 @@
 //!   reload checkpoints and recompute (~15 min mean for 30-min intervals,
 //!   footnote 2) plus resubmission/environment setup for Megatron (Fig. 2).
 
+use std::collections::BTreeMap;
+
 use crate::config::UnicronConfig;
+use crate::coordinator::{Action, CoordEvent, Coordinator};
 use crate::failure::Severity;
+use crate::planner::{solve, Plan, PlanTask};
 
 /// Which system's recovery behaviour to simulate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -162,6 +174,371 @@ impl PolicyParams {
     }
 }
 
+/// A recovery decision-maker driven by the environment model.
+///
+/// The environment ([`crate::simulator::Simulator`]) translates trace events
+/// into [`CoordEvent`]s, calls [`RecoveryPolicy::on_event`], and executes
+/// the returned [`Action`]s under this policy's [`PolicyParams`] timing.
+///
+/// Contract: every `ApplyPlan.assignment` the policy emits is ordered by
+/// ascending task id over the tasks active at that moment — the same order
+/// the production [`Coordinator`] uses.
+pub trait RecoveryPolicy {
+    fn params(&self) -> &PolicyParams;
+
+    /// Register the full task set (planner inputs) and which of the tasks
+    /// are active at t = 0. Called exactly once, before any event.
+    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: u32);
+
+    /// Trigger ⑥ prelude: a task is about to enter the cluster — register
+    /// its planner inputs. The `TaskLaunched` event is delivered right after.
+    fn admit_task(&mut self, task: PlanTask);
+
+    /// One cluster event → recovery actions for the environment to execute.
+    fn on_event(&mut self, ev: CoordEvent) -> Vec<Action>;
+}
+
+/// Build the policy for `kind`.
+pub fn build(kind: PolicyKind, cfg: &UnicronConfig, gpus_per_node: u32) -> Box<dyn RecoveryPolicy> {
+    match kind {
+        PolicyKind::Unicron => Box::new(UnicronPolicy::new(cfg, gpus_per_node)),
+        baseline => Box::new(BaselinePolicy::new(baseline, cfg, gpus_per_node)),
+    }
+}
+
+/// The Unicron policy *is* the production [`Coordinator`]: every decision in
+/// simulation comes out of [`Coordinator::handle`], so the audit
+/// [`Coordinator::log`] doubles as the simulation's decision record.
+pub struct UnicronPolicy {
+    params: PolicyParams,
+    cfg: UnicronConfig,
+    gpus_per_node: u32,
+    coord: Option<Coordinator>,
+}
+
+impl UnicronPolicy {
+    pub fn new(cfg: &UnicronConfig, gpus_per_node: u32) -> UnicronPolicy {
+        UnicronPolicy {
+            params: PolicyParams::for_kind(PolicyKind::Unicron, cfg),
+            cfg: cfg.clone(),
+            gpus_per_node,
+            coord: None,
+        }
+    }
+
+    /// The wrapped production coordinator (panics before `init`).
+    pub fn coordinator(&self) -> &Coordinator {
+        self.coord.as_ref().expect("UnicronPolicy::init not called")
+    }
+}
+
+impl RecoveryPolicy for UnicronPolicy {
+    fn params(&self) -> &PolicyParams {
+        &self.params
+    }
+
+    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: u32) {
+        let mut coord = Coordinator::new(self.cfg.clone(), available_workers, self.gpus_per_node);
+        for (t, &a) in tasks.iter().zip(active) {
+            if a {
+                coord.add_task(t.clone());
+            }
+        }
+        self.coord = Some(coord);
+    }
+
+    fn admit_task(&mut self, task: PlanTask) {
+        self.coord.as_mut().expect("UnicronPolicy::init not called").add_task(task);
+    }
+
+    fn on_event(&mut self, ev: CoordEvent) -> Vec<Action> {
+        self.coord.as_mut().expect("UnicronPolicy::init not called").handle(ev)
+    }
+}
+
+/// Per-task baseline bookkeeping.
+#[derive(Debug, Clone)]
+struct BaselineTask {
+    plan: PlanTask,
+    /// Currently decided worker count (0 while waiting for capacity).
+    assigned: u32,
+    /// Workers to restart with once capacity frees up (Megatron: the frozen
+    /// original configuration; elastic systems: their minimum viable size).
+    want: u32,
+    waiting: bool,
+    /// Event sequence of the first unrecovered impact — reclaim priority
+    /// (earliest-affected first, §7.5). Cleared when the task recovers.
+    first_affected_seq: Option<u64>,
+    active: bool,
+}
+
+/// The §7 baselines (Megatron / Oobleck / Varuna / Bamboo) as a
+/// [`RecoveryPolicy`]. Decision rules, calibrated by [`PolicyParams`]:
+///
+/// * all: the initial allocation is the Unicron-optimal plan — §7.5 gives
+///   every policy the same starting point;
+/// * SEV2/SEV3: restart in place (uniform across systems; the *timing*
+///   differs via `restart_s`/`recompute_s`);
+/// * SEV1, elastic systems: shrink the affected task by one node, or stall
+///   it if that falls below feasibility;
+/// * SEV1, Megatron: freeze the configuration and stall until capacity for
+///   the exact original shape frees up (hot spare / repair);
+/// * node join / task finish: earliest-affected tasks reclaim the freed
+///   capacity (waiting tasks restart; elastic shrunk tasks grow back a node).
+pub struct BaselinePolicy {
+    params: PolicyParams,
+    cfg: UnicronConfig,
+    gpus_per_node: u32,
+    tasks: BTreeMap<u32, BaselineTask>,
+    available: u32,
+    seq: u64,
+    bootstrapped: bool,
+}
+
+impl BaselinePolicy {
+    pub fn new(kind: PolicyKind, cfg: &UnicronConfig, gpus_per_node: u32) -> BaselinePolicy {
+        assert!(kind != PolicyKind::Unicron, "Unicron is UnicronPolicy (the real Coordinator)");
+        BaselinePolicy {
+            params: PolicyParams::for_kind(kind, cfg),
+            cfg: cfg.clone(),
+            gpus_per_node,
+            tasks: BTreeMap::new(),
+            available: 0,
+            seq: 0,
+            bootstrapped: false,
+        }
+    }
+
+    /// Capacity not held by a running task.
+    fn free(&self) -> u32 {
+        let used: u32 =
+            self.tasks.values().filter(|t| t.active && !t.waiting).map(|t| t.assigned).sum();
+        self.available.saturating_sub(used)
+    }
+
+    fn feasible(plan: &PlanTask, w: u32) -> bool {
+        w >= plan.spec.min_workers && plan.throughput.get(w as usize).copied().unwrap_or(0.0) > 0.0
+    }
+
+    /// Current decisions as an `ApplyPlan` (id-ordered over active tasks).
+    fn emit_plan(&self, reason: &'static str) -> Vec<Action> {
+        let active: Vec<&BaselineTask> = self.tasks.values().filter(|t| t.active).collect();
+        let assignment: Vec<u32> = active.iter().map(|t| t.assigned).collect();
+        let total_waf = active.iter().map(|t| t.plan.waf(t.assigned)).sum();
+        let workers_used = assignment.iter().sum();
+        vec![Action::ApplyPlan {
+            plan: Plan { assignment, objective: 0.0, total_waf, workers_used },
+            reason,
+        }]
+    }
+
+    /// t = 0: commit the shared Unicron-optimal starting plan (§7.5).
+    fn bootstrap_plan(&mut self) -> Vec<Action> {
+        self.bootstrapped = true;
+        let ordered: Vec<PlanTask> =
+            self.tasks.values().filter(|t| t.active).map(|t| t.plan.clone()).collect();
+        if ordered.is_empty() {
+            return vec![];
+        }
+        let plan = solve(&ordered, self.available, &self.cfg);
+        for (t, &x) in self.tasks.values_mut().filter(|t| t.active).zip(plan.assignment.iter()) {
+            t.assigned = x;
+            t.want = x;
+        }
+        vec![Action::ApplyPlan { plan, reason: "task launched" }]
+    }
+
+    /// Trigger ⑥ after t = 0: hand the arriving task whole nodes from the
+    /// free pool (largest feasible node-multiple), or queue it.
+    fn on_late_launch(&mut self, task: u32) -> Vec<Action> {
+        let gpn = self.gpus_per_node;
+        let free = self.free();
+        let seq = self.seq;
+        let Some(t) = self.tasks.get_mut(&task) else { return vec![] };
+        let mut w = free / gpn * gpn;
+        while w > 0 && !Self::feasible(&t.plan, w) {
+            w -= gpn;
+        }
+        if w > 0 {
+            t.assigned = w;
+            t.want = w;
+            t.waiting = false;
+            self.emit_plan("task launched")
+        } else {
+            t.want = t.plan.spec.min_workers;
+            t.assigned = 0;
+            t.waiting = true;
+            t.first_affected_seq = Some(seq);
+            vec![]
+        }
+    }
+
+    fn on_sev1(&mut self, task: u32) -> Vec<Action> {
+        let gpn = self.gpus_per_node;
+        let seq = self.seq;
+        let elastic = self.params.elastic;
+        let Some(t) = self.tasks.get_mut(&task) else { return vec![] };
+        if !t.active {
+            return vec![];
+        }
+        if t.first_affected_seq.is_none() {
+            t.first_affected_seq = Some(seq);
+        }
+        if elastic {
+            // Oobleck/Varuna/Bamboo: drop the lost node, keep training if
+            // the smaller configuration is still feasible.
+            let new_w = t.assigned.saturating_sub(gpn);
+            if Self::feasible(&t.plan, new_w) {
+                t.assigned = new_w;
+                t.want = new_w;
+                t.waiting = false;
+            } else {
+                t.want = t.assigned.max(t.plan.spec.min_workers);
+                t.assigned = 0;
+                t.waiting = true;
+            }
+        } else {
+            // Megatron: cannot shrink; hang until capacity for the exact
+            // original configuration is free again (hot spare / repair).
+            t.want = t.assigned.max(t.want);
+            t.assigned = 0;
+            t.waiting = true;
+        }
+        self.emit_plan("SEV1 failure")
+    }
+
+    /// Freed capacity (join / task finish): earliest-affected tasks first —
+    /// waiting tasks restart, elastic shrunk tasks grow back one node.
+    fn reclaim(&mut self, reason: &'static str) -> Vec<Action> {
+        let gpn = self.gpus_per_node;
+        let mut free = self.free();
+        let mut order: Vec<u32> = self
+            .tasks
+            .iter()
+            .filter(|(_, t)| t.active && t.first_affected_seq.is_some())
+            .map(|(&id, _)| id)
+            .collect();
+        order.sort_by_key(|id| self.tasks[id].first_affected_seq.unwrap());
+        let mut changed = false;
+        for id in order {
+            if free == 0 {
+                break;
+            }
+            let elastic = self.params.elastic;
+            let t = self.tasks.get_mut(&id).unwrap();
+            if t.waiting {
+                let want = if elastic {
+                    (t.want.max(t.plan.spec.min_workers) + gpn - 1) / gpn * gpn
+                } else {
+                    t.want // exact original shape
+                };
+                if want <= free && Self::feasible(&t.plan, want) {
+                    free -= want;
+                    t.assigned = want;
+                    t.want = want;
+                    t.waiting = false;
+                    t.first_affected_seq = None;
+                    changed = true;
+                }
+            } else if elastic && free >= gpn {
+                let want = t.assigned + gpn;
+                if t.plan.throughput.get(want as usize).copied().unwrap_or(0.0) > 0.0 {
+                    free -= gpn;
+                    t.assigned = want;
+                    t.want = want;
+                    t.first_affected_seq = None;
+                    changed = true;
+                }
+            }
+        }
+        if changed {
+            self.emit_plan(reason)
+        } else {
+            vec![]
+        }
+    }
+}
+
+impl RecoveryPolicy for BaselinePolicy {
+    fn params(&self) -> &PolicyParams {
+        &self.params
+    }
+
+    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: u32) {
+        self.available = available_workers;
+        for (t, &a) in tasks.iter().zip(active) {
+            if a {
+                self.tasks.insert(
+                    t.spec.id,
+                    BaselineTask {
+                        plan: t.clone(),
+                        assigned: 0,
+                        want: 0,
+                        waiting: false,
+                        first_affected_seq: None,
+                        active: true,
+                    },
+                );
+            }
+        }
+    }
+
+    fn admit_task(&mut self, task: PlanTask) {
+        self.tasks.insert(
+            task.spec.id,
+            BaselineTask {
+                plan: task,
+                assigned: 0,
+                want: 0,
+                waiting: false,
+                first_affected_seq: None,
+                active: true,
+            },
+        );
+    }
+
+    fn on_event(&mut self, ev: CoordEvent) -> Vec<Action> {
+        self.seq += 1;
+        match ev {
+            CoordEvent::TaskLaunched { task } => {
+                if self.bootstrapped {
+                    self.on_late_launch(task)
+                } else {
+                    self.bootstrap_plan()
+                }
+            }
+            CoordEvent::TaskFinished { task } => {
+                if let Some(t) = self.tasks.get_mut(&task) {
+                    t.active = false;
+                    t.assigned = 0;
+                    t.waiting = false;
+                    t.first_affected_seq = None;
+                }
+                self.reclaim("task finished")
+            }
+            CoordEvent::NodeLost { .. } => {
+                // idle node died: capacity shrinks silently
+                self.available = self.available.saturating_sub(self.gpus_per_node);
+                vec![]
+            }
+            CoordEvent::NodeJoined { .. } => {
+                self.available += self.gpus_per_node;
+                self.reclaim("node joined")
+            }
+            CoordEvent::ErrorReport { node, task, kind } => match kind.severity() {
+                Severity::Sev1 => {
+                    self.available = self.available.saturating_sub(self.gpus_per_node);
+                    self.on_sev1(task)
+                }
+                // every baseline restarts the process in place; the cost
+                // difference is in restart_s/recompute_s, applied by the env
+                _ => vec![Action::InstructRestart { node, task }],
+            },
+            CoordEvent::ReattemptResult { .. } | CoordEvent::RestartResult { .. } => vec![],
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +598,117 @@ mod tests {
         for k in PolicyKind::all() {
             let p = PolicyParams::for_kind(k, &c);
             assert_eq!(p.elastic, k != PolicyKind::Megatron, "{k:?}");
+        }
+    }
+
+    use crate::config::TaskSpec;
+    use crate::failure::ErrorKind;
+
+    fn plan_task(id: u32, min: u32, n: u32) -> PlanTask {
+        let throughput =
+            (0..=n).map(|x| if x >= min { 1e12 * (x as f64).powf(0.9) } else { 0.0 }).collect();
+        PlanTask { spec: TaskSpec::new(id, "m", 1.0, min), throughput, current: 0, fault: false }
+    }
+
+    fn booted(kind: PolicyKind, n: u32) -> Box<dyn RecoveryPolicy> {
+        let c = cfg();
+        let tasks = [plan_task(0, 8, n + 16), plan_task(1, 8, n + 16)];
+        let mut p = build(kind, &c, 8);
+        p.init(&tasks, &[true, true], n);
+        p.on_event(CoordEvent::TaskLaunched { task: 0 });
+        p
+    }
+
+    #[test]
+    fn unicron_policy_is_the_production_coordinator() {
+        // Identical event streams through the policy and through a bare
+        // Coordinator must produce identical action sequences.
+        let c = cfg();
+        let tasks = [plan_task(0, 8, 48), plan_task(1, 8, 48)];
+        let mut pol = UnicronPolicy::new(&c, 8);
+        pol.init(&tasks, &[true, true], 32);
+        let mut coord = Coordinator::new(c.clone(), 32, 8);
+        for t in &tasks {
+            coord.add_task(t.clone());
+        }
+        let events = [
+            CoordEvent::TaskLaunched { task: 0 },
+            CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::EccError },
+            CoordEvent::NodeJoined { node: 1 },
+        ];
+        for ev in &events {
+            assert_eq!(pol.on_event(ev.clone()), coord.handle(ev.clone()));
+        }
+        assert_eq!(pol.coordinator().log, coord.log);
+    }
+
+    #[test]
+    fn baselines_bootstrap_with_the_unicron_optimal_plan() {
+        let c = cfg();
+        let tasks = [plan_task(0, 8, 48), plan_task(1, 8, 48)];
+        let reference = solve(&tasks, 32, &c);
+        for k in [PolicyKind::Megatron, PolicyKind::Oobleck] {
+            let mut p = build(k, &c, 8);
+            p.init(&tasks, &[true, true], 32);
+            let a = p.on_event(CoordEvent::TaskLaunched { task: 0 });
+            match &a[..] {
+                [Action::ApplyPlan { plan, .. }] => {
+                    assert_eq!(plan.assignment, reference.assignment, "{k:?}")
+                }
+                other => panic!("{k:?}: expected one ApplyPlan, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn megatron_stalls_on_sev1_and_restores_on_join() {
+        let mut p = booted(PolicyKind::Megatron, 32);
+        let a = p.on_event(CoordEvent::ErrorReport {
+            node: 0,
+            task: 0,
+            kind: ErrorKind::EccError,
+        });
+        let plan = match &a[..] {
+            [Action::ApplyPlan { plan, .. }] => plan.clone(),
+            other => panic!("expected ApplyPlan, got {other:?}"),
+        };
+        assert_eq!(plan.assignment[0], 0, "inelastic task must stall, not shrink");
+        let before = plan.assignment[1];
+        // node repaired: the stalled task restarts at its exact original size
+        let a = p.on_event(CoordEvent::NodeJoined { node: 0 });
+        match &a[..] {
+            [Action::ApplyPlan { plan, .. }] => {
+                assert_eq!(plan.assignment[0], 16, "exact original configuration");
+                assert_eq!(plan.assignment[1], before);
+            }
+            other => panic!("expected ApplyPlan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn elastic_baseline_shrinks_by_one_node() {
+        let mut p = booted(PolicyKind::Oobleck, 32);
+        let a = p.on_event(CoordEvent::ErrorReport {
+            node: 0,
+            task: 0,
+            kind: ErrorKind::EccError,
+        });
+        match &a[..] {
+            [Action::ApplyPlan { plan, .. }] => assert_eq!(plan.assignment[0], 8),
+            other => panic!("expected ApplyPlan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn baselines_restart_in_place_for_sev23() {
+        for k in [PolicyKind::Megatron, PolicyKind::Varuna, PolicyKind::Bamboo] {
+            let mut p = booted(k, 32);
+            let a = p.on_event(CoordEvent::ErrorReport {
+                node: 1,
+                task: 1,
+                kind: ErrorKind::CudaError,
+            });
+            assert_eq!(a, vec![Action::InstructRestart { node: 1, task: 1 }], "{k:?}");
         }
     }
 }

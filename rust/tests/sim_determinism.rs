@@ -1,0 +1,99 @@
+//! Deterministic-simulation guarantees: two runs of the same
+//! `(trace seed, policy)` produce bit-identical results, over both a
+//! recorded-seed regression corpus and randomly explored seeds.
+//!
+//! Corpus convention (FoundationDB-style): if a simulation seed ever fails —
+//! in CI, in exploration, anywhere — append it to `CORPUS` below and it
+//! becomes a permanent regression test. Entries are never removed.
+
+use rand_core::RngCore as _;
+use unicron::config::{table3_case, ClusterSpec, UnicronConfig};
+use unicron::failure::{Trace, TraceConfig};
+use unicron::proptest::{run, Config, Prop};
+use unicron::rng::{Rand, Xoshiro256};
+use unicron::simulator::{PolicyKind, SimResult, Simulator};
+
+fn simulate(kind: PolicyKind, tc: TraceConfig, seed: u64, churn: bool) -> SimResult {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let mut trace = Trace::generate(tc, seed);
+    if churn {
+        // exercise the ⑤⑥ lifecycle path: two late arrivals, one departure
+        trace = trace.with_task_churn(6, 2, 1, seed);
+    }
+    Simulator::new(cluster, cfg, kind, &specs).run(&trace)
+}
+
+/// Bit-level equality: f64 series compared exactly, not within tolerance.
+fn diverges(a: &SimResult, b: &SimResult) -> Option<&'static str> {
+    if a.accumulated_waf.to_bits() != b.accumulated_waf.to_bits() {
+        return Some("accumulated_waf");
+    }
+    if a.waf_series != b.waf_series {
+        return Some("waf_series");
+    }
+    if a.transitions != b.transitions {
+        return Some("transitions");
+    }
+    if a.decision_log != b.decision_log {
+        return Some("decision_log");
+    }
+    if a.alerts != b.alerts {
+        return Some("alerts");
+    }
+    None
+}
+
+/// (policy, use trace-b?, trace seed, task churn?) — grow-only.
+const CORPUS: &[(PolicyKind, bool, u64, bool)] = &[
+    (PolicyKind::Unicron, false, 42, false),
+    (PolicyKind::Unicron, true, 42, false),
+    (PolicyKind::Unicron, false, 13, true),
+    (PolicyKind::Unicron, true, 99, true),
+    (PolicyKind::Megatron, false, 42, false),
+    (PolicyKind::Megatron, true, 7, false),
+    (PolicyKind::Oobleck, false, 9, true),
+    (PolicyKind::Varuna, true, 3, false),
+    (PolicyKind::Bamboo, false, 2024, false),
+];
+
+#[test]
+fn recorded_seed_corpus_replays_bit_identically() {
+    for &(kind, trace_b, seed, churn) in CORPUS {
+        let tc = if trace_b { TraceConfig::trace_b() } else { TraceConfig::trace_a() };
+        let a = simulate(kind, tc.clone(), seed, churn);
+        let b = simulate(kind, tc, seed, churn);
+        assert!(
+            diverges(&a, &b).is_none(),
+            "{kind:?}/trace_b={trace_b}/seed={seed}/churn={churn} diverged in {}",
+            diverges(&a, &b).unwrap()
+        );
+        // a corpus run must also be a *sane* run
+        assert!(a.accumulated_waf > 0.0);
+        assert!(a.duration_s > 0.0);
+    }
+}
+
+#[test]
+fn determinism_property_over_random_seeds_and_policies() {
+    run(
+        "sim_determinism",
+        Config { cases: 6, ..Default::default() },
+        |rng: &mut Xoshiro256, _size| {
+            let kind = *rng.choose(&PolicyKind::all());
+            (kind, rng.next_u64(), rng.f64() < 0.5)
+        },
+        |&(kind, seed, churn)| {
+            let a = simulate(kind, TraceConfig::trace_b(), seed, churn);
+            let b = simulate(kind, TraceConfig::trace_b(), seed, churn);
+            match diverges(&a, &b) {
+                None => Prop::Pass,
+                Some(field) => Prop::Fail(format!(
+                    "{kind:?} seed {seed} churn {churn}: {field} not reproducible \
+                     — add to sim_determinism.rs CORPUS"
+                )),
+            }
+        },
+    );
+}

@@ -1,0 +1,116 @@
+//! The one-healing-brain guarantee: the simulator's per-event action
+//! sequence for the Unicron policy equals what the production
+//! [`Coordinator`] state machine emits for the same events — i.e. simulation
+//! *is* the deployed decision path, not a model of it.
+//!
+//! Method: run the environment model, then replay its recorded
+//! `decision_log` event stream through a standalone `Coordinator` and
+//! require the identical action sequence at every step.
+
+use std::collections::BTreeSet;
+
+use unicron::config::{table3_case, ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
+use unicron::coordinator::{Action, CoordEvent, Coordinator};
+use unicron::failure::{Trace, TraceConfig};
+use unicron::perfmodel::throughput_table;
+use unicron::planner::PlanTask;
+use unicron::simulator::{PolicyKind, Simulator};
+
+fn plan_inputs(cluster: &ClusterSpec, specs: &[TaskSpec]) -> Vec<PlanTask> {
+    let n = cluster.total_gpus();
+    specs
+        .iter()
+        .map(|spec| {
+            let model = ModelSpec::gpt3(&spec.model).unwrap();
+            PlanTask {
+                throughput: throughput_table(&model, cluster, n),
+                spec: spec.clone(),
+                current: 0,
+                fault: false,
+            }
+        })
+        .collect()
+}
+
+/// Replay the simulator's delivered events through a fresh Coordinator and
+/// assert action-sequence equality, step by step and in aggregate.
+fn assert_unified(trace: &Trace) {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let inputs = plan_inputs(&cluster, &specs);
+
+    let sim =
+        Simulator::new(cluster.clone(), cfg.clone(), PolicyKind::Unicron, &specs).run(trace);
+    assert!(!sim.decision_log.is_empty(), "simulation made no decisions");
+
+    let mut coord = Coordinator::new(cfg, cluster.total_gpus(), cluster.gpus_per_node);
+    let active = trace.initially_active(specs.len());
+    let mut registered = BTreeSet::new();
+    for (pt, &a) in inputs.iter().zip(&active) {
+        if a {
+            coord.add_task(pt.clone());
+            registered.insert(pt.spec.id);
+        }
+    }
+    for (step, (ev, expected)) in sim.decision_log.iter().enumerate() {
+        // arriving tasks are registered just before their TaskLaunched, the
+        // same order the environment model uses
+        if let CoordEvent::TaskLaunched { task } = ev {
+            if registered.insert(*task) {
+                coord.add_task(inputs[*task as usize].clone());
+            }
+        }
+        let got = coord.handle(ev.clone());
+        assert_eq!(&got, expected, "step {step}: simulator diverged from Coordinator at {ev:?}");
+    }
+    // the audit log is the decision log — same thing, end to end
+    assert_eq!(coord.log, sim.decision_log);
+}
+
+#[test]
+fn trace_a_actions_equal_coordinator_log() {
+    assert_unified(&Trace::generate(TraceConfig::trace_a(), 42));
+}
+
+#[test]
+fn trace_b_actions_equal_coordinator_log() {
+    assert_unified(&Trace::generate(TraceConfig::trace_b(), 7));
+}
+
+#[test]
+fn multitask_churn_actions_equal_coordinator_log() {
+    // ⑤⑥ lifecycle events flow through the same state machine
+    let trace = Trace::generate(TraceConfig::trace_a(), 13).with_task_churn(6, 2, 2, 13);
+    assert_unified(&trace);
+}
+
+#[test]
+fn simulated_sev1_handling_is_the_fig7_workflow() {
+    // Structural spot-check on the replayed log: every SEV1 error report the
+    // environment delivered produced isolate + alert + replan, exactly the
+    // §4.2 workflow the coordinator unit tests pin down.
+    let trace = Trace::generate(TraceConfig::trace_a(), 42);
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let sim = Simulator::new(cluster, cfg, PolicyKind::Unicron, &specs).run(&trace);
+    let mut saw_sev1 = false;
+    for (ev, actions) in &sim.decision_log {
+        if let CoordEvent::ErrorReport { kind, node, .. } = ev {
+            if kind.severity() == unicron::failure::Severity::Sev1 {
+                saw_sev1 = true;
+                assert!(
+                    matches!(actions[0], Action::IsolateNode { node: n } if n == *node),
+                    "SEV1 must isolate first: {actions:?}"
+                );
+                assert!(matches!(actions[1], Action::AlertOps { .. }));
+                assert!(
+                    actions.iter().any(|a| matches!(a, Action::ApplyPlan { .. })),
+                    "SEV1 must replan: {actions:?}"
+                );
+            }
+        }
+    }
+    assert!(saw_sev1, "trace-a seed 42 should hit at least one owned node with SEV1");
+}
