@@ -6,16 +6,16 @@
 //!
 //!     cargo run --release --example multitask_cluster
 
-use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
-use unicron::coordinator::{Action, CoordEvent, Coordinator};
+use unicron::config::{table3_case, ClusterSpec, UnicronConfig};
+use unicron::coordinator::Coordinator;
 use unicron::failure::ErrorKind;
-use unicron::perfmodel::throughput_table;
 use unicron::planner::PlanTask;
+use unicron::proto::{Action, CoordEvent, DecisionLog, NodeId, TaskId};
 use unicron::util::fmt_si;
 
 fn show(coord: &Coordinator, label: &str) {
     println!("\n-- {label} --");
-    println!("available workers: {}", coord.available_workers);
+    println!("available workers: {}", coord.available_workers());
     for t in coord.tasks() {
         println!(
             "  task {} ({:<10} w={:.1}): {:>3} workers, F = {}FLOP/s",
@@ -23,7 +23,7 @@ fn show(coord: &Coordinator, label: &str) {
             t.spec.model,
             t.spec.weight,
             t.current,
-            fmt_si(t.waf(t.current))
+            fmt_si(t.current_waf())
         );
     }
     println!("  cluster WAF: {}FLOP/s", fmt_si(coord.current_waf()));
@@ -48,43 +48,60 @@ fn main() {
     let cfg = UnicronConfig::default();
     let n = cluster.total_gpus();
 
-    let mut coord = Coordinator::new(cfg, n, cluster.gpus_per_node);
-    for spec in table3_case(5) {
-        let model = ModelSpec::gpt3(&spec.model).unwrap();
-        coord.add_task(PlanTask {
-            throughput: throughput_table(&model, &cluster, n),
-            spec,
-            current: 0,
-            fault: false,
-        });
-    }
-    act(&mut coord, CoordEvent::TaskLaunched { task: 0 });
+    let mut coord = Coordinator::builder()
+        .config(cfg)
+        .workers(n)
+        .gpus_per_node(cluster.gpus_per_node)
+        .tasks(table3_case(5).iter().map(|spec| PlanTask::from_spec(spec, &cluster, n)))
+        .build();
+    act(&mut coord, CoordEvent::TaskLaunched { task: TaskId(0) });
     show(&coord, "initial plan (Table 3 case 5, 128 GPUs)");
 
     // SEV3: transient link flap -> reattempt in place, then success
-    act(&mut coord, CoordEvent::ErrorReport { node: 5, task: 3, kind: ErrorKind::LinkFlapping });
-    act(&mut coord, CoordEvent::ReattemptResult { node: 5, task: 3, ok: true });
+    act(
+        &mut coord,
+        CoordEvent::ErrorReport {
+            node: NodeId(5),
+            task: TaskId(3),
+            kind: ErrorKind::LinkFlapping,
+        },
+    );
+    act(&mut coord, CoordEvent::ReattemptResult { node: NodeId(5), task: TaskId(3), ok: true });
 
     // SEV2: CUDA error -> restart the process (config unchanged)
-    act(&mut coord, CoordEvent::ErrorReport { node: 2, task: 1, kind: ErrorKind::CudaError });
-    act(&mut coord, CoordEvent::RestartResult { node: 2, task: 1, ok: true });
+    act(
+        &mut coord,
+        CoordEvent::ErrorReport { node: NodeId(2), task: TaskId(1), kind: ErrorKind::CudaError },
+    );
+    act(&mut coord, CoordEvent::RestartResult { node: NodeId(2), task: TaskId(1), ok: true });
     show(&coord, "after SEV3 + SEV2 (no reconfiguration needed)");
 
     // SEV1: ECC error -> isolate node + cost-aware replan
-    act(&mut coord, CoordEvent::ErrorReport { node: 9, task: 4, kind: ErrorKind::EccError });
+    act(
+        &mut coord,
+        CoordEvent::ErrorReport { node: NodeId(9), task: TaskId(4), kind: ErrorKind::EccError },
+    );
     show(&coord, "after SEV1 (120 workers)");
 
     // another node dies outright (lease expiry)
-    act(&mut coord, CoordEvent::NodeLost { node: 3 });
+    act(&mut coord, CoordEvent::NodeLost { node: NodeId(3) });
     show(&coord, "after node loss (112 workers)");
 
     // repaired node rejoins (trigger ④)
-    act(&mut coord, CoordEvent::NodeJoined { node: 9 });
+    act(&mut coord, CoordEvent::NodeJoined { node: NodeId(9) });
     show(&coord, "after node 9 rejoined (120 workers)");
 
     // task finishes (trigger ⑤): its workers are redistributed
-    act(&mut coord, CoordEvent::TaskFinished { task: 0 });
+    act(&mut coord, CoordEvent::TaskFinished { task: TaskId(0) });
     show(&coord, "after task 0 finished");
 
-    println!("\nhandled {} events; see DESIGN.md §4 for the module map.", coord.log.len());
+    // The audit log is a serializable protocol artifact: any session can be
+    // captured to bytes and replayed as a regression test (proto layer).
+    let bytes = coord.log.to_bytes();
+    let revived = DecisionLog::from_bytes(&bytes).expect("decision log must round-trip");
+    println!(
+        "\nhandled {} events ({} bytes as a DecisionLog artifact); see DESIGN.md §4-§7.",
+        revived.len(),
+        bytes.len()
+    );
 }

@@ -14,8 +14,9 @@ use unicron::agent::{Agent, ProcessHandle};
 use unicron::bench::Bencher;
 use unicron::config::UnicronConfig;
 use unicron::coordinator::live::CoordinatorLive;
-use unicron::coordinator::CoordEvent;
+use unicron::coordinator::Coordinator;
 use unicron::failure::ErrorKind;
+use unicron::proto::{CoordEvent, NodeId};
 use unicron::metrics::Table;
 use unicron::util::{Clock, RealClock};
 
@@ -33,12 +34,17 @@ where
 {
     let cfg = cfg();
     let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
-    let live = CoordinatorLive::start(cfg.clone(), 16, 8, clock.clone(), "127.0.0.1:0").unwrap();
-    let proc0 = ProcessHandle::new(0);
+    let coord = Coordinator::builder()
+        .config(cfg.clone())
+        .workers(16u32)
+        .gpus_per_node(8u32)
+        .build();
+    let live = CoordinatorLive::start(coord, clock.clone(), "127.0.0.1:0").unwrap();
+    let proc0 = ProcessHandle::new(0u32);
     let agent = Agent::start(node, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
     // let registration settle
     live.wait_for(
-        |d| matches!(d.event, CoordEvent::NodeJoined { node: n } if n == node),
+        |d| matches!(d.event, CoordEvent::NodeJoined { node: n } if n == NodeId(node)),
         Duration::from_secs(5),
     )
     .expect("agent must join");

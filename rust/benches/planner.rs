@@ -6,6 +6,7 @@ use unicron::bench::Bencher;
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
 use unicron::perfmodel::throughput_table;
 use unicron::planner::{solve, PlanLookup, PlanTask, ScenarioLookup};
+use unicron::proto::WorkerCount;
 
 fn tasks(case: u32, n: u32) -> Vec<PlanTask> {
     let cluster = ClusterSpec::default();
@@ -16,7 +17,7 @@ fn tasks(case: u32, n: u32) -> Vec<PlanTask> {
             PlanTask {
                 throughput: throughput_table(&model, &cluster, n),
                 spec,
-                current: 8,
+                current: WorkerCount(8),
                 fault: false,
             }
         })
@@ -34,13 +35,13 @@ fn main() {
     });
 
     // larger synthetic instances: m=16 tasks, n=512 workers
-    let big: Vec<PlanTask> = (0..16)
+    let big: Vec<PlanTask> = (0..16u32)
         .map(|i| {
             let throughput = (0..=512u32).map(|x| 1e12 * (x as f64).powf(0.85)).collect();
             PlanTask {
                 spec: unicron::config::TaskSpec::new(i, "synthetic", 1.0, 1),
                 throughput,
-                current: 32,
+                current: WorkerCount(32),
                 fault: false,
             }
         })
@@ -89,7 +90,7 @@ fn main() {
             PlanTask {
                 throughput: throughput_table(&model, &cluster, 64),
                 spec,
-                current: 16,
+                current: WorkerCount(16),
                 fault: false,
             }
         })

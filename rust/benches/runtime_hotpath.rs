@@ -115,12 +115,12 @@ fn main() {
     let specs = unicron::config::table3_case(5);
     let st = b
         .bench("simulate_trace_b_unicron", || {
-            let s = unicron::simulator::Simulator::new(
-                cluster.clone(),
-                cfg.clone(),
-                unicron::simulator::PolicyKind::Unicron,
-                &specs,
-            );
+            let s = unicron::simulator::Simulator::builder()
+                .cluster(cluster.clone())
+                .config(cfg.clone())
+                .policy(unicron::simulator::PolicyKind::Unicron)
+                .tasks(&specs)
+                .build();
             std::hint::black_box(s.run(&trace).accumulated_waf);
         })
         .unwrap();

@@ -19,7 +19,13 @@ fn main() {
     let trace_a = Trace::generate(TraceConfig::trace_a(), 42);
     for kind in PolicyKind::all() {
         b.bench(&format!("replay_trace_a_{}", kind.name()), || {
-            let r = Simulator::new(cluster.clone(), cfg.clone(), kind, &specs).run(&trace_a);
+            let r = Simulator::builder()
+                .cluster(cluster.clone())
+                .config(cfg.clone())
+                .policy(kind)
+                .tasks(&specs)
+                .build()
+                .run(&trace_a);
             std::hint::black_box(r.accumulated_waf);
         });
     }
@@ -35,7 +41,14 @@ fn main() {
         for &seed in &seeds {
             let trace = Trace::generate(tc.clone(), seed);
             let acc = |k: PolicyKind| {
-                Simulator::new(cluster.clone(), cfg.clone(), k, &specs).run(&trace).accumulated_waf
+                Simulator::builder()
+                    .cluster(cluster.clone())
+                    .config(cfg.clone())
+                    .policy(k)
+                    .tasks(&specs)
+                    .build()
+                    .run(&trace)
+                    .accumulated_waf
             };
             let u = acc(PolicyKind::Unicron);
             sums[0] += u / acc(PolicyKind::Megatron);

@@ -5,6 +5,7 @@ use unicron::bench::Bencher;
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
 use unicron::perfmodel::throughput_table;
 use unicron::planner::{baselines, solve, PlanTask};
+use unicron::proto::WorkerCount;
 
 fn main() {
     let cluster = ClusterSpec::default();
@@ -20,7 +21,7 @@ fn main() {
                 PlanTask {
                     throughput: throughput_table(&model, &cluster, n),
                     spec,
-                    current: 0,
+                    current: WorkerCount(0),
                     fault: false,
                 }
             })

@@ -19,13 +19,14 @@ use crate::config::UnicronConfig;
 use crate::detect::StatMonitor;
 use crate::kvstore::net::KvClient;
 use crate::membership::{NodeInfo, NODES_PREFIX};
+use crate::proto::{NodeId, TaskId, WorkerCount};
 use crate::ser::Value;
 use crate::util::Clock;
 
 /// Handle to one supervised training process (one GPU's worth).
 #[derive(Clone)]
 pub struct ProcessHandle {
-    pub task: u32,
+    pub task: TaskId,
     alive: Arc<AtomicBool>,
     exception: Arc<Mutex<Option<String>>>,
     /// Completed-iteration durations feed the stat monitor.
@@ -36,9 +37,9 @@ pub struct ProcessHandle {
 }
 
 impl ProcessHandle {
-    pub fn new(task: u32) -> ProcessHandle {
+    pub fn new(task: impl Into<TaskId>) -> ProcessHandle {
         ProcessHandle {
-            task,
+            task: task.into(),
             alive: Arc::new(AtomicBool::new(true)),
             exception: Arc::new(Mutex::new(None)),
             iter_durations: Arc::new(Mutex::new(Vec::new())),
@@ -88,7 +89,7 @@ impl ProcessHandle {
 
 /// A running agent (threads stop when the handle is dropped or `stop()`ed).
 pub struct Agent {
-    pub node_id: u32,
+    pub node_id: NodeId,
     stop: Arc<AtomicBool>,
     crashed: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
@@ -98,13 +99,15 @@ impl Agent {
     /// Start an agent for `node_id`, monitoring `processes`, against the
     /// coordinator's kvstore at `coord_addr`.
     pub fn start(
-        node_id: u32,
-        gpus: u32,
+        node_id: impl Into<NodeId>,
+        gpus: impl Into<WorkerCount>,
         coord_addr: std::net::SocketAddr,
         cfg: &UnicronConfig,
         processes: Vec<ProcessHandle>,
         clock: Arc<dyn Clock>,
     ) -> Result<Agent> {
+        let node_id = node_id.into();
+        let gpus = gpus.into();
         let stop = Arc::new(AtomicBool::new(false));
         let crashed = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
@@ -112,7 +115,7 @@ impl Agent {
         // -- node health: register + heartbeat (persistent connection) ------
         let mut kv = KvClient::connect(coord_addr)?;
         let lease = kv.lease_grant(cfg.lease_ttl_s)?;
-        let info = NodeInfo { id: node_id.to_string(), gpus, addr: String::new() };
+        let info = NodeInfo { id: node_id.to_string(), gpus: gpus.0, addr: String::new() };
         kv.put(&format!("{NODES_PREFIX}{node_id}"), &info.to_json().encode(), Some(lease))?;
         {
             let stop = stop.clone();
@@ -226,9 +229,9 @@ impl Drop for Agent {
     }
 }
 
-fn report(kv: &mut KvClient, node: u32, seq: &AtomicU32, task: u32, class: &str, msg: &str) {
+fn report(kv: &mut KvClient, node: NodeId, seq: &AtomicU32, task: TaskId, class: &str, msg: &str) {
     let n = seq.fetch_add(1, Ordering::Relaxed);
-    let body = Value::obj().with("task", task as u64).with("class", class).with("msg", msg);
+    let body = Value::obj().with("task", task.0 as u64).with("class", class).with("msg", msg);
     let _ = kv.put(&format!("/status/{node}/{n}"), &body.encode(), None);
 }
 
@@ -240,7 +243,7 @@ mod tests {
 
     #[test]
     fn process_handle_lifecycle() {
-        let p = ProcessHandle::new(3);
+        let p = ProcessHandle::new(3u32);
         assert!(p.is_alive());
         p.kill();
         assert!(!p.is_alive());
@@ -251,7 +254,7 @@ mod tests {
 
     #[test]
     fn exception_is_taken_once() {
-        let p = ProcessHandle::new(0);
+        let p = ProcessHandle::new(0u32);
         p.throw("CUDA error");
         assert_eq!(p.exception.lock().unwrap().take(), Some("CUDA error".into()));
         assert_eq!(p.exception.lock().unwrap().take(), None);
@@ -259,7 +262,7 @@ mod tests {
 
     #[test]
     fn iteration_hooks_record_durations() {
-        let p = ProcessHandle::new(0);
+        let p = ProcessHandle::new(0u32);
         p.begin_iteration(10.0);
         p.end_iteration(12.5);
         p.begin_iteration(13.0);

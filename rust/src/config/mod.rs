@@ -6,6 +6,7 @@
 //! multi-task cases used by Figs. 10c and 11. Everything round-trips
 //! through [`crate::ser::Value`] so configs can be given as JSON files.
 
+use crate::proto::TaskId;
 use crate::ser::{JsonError, Value};
 
 /// Transformer shape for the analytical performance model (perfmodel).
@@ -174,7 +175,7 @@ impl ClusterSpec {
 /// One training task in the multi-task cluster (§5.1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskSpec {
-    pub id: u32,
+    pub id: TaskId,
     pub model: String,
     /// Priority weight w(t) ∈ [0.5, 2.0] by recommendation.
     pub weight: f64,
@@ -183,13 +184,13 @@ pub struct TaskSpec {
 }
 
 impl TaskSpec {
-    pub fn new(id: u32, model: &str, weight: f64, min_workers: u32) -> TaskSpec {
-        TaskSpec { id, model: model.to_string(), weight, min_workers }
+    pub fn new(id: impl Into<TaskId>, model: &str, weight: f64, min_workers: u32) -> TaskSpec {
+        TaskSpec { id: id.into(), model: model.to_string(), weight, min_workers }
     }
 
     pub fn to_json(&self) -> Value {
         Value::obj()
-            .with("id", self.id as u64)
+            .with("id", self.id.0 as u64)
             .with("model", self.model.as_str())
             .with("weight", self.weight)
             .with("min_workers", self.min_workers as u64)
@@ -197,7 +198,7 @@ impl TaskSpec {
 
     pub fn from_json(v: &Value) -> Result<TaskSpec, JsonError> {
         Ok(TaskSpec {
-            id: v.req("id")?.as_u64().unwrap_or(0) as u32,
+            id: TaskId(v.req("id")?.as_u64().unwrap_or(0) as u32),
             model: v.req("model")?.as_str().unwrap_or_default().to_string(),
             weight: v.req("weight")?.as_f64().unwrap_or(1.0),
             min_workers: v.req("min_workers")?.as_u64().unwrap_or(1) as u32,
@@ -282,6 +283,9 @@ pub struct UnicronConfig {
     pub max_reattempts: u32,
     /// Process-restart budget before escalating SEV2→SEV1.
     pub max_restarts: u32,
+    /// Background cadence (seconds) at which the live driver refreshes the
+    /// §5.2 precomputed plan table when it has gone stale.
+    pub plan_refresh_period_s: f64,
 }
 
 impl Default for UnicronConfig {
@@ -297,6 +301,7 @@ impl Default for UnicronConfig {
             mtbf_per_gpu_s: 1.9e7,
             max_reattempts: 3,
             max_restarts: 1,
+            plan_refresh_period_s: 0.5,
         }
     }
 }
@@ -369,7 +374,7 @@ mod tests {
 
     #[test]
     fn task_spec_json_roundtrip() {
-        let t = TaskSpec::new(3, "gpt3-7b", 1.4, 8);
+        let t = TaskSpec::new(3u32, "gpt3-7b", 1.4, 8);
         let back = TaskSpec::from_json(&Value::parse(&t.to_json().encode()).unwrap()).unwrap();
         assert_eq!(t, back);
     }

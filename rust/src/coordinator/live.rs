@@ -3,10 +3,21 @@
 //! the coordinator embeds the status monitor (kvstore), agents connect over
 //! the network, and every detection path of Table 2 flows through here.
 //!
-//! Timed work (lease-expiry sweeps) runs on the same
-//! [`crate::engine::EventQueue`] the simulator advances — here it is drained
-//! against wall-clock `now`, there against simulated time, with identical
-//! `(time, seq)` ordering. One scheduling substrate, two drivers.
+//! Timed work (lease-expiry sweeps, §5.2 background plan refresh) runs on
+//! the same [`crate::engine::EventQueue`] the simulator advances — here it
+//! is drained against wall-clock `now`, there against simulated time, with
+//! identical `(time, seq)` ordering. One scheduling substrate, two drivers.
+//!
+//! The plan refresh is the paper's "proactive plan generation": whenever the
+//! precomputed [`crate::planner::ScenarioLookup`] is stale (assignments
+//! moved, task set changed) the loop snapshots a
+//! [`super::PlanRefreshJob`] and runs the O(m·n²)-per-scenario rebuild on a
+//! *worker thread*, on the `UnicronConfig::plan_refresh_period_s` cadence.
+//! The event loop never blocks on it — lease sweeps and detection keep
+//! their latency during the rebuild — and an epoch check on install drops
+//! results that raced a state change. SEV1 replans are O(1) table commits
+//! without any caller having to remember to call
+//! [`Coordinator::precompute_plans`].
 //!
 //! Key layout:
 //!   /nodes/<id>            lease-attached registration (node health)
@@ -19,13 +30,13 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::{Action, CoordEvent, Coordinator};
-use crate::config::UnicronConfig;
+use super::{Action, CoordEvent, Coordinator, NodeId, TaskId};
 use crate::detect::classify_exception;
 use crate::engine::EventQueue;
 use crate::failure::ErrorKind;
 use crate::kvstore::{net, Event, Store};
 use crate::membership::{membership_event, MembershipEvent, NODES_PREFIX};
+use crate::planner::ScenarioLookup;
 use crate::ser::Value;
 use crate::util::Clock;
 
@@ -37,6 +48,8 @@ pub const CMD_PREFIX: &str = "/cmd/";
 enum LoopTask {
     /// Lease-expiry sweep: drives SEV1 `NodeLost` detection (Table 2 case 1).
     LeaseSweep,
+    /// §5.2 background precompute: rebuild the scenario table when stale.
+    PlanRefresh,
 }
 
 /// Timestamped record of a detected event (Table 2's measurement hook).
@@ -52,29 +65,33 @@ pub struct CoordinatorLive {
     pub store: Store,
     pub addr: std::net::SocketAddr,
     detections: Arc<Mutex<Vec<Detection>>>,
+    /// Completed background scenario-table rebuilds (observability).
+    plan_refreshes: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     server: Option<crate::rpc::Server>,
     loop_thread: Option<JoinHandle<()>>,
 }
 
 impl CoordinatorLive {
-    /// Start the coordinator: kvstore server on `addr` + event loop.
+    /// Start the live driver around a built [`Coordinator`] (see
+    /// [`Coordinator::builder`]): kvstore server on `addr` + event loop.
     pub fn start(
-        cfg: UnicronConfig,
-        available_workers: u32,
-        gpus_per_node: u32,
+        mut coord: Coordinator,
         clock: Arc<dyn Clock>,
         addr: &str,
     ) -> Result<CoordinatorLive> {
+        let cfg = coord.cfg.clone();
         let store = Store::new(clock.clone());
         let server = net::serve(store.clone(), addr)?;
         let server_addr = server.addr;
 
         let detections = Arc::new(Mutex::new(Vec::new()));
+        let plan_refreshes = Arc::new(AtomicU64::new(0));
         let stop = Arc::new(AtomicBool::new(false));
 
         let store2 = store.clone();
         let det2 = detections.clone();
+        let refreshes2 = plan_refreshes.clone();
         let stop2 = stop.clone();
         let seq2 = Arc::new(AtomicU64::new(0));
         let clock2 = clock.clone();
@@ -83,17 +100,49 @@ impl CoordinatorLive {
             // interval) — frequent enough that expiry detection stays well
             // inside the lease TTL
             let sweep_period = (cfg.heartbeat_period_s * 0.5).max(0.005);
-            let mut coord = Coordinator::new(cfg, available_workers, gpus_per_node);
+            let refresh_period = cfg.plan_refresh_period_s.max(0.005);
             let nodes_rx = store2.watch(NODES_PREFIX);
             let status_rx = store2.watch(STATUS_PREFIX);
             let mut timers: EventQueue<LoopTask> = EventQueue::new();
             timers.schedule(clock2.now(), LoopTask::LeaseSweep);
+            timers.schedule(clock2.now(), LoopTask::PlanRefresh);
+            // at most one background precompute in flight at a time
+            let mut inflight: Option<JoinHandle<(u64, ScenarioLookup)>> = None;
+            let mut refresh_broken = false;
             while !stop2.load(Ordering::Relaxed) {
+                // land a finished background rebuild (never blocks)
+                if inflight.as_ref().is_some_and(JoinHandle::is_finished) {
+                    match inflight.take().unwrap().join() {
+                        Ok((epoch, lookup)) => {
+                            if coord.install_lookup(epoch, lookup) {
+                                refreshes2.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            // a panicking precompute is a planner bug: surface
+                            // it once and stop respawning the identical job
+                            // every period (replans fall back to live solves)
+                            refresh_broken = true;
+                            eprintln!(
+                                "coordinator: background plan refresh panicked; \
+                                 disabling background precompute"
+                            );
+                        }
+                    }
+                }
                 for (_, task) in timers.pop_due(clock2.now()) {
                     match task {
                         LoopTask::LeaseSweep => {
                             store2.tick(); // lease expiry -> Delete{expired} events
                             timers.schedule(clock2.now() + sweep_period, LoopTask::LeaseSweep);
+                        }
+                        LoopTask::PlanRefresh => {
+                            if inflight.is_none() && !refresh_broken {
+                                if let Some(job) = coord.plan_refresh_job() {
+                                    inflight = Some(std::thread::spawn(move || job.compute()));
+                                }
+                            }
+                            timers.schedule(clock2.now() + refresh_period, LoopTask::PlanRefresh);
                         }
                     }
                 }
@@ -102,11 +151,13 @@ impl CoordinatorLive {
                     match membership_event(&ev) {
                         Some(MembershipEvent::Joined(info)) => {
                             events.push(CoordEvent::NodeJoined {
-                                node: info.id.parse().unwrap_or(0),
+                                node: NodeId(info.id.parse().unwrap_or(0)),
                             });
                         }
                         Some(MembershipEvent::Left { id, expired }) if expired => {
-                            events.push(CoordEvent::NodeLost { node: id.parse().unwrap_or(0) });
+                            events.push(CoordEvent::NodeLost {
+                                node: NodeId(id.parse().unwrap_or(0)),
+                            });
                         }
                         _ => {}
                     }
@@ -129,12 +180,17 @@ impl CoordinatorLive {
                 }
                 std::thread::sleep(Duration::from_millis(5));
             }
+            // drain any in-flight rebuild so shutdown doesn't leak the worker
+            if let Some(h) = inflight.take() {
+                let _ = h.join();
+            }
         })?;
 
         Ok(CoordinatorLive {
             store,
             addr: server_addr,
             detections,
+            plan_refreshes,
             stop,
             server: Some(server),
             loop_thread: Some(loop_thread),
@@ -144,6 +200,11 @@ impl CoordinatorLive {
     /// Snapshot of everything detected so far.
     pub fn detections(&self) -> Vec<Detection> {
         self.detections.lock().unwrap().clone()
+    }
+
+    /// How many background scenario-table rebuilds have completed.
+    pub fn plan_refreshes(&self) -> u64 {
+        self.plan_refreshes.load(Ordering::Relaxed)
     }
 
     /// Block until a detection matching `pred` appears (or timeout). Returns
@@ -185,9 +246,9 @@ impl Drop for CoordinatorLive {
 /// `/status/<node>/<seq>` + JSON body -> coordinator event.
 fn parse_status(key: &str, value: &str) -> Option<CoordEvent> {
     let rest = key.strip_prefix(STATUS_PREFIX)?;
-    let node: u32 = rest.split('/').next()?.parse().ok()?;
+    let node = NodeId(rest.split('/').next()?.parse().ok()?);
     let v = Value::parse(value).ok()?;
-    let task = v.get("task").and_then(Value::as_u64).unwrap_or(0) as u32;
+    let task = TaskId(v.get("task").and_then(Value::as_u64).unwrap_or(0) as u32);
     let class = v.get("class").and_then(Value::as_str).unwrap_or("");
     let msg = v.get("msg").and_then(Value::as_str).unwrap_or("");
     let kind = match class {
@@ -204,10 +265,10 @@ fn dispatch_actions(store: &Store, seq: &AtomicU64, actions: &[Action]) {
     for a in actions {
         let (node, body) = match a {
             Action::InstructReattempt { node, task } => {
-                (*node, Value::obj().with("op", "reattempt").with("task", *task as u64))
+                (*node, Value::obj().with("op", "reattempt").with("task", task.0 as u64))
             }
             Action::InstructRestart { node, task } => {
-                (*node, Value::obj().with("op", "restart").with("task", *task as u64))
+                (*node, Value::obj().with("op", "restart").with("task", task.0 as u64))
             }
             Action::IsolateNode { node } => (*node, Value::obj().with("op", "isolate")),
             // plans and alerts are coordinator-local records
@@ -221,21 +282,36 @@ fn dispatch_actions(store: &Store, seq: &AtomicU64, actions: &[Action]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{TaskSpec, UnicronConfig};
+    use crate::planner::PlanTask;
+    use crate::proto::WorkerCount;
     use crate::util::RealClock;
 
     #[test]
     fn parse_status_variants() {
         assert_eq!(
             parse_status("/status/3/0", r#"{"task":1,"class":"exception","msg":"ECC error"}"#),
-            Some(CoordEvent::ErrorReport { node: 3, task: 1, kind: ErrorKind::EccError })
+            Some(CoordEvent::ErrorReport {
+                node: NodeId(3),
+                task: TaskId(1),
+                kind: ErrorKind::EccError
+            })
         );
         assert_eq!(
             parse_status("/status/2/9", r#"{"task":0,"class":"exit","msg":""}"#),
-            Some(CoordEvent::ErrorReport { node: 2, task: 0, kind: ErrorKind::ExitedAbnormally })
+            Some(CoordEvent::ErrorReport {
+                node: NodeId(2),
+                task: TaskId(0),
+                kind: ErrorKind::ExitedAbnormally
+            })
         );
         assert_eq!(
             parse_status("/status/2/9", r#"{"task":0,"class":"stall","msg":""}"#),
-            Some(CoordEvent::ErrorReport { node: 2, task: 0, kind: ErrorKind::TaskHang })
+            Some(CoordEvent::ErrorReport {
+                node: NodeId(2),
+                task: TaskId(0),
+                kind: ErrorKind::TaskHang
+            })
         );
         assert_eq!(parse_status("/status/2/9", r#"{"class":"bogus"}"#), None);
         assert_eq!(parse_status("/other/2", "{}"), None);
@@ -244,15 +320,42 @@ mod tests {
     #[test]
     fn live_coordinator_starts_and_stops() {
         let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
-        let mut live = CoordinatorLive::start(
-            UnicronConfig::default(),
-            16,
-            8,
-            clock,
-            "127.0.0.1:0",
-        )
-        .unwrap();
+        let coord =
+            Coordinator::builder().workers(16u32).gpus_per_node(8u32).build();
+        let mut live = CoordinatorLive::start(coord, clock, "127.0.0.1:0").unwrap();
         assert!(live.detections().is_empty());
+        live.shutdown();
+    }
+
+    #[test]
+    fn background_plan_refresh_keeps_lookup_warm() {
+        // A coordinator with one registered task: the loop must rebuild the
+        // stale scenario table on its own cadence, with no caller involved.
+        let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+        let cfg = UnicronConfig { plan_refresh_period_s: 0.01, ..Default::default() };
+        let throughput = (0..=24u32).map(|x| 1e12 * (x as f64).max(0.0)).collect();
+        let task = PlanTask {
+            spec: TaskSpec::new(0u32, "m", 1.0, 1),
+            throughput,
+            current: WorkerCount(0),
+            fault: false,
+        };
+        let coord = Coordinator::builder()
+            .config(cfg)
+            .workers(16u32)
+            .gpus_per_node(8u32)
+            .task(task)
+            .build();
+        let mut live = CoordinatorLive::start(coord, clock, "127.0.0.1:0").unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while live.plan_refreshes() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(live.plan_refreshes() >= 1, "background precompute never ran");
+        // a fresh table is not rebuilt again and again: the count settles
+        let settled = live.plan_refreshes();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(live.plan_refreshes(), settled, "fresh table must not be rebuilt");
         live.shutdown();
     }
 }

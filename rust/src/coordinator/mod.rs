@@ -4,7 +4,10 @@
 //!
 //! The core is a synchronous, fully-deterministic state machine —
 //! [`Coordinator::handle`] maps one [`CoordEvent`] to a list of [`Action`]s;
-//! it never reads a clock, a thread, or a socket. Two drivers feed it:
+//! it never reads a clock, a thread, or a socket. The event/action
+//! vocabulary itself lives in the [`crate::proto`] layer (typed ids,
+//! serialization, the [`DecisionLog`] record/replay artifact); this module
+//! re-exports it. Two drivers feed the state machine:
 //!
 //! * the live TCP driver ([`live`]) translates kvstore watches into
 //!   [`CoordEvent`]s and publishes the returned [`Action`]s to agents over
@@ -20,55 +23,29 @@
 //! the Table 2 / Fig. 9 / Fig. 11 experiments exercise the *actual*
 //! coordinator rather than a hand-maintained model of it.
 //!
+//! Construction goes through [`Coordinator::builder`] (see DESIGN.md §7 for
+//! the mapping from the old positional constructor).
+//!
 //! Hot path (§5.2): between events the owner calls
 //! [`Coordinator::precompute_plans`] to build a [`ScenarioLookup`] covering
 //! every `(faulted task, worker count)` the next event could produce; a
 //! SEV1 replan then commits a precomputed plan in O(1) table time instead of
 //! running the O(m·n²) DP inside the failure-handling window. The table
-//! invalidates itself whenever committed assignments change.
+//! invalidates itself whenever committed assignments change. The live
+//! driver ([`live`]) refreshes it on a background cadence
+//! (`UnicronConfig::plan_refresh_period_s`), so table freshness no longer
+//! depends on callers remembering to precompute.
 
 pub mod live;
 
 use std::collections::BTreeMap;
 
 use crate::config::UnicronConfig;
-use crate::failure::{ErrorKind, Severity};
-use crate::planner::{solve, Plan, PlanTask, ScenarioLookup};
-
-/// Events the coordinator reacts to. ①–⑥ refer to Fig. 7's triggers.
-#[derive(Debug, Clone, PartialEq)]
-pub enum CoordEvent {
-    /// An agent reported an error observed on `node` for `task` (①②③ by
-    /// the kind's severity).
-    ErrorReport { node: u32, task: u32, kind: ErrorKind },
-    /// A node's lease expired — SEV1 lost connection (①).
-    NodeLost { node: u32 },
-    /// A repaired or new node joined (④).
-    NodeJoined { node: u32 },
-    /// A task completed (⑤).
-    TaskFinished { task: u32 },
-    /// A new task was submitted (⑥).
-    TaskLaunched { task: u32 },
-    /// Outcome of a previously-instructed reattempt/restart.
-    ReattemptResult { node: u32, task: u32, ok: bool },
-    RestartResult { node: u32, task: u32, ok: bool },
-}
-
-/// Instructions the coordinator emits (executed by agents / the simulator).
-#[derive(Debug, Clone, PartialEq)]
-pub enum Action {
-    /// SEV3 ①: retry the failed operation where it failed.
-    InstructReattempt { node: u32, task: u32 },
-    /// SEV2 ②: restart the training process on the node, same configuration;
-    /// state recovers from a DP replica or checkpoint (§6.3).
-    InstructRestart { node: u32, task: u32 },
-    /// SEV1 ③: fence the node out of the cluster.
-    IsolateNode { node: u32 },
-    /// Reconfigure affected tasks to a new plan (assignments per task id).
-    ApplyPlan { plan: Plan, reason: &'static str },
-    /// Page the humans (§3.2 "other external interactions").
-    AlertOps { message: String },
-}
+use crate::failure::Severity;
+use crate::planner::{solve, PlanTask, ScenarioLookup};
+pub use crate::proto::{
+    Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId, WorkerCount,
+};
 
 /// Per-(task, node) escalation bookkeeping.
 #[derive(Debug, Default, Clone)]
@@ -77,23 +54,109 @@ struct EscalationState {
     restarts: u32,
 }
 
+/// A snapshot of everything a background worker needs to rebuild the §5.2
+/// scenario table off the coordinator's thread. Produced by
+/// [`Coordinator::plan_refresh_job`]; the epoch inside ties the result to
+/// the exact coordinator state it was computed for.
+#[derive(Debug, Clone)]
+pub struct PlanRefreshJob {
+    tasks: Vec<PlanTask>,
+    ceiling: u32,
+    cfg: UnicronConfig,
+    epoch: u64,
+}
+
+impl PlanRefreshJob {
+    /// Run the expensive precompute (O((m+1)·n·m·n²)). CPU-bound — call it
+    /// off the event loop; hand the result to
+    /// [`Coordinator::install_lookup`].
+    pub fn compute(self) -> (u64, ScenarioLookup) {
+        (self.epoch, ScenarioLookup::precompute(&self.tasks, self.ceiling, &self.cfg))
+    }
+}
+
+/// Staged construction of a [`Coordinator`] — replaces the old positional
+/// `Coordinator::new(cfg, workers, gpus_per_node)` (DESIGN.md §7).
+#[derive(Debug, Default)]
+pub struct CoordinatorBuilder {
+    cfg: UnicronConfig,
+    workers: WorkerCount,
+    gpus_per_node: Option<WorkerCount>,
+    tasks: Vec<PlanTask>,
+}
+
+impl CoordinatorBuilder {
+    pub fn config(mut self, cfg: UnicronConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Healthy workers (GPUs) available at start.
+    pub fn workers(mut self, w: impl Into<WorkerCount>) -> Self {
+        self.workers = w.into();
+        self
+    }
+
+    /// GPUs contributed per node (to size `NodeLost` effects). Default 8.
+    pub fn gpus_per_node(mut self, g: impl Into<WorkerCount>) -> Self {
+        self.gpus_per_node = Some(g.into());
+        self
+    }
+
+    /// Register one task (with its calibrated throughput table) up front.
+    pub fn task(mut self, task: PlanTask) -> Self {
+        self.tasks.push(task);
+        self
+    }
+
+    /// Register several tasks up front.
+    pub fn tasks(mut self, tasks: impl IntoIterator<Item = PlanTask>) -> Self {
+        self.tasks.extend(tasks);
+        self
+    }
+
+    pub fn build(self) -> Coordinator {
+        let mut coord = Coordinator {
+            cfg: self.cfg,
+            tasks: BTreeMap::new(),
+            available_workers: self.workers.0,
+            gpus_per_node: self.gpus_per_node.unwrap_or(WorkerCount(8)).0,
+            isolated: Vec::new(),
+            escalations: BTreeMap::new(),
+            log: DecisionLog::new(),
+            lookup: None,
+            plan_epoch: 0,
+            lookup_hits: 0,
+            solve_calls: 0,
+        };
+        for t in self.tasks {
+            coord.add_task(t);
+        }
+        coord
+    }
+}
+
 /// The coordinator state machine.
 pub struct Coordinator {
     pub cfg: UnicronConfig,
     /// Planner inputs for every task currently in the cluster.
-    tasks: BTreeMap<u32, PlanTask>,
+    tasks: BTreeMap<TaskId, PlanTask>,
     /// Healthy workers (GPUs) currently available.
-    pub available_workers: u32,
+    available_workers: u32,
     /// GPUs contributed per node (to size NodeLost effects).
-    pub gpus_per_node: u32,
+    gpus_per_node: u32,
     /// Nodes currently isolated (fenced off).
-    pub isolated: Vec<u32>,
-    escalations: BTreeMap<(u32, u32), EscalationState>,
-    /// Audit log of (event, actions) — the tests' and benches' ground truth.
-    pub log: Vec<(CoordEvent, Vec<Action>)>,
+    pub isolated: Vec<NodeId>,
+    escalations: BTreeMap<(TaskId, NodeId), EscalationState>,
+    /// Audit log of (event, actions) — the tests' and benches' ground
+    /// truth, and a serializable [`crate::proto::DecisionLog`] artifact.
+    pub log: DecisionLog,
     /// §5.2 precomputed plan table; `None` when stale (assignments changed
     /// since the last [`Coordinator::precompute_plans`]).
     lookup: Option<ScenarioLookup>,
+    /// Bumped whenever the lookup goes stale — guards stale background
+    /// [`PlanRefreshJob`] results against racing a state change.
+    plan_epoch: u64,
     /// Replans served from the precomputed table (observability/benches).
     pub lookup_hits: u64,
     /// Replans that fell back to a fresh DP solve.
@@ -101,25 +164,33 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(cfg: UnicronConfig, available_workers: u32, gpus_per_node: u32) -> Coordinator {
-        Coordinator {
-            cfg,
-            tasks: BTreeMap::new(),
-            available_workers,
-            gpus_per_node,
-            isolated: Vec::new(),
-            escalations: BTreeMap::new(),
-            log: Vec::new(),
-            lookup: None,
-            lookup_hits: 0,
-            solve_calls: 0,
-        }
+    /// Start building a coordinator (defaults: empty pool, 8 GPUs/node,
+    /// default config).
+    pub fn builder() -> CoordinatorBuilder {
+        CoordinatorBuilder::default()
     }
 
     /// Register a task (with its calibrated throughput table) for planning.
     pub fn add_task(&mut self, task: PlanTask) {
         self.tasks.insert(task.spec.id, task);
-        self.lookup = None; // task set changed: precomputed plans are stale
+        self.invalidate_lookup(); // task set changed: precomputed plans are stale
+    }
+
+    /// The precomputed table is stale: drop it and bump the epoch so any
+    /// in-flight background rebuild for the old state cannot land.
+    fn invalidate_lookup(&mut self) {
+        self.lookup = None;
+        self.plan_epoch += 1;
+    }
+
+    /// Healthy workers (GPUs) currently available.
+    pub fn available_workers(&self) -> WorkerCount {
+        WorkerCount(self.available_workers)
+    }
+
+    /// GPUs contributed per node.
+    pub fn gpus_per_node(&self) -> WorkerCount {
+        WorkerCount(self.gpus_per_node)
     }
 
     /// Full cluster capacity (healthy + isolated nodes' GPUs) — the upper
@@ -141,6 +212,34 @@ impl Coordinator {
         self.lookup = Some(ScenarioLookup::precompute(&ordered, self.capacity_ceiling(), &self.cfg));
     }
 
+    /// Snapshot the inputs for a *background* scenario-table rebuild — the
+    /// paper's "proactive plan generation" without blocking the event loop.
+    /// Returns `None` when there is nothing to do (no tasks, or the table is
+    /// already fresh). Compute the job anywhere (typically a worker thread)
+    /// and hand the result back through [`Coordinator::install_lookup`].
+    pub fn plan_refresh_job(&self) -> Option<PlanRefreshJob> {
+        if self.tasks.is_empty() || self.lookup_is_fresh() {
+            return None;
+        }
+        Some(PlanRefreshJob {
+            tasks: self.tasks.values().cloned().collect(),
+            ceiling: self.capacity_ceiling(),
+            cfg: self.cfg.clone(),
+            epoch: self.plan_epoch,
+        })
+    }
+
+    /// Install a background-computed table. Returns `false` (dropping the
+    /// table) if the assignments or task set changed since the job was
+    /// snapshotted — a stale table must never serve a replan.
+    pub fn install_lookup(&mut self, epoch: u64, lookup: ScenarioLookup) -> bool {
+        if epoch != self.plan_epoch {
+            return false;
+        }
+        self.lookup = Some(lookup);
+        true
+    }
+
     /// True if the next replan will be served from the precomputed table:
     /// the table matches the current task set and covers the current pool
     /// size (a brand-new node joining past the precomputed ceiling falls
@@ -151,7 +250,12 @@ impl Coordinator {
         })
     }
 
-    pub fn task_assignment(&self, task: u32) -> Option<u32> {
+    /// True once at least one task is registered for planning.
+    pub fn has_tasks(&self) -> bool {
+        !self.tasks.is_empty()
+    }
+
+    pub fn task_assignment(&self, task: TaskId) -> Option<WorkerCount> {
         self.tasks.get(&task).map(|t| t.current)
     }
 
@@ -161,13 +265,13 @@ impl Coordinator {
 
     /// Total WAF of the current assignments (cluster health metric).
     pub fn current_waf(&self) -> f64 {
-        self.tasks.values().map(|t| t.waf(t.current)).sum()
+        self.tasks.values().map(|t| t.waf(t.current.0)).sum()
     }
 
     /// Process one event; returns the actions (also appended to `log`).
     pub fn handle(&mut self, event: CoordEvent) -> Vec<Action> {
         let actions = self.dispatch(&event);
-        self.log.push((event, actions.clone()));
+        self.log.record(event, actions.clone());
         actions
     }
 
@@ -182,16 +286,16 @@ impl Coordinator {
             CoordEvent::NodeJoined { node } => {
                 self.isolated.retain(|&n| n != node);
                 self.available_workers += self.gpus_per_node;
-                self.reconfigure("node joined", None)
+                self.reconfigure(PlanReason::NodeJoined, None)
             }
             CoordEvent::TaskFinished { task } => {
                 self.tasks.remove(&task);
-                self.lookup = None; // task set changed
-                self.reconfigure("task finished", None)
+                self.invalidate_lookup(); // task set changed
+                self.reconfigure(PlanReason::TaskFinished, None)
             }
             CoordEvent::TaskLaunched { .. } => {
                 // caller adds the PlanTask via add_task before this event
-                self.reconfigure("task launched", None)
+                self.reconfigure(PlanReason::TaskLaunched, None)
             }
             CoordEvent::ReattemptResult { node, task, ok } => {
                 if ok {
@@ -214,7 +318,7 @@ impl Coordinator {
         }
     }
 
-    fn on_sev3(&mut self, node: u32, task: u32) -> Vec<Action> {
+    fn on_sev3(&mut self, node: NodeId, task: TaskId) -> Vec<Action> {
         let esc = self.escalations.entry((task, node)).or_default();
         if esc.reattempts < self.cfg.max_reattempts {
             esc.reattempts += 1;
@@ -224,7 +328,7 @@ impl Coordinator {
         }
     }
 
-    fn on_sev2(&mut self, node: u32, task: u32) -> Vec<Action> {
+    fn on_sev2(&mut self, node: NodeId, task: TaskId) -> Vec<Action> {
         let esc = self.escalations.entry((task, node)).or_default();
         if esc.restarts < self.cfg.max_restarts {
             esc.restarts += 1;
@@ -234,7 +338,7 @@ impl Coordinator {
         }
     }
 
-    fn on_sev1(&mut self, node: u32, task: Option<u32>) -> Vec<Action> {
+    fn on_sev1(&mut self, node: NodeId, task: Option<TaskId>) -> Vec<Action> {
         if self.isolated.contains(&node) {
             return vec![]; // already fenced; duplicate report
         }
@@ -244,7 +348,7 @@ impl Coordinator {
             Action::IsolateNode { node },
             Action::AlertOps { message: format!("SEV1: node {node} isolated; maintenance required") },
         ];
-        actions.extend(self.reconfigure("SEV1 failure", task));
+        actions.extend(self.reconfigure(PlanReason::Sev1Failure, task));
         actions
     }
 
@@ -255,7 +359,7 @@ impl Coordinator {
     /// [`solve`] otherwise. Both paths produce the identical plan for the
     /// same state; `coordinator::tests::lookup_path_is_equivalent` holds
     /// them to that.
-    fn reconfigure(&mut self, reason: &'static str, faulted_task: Option<u32>) -> Vec<Action> {
+    fn reconfigure(&mut self, reason: PlanReason, faulted_task: Option<TaskId>) -> Vec<Action> {
         if self.tasks.is_empty() {
             return vec![];
         }
@@ -277,12 +381,12 @@ impl Coordinator {
         // precomputed table remains valid only if nothing actually moved.
         let mut changed = false;
         for (pt, &x) in self.tasks.values_mut().zip(plan.assignment.iter()) {
-            changed |= pt.current != x;
-            pt.current = x;
+            changed |= pt.current.0 != x;
+            pt.current = WorkerCount(x);
             pt.fault = false;
         }
         if changed {
-            self.lookup = None;
+            self.invalidate_lookup();
         }
         vec![Action::ApplyPlan { plan, reason }]
     }
@@ -292,18 +396,26 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::config::TaskSpec;
+    use crate::failure::ErrorKind;
 
     fn plan_task(id: u32, min: u32, current: u32, n: u32) -> PlanTask {
         let throughput =
             (0..=n).map(|x| if x >= min { 1e12 * (x as f64).powf(0.9) } else { 0.0 }).collect();
-        PlanTask { spec: TaskSpec::new(id, "m", 1.0, min), throughput, current, fault: false }
+        PlanTask {
+            spec: TaskSpec::new(id, "m", 1.0, min),
+            throughput,
+            current: WorkerCount(current),
+            fault: false,
+        }
     }
 
     fn coord(workers: u32) -> Coordinator {
-        let mut c = Coordinator::new(UnicronConfig::default(), workers, 8);
-        c.add_task(plan_task(0, 2, workers / 2, workers + 16));
-        c.add_task(plan_task(1, 2, workers / 2, workers + 16));
-        c
+        Coordinator::builder()
+            .workers(workers)
+            .gpus_per_node(8u32)
+            .task(plan_task(0, 2, workers / 2, workers + 16))
+            .task(plan_task(1, 2, workers / 2, workers + 16))
+            .build()
     }
 
     #[test]
@@ -312,50 +424,70 @@ mod tests {
         // three reattempts allowed
         for i in 0..3 {
             let a = c.handle(CoordEvent::ErrorReport {
-                node: 1,
-                task: 0,
+                node: NodeId(1),
+                task: TaskId(0),
                 kind: ErrorKind::ConnectionRefused,
             });
-            assert_eq!(a, vec![Action::InstructReattempt { node: 1, task: 0 }], "attempt {i}");
+            assert_eq!(
+                a,
+                vec![Action::InstructReattempt { node: NodeId(1), task: TaskId(0) }],
+                "attempt {i}"
+            );
         }
         // fourth SEV3 -> restart (SEV2 path)
         let a = c.handle(CoordEvent::ErrorReport {
-            node: 1,
-            task: 0,
+            node: NodeId(1),
+            task: TaskId(0),
             kind: ErrorKind::ConnectionRefused,
         });
-        assert_eq!(a, vec![Action::InstructRestart { node: 1, task: 0 }]);
+        assert_eq!(a, vec![Action::InstructRestart { node: NodeId(1), task: TaskId(0) }]);
     }
 
     #[test]
     fn reattempt_success_resets_budget() {
         let mut c = coord(32);
         for _ in 0..3 {
-            c.handle(CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::LinkFlapping });
+            c.handle(CoordEvent::ErrorReport {
+                node: NodeId(1),
+                task: TaskId(0),
+                kind: ErrorKind::LinkFlapping,
+            });
         }
-        c.handle(CoordEvent::ReattemptResult { node: 1, task: 0, ok: true });
-        let a = c.handle(CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::LinkFlapping });
-        assert_eq!(a, vec![Action::InstructReattempt { node: 1, task: 0 }]);
+        c.handle(CoordEvent::ReattemptResult { node: NodeId(1), task: TaskId(0), ok: true });
+        let a = c.handle(CoordEvent::ErrorReport {
+            node: NodeId(1),
+            task: TaskId(0),
+            kind: ErrorKind::LinkFlapping,
+        });
+        assert_eq!(a, vec![Action::InstructReattempt { node: NodeId(1), task: TaskId(0) }]);
     }
 
     #[test]
     fn sev2_restarts_then_escalates_to_sev1() {
         let mut c = coord(32);
-        let a = c.handle(CoordEvent::ErrorReport { node: 2, task: 1, kind: ErrorKind::CudaError });
-        assert_eq!(a, vec![Action::InstructRestart { node: 2, task: 1 }]);
+        let a = c.handle(CoordEvent::ErrorReport {
+            node: NodeId(2),
+            task: TaskId(1),
+            kind: ErrorKind::CudaError,
+        });
+        assert_eq!(a, vec![Action::InstructRestart { node: NodeId(2), task: TaskId(1) }]);
         // restart failed -> SEV1: isolate + alert + replan
-        let a = c.handle(CoordEvent::RestartResult { node: 2, task: 1, ok: false });
-        assert!(matches!(a[0], Action::IsolateNode { node: 2 }));
+        let a = c.handle(CoordEvent::RestartResult { node: NodeId(2), task: TaskId(1), ok: false });
+        assert!(matches!(a[0], Action::IsolateNode { node: NodeId(2) }));
         assert!(matches!(a[1], Action::AlertOps { .. }));
         assert!(matches!(a[2], Action::ApplyPlan { .. }));
-        assert_eq!(c.available_workers, 24);
-        assert_eq!(c.isolated, vec![2]);
+        assert_eq!(c.available_workers(), WorkerCount(24));
+        assert_eq!(c.isolated, vec![NodeId(2)]);
     }
 
     #[test]
     fn sev1_reconfigures_within_reduced_capacity() {
         let mut c = coord(32);
-        let a = c.handle(CoordEvent::ErrorReport { node: 0, task: 0, kind: ErrorKind::EccError });
+        let a = c.handle(CoordEvent::ErrorReport {
+            node: NodeId(0),
+            task: TaskId(0),
+            kind: ErrorKind::EccError,
+        });
         let plan = a
             .iter()
             .find_map(|x| match x {
@@ -366,42 +498,42 @@ mod tests {
         assert!(plan.workers_used <= 24);
         // assignments were committed
         let total: u32 =
-            (0..=1).map(|t| c.task_assignment(t).unwrap()).sum();
+            (0..=1).map(|t| c.task_assignment(TaskId(t)).unwrap().0).sum();
         assert!(total <= 24);
     }
 
     #[test]
     fn duplicate_sev1_for_same_node_is_idempotent() {
         let mut c = coord(32);
-        c.handle(CoordEvent::NodeLost { node: 3 });
-        let before = c.available_workers;
-        let a = c.handle(CoordEvent::NodeLost { node: 3 });
+        c.handle(CoordEvent::NodeLost { node: NodeId(3) });
+        let before = c.available_workers();
+        let a = c.handle(CoordEvent::NodeLost { node: NodeId(3) });
         assert!(a.is_empty());
-        assert_eq!(c.available_workers, before);
+        assert_eq!(c.available_workers(), before);
     }
 
     #[test]
     fn node_join_triggers_reconfiguration() {
         let mut c = coord(32);
-        c.handle(CoordEvent::NodeLost { node: 1 });
-        assert_eq!(c.available_workers, 24);
-        let a = c.handle(CoordEvent::NodeJoined { node: 1 });
-        assert_eq!(c.available_workers, 32);
+        c.handle(CoordEvent::NodeLost { node: NodeId(1) });
+        assert_eq!(c.available_workers(), WorkerCount(24));
+        let a = c.handle(CoordEvent::NodeJoined { node: NodeId(1) });
+        assert_eq!(c.available_workers(), WorkerCount(32));
         assert!(c.isolated.is_empty());
-        assert!(matches!(a[0], Action::ApplyPlan { reason: "node joined", .. }));
+        assert!(matches!(a[0], Action::ApplyPlan { reason: PlanReason::NodeJoined, .. }));
     }
 
     #[test]
     fn task_lifecycle_triggers_reconfiguration() {
         let mut c = coord(32);
-        let a = c.handle(CoordEvent::TaskFinished { task: 0 });
-        assert!(matches!(a[0], Action::ApplyPlan { reason: "task finished", .. }));
-        assert!(c.task_assignment(0).is_none());
+        let a = c.handle(CoordEvent::TaskFinished { task: TaskId(0) });
+        assert!(matches!(a[0], Action::ApplyPlan { reason: PlanReason::TaskFinished, .. }));
+        assert!(c.task_assignment(TaskId(0)).is_none());
         // remaining task can now take everything useful
         c.add_task(plan_task(2, 2, 0, 48));
-        let a = c.handle(CoordEvent::TaskLaunched { task: 2 });
-        assert!(matches!(a[0], Action::ApplyPlan { reason: "task launched", .. }));
-        assert!(c.task_assignment(2).unwrap() > 0);
+        let a = c.handle(CoordEvent::TaskLaunched { task: TaskId(2) });
+        assert!(matches!(a[0], Action::ApplyPlan { reason: PlanReason::TaskLaunched, .. }));
+        assert!(c.task_assignment(TaskId(2)).unwrap().0 > 0);
     }
 
     #[test]
@@ -409,13 +541,17 @@ mod tests {
         // Same event storm, one coordinator precomputing between events, one
         // always solving live — the audit logs must be identical.
         let events = [
-            CoordEvent::TaskLaunched { task: 0 },
-            CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::EccError },
-            CoordEvent::NodeLost { node: 2 },
-            CoordEvent::NodeJoined { node: 1 },
-            CoordEvent::ErrorReport { node: 3, task: 1, kind: ErrorKind::NvlinkError },
-            CoordEvent::TaskFinished { task: 0 },
-            CoordEvent::NodeJoined { node: 2 },
+            CoordEvent::TaskLaunched { task: TaskId(0) },
+            CoordEvent::ErrorReport { node: NodeId(1), task: TaskId(0), kind: ErrorKind::EccError },
+            CoordEvent::NodeLost { node: NodeId(2) },
+            CoordEvent::NodeJoined { node: NodeId(1) },
+            CoordEvent::ErrorReport {
+                node: NodeId(3),
+                task: TaskId(1),
+                kind: ErrorKind::NvlinkError,
+            },
+            CoordEvent::TaskFinished { task: TaskId(0) },
+            CoordEvent::NodeJoined { node: NodeId(2) },
         ];
         let mut warm = coord(32);
         let mut cold = coord(32);
@@ -440,7 +576,7 @@ mod tests {
         c.precompute_plans();
         assert!(c.lookup_is_fresh());
         // a SEV1 shrinks the pool and moves workers: the table must go stale
-        c.handle(CoordEvent::NodeLost { node: 0 });
+        c.handle(CoordEvent::NodeLost { node: NodeId(0) });
         assert!(!c.lookup_is_fresh(), "stale table must not survive a commit");
         // adding a task also invalidates
         c.precompute_plans();
@@ -452,14 +588,44 @@ mod tests {
     #[test]
     fn waf_drops_after_sev1_and_recovers_after_join() {
         let mut c = coord(32);
-        c.handle(CoordEvent::TaskLaunched { task: 99 }); // force initial plan
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(99) }); // force initial plan
         let healthy = c.current_waf();
-        c.handle(CoordEvent::NodeLost { node: 0 });
+        c.handle(CoordEvent::NodeLost { node: NodeId(0) });
         let degraded = c.current_waf();
         assert!(degraded < healthy);
-        c.handle(CoordEvent::NodeJoined { node: 0 });
+        c.handle(CoordEvent::NodeJoined { node: NodeId(0) });
         let recovered = c.current_waf();
         assert!(recovered >= degraded);
         assert!((recovered - healthy).abs() < 1e-6 * healthy);
+    }
+
+    #[test]
+    fn background_refresh_job_rejects_stale_installs() {
+        let mut c = coord(32);
+        let job = c.plan_refresh_job().expect("stale table must produce a job");
+        // assignments move before the job lands: the install must be rejected
+        c.handle(CoordEvent::NodeLost { node: NodeId(5) });
+        let (epoch, lookup) = job.compute();
+        assert!(!c.install_lookup(epoch, lookup), "stale table must not land");
+        assert!(!c.lookup_is_fresh());
+        // a job snapshotted from the new state installs fine
+        let (epoch, lookup) = c.plan_refresh_job().unwrap().compute();
+        assert!(c.install_lookup(epoch, lookup));
+        assert!(c.lookup_is_fresh());
+        // and a fresh table means there is nothing left to rebuild
+        assert!(c.plan_refresh_job().is_none());
+        // the installed table serves the next replan from the hot path
+        c.handle(CoordEvent::NodeJoined { node: NodeId(5) });
+        assert!(c.lookup_hits >= 1, "installed table must serve replans");
+    }
+
+    #[test]
+    fn builder_registers_tasks_and_defaults() {
+        let c =
+            Coordinator::builder().workers(WorkerCount(16)).task(plan_task(4, 2, 0, 32)).build();
+        assert_eq!(c.available_workers(), WorkerCount(16));
+        assert_eq!(c.gpus_per_node(), WorkerCount(8), "default GPUs per node");
+        assert!(c.has_tasks());
+        assert_eq!(c.task_assignment(TaskId(4)), Some(WorkerCount(0)));
     }
 }

@@ -114,6 +114,34 @@ impl ErrorKind {
         ]
     }
 
+    /// Stable snake_case wire name — the [`crate::proto`] serialization of
+    /// this kind. Unknown names are rejected on decode (versioning rule).
+    pub fn name(self) -> &'static str {
+        use ErrorKind::*;
+        match self {
+            LostConnection => "lost_connection",
+            ExitedAbnormally => "exited_abnormally",
+            ConnectionRefused => "connection_refused",
+            IllegalMemoryAccess => "illegal_memory_access",
+            EccError => "ecc_error",
+            InvalidDmaMapping => "invalid_dma_mapping",
+            CudaError => "cuda_error",
+            NvlinkError => "nvlink_error",
+            GpuDriverError => "gpu_driver_error",
+            OtherNetworkError => "other_network_error",
+            OtherSoftwareError => "other_software_error",
+            NcclTimeout => "nccl_timeout",
+            LinkFlapping => "link_flapping",
+            TaskHang => "task_hang",
+            SlowSoftwareError => "slow_software_error",
+        }
+    }
+
+    /// Inverse of [`ErrorKind::name`].
+    pub fn from_name(s: &str) -> Option<ErrorKind> {
+        ErrorKind::all().iter().copied().find(|k| k.name() == s)
+    }
+
     /// Representative split of §1/§2.2: ~73 % of failures are transient
     /// (restart suffices — SEV2/SEV3), 37 % of the *hardware-related* ones
     /// need node drain (SEV1). Used by the trace generator's kind sampler.

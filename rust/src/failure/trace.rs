@@ -5,6 +5,7 @@
 //! similar rate. Arrivals are Poisson; all draws are seeded.
 
 use crate::failure::{ErrorKind, Severity};
+use crate::proto::{NodeId, TaskId};
 use crate::rng::{Rand, Xoshiro256};
 
 /// One failure occurrence in a trace.
@@ -13,8 +14,8 @@ pub struct FailureEvent {
     /// Seconds from trace start.
     pub at_s: f64,
     pub kind: ErrorKind,
-    /// Node index the failure hits.
-    pub node: u32,
+    /// Node the failure hits.
+    pub node: NodeId,
     /// For SEV1 (node-drain) failures: seconds until the node is repaired
     /// and rejoins. 0 for SEV2/SEV3.
     pub repair_after_s: f64,
@@ -91,8 +92,8 @@ pub enum LifecycleKind {
 pub struct TaskLifecycle {
     /// Seconds from trace start.
     pub at_s: f64,
-    /// Task index (into the simulation's `TaskSpec` list / planner id).
-    pub task: u32,
+    /// Task id (index into the simulation's `TaskSpec` list / planner id).
+    pub task: TaskId,
     pub kind: LifecycleKind,
 }
 
@@ -146,7 +147,7 @@ impl Trace {
                 out.push(FailureEvent {
                     at_s: t,
                     kind,
-                    node: rng.below(config.n_nodes as u64) as u32,
+                    node: NodeId(rng.below(config.n_nodes as u64) as u32),
                     repair_after_s: repair,
                 });
             }
@@ -181,14 +182,14 @@ impl Trace {
         for task in n_tasks - n_late..n_tasks {
             lifecycle.push(TaskLifecycle {
                 at_s: rng.uniform(0.0, d * 0.5),
-                task,
+                task: TaskId(task),
                 kind: LifecycleKind::Arrival,
             });
         }
         for task in 0..n_finish.min(n_tasks - n_late) {
             lifecycle.push(TaskLifecycle {
                 at_s: rng.uniform(d * 0.5, d),
-                task,
+                task: TaskId(task),
                 kind: LifecycleKind::Departure,
             });
         }
@@ -200,7 +201,7 @@ impl Trace {
         let mut active = vec![true; n_tasks];
         for l in &self.lifecycle {
             if l.kind == LifecycleKind::Arrival {
-                if let Some(a) = active.get_mut(l.task as usize) {
+                if let Some(a) = active.get_mut(l.task.0 as usize) {
                     *a = false;
                 }
             }
@@ -285,7 +286,7 @@ mod tests {
         for e in &t.events {
             assert!(e.at_s >= prev);
             assert!(e.at_s < cfg.duration_s);
-            assert!(e.node < cfg.n_nodes);
+            assert!(e.node.0 < cfg.n_nodes);
             if e.severity() == Severity::Sev1 {
                 assert!(e.repair_after_s >= cfg.repair_min_s && e.repair_after_s <= cfg.repair_max_s);
             } else {
@@ -299,9 +300,9 @@ mod tests {
     fn lifecycle_sorted_clamped_and_deterministic() {
         let mk = || {
             Trace::generate(TraceConfig::trace_a(), 4).with_lifecycle(vec![
-                TaskLifecycle { at_s: 9e99, task: 1, kind: LifecycleKind::Departure },
-                TaskLifecycle { at_s: 100.0, task: 2, kind: LifecycleKind::Arrival },
-                TaskLifecycle { at_s: -5.0, task: 3, kind: LifecycleKind::Arrival },
+                TaskLifecycle { at_s: 9e99, task: TaskId(1), kind: LifecycleKind::Departure },
+                TaskLifecycle { at_s: 100.0, task: TaskId(2), kind: LifecycleKind::Arrival },
+                TaskLifecycle { at_s: -5.0, task: TaskId(3), kind: LifecycleKind::Arrival },
             ])
         };
         let t = mk();
@@ -325,9 +326,9 @@ mod tests {
         assert_eq!(arrivals.len(), 2);
         assert_eq!(departures.len(), 1);
         // the late cohort is the highest-indexed tasks, in the first half
-        assert!(arrivals.iter().all(|l| l.task >= 4 && l.at_s <= d * 0.5));
+        assert!(arrivals.iter().all(|l| l.task.0 >= 4 && l.at_s <= d * 0.5));
         // departures come from the initially-running cohort, second half
-        assert!(departures.iter().all(|l| l.task < 4 && l.at_s >= d * 0.5));
+        assert!(departures.iter().all(|l| l.task.0 < 4 && l.at_s >= d * 0.5));
         assert_eq!(t.initially_active(6), vec![true, true, true, true, false, false]);
     }
 

@@ -13,6 +13,8 @@
 //!   [`proptest`], [`metrics`]
 //! * deterministic scheduling: [`engine`] — the seeded `(time, seq)` event
 //!   queue both the simulator and the live coordinator loop run on
+//! * the recovery protocol: [`proto`] — typed ids, serializable
+//!   `CoordEvent`/`Action`, and the record/replay `DecisionLog`
 //! * distributed plumbing: [`kvstore`], [`rpc`], [`membership`], [`checkpoint`]
 //! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
 //!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
@@ -36,6 +38,7 @@ pub mod metrics;
 pub mod perfmodel;
 pub mod planner;
 pub mod proptest;
+pub mod proto;
 pub mod repro;
 pub mod rng;
 pub mod rpc;

@@ -14,6 +14,7 @@ use std::sync::Arc;
 use unicron::cli::{usage, Args, OptSpec};
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
 use unicron::coordinator::live::CoordinatorLive;
+use unicron::coordinator::Coordinator;
 use unicron::failure::{Trace, TraceConfig};
 use unicron::perfmodel::best_config;
 use unicron::simulator::{PolicyKind, Simulator};
@@ -70,13 +71,16 @@ fn cmd_repro(argv: &[String]) -> Result<(), String> {
     let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
     let exp = args.positional.first().map(String::as_str).unwrap_or("list");
     if exp == "list" {
-        println!("experiments: {}", unicron::repro::EXPERIMENTS.join(", "));
+        println!("experiments:");
+        for e in unicron::repro::EXPERIMENTS {
+            println!("  {:<14} {}", e.id, e.description);
+        }
         return Ok(());
     }
     let seed = args.u64("seed").map_err(|e| e.to_string())?;
     if exp == "all" {
-        for &e in unicron::repro::EXPERIMENTS {
-            println!("{}\n", unicron::repro::run(e, seed)?);
+        for e in unicron::repro::EXPERIMENTS {
+            println!("{}\n", (e.run)(seed));
         }
         return Ok(());
     }
@@ -187,7 +191,13 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         name => vec![parse_policy(name)?],
     };
     for kind in kinds {
-        let r = Simulator::new(cluster.clone(), cfg.clone(), kind, &tasks).run(&trace);
+        let r = Simulator::builder()
+            .cluster(cluster.clone())
+            .config(cfg.clone())
+            .policy(kind)
+            .tasks(&tasks)
+            .build()
+            .run(&trace);
         println!(
             "{:<10} mean WAF {}FLOP/s   accumulated {}FLOP·s   reduction {:.1}%   transitions {}",
             kind.name(),
@@ -222,16 +232,8 @@ fn cmd_plan(argv: &[String]) -> Result<(), String> {
     let cluster = ClusterSpec::default();
     let cfg = UnicronConfig::default();
     let tasks: Vec<unicron::planner::PlanTask> = table3_case(case)
-        .into_iter()
-        .map(|spec| {
-            let model = ModelSpec::gpt3(&spec.model).unwrap();
-            unicron::planner::PlanTask {
-                throughput: unicron::perfmodel::throughput_table(&model, &cluster, gpus),
-                spec,
-                current: 0,
-                fault: false,
-            }
-        })
+        .iter()
+        .map(|spec| unicron::planner::PlanTask::from_spec(spec, &cluster, gpus))
         .collect();
     let plan = unicron::planner::solve(&tasks, gpus, &cfg);
     for (t, &x) in tasks.iter().zip(&plan.assignment) {
@@ -282,14 +284,13 @@ fn cmd_coordinator(argv: &[String]) -> Result<(), String> {
     ];
     let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
     let clock = Arc::new(RealClock::new());
-    let live = CoordinatorLive::start(
-        UnicronConfig::default(),
-        args.u64("workers").map_err(|e| e.to_string())? as u32,
-        8,
-        clock,
-        args.str("listen").unwrap(),
-    )
-    .map_err(|e| e.to_string())?;
+    let coord = Coordinator::builder()
+        .config(UnicronConfig::default())
+        .workers(args.u64("workers").map_err(|e| e.to_string())? as u32)
+        .gpus_per_node(8u32)
+        .build();
+    let live = CoordinatorLive::start(coord, clock, args.str("listen").unwrap())
+        .map_err(|e| e.to_string())?;
     println!("coordinator listening on {} (kvstore wire protocol)", live.addr);
     let duration = args.f64("duration").map_err(|e| e.to_string())?;
     if duration > 0.0 {

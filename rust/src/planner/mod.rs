@@ -6,7 +6,9 @@
 //! precomputed lookup table that gives O(1) plan retrieval when a failure
 //! actually happens (§5.2).
 
-use crate::config::{TaskSpec, UnicronConfig};
+use crate::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
+use crate::perfmodel::throughput_table;
+use crate::proto::WorkerCount;
 
 /// Everything the solver needs to know about one task.
 #[derive(Debug, Clone)]
@@ -16,13 +18,28 @@ pub struct PlanTask {
     /// (from [`crate::perfmodel::throughput_table`]).
     pub throughput: Vec<f64>,
     /// Workers currently assigned (before reconfiguration).
-    pub current: u32,
+    pub current: WorkerCount,
     /// True if one of this task's workers is the faulting one — forces the
     /// transition penalty even when the worker count stays the same (Eq. 4).
     pub fault: bool,
 }
 
 impl PlanTask {
+    /// Build the planner input for `spec` on `cluster`: resolve the model
+    /// and calibrate its `T(t, x)` table up to `max_workers`. The task
+    /// starts unassigned and fault-free. Panics on an unknown model name
+    /// (programmer error — specs come from the typed model zoo).
+    pub fn from_spec(spec: &TaskSpec, cluster: &ClusterSpec, max_workers: u32) -> PlanTask {
+        let model = ModelSpec::gpt3(&spec.model)
+            .unwrap_or_else(|| panic!("unknown model {}", spec.model));
+        PlanTask {
+            throughput: throughput_table(&model, cluster, max_workers),
+            spec: spec.clone(),
+            current: WorkerCount(0),
+            fault: false,
+        }
+    }
+
     /// WAF — Eq. 2: `F(t,x) = w(t)·T(t,x)` if `x` meets `T_necessary`, else 0.
     pub fn waf(&self, x: u32) -> f64 {
         if x < self.spec.min_workers {
@@ -35,9 +52,14 @@ impl PlanTask {
         self.spec.weight * t
     }
 
+    /// WAF at the currently-committed worker count.
+    pub fn current_waf(&self) -> f64 {
+        self.waf(self.current.0)
+    }
+
     /// Transition indicator — Eq. 4.
     pub fn transitions_to(&self, x_new: u32) -> bool {
-        self.fault || x_new != self.current
+        self.fault || x_new != self.current.0
     }
 }
 
@@ -55,7 +77,7 @@ pub struct Plan {
 /// Reward `G(tᵢ, xᵢ → xᵢ')` — Eq. 3.
 pub fn reward(task: &PlanTask, x_new: u32, d_running: f64, d_transition: f64) -> f64 {
     let gain = task.waf(x_new) * d_running;
-    let penalty = if task.transitions_to(x_new) { task.waf(task.current) * d_transition } else { 0.0 };
+    let penalty = if task.transitions_to(x_new) { task.current_waf() * d_transition } else { 0.0 };
     gain - penalty
 }
 
@@ -291,7 +313,7 @@ pub mod baselines {
     /// we approximate with min_workers which tracks model size).
     pub fn sized(tasks: &[PlanTask], n: u32, sizes: &[f64]) -> Vec<u32> {
         let sizes = sizes.to_vec();
-        proportional(tasks, n, move |t| sizes[t.spec.id as usize])
+        proportional(tasks, n, move |t| sizes[t.spec.id.0 as usize])
     }
 }
 
@@ -308,7 +330,7 @@ mod tests {
         PlanTask {
             spec: TaskSpec::new(id, "synthetic", weight, min),
             throughput,
-            current,
+            current: WorkerCount(current),
             fault,
         }
     }

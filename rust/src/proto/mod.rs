@@ -1,0 +1,658 @@
+//! The recovery protocol — the typed, serializable contract between
+//! detection (§4), cost-aware planning (§5), and transition execution (§6).
+//!
+//! Since PR 1 every recovery decision flows through one vocabulary: a
+//! [`CoordEvent`] goes into the [`crate::coordinator::Coordinator`] state
+//! machine (directly in production, via the environment model in
+//! simulation) and a list of [`Action`]s comes out. This module makes that
+//! vocabulary a first-class protocol instead of an in-memory side-channel:
+//!
+//! * **Typed identifiers** — [`TaskId`], [`NodeId`], and [`WorkerCount`]
+//!   replace the raw `u32`s that used to flow through events, actions,
+//!   [`crate::planner::PlanTask`], and the
+//!   [`crate::simulator::RecoveryPolicy`] trait. A task id can no longer be
+//!   passed where a node id is expected; the compiler checks the protocol.
+//! * **Serialization** — every event, action, and plan round-trips through
+//!   the in-repo [`crate::ser`] JSON layer ([`CoordEvent::to_value`] /
+//!   [`CoordEvent::from_value`] and friends). Numeric fields use Rust's
+//!   shortest-round-trip `f64` formatting, so a decoded plan compares equal
+//!   to the encoded one and replays stay bit-identical.
+//! * **[`DecisionLog`]** — a versioned record of an entire coordinator (or
+//!   simulator) session: the ordered `(event, actions)` pairs. It
+//!   serializes to bytes, deserializes, and [`DecisionLog::replay`]s
+//!   through a fresh [`crate::coordinator::Coordinator`], asserting the
+//!   identical action sequence at every step. Any captured production
+//!   incident thereby becomes a deterministic regression artifact — the
+//!   same grow-only corpus discipline `rust/tests/sim_determinism.rs`
+//!   applies to trace seeds.
+//!
+//! # Versioning rule
+//!
+//! The wire format carries an explicit `version` field (currently
+//! [`DECISION_LOG_VERSION`]). Decoding is **strict**:
+//!
+//! * an artifact whose `version` differs from the reader's is rejected —
+//!   there is no best-effort cross-version parsing;
+//! * an unknown event type, action type, error kind, or plan reason is
+//!   rejected, never skipped. A skipped entry would silently change the
+//!   replayed action sequence, which is exactly the corruption a recorded
+//!   incident exists to rule out.
+//!
+//! Consequently **any** change to the set of variants or their fields —
+//! adding, removing, or renaming — must bump [`DECISION_LOG_VERSION`].
+//! Old artifacts stay readable only by the code revision that wrote them;
+//! the determinism corpus pins revisions, not formats.
+
+use std::fmt;
+
+use crate::failure::ErrorKind;
+use crate::planner::Plan;
+use crate::ser::{JsonError, Value};
+
+/// Format version stamped into every serialized [`DecisionLog`]. Bump on
+/// any variant/field change to the protocol types (see the module docs).
+pub const DECISION_LOG_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Typed identifiers
+// ---------------------------------------------------------------------------
+
+/// Identifier of one training task in the multi-task cluster (§5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct TaskId(pub u32);
+
+/// Identifier of one physical node (machine) in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct NodeId(pub u32);
+
+/// A count of workers (GPUs) — pool sizes, per-task assignments, GPUs per
+/// node. Distinct from the identifier types: a count can be compared and
+/// budgeted, but never used to address a task or node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct WorkerCount(pub u32);
+
+macro_rules! id_impls {
+    ($t:ident) => {
+        impl fmt::Display for $t {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                // delegate so width/alignment flags apply to the number
+                fmt::Display::fmt(&self.0, f)
+            }
+        }
+        impl From<u32> for $t {
+            fn from(x: u32) -> $t {
+                $t(x)
+            }
+        }
+    };
+}
+id_impls!(TaskId);
+id_impls!(NodeId);
+id_impls!(WorkerCount);
+
+// ---------------------------------------------------------------------------
+// Events and actions
+// ---------------------------------------------------------------------------
+
+/// Events the coordinator reacts to. ①–⑥ refer to Fig. 7's triggers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoordEvent {
+    /// An agent reported an error observed on `node` for `task` (①②③ by
+    /// the kind's severity).
+    ErrorReport { node: NodeId, task: TaskId, kind: ErrorKind },
+    /// A node's lease expired — SEV1 lost connection (①).
+    NodeLost { node: NodeId },
+    /// A repaired or new node joined (④).
+    NodeJoined { node: NodeId },
+    /// A task completed (⑤).
+    TaskFinished { task: TaskId },
+    /// A new task was submitted (⑥).
+    TaskLaunched { task: TaskId },
+    /// Outcome of a previously-instructed reattempt/restart.
+    ReattemptResult { node: NodeId, task: TaskId, ok: bool },
+    RestartResult { node: NodeId, task: TaskId, ok: bool },
+}
+
+/// Why a reconfiguration plan was generated — the Fig. 7 trigger class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlanReason {
+    /// Trigger ⑥: a task was submitted/admitted.
+    TaskLaunched,
+    /// Trigger ⑤: a task completed; its workers are redistributed.
+    TaskFinished,
+    /// Trigger ④: a repaired node rejoined the pool.
+    NodeJoined,
+    /// Trigger ①②③ escalated to SEV1: node isolated, cluster replans.
+    Sev1Failure,
+}
+
+impl PlanReason {
+    pub fn all() -> [PlanReason; 4] {
+        [
+            PlanReason::TaskLaunched,
+            PlanReason::TaskFinished,
+            PlanReason::NodeJoined,
+            PlanReason::Sev1Failure,
+        ]
+    }
+
+    /// Stable snake_case wire tag — deliberately distinct from the
+    /// human-readable [`fmt::Display`] label, so cosmetic label edits can
+    /// never silently change the wire format.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanReason::TaskLaunched => "task_launched",
+            PlanReason::TaskFinished => "task_finished",
+            PlanReason::NodeJoined => "node_joined",
+            PlanReason::Sev1Failure => "sev1_failure",
+        }
+    }
+
+    /// Inverse of [`PlanReason::name`].
+    pub fn from_name(s: &str) -> Option<PlanReason> {
+        PlanReason::all().into_iter().find(|r| r.name() == s)
+    }
+
+    /// Human-readable label (the [`fmt::Display`] output).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanReason::TaskLaunched => "task launched",
+            PlanReason::TaskFinished => "task finished",
+            PlanReason::NodeJoined => "node joined",
+            PlanReason::Sev1Failure => "SEV1 failure",
+        }
+    }
+}
+
+impl fmt::Display for PlanReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Instructions the coordinator emits (executed by agents / the simulator).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// SEV3 ①: retry the failed operation where it failed.
+    InstructReattempt { node: NodeId, task: TaskId },
+    /// SEV2 ②: restart the training process on the node, same configuration;
+    /// state recovers from a DP replica or checkpoint (§6.3).
+    InstructRestart { node: NodeId, task: TaskId },
+    /// SEV1 ③: fence the node out of the cluster.
+    IsolateNode { node: NodeId },
+    /// Reconfigure affected tasks to a new plan (assignments per task id).
+    ApplyPlan { plan: Plan, reason: PlanReason },
+    /// Page the humans (§3.2 "other external interactions").
+    AlertOps { message: String },
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Decode/replay error for protocol artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProtoError {
+    pub msg: String,
+}
+
+impl ProtoError {
+    fn new(msg: impl Into<String>) -> ProtoError {
+        ProtoError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "protocol error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<JsonError> for ProtoError {
+    fn from(e: JsonError) -> ProtoError {
+        ProtoError::new(e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serialization helpers
+// ---------------------------------------------------------------------------
+
+fn get_u32(v: &Value, key: &str) -> Result<u32, ProtoError> {
+    v.req(key)?
+        .as_u64()
+        .and_then(|x| u32::try_from(x).ok())
+        .ok_or_else(|| ProtoError::new(format!("field {key:?} is not a u32")))
+}
+
+fn get_f64(v: &Value, key: &str) -> Result<f64, ProtoError> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| ProtoError::new(format!("field {key:?} is not a number")))
+}
+
+fn get_bool(v: &Value, key: &str) -> Result<bool, ProtoError> {
+    v.req(key)?
+        .as_bool()
+        .ok_or_else(|| ProtoError::new(format!("field {key:?} is not a bool")))
+}
+
+fn get_str<'a>(v: &'a Value, key: &str) -> Result<&'a str, ProtoError> {
+    v.req(key)?
+        .as_str()
+        .ok_or_else(|| ProtoError::new(format!("field {key:?} is not a string")))
+}
+
+fn get_node(v: &Value) -> Result<NodeId, ProtoError> {
+    Ok(NodeId(get_u32(v, "node")?))
+}
+
+fn get_task(v: &Value) -> Result<TaskId, ProtoError> {
+    Ok(TaskId(get_u32(v, "task")?))
+}
+
+fn get_kind(v: &Value) -> Result<ErrorKind, ProtoError> {
+    let name = get_str(v, "kind")?;
+    ErrorKind::from_name(name)
+        .ok_or_else(|| ProtoError::new(format!("unknown error kind {name:?}")))
+}
+
+impl CoordEvent {
+    /// Encode as a tagged JSON object (`{"event": "...", ...}`).
+    pub fn to_value(&self) -> Value {
+        match self {
+            CoordEvent::ErrorReport { node, task, kind } => Value::obj()
+                .with("event", "error_report")
+                .with("node", node.0)
+                .with("task", task.0)
+                .with("kind", kind.name()),
+            CoordEvent::NodeLost { node } => {
+                Value::obj().with("event", "node_lost").with("node", node.0)
+            }
+            CoordEvent::NodeJoined { node } => {
+                Value::obj().with("event", "node_joined").with("node", node.0)
+            }
+            CoordEvent::TaskFinished { task } => {
+                Value::obj().with("event", "task_finished").with("task", task.0)
+            }
+            CoordEvent::TaskLaunched { task } => {
+                Value::obj().with("event", "task_launched").with("task", task.0)
+            }
+            CoordEvent::ReattemptResult { node, task, ok } => Value::obj()
+                .with("event", "reattempt_result")
+                .with("node", node.0)
+                .with("task", task.0)
+                .with("ok", *ok),
+            CoordEvent::RestartResult { node, task, ok } => Value::obj()
+                .with("event", "restart_result")
+                .with("node", node.0)
+                .with("task", task.0)
+                .with("ok", *ok),
+        }
+    }
+
+    /// Strict decode: unknown event tags and error kinds are rejected.
+    pub fn from_value(v: &Value) -> Result<CoordEvent, ProtoError> {
+        match get_str(v, "event")? {
+            "error_report" => Ok(CoordEvent::ErrorReport {
+                node: get_node(v)?,
+                task: get_task(v)?,
+                kind: get_kind(v)?,
+            }),
+            "node_lost" => Ok(CoordEvent::NodeLost { node: get_node(v)? }),
+            "node_joined" => Ok(CoordEvent::NodeJoined { node: get_node(v)? }),
+            "task_finished" => Ok(CoordEvent::TaskFinished { task: get_task(v)? }),
+            "task_launched" => Ok(CoordEvent::TaskLaunched { task: get_task(v)? }),
+            "reattempt_result" => Ok(CoordEvent::ReattemptResult {
+                node: get_node(v)?,
+                task: get_task(v)?,
+                ok: get_bool(v, "ok")?,
+            }),
+            "restart_result" => Ok(CoordEvent::RestartResult {
+                node: get_node(v)?,
+                task: get_task(v)?,
+                ok: get_bool(v, "ok")?,
+            }),
+            other => Err(ProtoError::new(format!("unknown event type {other:?}"))),
+        }
+    }
+}
+
+fn plan_to_value(plan: &Plan) -> Value {
+    Value::obj()
+        .with("assignment", plan.assignment.clone())
+        .with("objective", plan.objective)
+        .with("total_waf", plan.total_waf)
+        .with("workers_used", plan.workers_used)
+}
+
+fn plan_from_value(v: &Value) -> Result<Plan, ProtoError> {
+    let arr = v
+        .req("assignment")?
+        .as_arr()
+        .ok_or_else(|| ProtoError::new("field \"assignment\" is not an array"))?;
+    let assignment = arr
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .and_then(|n| u32::try_from(n).ok())
+                .ok_or_else(|| ProtoError::new("assignment entry is not a u32"))
+        })
+        .collect::<Result<Vec<u32>, ProtoError>>()?;
+    Ok(Plan {
+        assignment,
+        objective: get_f64(v, "objective")?,
+        total_waf: get_f64(v, "total_waf")?,
+        workers_used: get_u32(v, "workers_used")?,
+    })
+}
+
+impl Action {
+    /// Encode as a tagged JSON object (`{"action": "...", ...}`).
+    pub fn to_value(&self) -> Value {
+        match self {
+            Action::InstructReattempt { node, task } => Value::obj()
+                .with("action", "instruct_reattempt")
+                .with("node", node.0)
+                .with("task", task.0),
+            Action::InstructRestart { node, task } => Value::obj()
+                .with("action", "instruct_restart")
+                .with("node", node.0)
+                .with("task", task.0),
+            Action::IsolateNode { node } => {
+                Value::obj().with("action", "isolate_node").with("node", node.0)
+            }
+            Action::ApplyPlan { plan, reason } => Value::obj()
+                .with("action", "apply_plan")
+                .with("reason", reason.name())
+                .with("plan", plan_to_value(plan)),
+            Action::AlertOps { message } => {
+                Value::obj().with("action", "alert_ops").with("message", message.as_str())
+            }
+        }
+    }
+
+    /// Strict decode: unknown action tags and plan reasons are rejected.
+    pub fn from_value(v: &Value) -> Result<Action, ProtoError> {
+        match get_str(v, "action")? {
+            "instruct_reattempt" => {
+                Ok(Action::InstructReattempt { node: get_node(v)?, task: get_task(v)? })
+            }
+            "instruct_restart" => {
+                Ok(Action::InstructRestart { node: get_node(v)?, task: get_task(v)? })
+            }
+            "isolate_node" => Ok(Action::IsolateNode { node: get_node(v)? }),
+            "apply_plan" => {
+                let reason_name = get_str(v, "reason")?;
+                let reason = PlanReason::from_name(reason_name).ok_or_else(|| {
+                    ProtoError::new(format!("unknown plan reason {reason_name:?}"))
+                })?;
+                Ok(Action::ApplyPlan { plan: plan_from_value(v.req("plan")?)?, reason })
+            }
+            "alert_ops" => Ok(Action::AlertOps { message: get_str(v, "message")?.to_string() }),
+            other => Err(ProtoError::new(format!("unknown action type {other:?}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DecisionLog
+// ---------------------------------------------------------------------------
+
+/// One recorded decision: the event delivered and the actions decided.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEntry {
+    pub event: CoordEvent,
+    pub actions: Vec<Action>,
+}
+
+/// The ordered record of every decision a coordinator (or a simulated
+/// policy) made in one session. This is simultaneously:
+///
+/// * the audit log tests assert on ([`crate::coordinator::Coordinator::log`]);
+/// * the simulation decision record
+///   ([`crate::simulator::SimResult::decision_log`]);
+/// * a serializable incident artifact ([`DecisionLog::to_bytes`] /
+///   [`DecisionLog::from_bytes`]) that [`DecisionLog::replay`]s
+///   deterministically through a fresh coordinator.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DecisionLog {
+    pub entries: Vec<LogEntry>,
+}
+
+/// Replay stopped: the coordinator's live decision differed from the
+/// recorded one at `step`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayDivergence {
+    pub step: usize,
+    pub event: CoordEvent,
+    pub expected: Vec<Action>,
+    pub got: Vec<Action>,
+}
+
+impl fmt::Display for ReplayDivergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "replay diverged at step {} ({:?}): expected {:?}, got {:?}",
+            self.step, self.event, self.expected, self.got
+        )
+    }
+}
+
+impl std::error::Error for ReplayDivergence {}
+
+impl DecisionLog {
+    pub fn new() -> DecisionLog {
+        DecisionLog::default()
+    }
+
+    /// Append one decision.
+    pub fn record(&mut self, event: CoordEvent, actions: Vec<Action>) {
+        self.entries.push(LogEntry { event, actions });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, LogEntry> {
+        self.entries.iter()
+    }
+
+    /// All actions in decision order, flattened.
+    pub fn actions(&self) -> impl Iterator<Item = &Action> {
+        self.entries.iter().flat_map(|e| e.actions.iter())
+    }
+
+    /// Events in delivery order.
+    pub fn events(&self) -> impl Iterator<Item = &CoordEvent> {
+        self.entries.iter().map(|e| &e.event)
+    }
+
+    /// Encode with the format version (see the module docs).
+    pub fn to_json(&self) -> Value {
+        let entries: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Value::obj()
+                    .with("event", e.event.to_value())
+                    .with(
+                        "actions",
+                        Value::Arr(e.actions.iter().map(Action::to_value).collect()),
+                    )
+            })
+            .collect();
+        Value::obj().with("version", DECISION_LOG_VERSION).with("entries", Value::Arr(entries))
+    }
+
+    /// Strict decode: wrong version or any unknown variant is an error.
+    pub fn from_json(v: &Value) -> Result<DecisionLog, ProtoError> {
+        let version = v
+            .req("version")?
+            .as_u64()
+            .ok_or_else(|| ProtoError::new("field \"version\" is not an unsigned integer"))?;
+        if version != DECISION_LOG_VERSION {
+            return Err(ProtoError::new(format!(
+                "unsupported decision-log version {version} (reader speaks {DECISION_LOG_VERSION})"
+            )));
+        }
+        let entries = v
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| ProtoError::new("field \"entries\" is not an array"))?;
+        let mut log = DecisionLog::new();
+        for (i, entry) in entries.iter().enumerate() {
+            let event = CoordEvent::from_value(
+                entry.req("event").map_err(|e| ProtoError::new(format!("entry {i}: {e}")))?,
+            )
+            .map_err(|e| ProtoError::new(format!("entry {i}: {}", e.msg)))?;
+            let actions = entry
+                .req("actions")
+                .map_err(|e| ProtoError::new(format!("entry {i}: {e}")))?
+                .as_arr()
+                .ok_or_else(|| ProtoError::new(format!("entry {i}: \"actions\" is not an array")))?
+                .iter()
+                .map(Action::from_value)
+                .collect::<Result<Vec<Action>, ProtoError>>()
+                .map_err(|e| ProtoError::new(format!("entry {i}: {}", e.msg)))?;
+            log.record(event, actions);
+        }
+        Ok(log)
+    }
+
+    /// Wire encoding (compact JSON, UTF-8 bytes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_json().encode().into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<DecisionLog, ProtoError> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| ProtoError::new("decision log is not valid UTF-8"))?;
+        DecisionLog::from_json(&Value::parse(text)?)
+    }
+
+    /// Replay the recorded event stream through `coord`, asserting the
+    /// identical action sequence at every step.
+    ///
+    /// `coord` must be constructed with the same initial state (config,
+    /// worker pool, initially-registered tasks) the recording session
+    /// started from. Tasks that arrived mid-session (Fig. 7 trigger ⑥) are
+    /// admitted through `admit`, which maps a [`TaskId`] to its planner
+    /// inputs just before the corresponding `TaskLaunched` event — mirroring
+    /// how the live driver and the environment model register tasks.
+    ///
+    /// Returns the number of replayed steps, or the first divergence.
+    pub fn replay(
+        &self,
+        coord: &mut crate::coordinator::Coordinator,
+        mut admit: impl FnMut(TaskId) -> Option<crate::planner::PlanTask>,
+    ) -> Result<usize, ReplayDivergence> {
+        for (step, entry) in self.entries.iter().enumerate() {
+            if let CoordEvent::TaskLaunched { task } = entry.event {
+                if coord.task_assignment(task).is_none() {
+                    if let Some(pt) = admit(task) {
+                        coord.add_task(pt);
+                    }
+                }
+            }
+            let got = coord.handle(entry.event.clone());
+            if got != entry.actions {
+                return Err(ReplayDivergence {
+                    step,
+                    event: entry.event.clone(),
+                    expected: entry.actions.clone(),
+                    got,
+                });
+            }
+        }
+        Ok(self.entries.len())
+    }
+}
+
+impl<'a> IntoIterator for &'a DecisionLog {
+    type Item = &'a LogEntry;
+    type IntoIter = std::slice::Iter<'a, LogEntry>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_display_and_convert() {
+        assert_eq!(TaskId(3).to_string(), "3");
+        assert_eq!(NodeId::from(7), NodeId(7));
+        assert_eq!(WorkerCount(16).0, 16);
+        assert!(TaskId(1) < TaskId(2));
+    }
+
+    #[test]
+    fn plan_reason_names_round_trip() {
+        for r in PlanReason::all() {
+            assert_eq!(PlanReason::from_name(r.name()), Some(r));
+            // the wire tag is not the display label (protocol hygiene)
+            assert_ne!(r.name(), r.as_str());
+            assert!(r
+                .name()
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c == '_' || c.is_ascii_digit()));
+        }
+        assert_eq!(PlanReason::from_name("cosmic ray"), None);
+        assert_eq!(PlanReason::from_name("task launched"), None, "display label is not a wire tag");
+    }
+
+    #[test]
+    fn event_value_round_trip_via_text() {
+        let ev = CoordEvent::ErrorReport {
+            node: NodeId(3),
+            task: TaskId(1),
+            kind: ErrorKind::EccError,
+        };
+        let text = ev.to_value().encode();
+        let back = CoordEvent::from_value(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(ev, back);
+    }
+
+    #[test]
+    fn unknown_variants_rejected() {
+        let v = Value::obj().with("event", "warp_core_breach").with("node", 1u32);
+        assert!(CoordEvent::from_value(&v).is_err());
+        let v = Value::obj().with("action", "self_destruct");
+        assert!(Action::from_value(&v).is_err());
+        let v = Value::obj()
+            .with("event", "error_report")
+            .with("node", 1u32)
+            .with("task", 0u32)
+            .with("kind", "gamma_burst");
+        assert!(CoordEvent::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut log = DecisionLog::new();
+        log.record(CoordEvent::NodeLost { node: NodeId(0) }, vec![]);
+        let mut v = log.to_json();
+        v.set("version", DECISION_LOG_VERSION + 1);
+        let err = DecisionLog::from_json(&v).unwrap_err();
+        assert!(err.msg.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn empty_log_round_trips() {
+        let log = DecisionLog::new();
+        assert!(log.is_empty());
+        let back = DecisionLog::from_bytes(&log.to_bytes()).unwrap();
+        assert_eq!(log, back);
+    }
+}

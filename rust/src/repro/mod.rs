@@ -1,7 +1,10 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation (§7) as terminal tables/series. `unicron repro <exp>` is the
-//! CLI entry; each function returns the rendered text so tests can assert on
-//! the rows. DESIGN.md §6 maps experiments to modules.
+//! CLI entry; each experiment is an entry in the typed [`EXPERIMENTS`]
+//! registry (id, description, runner) that the CLI, tests, and docs all
+//! enumerate — one source of truth. Each runner returns the rendered text
+//! so tests can assert on the rows. DESIGN.md §6 maps experiments to
+//! modules.
 
 use std::fmt::Write as _;
 
@@ -10,34 +13,115 @@ use crate::failure::{ErrorKind, TerminationStats, Trace, TraceConfig};
 use crate::metrics::{Figure, Table};
 use crate::perfmodel::{best_config, throughput_table};
 use crate::planner::{baselines, solve, PlanTask};
+use crate::proto::{CoordEvent, PlanReason};
 use crate::simulator::{compare_policies, PolicyKind, PolicyParams, Simulator};
 use crate::util::{fmt_duration, fmt_si};
 
-/// All experiment ids, in paper order.
-pub const EXPERIMENTS: &[&str] = &[
-    "table1", "fig1", "fig2", "fig3a", "fig3b", "fig4", "fig6", "table2-model", "fig9",
-    "fig10a", "fig10b", "fig10c", "fig11a", "fig11b",
+/// One reproducible experiment: a stable id, a one-line description, and a
+/// seeded runner producing the rendered table/figure text.
+#[derive(Clone, Copy)]
+pub struct Experiment {
+    pub id: &'static str,
+    pub description: &'static str,
+    pub run: fn(u64) -> String,
+}
+
+/// The experiment registry, in paper order — the single source of truth the
+/// CLI (`unicron repro list`), the dispatch in [`run`], and the tests all
+/// enumerate.
+pub const EXPERIMENTS: &[Experiment] = &[
+    Experiment {
+        id: "table1",
+        description: "detection methods and severity levels (Table 1)",
+        run: |_| table1(),
+    },
+    Experiment {
+        id: "fig1",
+        description: "distribution of task termination statistics (Fig. 1)",
+        run: |_| fig1(),
+    },
+    Experiment {
+        id: "fig2",
+        description: "manual failure-recovery timeline on Megatron (Fig. 2)",
+        run: |_| fig2(),
+    },
+    Experiment {
+        id: "fig3a",
+        description: "healthy throughput per system, GPT-3 7B on 64 GPUs (Fig. 3a)",
+        run: |_| fig3a(),
+    },
+    Experiment {
+        id: "fig3b",
+        description: "FLOP/s reduction under ~10 node faults in 7 days (Fig. 3b)",
+        run: fig3b,
+    },
+    Experiment {
+        id: "fig4",
+        description: "achieved FLOP/s ratio and aggregate vs GPU count (Fig. 4)",
+        run: |_| fig4(),
+    },
+    Experiment {
+        id: "fig6",
+        description: "iteration-time consistency and stall thresholds (Fig. 6)",
+        run: fig6,
+    },
+    Experiment {
+        id: "fig7-churn",
+        description: "task churn: Fig. 7 trigger \u{2464}\u{2465} arrivals/departures per policy",
+        run: fig7_churn,
+    },
+    Experiment {
+        id: "table2-model",
+        description: "failure detection time model (Table 2; live half in the detection bench)",
+        run: |_| table2_model(),
+    },
+    Experiment {
+        id: "fig9",
+        description: "transition time after a SEV1 failure vs cluster size (Fig. 9)",
+        run: fig9,
+    },
+    Experiment {
+        id: "fig10a",
+        description: "single-task training throughput, Unicron vs Megatron (Fig. 10a)",
+        run: |_| fig10a(),
+    },
+    Experiment {
+        id: "fig10b",
+        description: "achieved FLOP/s ratio by model size on 64 GPUs (Fig. 10b)",
+        run: |_| fig10b(),
+    },
+    Experiment {
+        id: "fig10c",
+        description: "multi-task WAF vs allocation baselines, Table 3 cases (Fig. 10c)",
+        run: |_| fig10c(),
+    },
+    Experiment {
+        id: "fig11a",
+        description: "training efficiency under failure trace-a (Fig. 11)",
+        run: |seed| fig11(TraceConfig::trace_a(), seed),
+    },
+    Experiment {
+        id: "fig11b",
+        description: "training efficiency under failure trace-b (Fig. 11)",
+        run: |seed| fig11(TraceConfig::trace_b(), seed),
+    },
 ];
 
-/// Dispatch by experiment id (`table2-model` is the analytic view; the live
-/// TCP measurement is `cargo bench --bench detection`).
+/// Look up an experiment by id.
+pub fn find(id: &str) -> Option<&'static Experiment> {
+    EXPERIMENTS.iter().find(|e| e.id == id)
+}
+
+/// Dispatch by experiment id through the registry. The unknown-id error
+/// lists every registered experiment (the CLI surfaces it and exits
+/// non-zero).
 pub fn run(exp: &str, seed: u64) -> Result<String, String> {
-    match exp {
-        "table1" => Ok(table1()),
-        "fig1" => Ok(fig1()),
-        "fig2" => Ok(fig2()),
-        "fig3a" => Ok(fig3a()),
-        "fig3b" => Ok(fig3b(seed)),
-        "fig4" => Ok(fig4()),
-        "fig6" => Ok(fig6(seed)),
-        "table2-model" => Ok(table2_model()),
-        "fig9" => Ok(fig9(seed)),
-        "fig10a" => Ok(fig10a()),
-        "fig10b" => Ok(fig10b()),
-        "fig10c" => Ok(fig10c()),
-        "fig11a" => Ok(fig11(TraceConfig::trace_a(), seed)),
-        "fig11b" => Ok(fig11(TraceConfig::trace_b(), seed)),
-        other => Err(format!("unknown experiment {other:?}; known: {EXPERIMENTS:?}")),
+    match find(exp) {
+        Some(e) => Ok((e.run)(seed)),
+        None => {
+            let known: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id).collect();
+            Err(format!("unknown experiment {exp:?}; known: {}", known.join(", ")))
+        }
     }
 }
 
@@ -109,7 +193,7 @@ pub fn fig3a() -> String {
 pub fn fig3b(seed: u64) -> String {
     let cluster = ClusterSpec { n_nodes: 8, ..Default::default() }; // 64 GPUs
     let cfg = UnicronConfig::default();
-    let specs = vec![TaskSpec::new(0, "gpt3-7b", 1.0, 8)];
+    let specs = vec![TaskSpec::new(0u32, "gpt3-7b", 1.0, 8)];
     let tc = TraceConfig {
         name: "fig3b".into(),
         duration_s: 7.0 * 86400.0,
@@ -249,7 +333,7 @@ pub fn fig9(seed: u64) -> String {
     for nodes in [2u32, 4, 8] {
         let gpus = nodes * 8;
         let cluster = ClusterSpec { n_nodes: nodes, ..Default::default() };
-        let specs = vec![TaskSpec::new(0, "gpt3-7b", 1.0, 8)];
+        let specs = vec![TaskSpec::new(0u32, "gpt3-7b", 1.0, 8)];
         let tc = TraceConfig {
             name: "fig9".into(),
             duration_s: 4.0 * 3600.0,
@@ -274,7 +358,13 @@ pub fn fig9(seed: u64) -> String {
             PolicyKind::Varuna,
             PolicyKind::Megatron,
         ] {
-            let r = Simulator::new(cluster.clone(), cfg.clone(), kind, &specs).run(&trace);
+            let r = Simulator::builder()
+                .cluster(cluster.clone())
+                .config(cfg.clone())
+                .policy(kind)
+                .tasks(&specs)
+                .build()
+                .run(&trace);
             match r.transitions.first() {
                 Some(&(_, d)) => row.push(fmt_duration(d)),
                 None => row.push("-".into()),
@@ -334,18 +424,8 @@ pub fn fig10c() -> String {
     let mut t = Table::new(&["case", "Unicron", "equally", "weighted", "sized"]);
     for case in 1..=5u32 {
         let specs = table3_case(case);
-        let tasks: Vec<PlanTask> = specs
-            .iter()
-            .map(|s| {
-                let model = ModelSpec::gpt3(&s.model).unwrap();
-                PlanTask {
-                    throughput: throughput_table(&model, &cluster, n),
-                    spec: s.clone(),
-                    current: 0,
-                    fault: false,
-                }
-            })
-            .collect();
+        let tasks: Vec<PlanTask> =
+            specs.iter().map(|s| PlanTask::from_spec(s, &cluster, n)).collect();
         let sizes: Vec<f64> =
             specs.iter().map(|s| ModelSpec::gpt3(&s.model).unwrap().n_params).collect();
         let waf_of = |alloc: &[u32]| -> f64 {
@@ -409,17 +489,100 @@ pub fn fig11(tc: TraceConfig, seed: u64) -> String {
     out
 }
 
+/// Fig. 7 triggers ⑤⑥: task churn (mid-trace arrivals and departures) on
+/// the Table 3 case-5 cluster, per recovery policy. Counts are read off the
+/// recorded [`crate::proto::DecisionLog`]: every launch/finish the policy
+/// saw and every replan it answered with.
+pub fn fig7_churn(seed: u64) -> String {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    // two late arrivals in the first half, two departures in the second
+    let trace = Trace::generate(TraceConfig::trace_a(), seed).with_task_churn(6, 2, 2, seed);
+    let mut t = Table::new(&["system", "launches", "finishes", "churn replans", "mean WAF"]);
+    for kind in PolicyKind::all() {
+        let r = Simulator::builder()
+            .cluster(cluster.clone())
+            .config(cfg.clone())
+            .policy(kind)
+            .tasks(&specs)
+            .build()
+            .run(&trace);
+        let launches = r
+            .decision_log
+            .events()
+            .filter(|e| matches!(e, CoordEvent::TaskLaunched { .. }))
+            .count();
+        let finishes = r
+            .decision_log
+            .events()
+            .filter(|e| matches!(e, CoordEvent::TaskFinished { .. }))
+            .count();
+        let churn_replans = r
+            .decision_log
+            .iter()
+            .filter(|en| {
+                matches!(
+                    en.event,
+                    CoordEvent::TaskLaunched { .. } | CoordEvent::TaskFinished { .. }
+                ) && en.actions.iter().any(|a| {
+                    matches!(
+                        a,
+                        crate::proto::Action::ApplyPlan {
+                            reason: PlanReason::TaskLaunched | PlanReason::TaskFinished,
+                            ..
+                        }
+                    )
+                })
+            })
+            .count();
+        t.row(&[
+            kind.name().into(),
+            launches.to_string(),
+            finishes.to_string(),
+            churn_replans.to_string(),
+            format!("{}FLOP/s", fmt_si(r.mean_waf())),
+        ]);
+    }
+    format!(
+        "Fig. 7 ⑤⑥ — task churn (6 tasks, 2 late arrivals, 2 departures, trace-a seed {seed})\n{}",
+        t.render()
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn every_experiment_runs() {
-        for &exp in EXPERIMENTS {
-            let out = run(exp, 42).unwrap_or_else(|e| panic!("{exp}: {e}"));
-            assert!(!out.is_empty(), "{exp} produced no output");
+        for exp in EXPERIMENTS {
+            let out = run(exp.id, 42).unwrap_or_else(|e| panic!("{}: {e}", exp.id));
+            assert!(!out.is_empty(), "{} produced no output", exp.id);
+            assert!(!exp.description.is_empty(), "{} has no description", exp.id);
         }
-        assert!(run("fig99", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_experiment_error_lists_the_registry() {
+        let err = run("fig99", 0).unwrap_err();
+        for exp in EXPERIMENTS {
+            assert!(err.contains(exp.id), "error must list {}: {err}", exp.id);
+        }
+        assert!(find("fig99").is_none());
+        assert!(find("fig7-churn").is_some());
+    }
+
+    #[test]
+    fn fig7_churn_counts_lifecycle_decisions() {
+        let out = fig7_churn(13);
+        assert!(out.contains("Unicron"));
+        assert!(out.contains("Megatron"));
+        // Unicron row: bootstrap + two arrivals = 3 launches, 2 finishes
+        let row = out.lines().find(|l| l.contains("Unicron")).unwrap();
+        let cols: Vec<&str> = row.split('|').map(str::trim).collect();
+        assert_eq!(cols[2], "3", "launches column: {row}");
+        assert_eq!(cols[3], "2", "finishes column: {row}");
     }
 
     #[test]

@@ -33,12 +33,11 @@ pub use policies::{
     build as build_policy, BaselinePolicy, PolicyKind, PolicyParams, RecoveryPolicy, UnicronPolicy,
 };
 
-use crate::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
-use crate::coordinator::{Action, CoordEvent};
+use crate::config::{ClusterSpec, TaskSpec, UnicronConfig};
 use crate::engine::EventQueue;
 use crate::failure::{LifecycleKind, Severity, Trace};
-use crate::perfmodel::throughput_table;
 use crate::planner::{Plan, PlanTask};
+use crate::proto::{Action, CoordEvent, DecisionLog, NodeId, TaskId, WorkerCount};
 
 /// Per-task environment state (what is physically running, not what the
 /// policy has decided — decisions live in the policy).
@@ -85,7 +84,7 @@ enum EnvEvent {
     Failure(usize),
     /// index into `trace.lifecycle`
     Lifecycle(usize),
-    Repair { node: u32 },
+    Repair { node: NodeId },
     RecoveryDone { task: usize, workers: u32, epoch: u64 },
     /// Deferred outcome report back to the policy (restart completed).
     PolicyResult { result: CoordEvent },
@@ -129,8 +128,9 @@ pub struct SimResult {
     /// SEV1 transitions performed: (time, seconds the transition took).
     pub transitions: Vec<(f64, f64)>,
     /// Every (event, actions) decision the policy made, in delivery order —
-    /// for the Unicron policy this is exactly the coordinator's audit log.
-    pub decision_log: Vec<(CoordEvent, Vec<Action>)>,
+    /// for the Unicron policy this is exactly the coordinator's audit log,
+    /// and it serializes/replays via [`crate::proto::DecisionLog`].
+    pub decision_log: DecisionLog,
     /// `AlertOps` pages raised (SEV1 isolations).
     pub alerts: usize,
 }
@@ -176,48 +176,64 @@ pub struct Simulator {
     last_waf: f64,
     last_t: f64,
     transitions: Vec<(f64, f64)>,
-    decision_log: Vec<(CoordEvent, Vec<Action>)>,
+    decision_log: DecisionLog,
     alerts: usize,
 }
 
-impl Simulator {
-    /// Build the environment for one of the five stock policies. Task specs
-    /// must be in ascending-id order (the assignment-vector contract).
-    pub fn new(
-        cluster: ClusterSpec,
-        cfg: UnicronConfig,
-        kind: PolicyKind,
-        specs: &[TaskSpec],
-    ) -> Simulator {
-        let policy = policies::build(kind, &cfg, cluster.gpus_per_node);
-        Simulator::with_policy(cluster, policy, specs)
+/// Staged construction of a [`Simulator`] — replaces the old positional
+/// `Simulator::new(cluster, cfg, kind, specs)` / `Simulator::with_policy`
+/// (DESIGN.md §7). Defaults: default cluster and config, the Unicron
+/// policy, no tasks.
+pub struct SimulatorBuilder {
+    cluster: ClusterSpec,
+    cfg: UnicronConfig,
+    kind: PolicyKind,
+    policy: Option<Box<dyn RecoveryPolicy>>,
+    specs: Vec<TaskSpec>,
+}
+
+impl SimulatorBuilder {
+    pub fn cluster(mut self, cluster: ClusterSpec) -> Self {
+        self.cluster = cluster;
+        self
     }
 
-    /// Build the environment around any [`RecoveryPolicy`] implementation.
-    /// (The policy carries its own config; the environment needs none.)
-    pub fn with_policy(
-        cluster: ClusterSpec,
-        policy: Box<dyn RecoveryPolicy>,
-        specs: &[TaskSpec],
-    ) -> Simulator {
+    pub fn config(mut self, cfg: UnicronConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Use one of the five stock policies (builds it from the config).
+    pub fn policy(mut self, kind: PolicyKind) -> Self {
+        self.kind = kind;
+        self.policy = None;
+        self
+    }
+
+    /// Use a custom [`RecoveryPolicy`] implementation (it carries its own
+    /// config; the environment needs none).
+    pub fn policy_impl(mut self, policy: Box<dyn RecoveryPolicy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Task specs, in ascending-id order (the assignment-vector contract).
+    pub fn tasks(mut self, specs: &[TaskSpec]) -> Self {
+        self.specs.extend(specs.iter().cloned());
+        self
+    }
+
+    pub fn build(self) -> Simulator {
+        let SimulatorBuilder { cluster, cfg, kind, policy, specs } = self;
         debug_assert!(
             specs.windows(2).all(|w| w[0].id < w[1].id),
             "task specs must be in ascending-id order"
         );
+        let policy = policy
+            .unwrap_or_else(|| policies::build(kind, &cfg, WorkerCount(cluster.gpus_per_node)));
         let n = cluster.total_gpus();
-        let plan_inputs: Vec<PlanTask> = specs
-            .iter()
-            .map(|spec| {
-                let model = ModelSpec::gpt3(&spec.model)
-                    .unwrap_or_else(|| panic!("unknown model {}", spec.model));
-                PlanTask {
-                    throughput: throughput_table(&model, &cluster, n),
-                    spec: spec.clone(),
-                    current: 0,
-                    fault: false,
-                }
-            })
-            .collect();
+        let plan_inputs: Vec<PlanTask> =
+            specs.iter().map(|spec| PlanTask::from_spec(spec, &cluster, n)).collect();
         let tasks = plan_inputs
             .iter()
             .map(|pt| SimTask {
@@ -247,8 +263,21 @@ impl Simulator {
             last_waf: 0.0,
             last_t: 0.0,
             transitions: Vec::new(),
-            decision_log: Vec::new(),
+            decision_log: DecisionLog::new(),
             alerts: 0,
+        }
+    }
+}
+
+impl Simulator {
+    /// Start building an environment model.
+    pub fn builder() -> SimulatorBuilder {
+        SimulatorBuilder {
+            cluster: ClusterSpec::default(),
+            cfg: UnicronConfig::default(),
+            kind: PolicyKind::Unicron,
+            policy: None,
+            specs: Vec::new(),
         }
     }
 
@@ -267,7 +296,7 @@ impl Simulator {
     /// Which task owns `node` under the current assignment: active tasks
     /// take nodes in id order, `ceil(workers/gpn)` nodes each, over the
     /// healthy nodes. Returns a task *index*.
-    fn owner_of(&self, node: u32) -> Option<usize> {
+    fn owner_of(&self, node: NodeId) -> Option<usize> {
         let healthy: Vec<u32> =
             (0..self.cluster.n_nodes).filter(|&n| !self.node_down[n as usize]).collect();
         let gpn = self.cluster.gpus_per_node;
@@ -276,7 +305,7 @@ impl Simulator {
             let t = &self.tasks[ti];
             let nodes_needed = ((t.workers + gpn - 1) / gpn) as usize;
             for k in 0..nodes_needed {
-                if healthy.get(cursor + k) == Some(&node) {
+                if healthy.get(cursor + k) == Some(&node.0) {
                     return Some(ti);
                 }
             }
@@ -293,14 +322,14 @@ impl Simulator {
         idx
     }
 
-    fn index_of(&self, task_id: u32) -> Option<usize> {
+    fn index_of(&self, task_id: TaskId) -> Option<usize> {
         self.tasks.iter().position(|t| t.spec.id == task_id)
     }
 
     /// Feed one event to the policy; log and return its decisions.
     fn decide(&mut self, ev: CoordEvent) -> Vec<Action> {
         let actions = self.policy.on_event(ev.clone());
-        self.decision_log.push((ev, actions.clone()));
+        self.decision_log.record(ev, actions.clone());
         actions
     }
 
@@ -366,7 +395,7 @@ impl Simulator {
     /// Execute an in-place reattempt/restart instruction: the task is down
     /// for detection + restart + recompute, then resumes at its pending
     /// size, and the outcome is reported back to the policy.
-    fn instruct_recovery(&mut self, task_id: u32, node: u32, reattempt: bool, ctx: &Ctx) {
+    fn instruct_recovery(&mut self, task_id: TaskId, node: NodeId, reattempt: bool, ctx: &Ctx) {
         let Some(ti) = self.index_of(task_id) else { return };
         let sev = ctx.severity.unwrap_or(Severity::Sev2);
         let dt = self.params.detect_s(sev) + self.params.restart_recovery_s();
@@ -392,8 +421,8 @@ impl Simulator {
     /// down whatever the policy says), so the policy's `IsolateNode` is a
     /// no-op then; a policy-escalated isolation (failed restart chain) marks
     /// it here and schedules a repair at the environment's default delay.
-    fn isolate(&mut self, node: u32) {
-        let idx = node as usize;
+    fn isolate(&mut self, node: NodeId) {
+        let idx = node.0 as usize;
         if idx >= self.node_down.len() || self.node_down[idx] {
             return;
         }
@@ -409,7 +438,7 @@ impl Simulator {
         for (t, &a) in self.tasks.iter_mut().zip(&active) {
             t.active = a;
         }
-        self.policy.init(&self.plan_inputs, &active, self.available);
+        self.policy.init(&self.plan_inputs, &active, WorkerCount(self.available));
 
         for (i, e) in trace.events.iter().enumerate() {
             self.queue.schedule(e.at_s, EnvEvent::Failure(i));
@@ -475,14 +504,14 @@ impl Simulator {
     fn on_trace_failure(&mut self, trace: &Trace, idx: usize) {
         let ev = &trace.events[idx];
         let node = ev.node;
-        if self.node_down[node as usize] {
+        if self.node_down[node.0 as usize] {
             return; // node already out; failure has no additional effect
         }
         match ev.severity() {
             Severity::Sev1 => {
                 let affected = self.owner_of(node);
                 // hardware state changes regardless of any policy decision
-                self.node_down[node as usize] = true;
+                self.node_down[node.0 as usize] = true;
                 self.available = self.available.saturating_sub(self.cluster.gpus_per_node);
                 self.queue.schedule(self.now + ev.repair_after_s, EnvEvent::Repair { node });
                 let coord_ev = match affected {
@@ -510,11 +539,11 @@ impl Simulator {
         }
     }
 
-    fn on_repair(&mut self, node: u32) {
-        if !self.node_down[node as usize] {
+    fn on_repair(&mut self, node: NodeId) {
+        if !self.node_down[node.0 as usize] {
             return;
         }
-        self.node_down[node as usize] = false;
+        self.node_down[node.0 as usize] = false;
         self.available =
             (self.available + self.cluster.gpus_per_node).min(self.cluster.total_gpus());
         let actions = self.decide(CoordEvent::NodeJoined { node });
@@ -561,7 +590,15 @@ pub fn compare_policies(
 ) -> Vec<SimResult> {
     PolicyKind::all()
         .iter()
-        .map(|&k| Simulator::new(cluster.clone(), cfg.clone(), k, specs).run(trace))
+        .map(|&k| {
+            Simulator::builder()
+                .cluster(cluster.clone())
+                .config(cfg.clone())
+                .policy(k)
+                .tasks(specs)
+                .build()
+                .run(trace)
+        })
         .collect()
 }
 
@@ -577,7 +614,13 @@ mod tests {
 
     fn run(kind: PolicyKind, trace: &Trace) -> SimResult {
         let (cluster, cfg, specs) = setup();
-        Simulator::new(cluster, cfg, kind, &specs).run(trace)
+        Simulator::builder()
+            .cluster(cluster)
+            .config(cfg)
+            .policy(kind)
+            .tasks(&specs)
+            .build()
+            .run(trace)
     }
 
     #[test]
@@ -698,37 +741,40 @@ mod tests {
         let trace = Trace::generate(TraceConfig::trace_a(), 42);
         let r = run(PolicyKind::Unicron, &trace);
         assert!(!r.decision_log.is_empty());
-        let isolations = r
-            .decision_log
-            .iter()
-            .flat_map(|(_, a)| a)
-            .filter(|a| matches!(a, Action::IsolateNode { .. }))
-            .count();
+        let isolations =
+            r.decision_log.actions().filter(|a| matches!(a, Action::IsolateNode { .. })).count();
         assert_eq!(isolations, r.alerts, "every isolation pages ops");
         assert!(
-            r.decision_log.iter().any(|(_, a)| a
-                .iter()
-                .any(|x| matches!(x, Action::ApplyPlan { reason: "SEV1 failure", .. }))),
+            r.decision_log.actions().any(|x| matches!(
+                x,
+                Action::ApplyPlan { reason: crate::proto::PlanReason::Sev1Failure, .. }
+            )),
             "SEV1 replans must come from the coordinator"
         );
         // bootstrap decision is the first log entry
-        assert!(matches!(r.decision_log[0].0, CoordEvent::TaskLaunched { .. }));
+        assert!(matches!(r.decision_log.entries[0].event, CoordEvent::TaskLaunched { .. }));
     }
 
     #[test]
     fn task_churn_is_simulated_end_to_end() {
         let (cluster, cfg, specs) = setup();
         let trace = Trace::generate(TraceConfig::trace_a(), 13).with_task_churn(6, 2, 2, 13);
-        let r = Simulator::new(cluster, cfg, PolicyKind::Unicron, &specs).run(&trace);
+        let r = Simulator::builder()
+            .cluster(cluster)
+            .config(cfg)
+            .policy(PolicyKind::Unicron)
+            .tasks(&specs)
+            .build()
+            .run(&trace);
         let launches = r
             .decision_log
-            .iter()
-            .filter(|(e, _)| matches!(e, CoordEvent::TaskLaunched { .. }))
+            .events()
+            .filter(|e| matches!(e, CoordEvent::TaskLaunched { .. }))
             .count();
         let finishes = r
             .decision_log
-            .iter()
-            .filter(|(e, _)| matches!(e, CoordEvent::TaskFinished { .. }))
+            .events()
+            .filter(|e| matches!(e, CoordEvent::TaskFinished { .. }))
             .count();
         assert_eq!(launches, 3, "bootstrap + two arrivals");
         assert_eq!(finishes, 2, "two departures");
@@ -748,15 +794,21 @@ mod tests {
         tc.expect_other = 0.0;
         // no failures: three tasks leave halfway; survivors replan upward
         let trace = Trace::generate(tc, 3).with_task_churn(6, 0, 3, 3);
-        let r = Simulator::new(cluster, cfg, PolicyKind::Unicron, &specs).run(&trace);
+        let r = Simulator::builder()
+            .cluster(cluster)
+            .config(cfg)
+            .policy(PolicyKind::Unicron)
+            .tasks(&specs)
+            .build()
+            .run(&trace);
         let first = r.waf_series.first().unwrap().1;
         let last = r.waf_series.last().unwrap().1;
         assert!(last > 0.0, "survivors keep training");
         assert!(last < first, "fewer tasks -> less total weighted work");
         // the replans grew at least one surviving task beyond its t=0 share
-        let grew = r.decision_log.iter().any(|(e, a)| {
-            matches!(e, CoordEvent::TaskFinished { .. })
-                && a.iter().any(|x| matches!(x, Action::ApplyPlan { .. }))
+        let grew = r.decision_log.iter().any(|en| {
+            matches!(en.event, CoordEvent::TaskFinished { .. })
+                && en.actions.iter().any(|x| matches!(x, Action::ApplyPlan { .. }))
         });
         assert!(grew, "task finish must trigger a coordinator replan");
     }

@@ -30,9 +30,10 @@
 use std::collections::BTreeMap;
 
 use crate::config::UnicronConfig;
-use crate::coordinator::{Action, CoordEvent, Coordinator};
+use crate::coordinator::Coordinator;
 use crate::failure::Severity;
 use crate::planner::{solve, Plan, PlanTask};
+use crate::proto::{Action, CoordEvent, PlanReason, TaskId, WorkerCount};
 
 /// Which system's recovery behaviour to simulate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -188,7 +189,7 @@ pub trait RecoveryPolicy {
 
     /// Register the full task set (planner inputs) and which of the tasks
     /// are active at t = 0. Called exactly once, before any event.
-    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: u32);
+    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: WorkerCount);
 
     /// Trigger ⑥ prelude: a task is about to enter the cluster — register
     /// its planner inputs. The `TaskLaunched` event is delivered right after.
@@ -199,7 +200,11 @@ pub trait RecoveryPolicy {
 }
 
 /// Build the policy for `kind`.
-pub fn build(kind: PolicyKind, cfg: &UnicronConfig, gpus_per_node: u32) -> Box<dyn RecoveryPolicy> {
+pub fn build(
+    kind: PolicyKind,
+    cfg: &UnicronConfig,
+    gpus_per_node: WorkerCount,
+) -> Box<dyn RecoveryPolicy> {
     match kind {
         PolicyKind::Unicron => Box::new(UnicronPolicy::new(cfg, gpus_per_node)),
         baseline => Box::new(BaselinePolicy::new(baseline, cfg, gpus_per_node)),
@@ -212,12 +217,12 @@ pub fn build(kind: PolicyKind, cfg: &UnicronConfig, gpus_per_node: u32) -> Box<d
 pub struct UnicronPolicy {
     params: PolicyParams,
     cfg: UnicronConfig,
-    gpus_per_node: u32,
+    gpus_per_node: WorkerCount,
     coord: Option<Coordinator>,
 }
 
 impl UnicronPolicy {
-    pub fn new(cfg: &UnicronConfig, gpus_per_node: u32) -> UnicronPolicy {
+    pub fn new(cfg: &UnicronConfig, gpus_per_node: WorkerCount) -> UnicronPolicy {
         UnicronPolicy {
             params: PolicyParams::for_kind(PolicyKind::Unicron, cfg),
             cfg: cfg.clone(),
@@ -237,8 +242,12 @@ impl RecoveryPolicy for UnicronPolicy {
         &self.params
     }
 
-    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: u32) {
-        let mut coord = Coordinator::new(self.cfg.clone(), available_workers, self.gpus_per_node);
+    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: WorkerCount) {
+        let mut coord = Coordinator::builder()
+            .config(self.cfg.clone())
+            .workers(available_workers)
+            .gpus_per_node(self.gpus_per_node)
+            .build();
         for (t, &a) in tasks.iter().zip(active) {
             if a {
                 coord.add_task(t.clone());
@@ -289,19 +298,23 @@ pub struct BaselinePolicy {
     params: PolicyParams,
     cfg: UnicronConfig,
     gpus_per_node: u32,
-    tasks: BTreeMap<u32, BaselineTask>,
+    tasks: BTreeMap<TaskId, BaselineTask>,
     available: u32,
     seq: u64,
     bootstrapped: bool,
 }
 
 impl BaselinePolicy {
-    pub fn new(kind: PolicyKind, cfg: &UnicronConfig, gpus_per_node: u32) -> BaselinePolicy {
+    pub fn new(
+        kind: PolicyKind,
+        cfg: &UnicronConfig,
+        gpus_per_node: WorkerCount,
+    ) -> BaselinePolicy {
         assert!(kind != PolicyKind::Unicron, "Unicron is UnicronPolicy (the real Coordinator)");
         BaselinePolicy {
             params: PolicyParams::for_kind(kind, cfg),
             cfg: cfg.clone(),
-            gpus_per_node,
+            gpus_per_node: gpus_per_node.0,
             tasks: BTreeMap::new(),
             available: 0,
             seq: 0,
@@ -321,7 +334,7 @@ impl BaselinePolicy {
     }
 
     /// Current decisions as an `ApplyPlan` (id-ordered over active tasks).
-    fn emit_plan(&self, reason: &'static str) -> Vec<Action> {
+    fn emit_plan(&self, reason: PlanReason) -> Vec<Action> {
         let active: Vec<&BaselineTask> = self.tasks.values().filter(|t| t.active).collect();
         let assignment: Vec<u32> = active.iter().map(|t| t.assigned).collect();
         let total_waf = active.iter().map(|t| t.plan.waf(t.assigned)).sum();
@@ -345,12 +358,12 @@ impl BaselinePolicy {
             t.assigned = x;
             t.want = x;
         }
-        vec![Action::ApplyPlan { plan, reason: "task launched" }]
+        vec![Action::ApplyPlan { plan, reason: PlanReason::TaskLaunched }]
     }
 
     /// Trigger ⑥ after t = 0: hand the arriving task whole nodes from the
     /// free pool (largest feasible node-multiple), or queue it.
-    fn on_late_launch(&mut self, task: u32) -> Vec<Action> {
+    fn on_late_launch(&mut self, task: TaskId) -> Vec<Action> {
         let gpn = self.gpus_per_node;
         let free = self.free();
         let seq = self.seq;
@@ -363,7 +376,7 @@ impl BaselinePolicy {
             t.assigned = w;
             t.want = w;
             t.waiting = false;
-            self.emit_plan("task launched")
+            self.emit_plan(PlanReason::TaskLaunched)
         } else {
             t.want = t.plan.spec.min_workers;
             t.assigned = 0;
@@ -373,7 +386,7 @@ impl BaselinePolicy {
         }
     }
 
-    fn on_sev1(&mut self, task: u32) -> Vec<Action> {
+    fn on_sev1(&mut self, task: TaskId) -> Vec<Action> {
         let gpn = self.gpus_per_node;
         let seq = self.seq;
         let elastic = self.params.elastic;
@@ -404,15 +417,15 @@ impl BaselinePolicy {
             t.assigned = 0;
             t.waiting = true;
         }
-        self.emit_plan("SEV1 failure")
+        self.emit_plan(PlanReason::Sev1Failure)
     }
 
     /// Freed capacity (join / task finish): earliest-affected tasks first —
     /// waiting tasks restart, elastic shrunk tasks grow back one node.
-    fn reclaim(&mut self, reason: &'static str) -> Vec<Action> {
+    fn reclaim(&mut self, reason: PlanReason) -> Vec<Action> {
         let gpn = self.gpus_per_node;
         let mut free = self.free();
-        let mut order: Vec<u32> = self
+        let mut order: Vec<TaskId> = self
             .tasks
             .iter()
             .filter(|(_, t)| t.active && t.first_affected_seq.is_some())
@@ -464,8 +477,8 @@ impl RecoveryPolicy for BaselinePolicy {
         &self.params
     }
 
-    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: u32) {
-        self.available = available_workers;
+    fn init(&mut self, tasks: &[PlanTask], active: &[bool], available_workers: WorkerCount) {
+        self.available = available_workers.0;
         for (t, &a) in tasks.iter().zip(active) {
             if a {
                 self.tasks.insert(
@@ -514,7 +527,7 @@ impl RecoveryPolicy for BaselinePolicy {
                     t.waiting = false;
                     t.first_affected_seq = None;
                 }
-                self.reclaim("task finished")
+                self.reclaim(PlanReason::TaskFinished)
             }
             CoordEvent::NodeLost { .. } => {
                 // idle node died: capacity shrinks silently
@@ -523,7 +536,7 @@ impl RecoveryPolicy for BaselinePolicy {
             }
             CoordEvent::NodeJoined { .. } => {
                 self.available += self.gpus_per_node;
-                self.reclaim("node joined")
+                self.reclaim(PlanReason::NodeJoined)
             }
             CoordEvent::ErrorReport { node, task, kind } => match kind.severity() {
                 Severity::Sev1 => {
@@ -603,19 +616,25 @@ mod tests {
 
     use crate::config::TaskSpec;
     use crate::failure::ErrorKind;
+    use crate::proto::NodeId;
 
     fn plan_task(id: u32, min: u32, n: u32) -> PlanTask {
         let throughput =
             (0..=n).map(|x| if x >= min { 1e12 * (x as f64).powf(0.9) } else { 0.0 }).collect();
-        PlanTask { spec: TaskSpec::new(id, "m", 1.0, min), throughput, current: 0, fault: false }
+        PlanTask {
+            spec: TaskSpec::new(id, "m", 1.0, min),
+            throughput,
+            current: WorkerCount(0),
+            fault: false,
+        }
     }
 
     fn booted(kind: PolicyKind, n: u32) -> Box<dyn RecoveryPolicy> {
         let c = cfg();
         let tasks = [plan_task(0, 8, n + 16), plan_task(1, 8, n + 16)];
-        let mut p = build(kind, &c, 8);
-        p.init(&tasks, &[true, true], n);
-        p.on_event(CoordEvent::TaskLaunched { task: 0 });
+        let mut p = build(kind, &c, WorkerCount(8));
+        p.init(&tasks, &[true, true], WorkerCount(n));
+        p.on_event(CoordEvent::TaskLaunched { task: TaskId(0) });
         p
     }
 
@@ -625,16 +644,18 @@ mod tests {
         // Coordinator must produce identical action sequences.
         let c = cfg();
         let tasks = [plan_task(0, 8, 48), plan_task(1, 8, 48)];
-        let mut pol = UnicronPolicy::new(&c, 8);
-        pol.init(&tasks, &[true, true], 32);
-        let mut coord = Coordinator::new(c.clone(), 32, 8);
-        for t in &tasks {
-            coord.add_task(t.clone());
-        }
+        let mut pol = UnicronPolicy::new(&c, WorkerCount(8));
+        pol.init(&tasks, &[true, true], WorkerCount(32));
+        let mut coord = Coordinator::builder()
+            .config(c.clone())
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .tasks(tasks.iter().cloned())
+            .build();
         let events = [
-            CoordEvent::TaskLaunched { task: 0 },
-            CoordEvent::ErrorReport { node: 1, task: 0, kind: ErrorKind::EccError },
-            CoordEvent::NodeJoined { node: 1 },
+            CoordEvent::TaskLaunched { task: TaskId(0) },
+            CoordEvent::ErrorReport { node: NodeId(1), task: TaskId(0), kind: ErrorKind::EccError },
+            CoordEvent::NodeJoined { node: NodeId(1) },
         ];
         for ev in &events {
             assert_eq!(pol.on_event(ev.clone()), coord.handle(ev.clone()));
@@ -648,9 +669,9 @@ mod tests {
         let tasks = [plan_task(0, 8, 48), plan_task(1, 8, 48)];
         let reference = solve(&tasks, 32, &c);
         for k in [PolicyKind::Megatron, PolicyKind::Oobleck] {
-            let mut p = build(k, &c, 8);
-            p.init(&tasks, &[true, true], 32);
-            let a = p.on_event(CoordEvent::TaskLaunched { task: 0 });
+            let mut p = build(k, &c, WorkerCount(8));
+            p.init(&tasks, &[true, true], WorkerCount(32));
+            let a = p.on_event(CoordEvent::TaskLaunched { task: TaskId(0) });
             match &a[..] {
                 [Action::ApplyPlan { plan, .. }] => {
                     assert_eq!(plan.assignment, reference.assignment, "{k:?}")
@@ -664,8 +685,8 @@ mod tests {
     fn megatron_stalls_on_sev1_and_restores_on_join() {
         let mut p = booted(PolicyKind::Megatron, 32);
         let a = p.on_event(CoordEvent::ErrorReport {
-            node: 0,
-            task: 0,
+            node: NodeId(0),
+            task: TaskId(0),
             kind: ErrorKind::EccError,
         });
         let plan = match &a[..] {
@@ -675,7 +696,7 @@ mod tests {
         assert_eq!(plan.assignment[0], 0, "inelastic task must stall, not shrink");
         let before = plan.assignment[1];
         // node repaired: the stalled task restarts at its exact original size
-        let a = p.on_event(CoordEvent::NodeJoined { node: 0 });
+        let a = p.on_event(CoordEvent::NodeJoined { node: NodeId(0) });
         match &a[..] {
             [Action::ApplyPlan { plan, .. }] => {
                 assert_eq!(plan.assignment[0], 16, "exact original configuration");
@@ -689,8 +710,8 @@ mod tests {
     fn elastic_baseline_shrinks_by_one_node() {
         let mut p = booted(PolicyKind::Oobleck, 32);
         let a = p.on_event(CoordEvent::ErrorReport {
-            node: 0,
-            task: 0,
+            node: NodeId(0),
+            task: TaskId(0),
             kind: ErrorKind::EccError,
         });
         match &a[..] {
@@ -704,11 +725,15 @@ mod tests {
         for k in [PolicyKind::Megatron, PolicyKind::Varuna, PolicyKind::Bamboo] {
             let mut p = booted(k, 32);
             let a = p.on_event(CoordEvent::ErrorReport {
-                node: 1,
-                task: 1,
+                node: NodeId(1),
+                task: TaskId(1),
                 kind: ErrorKind::CudaError,
             });
-            assert_eq!(a, vec![Action::InstructRestart { node: 1, task: 1 }], "{k:?}");
+            assert_eq!(
+                a,
+                vec![Action::InstructRestart { node: NodeId(1), task: TaskId(1) }],
+                "{k:?}"
+            );
         }
     }
 }

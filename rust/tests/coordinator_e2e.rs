@@ -9,8 +9,9 @@ use std::time::Duration;
 use unicron::agent::{Agent, ProcessHandle};
 use unicron::config::UnicronConfig;
 use unicron::coordinator::live::CoordinatorLive;
-use unicron::coordinator::{Action, CoordEvent};
+use unicron::coordinator::Coordinator;
 use unicron::failure::ErrorKind;
+use unicron::proto::{Action, CoordEvent, NodeId};
 use unicron::util::{Clock, RealClock};
 
 fn fast_cfg() -> UnicronConfig {
@@ -23,8 +24,12 @@ fn fast_cfg() -> UnicronConfig {
 
 fn start_coordinator(cfg: &UnicronConfig) -> (CoordinatorLive, Arc<dyn Clock>) {
     let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
-    let live =
-        CoordinatorLive::start(cfg.clone(), 16, 8, clock.clone(), "127.0.0.1:0").unwrap();
+    let coord = Coordinator::builder()
+        .config(cfg.clone())
+        .workers(16u32)
+        .gpus_per_node(8u32)
+        .build();
+    let live = CoordinatorLive::start(coord, clock.clone(), "127.0.0.1:0").unwrap();
     (live, clock)
 }
 
@@ -32,21 +37,21 @@ fn start_coordinator(cfg: &UnicronConfig) -> (CoordinatorLive, Arc<dyn Clock>) {
 fn process_kill_is_detected_and_restart_instructed() {
     let cfg = fast_cfg();
     let (live, clock) = start_coordinator(&cfg);
-    let proc0 = ProcessHandle::new(0);
+    let proc0 = ProcessHandle::new(0u32);
     let agent =
-        Agent::start(1, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
+        Agent::start(1u32, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
 
     proc0.kill();
     let det = live
         .wait_for(
             |d| {
-                matches!(d.event, CoordEvent::ErrorReport { node: 1, kind: ErrorKind::ExitedAbnormally, .. })
+                matches!(d.event, CoordEvent::ErrorReport { node: NodeId(1), kind: ErrorKind::ExitedAbnormally, .. })
             },
             Duration::from_secs(5),
         )
         .expect("process death must be detected");
     // SEV2 -> restart instruction
-    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructRestart { node: 1, .. })));
+    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructRestart { node: NodeId(1), .. })));
     // the instruction lands in the command namespace for the agent
     std::thread::sleep(Duration::from_millis(50));
     let cmds = live.store.get_prefix("/cmd/1/");
@@ -59,19 +64,19 @@ fn process_kill_is_detected_and_restart_instructed() {
 fn exception_classified_by_severity() {
     let cfg = fast_cfg();
     let (live, clock) = start_coordinator(&cfg);
-    let proc0 = ProcessHandle::new(2);
+    let proc0 = ProcessHandle::new(2u32);
     let agent =
-        Agent::start(4, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
+        Agent::start(4u32, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
 
     // SEV1 exception: ECC -> isolate + replan
     proc0.throw("GPU 2: double-bit ECC error");
     let det = live
         .wait_for(
-            |d| matches!(d.event, CoordEvent::ErrorReport { node: 4, kind: ErrorKind::EccError, .. }),
+            |d| matches!(d.event, CoordEvent::ErrorReport { node: NodeId(4), kind: ErrorKind::EccError, .. }),
             Duration::from_secs(5),
         )
         .expect("ECC must be detected");
-    assert!(det.actions.iter().any(|a| matches!(a, Action::IsolateNode { node: 4 })));
+    assert!(det.actions.iter().any(|a| matches!(a, Action::IsolateNode { node: NodeId(4) })));
     assert!(det.actions.iter().any(|a| matches!(a, Action::AlertOps { .. })));
 
     // SEV3 exception: connection reset -> reattempt in place
@@ -80,12 +85,12 @@ fn exception_classified_by_severity() {
         .wait_for(
             |d| {
                 matches!(d.event,
-                    CoordEvent::ErrorReport { node: 4, kind: ErrorKind::ConnectionRefused, .. })
+                    CoordEvent::ErrorReport { node: NodeId(4), kind: ErrorKind::ConnectionRefused, .. })
             },
             Duration::from_secs(5),
         )
         .expect("SEV3 must be detected");
-    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructReattempt { node: 4, .. })));
+    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructReattempt { node: NodeId(4), .. })));
     agent.stop();
 }
 
@@ -93,30 +98,30 @@ fn exception_classified_by_severity() {
 fn node_crash_detected_via_lease_expiry() {
     let cfg = fast_cfg();
     let (live, clock) = start_coordinator(&cfg);
-    let agent = Agent::start(9, 8, live.addr, &cfg, vec![], clock.clone()).unwrap();
+    let agent = Agent::start(9u32, 8, live.addr, &cfg, vec![], clock.clone()).unwrap();
 
     // joined first
-    live.wait_for(|d| matches!(d.event, CoordEvent::NodeJoined { node: 9 }), Duration::from_secs(5))
+    live.wait_for(|d| matches!(d.event, CoordEvent::NodeJoined { node: NodeId(9) }), Duration::from_secs(5))
         .expect("join must be seen");
     // crash: heartbeats stop without lease revoke
     agent.crash();
     let det = live
-        .wait_for(|d| matches!(d.event, CoordEvent::NodeLost { node: 9 }), Duration::from_secs(5))
+        .wait_for(|d| matches!(d.event, CoordEvent::NodeLost { node: NodeId(9) }), Duration::from_secs(5))
         .expect("lease expiry must surface as NodeLost");
-    assert!(det.actions.iter().any(|a| matches!(a, Action::IsolateNode { node: 9 })));
+    assert!(det.actions.iter().any(|a| matches!(a, Action::IsolateNode { node: NodeId(9) })));
 }
 
 #[test]
 fn clean_agent_stop_is_not_a_failure() {
     let cfg = fast_cfg();
     let (live, clock) = start_coordinator(&cfg);
-    let agent = Agent::start(5, 8, live.addr, &cfg, vec![], clock.clone()).unwrap();
-    live.wait_for(|d| matches!(d.event, CoordEvent::NodeJoined { node: 5 }), Duration::from_secs(5))
+    let agent = Agent::start(5u32, 8, live.addr, &cfg, vec![], clock.clone()).unwrap();
+    live.wait_for(|d| matches!(d.event, CoordEvent::NodeJoined { node: NodeId(5) }), Duration::from_secs(5))
         .expect("join");
     agent.stop(); // revokes the lease
     std::thread::sleep(Duration::from_millis(600));
     assert!(
-        !live.detections().iter().any(|d| matches!(d.event, CoordEvent::NodeLost { node: 5 })),
+        !live.detections().iter().any(|d| matches!(d.event, CoordEvent::NodeLost { node: NodeId(5) })),
         "clean deregistration must not be treated as SEV1"
     );
 }
@@ -125,9 +130,9 @@ fn clean_agent_stop_is_not_a_failure() {
 fn stall_detected_by_statistical_monitor() {
     let cfg = fast_cfg();
     let (live, clock) = start_coordinator(&cfg);
-    let proc0 = ProcessHandle::new(1);
+    let proc0 = ProcessHandle::new(1u32);
     let agent =
-        Agent::start(6, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
+        Agent::start(6u32, 8, live.addr, &cfg, vec![proc0.clone()], clock.clone()).unwrap();
 
     // establish a baseline of fast iterations (~30 ms each)
     for _ in 0..8 {
@@ -139,11 +144,11 @@ fn stall_detected_by_statistical_monitor() {
     // now hang: begin an iteration and never finish it
     proc0.begin_iteration(clock.now());
     let det = live.wait_for(
-        |d| matches!(d.event, CoordEvent::ErrorReport { node: 6, kind: ErrorKind::TaskHang, .. }),
+        |d| matches!(d.event, CoordEvent::ErrorReport { node: NodeId(6), kind: ErrorKind::TaskHang, .. }),
         Duration::from_secs(10),
     );
     let det = det.expect("stall must trip the 3x-average monitor");
     // TaskHang is SEV2 -> restart
-    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructRestart { node: 6, .. })));
+    assert!(det.actions.iter().any(|a| matches!(a, Action::InstructRestart { node: NodeId(6), .. })));
     agent.stop();
 }

@@ -3,26 +3,16 @@
 
 use unicron::checkpoint::{CheckpointManager, InMemoryTier, RestoredFrom};
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
-use unicron::coordinator::{Action, CoordEvent, Coordinator};
+use unicron::coordinator::Coordinator;
 use unicron::failure::ErrorKind;
 use unicron::perfmodel::throughput_table;
 use unicron::planner::{PlanLookup, PlanTask};
+use unicron::proto::{Action, CoordEvent, NodeId, TaskId, WorkerCount};
 use unicron::runtime::TrainState;
 
 fn real_plan_tasks(case: u32, n: u32) -> Vec<PlanTask> {
     let cluster = ClusterSpec::default();
-    table3_case(case)
-        .into_iter()
-        .map(|spec| {
-            let model = ModelSpec::gpt3(&spec.model).unwrap();
-            PlanTask {
-                throughput: throughput_table(&model, &cluster, n),
-                spec,
-                current: 0,
-                fault: false,
-            }
-        })
-        .collect()
+    table3_case(case).iter().map(|spec| PlanTask::from_spec(spec, &cluster, n)).collect()
 }
 
 #[test]
@@ -30,28 +20,30 @@ fn coordinator_drives_real_planner_through_failure_storm() {
     // Case 5 on 128 GPUs; three SEV1s then two joins. The coordinator must
     // keep the assignment within capacity at every step, with WAF recovering
     // after joins.
-    let mut coord = Coordinator::new(UnicronConfig::default(), 128, 8);
-    for t in real_plan_tasks(5, 128) {
-        coord.add_task(t);
-    }
-    coord.handle(CoordEvent::TaskLaunched { task: 0 });
+    let mut coord = Coordinator::builder()
+        .config(UnicronConfig::default())
+        .workers(128u32)
+        .gpus_per_node(8u32)
+        .tasks(real_plan_tasks(5, 128))
+        .build();
+    coord.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
     let healthy = coord.current_waf();
     assert!(healthy > 0.0);
 
-    for node in [3, 7, 12] {
-        let actions = coord.handle(CoordEvent::NodeLost { node });
-        let total: u32 = coord.tasks().map(|t| t.current).sum();
-        assert!(total <= coord.available_workers, "over-committed after losing node {node}");
+    for node in [3u32, 7, 12] {
+        let actions = coord.handle(CoordEvent::NodeLost { node: NodeId(node) });
+        let total: u32 = coord.tasks().map(|t| t.current.0).sum();
+        assert!(total <= coord.available_workers().0, "over-committed after losing node {node}");
         assert!(actions.iter().any(|a| matches!(a, Action::ApplyPlan { .. })));
     }
-    assert_eq!(coord.available_workers, 104);
+    assert_eq!(coord.available_workers(), WorkerCount(104));
     let degraded = coord.current_waf();
     assert!(degraded < healthy);
 
-    for node in [3, 7] {
-        coord.handle(CoordEvent::NodeJoined { node });
+    for node in [3u32, 7] {
+        coord.handle(CoordEvent::NodeJoined { node: NodeId(node) });
     }
-    assert_eq!(coord.available_workers, 120);
+    assert_eq!(coord.available_workers(), WorkerCount(120));
     assert!(coord.current_waf() > degraded);
 }
 
@@ -78,20 +70,29 @@ fn lookup_table_covers_failure_and_join_scenarios() {
 
 #[test]
 fn severity_escalation_chain_ends_in_reconfiguration() {
-    let mut coord = Coordinator::new(UnicronConfig::default(), 32, 8);
-    for t in real_plan_tasks(1, 32) {
-        coord.add_task(t);
-    }
+    let mut coord = Coordinator::builder()
+        .config(UnicronConfig::default())
+        .workers(32u32)
+        .gpus_per_node(8u32)
+        .tasks(real_plan_tasks(1, 32))
+        .build();
     // SEV3 storm exhausts reattempts, escalates to restart, restart fails,
     // node is isolated and the cluster replans — the full Fig. 7 path.
     let mut saw_restart = false;
     let mut saw_isolate = false;
     for _ in 0..10 {
-        let actions =
-            coord.handle(CoordEvent::ErrorReport { node: 2, task: 0, kind: ErrorKind::NcclTimeout });
+        let actions = coord.handle(CoordEvent::ErrorReport {
+            node: NodeId(2),
+            task: TaskId(0),
+            kind: ErrorKind::NcclTimeout,
+        });
         if actions.iter().any(|a| matches!(a, Action::InstructRestart { .. })) {
             saw_restart = true;
-            let a2 = coord.handle(CoordEvent::RestartResult { node: 2, task: 0, ok: false });
+            let a2 = coord.handle(CoordEvent::RestartResult {
+                node: NodeId(2),
+                task: TaskId(0),
+                ok: false,
+            });
             if a2.iter().any(|a| matches!(a, Action::IsolateNode { .. })) {
                 saw_isolate = true;
                 break;
@@ -99,7 +100,7 @@ fn severity_escalation_chain_ends_in_reconfiguration() {
         }
     }
     assert!(saw_restart && saw_isolate, "escalation chain incomplete");
-    assert_eq!(coord.available_workers, 24);
+    assert_eq!(coord.available_workers(), WorkerCount(24));
 }
 
 #[test]

@@ -5,6 +5,7 @@
 
 use unicron::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
 use unicron::planner::{solve, solve_brute, PlanTask};
+use unicron::proto::WorkerCount;
 use unicron::proptest::{run, Config, Prop};
 use rand_core::RngCore as _;
 use unicron::rng::{Rand, Xoshiro256};
@@ -29,7 +30,7 @@ fn gen_planner(rng: &mut Xoshiro256, size: usize) -> (Vec<PlanTask>, u32) {
             PlanTask {
                 spec: TaskSpec::new(i as u32, "synthetic", weight, min),
                 throughput,
-                current,
+                current: WorkerCount(current),
                 fault,
             }
         })
@@ -228,7 +229,7 @@ fn trace_generation_invariants() {
                 if e.at_s < prev || e.at_s >= trace.config.duration_s {
                     return Prop::Fail(format!("event at {} out of order/bounds", e.at_s));
                 }
-                if e.node >= trace.config.n_nodes {
+                if e.node.0 >= trace.config.n_nodes {
                     return Prop::Fail(format!("node {} out of range", e.node));
                 }
                 prev = e.at_s;

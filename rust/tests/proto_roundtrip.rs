@@ -1,0 +1,187 @@
+//! Protocol-layer guarantees: every `CoordEvent`/`Action` variant
+//! round-trips `value → bytes → value`, and a `DecisionLog` recorded from a
+//! live `Coordinator` session serializes to bytes, deserializes, and
+//! replays through the engine to a bit-identical action sequence.
+
+use unicron::config::{table3_case, ClusterSpec, TaskSpec, UnicronConfig};
+use unicron::coordinator::Coordinator;
+use unicron::failure::{ErrorKind, Trace, TraceConfig};
+use unicron::planner::{Plan, PlanTask};
+use unicron::proto::{Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId};
+use unicron::ser::Value;
+use unicron::simulator::{PolicyKind, Simulator};
+
+fn roundtrip_event(ev: &CoordEvent) {
+    let text = ev.to_value().encode();
+    let back = CoordEvent::from_value(&Value::parse(&text).unwrap())
+        .unwrap_or_else(|e| panic!("{ev:?}: {e}"));
+    assert_eq!(&back, ev, "through {text}");
+}
+
+fn roundtrip_action(a: &Action) {
+    let text = a.to_value().encode();
+    let back =
+        Action::from_value(&Value::parse(&text).unwrap()).unwrap_or_else(|e| panic!("{a:?}: {e}"));
+    assert_eq!(&back, a, "through {text}");
+}
+
+#[test]
+fn every_event_variant_roundtrips_for_every_error_kind() {
+    // ErrorReport across the full Table 1 taxonomy
+    for &kind in ErrorKind::all() {
+        roundtrip_event(&CoordEvent::ErrorReport { node: NodeId(3), task: TaskId(1), kind });
+    }
+    // every other variant, including edge ids (0 and u32::MAX)
+    for id in [0u32, 7, u32::MAX] {
+        roundtrip_event(&CoordEvent::NodeLost { node: NodeId(id) });
+        roundtrip_event(&CoordEvent::NodeJoined { node: NodeId(id) });
+        roundtrip_event(&CoordEvent::TaskFinished { task: TaskId(id) });
+        roundtrip_event(&CoordEvent::TaskLaunched { task: TaskId(id) });
+        for ok in [true, false] {
+            roundtrip_event(&CoordEvent::ReattemptResult {
+                node: NodeId(id),
+                task: TaskId(id),
+                ok,
+            });
+            roundtrip_event(&CoordEvent::RestartResult { node: NodeId(id), task: TaskId(id), ok });
+        }
+    }
+}
+
+#[test]
+fn every_action_variant_roundtrips() {
+    roundtrip_action(&Action::InstructReattempt { node: NodeId(0), task: TaskId(9) });
+    roundtrip_action(&Action::InstructRestart { node: NodeId(15), task: TaskId(0) });
+    roundtrip_action(&Action::IsolateNode { node: NodeId(12) });
+    roundtrip_action(&Action::AlertOps { message: "SEV1: node 12 isolated".into() });
+    roundtrip_action(&Action::AlertOps { message: "unicode \"quotes\" + ⑤⑥\n".into() });
+    // ApplyPlan with non-trivial floats, for every reason
+    for reason in PlanReason::all() {
+        roundtrip_action(&Action::ApplyPlan {
+            plan: Plan {
+                assignment: vec![0, 8, 16, 104],
+                objective: 1.234567890123e18,
+                total_waf: 3.0000000000000004e15, // not representable in fewer digits
+                workers_used: 128,
+            },
+            reason,
+        });
+    }
+}
+
+#[test]
+fn tampered_artifacts_are_rejected_not_skipped() {
+    let mut log = DecisionLog::new();
+    log.record(
+        CoordEvent::NodeLost { node: NodeId(1) },
+        vec![Action::IsolateNode { node: NodeId(1) }],
+    );
+    let text = String::from_utf8(log.to_bytes()).unwrap();
+    // unknown event variant
+    let bad = text.replace("node_lost", "node_vanished");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // unknown action variant
+    let bad = text.replace("isolate_node", "obliterate_node");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // future version
+    let bad = text.replace("\"version\":1", "\"version\":999");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // garbage bytes
+    assert!(DecisionLog::from_bytes(b"\xff\xfe not json").is_err());
+    // the untampered artifact still decodes
+    assert_eq!(DecisionLog::from_bytes(text.as_bytes()).unwrap(), log);
+}
+
+fn plan_inputs(cluster: &ClusterSpec, specs: &[TaskSpec]) -> Vec<PlanTask> {
+    let n = cluster.total_gpus();
+    specs.iter().map(|spec| PlanTask::from_spec(spec, cluster, n)).collect()
+}
+
+fn fresh_coordinator(cluster: &ClusterSpec, inputs: &[PlanTask]) -> Coordinator {
+    Coordinator::builder()
+        .config(UnicronConfig::default())
+        .workers(cluster.total_gpus())
+        .gpus_per_node(cluster.gpus_per_node)
+        .tasks(inputs.iter().cloned())
+        .build()
+}
+
+/// The acceptance property: record a live `Coordinator` session, push the
+/// log through bytes, and replay it — the action sequence must be
+/// bit-identical, down to the f64s inside every plan.
+#[test]
+fn recorded_live_session_replays_bit_identically_from_bytes() {
+    let cluster = ClusterSpec::default();
+    let inputs = plan_inputs(&cluster, &table3_case(5));
+    let mut live = fresh_coordinator(&cluster, &inputs);
+
+    // a storm touching every Fig. 7 trigger class
+    let events = [
+        CoordEvent::TaskLaunched { task: TaskId(0) },
+        CoordEvent::ErrorReport { node: NodeId(5), task: TaskId(3), kind: ErrorKind::LinkFlapping },
+        CoordEvent::ReattemptResult { node: NodeId(5), task: TaskId(3), ok: true },
+        CoordEvent::ErrorReport { node: NodeId(2), task: TaskId(1), kind: ErrorKind::CudaError },
+        CoordEvent::RestartResult { node: NodeId(2), task: TaskId(1), ok: false },
+        CoordEvent::ErrorReport { node: NodeId(9), task: TaskId(4), kind: ErrorKind::EccError },
+        CoordEvent::NodeLost { node: NodeId(3) },
+        CoordEvent::NodeJoined { node: NodeId(9) },
+        CoordEvent::TaskFinished { task: TaskId(0) },
+        CoordEvent::NodeJoined { node: NodeId(3) },
+    ];
+    for ev in events {
+        live.handle(ev);
+    }
+    assert_eq!(live.log.len(), 10);
+
+    // record → bytes → revived artifact
+    let bytes = live.log.to_bytes();
+    let revived = DecisionLog::from_bytes(&bytes).expect("artifact must decode");
+    assert_eq!(revived, live.log, "serialization must be lossless");
+
+    // replay through a fresh coordinator: bit-identical action sequence
+    // (ReplayDivergence on any mismatch, including f64 plan fields)
+    let mut replica = fresh_coordinator(&cluster, &inputs);
+    let steps = revived
+        .replay(&mut replica, |task| inputs.get(task.0 as usize).cloned())
+        .unwrap_or_else(|d| panic!("replay diverged: {d}"));
+    assert_eq!(steps, 10);
+    assert_eq!(replica.log, live.log);
+    // end state converges too
+    assert_eq!(replica.available_workers(), live.available_workers());
+    assert_eq!(replica.isolated, live.isolated);
+}
+
+/// Same property for a recorded *simulation* (the environment model around
+/// the production coordinator): a captured run becomes a replayable corpus
+/// artifact.
+#[test]
+fn recorded_simulation_replays_bit_identically_from_bytes() {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let inputs = plan_inputs(&cluster, &specs);
+    let trace = Trace::generate(TraceConfig::trace_b(), 2026).with_task_churn(6, 2, 1, 2026);
+
+    let sim = Simulator::builder()
+        .cluster(cluster.clone())
+        .config(cfg.clone())
+        .policy(PolicyKind::Unicron)
+        .tasks(&specs)
+        .build()
+        .run(&trace);
+
+    let revived = DecisionLog::from_bytes(&sim.decision_log.to_bytes()).expect("decode");
+    assert_eq!(revived, sim.decision_log);
+
+    let active = trace.initially_active(specs.len());
+    let mut replica = Coordinator::builder()
+        .config(cfg)
+        .workers(cluster.total_gpus())
+        .gpus_per_node(cluster.gpus_per_node)
+        .tasks(inputs.iter().zip(&active).filter(|(_, &a)| a).map(|(pt, _)| pt.clone()))
+        .build();
+    revived
+        .replay(&mut replica, |task| inputs.get(task.0 as usize).cloned())
+        .unwrap_or_else(|d| panic!("replay diverged: {d}"));
+    assert_eq!(replica.log, sim.decision_log);
+}

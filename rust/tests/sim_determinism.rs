@@ -22,7 +22,7 @@ fn simulate(kind: PolicyKind, tc: TraceConfig, seed: u64, churn: bool) -> SimRes
         // exercise the ⑤⑥ lifecycle path: two late arrivals, one departure
         trace = trace.with_task_churn(6, 2, 1, seed);
     }
-    Simulator::new(cluster, cfg, kind, &specs).run(&trace)
+    Simulator::builder().cluster(cluster).config(cfg).policy(kind).tasks(&specs).build().run(&trace)
 }
 
 /// Bit-level equality: f64 series compared exactly, not within tolerance.
@@ -56,6 +56,9 @@ const CORPUS: &[(PolicyKind, bool, u64, bool)] = &[
     (PolicyKind::Oobleck, false, 9, true),
     (PolicyKind::Varuna, true, 3, false),
     (PolicyKind::Bamboo, false, 2024, false),
+    // PR 2: protocol-layer era — pin a churn-heavy trace-b Unicron run so
+    // DecisionLog recording/replay always has a dense lifecycle seed.
+    (PolicyKind::Unicron, true, 2026, true),
 ];
 
 #[test]

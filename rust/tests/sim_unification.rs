@@ -4,66 +4,59 @@
 //! *is* the deployed decision path, not a model of it.
 //!
 //! Method: run the environment model, then replay its recorded
-//! `decision_log` event stream through a standalone `Coordinator` and
-//! require the identical action sequence at every step.
+//! [`DecisionLog`] through a standalone `Coordinator` via the protocol
+//! layer's [`DecisionLog::replay`] and require the identical action
+//! sequence at every step.
 
-use std::collections::BTreeSet;
-
-use unicron::config::{table3_case, ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
-use unicron::coordinator::{Action, CoordEvent, Coordinator};
+use unicron::config::{table3_case, ClusterSpec, TaskSpec, UnicronConfig};
+use unicron::coordinator::Coordinator;
 use unicron::failure::{Trace, TraceConfig};
-use unicron::perfmodel::throughput_table;
 use unicron::planner::PlanTask;
+use unicron::proto::{Action, CoordEvent, DecisionLog};
 use unicron::simulator::{PolicyKind, Simulator};
 
 fn plan_inputs(cluster: &ClusterSpec, specs: &[TaskSpec]) -> Vec<PlanTask> {
     let n = cluster.total_gpus();
-    specs
-        .iter()
-        .map(|spec| {
-            let model = ModelSpec::gpt3(&spec.model).unwrap();
-            PlanTask {
-                throughput: throughput_table(&model, cluster, n),
-                spec: spec.clone(),
-                current: 0,
-                fault: false,
-            }
-        })
-        .collect()
+    specs.iter().map(|spec| PlanTask::from_spec(spec, cluster, n)).collect()
 }
 
-/// Replay the simulator's delivered events through a fresh Coordinator and
-/// assert action-sequence equality, step by step and in aggregate.
+/// Replay the simulator's recorded decision log through a fresh Coordinator
+/// (via `DecisionLog::replay`) and assert action-sequence equality.
 fn assert_unified(trace: &Trace) {
     let cluster = ClusterSpec::default();
     let cfg = UnicronConfig::default();
     let specs = table3_case(5);
     let inputs = plan_inputs(&cluster, &specs);
 
-    let sim =
-        Simulator::new(cluster.clone(), cfg.clone(), PolicyKind::Unicron, &specs).run(trace);
+    let sim = Simulator::builder()
+        .cluster(cluster.clone())
+        .config(cfg.clone())
+        .policy(PolicyKind::Unicron)
+        .tasks(&specs)
+        .build()
+        .run(trace);
     assert!(!sim.decision_log.is_empty(), "simulation made no decisions");
 
-    let mut coord = Coordinator::new(cfg, cluster.total_gpus(), cluster.gpus_per_node);
     let active = trace.initially_active(specs.len());
-    let mut registered = BTreeSet::new();
-    for (pt, &a) in inputs.iter().zip(&active) {
-        if a {
-            coord.add_task(pt.clone());
-            registered.insert(pt.spec.id);
-        }
-    }
-    for (step, (ev, expected)) in sim.decision_log.iter().enumerate() {
-        // arriving tasks are registered just before their TaskLaunched, the
-        // same order the environment model uses
-        if let CoordEvent::TaskLaunched { task } = ev {
-            if registered.insert(*task) {
-                coord.add_task(inputs[*task as usize].clone());
-            }
-        }
-        let got = coord.handle(ev.clone());
-        assert_eq!(&got, expected, "step {step}: simulator diverged from Coordinator at {ev:?}");
-    }
+    let mut coord = Coordinator::builder()
+        .config(cfg)
+        .workers(cluster.total_gpus())
+        .gpus_per_node(cluster.gpus_per_node)
+        .tasks(
+            inputs
+                .iter()
+                .zip(&active)
+                .filter(|(_, &a)| a)
+                .map(|(pt, _)| pt.clone()),
+        )
+        .build();
+    // arriving tasks are admitted just before their TaskLaunched, the same
+    // order the environment model uses
+    let steps = sim
+        .decision_log
+        .replay(&mut coord, |task| inputs.get(task.0 as usize).cloned())
+        .unwrap_or_else(|d| panic!("simulator diverged from Coordinator: {d}"));
+    assert_eq!(steps, sim.decision_log.len());
     // the audit log is the decision log — same thing, end to end
     assert_eq!(coord.log, sim.decision_log);
 }
@@ -94,12 +87,19 @@ fn simulated_sev1_handling_is_the_fig7_workflow() {
     let cluster = ClusterSpec::default();
     let cfg = UnicronConfig::default();
     let specs = table3_case(5);
-    let sim = Simulator::new(cluster, cfg, PolicyKind::Unicron, &specs).run(&trace);
+    let sim = Simulator::builder()
+        .cluster(cluster)
+        .config(cfg)
+        .policy(PolicyKind::Unicron)
+        .tasks(&specs)
+        .build()
+        .run(&trace);
     let mut saw_sev1 = false;
-    for (ev, actions) in &sim.decision_log {
-        if let CoordEvent::ErrorReport { kind, node, .. } = ev {
+    for entry in &sim.decision_log {
+        if let CoordEvent::ErrorReport { kind, node, .. } = &entry.event {
             if kind.severity() == unicron::failure::Severity::Sev1 {
                 saw_sev1 = true;
+                let actions = &entry.actions;
                 assert!(
                     matches!(actions[0], Action::IsolateNode { node: n } if n == *node),
                     "SEV1 must isolate first: {actions:?}"
@@ -113,4 +113,35 @@ fn simulated_sev1_handling_is_the_fig7_workflow() {
         }
     }
     assert!(saw_sev1, "trace-a seed 42 should hit at least one owned node with SEV1");
+}
+
+#[test]
+fn decision_log_survives_the_wire() {
+    // The unification property must hold across serialization: log → bytes
+    // → log replays identically (the proto layer's reason for existing).
+    let trace = Trace::generate(TraceConfig::trace_a(), 42);
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let inputs = plan_inputs(&cluster, &specs);
+    let sim = Simulator::builder()
+        .cluster(cluster.clone())
+        .config(cfg.clone())
+        .policy(PolicyKind::Unicron)
+        .tasks(&specs)
+        .build()
+        .run(&trace);
+
+    let revived = DecisionLog::from_bytes(&sim.decision_log.to_bytes()).expect("decode");
+    assert_eq!(revived, sim.decision_log);
+
+    let mut coord = Coordinator::builder()
+        .config(cfg)
+        .workers(cluster.total_gpus())
+        .gpus_per_node(cluster.gpus_per_node)
+        .tasks(inputs.iter().cloned())
+        .build();
+    revived
+        .replay(&mut coord, |task| inputs.get(task.0 as usize).cloned())
+        .unwrap_or_else(|d| panic!("deserialized log diverged: {d}"));
 }
