@@ -1,0 +1,50 @@
+//! Fleet hot-path cost: the coordinator ticks the fleet model and may score
+//! a failure on *every* event, so lemon-score and spare-decision updates
+//! must stay O(1) per event — pinned here at ≥1M updates/s each.
+
+use unicron::bench::Bencher;
+use unicron::config::UnicronConfig;
+use unicron::failure::Severity;
+use unicron::fleet::{FleetModel, SparePool};
+use unicron::proto::NodeId;
+
+const N: u32 = 100_000;
+
+fn main() {
+    let cfg = UnicronConfig::default();
+    let mut b = Bencher::new("fleet").with_samples(3, 20);
+
+    // lemon-score updates: tick + note_failure across a 128-node fleet
+    let mut fleet = FleetModel::from_config(&cfg);
+    let lemon = b.bench("lemon_score_100k_updates", || {
+        for i in 0..N {
+            fleet.tick();
+            fleet.note_failure(NodeId(i % 128), Severity::Sev2);
+        }
+        std::hint::black_box(fleet.lemon_score(NodeId(3)));
+    });
+
+    // spare decisions: the full value-vs-cost arithmetic per call
+    let pool = SparePool::from_config(&cfg);
+    let spares = b.bench("spare_decision_100k", || {
+        let mut retained = 0u32;
+        for i in 0..N {
+            let lambda = pool.expected_failures(128, cfg.mtbf_per_gpu_s);
+            let node_waf = 1e15 + (i % 7) as f64;
+            if pool.decide(i % 3, lambda, node_waf) == unicron::fleet::SpareDecision::Retain {
+                retained += 1;
+            }
+        }
+        std::hint::black_box(retained);
+    });
+
+    for (name, st) in [("lemon-score", lemon), ("spare-decision", spares)] {
+        let st = st.expect("benchmark filtered out");
+        let rate = N as f64 / st.median;
+        println!("{name}: {:.2}M updates/s", rate / 1e6);
+        assert!(
+            rate >= 1e6,
+            "{name} updates must stay O(1) per event (≥1M/s), got {rate:.0}/s"
+        );
+    }
+}

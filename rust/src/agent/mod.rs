@@ -199,6 +199,22 @@ impl Agent {
         Ok(Agent { node_id, stop, crashed, threads })
     }
 
+    /// Maintenance hook: announce to the coordinator that this machine's
+    /// repair finished and it is ready for a fleet decision — rejoin
+    /// (`SpareRetained`), hold/return (`SpareReleased`), or refuse as a
+    /// lemon (`NodeQuarantined`). Called by repair tooling, not the agent
+    /// threads: the node may not be running an agent yet.
+    pub fn announce_repaired(
+        coord_addr: std::net::SocketAddr,
+        node_id: impl Into<NodeId>,
+    ) -> Result<()> {
+        let node_id = node_id.into();
+        let mut kv = KvClient::connect(coord_addr)?;
+        let body = Value::obj().with("task", 0u64).with("class", "repaired").with("msg", "");
+        kv.put(&format!("/status/{node_id}/repaired"), &body.encode(), None)?;
+        Ok(())
+    }
+
     /// Graceful stop: heartbeat revokes the lease (clean leave, not SEV1).
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);

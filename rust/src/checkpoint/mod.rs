@@ -25,8 +25,11 @@ fn digest32(body: &[u8]) -> [u8; 32] {
     h.update(body);
     out[..4].copy_from_slice(&h.finalize().to_le_bytes());
     out[4..12].copy_from_slice(&(body.len() as u64).to_le_bytes());
-    // header (magic+step+count) sha256, first 20 bytes
-    let hdr = &body[..MAGIC.len().min(body.len()) + 12.min(body.len().saturating_sub(MAGIC.len()))];
+    // sha256 over the fixed-size header — magic (8) + step (8) + tensor
+    // count (4) = 20 bytes — clamped for bodies shorter than that. (The
+    // old bound summed two independently-clamped terms, which was hard to
+    // show in-range for short bodies; min(len, header) is the intent.)
+    let hdr = &body[..body.len().min(MAGIC.len() + 12)];
     let sh = Sha256::digest(hdr);
     out[12..32].copy_from_slice(&sh[..20]);
     out
@@ -222,6 +225,37 @@ mod tests {
         let _ = fs::remove_dir_all(&d);
         fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    #[test]
+    fn digest32_handles_empty_short_and_normal_bodies() {
+        // empty and shorter-than-header bodies must not panic, and the
+        // length field must reflect the body
+        for len in [0usize, 1, 7, 8, 12, 19, 20, 21, 64] {
+            let body = vec![0xA5u8; len];
+            let d = digest32(&body);
+            assert_eq!(d[4..12], (len as u64).to_le_bytes(), "len {len}");
+        }
+        // the header hash covers exactly the first 20 bytes: flipping a
+        // header byte changes out[12..], flipping a later byte must not
+        let body: Vec<u8> = (0..64u8).collect();
+        let base = digest32(&body);
+        let mut hdr_flip = body.clone();
+        hdr_flip[10] ^= 0xFF;
+        assert_ne!(digest32(&hdr_flip)[12..32], base[12..32]);
+        let mut tail_flip = body.clone();
+        tail_flip[40] ^= 0xFF;
+        let tail_digest = digest32(&tail_flip);
+        assert_eq!(tail_digest[12..32], base[12..32], "tail bytes are not header");
+        assert_ne!(tail_digest[..4], base[..4], "but the body CRC still catches them");
+        // a body exactly one byte short of the header hashes only what exists
+        let short = &body[..19];
+        assert_eq!(digest32(short)[12..32], {
+            let sh = Sha256::digest(short);
+            let mut want = [0u8; 20];
+            want.copy_from_slice(&sh[..20]);
+            want
+        });
     }
 
     #[test]

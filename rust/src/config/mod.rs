@@ -286,6 +286,26 @@ pub struct UnicronConfig {
     /// Background cadence (seconds) at which the live driver refreshes the
     /// §5.2 precomputed plan table when it has gone stale.
     pub plan_refresh_period_s: f64,
+    /// Nodes per failure domain (rack/leaf switch) for correlated-failure
+    /// bookkeeping: `domain = node / nodes_per_domain` (fleet layer).
+    pub nodes_per_domain: u32,
+    /// Per-event decay γ of the lemon recurrence score
+    /// (`score ← score·γ^Δevents + w` on each failure; see `fleet`).
+    pub lemon_decay: f64,
+    /// Quarantine a node once its decayed recurrence score reaches this.
+    /// Calibrated so one full §4.2 escalation chain stays well below it —
+    /// only *recurrence* (many failures in a short event window) crosses.
+    pub lemon_threshold: f64,
+    /// Fence lemon nodes before they fail again and refuse to re-admit them
+    /// after repair (the `fleet-lemon` experiment compares on/off).
+    pub lemon_quarantine: bool,
+    /// Holding cost of one hot spare as a fraction of the WAF a node earns —
+    /// the spare pool's retain/release break-even probability.
+    pub spare_hold_frac: f64,
+    /// Provisioning/repair window (seconds) the spare pool insures against.
+    pub spare_window_s: f64,
+    /// Never hold more hot spares than this.
+    pub max_spares: u32,
 }
 
 impl Default for UnicronConfig {
@@ -302,6 +322,13 @@ impl Default for UnicronConfig {
             max_reattempts: 3,
             max_restarts: 1,
             plan_refresh_period_s: 0.5,
+            nodes_per_domain: 4,
+            lemon_decay: 0.95,
+            lemon_threshold: 8.0,
+            lemon_quarantine: true,
+            spare_hold_frac: 0.25,
+            spare_window_s: 2.0 * 86400.0,
+            max_spares: 2,
         }
     }
 }

@@ -255,6 +255,9 @@ fn parse_status(key: &str, value: &str) -> Option<CoordEvent> {
         "exception" => classify_exception(msg),
         "exit" => ErrorKind::ExitedAbnormally,
         "stall" => ErrorKind::TaskHang,
+        // maintenance tooling announces a finished repair; the fleet layer
+        // decides whether the node rejoins, is held, or is quarantined
+        "repaired" => return Some(CoordEvent::NodeRepaired { node }),
         _ => return None,
     };
     Some(CoordEvent::ErrorReport { node, task, kind })
@@ -271,8 +274,15 @@ fn dispatch_actions(store: &Store, seq: &AtomicU64, actions: &[Action]) {
                 (*node, Value::obj().with("op", "restart").with("task", task.0 as u64))
             }
             Action::IsolateNode { node } => (*node, Value::obj().with("op", "isolate")),
-            // plans and alerts are coordinator-local records
-            Action::ApplyPlan { .. } | Action::AlertOps { .. } => continue,
+            // a quarantined lemon is fenced exactly like an isolation on the
+            // agent side; the permanence lives in coordinator state
+            Action::NodeQuarantined { node } => (*node, Value::obj().with("op", "isolate")),
+            // a released spare's agent deprovisions the machine
+            Action::SpareReleased { node } => (*node, Value::obj().with("op", "release")),
+            // plans, alerts, and retained spares are coordinator-local
+            Action::ApplyPlan { .. } | Action::AlertOps { .. } | Action::SpareRetained { .. } => {
+                continue
+            }
         };
         let n = seq.fetch_add(1, Ordering::Relaxed);
         let _ = store.put(&format!("{CMD_PREFIX}{node}/{n}"), &body.encode(), None);
@@ -312,6 +322,10 @@ mod tests {
                 task: TaskId(0),
                 kind: ErrorKind::TaskHang
             })
+        );
+        assert_eq!(
+            parse_status("/status/7/repaired", r#"{"task":0,"class":"repaired","msg":""}"#),
+            Some(CoordEvent::NodeRepaired { node: NodeId(7) })
         );
         assert_eq!(parse_status("/status/2/9", r#"{"class":"bogus"}"#), None);
         assert_eq!(parse_status("/other/2", "{}"), None);

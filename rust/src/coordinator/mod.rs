@@ -26,6 +26,16 @@
 //! Construction goes through [`Coordinator::builder`] (see DESIGN.md §7 for
 //! the mapping from the old positional constructor).
 //!
+//! Since the fleet layer (DESIGN.md §8) the coordinator also carries
+//! per-node memory: a [`FleetModel`] scores recurrent failures on every SEV
+//! and fences lemon nodes *before* they fail again
+//! ([`Action::NodeQuarantined`]); a repaired node
+//! ([`CoordEvent::NodeRepaired`]) is re-admitted, held as a hot spare, or
+//! returned to the provider by the [`SparePool`] cost arithmetic
+//! ([`Action::SpareRetained`] / [`Action::SpareReleased`]). All of it is a
+//! pure function of the event sequence, so [`DecisionLog`] replays stay
+//! bit-identical.
+//!
 //! Hot path (§5.2): between events the owner calls
 //! [`Coordinator::precompute_plans`] to build a [`ScenarioLookup`] covering
 //! every `(faulted task, worker count)` the next event could produce; a
@@ -42,6 +52,7 @@ use std::collections::BTreeMap;
 
 use crate::config::UnicronConfig;
 use crate::failure::Severity;
+use crate::fleet::{FleetModel, SpareDecision, SparePool};
 use crate::planner::{solve, PlanTask, ScenarioLookup};
 pub use crate::proto::{
     Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId, WorkerCount,
@@ -116,12 +127,18 @@ impl CoordinatorBuilder {
     }
 
     pub fn build(self) -> Coordinator {
+        let fleet = FleetModel::from_config(&self.cfg);
         let mut coord = Coordinator {
+            fleet,
             cfg: self.cfg,
             tasks: BTreeMap::new(),
             available_workers: self.workers.0,
+            peak_workers: self.workers.0,
             gpus_per_node: self.gpus_per_node.unwrap_or(WorkerCount(8)).0,
             isolated: Vec::new(),
+            quarantined: Vec::new(),
+            released: Vec::new(),
+            pooled: Vec::new(),
             escalations: BTreeMap::new(),
             log: DecisionLog::new(),
             lookup: None,
@@ -143,10 +160,30 @@ pub struct Coordinator {
     tasks: BTreeMap<TaskId, PlanTask>,
     /// Healthy workers (GPUs) currently available.
     available_workers: u32,
+    /// Largest pool the cluster has been entitled to (initial capacity,
+    /// grown by explicit joins). A repaired node below this is restoring
+    /// lost capacity; at or above it, it is a hot-spare candidate priced by
+    /// the [`SparePool`] economics.
+    peak_workers: u32,
     /// GPUs contributed per node (to size NodeLost effects).
     gpus_per_node: u32,
-    /// Nodes currently isolated (fenced off).
+    /// Nodes currently isolated (fenced off, expected back after repair).
     pub isolated: Vec<NodeId>,
+    /// Lemon nodes fenced for good — no repair returns them, and they are
+    /// excluded from the capacity ceiling plans are precomputed against.
+    pub quarantined: Vec<NodeId>,
+    /// Nodes returned to the provider by a spare-pool decision.
+    pub released: Vec<NodeId>,
+    /// Nodes known to be serving in the pool (re-admitted via
+    /// `NodeRepaired`/`NodeJoined`; removed on isolation). Deduplicates the
+    /// two live re-admission paths — a retained repair followed by the
+    /// node's agent re-registering must not add its capacity twice, and a
+    /// duplicate repair announcement must not either. Initial anonymous
+    /// capacity is not tracked here.
+    pooled: Vec<NodeId>,
+    /// Per-node lifetime health history — the lemon/quarantine and spare
+    /// decisions' evidence base (fleet layer, DESIGN.md §8).
+    pub fleet: FleetModel,
     escalations: BTreeMap<(TaskId, NodeId), EscalationState>,
     /// Audit log of (event, actions) — the tests' and benches' ground
     /// truth, and a serializable [`crate::proto::DecisionLog`] artifact.
@@ -193,8 +230,11 @@ impl Coordinator {
         WorkerCount(self.gpus_per_node)
     }
 
-    /// Full cluster capacity (healthy + isolated nodes' GPUs) — the upper
-    /// bound a join can restore the pool to, and the precompute range.
+    /// Surviving cluster capacity (healthy + isolated nodes' GPUs) — the
+    /// upper bound a repair can restore the pool to, and the precompute
+    /// range. Quarantined and released nodes are *not* counted: they never
+    /// come back, so precomputing plans for their capacity would waste the
+    /// background budget on unreachable scenarios.
     fn capacity_ceiling(&self) -> u32 {
         self.available_workers + self.gpus_per_node * self.isolated.len() as u32
     }
@@ -210,6 +250,26 @@ impl Coordinator {
         }
         let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
         self.lookup = Some(ScenarioLookup::precompute(&ordered, self.capacity_ceiling(), &self.cfg));
+    }
+
+    /// Precompute only the *event horizon* — the scenarios one event away
+    /// from the current state (see
+    /// [`ScenarioLookup::precompute_horizon`]): m+3 solves instead of the
+    /// full grid's (m+1)·(n+1). Cheap enough to run synchronously after
+    /// every decision; the simulator's Unicron policy does exactly that, so
+    /// simulated SEV1 replans take the same table path production does.
+    pub fn precompute_event_plans(&mut self) {
+        if self.tasks.is_empty() {
+            self.lookup = None;
+            return;
+        }
+        let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
+        self.lookup = Some(ScenarioLookup::precompute_horizon(
+            &ordered,
+            self.available_workers,
+            self.gpus_per_node,
+            &self.cfg,
+        ));
     }
 
     /// Snapshot the inputs for a *background* scenario-table rebuild — the
@@ -270,6 +330,7 @@ impl Coordinator {
 
     /// Process one event; returns the actions (also appended to `log`).
     pub fn handle(&mut self, event: CoordEvent) -> Vec<Action> {
+        self.fleet.tick(); // the fleet's event clock (lemon-score decay)
         let actions = self.dispatch(&event);
         self.log.record(event, actions.clone());
         actions
@@ -277,17 +338,53 @@ impl Coordinator {
 
     fn dispatch(&mut self, event: &CoordEvent) -> Vec<Action> {
         match *event {
-            CoordEvent::ErrorReport { node, task, kind } => match kind.severity() {
-                Severity::Sev3 => self.on_sev3(node, task),
-                Severity::Sev2 => self.on_sev2(node, task),
-                Severity::Sev1 => self.on_sev1(node, Some(task)),
-            },
-            CoordEvent::NodeLost { node } => self.on_sev1(node, None),
+            CoordEvent::ErrorReport { node, task, kind } => {
+                if self.quarantined.contains(&node) {
+                    return vec![]; // fenced for good; stale report
+                }
+                let sev = kind.severity();
+                self.fleet.note_failure(node, sev);
+                match sev {
+                    // the fleet is consulted on every SEV2/SEV3: a lemon is
+                    // fenced *now*, before its next failure, instead of
+                    // being reattempted/restarted yet again
+                    Severity::Sev3 => self
+                        .maybe_quarantine(node, Some(task))
+                        .unwrap_or_else(|| self.on_sev3(node, task)),
+                    Severity::Sev2 => self
+                        .maybe_quarantine(node, Some(task))
+                        .unwrap_or_else(|| self.on_sev2(node, task)),
+                    Severity::Sev1 => self.on_sev1(node, Some(task)),
+                }
+            }
+            CoordEvent::NodeLost { node } => {
+                if self.quarantined.contains(&node) {
+                    return vec![];
+                }
+                self.fleet.note_failure(node, Severity::Sev1);
+                self.on_sev1(node, None)
+            }
             CoordEvent::NodeJoined { node } => {
+                // quarantine is permanent: a fenced lemon's agent
+                // re-registering (reboot, supervisor restart) must not
+                // silently re-admit it
+                if self.quarantined.contains(&node) {
+                    return vec![];
+                }
+                // already serving (e.g. retained via NodeRepaired and now
+                // its agent registered): don't double-count its capacity
+                if self.pooled.contains(&node) {
+                    return vec![];
+                }
                 self.isolated.retain(|&n| n != node);
+                self.released.retain(|&n| n != node);
+                self.pooled.push(node);
+                self.fleet.note_join(node);
                 self.available_workers += self.gpus_per_node;
+                self.peak_workers = self.peak_workers.max(self.available_workers);
                 self.reconfigure(PlanReason::NodeJoined, None)
             }
+            CoordEvent::NodeRepaired { node } => self.on_repaired(node),
             CoordEvent::TaskFinished { task } => {
                 self.tasks.remove(&task);
                 self.invalidate_lookup(); // task set changed
@@ -338,11 +435,93 @@ impl Coordinator {
         }
     }
 
+    /// Fleet gate, consulted on every SEV2/SEV3 report (after the failure is
+    /// noted): a node whose decayed recurrence score crossed the lemon
+    /// threshold is fenced *before* it fails again. Same capacity effect as
+    /// a SEV1 isolation, but permanent — no repair returns the node.
+    fn maybe_quarantine(&mut self, node: NodeId, task: Option<TaskId>) -> Option<Vec<Action>> {
+        if !self.cfg.lemon_quarantine || !self.fleet.is_lemon(node) {
+            return None;
+        }
+        self.quarantined.push(node);
+        self.fleet.note_quarantine(node);
+        self.pooled.retain(|&n| n != node);
+        let was_isolated = self.isolated.contains(&node);
+        self.isolated.retain(|&n| n != node);
+        if !was_isolated {
+            self.available_workers = self.available_workers.saturating_sub(self.gpus_per_node);
+        }
+        let mut actions = vec![Action::NodeQuarantined { node }];
+        actions.extend(self.reconfigure(PlanReason::Sev1Failure, task));
+        Some(actions)
+    }
+
+    /// Trigger for [`CoordEvent::NodeRepaired`]: maintenance finished — the
+    /// fleet layer decides the node's fate. Lemons are quarantined instead
+    /// of re-admitted; otherwise the [`SparePool`] prices retaining the node
+    /// against releasing it (restoring lost capacity is always retained).
+    fn on_repaired(&mut self, node: NodeId) -> Vec<Action> {
+        if self.quarantined.contains(&node) || self.released.contains(&node) {
+            return vec![]; // already out of the fleet
+        }
+        if self.pooled.contains(&node) {
+            return vec![]; // already serving: duplicate repair announcement
+        }
+        self.fleet.note_repair(node);
+        if self.cfg.lemon_quarantine && self.fleet.is_lemon(node) {
+            // the repair fixed the symptom, not the node: refuse readmission
+            self.quarantined.push(node);
+            self.fleet.note_quarantine(node);
+            self.isolated.retain(|&n| n != node);
+            return vec![Action::NodeQuarantined { node }];
+        }
+        match self.spare_decision() {
+            SpareDecision::Retain => {
+                self.isolated.retain(|&n| n != node);
+                self.pooled.push(node);
+                self.fleet.note_join(node);
+                self.available_workers += self.gpus_per_node;
+                let mut actions = vec![Action::SpareRetained { node }];
+                actions.extend(self.reconfigure(PlanReason::NodeJoined, None));
+                actions
+            }
+            SpareDecision::Release => {
+                self.isolated.retain(|&n| n != node);
+                self.released.push(node);
+                self.fleet.note_release(node);
+                vec![Action::SpareReleased { node }]
+            }
+        }
+    }
+
+    /// The spare-pool verdict for one repaired node, in the planner's WAF
+    /// currency (see [`SparePool`]): below the entitled peak the node is
+    /// restoring lost capacity (always retain); at or above it, the node is
+    /// a hot spare whose holding cost is weighed against the Poisson-tail
+    /// probability of needing it within the insured window.
+    ///
+    /// Every input is a pure function of coordinator state, so recorded
+    /// decisions replay bit-identically (the marginal node WAF is the
+    /// proportional share `current_waf · gpn / available`, not a lookup).
+    fn spare_decision(&self) -> SpareDecision {
+        if self.available_workers < self.peak_workers {
+            return SpareDecision::Retain;
+        }
+        let gpn = self.gpus_per_node.max(1);
+        let held = (self.available_workers - self.peak_workers) / gpn;
+        let pool = SparePool::from_config(&self.cfg);
+        let lambda = pool.expected_failures(self.available_workers, self.cfg.mtbf_per_gpu_s);
+        let node_waf =
+            self.current_waf() * gpn as f64 / self.available_workers.max(1) as f64;
+        pool.decide(held, lambda, node_waf)
+    }
+
     fn on_sev1(&mut self, node: NodeId, task: Option<TaskId>) -> Vec<Action> {
-        if self.isolated.contains(&node) {
+        if self.isolated.contains(&node) || self.quarantined.contains(&node) {
             return vec![]; // already fenced; duplicate report
         }
         self.isolated.push(node);
+        self.pooled.retain(|&n| n != node);
         self.available_workers = self.available_workers.saturating_sub(self.gpus_per_node);
         let mut actions = vec![
             Action::IsolateNode { node },
@@ -365,17 +544,28 @@ impl Coordinator {
         }
         // map the faulted task id to its position in id-ordered iteration
         let fault_idx = faulted_task.and_then(|t| self.tasks.keys().position(|&k| k == t));
-        let plan = if self.lookup_is_fresh() {
-            self.lookup_hits += 1;
-            let lut = self.lookup.as_ref().unwrap();
-            lut.plan_for(fault_idx, self.available_workers).clone()
+        // the table serves the replan only on an *exact* scenario hit (full
+        // grids cover everything in range; event-horizon tables exactly the
+        // one-event-away scenarios) — anything else re-solves live. Both
+        // paths produce bit-identical plans for the same state.
+        let precomputed = if self.lookup_is_fresh() {
+            self.lookup.as_ref().and_then(|l| l.get(fault_idx, self.available_workers)).cloned()
         } else {
-            self.solve_calls += 1;
-            let mut ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
-            if let Some(i) = fault_idx {
-                ordered[i].fault = true;
+            None
+        };
+        let plan = match precomputed {
+            Some(plan) => {
+                self.lookup_hits += 1;
+                plan
             }
-            solve(&ordered, self.available_workers, &self.cfg)
+            None => {
+                self.solve_calls += 1;
+                let mut ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
+                if let Some(i) = fault_idx {
+                    ordered[i].fault = true;
+                }
+                solve(&ordered, self.available_workers, &self.cfg)
+            }
         };
         // commit the new assignments; clear fault flags (handled). The
         // precomputed table remains valid only if nothing actually moved.
@@ -617,6 +807,199 @@ mod tests {
         // the installed table serves the next replan from the hot path
         c.handle(CoordEvent::NodeJoined { node: NodeId(5) });
         assert!(c.lookup_hits >= 1, "installed table must serve replans");
+    }
+
+    #[test]
+    fn lemon_node_is_quarantined_before_it_fails_again() {
+        // A node caught in a fail/restart/fail loop must eventually be
+        // fenced proactively — with a NodeQuarantined + SEV1-class replan —
+        // instead of being restarted forever.
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        let mut quarantined_at = None;
+        for cycle in 0..25 {
+            let a = c.handle(CoordEvent::ErrorReport {
+                node: NodeId(1),
+                task: TaskId(0),
+                kind: ErrorKind::CudaError,
+            });
+            if matches!(a.first(), Some(Action::NodeQuarantined { node: NodeId(1) })) {
+                assert!(
+                    a.iter().any(|x| matches!(
+                        x,
+                        Action::ApplyPlan { reason: PlanReason::Sev1Failure, .. }
+                    )),
+                    "quarantine must replan around the lost capacity: {a:?}"
+                );
+                quarantined_at = Some(cycle);
+                break;
+            }
+            assert_eq!(
+                a,
+                vec![Action::InstructRestart { node: NodeId(1), task: TaskId(0) }],
+                "cycle {cycle}"
+            );
+            // the restart succeeds — the classic lemon pattern
+            c.handle(CoordEvent::RestartResult { node: NodeId(1), task: TaskId(0), ok: true });
+        }
+        let cycle = quarantined_at.expect("a recurrent failer must be quarantined");
+        assert!(cycle >= 4, "one escalation chain must not look like a lemon (cycle {cycle})");
+        assert!(c.quarantined.contains(&NodeId(1)));
+        assert_eq!(c.available_workers(), WorkerCount(24), "quarantine costs the node's GPUs");
+        // fenced for good: further reports are stale no-ops
+        let a = c.handle(CoordEvent::ErrorReport {
+            node: NodeId(1),
+            task: TaskId(0),
+            kind: ErrorKind::CudaError,
+        });
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn repaired_lemon_is_refused_readmission() {
+        // A node cycling SEV1 -> repair -> SEV1 is a lemon too: at some
+        // repair the fleet refuses to re-admit it.
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        let mut refused = false;
+        for _ in 0..12 {
+            c.handle(CoordEvent::NodeLost { node: NodeId(2) });
+            let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(2) });
+            match a.first() {
+                Some(Action::NodeQuarantined { node: NodeId(2) }) => {
+                    refused = true;
+                    break;
+                }
+                Some(Action::SpareRetained { node: NodeId(2) }) => {
+                    assert!(matches!(
+                        a.get(1),
+                        Some(Action::ApplyPlan { reason: PlanReason::NodeJoined, .. })
+                    ));
+                }
+                other => panic!("unexpected repair outcome: {other:?} in {a:?}"),
+            }
+        }
+        assert!(refused, "a recurrently SEV1-ing node must be quarantined at repair");
+        assert!(c.quarantined.contains(&NodeId(2)));
+        assert_eq!(c.available_workers(), WorkerCount(24), "the lemon never rejoined");
+        // idempotent: another repair report changes nothing
+        assert!(c.handle(CoordEvent::NodeRepaired { node: NodeId(2) }).is_empty());
+        // quarantine is permanent: even the lemon's agent re-registering
+        // (a membership NodeJoined) must not re-admit it
+        assert!(c.handle(CoordEvent::NodeJoined { node: NodeId(2) }).is_empty());
+        assert!(c.quarantined.contains(&NodeId(2)));
+        assert_eq!(c.available_workers(), WorkerCount(24));
+    }
+
+    #[test]
+    fn readmission_is_deduplicated_across_repair_and_join() {
+        // The live flow has two re-admission paths — a repair announcement
+        // and the node's agent registering with membership. One capacity
+        // credit per readmission, no matter how the reports arrive or
+        // repeat.
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        c.handle(CoordEvent::NodeLost { node: NodeId(4) });
+        assert_eq!(c.available_workers(), WorkerCount(24));
+        // repair announced -> retained
+        let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(4) });
+        assert!(matches!(a[0], Action::SpareRetained { node: NodeId(4) }));
+        assert_eq!(c.available_workers(), WorkerCount(32));
+        // duplicate repair announcement: no phantom capacity
+        assert!(c.handle(CoordEvent::NodeRepaired { node: NodeId(4) }).is_empty());
+        assert_eq!(c.available_workers(), WorkerCount(32));
+        // the node's agent now registers: already pooled, not counted again
+        assert!(c.handle(CoordEvent::NodeJoined { node: NodeId(4) }).is_empty());
+        assert_eq!(c.available_workers(), WorkerCount(32));
+        // a real new loss/readmission cycle still works
+        c.handle(CoordEvent::NodeLost { node: NodeId(4) });
+        assert_eq!(c.available_workers(), WorkerCount(24));
+        let a = c.handle(CoordEvent::NodeJoined { node: NodeId(4) });
+        assert!(matches!(a[0], Action::ApplyPlan { reason: PlanReason::NodeJoined, .. }));
+        assert_eq!(c.available_workers(), WorkerCount(32));
+    }
+
+    #[test]
+    fn repaired_node_below_peak_is_always_retained() {
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        c.handle(CoordEvent::NodeLost { node: NodeId(3) });
+        assert_eq!(c.available_workers(), WorkerCount(24));
+        let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(3) });
+        assert!(matches!(a[0], Action::SpareRetained { node: NodeId(3) }));
+        assert!(matches!(a[1], Action::ApplyPlan { reason: PlanReason::NodeJoined, .. }));
+        assert_eq!(c.available_workers(), WorkerCount(32));
+        assert!(c.isolated.is_empty());
+    }
+
+    #[test]
+    fn surplus_spares_are_priced_not_hoarded() {
+        // At full entitled capacity, retain/release follows the WAF
+        // break-even: free spares are kept (up to the cap), expensive ones
+        // released.
+        let keepers = UnicronConfig {
+            spare_hold_frac: 0.0, // free to hold
+            max_spares: 1,
+            ..Default::default()
+        };
+        let mut c = Coordinator::builder()
+            .config(keepers)
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .task(plan_task(0, 2, 16, 64))
+            .task(plan_task(1, 2, 16, 64))
+            .build();
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        // surplus node #1: free -> retained as the first hot spare
+        let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(9) });
+        assert!(matches!(a[0], Action::SpareRetained { node: NodeId(9) }), "{a:?}");
+        assert_eq!(c.available_workers(), WorkerCount(40));
+        // surplus node #2: past max_spares -> released even though free
+        let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(10) });
+        assert_eq!(a, vec![Action::SpareReleased { node: NodeId(10) }]);
+        assert_eq!(c.available_workers(), WorkerCount(40));
+        assert!(c.released.contains(&NodeId(10)));
+
+        // an expensive spare is released immediately
+        let pricey = UnicronConfig { spare_hold_frac: 1.0, ..Default::default() };
+        let mut c = Coordinator::builder()
+            .config(pricey)
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .task(plan_task(0, 2, 16, 64))
+            .task(plan_task(1, 2, 16, 64))
+            .build();
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(9) });
+        assert_eq!(a, vec![Action::SpareReleased { node: NodeId(9) }]);
+        assert_eq!(c.available_workers(), WorkerCount(32));
+    }
+
+    #[test]
+    fn event_horizon_table_serves_sev1_and_join_replans() {
+        // The cheap per-event precompute must put SEV1/join replans on the
+        // table path, with decisions identical to an always-solving twin.
+        let mut warm = coord(32);
+        let mut cold = coord(32);
+        let events = [
+            CoordEvent::TaskLaunched { task: TaskId(0) },
+            CoordEvent::NodeLost { node: NodeId(1) },
+            CoordEvent::ErrorReport { node: NodeId(2), task: TaskId(1), kind: ErrorKind::EccError },
+            CoordEvent::NodeRepaired { node: NodeId(1) },
+        ];
+        for ev in &events {
+            if !warm.lookup_is_fresh() {
+                warm.precompute_event_plans();
+            }
+            let a = warm.handle(ev.clone());
+            let b = cold.handle(ev.clone());
+            assert_eq!(a, b, "table and solver commits diverged at {ev:?}");
+        }
+        assert_eq!(warm.log, cold.log);
+        // the bootstrap launch solves (no table yet); everything after hits
+        assert!(warm.lookup_hits >= 3, "horizon hits: {}", warm.lookup_hits);
+        assert!(warm.solve_calls <= 1, "horizon misses: {}", warm.solve_calls);
+        assert!(cold.lookup_hits == 0 && cold.solve_calls >= 4);
     }
 
     #[test]

@@ -196,6 +196,77 @@ impl Trace {
         self.with_lifecycle(lifecycle)
     }
 
+    /// Correlated domain-burst faults: infrastructure failures (switch,
+    /// rack PDU) take down several nodes of one failure domain nearly at
+    /// once — the scenario class "Characterization of LLM Development in
+    /// the Datacenter" reports dominating correlated outages. Each of
+    /// `n_bursts` seeded bursts picks a domain (nodes grouped as
+    /// `domain = node / nodes_per_domain`) and hits `burst_size` distinct
+    /// nodes of it with SEV1 failures inside a `spread_s`-second window;
+    /// repairs draw from the trace's usual bounds.
+    pub fn with_domain_burst(
+        mut self,
+        nodes_per_domain: u32,
+        n_bursts: u32,
+        burst_size: u32,
+        spread_s: f64,
+        seed: u64,
+    ) -> Trace {
+        assert!(nodes_per_domain > 0);
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xD0_4A1B_0057);
+        let n_domains = (self.config.n_nodes + nodes_per_domain - 1) / nodes_per_domain;
+        let sev1_kinds: Vec<ErrorKind> = ErrorKind::all()
+            .iter()
+            .copied()
+            .filter(|k| k.severity() == Severity::Sev1)
+            .collect();
+        for _ in 0..n_bursts {
+            let domain = rng.below(n_domains as u64) as u32;
+            let first = domain * nodes_per_domain;
+            let count = burst_size.min(nodes_per_domain).min(self.config.n_nodes - first);
+            let t0 = rng.uniform(0.0, (self.config.duration_s - spread_s).max(0.0));
+            for k in 0..count {
+                self.events.push(FailureEvent {
+                    at_s: t0 + rng.uniform(0.0, spread_s),
+                    kind: *rng.choose(&sev1_kinds),
+                    node: NodeId(first + k),
+                    repair_after_s: rng.uniform(self.config.repair_min_s, self.config.repair_max_s),
+                });
+            }
+        }
+        self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        self
+    }
+
+    /// Recurrent-lemon schedule: `node` fails with `kind` every `period_s`
+    /// seconds from `start_s` until `until_s` (clamped to the trace
+    /// duration) — the recurrent-failure pattern Meta's reliability study
+    /// found dominating lost goodput. SEV1 kinds draw a repair time from
+    /// the trace's bounds midpoint so the schedule stays seedless.
+    pub fn with_recurrent_lemon(
+        mut self,
+        node: NodeId,
+        kind: ErrorKind,
+        start_s: f64,
+        period_s: f64,
+        until_s: f64,
+    ) -> Trace {
+        assert!(period_s > 0.0, "lemon period must be positive");
+        let until = until_s.min(self.config.duration_s);
+        let repair = if kind.severity() == Severity::Sev1 {
+            0.5 * (self.config.repair_min_s + self.config.repair_max_s)
+        } else {
+            0.0
+        };
+        let mut t = start_s;
+        while t < until {
+            self.events.push(FailureEvent { at_s: t, kind, node, repair_after_s: repair });
+            t += period_s;
+        }
+        self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        self
+    }
+
     /// Task indices that are active at t = 0 (no pending Arrival event).
     pub fn initially_active(&self, n_tasks: usize) -> Vec<bool> {
         let mut active = vec![true; n_tasks];
@@ -337,6 +408,76 @@ mod tests {
         let t = Trace::generate(TraceConfig::trace_b(), 1);
         assert!(t.lifecycle.is_empty());
         assert_eq!(t.initially_active(4), vec![true; 4]);
+    }
+
+    #[test]
+    fn domain_burst_hits_one_domain_within_the_window() {
+        let base = Trace::generate(TraceConfig::trace_a(), 3);
+        let before = base.events.len();
+        let t = base.with_domain_burst(4, 2, 3, 600.0, 7);
+        let sev1s = t.events.iter().filter(|e| e.severity() == Severity::Sev1).count();
+        assert_eq!(t.events.len(), before + 6, "2 bursts × 3 nodes");
+        assert!(sev1s >= 6, "burst events are SEV1 node drains");
+        // events stay sorted and in bounds
+        let mut prev = 0.0;
+        for e in &t.events {
+            assert!(e.at_s >= prev && e.at_s < t.config.duration_s);
+            prev = e.at_s;
+        }
+        // deterministic per seed
+        let again = Trace::generate(TraceConfig::trace_a(), 3).with_domain_burst(4, 2, 3, 600.0, 7);
+        assert_eq!(t.events, again.events);
+        let other = Trace::generate(TraceConfig::trace_a(), 3).with_domain_burst(4, 2, 3, 600.0, 8);
+        assert_ne!(t.events, other.events);
+    }
+
+    #[test]
+    fn domain_burst_nodes_share_a_domain_and_are_sev1() {
+        // start from an empty trace so every event is burst-generated
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_domain_burst(4, 1, 3, 900.0, 11);
+        assert_eq!(t.events.len(), 3);
+        let domains: Vec<u32> = t.events.iter().map(|e| e.node.0 / 4).collect();
+        assert!(domains.windows(2).all(|w| w[0] == w[1]), "one burst, one domain: {domains:?}");
+        let span = t.events.last().unwrap().at_s - t.events[0].at_s;
+        assert!(span <= 900.0, "burst spread {span}");
+        for e in &t.events {
+            assert_eq!(e.severity(), Severity::Sev1);
+            assert!(e.repair_after_s >= t.config.repair_min_s);
+        }
+        // distinct nodes
+        let mut nodes: Vec<u32> = t.events.iter().map(|e| e.node.0).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 3);
+    }
+
+    #[test]
+    fn recurrent_lemon_schedule_shape() {
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_recurrent_lemon(
+            NodeId(5),
+            ErrorKind::CudaError,
+            100.0,
+            50.0,
+            400.0,
+        );
+        let times: Vec<f64> = t.events.iter().map(|e| e.at_s).collect();
+        assert_eq!(times, vec![100.0, 150.0, 200.0, 250.0, 300.0, 350.0]);
+        assert!(t.events.iter().all(|e| e.node == NodeId(5)));
+        assert!(t.events.iter().all(|e| e.repair_after_s == 0.0), "SEV2 needs no repair slot");
+        // a SEV1 lemon draws the midpoint repair
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_recurrent_lemon(
+            NodeId(2),
+            ErrorKind::EccError,
+            0.0,
+            1e6,
+            f64::INFINITY,
+        );
+        let mid = 0.5 * (t.config.repair_min_s + t.config.repair_max_s);
+        assert!(t.events.iter().all(|e| e.repair_after_s == mid));
+        assert!(!t.events.is_empty());
     }
 
     #[test]

@@ -1,0 +1,619 @@
+//! Fleet management: node health history, lemon detection, and cost-aware
+//! hot-spare economics.
+//!
+//! The coordinator's view of the cluster used to stop at a flat
+//! `isolated: Vec<NodeId>` — nodes were anonymous and memoryless, so the
+//! system could neither recognize a *lemon* (a node whose failures recur
+//! faster than repairs fix it — the dominant goodput sink in Meta's
+//! "Revisiting Reliability in Large-Scale ML Research Clusters") nor reason
+//! about how many repaired nodes to keep as hot spares versus return to the
+//! cloud. This module is that memory:
+//!
+//! * [`FleetModel`] — per-node lifetime state: join/isolate/repair counts,
+//!   a decayed **lemon score** over recurrent failures, an EWMA
+//!   inter-failure-time MTBF estimate, and [`DomainId`] (rack/switch)
+//!   membership with per-domain failure pressure for correlated-fault
+//!   triage ("Characterization of LLM Development in the Datacenter" shows
+//!   failures cluster by infrastructure domain).
+//! * [`SparePool`] — the retain/release decision for a repaired node, in
+//!   the same WAF currency the §5 planner optimizes: the expected FLOP·s a
+//!   spare saves (Poisson tail of node failures in the insured window ×
+//!   the WAF one node contributes) against the FLOP·s it costs to hold.
+//!
+//! # Determinism and the event clock
+//!
+//! Every *decision-relevant* quantity here is a pure function of the
+//! coordinator's event sequence, never of wall-clock time: the lemon score
+//! decays per **event** ([`FleetModel::tick`] advances the clock once per
+//! [`crate::proto::CoordEvent`]), so replaying a recorded
+//! [`crate::proto::DecisionLog`] through a fresh coordinator reproduces
+//! every quarantine and spare decision bit-identically. The EWMA MTBF
+//! estimate *is* time-based — drivers that have a clock feed it via
+//! [`FleetModel::observe_failure_time`] — but it is observability only;
+//! no decision reads it.
+//!
+//! # Lemon scoring
+//!
+//! On each failure attributed to a node:
+//!
+//! ```text
+//! score ← score · γ^Δevents + w(severity)      (γ = lemon_decay)
+//! ```
+//!
+//! Diffuse background failures (large `Δevents` between a node's failures)
+//! decay away; a recurrent failer accumulates toward `w/(1−γ^Δ)` and
+//! crosses `lemon_threshold`, at which point the coordinator fences the
+//! node *before* its next failure and refuses to re-admit it after repair.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::config::UnicronConfig;
+use crate::failure::{Severity, Trace};
+use crate::proto::NodeId;
+
+/// Failure-domain identifier (rack / leaf switch). Nodes in one domain
+/// share infrastructure and fail together under switch- or rack-level
+/// faults. Mapping: `domain = node / nodes_per_domain`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct DomainId(pub u32);
+
+impl fmt::Display for DomainId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+/// EWMA smoothing factor for the inter-failure-time estimate.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Exact decay over an event gap. `powi` is O(log dt) — at most ~31
+/// multiplications — so the update stays O(1) per event regardless of idle
+/// gaps, and slow-decay configurations (γ close to 1) keep their true
+/// residual instead of being clipped to zero at an arbitrary horizon.
+fn decayed(score: f64, decay: f64, dt_events: u64) -> f64 {
+    if score == 0.0 {
+        return 0.0;
+    }
+    score * decay.powi(dt_events.min(i32::MAX as u64) as i32)
+}
+
+/// Severity weight in the lemon score: a node-drain failure is stronger
+/// evidence of bad hardware than a process-level one.
+fn severity_weight(sev: Severity) -> f64 {
+    match sev {
+        Severity::Sev1 => 1.5,
+        Severity::Sev2 | Severity::Sev3 => 1.0,
+    }
+}
+
+/// Lifetime health record of one node.
+#[derive(Debug, Clone, Default)]
+pub struct NodeHealth {
+    /// Failure domain (rack/switch) this node belongs to.
+    pub domain: DomainId,
+    /// Failures attributed to the node, lifetime (any severity).
+    pub failures: u64,
+    /// Times the node (re)joined the worker pool.
+    pub joins: u64,
+    /// Times the node came back from maintenance.
+    pub repairs: u64,
+    /// Fenced for good as a lemon.
+    pub quarantined: bool,
+    /// Returned to the provider (healthy, but out of the fleet).
+    pub released: bool,
+    /// Decayed recurrence score as of `last_failure_seq` (see module docs).
+    score: f64,
+    /// Event-clock stamp of the last failure (for decay).
+    last_failure_seq: u64,
+    /// EWMA of inter-failure times, seconds — the node's MTBF estimate.
+    /// Observability only; decisions never read it (determinism note).
+    ewma_ift_s: Option<f64>,
+    last_failure_at_s: Option<f64>,
+}
+
+impl NodeHealth {
+    /// EWMA inter-failure-time MTBF estimate, seconds (None until the node
+    /// has failed twice with observed times).
+    pub fn mtbf_estimate_s(&self) -> Option<f64> {
+        self.ewma_ift_s
+    }
+}
+
+/// Per-node lifetime state + per-domain failure pressure for the whole
+/// fleet. See the module docs for the scoring model and determinism rules.
+#[derive(Debug, Clone)]
+pub struct FleetModel {
+    nodes: BTreeMap<NodeId, NodeHealth>,
+    /// Decayed failure pressure per domain: (score, last update seq).
+    domains: BTreeMap<DomainId, (f64, u64)>,
+    /// Event clock: one tick per coordinator event (not wall time).
+    seq: u64,
+    nodes_per_domain: u32,
+    decay: f64,
+    threshold: f64,
+}
+
+impl FleetModel {
+    pub fn from_config(cfg: &UnicronConfig) -> FleetModel {
+        FleetModel {
+            nodes: BTreeMap::new(),
+            domains: BTreeMap::new(),
+            seq: 0,
+            nodes_per_domain: cfg.nodes_per_domain.max(1),
+            decay: cfg.lemon_decay,
+            threshold: cfg.lemon_threshold,
+        }
+    }
+
+    /// Advance the event clock. The coordinator calls this once per handled
+    /// [`crate::proto::CoordEvent`]; decay is measured in these ticks.
+    pub fn tick(&mut self) {
+        self.seq += 1;
+    }
+
+    /// Current event-clock value (ticks seen so far).
+    pub fn now(&self) -> u64 {
+        self.seq
+    }
+
+    /// Failure domain of `node`.
+    pub fn domain_of(&self, node: NodeId) -> DomainId {
+        DomainId(node.0 / self.nodes_per_domain)
+    }
+
+    fn entry(&mut self, node: NodeId) -> &mut NodeHealth {
+        let domain = DomainId(node.0 / self.nodes_per_domain);
+        self.nodes.entry(node).or_insert_with(|| NodeHealth { domain, ..Default::default() })
+    }
+
+    /// Record a failure attributed to `node`; returns the updated lemon
+    /// score. Also bumps the node's domain pressure.
+    pub fn note_failure(&mut self, node: NodeId, sev: Severity) -> f64 {
+        let seq = self.seq;
+        let decay = self.decay;
+        let w = severity_weight(sev);
+        let h = self.entry(node);
+        let dt = seq.saturating_sub(h.last_failure_seq);
+        h.score = decayed(h.score, decay, dt) + w;
+        h.last_failure_seq = seq;
+        h.failures += 1;
+        let score = h.score;
+        let domain = self.domain_of(node);
+        let d = self.domains.entry(domain).or_insert((0.0, seq));
+        let ddt = seq.saturating_sub(d.1);
+        d.0 = decayed(d.0, decay, ddt) + w;
+        d.1 = seq;
+        score
+    }
+
+    /// Feed the wall-clock time of a failure on `node` (drivers that have a
+    /// clock). Updates the EWMA inter-failure-time MTBF estimate —
+    /// observability only, never read by decisions.
+    pub fn observe_failure_time(&mut self, node: NodeId, at_s: f64) {
+        let h = self.entry(node);
+        if let Some(prev) = h.last_failure_at_s {
+            let ift = (at_s - prev).max(0.0);
+            h.ewma_ift_s = Some(match h.ewma_ift_s {
+                None => ift,
+                Some(e) => EWMA_ALPHA * ift + (1.0 - EWMA_ALPHA) * e,
+            });
+        }
+        h.last_failure_at_s = Some(at_s);
+    }
+
+    pub fn note_join(&mut self, node: NodeId) {
+        let h = self.entry(node);
+        h.joins += 1;
+        h.quarantined = false;
+        h.released = false;
+    }
+
+    pub fn note_repair(&mut self, node: NodeId) {
+        self.entry(node).repairs += 1;
+    }
+
+    pub fn note_quarantine(&mut self, node: NodeId) {
+        self.entry(node).quarantined = true;
+    }
+
+    pub fn note_release(&mut self, node: NodeId) {
+        self.entry(node).released = true;
+    }
+
+    /// The node's lemon score decayed to the current event clock.
+    pub fn lemon_score(&self, node: NodeId) -> f64 {
+        match self.nodes.get(&node) {
+            Some(h) => decayed(h.score, self.decay, self.seq.saturating_sub(h.last_failure_seq)),
+            None => 0.0,
+        }
+    }
+
+    /// True when the node's decayed recurrence score has crossed the
+    /// quarantine threshold — the fence-before-it-fails-again signal.
+    pub fn is_lemon(&self, node: NodeId) -> bool {
+        self.lemon_score(node) >= self.threshold
+    }
+
+    /// Decayed failure pressure of a domain (rack/switch). A burst of
+    /// near-simultaneous failures inside one domain pushes this far above
+    /// what independent node failures produce.
+    pub fn domain_pressure(&self, domain: DomainId) -> f64 {
+        match self.domains.get(&domain) {
+            Some(&(score, last)) => decayed(score, self.decay, self.seq.saturating_sub(last)),
+            None => 0.0,
+        }
+    }
+
+    /// True when a domain's pressure indicates a correlated (switch/rack)
+    /// fault rather than independent node failures.
+    pub fn domain_is_bursting(&self, domain: DomainId) -> bool {
+        self.domain_pressure(domain) >= self.threshold
+    }
+
+    /// Health record of `node`, if it has any history.
+    pub fn health(&self, node: NodeId) -> Option<&NodeHealth> {
+        self.nodes.get(&node)
+    }
+
+    /// All recorded nodes in id order.
+    pub fn nodes(&self) -> impl Iterator<Item = (&NodeId, &NodeHealth)> {
+        self.nodes.iter()
+    }
+
+    /// Rank candidate nodes healthiest-first: ascending decayed lemon
+    /// score, then ascending lifetime failures, then id. This is the
+    /// "prefer non-lemon nodes" order for placement and for choosing which
+    /// spare to give up first.
+    pub fn healthiest_first(&self, candidates: &[NodeId]) -> Vec<NodeId> {
+        let mut ranked: Vec<NodeId> = candidates.to_vec();
+        ranked.sort_by(|&a, &b| {
+            self.lemon_score(a)
+                .total_cmp(&self.lemon_score(b))
+                .then_with(|| {
+                    let fa = self.nodes.get(&a).map_or(0, |h| h.failures);
+                    let fb = self.nodes.get(&b).map_or(0, |h| h.failures);
+                    fa.cmp(&fb)
+                })
+                .then(a.cmp(&b))
+        });
+        ranked
+    }
+
+    /// Build a fleet view from a failure trace (offline analysis: the
+    /// `fleet-lemon` experiment's health report). Feeds both the event-clock
+    /// score and the time-based MTBF estimate.
+    pub fn ingest_trace(trace: &Trace, cfg: &UnicronConfig) -> FleetModel {
+        let mut fleet = FleetModel::from_config(cfg);
+        for e in &trace.events {
+            fleet.tick();
+            fleet.note_failure(e.node, e.severity());
+            fleet.observe_failure_time(e.node, e.at_s);
+        }
+        fleet
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spare-pool economics
+// ---------------------------------------------------------------------------
+
+/// Retain/release verdict for a repaired (or surplus) node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpareDecision {
+    /// Keep the node — rejoin the pool (or hold as a hot spare).
+    Retain,
+    /// Return the node to the provider.
+    Release,
+}
+
+/// The hot-spare cost model, in the §5 planner's WAF currency (Eq. 2:
+/// FLOP/s weighted by priority; integrated over the insured window the
+/// comparison is FLOP·s on both sides):
+///
+/// * **value** of holding the `(k+1)`-th spare = `P(X ≥ k+1) · F_node · W`
+///   where `X ~ Poisson(λ)` is the node-failure count inside the window
+///   `W`, and `F_node` is the WAF one node contributes — the expected
+///   useful work the spare rescues by covering a shortfall;
+/// * **cost** of holding it = `hold_frac · F_node · W` — the fraction of a
+///   node's worth of WAF the money spent on an idle machine could have
+///   bought.
+///
+/// Retain while value exceeds cost, never beyond `max_spares`. `F_node · W`
+/// appears on both sides, so the break-even condition reduces to
+/// `P(shortfall) > hold_frac` — the knob is directly a probability.
+#[derive(Debug, Clone)]
+pub struct SparePool {
+    /// Holding cost of one spare as a fraction of the WAF a node earns.
+    pub hold_frac: f64,
+    /// Provisioning/repair window (seconds) the pool insures against.
+    pub window_s: f64,
+    /// Hard cap on held spares.
+    pub max_spares: u32,
+}
+
+/// Upper tail `P(X ≥ k)` for `X ~ Poisson(lambda)`.
+pub fn poisson_tail(lambda: f64, k: u32) -> f64 {
+    if lambda <= 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    let mut term = (-lambda).exp(); // P(X = 0)
+    let mut cdf = 0.0;
+    for i in 0..k {
+        cdf += term;
+        term *= lambda / (i + 1) as f64;
+    }
+    (1.0 - cdf).max(0.0)
+}
+
+impl SparePool {
+    pub fn from_config(cfg: &UnicronConfig) -> SparePool {
+        SparePool {
+            hold_frac: cfg.spare_hold_frac,
+            window_s: cfg.spare_window_s,
+            max_spares: cfg.max_spares,
+        }
+    }
+
+    /// Expected node-failure count in the insured window for a pool of
+    /// `gpus` workers with per-GPU MTBF `mtbf_per_gpu_s` (one GPU failure
+    /// drains its node, §5.1's failure model).
+    pub fn expected_failures(&self, gpus: u32, mtbf_per_gpu_s: f64) -> f64 {
+        if mtbf_per_gpu_s <= 0.0 {
+            return 0.0;
+        }
+        gpus as f64 * self.window_s / mtbf_per_gpu_s
+    }
+
+    /// WAF-style value (FLOP·s) of holding the `(held+1)`-th spare.
+    pub fn spare_value(&self, held: u32, lambda: f64, node_waf: f64) -> f64 {
+        poisson_tail(lambda, held + 1) * node_waf * self.window_s
+    }
+
+    /// Cost (FLOP·s) of holding one spare for the window.
+    pub fn hold_cost(&self, node_waf: f64) -> f64 {
+        self.hold_frac * node_waf * self.window_s
+    }
+
+    /// The retain/release decision with `held` spares already in hand.
+    pub fn decide(&self, held: u32, lambda: f64, node_waf: f64) -> SpareDecision {
+        if held >= self.max_spares {
+            return SpareDecision::Release;
+        }
+        if self.spare_value(held, lambda, node_waf) > self.hold_cost(node_waf) {
+            SpareDecision::Retain
+        } else {
+            SpareDecision::Release
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::{ErrorKind, TraceConfig};
+
+    fn cfg() -> UnicronConfig {
+        UnicronConfig::default()
+    }
+
+    fn fleet() -> FleetModel {
+        FleetModel::from_config(&cfg())
+    }
+
+    #[test]
+    fn recurrent_failures_cross_the_threshold_diffuse_ones_do_not() {
+        // back-to-back failures on one node accumulate...
+        let mut f = fleet();
+        let mut crossed_at = None;
+        for i in 0..30 {
+            f.tick();
+            f.note_failure(NodeId(3), Severity::Sev2);
+            if crossed_at.is_none() && f.is_lemon(NodeId(3)) {
+                crossed_at = Some(i + 1);
+            }
+        }
+        let crossed_at = crossed_at.expect("a node failing every event is a lemon");
+        assert!(crossed_at >= 4, "threshold must tolerate a short escalation chain: {crossed_at}");
+
+        // ...while the same count spread far apart decays away
+        let mut g = fleet();
+        for _ in 0..30 {
+            for _ in 0..100 {
+                g.tick(); // 100 quiet events between failures
+            }
+            g.note_failure(NodeId(3), Severity::Sev2);
+        }
+        assert!(!g.is_lemon(NodeId(3)), "diffuse failures are not a lemon signal");
+        assert!(g.lemon_score(NodeId(3)) < 1.5);
+        assert_eq!(g.health(NodeId(3)).unwrap().failures, 30);
+    }
+
+    #[test]
+    fn short_escalation_chains_stay_below_threshold() {
+        // The §4.2 ladder (3 reattempts + restart + SEV1) on a healthy node
+        // must NOT read as a lemon — only *recurrence* does.
+        let mut f = fleet();
+        for _ in 0..5 {
+            f.tick();
+            f.note_failure(NodeId(7), Severity::Sev3);
+        }
+        f.tick();
+        f.note_failure(NodeId(7), Severity::Sev1);
+        assert!(!f.is_lemon(NodeId(7)), "score {}", f.lemon_score(NodeId(7)));
+    }
+
+    #[test]
+    fn lemon_score_decays_between_failures() {
+        let mut f = fleet();
+        f.tick();
+        let s1 = f.note_failure(NodeId(0), Severity::Sev2);
+        for _ in 0..10 {
+            f.tick();
+        }
+        assert!(f.lemon_score(NodeId(0)) < s1);
+        for _ in 0..1000 {
+            f.tick();
+        }
+        assert!(f.lemon_score(NodeId(0)) < 1e-12, "ancient history decays to nothing");
+    }
+
+    #[test]
+    fn slow_decay_configurations_accumulate_across_long_gaps() {
+        // γ close to 1: a node failing every ~600 events must still build
+        // toward quarantine — no hidden horizon may zero the residual.
+        let cfg = UnicronConfig { lemon_decay: 0.999, ..UnicronConfig::default() };
+        let mut f = FleetModel::from_config(&cfg);
+        let mut last = 0.0;
+        for _ in 0..6 {
+            for _ in 0..600 {
+                f.tick();
+            }
+            last = f.note_failure(NodeId(1), Severity::Sev2);
+        }
+        // true residual 0.999^600 ≈ 0.55 per gap: the score compounds
+        assert!(last > 2.0, "slow decay must accumulate, got {last}");
+    }
+
+    #[test]
+    fn sev1_weighs_more_than_sev3() {
+        let mut a = fleet();
+        a.tick();
+        let s1 = a.note_failure(NodeId(1), Severity::Sev1);
+        let mut b = fleet();
+        b.tick();
+        let s3 = b.note_failure(NodeId(1), Severity::Sev3);
+        assert!(s1 > s3);
+    }
+
+    #[test]
+    fn domain_membership_and_burst_pressure() {
+        let mut f = fleet();
+        assert_eq!(f.domain_of(NodeId(0)), f.domain_of(NodeId(3)));
+        assert_ne!(f.domain_of(NodeId(0)), f.domain_of(NodeId(4)));
+        // a tight burst across one domain's nodes raises that domain only
+        for node in [0u32, 1, 2, 3, 0, 1, 2, 3] {
+            f.tick();
+            f.note_failure(NodeId(node), Severity::Sev1);
+        }
+        let d0 = f.domain_of(NodeId(0));
+        assert!(f.domain_is_bursting(d0), "pressure {}", f.domain_pressure(d0));
+        assert!(!f.domain_is_bursting(f.domain_of(NodeId(4))));
+        // no single node in the burst is a lemon yet
+        assert!(!f.is_lemon(NodeId(0)));
+    }
+
+    #[test]
+    fn ewma_mtbf_tracks_inter_failure_times() {
+        let mut f = fleet();
+        for k in 0..10u32 {
+            f.tick();
+            f.note_failure(NodeId(2), Severity::Sev2);
+            f.observe_failure_time(NodeId(2), 100.0 * k as f64);
+        }
+        let est = f.health(NodeId(2)).unwrap().mtbf_estimate_s().unwrap();
+        assert!((est - 100.0).abs() < 1e-9, "constant gaps converge exactly: {est}");
+        // a node seen once has no estimate
+        f.tick();
+        f.note_failure(NodeId(9), Severity::Sev2);
+        f.observe_failure_time(NodeId(9), 5.0);
+        assert!(f.health(NodeId(9)).unwrap().mtbf_estimate_s().is_none());
+    }
+
+    #[test]
+    fn ingest_trace_builds_history_for_every_failing_node() {
+        let trace = Trace::generate(TraceConfig::trace_a(), 42);
+        let f = FleetModel::ingest_trace(&trace, &cfg());
+        let total: u64 = f.nodes().map(|(_, h)| h.failures).sum();
+        assert_eq!(total as usize, trace.events.len());
+        // a stock trace's diffuse failures never flag a lemon
+        for (&n, _) in f.nodes() {
+            assert!(!f.is_lemon(n), "node {n} wrongly flagged in a stock trace");
+        }
+    }
+
+    #[test]
+    fn recurrent_lemon_trace_is_flagged_by_ingest() {
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let trace = Trace::generate(tc, 1).with_recurrent_lemon(
+            NodeId(5),
+            ErrorKind::CudaError,
+            600.0,
+            30.0,
+            600.0 + 86400.0,
+        );
+        let f = FleetModel::ingest_trace(&trace, &cfg());
+        assert!(f.is_lemon(NodeId(5)));
+        assert!((f.health(NodeId(5)).unwrap().mtbf_estimate_s().unwrap() - 30.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn healthiest_first_prefers_non_lemons() {
+        let mut f = fleet();
+        for _ in 0..8 {
+            f.tick();
+            f.note_failure(NodeId(4), Severity::Sev2);
+        }
+        f.tick();
+        f.note_failure(NodeId(1), Severity::Sev3);
+        let order = f.healthiest_first(&[NodeId(4), NodeId(1), NodeId(0)]);
+        assert_eq!(order, vec![NodeId(0), NodeId(1), NodeId(4)]);
+    }
+
+    #[test]
+    fn join_clears_quarantine_flags() {
+        let mut f = fleet();
+        f.note_quarantine(NodeId(6));
+        assert!(f.health(NodeId(6)).unwrap().quarantined);
+        f.note_join(NodeId(6)); // operator override
+        let h = f.health(NodeId(6)).unwrap();
+        assert!(!h.quarantined && !h.released);
+        assert_eq!(h.joins, 1);
+    }
+
+    #[test]
+    fn poisson_tail_sane() {
+        assert_eq!(poisson_tail(0.0, 0), 1.0);
+        assert_eq!(poisson_tail(0.0, 1), 0.0);
+        let lambda = 1.2;
+        assert!((poisson_tail(lambda, 0) - 1.0).abs() < 1e-12);
+        let p1 = poisson_tail(lambda, 1);
+        assert!((p1 - (1.0 - (-lambda as f64).exp())).abs() < 1e-12);
+        // monotone decreasing in k, bounded in [0, 1]
+        let mut prev = 1.0;
+        for k in 0..8 {
+            let p = poisson_tail(lambda, k);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p <= prev + 1e-15);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn spare_decisions_follow_the_waf_break_even() {
+        let pool = SparePool { hold_frac: 0.25, window_s: 86400.0, max_spares: 2 };
+        let node_waf = 1e15;
+        // high failure pressure: P(X >= 1) well above hold_frac -> retain
+        assert_eq!(pool.decide(0, 2.0, node_waf), SpareDecision::Retain);
+        // negligible failure pressure -> release
+        assert_eq!(pool.decide(0, 0.01, node_waf), SpareDecision::Release);
+        // cap: never hold more than max_spares
+        assert_eq!(pool.decide(2, 50.0, node_waf), SpareDecision::Release);
+        // free spares (no holding cost) are always worth keeping under load
+        let free = SparePool { hold_frac: 0.0, ..pool.clone() };
+        assert_eq!(free.decide(1, 0.5, node_waf), SpareDecision::Retain);
+        // a cluster doing no work protects nothing
+        assert_eq!(free.decide(0, 0.5, 0.0), SpareDecision::Release);
+    }
+
+    #[test]
+    fn spare_value_decreases_with_spares_already_held() {
+        let pool = SparePool::from_config(&cfg());
+        let lambda = pool.expected_failures(128, cfg().mtbf_per_gpu_s);
+        assert!(lambda > 0.0);
+        let v0 = pool.spare_value(0, lambda, 1e15);
+        let v1 = pool.spare_value(1, lambda, 1e15);
+        assert!(v0 > v1, "the second spare insures a rarer event");
+        assert!(pool.hold_cost(1e15) > 0.0);
+    }
+}

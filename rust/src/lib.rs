@@ -18,6 +18,8 @@
 //! * distributed plumbing: [`kvstore`], [`rpc`], [`membership`], [`checkpoint`]
 //! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
 //!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
+//! * fleet economics: [`fleet`] — node health history, lemon detection,
+//!   and the cost-aware hot-spare pool (DESIGN.md §8)
 //! * execution: [`runtime`], [`trainer`], [`data`]
 //! * evaluation: [`simulator`] (environment model around the production
 //!   coordinator), [`repro`]
@@ -32,6 +34,7 @@ pub mod data;
 pub mod detect;
 pub mod engine;
 pub mod failure;
+pub mod fleet;
 pub mod kvstore;
 pub mod membership;
 pub mod metrics;

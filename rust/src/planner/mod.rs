@@ -127,7 +127,7 @@ pub fn solve(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> Plan {
     Plan { assignment, objective: s[m][n], total_waf, workers_used }
 }
 
-/// Brute-force reference solver (exponential; tests only — DESIGN.md §8).
+/// Brute-force reference solver (exponential; tests only — DESIGN.md §9).
 pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> Plan {
     let d_running = cfg.d_running(n_workers);
     let d_transition = cfg.d_transition_s;
@@ -200,22 +200,47 @@ impl PlanLookup {
     }
 }
 
-/// Fault-aware precomputed plan table (§5.2, full form): one [`Plan`] per
+/// Fault-aware precomputed plan table (§5.2): one [`Plan`] per
 /// `(faulted task, available workers)` scenario, so the coordinator's SEV1
 /// hot path is a table index instead of an O(m·n²) solve.
 ///
 /// [`PlanLookup`] covers the "cluster shrank/grew" axis only; a SEV1 replan
 /// additionally flags the affected task as faulted (Eq. 4 forces its
 /// transition penalty even at an unchanged worker count), which changes the
-/// optimum. This table enumerates both axes. It is valid for exactly one
-/// snapshot of `(current assignments, fault-free task set)` — any commit of
-/// new assignments invalidates it, after which the owner recomputes in the
-/// background (the paper's "proactive plan generation").
+/// optimum. This table enumerates both axes, in one of two shapes:
+///
+/// * [`ScenarioLookup::precompute`] — the **full grid**, every fault × every
+///   worker count `0..=max`. O((m+1)·n·m·n²) to build; the live driver runs
+///   it on a background worker thread.
+/// * [`ScenarioLookup::precompute_horizon`] — the **event horizon**: exactly
+///   the scenarios one event away from the current state (a SEV1/quarantine
+///   shrinking the pool by one node with any task faulted, a join growing
+///   it, a same-size replan). Only m+3 solves, cheap enough that the
+///   simulator rebuilds it after *every* decision, so simulated SEV1s
+///   exercise the same table path production does.
+///
+/// Either table is valid for exactly one snapshot of
+/// `(current assignments, fault-free task set)` — any commit of new
+/// assignments invalidates it, after which the owner recomputes (the
+/// paper's "proactive plan generation"). Entries are produced by the same
+/// [`solve`] a cold replan would run, so a table hit and a live solve are
+/// bit-identical — `rust/tests/sim_unification.rs` pins this.
 #[derive(Debug, Clone)]
 pub struct ScenarioLookup {
+    grid: Grid,
+}
+
+#[derive(Debug, Clone)]
+enum Grid {
     /// plans[f][j]: plan for `j` available workers with task `f-1` faulted
     /// (`f = 0` means no task faulted — joins, launches, finishes).
-    plans: Vec<Vec<Plan>>,
+    Full(Vec<Vec<Plan>>),
+    /// Exact next-event scenarios only, keyed `(fault row, capacity)`.
+    Sparse {
+        n_tasks: usize,
+        max_workers: u32,
+        plans: std::collections::BTreeMap<(usize, u32), Plan>,
+    },
 }
 
 impl ScenarioLookup {
@@ -238,34 +263,106 @@ impl ScenarioLookup {
                 scenario[f - 1].fault = false;
             }
         }
-        ScenarioLookup { plans }
+        ScenarioLookup { grid: Grid::Full(plans) }
     }
 
-    /// O(1) retrieval for the scenario `(faulted, n_workers)`. Worker counts
+    /// Precompute only the scenarios reachable one event from `available`
+    /// workers: the no-fault row at `available − gpn` / `available` /
+    /// `available + gpn` (node loss of an idle node, same-size replan,
+    /// join) plus every faulted task at `available − gpn` (a SEV1 or a
+    /// lemon quarantine always costs one node and faults one task).
+    ///
+    /// m+3 [`solve`] calls instead of the full grid's (m+1)·(n+1).
+    pub fn precompute_horizon(
+        tasks: &[PlanTask],
+        available: u32,
+        gpn: u32,
+        cfg: &UnicronConfig,
+    ) -> ScenarioLookup {
+        let mut scenario: Vec<PlanTask> = tasks.to_vec();
+        for t in &mut scenario {
+            t.fault = false;
+        }
+        let lo = available.saturating_sub(gpn);
+        let hi = available + gpn;
+        let mut plans = std::collections::BTreeMap::new();
+        for w in [lo, available, hi] {
+            plans.entry((0usize, w)).or_insert_with(|| solve(&scenario, w, cfg));
+        }
+        for f in 1..=tasks.len() {
+            scenario[f - 1].fault = true;
+            plans.insert((f, lo), solve(&scenario, lo, cfg));
+            scenario[f - 1].fault = false;
+        }
+        ScenarioLookup { grid: Grid::Sparse { n_tasks: tasks.len(), max_workers: hi, plans } }
+    }
+
+    fn fault_row(&self, faulted: Option<usize>) -> Option<usize> {
+        match faulted {
+            None => Some(0),
+            Some(i) if i < self.n_tasks() => Some(i + 1),
+            Some(_) => None,
+        }
+    }
+
+    /// Exact O(1) retrieval — `None` when the scenario was not precomputed
+    /// (sparse table miss, capacity beyond the grid, stale fault index).
+    /// Callers fall back to a live [`solve`] on `None`; no clamping ever
+    /// substitutes a plan for a different scenario.
+    pub fn get(&self, faulted: Option<usize>, n_workers: u32) -> Option<&Plan> {
+        let f = self.fault_row(faulted)?;
+        match &self.grid {
+            Grid::Full(plans) => plans[f].get(n_workers as usize),
+            Grid::Sparse { plans, .. } => plans.get(&(f, n_workers)),
+        }
+    }
+
+    /// True when the exact scenario is in the table.
+    pub fn covers(&self, faulted: Option<usize>, n_workers: u32) -> bool {
+        self.get(faulted, n_workers).is_some()
+    }
+
+    /// O(1) retrieval with clamping semantics (full grids): worker counts
     /// above the precomputed range clamp to the largest table entry; a fault
     /// index outside the table (caller holds a stale table for a different
     /// task set) falls back to the no-fault row rather than charging the
-    /// penalty to an arbitrary task.
+    /// penalty to an arbitrary task. Sparse tables have no meaningful clamp
+    /// — use [`ScenarioLookup::get`] there (this panics on a sparse miss).
     pub fn plan_for(&self, faulted: Option<usize>, n_workers: u32) -> &Plan {
-        let f = match faulted {
-            Some(i) if i < self.n_tasks() => i + 1,
-            Some(_) => {
+        let f = match self.fault_row(faulted) {
+            Some(f) => f,
+            None => {
                 debug_assert!(false, "fault index out of range for this table");
                 0
             }
-            None => 0,
         };
-        let row = &self.plans[f];
-        &row[(n_workers as usize).min(row.len() - 1)]
+        match &self.grid {
+            Grid::Full(plans) => {
+                let row = &plans[f];
+                &row[(n_workers as usize).min(row.len() - 1)]
+            }
+            Grid::Sparse { plans, max_workers, .. } => plans
+                .get(&(f, n_workers))
+                .or_else(|| plans.get(&(f, n_workers.min(*max_workers))))
+                .unwrap_or_else(|| {
+                    panic!("scenario (fault {faulted:?}, {n_workers} workers) not precomputed")
+                }),
+        }
     }
 
     pub fn max_workers(&self) -> u32 {
-        (self.plans[0].len() - 1) as u32
+        match &self.grid {
+            Grid::Full(plans) => (plans[0].len() - 1) as u32,
+            Grid::Sparse { max_workers, .. } => *max_workers,
+        }
     }
 
     /// Number of task slots this table was built for.
     pub fn n_tasks(&self) -> usize {
-        self.plans.len() - 1
+        match &self.grid {
+            Grid::Full(plans) => plans.len() - 1,
+            Grid::Sparse { n_tasks, .. } => *n_tasks,
+        }
     }
 }
 
@@ -467,6 +564,49 @@ mod tests {
             scenario[i].fault = true;
             assert_eq!(lut.plan_for(Some(i), 16).assignment, solve(&scenario, 16, &c).assignment);
         }
+    }
+
+    #[test]
+    fn horizon_table_matches_fresh_solves_for_next_event_scenarios() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 32),
+            task(1, 1.3, 2, 9.0, 6, false, 32),
+            task(2, 0.7, 4, 12.0, 4, false, 32),
+        ];
+        let c = cfg();
+        let (avail, gpn) = (24u32, 8u32);
+        let lut = ScenarioLookup::precompute_horizon(&tasks, avail, gpn, &c);
+        assert_eq!(lut.n_tasks(), 3);
+        assert_eq!(lut.max_workers(), avail + gpn);
+        // no-fault scenarios: loss / same / join capacities
+        for w in [avail - gpn, avail, avail + gpn] {
+            let fresh = solve(&tasks, w, &c);
+            let got = lut.get(None, w).unwrap_or_else(|| panic!("horizon must cover w={w}"));
+            assert_eq!(got, &fresh);
+        }
+        // every fault at the one-node-short capacity
+        for f in 0..tasks.len() {
+            let mut scenario = tasks.clone();
+            scenario[f].fault = true;
+            let fresh = solve(&scenario, avail - gpn, &c);
+            assert_eq!(lut.get(Some(f), avail - gpn), Some(&fresh), "fault {f}");
+        }
+        // anything else is an honest miss (caller re-solves), never a clamp
+        assert!(lut.get(None, avail - 2 * gpn).is_none());
+        assert!(lut.get(Some(0), avail).is_none());
+        assert!(lut.get(Some(9), avail - gpn).is_none(), "stale fault index");
+        assert!(lut.covers(None, avail) && !lut.covers(None, 1));
+    }
+
+    #[test]
+    fn full_grid_get_is_exact_while_plan_for_clamps() {
+        let tasks =
+            vec![task(0, 1.0, 2, 10.0, 4, false, 16), task(1, 1.3, 2, 9.0, 6, false, 16)];
+        let c = cfg();
+        let lut = ScenarioLookup::precompute(&tasks, 16, &c);
+        assert!(lut.get(None, 16).is_some());
+        assert!(lut.get(None, 17).is_none(), "get never clamps");
+        assert_eq!(lut.plan_for(None, 99).assignment, solve(&tasks, 16, &c).assignment);
     }
 
     #[test]

@@ -51,7 +51,12 @@ use crate::ser::{JsonError, Value};
 
 /// Format version stamped into every serialized [`DecisionLog`]. Bump on
 /// any variant/field change to the protocol types (see the module docs).
-pub const DECISION_LOG_VERSION: u64 = 1;
+///
+/// * v1 — PR 2: the initial protocol (typed ids, Fig. 7 events/actions).
+/// * v2 — fleet layer: [`CoordEvent::NodeRepaired`] and the
+///   [`Action::NodeQuarantined`] / [`Action::SpareRetained`] /
+///   [`Action::SpareReleased`] decision surface.
+pub const DECISION_LOG_VERSION: u64 = 2;
 
 // ---------------------------------------------------------------------------
 // Typed identifiers
@@ -104,6 +109,12 @@ pub enum CoordEvent {
     NodeLost { node: NodeId },
     /// A repaired or new node joined (④).
     NodeJoined { node: NodeId },
+    /// Maintenance finished on `node`: it is healthy and *available*, but
+    /// not yet back in the pool — the fleet layer decides whether it
+    /// rejoins ([`Action::SpareRetained`]), is returned to the provider
+    /// ([`Action::SpareReleased`]), or is fenced for good as a lemon
+    /// ([`Action::NodeQuarantined`]).
+    NodeRepaired { node: NodeId },
     /// A task completed (⑤).
     TaskFinished { task: TaskId },
     /// A new task was submitted (⑥).
@@ -180,6 +191,15 @@ pub enum Action {
     InstructRestart { node: NodeId, task: TaskId },
     /// SEV1 ③: fence the node out of the cluster.
     IsolateNode { node: NodeId },
+    /// Fleet: fence a recurrently-failing (lemon) node *permanently* —
+    /// before it fails again, and past any repair. Unlike
+    /// [`Action::IsolateNode`], no future repair returns the node.
+    NodeQuarantined { node: NodeId },
+    /// Fleet: a repaired node rejoins the pool (or is held as a hot spare).
+    SpareRetained { node: NodeId },
+    /// Fleet: a repaired node is returned to the provider — holding it
+    /// costs more than the expected shortfall it would cover.
+    SpareReleased { node: NodeId },
     /// Reconfigure affected tasks to a new plan (assignments per task id).
     ApplyPlan { plan: Plan, reason: PlanReason },
     /// Page the humans (§3.2 "other external interactions").
@@ -274,6 +294,9 @@ impl CoordEvent {
             CoordEvent::NodeJoined { node } => {
                 Value::obj().with("event", "node_joined").with("node", node.0)
             }
+            CoordEvent::NodeRepaired { node } => {
+                Value::obj().with("event", "node_repaired").with("node", node.0)
+            }
             CoordEvent::TaskFinished { task } => {
                 Value::obj().with("event", "task_finished").with("task", task.0)
             }
@@ -303,6 +326,7 @@ impl CoordEvent {
             }),
             "node_lost" => Ok(CoordEvent::NodeLost { node: get_node(v)? }),
             "node_joined" => Ok(CoordEvent::NodeJoined { node: get_node(v)? }),
+            "node_repaired" => Ok(CoordEvent::NodeRepaired { node: get_node(v)? }),
             "task_finished" => Ok(CoordEvent::TaskFinished { task: get_task(v)? }),
             "task_launched" => Ok(CoordEvent::TaskLaunched { task: get_task(v)? }),
             "reattempt_result" => Ok(CoordEvent::ReattemptResult {
@@ -364,6 +388,15 @@ impl Action {
             Action::IsolateNode { node } => {
                 Value::obj().with("action", "isolate_node").with("node", node.0)
             }
+            Action::NodeQuarantined { node } => {
+                Value::obj().with("action", "node_quarantined").with("node", node.0)
+            }
+            Action::SpareRetained { node } => {
+                Value::obj().with("action", "spare_retained").with("node", node.0)
+            }
+            Action::SpareReleased { node } => {
+                Value::obj().with("action", "spare_released").with("node", node.0)
+            }
             Action::ApplyPlan { plan, reason } => Value::obj()
                 .with("action", "apply_plan")
                 .with("reason", reason.name())
@@ -384,6 +417,9 @@ impl Action {
                 Ok(Action::InstructRestart { node: get_node(v)?, task: get_task(v)? })
             }
             "isolate_node" => Ok(Action::IsolateNode { node: get_node(v)? }),
+            "node_quarantined" => Ok(Action::NodeQuarantined { node: get_node(v)? }),
+            "spare_retained" => Ok(Action::SpareRetained { node: get_node(v)? }),
+            "spare_released" => Ok(Action::SpareReleased { node: get_node(v)? }),
             "apply_plan" => {
                 let reason_name = get_str(v, "reason")?;
                 let reason = PlanReason::from_name(reason_name).ok_or_else(|| {
@@ -622,6 +658,21 @@ mod tests {
         let text = ev.to_value().encode();
         let back = CoordEvent::from_value(&Value::parse(&text).unwrap()).unwrap();
         assert_eq!(ev, back);
+    }
+
+    #[test]
+    fn fleet_variants_round_trip() {
+        let ev = CoordEvent::NodeRepaired { node: NodeId(11) };
+        let back = CoordEvent::from_value(&Value::parse(&ev.to_value().encode()).unwrap()).unwrap();
+        assert_eq!(ev, back);
+        for a in [
+            Action::NodeQuarantined { node: NodeId(3) },
+            Action::SpareRetained { node: NodeId(0) },
+            Action::SpareReleased { node: NodeId(u32::MAX) },
+        ] {
+            let back = Action::from_value(&Value::parse(&a.to_value().encode()).unwrap()).unwrap();
+            assert_eq!(a, back);
+        }
     }
 
     #[test]

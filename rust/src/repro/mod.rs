@@ -10,11 +10,12 @@ use std::fmt::Write as _;
 
 use crate::config::{table3_case, ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
 use crate::failure::{ErrorKind, TerminationStats, Trace, TraceConfig};
+use crate::fleet::FleetModel;
 use crate::metrics::{Figure, Table};
 use crate::perfmodel::{best_config, throughput_table};
 use crate::planner::{baselines, solve, PlanTask};
-use crate::proto::{CoordEvent, PlanReason};
-use crate::simulator::{compare_policies, PolicyKind, PolicyParams, Simulator};
+use crate::proto::{Action, CoordEvent, NodeId, PlanReason};
+use crate::simulator::{compare_policies, PolicyKind, PolicyParams, SimResult, Simulator};
 use crate::util::{fmt_duration, fmt_si};
 
 /// One reproducible experiment: a stable id, a one-line description, and a
@@ -94,6 +95,11 @@ pub const EXPERIMENTS: &[Experiment] = &[
         id: "fig10c",
         description: "multi-task WAF vs allocation baselines, Table 3 cases (Fig. 10c)",
         run: |_| fig10c(),
+    },
+    Experiment {
+        id: "fleet-lemon",
+        description: "lemon quarantine on/off goodput on a recurrent-lemon trace (fleet)",
+        run: fleet_lemon,
     },
     Experiment {
         id: "fig11a",
@@ -550,6 +556,106 @@ pub fn fig7_churn(seed: u64) -> String {
     )
 }
 
+/// The recurrent-lemon trace and its two Unicron runs (quarantine on/off).
+/// Split out so tests can pin the acceptance property — quarantine-on
+/// goodput ≥ quarantine-off — without re-parsing the rendered table.
+pub fn fleet_lemon_runs(seed: u64) -> (Trace, SimResult, SimResult) {
+    let cluster = ClusterSpec::default();
+    let specs = table3_case(5);
+    let tc = TraceConfig {
+        name: "fleet-lemon".into(),
+        duration_s: 6.0 * 3600.0,
+        n_nodes: cluster.n_nodes,
+        expect_sev1: 0.0,
+        expect_other: 0.0,
+        repair_min_s: 0.25 * 86400.0,
+        repair_max_s: 86400.0,
+    };
+    // One lemon node failing at the process level every 30 s — each failure
+    // alone is SEV2-trivial (restart in place), but the recurrence starves
+    // the owning task, the pattern Meta's reliability study found dominating
+    // lost goodput. The period deliberately exceeds the ~17 s restart
+    // recovery so every restart *succeeds* before the next failure: the
+    // §4.2 escalation ladder resets each cycle and never reaches SEV1 —
+    // only the fleet's recurrence memory can end the loop.
+    let trace = Trace::generate(tc, seed).with_recurrent_lemon(
+        NodeId(5),
+        ErrorKind::CudaError,
+        600.0,
+        30.0,
+        f64::INFINITY,
+    );
+    let run_with = |quarantine: bool| {
+        let cfg = UnicronConfig { lemon_quarantine: quarantine, ..UnicronConfig::default() };
+        Simulator::builder()
+            .cluster(cluster.clone())
+            .config(cfg)
+            .policy(PolicyKind::Unicron)
+            .tasks(&specs)
+            .build()
+            .run(&trace)
+    };
+    let on = run_with(true);
+    let off = run_with(false);
+    (trace, on, off)
+}
+
+/// Fleet economics: goodput with lemon quarantine on vs off on a
+/// recurrent-lemon trace, plus the fleet's offline per-node health report
+/// (lemon score, EWMA MTBF estimate, failure domain).
+pub fn fleet_lemon(seed: u64) -> String {
+    let (trace, on, off) = fleet_lemon_runs(seed);
+    fleet_lemon_render(&trace, &on, &off)
+}
+
+/// Render the `fleet-lemon` report from already-computed runs (so tests
+/// that need both the raw runs and the rendered text pay for the two
+/// simulations once).
+pub fn fleet_lemon_render(trace: &Trace, on: &SimResult, off: &SimResult) -> String {
+    let cfg = UnicronConfig::default();
+
+    let count =
+        |r: &SimResult, f: fn(&Action) -> bool| r.decision_log.actions().filter(|&a| f(a)).count();
+    let mut t =
+        Table::new(&["lemon quarantine", "accumulated WAF", "mean WAF", "quarantines", "restarts"]);
+    for (label, r) in [("on", on), ("off", off)] {
+        t.row(&[
+            label.into(),
+            format!("{}FLOP·s", fmt_si(r.accumulated_waf)),
+            format!("{}FLOP/s", fmt_si(r.mean_waf())),
+            count(r, |a| matches!(a, Action::NodeQuarantined { .. })).to_string(),
+            count(r, |a| matches!(a, Action::InstructRestart { .. })).to_string(),
+        ]);
+    }
+    let mut out = format!(
+        "fleet-lemon — node 5 fails every 30s from t=600s ({} failures over {})\n{}",
+        trace.events.len(),
+        fmt_duration(trace.config.duration_s),
+        t.render()
+    );
+    let _ = writeln!(
+        out,
+        "quarantine advantage: {:.3}× accumulated WAF",
+        on.accumulated_waf / off.accumulated_waf.max(1.0)
+    );
+
+    // the fleet's offline view of the same trace
+    let fleet = FleetModel::ingest_trace(trace, &cfg);
+    let mut h = Table::new(&["node", "domain", "failures", "EWMA MTBF", "lemon score", "lemon?"]);
+    for (&node, health) in fleet.nodes() {
+        h.row(&[
+            node.to_string(),
+            health.domain.to_string(),
+            health.failures.to_string(),
+            health.mtbf_estimate_s().map_or("-".into(), fmt_duration),
+            format!("{:.2}", fleet.lemon_score(node)),
+            if fleet.is_lemon(node) { "LEMON".into() } else { "ok".into() },
+        ]);
+    }
+    let _ = writeln!(out, "\nfleet health history (offline trace ingest):\n{}", h.render());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -583,6 +689,30 @@ mod tests {
         let cols: Vec<&str> = row.split('|').map(str::trim).collect();
         assert_eq!(cols[2], "3", "launches column: {row}");
         assert_eq!(cols[3], "2", "finishes column: {row}");
+    }
+
+    #[test]
+    fn fleet_lemon_quarantine_on_beats_off() {
+        // the acceptance property: fencing the lemon must pay for the lost
+        // capacity on the recurrent-lemon trace
+        let (trace, on, off) = fleet_lemon_runs(42);
+        assert!(
+            on.accumulated_waf >= off.accumulated_waf,
+            "quarantine-on {} must be >= quarantine-off {}",
+            on.accumulated_waf,
+            off.accumulated_waf
+        );
+        let q = |r: &SimResult| {
+            r.decision_log
+                .actions()
+                .filter(|a| matches!(a, Action::NodeQuarantined { .. }))
+                .count()
+        };
+        assert_eq!(q(&on), 1);
+        assert_eq!(q(&off), 0);
+        let out = fleet_lemon_render(&trace, &on, &off);
+        assert!(out.contains("LEMON"), "the health report must flag node 5:\n{out}");
+        assert!(out.contains("quarantine advantage"));
     }
 
     #[test]

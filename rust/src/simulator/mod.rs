@@ -5,8 +5,8 @@
 //!
 //! 1. trace events ([`crate::failure::Trace`]) are translated into the
 //!    production [`CoordEvent`] vocabulary (SEV1 node drains become
-//!    `ErrorReport`/`NodeLost`, repairs `NodeJoined`, task churn
-//!    `TaskLaunched`/`TaskFinished`);
+//!    `ErrorReport`/`NodeLost`, completed repairs `NodeRepaired`, task
+//!    churn `TaskLaunched`/`TaskFinished`);
 //! 2. the policy decides — for [`PolicyKind::Unicron`] that policy *is* the
 //!    production [`crate::coordinator::Coordinator`] state machine, so the
 //!    simulated decision path is byte-for-byte the deployed one; the §7
@@ -15,7 +15,9 @@
 //! 3. the returned [`Action`]s are executed against simulated time from the
 //!    shared [`crate::engine::EventQueue`], with policy-specific timing
 //!    ([`PolicyParams`]): detection latency, transition duration per moved
-//!    GPU, restart/recompute cost.
+//!    GPU, restart/recompute cost. The fleet actions are environment
+//!    effects too: `SpareRetained` re-admits a repaired node,
+//!    `SpareReleased` and `NodeQuarantined` retire it for good.
 //!
 //! Every `(event, actions)` pair is recorded in [`SimResult::decision_log`];
 //! `rust/tests/sim_unification.rs` replays that log through a standalone
@@ -133,6 +135,11 @@ pub struct SimResult {
     pub decision_log: DecisionLog,
     /// `AlertOps` pages raised (SEV1 isolations).
     pub alerts: usize,
+    /// Replans the policy served from its precomputed §5.2 table (Unicron:
+    /// the coordinator's `lookup_hits`; baselines: 0).
+    pub plan_lookup_hits: u64,
+    /// Replans the policy solved live.
+    pub plan_solve_calls: u64,
 }
 
 impl SimResult {
@@ -165,6 +172,9 @@ pub struct Simulator {
     plan_inputs: Vec<PlanTask>,
     /// node -> down/isolated?
     node_down: Vec<bool>,
+    /// node -> permanently out of the fleet (quarantined lemon or released
+    /// spare): repairs are ignored and the node never carries work again.
+    retired: Vec<bool>,
     available: u32,
     now: f64,
     queue: EventQueue<EnvEvent>,
@@ -249,6 +259,7 @@ impl SimulatorBuilder {
         let params = policy.params().clone();
         Simulator {
             node_down: vec![false; cluster.n_nodes as usize],
+            retired: vec![false; cluster.n_nodes as usize],
             available: n,
             cluster,
             policy,
@@ -345,8 +356,45 @@ impl Simulator {
                     self.instruct_recovery(*task, *node, false, ctx)
                 }
                 Action::IsolateNode { node } => self.isolate(*node),
+                Action::NodeQuarantined { node } => self.retire(*node),
+                Action::SpareRetained { node } => self.readmit(*node),
+                Action::SpareReleased { node } => self.release(*node),
                 Action::AlertOps { .. } => self.alerts += 1,
             }
+        }
+    }
+
+    /// Permanently fence a lemon: the node goes (or stays) down, and no
+    /// pending or future repair returns it.
+    fn retire(&mut self, node: NodeId) {
+        let idx = node.0 as usize;
+        if idx >= self.retired.len() || self.retired[idx] {
+            return;
+        }
+        self.retired[idx] = true;
+        if !self.node_down[idx] {
+            self.node_down[idx] = true;
+            self.available = self.available.saturating_sub(self.cluster.gpus_per_node);
+        }
+    }
+
+    /// A repaired node the policy retained rejoins the pool.
+    fn readmit(&mut self, node: NodeId) {
+        let idx = node.0 as usize;
+        if idx >= self.node_down.len() || self.retired[idx] || !self.node_down[idx] {
+            return;
+        }
+        self.node_down[idx] = false;
+        self.available =
+            (self.available + self.cluster.gpus_per_node).min(self.cluster.total_gpus());
+    }
+
+    /// A repaired node the policy released: healthy, but returned to the
+    /// provider — out of the fleet for good.
+    fn release(&mut self, node: NodeId) {
+        let idx = node.0 as usize;
+        if idx < self.retired.len() {
+            self.retired[idx] = true;
         }
     }
 
@@ -487,6 +535,7 @@ impl Simulator {
         self.now = trace.config.duration_s;
         self.record();
 
+        let (plan_lookup_hits, plan_solve_calls) = self.policy.plan_stats();
         SimResult {
             policy: self.params.kind,
             waf_series: self.series,
@@ -496,6 +545,8 @@ impl Simulator {
             transitions: self.transitions,
             decision_log: self.decision_log,
             alerts: self.alerts,
+            plan_lookup_hits,
+            plan_solve_calls,
         }
     }
 
@@ -539,14 +590,18 @@ impl Simulator {
         }
     }
 
+    /// Repair completed. The environment no longer re-admits the node on
+    /// its own: it reports [`CoordEvent::NodeRepaired`] and executes
+    /// whatever the policy decides — rejoin (`SpareRetained`), return to
+    /// the provider (`SpareReleased`), or fence for good
+    /// (`NodeQuarantined`). A policy that answers with none of these leaves
+    /// the node out of service.
     fn on_repair(&mut self, node: NodeId) {
-        if !self.node_down[node.0 as usize] {
+        let idx = node.0 as usize;
+        if self.retired[idx] || !self.node_down[idx] {
             return;
         }
-        self.node_down[node.0 as usize] = false;
-        self.available =
-            (self.available + self.cluster.gpus_per_node).min(self.cluster.total_gpus());
-        let actions = self.decide(CoordEvent::NodeJoined { node });
+        let actions = self.decide(CoordEvent::NodeRepaired { node });
         self.execute(&actions, &Ctx::quiet());
     }
 
@@ -753,6 +808,101 @@ mod tests {
         );
         // bootstrap decision is the first log entry
         assert!(matches!(r.decision_log.entries[0].event, CoordEvent::TaskLaunched { .. }));
+    }
+
+    #[test]
+    fn repairs_are_policy_decisions_for_every_policy() {
+        // The environment never re-admits a node on its own: every repair
+        // surfaces as NodeRepaired and capacity returns only through an
+        // executed SpareRetained.
+        let trace = Trace::generate(TraceConfig::trace_a(), 42);
+        for kind in PolicyKind::all() {
+            let r = run(kind, &trace);
+            let repairs = r
+                .decision_log
+                .events()
+                .filter(|e| matches!(e, CoordEvent::NodeRepaired { .. }))
+                .count();
+            let retained = r
+                .decision_log
+                .actions()
+                .filter(|a| matches!(a, Action::SpareRetained { .. }))
+                .count();
+            assert!(repairs > 0, "{kind:?}: trace-a repairs must surface");
+            assert_eq!(repairs, retained, "{kind:?}: stock traces always retain");
+            assert!(
+                !r.decision_log.events().any(|e| matches!(e, CoordEvent::NodeJoined { .. })),
+                "{kind:?}: simulated repairs are NodeRepaired, not NodeJoined"
+            );
+        }
+    }
+
+    #[test]
+    fn simulated_sev1_replans_hit_the_precomputed_table() {
+        // ROADMAP SEV1 hot-path item: inside the simulator too, replans are
+        // table commits, not per-event solves.
+        let trace = Trace::generate(TraceConfig::trace_a(), 42);
+        let r = run(PolicyKind::Unicron, &trace);
+        assert!(r.plan_lookup_hits > 0, "SEV1/repair replans must be table hits");
+        assert!(
+            r.plan_lookup_hits >= r.plan_solve_calls,
+            "the table path must dominate: {} hits vs {} solves",
+            r.plan_lookup_hits,
+            r.plan_solve_calls
+        );
+        let meg = run(PolicyKind::Megatron, &trace);
+        assert_eq!((meg.plan_lookup_hits, meg.plan_solve_calls), (0, 0), "baselines have no table");
+    }
+
+    #[test]
+    fn recurrent_lemon_is_quarantined_and_quarantine_pays() {
+        let (cluster, cfg, specs) = setup();
+        let tc = TraceConfig {
+            name: "lemon".into(),
+            duration_s: 6.0 * 3600.0,
+            n_nodes: cluster.n_nodes,
+            expect_sev1: 0.0,
+            expect_other: 0.0,
+            repair_min_s: 0.25 * 86400.0,
+            repair_max_s: 86400.0,
+        };
+        // period > restart recovery (~17 s): every restart succeeds, the
+        // escalation ladder resets, and only the fleet's recurrence memory
+        // can fence the node
+        let trace = Trace::generate(tc, 1).with_recurrent_lemon(
+            crate::proto::NodeId(5),
+            crate::failure::ErrorKind::CudaError,
+            600.0,
+            30.0,
+            f64::INFINITY,
+        );
+        let mut off_cfg = cfg.clone();
+        off_cfg.lemon_quarantine = false;
+        let run_with = |c: &UnicronConfig| {
+            Simulator::builder()
+                .cluster(cluster.clone())
+                .config(c.clone())
+                .policy(PolicyKind::Unicron)
+                .tasks(&specs)
+                .build()
+                .run(&trace)
+        };
+        let on = run_with(&cfg);
+        let off = run_with(&off_cfg);
+        let quarantines = |r: &SimResult| {
+            r.decision_log
+                .actions()
+                .filter(|a| matches!(a, Action::NodeQuarantined { .. }))
+                .count()
+        };
+        assert_eq!(quarantines(&on), 1, "the lemon is fenced exactly once");
+        assert_eq!(quarantines(&off), 0);
+        assert!(
+            on.accumulated_waf >= off.accumulated_waf,
+            "fencing the lemon must not lose goodput: on {} vs off {}",
+            on.accumulated_waf,
+            off.accumulated_waf
+        );
     }
 
     #[test]

@@ -197,6 +197,14 @@ pub trait RecoveryPolicy {
 
     /// One cluster event → recovery actions for the environment to execute.
     fn on_event(&mut self, ev: CoordEvent) -> Vec<Action>;
+
+    /// Planner path counters `(table hits, live solves)` — `(0, 0)` for
+    /// policies without a precomputed table; the wrapped coordinator's
+    /// counters for Unicron. `rust/tests/sim_unification.rs` uses this to
+    /// assert simulated SEV1s exercise the §5.2 table path.
+    fn plan_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Build the policy for `kind`.
@@ -261,7 +269,23 @@ impl RecoveryPolicy for UnicronPolicy {
     }
 
     fn on_event(&mut self, ev: CoordEvent) -> Vec<Action> {
-        self.coord.as_mut().expect("UnicronPolicy::init not called").handle(ev)
+        let coord = self.coord.as_mut().expect("UnicronPolicy::init not called");
+        let actions = coord.handle(ev);
+        // The simulated counterpart of the live driver's background plan
+        // refresh: whenever a commit staled the table, rebuild the cheap
+        // event-horizon table before the next event (zero simulated time),
+        // so simulated SEV1 replans are table hits exactly like production.
+        if !coord.lookup_is_fresh() {
+            coord.precompute_event_plans();
+        }
+        actions
+    }
+
+    fn plan_stats(&self) -> (u64, u64) {
+        match &self.coord {
+            Some(c) => (c.lookup_hits, c.solve_calls),
+            None => (0, 0),
+        }
     }
 }
 
@@ -537,6 +561,15 @@ impl RecoveryPolicy for BaselinePolicy {
             CoordEvent::NodeJoined { .. } => {
                 self.available += self.gpus_per_node;
                 self.reclaim(PlanReason::NodeJoined)
+            }
+            CoordEvent::NodeRepaired { node } => {
+                // baselines have no fleet economics: a repaired node always
+                // rejoins (the pre-fleet behavior), stated explicitly so the
+                // environment restores its capacity
+                self.available += self.gpus_per_node;
+                let mut actions = vec![Action::SpareRetained { node }];
+                actions.extend(self.reclaim(PlanReason::NodeJoined));
+                actions
             }
             CoordEvent::ErrorReport { node, task, kind } => match kind.severity() {
                 Severity::Sev1 => {

@@ -35,6 +35,7 @@ fn every_event_variant_roundtrips_for_every_error_kind() {
     for id in [0u32, 7, u32::MAX] {
         roundtrip_event(&CoordEvent::NodeLost { node: NodeId(id) });
         roundtrip_event(&CoordEvent::NodeJoined { node: NodeId(id) });
+        roundtrip_event(&CoordEvent::NodeRepaired { node: NodeId(id) });
         roundtrip_event(&CoordEvent::TaskFinished { task: TaskId(id) });
         roundtrip_event(&CoordEvent::TaskLaunched { task: TaskId(id) });
         for ok in [true, false] {
@@ -53,6 +54,9 @@ fn every_action_variant_roundtrips() {
     roundtrip_action(&Action::InstructReattempt { node: NodeId(0), task: TaskId(9) });
     roundtrip_action(&Action::InstructRestart { node: NodeId(15), task: TaskId(0) });
     roundtrip_action(&Action::IsolateNode { node: NodeId(12) });
+    roundtrip_action(&Action::NodeQuarantined { node: NodeId(12) });
+    roundtrip_action(&Action::SpareRetained { node: NodeId(0) });
+    roundtrip_action(&Action::SpareReleased { node: NodeId(u32::MAX) });
     roundtrip_action(&Action::AlertOps { message: "SEV1: node 12 isolated".into() });
     roundtrip_action(&Action::AlertOps { message: "unicode \"quotes\" + ⑤⑥\n".into() });
     // ApplyPlan with non-trivial floats, for every reason
@@ -83,8 +87,14 @@ fn tampered_artifacts_are_rejected_not_skipped() {
     // unknown action variant
     let bad = text.replace("isolate_node", "obliterate_node");
     assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
-    // future version
-    let bad = text.replace("\"version\":1", "\"version\":999");
+    // unknown fleet-era variants are rejected the same way
+    let bad = text.replace("node_lost", "node_repaired_twice");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // future version (derive the tamper string so version bumps can't
+    // silently defuse this test)
+    let version_field = format!("\"version\":{}", unicron::proto::DECISION_LOG_VERSION);
+    assert!(text.contains(&version_field), "artifact must carry {version_field}");
+    let bad = text.replace(&version_field, "\"version\":999");
     assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
     // garbage bytes
     assert!(DecisionLog::from_bytes(b"\xff\xfe not json").is_err());

@@ -8,20 +8,59 @@
 
 use rand_core::RngCore as _;
 use unicron::config::{table3_case, ClusterSpec, UnicronConfig};
-use unicron::failure::{Trace, TraceConfig};
+use unicron::failure::{ErrorKind, Trace, TraceConfig};
 use unicron::proptest::{run, Config, Prop};
+use unicron::proto::NodeId;
 use unicron::rng::{Rand, Xoshiro256};
 use unicron::simulator::{PolicyKind, SimResult, Simulator};
 
-fn simulate(kind: PolicyKind, tc: TraceConfig, seed: u64, churn: bool) -> SimResult {
-    let cluster = ClusterSpec::default();
-    let cfg = UnicronConfig::default();
-    let specs = table3_case(5);
-    let mut trace = Trace::generate(tc, seed);
+/// Which trace family a corpus entry exercises. `A`/`B` are the stock §7.5
+/// traces; `DomainBurst` overlays correlated same-domain SEV1 bursts;
+/// `Lemon` overlays a recurrent-failure node (both fleet-layer scenario
+/// classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scenario {
+    A,
+    B,
+    DomainBurst,
+    Lemon,
+}
+
+fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
+    let mut trace = match scenario {
+        Scenario::A | Scenario::DomainBurst | Scenario::Lemon => {
+            Trace::generate(TraceConfig::trace_a(), seed)
+        }
+        Scenario::B => Trace::generate(TraceConfig::trace_b(), seed),
+    };
+    match scenario {
+        Scenario::DomainBurst => {
+            trace = trace.with_domain_burst(4, 3, 3, 900.0, seed);
+        }
+        Scenario::Lemon => {
+            let until = 3600.0 + 6.0 * 3600.0;
+            trace = trace.with_recurrent_lemon(
+                NodeId((seed % 16) as u32),
+                ErrorKind::CudaError,
+                3600.0,
+                120.0,
+                until,
+            );
+        }
+        Scenario::A | Scenario::B => {}
+    }
     if churn {
         // exercise the ⑤⑥ lifecycle path: two late arrivals, one departure
         trace = trace.with_task_churn(6, 2, 1, seed);
     }
+    trace
+}
+
+fn simulate(kind: PolicyKind, scenario: Scenario, seed: u64, churn: bool) -> SimResult {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let trace = make_trace(scenario, seed, churn);
     Simulator::builder().cluster(cluster).config(cfg).policy(kind).tasks(&specs).build().run(&trace)
 }
 
@@ -45,31 +84,35 @@ fn diverges(a: &SimResult, b: &SimResult) -> Option<&'static str> {
     None
 }
 
-/// (policy, use trace-b?, trace seed, task churn?) — grow-only.
-const CORPUS: &[(PolicyKind, bool, u64, bool)] = &[
-    (PolicyKind::Unicron, false, 42, false),
-    (PolicyKind::Unicron, true, 42, false),
-    (PolicyKind::Unicron, false, 13, true),
-    (PolicyKind::Unicron, true, 99, true),
-    (PolicyKind::Megatron, false, 42, false),
-    (PolicyKind::Megatron, true, 7, false),
-    (PolicyKind::Oobleck, false, 9, true),
-    (PolicyKind::Varuna, true, 3, false),
-    (PolicyKind::Bamboo, false, 2024, false),
+/// (policy, scenario, trace seed, task churn?) — grow-only.
+const CORPUS: &[(PolicyKind, Scenario, u64, bool)] = &[
+    (PolicyKind::Unicron, Scenario::A, 42, false),
+    (PolicyKind::Unicron, Scenario::B, 42, false),
+    (PolicyKind::Unicron, Scenario::A, 13, true),
+    (PolicyKind::Unicron, Scenario::B, 99, true),
+    (PolicyKind::Megatron, Scenario::A, 42, false),
+    (PolicyKind::Megatron, Scenario::B, 7, false),
+    (PolicyKind::Oobleck, Scenario::A, 9, true),
+    (PolicyKind::Varuna, Scenario::B, 3, false),
+    (PolicyKind::Bamboo, Scenario::A, 2024, false),
     // PR 2: protocol-layer era — pin a churn-heavy trace-b Unicron run so
     // DecisionLog recording/replay always has a dense lifecycle seed.
-    (PolicyKind::Unicron, true, 2026, true),
+    (PolicyKind::Unicron, Scenario::B, 2026, true),
+    // PR 3: fleet era — correlated same-domain bursts (NodeRepaired/
+    // SpareRetained surface) and a recurrent-lemon node (NodeQuarantined
+    // surface) must stay bit-reproducible.
+    (PolicyKind::Unicron, Scenario::DomainBurst, 7, false),
+    (PolicyKind::Unicron, Scenario::Lemon, 5, false),
 ];
 
 #[test]
 fn recorded_seed_corpus_replays_bit_identically() {
-    for &(kind, trace_b, seed, churn) in CORPUS {
-        let tc = if trace_b { TraceConfig::trace_b() } else { TraceConfig::trace_a() };
-        let a = simulate(kind, tc.clone(), seed, churn);
-        let b = simulate(kind, tc, seed, churn);
+    for &(kind, scenario, seed, churn) in CORPUS {
+        let a = simulate(kind, scenario, seed, churn);
+        let b = simulate(kind, scenario, seed, churn);
         assert!(
             diverges(&a, &b).is_none(),
-            "{kind:?}/trace_b={trace_b}/seed={seed}/churn={churn} diverged in {}",
+            "{kind:?}/{scenario:?}/seed={seed}/churn={churn} diverged in {}",
             diverges(&a, &b).unwrap()
         );
         // a corpus run must also be a *sane* run
@@ -85,15 +128,21 @@ fn determinism_property_over_random_seeds_and_policies() {
         Config { cases: 6, ..Default::default() },
         |rng: &mut Xoshiro256, _size| {
             let kind = *rng.choose(&PolicyKind::all());
-            (kind, rng.next_u64(), rng.f64() < 0.5)
+            let scenario = *rng.choose(&[
+                Scenario::B,
+                Scenario::B,
+                Scenario::DomainBurst,
+                Scenario::Lemon,
+            ]);
+            (kind, scenario, rng.next_u64(), rng.f64() < 0.5)
         },
-        |&(kind, seed, churn)| {
-            let a = simulate(kind, TraceConfig::trace_b(), seed, churn);
-            let b = simulate(kind, TraceConfig::trace_b(), seed, churn);
+        |&(kind, scenario, seed, churn)| {
+            let a = simulate(kind, scenario, seed, churn);
+            let b = simulate(kind, scenario, seed, churn);
             match diverges(&a, &b) {
                 None => Prop::Pass,
                 Some(field) => Prop::Fail(format!(
-                    "{kind:?} seed {seed} churn {churn}: {field} not reproducible \
+                    "{kind:?} {scenario:?} seed {seed} churn {churn}: {field} not reproducible \
                      — add to sim_determinism.rs CORPUS"
                 )),
             }
