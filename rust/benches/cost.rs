@@ -1,0 +1,106 @@
+//! Cost-ledger performance (DESIGN.md §9): the breakdown-carrying
+//! [`unicron::planner::solve`] must stay within 1.1× of a pre-ledger
+//! scalar-reward reference DP (the typed ledger is bookkeeping, not a tax),
+//! and raw [`unicron::planner::reward`] term evaluation must sustain
+//! ≥ 1M terms/s (the DP inner loop runs it O(m·n²) times per solve).
+
+use unicron::bench::Bencher;
+use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
+use unicron::cost::{CostModel, TransitionProfile};
+use unicron::perfmodel::throughput_table;
+use unicron::planner::{reward, solve, PlanTask};
+use unicron::proto::WorkerCount;
+
+/// The pre-ledger solver shape: bare-scalar `d_running`/`d_transition`, no
+/// per-task profiles, no breakdown — the reference the ledger solve is held
+/// to. Kept verbatim from the PR-3-era DP so the comparison is honest.
+fn scalar_solve(tasks: &[PlanTask], n_workers: u32, d_running: f64, d_transition: f64) -> f64 {
+    let n = n_workers as usize;
+    let m = tasks.len();
+    let mut s = vec![vec![0.0f64; n + 1]; m + 1];
+    let mut choice = vec![vec![0u32; n + 1]; m + 1];
+    for i in 1..=m {
+        let t = &tasks[i - 1];
+        for j in 0..=n {
+            let mut best = f64::NEG_INFINITY;
+            let mut best_k = 0;
+            for k in 0..=j {
+                let x = k as u32;
+                let gain = t.waf(x) * d_running;
+                let pen =
+                    if t.transitions_to(x) { t.current_waf() * d_transition } else { 0.0 };
+                let v = s[i - 1][j - k] + gain - pen;
+                if v > best {
+                    best = v;
+                    best_k = x;
+                }
+            }
+            s[i][j] = best;
+            choice[i][j] = best_k;
+        }
+    }
+    let mut j = n;
+    for i in (1..=m).rev() {
+        j -= choice[i][j] as usize;
+    }
+    s[m][n]
+}
+
+fn main() {
+    let cluster = ClusterSpec::default();
+    let cost = CostModel::from_config(&UnicronConfig::default());
+    let n = cluster.total_gpus();
+    let tasks: Vec<PlanTask> = table3_case(5)
+        .into_iter()
+        .map(|spec| {
+            let model = ModelSpec::gpt3(&spec.model).unwrap();
+            PlanTask {
+                throughput: throughput_table(&model, &cluster, n),
+                profile: TransitionProfile::from_model(&model, &cluster),
+                spec,
+                current: WorkerCount(16),
+                fault: false,
+            }
+        })
+        .collect();
+
+    let mut b = Bencher::new("cost").with_samples(3, 30);
+    let ledger = b
+        .bench("solve_with_breakdown_6tasks_128", || {
+            std::hint::black_box(solve(&tasks, n, &cost).objective);
+        })
+        .expect("benchmark filtered out");
+    let d_running = cost.horizon_s(n);
+    let scalar = b
+        .bench("solve_scalar_reference_6tasks_128", || {
+            std::hint::black_box(scalar_solve(&tasks, n, d_running, 60.0));
+        })
+        .expect("benchmark filtered out");
+    let ratio = ledger.median / scalar.median.max(1e-12);
+    println!(
+        "\nbreakdown-carrying solve: {:.3} ms vs scalar reference {:.3} ms ({ratio:.3}×)",
+        ledger.median * 1e3,
+        scalar.median * 1e3,
+    );
+    assert!(
+        ratio <= 1.1,
+        "the typed ledger must not tax the solver: {ratio:.3}× > 1.1× the scalar reference"
+    );
+
+    // raw term-evaluation throughput: the full reward path (horizon lookup,
+    // per-task profile, fault-strategy selection) per call
+    const TERMS: u32 = 1_000_000;
+    let t0 = &tasks[0];
+    let terms = b
+        .bench("reward_1m_term_evaluations", || {
+            let mut acc = 0.0f64;
+            for i in 0..TERMS {
+                acc += reward(t0, i % (n + 1), n, &cost);
+            }
+            std::hint::black_box(acc);
+        })
+        .expect("benchmark filtered out");
+    let rate = TERMS as f64 / terms.median;
+    println!("reward terms: {:.2}M evaluations/s", rate / 1e6);
+    assert!(rate >= 1e6, "CostModel term evaluation must sustain ≥1M/s, got {rate:.0}/s");
+}

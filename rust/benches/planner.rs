@@ -4,6 +4,7 @@
 
 use unicron::bench::Bencher;
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
+use unicron::cost::{CostModel, TransitionProfile};
 use unicron::perfmodel::throughput_table;
 use unicron::planner::{solve, PlanLookup, PlanTask, ScenarioLookup};
 use unicron::proto::WorkerCount;
@@ -16,6 +17,7 @@ fn tasks(case: u32, n: u32) -> Vec<PlanTask> {
             let model = ModelSpec::gpt3(&spec.model).unwrap();
             PlanTask {
                 throughput: throughput_table(&model, &cluster, n),
+                profile: TransitionProfile::from_model(&model, &cluster),
                 spec,
                 current: WorkerCount(8),
                 fault: false,
@@ -25,12 +27,12 @@ fn tasks(case: u32, n: u32) -> Vec<PlanTask> {
 }
 
 fn main() {
-    let cfg = UnicronConfig::default();
+    let cost = CostModel::from_config(&UnicronConfig::default());
     let mut b = Bencher::new("planner").with_samples(3, 30);
 
     let ts = tasks(5, 128);
     b.bench("solve_6tasks_128workers", || {
-        let plan = solve(&ts, 128, &cfg);
+        let plan = solve(&ts, 128, &cost);
         assert!(plan.workers_used <= 128);
     });
 
@@ -41,19 +43,20 @@ fn main() {
             PlanTask {
                 spec: unicron::config::TaskSpec::new(i, "synthetic", 1.0, 1),
                 throughput,
+                profile: TransitionProfile::flat(60.0),
                 current: WorkerCount(32),
                 fault: false,
             }
         })
         .collect();
     b.bench("solve_16tasks_512workers", || {
-        let plan = solve(&big, 512, &cfg);
+        let plan = solve(&big, 512, &cost);
         assert!(plan.workers_used <= 512);
     });
 
     let mut lut = None;
     b.bench("lookup_precompute_128", || {
-        lut = Some(PlanLookup::precompute(&ts, 128, &cfg));
+        lut = Some(PlanLookup::precompute(&ts, 128, &cost));
     });
     let lut = lut.unwrap();
     let mut b2 = Bencher::new("planner").with_samples(3, 50);
@@ -89,6 +92,7 @@ fn main() {
             let model = ModelSpec::gpt3(&spec.model).unwrap();
             PlanTask {
                 throughput: throughput_table(&model, &cluster, 64),
+                profile: TransitionProfile::from_model(&model, &cluster),
                 spec,
                 current: WorkerCount(16),
                 fault: false,
@@ -101,10 +105,10 @@ fn main() {
     let mut b3 = Bencher::new("planner").with_samples(3, 30);
     b3.bench("sev1_replan_via_solve_4tasks_64workers", || {
         // node lost: 64 -> 56 workers, task 1 faulted
-        let plan = solve(&faulted, 56, &cfg);
+        let plan = solve(&faulted, 56, &cost);
         std::hint::black_box(plan.workers_used);
     });
-    let replan_table = ScenarioLookup::precompute(&tasks4, 64, &cfg);
+    let replan_table = ScenarioLookup::precompute(&tasks4, 64, &cost);
     b3.bench("sev1_replan_via_lookup_4tasks_64workers", || {
         let plan = replan_table.plan_for(Some(1), 56).clone();
         std::hint::black_box(plan.workers_used);

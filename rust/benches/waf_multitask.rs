@@ -3,13 +3,14 @@
 
 use unicron::bench::Bencher;
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
+use unicron::cost::{CostModel, TransitionProfile};
 use unicron::perfmodel::throughput_table;
 use unicron::planner::{baselines, solve, PlanTask};
 use unicron::proto::WorkerCount;
 
 fn main() {
     let cluster = ClusterSpec::default();
-    let cfg = UnicronConfig::default();
+    let cost = CostModel::from_config(&UnicronConfig::default());
     let n = cluster.total_gpus();
     let mut b = Bencher::new("fig10c_waf").with_samples(2, 10);
 
@@ -20,6 +21,7 @@ fn main() {
                 let model = ModelSpec::gpt3(&spec.model).unwrap();
                 PlanTask {
                     throughput: throughput_table(&model, &cluster, n),
+                    profile: TransitionProfile::from_model(&model, &cluster),
                     spec,
                     current: WorkerCount(0),
                     fault: false,
@@ -27,10 +29,10 @@ fn main() {
             })
             .collect();
         b.bench(&format!("solve_case{case}"), || {
-            std::hint::black_box(solve(&tasks, n, &cfg));
+            std::hint::black_box(solve(&tasks, n, &cost));
         });
         // correctness along the way: Unicron ≥ every baseline
-        let uni = solve(&tasks, n, &cfg).total_waf;
+        let uni = solve(&tasks, n, &cost).total_waf;
         let waf_of = |alloc: &[u32]| tasks.iter().zip(alloc).map(|(t, &x)| t.waf(x)).sum::<f64>();
         let sizes: Vec<f64> = table3_case(case)
             .iter()

@@ -42,6 +42,9 @@ use crate::util::Clock;
 
 pub const STATUS_PREFIX: &str = "/status/";
 pub const CMD_PREFIX: &str = "/cmd/";
+/// Fleet-health report published by the loop (ROADMAP fleet follow-up):
+/// per-node history + the cluster-wide EWMA MTBF estimate, as JSON.
+pub const FLEET_HEALTH_KEY: &str = "/fleet/health";
 
 /// Timed work the live loop schedules on the shared engine queue.
 #[derive(Debug, Clone, Copy)]
@@ -50,6 +53,9 @@ enum LoopTask {
     LeaseSweep,
     /// §5.2 background precompute: rebuild the scenario table when stale.
     PlanRefresh,
+    /// A coordinator-requested burst-batch wake-up: deliver
+    /// [`CoordEvent::ReplanDue`] so the deferred consolidated replan commits.
+    ReplanFlush,
 }
 
 /// Timestamped record of a detected event (Table 2's measurement hook).
@@ -142,7 +148,18 @@ impl CoordinatorLive {
                                     inflight = Some(std::thread::spawn(move || job.compute()));
                                 }
                             }
+                            publish_fleet_health(&store2, &coord);
                             timers.schedule(clock2.now() + refresh_period, LoopTask::PlanRefresh);
+                        }
+                        LoopTask::ReplanFlush => {
+                            let event = CoordEvent::ReplanDue;
+                            let actions = coord.handle_at(event.clone(), clock2.now());
+                            dispatch_actions(&store2, &seq2, &actions);
+                            det2.lock().unwrap().push(Detection {
+                                at_s: clock2.now(),
+                                event,
+                                actions,
+                            });
                         }
                     }
                 }
@@ -170,13 +187,18 @@ impl CoordinatorLive {
                     }
                 }
                 for event in events {
-                    let actions = coord.handle(event.clone());
+                    // the wall clock rides into the decision log (wire v3):
+                    // it feeds the fleet's MTBF estimator and makes replays
+                    // of live sessions reproduce time-fed decisions exactly
+                    let now = clock2.now();
+                    let actions = coord.handle_at(event.clone(), now);
+                    for a in &actions {
+                        if let Action::ScheduleReplan { after_s } = a {
+                            timers.schedule(now + after_s, LoopTask::ReplanFlush);
+                        }
+                    }
                     dispatch_actions(&store2, &seq2, &actions);
-                    det2.lock().unwrap().push(Detection {
-                        at_s: clock2.now(),
-                        event,
-                        actions,
-                    });
+                    det2.lock().unwrap().push(Detection { at_s: now, event, actions });
                 }
                 std::thread::sleep(Duration::from_millis(5));
             }
@@ -263,6 +285,37 @@ fn parse_status(key: &str, value: &str) -> Option<CoordEvent> {
     Some(CoordEvent::ErrorReport { node, task, kind })
 }
 
+/// Publish the fleet-health report under [`FLEET_HEALTH_KEY`]: the
+/// cluster-wide EWMA MTBF estimate the cost ledger prices horizons with,
+/// plus each node's lifetime history (failures, repairs, lemon score,
+/// quarantine/release flags, per-node MTBF estimate). Operators and
+/// tooling read it straight from the kvstore.
+fn publish_fleet_health(store: &Store, coord: &Coordinator) {
+    let nodes: Vec<Value> = coord
+        .fleet
+        .nodes()
+        .map(|(&node, h)| {
+            let mut v = Value::obj()
+                .with("node", node.0)
+                .with("domain", coord.fleet.domain_of(node).0)
+                .with("failures", h.failures)
+                .with("repairs", h.repairs)
+                .with("lemon_score", coord.fleet.lemon_score(node))
+                .with("quarantined", h.quarantined)
+                .with("released", h.released);
+            if let Some(m) = h.mtbf_estimate_s() {
+                v.set("mtbf_s", m);
+            }
+            v
+        })
+        .collect();
+    let report = Value::obj()
+        .with("mtbf_per_gpu_est_s", coord.fleet.mtbf_per_gpu_estimate_s())
+        .with("mtbf_observations", coord.fleet.mtbf_observations())
+        .with("nodes", Value::Arr(nodes));
+    let _ = store.put(FLEET_HEALTH_KEY, &report.encode(), None);
+}
+
 /// Publish agent-executable actions under `/cmd/<node>/<seq>`.
 fn dispatch_actions(store: &Store, seq: &AtomicU64, actions: &[Action]) {
     for a in actions {
@@ -279,10 +332,12 @@ fn dispatch_actions(store: &Store, seq: &AtomicU64, actions: &[Action]) {
             Action::NodeQuarantined { node } => (*node, Value::obj().with("op", "isolate")),
             // a released spare's agent deprovisions the machine
             Action::SpareReleased { node } => (*node, Value::obj().with("op", "release")),
-            // plans, alerts, and retained spares are coordinator-local
-            Action::ApplyPlan { .. } | Action::AlertOps { .. } | Action::SpareRetained { .. } => {
-                continue
-            }
+            // plans, alerts, retained spares, and replan timers are
+            // coordinator-local (the loop schedules ScheduleReplan itself)
+            Action::ApplyPlan { .. }
+            | Action::AlertOps { .. }
+            | Action::SpareRetained { .. }
+            | Action::ScheduleReplan { .. } => continue,
         };
         let n = seq.fetch_add(1, Ordering::Relaxed);
         let _ = store.put(&format!("{CMD_PREFIX}{node}/{n}"), &body.encode(), None);
@@ -351,6 +406,7 @@ mod tests {
         let task = PlanTask {
             spec: TaskSpec::new(0u32, "m", 1.0, 1),
             throughput,
+            profile: crate::cost::TransitionProfile::flat(5.0),
             current: WorkerCount(0),
             fault: false,
         };
@@ -370,6 +426,12 @@ mod tests {
         let settled = live.plan_refreshes();
         std::thread::sleep(Duration::from_millis(100));
         assert_eq!(live.plan_refreshes(), settled, "fresh table must not be rebuilt");
+        // the loop publishes the fleet-health report on the same cadence
+        let health = live.store.get_prefix(FLEET_HEALTH_KEY);
+        assert!(!health.is_empty(), "fleet health must be published");
+        let v = Value::parse(&health[0].1).expect("health report must be JSON");
+        assert!(v.get("mtbf_per_gpu_est_s").and_then(Value::as_f64).unwrap_or(0.0) > 0.0);
+        assert!(v.get("nodes").and_then(Value::as_arr).is_some());
         live.shutdown();
     }
 }

@@ -31,7 +31,7 @@
 //! and fences lemon nodes *before* they fail again
 //! ([`Action::NodeQuarantined`]); a repaired node
 //! ([`CoordEvent::NodeRepaired`]) is re-admitted, held as a hot spare, or
-//! returned to the provider by the [`SparePool`] cost arithmetic
+//! returned to the provider by the [`crate::fleet::SparePool`] cost arithmetic
 //! ([`Action::SpareRetained`] / [`Action::SpareReleased`]). All of it is a
 //! pure function of the event sequence, so [`DecisionLog`] replays stay
 //! bit-identical.
@@ -51,8 +51,9 @@ pub mod live;
 use std::collections::BTreeMap;
 
 use crate::config::UnicronConfig;
+use crate::cost::{CostModel, SpareTerms};
 use crate::failure::Severity;
-use crate::fleet::{FleetModel, SpareDecision, SparePool};
+use crate::fleet::{DomainId, FleetModel, SpareDecision};
 use crate::planner::{solve, PlanTask, ScenarioLookup};
 pub use crate::proto::{
     Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId, WorkerCount,
@@ -73,7 +74,10 @@ struct EscalationState {
 pub struct PlanRefreshJob {
     tasks: Vec<PlanTask>,
     ceiling: u32,
-    cfg: UnicronConfig,
+    /// Snapshot of the cost ledger (including the MTBF estimate) the table
+    /// is priced with — a later estimate change bumps the epoch, so a job
+    /// priced with a stale ledger can never land.
+    cost: CostModel,
     epoch: u64,
 }
 
@@ -82,7 +86,7 @@ impl PlanRefreshJob {
     /// off the event loop; hand the result to
     /// [`Coordinator::install_lookup`].
     pub fn compute(self) -> (u64, ScenarioLookup) {
-        (self.epoch, ScenarioLookup::precompute(&self.tasks, self.ceiling, &self.cfg))
+        (self.epoch, ScenarioLookup::precompute(&self.tasks, self.ceiling, &self.cost))
     }
 }
 
@@ -128,8 +132,10 @@ impl CoordinatorBuilder {
 
     pub fn build(self) -> Coordinator {
         let fleet = FleetModel::from_config(&self.cfg);
+        let cost = CostModel::from_config(&self.cfg);
         let mut coord = Coordinator {
             fleet,
+            cost,
             cfg: self.cfg,
             tasks: BTreeMap::new(),
             available_workers: self.workers.0,
@@ -145,6 +151,9 @@ impl CoordinatorBuilder {
             plan_epoch: 0,
             lookup_hits: 0,
             solve_calls: 0,
+            last_at_s: 0.0,
+            deferred_faults: None,
+            last_domain_sev1: BTreeMap::new(),
         };
         for t in self.tasks {
             coord.add_task(t);
@@ -163,7 +172,7 @@ pub struct Coordinator {
     /// Largest pool the cluster has been entitled to (initial capacity,
     /// grown by explicit joins). A repaired node below this is restoring
     /// lost capacity; at or above it, it is a hot-spare candidate priced by
-    /// the [`SparePool`] economics.
+    /// the [`crate::fleet::SparePool`] economics.
     peak_workers: u32,
     /// GPUs contributed per node (to size NodeLost effects).
     gpus_per_node: u32,
@@ -198,6 +207,22 @@ pub struct Coordinator {
     pub lookup_hits: u64,
     /// Replans that fell back to a fresh DP solve.
     pub solve_calls: u64,
+    /// The cost ledger every plan, transition, and spare decision is priced
+    /// with (DESIGN.md §9). The effective MTBF inside tightens as
+    /// [`Coordinator::handle_at`] observes real failure timestamps.
+    cost: CostModel,
+    /// Latest delivery timestamp seen (the clock [`Coordinator::handle`]
+    /// reuses for clockless callers).
+    last_at_s: f64,
+    /// Faulted tasks of a correlated same-domain burst whose replan was
+    /// deferred ([`Action::ScheduleReplan`]); drained into the next
+    /// committed replan. `Some(vec![])` means a replan is owed even though
+    /// no owned task was hit (idle-node burst losses).
+    deferred_faults: Option<Vec<TaskId>>,
+    /// Last SEV1 per failure domain: (node, delivery time) — the
+    /// distinct-node + recency evidence the burst batcher requires on top
+    /// of the fleet's domain pressure.
+    last_domain_sev1: BTreeMap<DomainId, (NodeId, f64)>,
 }
 
 impl Coordinator {
@@ -249,7 +274,8 @@ impl Coordinator {
             return;
         }
         let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
-        self.lookup = Some(ScenarioLookup::precompute(&ordered, self.capacity_ceiling(), &self.cfg));
+        self.lookup =
+            Some(ScenarioLookup::precompute(&ordered, self.capacity_ceiling(), &self.cost));
     }
 
     /// Precompute only the *event horizon* — the scenarios one event away
@@ -268,7 +294,7 @@ impl Coordinator {
             &ordered,
             self.available_workers,
             self.gpus_per_node,
-            &self.cfg,
+            &self.cost,
         ));
     }
 
@@ -284,7 +310,7 @@ impl Coordinator {
         Some(PlanRefreshJob {
             tasks: self.tasks.values().cloned().collect(),
             ceiling: self.capacity_ceiling(),
-            cfg: self.cfg.clone(),
+            cost: self.cost.clone(),
             epoch: self.plan_epoch,
         })
     }
@@ -328,15 +354,76 @@ impl Coordinator {
         self.tasks.values().map(|t| t.waf(t.current.0)).sum()
     }
 
-    /// Process one event; returns the actions (also appended to `log`).
+    /// The cost ledger the coordinator currently prices decisions with.
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// Process one event with no new clock information: delivered at the
+    /// last seen timestamp, so time-fed estimators see a zero gap and stay
+    /// put. Clockless unit tests and tools use this; real drivers call
+    /// [`Coordinator::handle_at`].
     pub fn handle(&mut self, event: CoordEvent) -> Vec<Action> {
+        let at = self.last_at_s;
+        self.handle_at(event, at)
+    }
+
+    /// Process one event delivered at `at_s` on the driver's clock;
+    /// returns the actions (also appended to `log` with the timestamp).
+    ///
+    /// The timestamp is observed *after* the decision: the plan committed
+    /// for event k is priced with the MTBF estimate as of events < k, which
+    /// is exactly what any table precomputed between k−1 and k was priced
+    /// with — table hits and live solves stay bit-identical. The estimate
+    /// (and therefore the ledger's horizon) tightens for the *next*
+    /// decision, and the stale table is invalidated.
+    pub fn handle_at(&mut self, event: CoordEvent, at_s: f64) -> Vec<Action> {
         self.fleet.tick(); // the fleet's event clock (lemon-score decay)
-        let actions = self.dispatch(&event);
-        self.log.record(event, actions.clone());
+        // Classify *before* dispatch: dispatch itself isolates the node, so
+        // whether this report is fresh or a duplicate about an
+        // already-fenced node must be decided up front.
+        let observation = self.classify_observation(&event);
+        let actions = self.dispatch(&event, at_s);
+        if let Some((node, plan_ending)) = observation {
+            // per-node inter-failure estimate (fleet-health observability)
+            self.fleet.observe_failure_time(node, at_s);
+            // the cluster-wide estimate prices the D_running horizon: only
+            // plan-ending (SEV1-class) failures end a plan's run, so only
+            // they are samples of it — a recoverable SEV2/SEV3 handled in
+            // place must not drag the horizon down
+            if plan_ending
+                && self.fleet.observe_cluster_failure(at_s, self.available_workers.max(1))
+            {
+                let est = self.fleet.mtbf_per_gpu_estimate_s();
+                if self.cost.set_mtbf_per_gpu_s(est) {
+                    self.invalidate_lookup(); // plans priced with the old horizon
+                }
+            }
+        }
+        if at_s > self.last_at_s {
+            self.last_at_s = at_s;
+        }
+        self.log.record(at_s, event, actions.clone());
         actions
     }
 
-    fn dispatch(&mut self, event: &CoordEvent) -> Vec<Action> {
+    /// Is this event a *fresh* failure observation, and does it end a plan
+    /// (SEV1-class)? Duplicate reports about nodes already fenced are not
+    /// observations — one physical failure must sample the MTBF estimators
+    /// exactly once.
+    fn classify_observation(&self, event: &CoordEvent) -> Option<(NodeId, bool)> {
+        let (node, sev) = match *event {
+            CoordEvent::ErrorReport { node, kind, .. } => (node, kind.severity()),
+            CoordEvent::NodeLost { node } => (node, Severity::Sev1),
+            _ => return None,
+        };
+        if self.isolated.contains(&node) || self.quarantined.contains(&node) {
+            return None;
+        }
+        Some((node, sev == Severity::Sev1))
+    }
+
+    fn dispatch(&mut self, event: &CoordEvent, at_s: f64) -> Vec<Action> {
         match *event {
             CoordEvent::ErrorReport { node, task, kind } => {
                 if self.quarantined.contains(&node) {
@@ -350,11 +437,11 @@ impl Coordinator {
                     // being reattempted/restarted yet again
                     Severity::Sev3 => self
                         .maybe_quarantine(node, Some(task))
-                        .unwrap_or_else(|| self.on_sev3(node, task)),
+                        .unwrap_or_else(|| self.on_sev3(node, task, at_s)),
                     Severity::Sev2 => self
                         .maybe_quarantine(node, Some(task))
-                        .unwrap_or_else(|| self.on_sev2(node, task)),
-                    Severity::Sev1 => self.on_sev1(node, Some(task)),
+                        .unwrap_or_else(|| self.on_sev2(node, task, at_s)),
+                    Severity::Sev1 => self.on_sev1(node, Some(task), at_s),
                 }
             }
             CoordEvent::NodeLost { node } => {
@@ -362,7 +449,7 @@ impl Coordinator {
                     return vec![];
                 }
                 self.fleet.note_failure(node, Severity::Sev1);
-                self.on_sev1(node, None)
+                self.on_sev1(node, None, at_s)
             }
             CoordEvent::NodeJoined { node } => {
                 // quarantine is permanent: a fenced lemon's agent
@@ -400,7 +487,7 @@ impl Coordinator {
                     vec![]
                 } else {
                     // §4.2: failed reattempt upgrades SEV3 -> SEV2
-                    self.on_sev2(node, task)
+                    self.on_sev2(node, task, at_s)
                 }
             }
             CoordEvent::RestartResult { node, task, ok } => {
@@ -409,29 +496,39 @@ impl Coordinator {
                     vec![]
                 } else {
                     // §4.2: failed restart upgrades SEV2 -> SEV1
-                    self.on_sev1(node, Some(task))
+                    self.on_sev1(node, Some(task), at_s)
+                }
+            }
+            CoordEvent::ReplanDue => {
+                // the burst-batch timer fired: commit the consolidated
+                // replan if it is still owed (an intervening replan may
+                // have drained it already — then this is a stale no-op)
+                if self.deferred_faults.is_some() {
+                    self.reconfigure(PlanReason::Sev1Failure, None)
+                } else {
+                    vec![]
                 }
             }
         }
     }
 
-    fn on_sev3(&mut self, node: NodeId, task: TaskId) -> Vec<Action> {
+    fn on_sev3(&mut self, node: NodeId, task: TaskId, at_s: f64) -> Vec<Action> {
         let esc = self.escalations.entry((task, node)).or_default();
         if esc.reattempts < self.cfg.max_reattempts {
             esc.reattempts += 1;
             vec![Action::InstructReattempt { node, task }]
         } else {
-            self.on_sev2(node, task)
+            self.on_sev2(node, task, at_s)
         }
     }
 
-    fn on_sev2(&mut self, node: NodeId, task: TaskId) -> Vec<Action> {
+    fn on_sev2(&mut self, node: NodeId, task: TaskId, at_s: f64) -> Vec<Action> {
         let esc = self.escalations.entry((task, node)).or_default();
         if esc.restarts < self.cfg.max_restarts {
             esc.restarts += 1;
             vec![Action::InstructRestart { node, task }]
         } else {
-            self.on_sev1(node, Some(task))
+            self.on_sev1(node, Some(task), at_s)
         }
     }
 
@@ -458,7 +555,7 @@ impl Coordinator {
 
     /// Trigger for [`CoordEvent::NodeRepaired`]: maintenance finished — the
     /// fleet layer decides the node's fate. Lemons are quarantined instead
-    /// of re-admitted; otherwise the [`SparePool`] prices retaining the node
+    /// of re-admitted; otherwise the [`crate::fleet::SparePool`] prices retaining the node
     /// against releasing it (restoring lost capacity is always retained).
     fn on_repaired(&mut self, node: NodeId) -> Vec<Action> {
         if self.quarantined.contains(&node) || self.released.contains(&node) {
@@ -476,16 +573,26 @@ impl Coordinator {
             return vec![Action::NodeQuarantined { node }];
         }
         match self.spare_decision() {
-            SpareDecision::Retain => {
+            (SpareDecision::Retain, terms) => {
                 self.isolated.retain(|&n| n != node);
                 self.pooled.push(node);
                 self.fleet.note_join(node);
                 self.available_workers += self.gpus_per_node;
                 let mut actions = vec![Action::SpareRetained { node }];
-                actions.extend(self.reconfigure(PlanReason::NodeJoined, None));
+                let mut replans = self.reconfigure(PlanReason::NodeJoined, None);
+                // the retention's spare terms ride the plan's breakdown, so
+                // the decision log explains retain-vs-release in the same
+                // currency as the plan objective
+                if let (Some(t), Some(Action::ApplyPlan { plan, .. })) =
+                    (terms, replans.last_mut())
+                {
+                    plan.breakdown.spare_value = t.value;
+                    plan.breakdown.spare_hold_cost = t.hold_cost;
+                }
+                actions.extend(replans);
                 actions
             }
-            SpareDecision::Release => {
+            (SpareDecision::Release, _) => {
                 self.isolated.retain(|&n| n != node);
                 self.released.push(node);
                 self.fleet.note_release(node);
@@ -494,29 +601,28 @@ impl Coordinator {
         }
     }
 
-    /// The spare-pool verdict for one repaired node, in the planner's WAF
-    /// currency (see [`SparePool`]): below the entitled peak the node is
-    /// restoring lost capacity (always retain); at or above it, the node is
-    /// a hot spare whose holding cost is weighed against the Poisson-tail
-    /// probability of needing it within the insured window.
+    /// The spare-pool verdict for one repaired node, priced by the cost
+    /// ledger in the planner's WAF currency: below the entitled peak the
+    /// node is restoring lost capacity (always retain, nothing priced); at
+    /// or above it, [`CostModel::spare_decision`] weighs the Poisson-tail
+    /// shortfall value of the `(held+1)`-th spare against its holding cost,
+    /// using the same effective MTBF the planner's horizon uses.
     ///
-    /// Every input is a pure function of coordinator state, so recorded
-    /// decisions replay bit-identically (the marginal node WAF is the
-    /// proportional share `current_waf · gpn / available`, not a lookup).
-    fn spare_decision(&self) -> SpareDecision {
+    /// Every input is a pure function of coordinator state plus the
+    /// recorded event/timestamp stream, so recorded decisions replay
+    /// bit-identically.
+    fn spare_decision(&self) -> (SpareDecision, Option<SpareTerms>) {
         if self.available_workers < self.peak_workers {
-            return SpareDecision::Retain;
+            return (SpareDecision::Retain, None);
         }
         let gpn = self.gpus_per_node.max(1);
         let held = (self.available_workers - self.peak_workers) / gpn;
-        let pool = SparePool::from_config(&self.cfg);
-        let lambda = pool.expected_failures(self.available_workers, self.cfg.mtbf_per_gpu_s);
-        let node_waf =
-            self.current_waf() * gpn as f64 / self.available_workers.max(1) as f64;
-        pool.decide(held, lambda, node_waf)
+        let (decision, terms) =
+            self.cost.spare_decision(held, self.available_workers, self.current_waf(), gpn);
+        (decision, Some(terms))
     }
 
-    fn on_sev1(&mut self, node: NodeId, task: Option<TaskId>) -> Vec<Action> {
+    fn on_sev1(&mut self, node: NodeId, task: Option<TaskId>, at_s: f64) -> Vec<Action> {
         if self.isolated.contains(&node) || self.quarantined.contains(&node) {
             return vec![]; // already fenced; duplicate report
         }
@@ -527,7 +633,30 @@ impl Coordinator {
             Action::IsolateNode { node },
             Action::AlertOps { message: format!("SEV1: node {node} isolated; maintenance required") },
         ];
-        actions.extend(self.reconfigure(PlanReason::Sev1Failure, task));
+        // Correlated-burst batching (ROADMAP fleet follow-up): when this
+        // SEV1 looks like a continuation of a same-domain burst — the
+        // domain's failure pressure is elevated AND a *different* node in
+        // the domain went down within the batch window — defer the replan
+        // and ask the driver for a ReplanDue wake-up instead, so the whole
+        // burst costs one consolidated transition instead of N.
+        let domain = self.fleet.domain_of(node);
+        let burst = self.cfg.domain_batch_window_s > 0.0
+            && self.fleet.domain_pressure(domain) >= self.cfg.domain_batch_pressure
+            && self.last_domain_sev1.get(&domain).is_some_and(|&(prev, prev_at)| {
+                prev != node && at_s - prev_at <= self.cfg.domain_batch_window_s
+            });
+        self.last_domain_sev1.insert(domain, (node, at_s));
+        if burst {
+            let faults = self.deferred_faults.get_or_insert_with(Vec::new);
+            if let Some(t) = task {
+                if !faults.contains(&t) {
+                    faults.push(t);
+                }
+            }
+            actions.push(Action::ScheduleReplan { after_s: self.cfg.domain_batch_window_s });
+        } else {
+            actions.extend(self.reconfigure(PlanReason::Sev1Failure, task));
+        }
         actions
     }
 
@@ -538,20 +667,43 @@ impl Coordinator {
     /// [`solve`] otherwise. Both paths produce the identical plan for the
     /// same state; `coordinator::tests::lookup_path_is_equivalent` holds
     /// them to that.
+    ///
+    /// Any deferred burst faults are drained into this replan — a committed
+    /// plan always settles everything owed, whether it was triggered by the
+    /// [`CoordEvent::ReplanDue`] timer or by an unrelated event.
     fn reconfigure(&mut self, reason: PlanReason, faulted_task: Option<TaskId>) -> Vec<Action> {
+        let mut faults: Vec<TaskId> = self.deferred_faults.take().unwrap_or_default();
+        if let Some(t) = faulted_task {
+            if !faults.contains(&t) {
+                faults.push(t);
+            }
+        }
         if self.tasks.is_empty() {
             return vec![];
         }
-        // map the faulted task id to its position in id-ordered iteration
-        let fault_idx = faulted_task.and_then(|t| self.tasks.keys().position(|&k| k == t));
+        // map faulted task ids to positions in id-ordered iteration
+        let fault_indices: Vec<usize> = faults
+            .iter()
+            .filter_map(|t| self.tasks.keys().position(|&k| k == *t))
+            .collect();
+        // the table covers single-fault scenarios; a multi-fault burst
+        // replan always re-solves live
+        let single_fault = match fault_indices[..] {
+            [] => Some(None),
+            [i] => Some(Some(i)),
+            _ => None,
+        };
         // the table serves the replan only on an *exact* scenario hit (full
         // grids cover everything in range; event-horizon tables exactly the
         // one-event-away scenarios) — anything else re-solves live. Both
         // paths produce bit-identical plans for the same state.
-        let precomputed = if self.lookup_is_fresh() {
-            self.lookup.as_ref().and_then(|l| l.get(fault_idx, self.available_workers)).cloned()
-        } else {
-            None
+        let precomputed = match single_fault {
+            Some(fault_idx) if self.lookup_is_fresh() => self
+                .lookup
+                .as_ref()
+                .and_then(|l| l.get(fault_idx, self.available_workers))
+                .cloned(),
+            _ => None,
         };
         let plan = match precomputed {
             Some(plan) => {
@@ -561,10 +713,10 @@ impl Coordinator {
             None => {
                 self.solve_calls += 1;
                 let mut ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
-                if let Some(i) = fault_idx {
+                for &i in &fault_indices {
                     ordered[i].fault = true;
                 }
-                solve(&ordered, self.available_workers, &self.cfg)
+                solve(&ordered, self.available_workers, &self.cost)
             }
         };
         // commit the new assignments; clear fault flags (handled). The
@@ -586,6 +738,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::config::TaskSpec;
+    use crate::cost::TransitionProfile;
     use crate::failure::ErrorKind;
 
     fn plan_task(id: u32, min: u32, current: u32, n: u32) -> PlanTask {
@@ -594,6 +747,7 @@ mod tests {
         PlanTask {
             spec: TaskSpec::new(id, "m", 1.0, min),
             throughput,
+            profile: TransitionProfile::flat(5.0),
             current: WorkerCount(current),
             fault: false,
         }
@@ -729,19 +883,21 @@ mod tests {
     #[test]
     fn lookup_path_is_equivalent_to_solve_path() {
         // Same event storm, one coordinator precomputing between events, one
-        // always solving live — the audit logs must be identical.
+        // always solving live — the audit logs must be identical. Nodes are
+        // spread across failure domains so no SEV1 reads as a correlated
+        // burst (batching has its own test).
         let events = [
             CoordEvent::TaskLaunched { task: TaskId(0) },
             CoordEvent::ErrorReport { node: NodeId(1), task: TaskId(0), kind: ErrorKind::EccError },
-            CoordEvent::NodeLost { node: NodeId(2) },
+            CoordEvent::NodeLost { node: NodeId(8) },
             CoordEvent::NodeJoined { node: NodeId(1) },
             CoordEvent::ErrorReport {
-                node: NodeId(3),
+                node: NodeId(12),
                 task: TaskId(1),
                 kind: ErrorKind::NvlinkError,
             },
             CoordEvent::TaskFinished { task: TaskId(0) },
-            CoordEvent::NodeJoined { node: NodeId(2) },
+            CoordEvent::NodeJoined { node: NodeId(8) },
         ];
         let mut warm = coord(32);
         let mut cold = coord(32);
@@ -984,7 +1140,7 @@ mod tests {
         let events = [
             CoordEvent::TaskLaunched { task: TaskId(0) },
             CoordEvent::NodeLost { node: NodeId(1) },
-            CoordEvent::ErrorReport { node: NodeId(2), task: TaskId(1), kind: ErrorKind::EccError },
+            CoordEvent::ErrorReport { node: NodeId(8), task: TaskId(1), kind: ErrorKind::EccError },
             CoordEvent::NodeRepaired { node: NodeId(1) },
         ];
         for ev in &events {
@@ -1000,6 +1156,174 @@ mod tests {
         assert!(warm.lookup_hits >= 3, "horizon hits: {}", warm.lookup_hits);
         assert!(warm.solve_calls <= 1, "horizon misses: {}", warm.solve_calls);
         assert!(cold.lookup_hits == 0 && cold.solve_calls >= 4);
+    }
+
+    #[test]
+    fn same_domain_burst_batches_replans_into_one() {
+        // Three SEV1s in one failure domain inside the batch window: the
+        // first replans immediately, the continuations defer with a
+        // ScheduleReplan, and the ReplanDue timer commits ONE consolidated
+        // plan — replan count < failure count.
+        let mut c = coord(32);
+        c.handle_at(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
+        let first = c.handle_at(
+            CoordEvent::ErrorReport { node: NodeId(0), task: TaskId(0), kind: ErrorKind::EccError },
+            100.0,
+        );
+        assert!(first.iter().any(|a| matches!(a, Action::ApplyPlan { .. })), "{first:?}");
+        let second = c.handle_at(
+            CoordEvent::ErrorReport { node: NodeId(1), task: TaskId(1), kind: ErrorKind::EccError },
+            160.0,
+        );
+        assert!(matches!(second[0], Action::IsolateNode { node: NodeId(1) }));
+        assert!(
+            second.iter().any(|a| matches!(a, Action::ScheduleReplan { .. })),
+            "burst continuation must defer: {second:?}"
+        );
+        assert!(!second.iter().any(|a| matches!(a, Action::ApplyPlan { .. })));
+        let third = c.handle_at(
+            CoordEvent::ErrorReport { node: NodeId(2), task: TaskId(0), kind: ErrorKind::EccError },
+            220.0,
+        );
+        assert!(third.iter().any(|a| matches!(a, Action::ScheduleReplan { .. })), "{third:?}");
+        assert_eq!(c.available_workers(), WorkerCount(8), "capacity tracked through deferral");
+        // the timer fires: one consolidated plan for the whole burst
+        let flush = c.handle_at(CoordEvent::ReplanDue, 220.0 + 900.0);
+        match &flush[..] {
+            [Action::ApplyPlan { plan, reason: PlanReason::Sev1Failure }] => {
+                assert!(plan.workers_used <= 8, "plan must fit the surviving pool");
+            }
+            other => panic!("expected the consolidated replan, got {other:?}"),
+        }
+        // a late/duplicate timer is a stale no-op
+        assert!(c.handle_at(CoordEvent::ReplanDue, 2000.0).is_empty());
+        // the pin: 3 SEV1 failures produced only 2 SEV1-class replans
+        let sev1_replans = c
+            .log
+            .actions()
+            .filter(|a| matches!(a, Action::ApplyPlan { reason: PlanReason::Sev1Failure, .. }))
+            .count();
+        assert_eq!(sev1_replans, 2);
+    }
+
+    #[test]
+    fn deferred_burst_faults_merge_into_the_next_replan() {
+        // An unrelated replan arriving before the timer settles the debt:
+        // the deferred faults ride it and the timer becomes a no-op.
+        let mut c = coord(32);
+        c.handle_at(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
+        c.handle_at(
+            CoordEvent::ErrorReport { node: NodeId(0), task: TaskId(0), kind: ErrorKind::EccError },
+            10.0,
+        );
+        let deferred = c.handle_at(
+            CoordEvent::ErrorReport { node: NodeId(1), task: TaskId(1), kind: ErrorKind::EccError },
+            20.0,
+        );
+        assert!(deferred.iter().any(|a| matches!(a, Action::ScheduleReplan { .. })));
+        // node 0 comes back: the join replan drains the deferred fault
+        let join = c.handle_at(CoordEvent::NodeJoined { node: NodeId(0) }, 30.0);
+        assert!(
+            join.iter().any(|a| matches!(
+                a,
+                Action::ApplyPlan { reason: PlanReason::NodeJoined, .. }
+            )),
+            "{join:?}"
+        );
+        assert!(c.handle_at(CoordEvent::ReplanDue, 920.0).is_empty(), "debt already settled");
+    }
+
+    #[test]
+    fn failure_timestamps_tighten_the_ledger_horizon() {
+        // ROADMAP fleet follow-up: detection timestamps feed the EWMA MTBF,
+        // and the cost ledger's horizon tightens as data accumulates. Nodes
+        // span distinct domains so no SEV1 reads as a burst.
+        let mut c = coord(32);
+        let prior = c.cost_model().mtbf_per_gpu_s();
+        c.handle_at(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
+        c.handle_at(CoordEvent::NodeLost { node: NodeId(0) }, 3600.0);
+        assert_eq!(c.cost_model().mtbf_per_gpu_s(), prior, "first failure only anchors the clock");
+        c.handle_at(CoordEvent::NodeLost { node: NodeId(8) }, 7200.0);
+        let est = c.cost_model().mtbf_per_gpu_s();
+        assert!(est < prior, "observed failure rate must tighten the MTBF: {est} vs {prior}");
+        assert_eq!(est, c.fleet.mtbf_per_gpu_estimate_s(), "ledger follows the fleet estimate");
+        // a table priced with the tightened estimate serves; the next
+        // observation re-prices the ledger and stales it again
+        c.precompute_plans();
+        assert!(c.lookup_is_fresh());
+        c.handle_at(CoordEvent::NodeLost { node: NodeId(12) }, 10800.0);
+        assert!(!c.lookup_is_fresh());
+        let est3 = c.cost_model().mtbf_per_gpu_s();
+        assert!(est3 < est);
+        // one physical failure samples the estimator exactly once: a
+        // duplicate report about the fenced node is not an observation, and
+        // neither is an in-place-recoverable SEV2
+        c.handle_at(CoordEvent::NodeLost { node: NodeId(12) }, 14000.0);
+        c.handle_at(
+            CoordEvent::ErrorReport {
+                node: NodeId(4),
+                task: TaskId(0),
+                kind: ErrorKind::CudaError,
+            },
+            14400.0,
+        );
+        assert_eq!(c.cost_model().mtbf_per_gpu_s(), est3);
+        // replays are still bit-identical: the timestamps are in the log
+        let mut twin = coord(32);
+        let steps = c
+            .log
+            .replay(&mut twin, |_| None)
+            .unwrap_or_else(|d| panic!("replay diverged: {d}"));
+        assert_eq!(steps, c.log.len());
+        assert_eq!(twin.cost_model().mtbf_per_gpu_s(), c.cost_model().mtbf_per_gpu_s());
+    }
+
+    #[test]
+    fn retained_surplus_spare_terms_ride_the_plan_breakdown() {
+        // A surplus spare retained by the pool economics: its value/cost
+        // terms are recorded on the replan's CostBreakdown, so the decision
+        // log explains the retention in the plan's own currency.
+        let keepers = UnicronConfig {
+            spare_hold_frac: 0.0, // free to hold -> retain
+            max_spares: 1,
+            ..Default::default()
+        };
+        let mut c = Coordinator::builder()
+            .config(keepers)
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .task(plan_task(0, 2, 16, 64))
+            .task(plan_task(1, 2, 16, 64))
+            .build();
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(9) });
+        assert!(matches!(a[0], Action::SpareRetained { node: NodeId(9) }));
+        let plan = a
+            .iter()
+            .find_map(|x| match x {
+                Action::ApplyPlan { plan, .. } => Some(plan),
+                _ => None,
+            })
+            .expect("retention must replan");
+        assert!(plan.breakdown.spare_value > 0.0, "priced retention: {:?}", plan.breakdown);
+        assert_eq!(plan.breakdown.spare_hold_cost, 0.0, "holding was free");
+        // the spare terms are informational: the objective still reconciles
+        assert_eq!(plan.breakdown.objective(), plan.objective);
+
+        // a below-peak readmission restores capacity: nothing priced
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        c.handle(CoordEvent::NodeLost { node: NodeId(3) });
+        let a = c.handle(CoordEvent::NodeRepaired { node: NodeId(3) });
+        let plan = a
+            .iter()
+            .find_map(|x| match x {
+                Action::ApplyPlan { plan, .. } => Some(plan),
+                _ => None,
+            })
+            .expect("readmission must replan");
+        assert_eq!(plan.breakdown.spare_value, 0.0);
+        assert_eq!(plan.breakdown.spare_hold_cost, 0.0);
     }
 
     #[test]

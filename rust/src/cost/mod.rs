@@ -1,0 +1,355 @@
+//! The cost ledger (paper §5 + DESIGN.md §9): one typed [`CostModel`] that
+//! every cost-aware decision in the system prices against.
+//!
+//! Before this module the cost math was scattered and lossy: the planner's
+//! reward took two bare `f64` scalars, every task paid the same flat global
+//! transition cost no matter *how* it transitions, the per-strategy
+//! migration times of [`crate::transition::migration_time_s`] (§6.3's
+//! nearest principle) never reached the planner, and the spare pool priced
+//! nodes with an ad-hoc formula inlined in the coordinator. The ledger
+//! unifies all of it:
+//!
+//! * [`TransitionProfile`] — per-task, per-strategy transition pricing
+//!   derived from the §6.3 migration-time model: a planned resize pulls
+//!   state from a healthy DP replica, a faulted transition reloads the
+//!   GEMINI in-memory checkpoint, and the cold fallback reads the remote
+//!   persistent checkpoint. Bigger models pay more to move; the planner
+//!   finally sees that.
+//! * [`CostModel`] — the shared currency: the opportunity horizon
+//!   `D_running(n) = MTBF_gpu / n` (Eq. 3), per-task transition penalties
+//!   (`F(t, x) · d_transition(t)`), and the spare-pool economics
+//!   ([`crate::fleet::SparePool`]) all priced with the *same* effective
+//!   per-GPU MTBF. The MTBF starts at the `UnicronConfig` prior and is
+//!   tightened by the fleet's EWMA estimate as real detection timestamps
+//!   accumulate ([`crate::fleet::FleetModel::observe_cluster_failure`]).
+//! * [`CostBreakdown`] — the typed explanation carried by every committed
+//!   [`crate::planner::Plan`] (wire v3): running reward, transition
+//!   penalty, the horizon and MTBF behind them, and the spare-pool terms
+//!   when the plan resolves a retention. The invariant
+//!   `objective = running_reward − transition_penalty` is pinned by
+//!   `rust/tests/proto_roundtrip.rs`, so a replayed decision log explains
+//!   each decision term-by-term in the currency it optimized.
+//!
+//! # Determinism
+//!
+//! A `CostModel` is a pure value: the same `(config, MTBF estimate)` prices
+//! every quantity identically. The MTBF estimate itself evolves only from
+//! the event/timestamp stream recorded in the v3
+//! [`crate::proto::DecisionLog`], so replays reprice decisions
+//! bit-identically.
+
+use crate::config::{ClusterSpec, ModelSpec, UnicronConfig};
+use crate::fleet::{SpareDecision, SparePool};
+use crate::transition::{migration_time_s, StateSource};
+
+/// Bytes of migratable training state per parameter: fp16 weights (2) +
+/// fp32 master weights (4) + fp32 Adam moments (8) + gradient slack (2).
+const STATE_BYTES_PER_PARAM: f64 = 16.0;
+
+/// Per-task transition pricing, seconds, one entry per §6.3 migration
+/// strategy (nearest first). Derived once per task from its model size and
+/// the cluster's interconnect/storage bandwidths, so the planner prices a
+/// 13B task's reshuffle higher than a 1.3B task's.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransitionProfile {
+    /// Planned resize: state pulled from a healthy DP replica (fastest).
+    pub replica_s: f64,
+    /// Faulted transition: the nearest replica died with the node; state
+    /// reloads from a GEMINI-style in-memory checkpoint on a peer.
+    pub inmem_s: f64,
+    /// Cold fallback: remote persistent checkpoint (worst case; priced for
+    /// observability, the planner's fault path uses `inmem_s`).
+    pub remote_s: f64,
+}
+
+impl TransitionProfile {
+    /// Price the three §6.3 strategies for `state_bytes` of training state
+    /// on `cluster`.
+    pub fn from_state_bytes(state_bytes: u64, cluster: &ClusterSpec) -> TransitionProfile {
+        TransitionProfile {
+            replica_s: migration_time_s(StateSource::DpReplica, state_bytes, cluster, 1),
+            inmem_s: migration_time_s(StateSource::InMemoryCheckpoint, state_bytes, cluster, 1),
+            remote_s: migration_time_s(StateSource::RemoteCheckpoint, state_bytes, cluster, 1),
+        }
+    }
+
+    /// Profile for a resolved model: state size from its parameter count.
+    pub fn from_model(model: &ModelSpec, cluster: &ClusterSpec) -> TransitionProfile {
+        TransitionProfile::from_state_bytes(
+            (model.n_params * STATE_BYTES_PER_PARAM) as u64,
+            cluster,
+        )
+    }
+
+    /// Uniform profile: every strategy costs `d_s` seconds (synthetic tasks
+    /// and tests that want the pre-ledger flat pricing).
+    pub fn flat(d_s: f64) -> TransitionProfile {
+        TransitionProfile { replica_s: d_s, inmem_s: d_s, remote_s: d_s }
+    }
+
+    /// Migration seconds for the strategy a transition actually uses:
+    /// faulted tasks lost their nearest replica and pay the in-memory
+    /// checkpoint path, planned resizes pull from a healthy replica.
+    pub fn migration_s(&self, faulted: bool) -> f64 {
+        if faulted {
+            self.inmem_s
+        } else {
+            self.replica_s
+        }
+    }
+}
+
+/// The spare-pool terms behind one retain/release verdict, in the planner's
+/// WAF currency (FLOP·s over the insured window).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpareTerms {
+    /// Expected shortfall the next spare covers: `P(X ≥ held+1) · F_node · W`.
+    pub value: f64,
+    /// What holding the spare costs: `hold_frac · F_node · W`.
+    pub hold_cost: f64,
+    /// Expected node-failure count in the insured window (Poisson rate).
+    pub lambda: f64,
+}
+
+/// The one cost ledger. Built from [`UnicronConfig`]; the effective per-GPU
+/// MTBF tightens as the fleet observes real failure timestamps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Fixed orchestration overhead of any transition (detach, rendezvous,
+    /// process warm-up), seconds — the part that does not scale with state.
+    transition_base_s: f64,
+    /// The configured prior per-GPU MTBF.
+    prior_mtbf_per_gpu_s: f64,
+    /// Effective per-GPU MTBF — starts at the prior, updated from the
+    /// fleet's EWMA estimate.
+    mtbf_per_gpu_s: f64,
+    /// Hot-spare economics, priced with the same MTBF.
+    pool: SparePool,
+}
+
+impl CostModel {
+    pub fn from_config(cfg: &UnicronConfig) -> CostModel {
+        CostModel {
+            transition_base_s: cfg.transition_base_s,
+            prior_mtbf_per_gpu_s: cfg.mtbf_per_gpu_s,
+            mtbf_per_gpu_s: cfg.mtbf_per_gpu_s,
+            pool: SparePool::from_config(cfg),
+        }
+    }
+
+    /// The configured prior per-GPU MTBF (seconds).
+    pub fn prior_mtbf_per_gpu_s(&self) -> f64 {
+        self.prior_mtbf_per_gpu_s
+    }
+
+    /// The effective per-GPU MTBF every term is priced with (seconds).
+    pub fn mtbf_per_gpu_s(&self) -> f64 {
+        self.mtbf_per_gpu_s
+    }
+
+    /// Fixed per-transition overhead (seconds).
+    pub fn transition_base_s(&self) -> f64 {
+        self.transition_base_s
+    }
+
+    /// Install a tightened MTBF estimate (the fleet's EWMA). Non-positive
+    /// estimates are ignored. Returns true when the effective MTBF changed —
+    /// the caller must treat precomputed plans as stale then.
+    pub fn set_mtbf_per_gpu_s(&mut self, est_s: f64) -> bool {
+        if est_s.is_nan() || est_s <= 0.0 || est_s == self.mtbf_per_gpu_s {
+            return false;
+        }
+        self.mtbf_per_gpu_s = est_s;
+        true
+    }
+
+    /// Opportunity horizon `D_running(n)`: the expected time to the next
+    /// failure somewhere in an `n`-worker pool (Eq. 3). Larger pools fail
+    /// sooner; a tighter MTBF estimate shortens every plan's horizon.
+    pub fn horizon_s(&self, n_workers: u32) -> f64 {
+        if n_workers == 0 {
+            return 0.0;
+        }
+        self.mtbf_per_gpu_s / n_workers as f64
+    }
+
+    /// Seconds one transition of a task with `profile` takes: the fixed
+    /// orchestration overhead plus the §6.3 migration time of the strategy
+    /// the transition uses (`faulted` selects it).
+    pub fn transition_s(&self, profile: &TransitionProfile, faulted: bool) -> f64 {
+        self.transition_base_s + profile.migration_s(faulted)
+    }
+
+    /// WAF one node carries: the proportional share of the cluster's
+    /// current WAF attributed to `gpus_per_node` of `pool_gpus` workers.
+    pub fn marginal_node_waf(&self, total_waf: f64, pool_gpus: u32, gpus_per_node: u32) -> f64 {
+        total_waf * gpus_per_node as f64 / pool_gpus.max(1) as f64
+    }
+
+    /// The spare-pool terms for holding the `(held+1)`-th spare over a pool
+    /// of `pool_gpus` workers whose marginal node earns `node_waf`.
+    pub fn spare_terms(&self, held: u32, pool_gpus: u32, node_waf: f64) -> SpareTerms {
+        let lambda = self.pool.expected_failures(pool_gpus, self.mtbf_per_gpu_s);
+        SpareTerms {
+            value: self.pool.spare_value(held, lambda, node_waf),
+            hold_cost: self.pool.hold_cost(node_waf),
+            lambda,
+        }
+    }
+
+    /// Retain/release verdict for a surplus node, with the priced terms —
+    /// the same currency [`crate::planner::solve`] optimizes, so a spare
+    /// decision and a plan objective are directly comparable. The verdict
+    /// is derived from the very terms returned (one Poisson rate, one
+    /// pricing), so the recorded explanation always matches the decision.
+    pub fn spare_decision(
+        &self,
+        held: u32,
+        pool_gpus: u32,
+        total_waf: f64,
+        gpus_per_node: u32,
+    ) -> (SpareDecision, SpareTerms) {
+        let node_waf = self.marginal_node_waf(total_waf, pool_gpus, gpus_per_node);
+        let terms = self.spare_terms(held, pool_gpus, node_waf);
+        let decision = self.pool.decide(held, terms.lambda, node_waf);
+        (decision, terms)
+    }
+}
+
+/// Typed explanation of one committed plan, in the ledger's currency.
+/// Carried by every [`crate::planner::Plan`] and serialized with it (wire
+/// v3), so a replayed [`crate::proto::DecisionLog`] explains each decision
+/// term-by-term.
+///
+/// Invariant: `objective() = running_reward − transition_penalty` equals
+/// the plan's DP objective to within 1e-9 relative error.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CostBreakdown {
+    /// Σ F(tᵢ, xᵢ') · D_running — weighted useful work the plan earns over
+    /// the opportunity horizon (FLOP·s).
+    pub running_reward: f64,
+    /// Σ 1_transition(tᵢ) · F(tᵢ, xᵢ) · d_transition(tᵢ) — work forfeited
+    /// while transitioning tasks move state (FLOP·s).
+    pub transition_penalty: f64,
+    /// The opportunity horizon `D_running(n)` the plan was priced with (s).
+    pub horizon_s: f64,
+    /// Effective per-GPU MTBF behind that horizon (s) — the prior, or the
+    /// fleet's tightened EWMA estimate.
+    pub mtbf_per_gpu_s: f64,
+    /// Spare-pool value term when this plan resolves a spare retention
+    /// (`P(shortfall) · F_node · W`, FLOP·s); zero otherwise.
+    pub spare_value: f64,
+    /// Matching holding cost (`hold_frac · F_node · W`, FLOP·s); zero
+    /// unless the plan resolves a spare retention.
+    pub spare_hold_cost: f64,
+}
+
+impl CostBreakdown {
+    /// The objective the terms reconcile to: reward minus penalty.
+    pub fn objective(&self) -> f64 {
+        self.running_reward - self.transition_penalty
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> UnicronConfig {
+        UnicronConfig::default()
+    }
+
+    #[test]
+    fn horizon_shrinks_with_pool_size_and_tighter_mtbf() {
+        let mut cost = CostModel::from_config(&cfg());
+        assert!(cost.horizon_s(128) < cost.horizon_s(64));
+        assert_eq!(cost.horizon_s(0), 0.0);
+        // 128 GPUs at the paper prior: failure gap slightly over a day (§2.2)
+        let days = cost.horizon_s(128) / 86400.0;
+        assert!((1.0..3.0).contains(&days), "{days} days");
+        // a tightened estimate shortens every horizon
+        let before = cost.horizon_s(128);
+        assert!(cost.set_mtbf_per_gpu_s(cost.mtbf_per_gpu_s() / 4.0));
+        assert!((cost.horizon_s(128) - before / 4.0).abs() < 1e-9 * before);
+        // no-ops report unchanged
+        let now = cost.mtbf_per_gpu_s();
+        assert!(!cost.set_mtbf_per_gpu_s(now));
+        assert!(!cost.set_mtbf_per_gpu_s(0.0));
+        assert!(!cost.set_mtbf_per_gpu_s(-1.0));
+        assert_eq!(cost.prior_mtbf_per_gpu_s(), cfg().mtbf_per_gpu_s);
+    }
+
+    #[test]
+    fn profiles_price_bigger_models_higher_and_strategies_by_distance() {
+        let cluster = ClusterSpec::default();
+        let small = ModelSpec::gpt3("gpt3-1.3b").unwrap();
+        let big = ModelSpec::gpt3("gpt3-13b").unwrap();
+        let ps = TransitionProfile::from_model(&small, &cluster);
+        let pb = TransitionProfile::from_model(&big, &cluster);
+        assert!(pb.replica_s > ps.replica_s, "13B must cost more to move than 1.3B");
+        // §6.3 nearest-principle ordering per model
+        for p in [&ps, &pb] {
+            assert!(p.replica_s < p.inmem_s && p.inmem_s < p.remote_s, "{p:?}");
+        }
+        // the faulted strategy is the in-memory checkpoint
+        assert_eq!(pb.migration_s(true), pb.inmem_s);
+        assert_eq!(pb.migration_s(false), pb.replica_s);
+        // flat profiles are uniform across strategies
+        let f = TransitionProfile::flat(60.0);
+        assert_eq!(f.migration_s(true), 60.0);
+        assert_eq!(f.migration_s(false), 60.0);
+    }
+
+    #[test]
+    fn transition_cost_adds_base_overhead_to_the_strategy_time() {
+        let cost = CostModel::from_config(&cfg());
+        let p = TransitionProfile::flat(5.0);
+        assert_eq!(cost.transition_s(&p, false), cfg().transition_base_s + 5.0);
+        let hetero = TransitionProfile { replica_s: 1.0, inmem_s: 3.0, remote_s: 9.0 };
+        assert_eq!(
+            cost.transition_s(&hetero, true) - cost.transition_s(&hetero, false),
+            2.0,
+            "a faulted transition pays the farther strategy"
+        );
+    }
+
+    #[test]
+    fn spare_decision_speaks_the_planner_currency() {
+        let cost = CostModel::from_config(&cfg());
+        let total_waf = 1e16;
+        let node_waf = cost.marginal_node_waf(total_waf, 128, 8);
+        assert!((node_waf - total_waf / 16.0).abs() < 1e-3);
+        // the decision's terms are exactly the pool's value/cost arithmetic
+        let (decision, terms) = cost.spare_decision(0, 128, total_waf, 8);
+        assert!(terms.lambda > 0.0);
+        assert_eq!(
+            decision == SpareDecision::Retain,
+            terms.value > terms.hold_cost,
+            "verdict must follow the priced terms: {terms:?}"
+        );
+        // an empty pool protects nothing
+        let (d, t) = cost.spare_decision(0, 0, 0.0, 8);
+        assert_eq!(d, SpareDecision::Release);
+        assert_eq!(t.value, 0.0);
+        // a tighter MTBF raises the expected shortfall, never lowers it
+        let mut tight = cost.clone();
+        tight.set_mtbf_per_gpu_s(cost.mtbf_per_gpu_s() / 100.0);
+        let t2 = tight.spare_terms(0, 128, node_waf);
+        assert!(t2.lambda > terms.lambda);
+        assert!(t2.value >= terms.value);
+    }
+
+    #[test]
+    fn breakdown_objective_is_reward_minus_penalty() {
+        let b = CostBreakdown {
+            running_reward: 10.0,
+            transition_penalty: 4.0,
+            horizon_s: 100.0,
+            mtbf_per_gpu_s: 1e6,
+            spare_value: 0.0,
+            spare_hold_cost: 0.0,
+        };
+        assert_eq!(b.objective(), 6.0);
+        assert_eq!(CostBreakdown::default().objective(), 0.0);
+    }
+}

@@ -27,10 +27,20 @@
 //! decays per **event** ([`FleetModel::tick`] advances the clock once per
 //! [`crate::proto::CoordEvent`]), so replaying a recorded
 //! [`crate::proto::DecisionLog`] through a fresh coordinator reproduces
-//! every quarantine and spare decision bit-identically. The EWMA MTBF
-//! estimate *is* time-based — drivers that have a clock feed it via
-//! [`FleetModel::observe_failure_time`] — but it is observability only;
-//! no decision reads it.
+//! every quarantine and spare decision bit-identically.
+//!
+//! Two EWMA MTBF estimates are time-fed by drivers that have a clock:
+//!
+//! * the **per-node** inter-failure-time estimate
+//!   ([`FleetModel::observe_failure_time`]) — observability only, the
+//!   fleet-health report's column;
+//! * the **cluster-wide per-GPU** estimate
+//!   ([`FleetModel::observe_cluster_failure`]) — *decision-relevant*: it
+//!   tightens the cost ledger's opportunity horizon
+//!   ([`crate::cost::CostModel`]) as real failure data accumulates.
+//!   Determinism is preserved because every decision-relevant timestamp
+//!   rides the v3 [`crate::proto::DecisionLog`] (`LogEntry::at_s`), so a
+//!   replay feeds the estimator the exact recorded clock.
 //!
 //! # Lemon scoring
 //!
@@ -132,6 +142,14 @@ pub struct FleetModel {
     nodes_per_domain: u32,
     decay: f64,
     threshold: f64,
+    /// Cluster-wide EWMA per-GPU MTBF estimate, seconds. Starts at the
+    /// config prior and is updated toward `gap × pool_gpus` on every
+    /// observed cluster failure (see [`FleetModel::observe_cluster_failure`]).
+    mtbf_per_gpu_est_s: f64,
+    /// Timestamp of the last observed cluster failure.
+    last_cluster_failure_at_s: Option<f64>,
+    /// How many inter-failure gaps the estimate has absorbed.
+    mtbf_observations: u64,
 }
 
 impl FleetModel {
@@ -143,6 +161,9 @@ impl FleetModel {
             nodes_per_domain: cfg.nodes_per_domain.max(1),
             decay: cfg.lemon_decay,
             threshold: cfg.lemon_threshold,
+            mtbf_per_gpu_est_s: cfg.mtbf_per_gpu_s,
+            last_cluster_failure_at_s: None,
+            mtbf_observations: 0,
         }
     }
 
@@ -200,6 +221,45 @@ impl FleetModel {
             });
         }
         h.last_failure_at_s = Some(at_s);
+    }
+
+    /// Feed the wall-clock time of *any* failure in a pool of `pool_gpus`
+    /// workers. Updates the cluster-wide EWMA per-GPU MTBF estimate —
+    /// `gap × pool_gpus` is one sample of the per-GPU MTBF (a pool of `n`
+    /// GPUs failing every `g` seconds implies each GPU fails every `n·g`).
+    ///
+    /// The first observation only anchors the clock; zero or negative gaps
+    /// (same-instant burst members, out-of-order feeds) are skipped — a
+    /// correlated burst is one failure event for MTBF purposes, not `k`
+    /// independent samples. Returns true when the estimate changed.
+    pub fn observe_cluster_failure(&mut self, at_s: f64, pool_gpus: u32) -> bool {
+        let prev = self.last_cluster_failure_at_s;
+        self.last_cluster_failure_at_s = Some(match prev {
+            Some(p) if at_s < p => p,
+            _ => at_s,
+        });
+        let Some(prev) = prev else { return false };
+        let gap = at_s - prev;
+        if gap <= 0.0 {
+            return false;
+        }
+        let sample = gap * pool_gpus.max(1) as f64;
+        let before = self.mtbf_per_gpu_est_s;
+        self.mtbf_per_gpu_est_s = (1.0 - EWMA_ALPHA) * before + EWMA_ALPHA * sample;
+        self.mtbf_observations += 1;
+        self.mtbf_per_gpu_est_s != before
+    }
+
+    /// Cluster-wide per-GPU MTBF estimate, seconds: the config prior until
+    /// failures are observed, then the EWMA-tightened value. This is the
+    /// MTBF the cost ledger prices horizons and spare economics with.
+    pub fn mtbf_per_gpu_estimate_s(&self) -> f64 {
+        self.mtbf_per_gpu_est_s
+    }
+
+    /// Number of inter-failure gaps the cluster estimate has absorbed.
+    pub fn mtbf_observations(&self) -> u64 {
+        self.mtbf_observations
     }
 
     pub fn note_join(&mut self, node: NodeId) {
@@ -322,7 +382,7 @@ pub enum SpareDecision {
 /// Retain while value exceeds cost, never beyond `max_spares`. `F_node · W`
 /// appears on both sides, so the break-even condition reduces to
 /// `P(shortfall) > hold_frac` — the knob is directly a probability.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SparePool {
     /// Holding cost of one spare as a fraction of the WAF a node earns.
     pub hold_frac: f64,
@@ -518,6 +578,42 @@ mod tests {
         f.note_failure(NodeId(9), Severity::Sev2);
         f.observe_failure_time(NodeId(9), 5.0);
         assert!(f.health(NodeId(9)).unwrap().mtbf_estimate_s().is_none());
+    }
+
+    #[test]
+    fn cluster_mtbf_estimate_starts_at_prior_and_tightens() {
+        let mut f = fleet();
+        let prior = cfg().mtbf_per_gpu_s;
+        assert_eq!(f.mtbf_per_gpu_estimate_s(), prior);
+        assert_eq!(f.mtbf_observations(), 0);
+        // first observation only anchors the clock
+        assert!(!f.observe_cluster_failure(1000.0, 128));
+        assert_eq!(f.mtbf_per_gpu_estimate_s(), prior);
+        // failures every hour in a 128-GPU pool: samples of 3600·128 ≈ 4.6e5,
+        // far below the 1.9e7 prior — the estimate must tighten toward them
+        let mut t = 1000.0;
+        for _ in 0..40 {
+            t += 3600.0;
+            assert!(f.observe_cluster_failure(t, 128));
+        }
+        let est = f.mtbf_per_gpu_estimate_s();
+        assert!(est < prior / 10.0, "estimate must tighten: {est} vs prior {prior}");
+        assert!(est > 3600.0 * 128.0 * 0.99, "never below the observed rate: {est}");
+        assert_eq!(f.mtbf_observations(), 40);
+    }
+
+    #[test]
+    fn cluster_mtbf_skips_zero_gaps_and_out_of_order_feeds() {
+        let mut f = fleet();
+        f.observe_cluster_failure(100.0, 64);
+        // a same-instant burst member is not an independent MTBF sample
+        assert!(!f.observe_cluster_failure(100.0, 64));
+        // out-of-order (a driver replaying stale events) is skipped too
+        assert!(!f.observe_cluster_failure(50.0, 64));
+        assert_eq!(f.mtbf_observations(), 0);
+        // the clock anchor did not move backwards
+        assert!(f.observe_cluster_failure(160.0, 64), "60 s gap must count");
+        assert_eq!(f.mtbf_observations(), 1);
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //!   queue both the simulator and the live coordinator loop run on
 //! * the recovery protocol: [`proto`] — typed ids, serializable
 //!   `CoordEvent`/`Action`, and the record/replay `DecisionLog`
+//! * the cost ledger: [`cost`] — the typed `CostModel` every cost-aware
+//!   decision (plan reward, transition pricing, spare economics) is priced
+//!   against (DESIGN.md §9)
 //! * distributed plumbing: [`kvstore`], [`rpc`], [`membership`], [`checkpoint`]
 //! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
 //!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
@@ -30,6 +33,7 @@ pub mod checkpoint;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod cost;
 pub mod data;
 pub mod detect;
 pub mod engine;

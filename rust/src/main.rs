@@ -230,12 +230,12 @@ fn cmd_plan(argv: &[String]) -> Result<(), String> {
     let case = args.u64("case").map_err(|e| e.to_string())? as u32;
     let gpus = args.u64("gpus").map_err(|e| e.to_string())? as u32;
     let cluster = ClusterSpec::default();
-    let cfg = UnicronConfig::default();
+    let cost = unicron::cost::CostModel::from_config(&UnicronConfig::default());
     let tasks: Vec<unicron::planner::PlanTask> = table3_case(case)
         .iter()
         .map(|spec| unicron::planner::PlanTask::from_spec(spec, &cluster, gpus))
         .collect();
-    let plan = unicron::planner::solve(&tasks, gpus, &cfg);
+    let plan = unicron::planner::solve(&tasks, gpus, &cost);
     for (t, &x) in tasks.iter().zip(&plan.assignment) {
         println!(
             "task {} ({:<10} w={:.1}): {:>3} workers  F = {}FLOP/s",

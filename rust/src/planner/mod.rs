@@ -5,8 +5,18 @@
 //! `S(i,j) = max_k S(i-1, j-k) + G(t_i, k)` (Eq. 5) with traceback, and the
 //! precomputed lookup table that gives O(1) plan retrieval when a failure
 //! actually happens (§5.2).
+//!
+//! Every cost in this module is priced by the one ledger
+//! ([`crate::cost::CostModel`], DESIGN.md §9): the opportunity horizon
+//! `D_running(n)` comes from the ledger's effective MTBF, and each task pays
+//! its *own* transition price — a [`crate::cost::TransitionProfile`] derived
+//! from the §6.3 migration-time model, so moving a 13B task costs more than
+//! moving a 1.3B task, and a faulted task (whose nearest replica died) pays
+//! the in-memory-checkpoint path. Every solved [`Plan`] carries a
+//! [`CostBreakdown`] reconciling its objective term-by-term.
 
-use crate::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
+use crate::config::{ClusterSpec, ModelSpec, TaskSpec};
+use crate::cost::{CostBreakdown, CostModel, TransitionProfile};
 use crate::perfmodel::throughput_table;
 use crate::proto::WorkerCount;
 
@@ -17,23 +27,28 @@ pub struct PlanTask {
     /// Calibrated `T(t, x)` table, FLOP/s, indexed by worker count
     /// (from [`crate::perfmodel::throughput_table`]).
     pub throughput: Vec<f64>,
+    /// Per-strategy transition pricing for this task (§6.3 via the ledger).
+    pub profile: TransitionProfile,
     /// Workers currently assigned (before reconfiguration).
     pub current: WorkerCount,
     /// True if one of this task's workers is the faulting one — forces the
-    /// transition penalty even when the worker count stays the same (Eq. 4).
+    /// transition penalty even when the worker count stays the same (Eq. 4),
+    /// and selects the faulted migration strategy in the profile.
     pub fault: bool,
 }
 
 impl PlanTask {
-    /// Build the planner input for `spec` on `cluster`: resolve the model
-    /// and calibrate its `T(t, x)` table up to `max_workers`. The task
-    /// starts unassigned and fault-free. Panics on an unknown model name
+    /// Build the planner input for `spec` on `cluster`: resolve the model,
+    /// calibrate its `T(t, x)` table up to `max_workers`, and price its
+    /// transition profile from the model's state size. The task starts
+    /// unassigned and fault-free. Panics on an unknown model name
     /// (programmer error — specs come from the typed model zoo).
     pub fn from_spec(spec: &TaskSpec, cluster: &ClusterSpec, max_workers: u32) -> PlanTask {
         let model = ModelSpec::gpt3(&spec.model)
             .unwrap_or_else(|| panic!("unknown model {}", spec.model));
         PlanTask {
             throughput: throughput_table(&model, cluster, max_workers),
+            profile: TransitionProfile::from_model(&model, cluster),
             spec: spec.clone(),
             current: WorkerCount(0),
             fault: false,
@@ -63,49 +78,102 @@ impl PlanTask {
     }
 }
 
-/// The produced plan: a worker count per task plus diagnostic totals.
+/// The produced plan: a worker count per task plus diagnostic totals and
+/// the typed cost explanation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Plan {
     pub assignment: Vec<u32>,
     /// Σ G(tᵢ, xᵢ') — the DP objective (FLOP·s units: FLOP/s × seconds).
+    /// Always equals `breakdown.objective()` exactly (same summation).
     pub objective: f64,
     /// Σ F(tᵢ, xᵢ') — cluster WAF after the plan is applied (FLOP/s).
     pub total_waf: f64,
     pub workers_used: u32,
+    /// Term-by-term explanation of `objective` in the ledger's currency.
+    pub breakdown: CostBreakdown,
 }
 
-/// Reward `G(tᵢ, xᵢ → xᵢ')` — Eq. 3.
-pub fn reward(task: &PlanTask, x_new: u32, d_running: f64, d_transition: f64) -> f64 {
-    let gain = task.waf(x_new) * d_running;
-    let penalty = if task.transitions_to(x_new) { task.current_waf() * d_transition } else { 0.0 };
-    gain - penalty
+/// One reward term `G(t, x')` given the task's hoisted penalty — THE
+/// pricing expression. Every consumer (the DP inner loop, the brute-force
+/// reference, the public [`reward`], and [`CostBreakdown`] via
+/// `breakdown_for`'s algebraically-identical split) prices through this one
+/// formula, so the optimized value and the reported explanation can never
+/// drift apart.
+#[inline]
+fn term(t: &PlanTask, x: u32, horizon: f64, penalty: f64) -> f64 {
+    t.waf(x) * horizon - if t.transitions_to(x) { penalty } else { 0.0 }
+}
+
+/// Reward `G(tᵢ, xᵢ → xᵢ')` — Eq. 3, priced by the ledger: the gain runs
+/// over `cost.horizon_s(n_workers)` and the penalty is this task's own
+/// transition price (`F(t, x) · d_transition(t)`).
+pub fn reward(task: &PlanTask, x_new: u32, n_workers: u32, cost: &CostModel) -> f64 {
+    term(
+        task,
+        x_new,
+        cost.horizon_s(n_workers),
+        task.current_waf() * cost.transition_s(&task.profile, task.fault),
+    )
+}
+
+/// Per-task terms hoisted out of the DP inner loop: the transition penalty
+/// `F(t, x)·d_transition(t)` does not depend on the candidate `x'`.
+fn hoisted_penalties(tasks: &[PlanTask], cost: &CostModel) -> Vec<f64> {
+    tasks.iter().map(|t| t.current_waf() * cost.transition_s(&t.profile, t.fault)).collect()
+}
+
+/// Build the [`CostBreakdown`] (and exact objective) for a final assignment.
+fn breakdown_for(
+    tasks: &[PlanTask],
+    assignment: &[u32],
+    penalties: &[f64],
+    horizon: f64,
+    cost: &CostModel,
+) -> CostBreakdown {
+    let mut running = 0.0;
+    let mut transition = 0.0;
+    for ((t, &x), &pen) in tasks.iter().zip(assignment).zip(penalties) {
+        running += t.waf(x) * horizon;
+        if t.transitions_to(x) {
+            transition += pen;
+        }
+    }
+    CostBreakdown {
+        running_reward: running,
+        transition_penalty: transition,
+        horizon_s: horizon,
+        mtbf_per_gpu_s: cost.mtbf_per_gpu_s(),
+        spare_value: 0.0,
+        spare_hold_cost: 0.0,
+    }
 }
 
 /// Solve Eq. 3 for `n_workers` available workers via the Eq. 5 DP.
 ///
 /// Complexity O(m·n²) (m tasks, n workers), as analyzed in §5.2.
-pub fn solve(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> Plan {
+pub fn solve(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan {
     let n = n_workers as usize;
     let m = tasks.len();
-    let d_running = cfg.d_running(n_workers);
-    let d_transition = cfg.d_transition_s;
+    let horizon = cost.horizon_s(n_workers);
+    let penalties = hoisted_penalties(tasks, cost);
 
     // S[i][j]: best value of first i tasks with j workers; choice[i][j] = k.
     let mut s = vec![vec![0.0f64; n + 1]; m + 1];
     let mut choice = vec![vec![0u32; n + 1]; m + 1];
     for i in 1..=m {
         let t = &tasks[i - 1];
+        let pen = penalties[i - 1];
         // G(t, 0) may be negative (losing a running task still pays its
         // penalty) but assigning zero is always *allowed*.
         for j in 0..=n {
             let mut best = f64::NEG_INFINITY;
             let mut best_k = 0;
             for k in 0..=j {
-                let g = reward(t, k as u32, d_running, d_transition);
-                let v = s[i - 1][j - k] + g;
+                let x = k as u32;
+                let v = s[i - 1][j - k] + term(t, x, horizon, pen);
                 if v > best {
                     best = v;
-                    best_k = k as u32;
+                    best_k = x;
                 }
             }
             s[i][j] = best;
@@ -124,13 +192,15 @@ pub fn solve(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> Plan {
 
     let total_waf = tasks.iter().zip(&assignment).map(|(t, &x)| t.waf(x)).sum();
     let workers_used = assignment.iter().sum();
-    Plan { assignment, objective: s[m][n], total_waf, workers_used }
+    let breakdown = breakdown_for(tasks, &assignment, &penalties, horizon, cost);
+    let objective = breakdown.objective();
+    Plan { assignment, objective, total_waf, workers_used, breakdown }
 }
 
-/// Brute-force reference solver (exponential; tests only — DESIGN.md §9).
-pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> Plan {
-    let d_running = cfg.d_running(n_workers);
-    let d_transition = cfg.d_transition_s;
+/// Brute-force reference solver (exponential; tests only — DESIGN.md §10).
+pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan {
+    let horizon = cost.horizon_s(n_workers);
+    let penalties = hoisted_penalties(tasks, cost);
     let m = tasks.len();
     let mut best_assign = vec![0u32; m];
     let mut best_val = f64::NEG_INFINITY;
@@ -140,8 +210,8 @@ pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> P
         i: usize,
         left: u32,
         tasks: &[PlanTask],
-        d_running: f64,
-        d_transition: f64,
+        horizon: f64,
+        penalties: &[f64],
         assign: &mut Vec<u32>,
         best_val: &mut f64,
         best_assign: &mut Vec<u32>,
@@ -150,7 +220,8 @@ pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> P
             let v: f64 = tasks
                 .iter()
                 .zip(assign.iter())
-                .map(|(t, &x)| reward(t, x, d_running, d_transition))
+                .zip(penalties.iter())
+                .map(|((t, &x), &pen)| term(t, x, horizon, pen))
                 .sum();
             if v > *best_val {
                 *best_val = v;
@@ -160,15 +231,17 @@ pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cfg: &UnicronConfig) -> P
         }
         for k in 0..=left {
             assign[i] = k;
-            rec(i + 1, left - k, tasks, d_running, d_transition, assign, best_val, best_assign);
+            rec(i + 1, left - k, tasks, horizon, penalties, assign, best_val, best_assign);
         }
         assign[i] = 0;
     }
-    rec(0, n_workers, tasks, d_running, d_transition, &mut assign, &mut best_val, &mut best_assign);
+    rec(0, n_workers, tasks, horizon, &penalties, &mut assign, &mut best_val, &mut best_assign);
 
     let total_waf = tasks.iter().zip(&best_assign).map(|(t, &x)| t.waf(x)).sum();
     let workers_used = best_assign.iter().sum();
-    Plan { assignment: best_assign, objective: best_val, total_waf, workers_used }
+    let breakdown = breakdown_for(tasks, &best_assign, &penalties, horizon, cost);
+    let objective = breakdown.objective();
+    Plan { assignment: best_assign, objective, total_waf, workers_used, breakdown }
 }
 
 /// Precomputed lookup table (§5.2): plans for every cluster size the next
@@ -185,8 +258,8 @@ impl PlanLookup {
     /// The paper precomputes "potential failure scenarios of any task or
     /// joining node"; sizes n'−k (failures) and n'+k (joins) cover those —
     /// we simply cover the full range.
-    pub fn precompute(tasks: &[PlanTask], max_workers: u32, cfg: &UnicronConfig) -> PlanLookup {
-        let plans = (0..=max_workers).map(|n| solve(tasks, n, cfg)).collect();
+    pub fn precompute(tasks: &[PlanTask], max_workers: u32, cost: &CostModel) -> PlanLookup {
+        let plans = (0..=max_workers).map(|n| solve(tasks, n, cost)).collect();
         PlanLookup { plans }
     }
 
@@ -220,11 +293,12 @@ impl PlanLookup {
 ///   exercise the same table path production does.
 ///
 /// Either table is valid for exactly one snapshot of
-/// `(current assignments, fault-free task set)` — any commit of new
-/// assignments invalidates it, after which the owner recomputes (the
-/// paper's "proactive plan generation"). Entries are produced by the same
-/// [`solve`] a cold replan would run, so a table hit and a live solve are
-/// bit-identical — `rust/tests/sim_unification.rs` pins this.
+/// `(current assignments, fault-free task set, cost model)` — any commit of
+/// new assignments *or* a tightened MTBF estimate invalidates it, after
+/// which the owner recomputes (the paper's "proactive plan generation").
+/// Entries are produced by the same [`solve`] a cold replan would run, so a
+/// table hit and a live solve are bit-identical —
+/// `rust/tests/sim_unification.rs` pins this.
 #[derive(Debug, Clone)]
 pub struct ScenarioLookup {
     grid: Grid,
@@ -248,7 +322,7 @@ impl ScenarioLookup {
     ///
     /// O((m+1)·n·m·n²) total — expensive, which is exactly why it runs off
     /// the failure path (between events), not on it.
-    pub fn precompute(tasks: &[PlanTask], max_workers: u32, cfg: &UnicronConfig) -> ScenarioLookup {
+    pub fn precompute(tasks: &[PlanTask], max_workers: u32, cost: &CostModel) -> ScenarioLookup {
         let mut scenario: Vec<PlanTask> = tasks.to_vec();
         for t in &mut scenario {
             t.fault = false;
@@ -258,7 +332,7 @@ impl ScenarioLookup {
             if f > 0 {
                 scenario[f - 1].fault = true;
             }
-            plans.push((0..=max_workers).map(|n| solve(&scenario, n, cfg)).collect());
+            plans.push((0..=max_workers).map(|n| solve(&scenario, n, cost)).collect());
             if f > 0 {
                 scenario[f - 1].fault = false;
             }
@@ -277,7 +351,7 @@ impl ScenarioLookup {
         tasks: &[PlanTask],
         available: u32,
         gpn: u32,
-        cfg: &UnicronConfig,
+        cost: &CostModel,
     ) -> ScenarioLookup {
         let mut scenario: Vec<PlanTask> = tasks.to_vec();
         for t in &mut scenario {
@@ -287,11 +361,11 @@ impl ScenarioLookup {
         let hi = available + gpn;
         let mut plans = std::collections::BTreeMap::new();
         for w in [lo, available, hi] {
-            plans.entry((0usize, w)).or_insert_with(|| solve(&scenario, w, cfg));
+            plans.entry((0usize, w)).or_insert_with(|| solve(&scenario, w, cost));
         }
         for f in 1..=tasks.len() {
             scenario[f - 1].fault = true;
-            plans.insert((f, lo), solve(&scenario, lo, cfg));
+            plans.insert((f, lo), solve(&scenario, lo, cost));
             scenario[f - 1].fault = false;
         }
         ScenarioLookup { grid: Grid::Sparse { n_tasks: tasks.len(), max_workers: hi, plans } }
@@ -417,9 +491,11 @@ pub mod baselines {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::TaskSpec;
+    use crate::config::{TaskSpec, UnicronConfig};
 
     /// Synthetic concave-ish throughput: T(x) = s·x^0.9 above min, 0 below.
+    /// The flat 5 s profile plus the 55 s base overhead reproduces the
+    /// pre-ledger 60 s flat transition cost.
     fn task(id: u32, weight: f64, min: u32, scale: f64, current: u32, fault: bool, n: u32) -> PlanTask {
         let throughput = (0..=n)
             .map(|x| if x >= min { scale * (x as f64).powf(0.9) } else { 0.0 })
@@ -427,13 +503,18 @@ mod tests {
         PlanTask {
             spec: TaskSpec::new(id, "synthetic", weight, min),
             throughput,
+            profile: TransitionProfile::flat(5.0),
             current: WorkerCount(current),
             fault,
         }
     }
 
-    fn cfg() -> UnicronConfig {
-        UnicronConfig { d_transition_s: 60.0, mtbf_per_gpu_s: 1e6, ..Default::default() }
+    fn cost() -> CostModel {
+        CostModel::from_config(&UnicronConfig {
+            transition_base_s: 55.0,
+            mtbf_per_gpu_s: 1e6,
+            ..Default::default()
+        })
     }
 
     #[test]
@@ -452,8 +533,8 @@ mod tests {
             task(2, 0.5, 1, 20.0, 4, false, 12),
         ];
         for n in [0u32, 3, 7, 12] {
-            let dp = solve(&tasks, n, &cfg());
-            let bf = solve_brute(&tasks, n, &cfg());
+            let dp = solve(&tasks, n, &cost());
+            let bf = solve_brute(&tasks, n, &cost());
             assert!((dp.objective - bf.objective).abs() < 1e-6 * bf.objective.abs().max(1.0),
                     "n={n}: dp {} vs brute {}", dp.objective, bf.objective);
         }
@@ -462,7 +543,7 @@ mod tests {
     #[test]
     fn constraint_respected() {
         let tasks = vec![task(0, 1.0, 1, 5.0, 0, false, 32), task(1, 1.0, 1, 5.0, 0, false, 32)];
-        let plan = solve(&tasks, 9, &cfg());
+        let plan = solve(&tasks, 9, &cost());
         assert!(plan.workers_used <= 9);
         assert_eq!(plan.assignment.iter().sum::<u32>(), plan.workers_used);
     }
@@ -474,21 +555,82 @@ mod tests {
         let n = 16u32;
         let healthy = task(0, 1.0, 1, 10.0, 8, false, n);
         let greedy = task(1, 1.0, 1, 10.1, 8, false, n);
-        let mut c = cfg();
-        c.d_transition_s = 1e5; // huge transition cost
-        let plan = solve(&[healthy, greedy], n, &c);
+        let pricey = CostModel::from_config(&UnicronConfig {
+            transition_base_s: 1e5, // huge transition cost
+            mtbf_per_gpu_s: 1e6,
+            ..Default::default()
+        });
+        let plan = solve(&[healthy, greedy], n, &pricey);
         assert_eq!(plan.assignment, vec![8, 8], "penalty should keep the status quo");
+    }
+
+    #[test]
+    fn per_task_profiles_steer_which_task_moves() {
+        // Two identical tasks, one cheap to migrate and one expensive; when
+        // the pool comes up one worker short, the solver shrinks the cheap
+        // one — exactly the per-task pricing the flat global cost lost.
+        let n = 16u32;
+        let mut cheap = task(0, 1.0, 1, 10.0, 8, false, n);
+        cheap.profile = TransitionProfile::flat(0.0);
+        let mut dear = task(1, 1.0, 1, 10.0, 8, false, n);
+        dear.profile = TransitionProfile::flat(1e5);
+        let plan = solve(&[cheap, dear], 15, &cost());
+        assert_eq!(plan.assignment, vec![7, 8], "the cheap-to-move task gives up the worker");
     }
 
     #[test]
     fn faulted_task_pays_penalty_even_when_size_unchanged() {
         let t_ok = task(0, 1.0, 1, 10.0, 8, false, 16);
         let t_bad = task(1, 1.0, 1, 10.0, 8, true, 16);
-        let c = cfg();
-        let d_run = c.d_running(16);
-        let g_ok = reward(&t_ok, 8, d_run, c.d_transition_s);
-        let g_bad = reward(&t_bad, 8, d_run, c.d_transition_s);
+        let c = cost();
+        let g_ok = reward(&t_ok, 8, 16, &c);
+        let g_bad = reward(&t_bad, 8, 16, &c);
         assert!(g_bad < g_ok);
+    }
+
+    #[test]
+    fn faulted_transition_prices_the_farther_strategy() {
+        // Same heterogeneous profile; the faulted twin pays inmem_s instead
+        // of replica_s, so its reward is strictly lower at every size.
+        let profile = TransitionProfile { replica_s: 2.0, inmem_s: 40.0, remote_s: 300.0 };
+        let mut healthy = task(0, 1.0, 1, 10.0, 8, false, 16);
+        healthy.profile = profile.clone();
+        let mut faulted = healthy.clone();
+        faulted.fault = true;
+        let c = cost();
+        // both transition when resizing to 6 — only the strategy differs
+        let diff = reward(&healthy, 6, 16, &c) - reward(&faulted, 6, 16, &c);
+        let expected = healthy.current_waf() * (profile.inmem_s - profile.replica_s);
+        assert!((diff - expected).abs() < 1e-6 * expected, "diff {diff} vs {expected}");
+    }
+
+    #[test]
+    fn breakdown_reconciles_to_the_objective() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 4, false, 16),
+            task(1, 1.3, 2, 9.0, 6, true, 16),
+            task(2, 0.7, 4, 12.0, 4, false, 16),
+        ];
+        let c = cost();
+        for n in [0u32, 8, 12, 16] {
+            let plan = solve(&tasks, n, &c);
+            let b = &plan.breakdown;
+            assert_eq!(b.objective(), plan.objective, "exact by construction (n={n})");
+            assert_eq!(b.horizon_s, c.horizon_s(n));
+            assert_eq!(b.mtbf_per_gpu_s, c.mtbf_per_gpu_s());
+            assert_eq!(b.spare_value, 0.0);
+            // manual recomputation of both terms
+            let running: f64 =
+                tasks.iter().zip(&plan.assignment).map(|(t, &x)| t.waf(x) * b.horizon_s).sum();
+            let penalty: f64 = tasks
+                .iter()
+                .zip(&plan.assignment)
+                .filter(|(t, &x)| t.transitions_to(x))
+                .map(|(t, _)| t.current_waf() * c.transition_s(&t.profile, t.fault))
+                .sum();
+            assert!((b.running_reward - running).abs() <= 1e-9 * running.abs().max(1.0));
+            assert!((b.transition_penalty - penalty).abs() <= 1e-9 * penalty.abs().max(1.0));
+        }
     }
 
     #[test]
@@ -497,7 +639,7 @@ mod tests {
         // identical tasks except weight; the heavier one must get ≥ workers.
         let tasks =
             vec![task(0, 0.5, 1, 10.0, 0, false, n), task(1, 2.0, 1, 10.0, 0, false, n)];
-        let plan = solve(&tasks, n, &cfg());
+        let plan = solve(&tasks, n, &cost());
         assert!(plan.assignment[1] >= plan.assignment[0]);
     }
 
@@ -507,7 +649,7 @@ mod tests {
             task(0, 1.0, 2, 10.0, 4, false, 16),
             task(1, 1.3, 2, 9.0, 6, false, 16),
         ];
-        let c = cfg();
+        let c = cost();
         let lut = PlanLookup::precompute(&tasks, 16, &c);
         for n in [0u32, 5, 11, 16] {
             assert_eq!(lut.plan_for(n).assignment, solve(&tasks, n, &c).assignment, "n={n}");
@@ -524,7 +666,7 @@ mod tests {
             task(1, 1.3, 2, 9.0, 6, false, 16),
             task(2, 0.7, 4, 12.0, 4, false, 16),
         ];
-        let c = cfg();
+        let c = cost();
         let lut = ScenarioLookup::precompute(&tasks, 16, &c);
         assert_eq!(lut.max_workers(), 16);
         assert_eq!(lut.n_tasks(), 3);
@@ -547,22 +689,28 @@ mod tests {
     #[test]
     fn scenario_lookup_fault_axis_changes_the_plan_when_it_should() {
         // A faulted task pays the transition penalty regardless, so with a
-        // huge d_transition the optimum can shift relative to the no-fault
-        // scenario at the same worker count.
+        // huge transition cost the optimum can shift relative to the
+        // no-fault scenario at the same worker count.
         let tasks = vec![
             task(0, 1.0, 1, 10.0, 8, false, 16),
             task(1, 1.0, 1, 10.0, 8, false, 16),
         ];
-        let mut c = cfg();
-        c.d_transition_s = 1e5;
-        let lut = ScenarioLookup::precompute(&tasks, 16, &c);
+        let pricey = CostModel::from_config(&UnicronConfig {
+            transition_base_s: 1e5,
+            mtbf_per_gpu_s: 1e6,
+            ..Default::default()
+        });
+        let lut = ScenarioLookup::precompute(&tasks, 16, &pricey);
         let no_fault = lut.plan_for(None, 16);
         assert_eq!(no_fault.assignment, vec![8, 8], "status quo is optimal unfaulted");
         // fault scenarios must at minimum reproduce the dedicated solve
         for i in 0..2 {
             let mut scenario = tasks.clone();
             scenario[i].fault = true;
-            assert_eq!(lut.plan_for(Some(i), 16).assignment, solve(&scenario, 16, &c).assignment);
+            assert_eq!(
+                lut.plan_for(Some(i), 16).assignment,
+                solve(&scenario, 16, &pricey).assignment
+            );
         }
     }
 
@@ -573,7 +721,7 @@ mod tests {
             task(1, 1.3, 2, 9.0, 6, false, 32),
             task(2, 0.7, 4, 12.0, 4, false, 32),
         ];
-        let c = cfg();
+        let c = cost();
         let (avail, gpn) = (24u32, 8u32);
         let lut = ScenarioLookup::precompute_horizon(&tasks, avail, gpn, &c);
         assert_eq!(lut.n_tasks(), 3);
@@ -602,7 +750,7 @@ mod tests {
     fn full_grid_get_is_exact_while_plan_for_clamps() {
         let tasks =
             vec![task(0, 1.0, 2, 10.0, 4, false, 16), task(1, 1.3, 2, 9.0, 6, false, 16)];
-        let c = cfg();
+        let c = cost();
         let lut = ScenarioLookup::precompute(&tasks, 16, &c);
         assert!(lut.get(None, 16).is_some());
         assert!(lut.get(None, 17).is_none(), "get never clamps");
@@ -637,7 +785,7 @@ mod tests {
             task(1, 1.0, 4, 6.0, 0, false, n),
             task(2, 0.5, 8, 30.0, 0, false, n),
         ];
-        let c = cfg();
+        let c = cost();
         let plan = solve(&tasks, n, &c);
         let waf_of = |alloc: &[u32]| -> f64 {
             tasks.iter().zip(alloc).map(|(t, &x)| t.waf(x)).sum()

@@ -45,6 +45,7 @@
 
 use std::fmt;
 
+use crate::cost::CostBreakdown;
 use crate::failure::ErrorKind;
 use crate::planner::Plan;
 use crate::ser::{JsonError, Value};
@@ -56,7 +57,13 @@ use crate::ser::{JsonError, Value};
 /// * v2 — fleet layer: [`CoordEvent::NodeRepaired`] and the
 ///   [`Action::NodeQuarantined`] / [`Action::SpareRetained`] /
 ///   [`Action::SpareReleased`] decision surface.
-pub const DECISION_LOG_VERSION: u64 = 2;
+/// * v3 — cost ledger: every entry carries its delivery timestamp
+///   ([`LogEntry::at_s`] — the clock the fleet's MTBF estimator and the
+///   burst-batch window run on), every [`Action::ApplyPlan`] carries a
+///   typed [`CostBreakdown`] explaining the plan objective term-by-term,
+///   and the correlated-burst surface ([`CoordEvent::ReplanDue`] /
+///   [`Action::ScheduleReplan`]) joins the vocabulary.
+pub const DECISION_LOG_VERSION: u64 = 3;
 
 // ---------------------------------------------------------------------------
 // Typed identifiers
@@ -122,6 +129,10 @@ pub enum CoordEvent {
     /// Outcome of a previously-instructed reattempt/restart.
     ReattemptResult { node: NodeId, task: TaskId, ok: bool },
     RestartResult { node: NodeId, task: TaskId, ok: bool },
+    /// A previously requested [`Action::ScheduleReplan`] timer fired: if a
+    /// correlated-burst replan is still deferred, commit it now (one
+    /// consolidated plan instead of N sequential commits).
+    ReplanDue,
 }
 
 /// Why a reconfiguration plan was generated — the Fig. 7 trigger class.
@@ -202,6 +213,10 @@ pub enum Action {
     SpareReleased { node: NodeId },
     /// Reconfigure affected tasks to a new plan (assignments per task id).
     ApplyPlan { plan: Plan, reason: PlanReason },
+    /// Correlated same-domain burst: the SEV1's replan is deferred so one
+    /// consolidated plan can cover the whole burst. The driver must deliver
+    /// [`CoordEvent::ReplanDue`] after at most `after_s` seconds.
+    ScheduleReplan { after_s: f64 },
     /// Page the humans (§3.2 "other external interactions").
     AlertOps { message: String },
 }
@@ -313,6 +328,7 @@ impl CoordEvent {
                 .with("node", node.0)
                 .with("task", task.0)
                 .with("ok", *ok),
+            CoordEvent::ReplanDue => Value::obj().with("event", "replan_due"),
         }
     }
 
@@ -339,9 +355,31 @@ impl CoordEvent {
                 task: get_task(v)?,
                 ok: get_bool(v, "ok")?,
             }),
+            "replan_due" => Ok(CoordEvent::ReplanDue),
             other => Err(ProtoError::new(format!("unknown event type {other:?}"))),
         }
     }
+}
+
+fn breakdown_to_value(b: &CostBreakdown) -> Value {
+    Value::obj()
+        .with("running_reward", b.running_reward)
+        .with("transition_penalty", b.transition_penalty)
+        .with("horizon_s", b.horizon_s)
+        .with("mtbf_per_gpu_s", b.mtbf_per_gpu_s)
+        .with("spare_value", b.spare_value)
+        .with("spare_hold_cost", b.spare_hold_cost)
+}
+
+fn breakdown_from_value(v: &Value) -> Result<CostBreakdown, ProtoError> {
+    Ok(CostBreakdown {
+        running_reward: get_f64(v, "running_reward")?,
+        transition_penalty: get_f64(v, "transition_penalty")?,
+        horizon_s: get_f64(v, "horizon_s")?,
+        mtbf_per_gpu_s: get_f64(v, "mtbf_per_gpu_s")?,
+        spare_value: get_f64(v, "spare_value")?,
+        spare_hold_cost: get_f64(v, "spare_hold_cost")?,
+    })
 }
 
 fn plan_to_value(plan: &Plan) -> Value {
@@ -350,6 +388,7 @@ fn plan_to_value(plan: &Plan) -> Value {
         .with("objective", plan.objective)
         .with("total_waf", plan.total_waf)
         .with("workers_used", plan.workers_used)
+        .with("breakdown", breakdown_to_value(&plan.breakdown))
 }
 
 fn plan_from_value(v: &Value) -> Result<Plan, ProtoError> {
@@ -370,6 +409,7 @@ fn plan_from_value(v: &Value) -> Result<Plan, ProtoError> {
         objective: get_f64(v, "objective")?,
         total_waf: get_f64(v, "total_waf")?,
         workers_used: get_u32(v, "workers_used")?,
+        breakdown: breakdown_from_value(v.req("breakdown")?)?,
     })
 }
 
@@ -401,6 +441,9 @@ impl Action {
                 .with("action", "apply_plan")
                 .with("reason", reason.name())
                 .with("plan", plan_to_value(plan)),
+            Action::ScheduleReplan { after_s } => {
+                Value::obj().with("action", "schedule_replan").with("after_s", *after_s)
+            }
             Action::AlertOps { message } => {
                 Value::obj().with("action", "alert_ops").with("message", message.as_str())
             }
@@ -427,6 +470,7 @@ impl Action {
                 })?;
                 Ok(Action::ApplyPlan { plan: plan_from_value(v.req("plan")?)?, reason })
             }
+            "schedule_replan" => Ok(Action::ScheduleReplan { after_s: get_f64(v, "after_s")? }),
             "alert_ops" => Ok(Action::AlertOps { message: get_str(v, "message")?.to_string() }),
             other => Err(ProtoError::new(format!("unknown action type {other:?}"))),
         }
@@ -437,9 +481,18 @@ impl Action {
 // DecisionLog
 // ---------------------------------------------------------------------------
 
-/// One recorded decision: the event delivered and the actions decided.
+/// One recorded decision: when the event was delivered, the event, and the
+/// actions decided. The timestamp is part of the record because since wire
+/// v3 some decisions are time-fed: the fleet's EWMA MTBF estimator (which
+/// tightens the cost ledger's horizon) and the correlated-burst batch
+/// window both read the delivery clock, so replays must feed the exact
+/// recorded `at_s` to reproduce decisions bit-identically.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LogEntry {
+    /// Delivery timestamp, seconds on the recording driver's clock
+    /// (simulated time in the environment model, wall clock in the live
+    /// driver; `0.0` for clockless unit-test sessions).
+    pub at_s: f64,
     pub event: CoordEvent,
     pub actions: Vec<Action>,
 }
@@ -485,9 +538,9 @@ impl DecisionLog {
         DecisionLog::default()
     }
 
-    /// Append one decision.
-    pub fn record(&mut self, event: CoordEvent, actions: Vec<Action>) {
-        self.entries.push(LogEntry { event, actions });
+    /// Append one decision with its delivery timestamp.
+    pub fn record(&mut self, at_s: f64, event: CoordEvent, actions: Vec<Action>) {
+        self.entries.push(LogEntry { at_s, event, actions });
     }
 
     pub fn len(&self) -> usize {
@@ -519,6 +572,7 @@ impl DecisionLog {
             .iter()
             .map(|e| {
                 Value::obj()
+                    .with("at", e.at_s)
                     .with("event", e.event.to_value())
                     .with(
                         "actions",
@@ -546,6 +600,8 @@ impl DecisionLog {
             .ok_or_else(|| ProtoError::new("field \"entries\" is not an array"))?;
         let mut log = DecisionLog::new();
         for (i, entry) in entries.iter().enumerate() {
+            let at_s = get_f64(entry, "at")
+                .map_err(|e| ProtoError::new(format!("entry {i}: {}", e.msg)))?;
             let event = CoordEvent::from_value(
                 entry.req("event").map_err(|e| ProtoError::new(format!("entry {i}: {e}")))?,
             )
@@ -559,7 +615,7 @@ impl DecisionLog {
                 .map(Action::from_value)
                 .collect::<Result<Vec<Action>, ProtoError>>()
                 .map_err(|e| ProtoError::new(format!("entry {i}: {}", e.msg)))?;
-            log.record(event, actions);
+            log.record(at_s, event, actions);
         }
         Ok(log)
     }
@@ -576,7 +632,9 @@ impl DecisionLog {
     }
 
     /// Replay the recorded event stream through `coord`, asserting the
-    /// identical action sequence at every step.
+    /// identical action sequence at every step. Each event is delivered at
+    /// its recorded [`LogEntry::at_s`], so time-fed decisions (the fleet's
+    /// MTBF estimator, the burst-batch window) reproduce exactly.
     ///
     /// `coord` must be constructed with the same initial state (config,
     /// worker pool, initially-registered tasks) the recording session
@@ -599,7 +657,7 @@ impl DecisionLog {
                     }
                 }
             }
-            let got = coord.handle(entry.event.clone());
+            let got = coord.handle_at(entry.event.clone(), entry.at_s);
             if got != entry.actions {
                 return Err(ReplayDivergence {
                     step,
@@ -676,6 +734,16 @@ mod tests {
     }
 
     #[test]
+    fn cost_ledger_variants_round_trip() {
+        let ev = CoordEvent::ReplanDue;
+        let back = CoordEvent::from_value(&Value::parse(&ev.to_value().encode()).unwrap()).unwrap();
+        assert_eq!(ev, back);
+        let a = Action::ScheduleReplan { after_s: 900.0 };
+        let back = Action::from_value(&Value::parse(&a.to_value().encode()).unwrap()).unwrap();
+        assert_eq!(a, back);
+    }
+
+    #[test]
     fn unknown_variants_rejected() {
         let v = Value::obj().with("event", "warp_core_breach").with("node", 1u32);
         assert!(CoordEvent::from_value(&v).is_err());
@@ -692,7 +760,7 @@ mod tests {
     #[test]
     fn version_mismatch_rejected() {
         let mut log = DecisionLog::new();
-        log.record(CoordEvent::NodeLost { node: NodeId(0) }, vec![]);
+        log.record(0.0, CoordEvent::NodeLost { node: NodeId(0) }, vec![]);
         let mut v = log.to_json();
         v.set("version", DECISION_LOG_VERSION + 1);
         let err = DecisionLog::from_json(&v).unwrap_err();

@@ -425,7 +425,7 @@ pub fn fig10b() -> String {
 /// Fig. 10c: multi-task WAF for Table 3 cases vs allocation baselines.
 pub fn fig10c() -> String {
     let cluster = ClusterSpec::default();
-    let cfg = UnicronConfig::default();
+    let cost = crate::cost::CostModel::from_config(&UnicronConfig::default());
     let n = cluster.total_gpus();
     let mut t = Table::new(&["case", "Unicron", "equally", "weighted", "sized"]);
     for case in 1..=5u32 {
@@ -437,7 +437,7 @@ pub fn fig10c() -> String {
         let waf_of = |alloc: &[u32]| -> f64 {
             tasks.iter().zip(alloc).map(|(t, &x)| t.waf(x)).sum()
         };
-        let uni = solve(&tasks, n, &cfg).total_waf;
+        let uni = solve(&tasks, n, &cost).total_waf;
         let eq = waf_of(&baselines::equally(&tasks, n));
         let we = waf_of(&baselines::weighted(&tasks, n));
         let si = waf_of(&baselines::sized(&tasks, n, &sizes));

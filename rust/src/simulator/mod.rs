@@ -90,6 +90,9 @@ enum EnvEvent {
     RecoveryDone { task: usize, workers: u32, epoch: u64 },
     /// Deferred outcome report back to the policy (restart completed).
     PolicyResult { result: CoordEvent },
+    /// A policy-requested [`Action::ScheduleReplan`] timer: deliver
+    /// [`CoordEvent::ReplanDue`] so a deferred burst replan can commit.
+    ReplanTimer,
 }
 
 /// Execution context for a batch of policy actions: what triggered them and
@@ -337,10 +340,11 @@ impl Simulator {
         self.tasks.iter().position(|t| t.spec.id == task_id)
     }
 
-    /// Feed one event to the policy; log and return its decisions.
+    /// Feed one event to the policy at the current simulated time; log and
+    /// return its decisions.
     fn decide(&mut self, ev: CoordEvent) -> Vec<Action> {
-        let actions = self.policy.on_event(ev.clone());
-        self.decision_log.record(ev, actions.clone());
+        let actions = self.policy.on_event(ev.clone(), self.now);
+        self.decision_log.record(self.now, ev, actions.clone());
         actions
     }
 
@@ -359,6 +363,9 @@ impl Simulator {
                 Action::NodeQuarantined { node } => self.retire(*node),
                 Action::SpareRetained { node } => self.readmit(*node),
                 Action::SpareReleased { node } => self.release(*node),
+                Action::ScheduleReplan { after_s } => {
+                    self.queue.schedule(self.now + after_s, EnvEvent::ReplanTimer)
+                }
                 Action::AlertOps { .. } => self.alerts += 1,
             }
         }
@@ -529,6 +536,16 @@ impl Simulator {
                     // the policy returns (defensive: escalations)
                     self.execute(&actions, &Ctx::quiet());
                 }
+                EnvEvent::ReplanTimer => {
+                    // The batch window elapsed: the policy either commits
+                    // the consolidated burst replan now or reports nothing
+                    // (an earlier replan already settled it). The flush is
+                    // SEV1 recovery work — it pays the standard detection
+                    // latency once (deferred members never charged it) plus
+                    // the per-GPU migration of whatever actually moves.
+                    let actions = self.decide(CoordEvent::ReplanDue);
+                    self.execute(&actions, &Ctx::failure(Severity::Sev1, None));
+                }
             }
             self.record();
         }
@@ -575,6 +592,23 @@ impl Simulator {
                 };
                 let actions = self.decide(coord_ev);
                 self.execute(&actions, &Ctx::failure(Severity::Sev1, affected));
+                // Burst batching: the policy deferred the replan
+                // (ScheduleReplan, no ApplyPlan). The hardware is gone
+                // regardless — the affected task limps on minus the lost
+                // node (§6.2 partial-iteration reuse keeps it training)
+                // until the consolidated replan commits.
+                let deferred = actions
+                    .iter()
+                    .any(|a| matches!(a, Action::ScheduleReplan { .. }))
+                    && !actions.iter().any(|a| matches!(a, Action::ApplyPlan { .. }));
+                if deferred {
+                    if let Some(ti) = affected {
+                        let gpn = self.cluster.gpus_per_node;
+                        let t = &mut self.tasks[ti];
+                        t.workers = t.workers.saturating_sub(gpn);
+                        t.pending_workers = t.pending_workers.saturating_sub(gpn);
+                    }
+                }
             }
             sev => {
                 // SEV2/SEV3: process-level; hits whatever task owns the node

@@ -31,6 +31,7 @@ use std::collections::BTreeMap;
 
 use crate::config::UnicronConfig;
 use crate::coordinator::Coordinator;
+use crate::cost::{CostBreakdown, CostModel};
 use crate::failure::Severity;
 use crate::planner::{solve, Plan, PlanTask};
 use crate::proto::{Action, CoordEvent, PlanReason, TaskId, WorkerCount};
@@ -196,7 +197,11 @@ pub trait RecoveryPolicy {
     fn admit_task(&mut self, task: PlanTask);
 
     /// One cluster event → recovery actions for the environment to execute.
-    fn on_event(&mut self, ev: CoordEvent) -> Vec<Action>;
+    /// `now_s` is the delivery time on the environment's clock — the
+    /// Unicron policy feeds it to the coordinator's time-aware path
+    /// ([`Coordinator::handle_at`]: EWMA MTBF tightening, burst batching);
+    /// baselines ignore it.
+    fn on_event(&mut self, ev: CoordEvent, now_s: f64) -> Vec<Action>;
 
     /// Planner path counters `(table hits, live solves)` — `(0, 0)` for
     /// policies without a precomputed table; the wrapped coordinator's
@@ -268,9 +273,9 @@ impl RecoveryPolicy for UnicronPolicy {
         self.coord.as_mut().expect("UnicronPolicy::init not called").add_task(task);
     }
 
-    fn on_event(&mut self, ev: CoordEvent) -> Vec<Action> {
+    fn on_event(&mut self, ev: CoordEvent, now_s: f64) -> Vec<Action> {
         let coord = self.coord.as_mut().expect("UnicronPolicy::init not called");
-        let actions = coord.handle(ev);
+        let actions = coord.handle_at(ev, now_s);
         // The simulated counterpart of the live driver's background plan
         // refresh: whenever a commit staled the table, rebuild the cheap
         // event-horizon table before the next event (zero simulated time),
@@ -320,7 +325,9 @@ struct BaselineTask {
 ///   capacity (waiting tasks restart; elastic shrunk tasks grow back a node).
 pub struct BaselinePolicy {
     params: PolicyParams,
-    cfg: UnicronConfig,
+    /// Cost ledger for the shared Unicron-optimal bootstrap plan (§7.5);
+    /// baselines never tighten it (they have no fleet).
+    cost: CostModel,
     gpus_per_node: u32,
     tasks: BTreeMap<TaskId, BaselineTask>,
     available: u32,
@@ -337,7 +344,7 @@ impl BaselinePolicy {
         assert!(kind != PolicyKind::Unicron, "Unicron is UnicronPolicy (the real Coordinator)");
         BaselinePolicy {
             params: PolicyParams::for_kind(kind, cfg),
-            cfg: cfg.clone(),
+            cost: CostModel::from_config(cfg),
             gpus_per_node: gpus_per_node.0,
             tasks: BTreeMap::new(),
             available: 0,
@@ -364,7 +371,15 @@ impl BaselinePolicy {
         let total_waf = active.iter().map(|t| t.plan.waf(t.assigned)).sum();
         let workers_used = assignment.iter().sum();
         vec![Action::ApplyPlan {
-            plan: Plan { assignment, objective: 0.0, total_waf, workers_used },
+            plan: Plan {
+                assignment,
+                objective: 0.0,
+                total_waf,
+                workers_used,
+                // baselines optimize nothing: an all-zero breakdown still
+                // reconciles (0 − 0 = objective 0)
+                breakdown: CostBreakdown::default(),
+            },
             reason,
         }]
     }
@@ -377,7 +392,7 @@ impl BaselinePolicy {
         if ordered.is_empty() {
             return vec![];
         }
-        let plan = solve(&ordered, self.available, &self.cfg);
+        let plan = solve(&ordered, self.available, &self.cost);
         for (t, &x) in self.tasks.values_mut().filter(|t| t.active).zip(plan.assignment.iter()) {
             t.assigned = x;
             t.want = x;
@@ -534,7 +549,7 @@ impl RecoveryPolicy for BaselinePolicy {
         );
     }
 
-    fn on_event(&mut self, ev: CoordEvent) -> Vec<Action> {
+    fn on_event(&mut self, ev: CoordEvent, _now_s: f64) -> Vec<Action> {
         self.seq += 1;
         match ev {
             CoordEvent::TaskLaunched { task } => {
@@ -580,6 +595,8 @@ impl RecoveryPolicy for BaselinePolicy {
                 // difference is in restart_s/recompute_s, applied by the env
                 _ => vec![Action::InstructRestart { node, task }],
             },
+            // baselines never defer a replan, so a stray timer is a no-op
+            CoordEvent::ReplanDue => vec![],
             CoordEvent::ReattemptResult { .. } | CoordEvent::RestartResult { .. } => vec![],
         }
     }
@@ -648,6 +665,7 @@ mod tests {
     }
 
     use crate::config::TaskSpec;
+    use crate::cost::TransitionProfile;
     use crate::failure::ErrorKind;
     use crate::proto::NodeId;
 
@@ -657,6 +675,7 @@ mod tests {
         PlanTask {
             spec: TaskSpec::new(id, "m", 1.0, min),
             throughput,
+            profile: TransitionProfile::flat(5.0),
             current: WorkerCount(0),
             fault: false,
         }
@@ -667,7 +686,7 @@ mod tests {
         let tasks = [plan_task(0, 8, n + 16), plan_task(1, 8, n + 16)];
         let mut p = build(kind, &c, WorkerCount(8));
         p.init(&tasks, &[true, true], WorkerCount(n));
-        p.on_event(CoordEvent::TaskLaunched { task: TaskId(0) });
+        p.on_event(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
         p
     }
 
@@ -691,7 +710,7 @@ mod tests {
             CoordEvent::NodeJoined { node: NodeId(1) },
         ];
         for ev in &events {
-            assert_eq!(pol.on_event(ev.clone()), coord.handle(ev.clone()));
+            assert_eq!(pol.on_event(ev.clone(), 0.0), coord.handle(ev.clone()));
         }
         assert_eq!(pol.coordinator().log, coord.log);
     }
@@ -700,11 +719,11 @@ mod tests {
     fn baselines_bootstrap_with_the_unicron_optimal_plan() {
         let c = cfg();
         let tasks = [plan_task(0, 8, 48), plan_task(1, 8, 48)];
-        let reference = solve(&tasks, 32, &c);
+        let reference = solve(&tasks, 32, &CostModel::from_config(&c));
         for k in [PolicyKind::Megatron, PolicyKind::Oobleck] {
             let mut p = build(k, &c, WorkerCount(8));
             p.init(&tasks, &[true, true], WorkerCount(32));
-            let a = p.on_event(CoordEvent::TaskLaunched { task: TaskId(0) });
+            let a = p.on_event(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
             match &a[..] {
                 [Action::ApplyPlan { plan, .. }] => {
                     assert_eq!(plan.assignment, reference.assignment, "{k:?}")
@@ -717,11 +736,14 @@ mod tests {
     #[test]
     fn megatron_stalls_on_sev1_and_restores_on_join() {
         let mut p = booted(PolicyKind::Megatron, 32);
-        let a = p.on_event(CoordEvent::ErrorReport {
-            node: NodeId(0),
-            task: TaskId(0),
-            kind: ErrorKind::EccError,
-        });
+        let a = p.on_event(
+            CoordEvent::ErrorReport {
+                node: NodeId(0),
+                task: TaskId(0),
+                kind: ErrorKind::EccError,
+            },
+            0.0,
+        );
         let plan = match &a[..] {
             [Action::ApplyPlan { plan, .. }] => plan.clone(),
             other => panic!("expected ApplyPlan, got {other:?}"),
@@ -729,7 +751,7 @@ mod tests {
         assert_eq!(plan.assignment[0], 0, "inelastic task must stall, not shrink");
         let before = plan.assignment[1];
         // node repaired: the stalled task restarts at its exact original size
-        let a = p.on_event(CoordEvent::NodeJoined { node: NodeId(0) });
+        let a = p.on_event(CoordEvent::NodeJoined { node: NodeId(0) }, 0.0);
         match &a[..] {
             [Action::ApplyPlan { plan, .. }] => {
                 assert_eq!(plan.assignment[0], 16, "exact original configuration");
@@ -742,11 +764,14 @@ mod tests {
     #[test]
     fn elastic_baseline_shrinks_by_one_node() {
         let mut p = booted(PolicyKind::Oobleck, 32);
-        let a = p.on_event(CoordEvent::ErrorReport {
-            node: NodeId(0),
-            task: TaskId(0),
-            kind: ErrorKind::EccError,
-        });
+        let a = p.on_event(
+            CoordEvent::ErrorReport {
+                node: NodeId(0),
+                task: TaskId(0),
+                kind: ErrorKind::EccError,
+            },
+            0.0,
+        );
         match &a[..] {
             [Action::ApplyPlan { plan, .. }] => assert_eq!(plan.assignment[0], 8),
             other => panic!("expected ApplyPlan, got {other:?}"),
@@ -757,11 +782,14 @@ mod tests {
     fn baselines_restart_in_place_for_sev23() {
         for k in [PolicyKind::Megatron, PolicyKind::Varuna, PolicyKind::Bamboo] {
             let mut p = booted(k, 32);
-            let a = p.on_event(CoordEvent::ErrorReport {
-                node: NodeId(1),
-                task: TaskId(1),
-                kind: ErrorKind::CudaError,
-            });
+            let a = p.on_event(
+                CoordEvent::ErrorReport {
+                    node: NodeId(1),
+                    task: TaskId(1),
+                    kind: ErrorKind::CudaError,
+                },
+                0.0,
+            );
             assert_eq!(
                 a,
                 vec![Action::InstructRestart { node: NodeId(1), task: TaskId(1) }],

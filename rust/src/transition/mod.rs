@@ -204,6 +204,11 @@ pub fn choose_source(healthy_replica: bool, inmem_ckpt: bool) -> StateSource {
 /// Replica/in-memory pulls ride the training interconnect; remote rides the
 /// shared checkpoint store. Concurrent pulls share bandwidth (`pullers`),
 /// which is why Unicron's simultaneous-replication trick (§6.3) still scales.
+///
+/// This model is also the source of the planner's per-task transition
+/// prices: [`crate::cost::TransitionProfile`] evaluates it once per
+/// strategy per task, so the §5 reward charges a 13B task more to move
+/// than a 1.3B task (the cost ledger, DESIGN.md §9).
 pub fn migration_time_s(
     source: StateSource,
     state_bytes: u64,

@@ -50,8 +50,8 @@ fn coordinator_drives_real_planner_through_failure_storm() {
 #[test]
 fn lookup_table_covers_failure_and_join_scenarios() {
     let tasks = real_plan_tasks(2, 64);
-    let cfg = UnicronConfig::default();
-    let lut = PlanLookup::precompute(&tasks, 64, &cfg);
+    let cost = unicron::cost::CostModel::from_config(&UnicronConfig::default());
+    let lut = PlanLookup::precompute(&tasks, 64, &cost);
     // one-step scenarios: n-8 (node loss), n+8 (join) — O(1) retrieval
     for n in [40u32, 48, 56, 64] {
         let plan = lut.plan_for(n);
@@ -62,9 +62,12 @@ fn lookup_table_covers_failure_and_join_scenarios() {
     // the pool grows — Eq. 3 trades WAF against expected run length), but the
     // lookup table must agree with a fresh solve at every size.
     for n in (0..=64u32).step_by(8) {
-        let fresh = unicron::planner::solve(&tasks, n, &cfg);
+        let fresh = unicron::planner::solve(&tasks, n, &cost);
         assert_eq!(lut.plan_for(n).assignment, fresh.assignment, "n={n}");
         assert!((lut.plan_for(n).objective - fresh.objective).abs() <= 1e-9 * fresh.objective.abs().max(1.0));
+        // the ledger invariant rides every precomputed plan too
+        let b = &lut.plan_for(n).breakdown;
+        assert_eq!(b.objective(), lut.plan_for(n).objective, "n={n}");
     }
 }
 

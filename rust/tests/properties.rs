@@ -1,9 +1,10 @@
 //! Property-based tests (mini-proptest) on the coordinator-side invariants
-//! DESIGN.md §8 lists: DP-planner optimality vs brute force, worker
+//! DESIGN.md §10 lists: DP-planner optimality vs brute force, worker
 //! conservation, micro-batch conservation under arbitrary failure sequences,
 //! perfmodel feasibility, severity totality, JSON round-trips.
 
 use unicron::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
+use unicron::cost::{CostModel, TransitionProfile};
 use unicron::planner::{solve, solve_brute, PlanTask};
 use unicron::proto::WorkerCount;
 use unicron::proptest::{run, Config, Prop};
@@ -27,9 +28,18 @@ fn gen_planner(rng: &mut Xoshiro256, size: usize) -> (Vec<PlanTask>, u32) {
             let throughput = (0..=n)
                 .map(|x| if x >= min { scale * (x as f64).powf(concavity) } else { 0.0 })
                 .collect();
+            // heterogeneous per-task, per-strategy transition pricing — the
+            // DP must stay optimal when every task prices moves differently
+            let replica_s = rng.uniform(0.0, 120.0);
+            let inmem_s = replica_s + rng.uniform(0.0, 120.0);
             PlanTask {
                 spec: TaskSpec::new(i as u32, "synthetic", weight, min),
                 throughput,
+                profile: TransitionProfile {
+                    replica_s,
+                    inmem_s,
+                    remote_s: inmem_s + rng.uniform(0.0, 300.0),
+                },
                 current: WorkerCount(current),
                 fault,
             }
@@ -45,14 +55,28 @@ fn planner_dp_equals_brute_force() {
         Config { cases: 60, ..Default::default() },
         gen_planner,
         |(tasks, n)| {
-            let cfg = UnicronConfig { d_transition_s: 120.0, mtbf_per_gpu_s: 5e5, ..Default::default() };
-            let dp = solve(tasks, *n, &cfg);
-            let bf = solve_brute(tasks, *n, &cfg);
+            let cost = CostModel::from_config(&UnicronConfig {
+                transition_base_s: 30.0,
+                mtbf_per_gpu_s: 5e5,
+                ..Default::default()
+            });
+            let dp = solve(tasks, *n, &cost);
+            let bf = solve_brute(tasks, *n, &cost);
             let tol = 1e-6 * bf.objective.abs().max(1.0);
-            Prop::check(
-                (dp.objective - bf.objective).abs() <= tol,
-                || format!("dp {} != brute {}", dp.objective, bf.objective),
-            )
+            if (dp.objective - bf.objective).abs() > tol {
+                return Prop::Fail(format!("dp {} != brute {}", dp.objective, bf.objective));
+            }
+            // the ledger invariant: every plan's breakdown reconciles
+            for plan in [&dp, &bf] {
+                if plan.breakdown.objective() != plan.objective {
+                    return Prop::Fail(format!(
+                        "breakdown {} != objective {}",
+                        plan.breakdown.objective(),
+                        plan.objective
+                    ));
+                }
+            }
+            Prop::Pass
         },
     );
 }
@@ -64,8 +88,8 @@ fn planner_respects_worker_budget_and_minimums() {
         Config { cases: 100, ..Default::default() },
         gen_planner,
         |(tasks, n)| {
-            let cfg = UnicronConfig::default();
-            let plan = solve(tasks, *n, &cfg);
+            let cost = CostModel::from_config(&UnicronConfig::default());
+            let plan = solve(tasks, *n, &cost);
             if plan.assignment.iter().sum::<u32>() > *n {
                 return Prop::Fail(format!("assignment {:?} exceeds {n}", plan.assignment));
             }

@@ -5,6 +5,7 @@
 
 use unicron::config::{table3_case, ClusterSpec, TaskSpec, UnicronConfig};
 use unicron::coordinator::Coordinator;
+use unicron::cost::CostBreakdown;
 use unicron::failure::{ErrorKind, Trace, TraceConfig};
 use unicron::planner::{Plan, PlanTask};
 use unicron::proto::{Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId};
@@ -47,6 +48,7 @@ fn every_event_variant_roundtrips_for_every_error_kind() {
             roundtrip_event(&CoordEvent::RestartResult { node: NodeId(id), task: TaskId(id), ok });
         }
     }
+    roundtrip_event(&CoordEvent::ReplanDue);
 }
 
 #[test]
@@ -59,14 +61,27 @@ fn every_action_variant_roundtrips() {
     roundtrip_action(&Action::SpareReleased { node: NodeId(u32::MAX) });
     roundtrip_action(&Action::AlertOps { message: "SEV1: node 12 isolated".into() });
     roundtrip_action(&Action::AlertOps { message: "unicode \"quotes\" + ⑤⑥\n".into() });
-    // ApplyPlan with non-trivial floats, for every reason
-    for reason in PlanReason::all() {
+    for after_s in [0.0, 900.0, 0.1 + 0.2 /* 0.30000000000000004 */] {
+        roundtrip_action(&Action::ScheduleReplan { after_s });
+    }
+    // ApplyPlan with non-trivial floats — and a distinct CostBreakdown per
+    // variant (including the spare-retention terms) — for every reason
+    for (i, reason) in PlanReason::all().into_iter().enumerate() {
+        let k = i as f64;
         roundtrip_action(&Action::ApplyPlan {
             plan: Plan {
                 assignment: vec![0, 8, 16, 104],
                 objective: 1.234567890123e18,
                 total_waf: 3.0000000000000004e15, // not representable in fewer digits
                 workers_used: 128,
+                breakdown: CostBreakdown {
+                    running_reward: 1.234567890123e18 + k * 7.7e12,
+                    transition_penalty: k * 7.7e12,
+                    horizon_s: 148437.5 + k,
+                    mtbf_per_gpu_s: 1.9e7 - k,
+                    spare_value: if i % 2 == 0 { 0.0 } else { 4.2e14 + k },
+                    spare_hold_cost: if i % 2 == 0 { 0.0 } else { 1.05e14 - k },
+                },
             },
             reason,
         });
@@ -77,6 +92,7 @@ fn every_action_variant_roundtrips() {
 fn tampered_artifacts_are_rejected_not_skipped() {
     let mut log = DecisionLog::new();
     log.record(
+        12.5,
         CoordEvent::NodeLost { node: NodeId(1) },
         vec![Action::IsolateNode { node: NodeId(1) }],
     );
@@ -90,6 +106,11 @@ fn tampered_artifacts_are_rejected_not_skipped() {
     // unknown fleet-era variants are rejected the same way
     let bad = text.replace("node_lost", "node_repaired_twice");
     assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // a v3 entry stripped of its timestamp is rejected, not defaulted —
+    // time-fed decisions would silently replay differently
+    let bad = text.replace("\"at\":12.5,", "");
+    assert!(bad != text, "tamper must hit the timestamp field");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
     // future version (derive the tamper string so version bumps can't
     // silently defuse this test)
     let version_field = format!("\"version\":{}", unicron::proto::DECISION_LOG_VERSION);
@@ -102,9 +123,69 @@ fn tampered_artifacts_are_rejected_not_skipped() {
     assert_eq!(DecisionLog::from_bytes(text.as_bytes()).unwrap(), log);
 }
 
+#[test]
+fn tampered_breakdowns_are_rejected_not_skipped() {
+    // an ApplyPlan whose CostBreakdown is renamed or missing must fail
+    // strict decode — the explanation is part of the v3 contract
+    let mut log = DecisionLog::new();
+    log.record(
+        1.0,
+        CoordEvent::TaskLaunched { task: TaskId(0) },
+        vec![Action::ApplyPlan {
+            plan: Plan {
+                assignment: vec![4, 4],
+                objective: 8.25e17,
+                total_waf: 5.5e12,
+                workers_used: 8,
+                breakdown: CostBreakdown {
+                    running_reward: 8.25e17,
+                    transition_penalty: 0.0,
+                    horizon_s: 150000.0,
+                    mtbf_per_gpu_s: 1.9e7,
+                    spare_value: 0.0,
+                    spare_hold_cost: 0.0,
+                },
+            },
+            reason: PlanReason::TaskLaunched,
+        }],
+    );
+    let text = String::from_utf8(log.to_bytes()).unwrap();
+    assert!(text.contains("\"breakdown\""), "plan must serialize its breakdown: {text}");
+    // renamed term -> reject
+    let bad = text.replace("running_reward", "running_rewrd");
+    assert!(bad != text && DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // missing term -> reject (transition_penalty sorts last in the object)
+    let bad = text.replace(",\"transition_penalty\":0}", "}");
+    assert!(bad != text, "tamper must hit the penalty term: {text}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // the untampered artifact decodes and the terms reconcile
+    let back = DecisionLog::from_bytes(text.as_bytes()).unwrap();
+    assert_eq!(back, log);
+}
+
 fn plan_inputs(cluster: &ClusterSpec, specs: &[TaskSpec]) -> Vec<PlanTask> {
     let n = cluster.total_gpus();
     specs.iter().map(|spec| PlanTask::from_spec(spec, cluster, n)).collect()
+}
+
+/// The v3 acceptance property on a whole log: every committed plan's
+/// CostBreakdown terms sum (±1e-9 relative) to the plan objective.
+fn assert_breakdowns_reconcile(log: &DecisionLog) {
+    let mut plans = 0;
+    for a in log.actions() {
+        if let Action::ApplyPlan { plan, .. } = a {
+            plans += 1;
+            let sum = plan.breakdown.objective();
+            let tol = 1e-9 * plan.objective.abs().max(1.0);
+            assert!(
+                (sum - plan.objective).abs() <= tol,
+                "breakdown {sum} does not reconcile to objective {} ({:?})",
+                plan.objective,
+                plan.breakdown
+            );
+        }
+    }
+    assert!(plans > 0, "a recovery session must commit at least one plan");
 }
 
 fn fresh_coordinator(cluster: &ClusterSpec, inputs: &[PlanTask]) -> Coordinator {
@@ -147,6 +228,10 @@ fn recorded_live_session_replays_bit_identically_from_bytes() {
     let bytes = live.log.to_bytes();
     let revived = DecisionLog::from_bytes(&bytes).expect("artifact must decode");
     assert_eq!(revived, live.log, "serialization must be lossless");
+    // every committed plan explains itself in the ledger currency, and the
+    // explanation survives the wire
+    assert_breakdowns_reconcile(&live.log);
+    assert_breakdowns_reconcile(&revived);
 
     // replay through a fresh coordinator: bit-identical action sequence
     // (ReplayDivergence on any mismatch, including f64 plan fields)
@@ -182,6 +267,7 @@ fn recorded_simulation_replays_bit_identically_from_bytes() {
 
     let revived = DecisionLog::from_bytes(&sim.decision_log.to_bytes()).expect("decode");
     assert_eq!(revived, sim.decision_log);
+    assert_breakdowns_reconcile(&revived);
 
     let active = trace.initially_active(specs.len());
     let mut replica = Coordinator::builder()

@@ -17,13 +17,16 @@ use unicron::simulator::{PolicyKind, SimResult, Simulator};
 /// Which trace family a corpus entry exercises. `A`/`B` are the stock §7.5
 /// traces; `DomainBurst` overlays correlated same-domain SEV1 bursts;
 /// `Lemon` overlays a recurrent-failure node (both fleet-layer scenario
-/// classes).
+/// classes); `HeteroCost` runs trace-b over the size-heterogeneous Table 3
+/// case 2 task mix (1.3B/7B/13B), so per-task transition profiles differ
+/// and the cost ledger's per-strategy pricing steers every replan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Scenario {
     A,
     B,
     DomainBurst,
     Lemon,
+    HeteroCost,
 }
 
 fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
@@ -31,7 +34,7 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
         Scenario::A | Scenario::DomainBurst | Scenario::Lemon => {
             Trace::generate(TraceConfig::trace_a(), seed)
         }
-        Scenario::B => Trace::generate(TraceConfig::trace_b(), seed),
+        Scenario::B | Scenario::HeteroCost => Trace::generate(TraceConfig::trace_b(), seed),
     };
     match scenario {
         Scenario::DomainBurst => {
@@ -47,7 +50,7 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
                 until,
             );
         }
-        Scenario::A | Scenario::B => {}
+        Scenario::A | Scenario::B | Scenario::HeteroCost => {}
     }
     if churn {
         // exercise the ⑤⑥ lifecycle path: two late arrivals, one departure
@@ -59,7 +62,12 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
 fn simulate(kind: PolicyKind, scenario: Scenario, seed: u64, churn: bool) -> SimResult {
     let cluster = ClusterSpec::default();
     let cfg = UnicronConfig::default();
-    let specs = table3_case(5);
+    // HeteroCost: mixed model sizes at equal weight — replans are steered
+    // by per-task transition pricing rather than priority
+    let specs = match scenario {
+        Scenario::HeteroCost => table3_case(2),
+        _ => table3_case(5),
+    };
     let trace = make_trace(scenario, seed, churn);
     Simulator::builder().cluster(cluster).config(cfg).policy(kind).tasks(&specs).build().run(&trace)
 }
@@ -103,6 +111,12 @@ const CORPUS: &[(PolicyKind, Scenario, u64, bool)] = &[
     // surface) must stay bit-reproducible.
     (PolicyKind::Unicron, Scenario::DomainBurst, 7, false),
     (PolicyKind::Unicron, Scenario::Lemon, 5, false),
+    // PR 4: cost-ledger era — heterogeneous per-task transition pricing
+    // (mixed 1.3B/7B/13B), the EWMA-tightened MTBF horizon, and the
+    // burst-batching ScheduleReplan/ReplanDue surface must all replay
+    // bit-identically.
+    (PolicyKind::Unicron, Scenario::HeteroCost, 11, true),
+    (PolicyKind::Unicron, Scenario::DomainBurst, 2026, true),
 ];
 
 #[test]
@@ -130,7 +144,7 @@ fn determinism_property_over_random_seeds_and_policies() {
             let kind = *rng.choose(&PolicyKind::all());
             let scenario = *rng.choose(&[
                 Scenario::B,
-                Scenario::B,
+                Scenario::HeteroCost,
                 Scenario::DomainBurst,
                 Scenario::Lemon,
             ]);
