@@ -1,0 +1,96 @@
+//! Placement performance (DESIGN.md §10): a SEV1 replan commits a
+//! precomputed plan in O(1) table time, so the layout step riding the same
+//! commit must stay off the critical path too — a 512-node / 8-task
+//! assignment in under 1 ms (both the min-churn replan and the fill-heavy
+//! cold start), and the keep-or-move domain scoring the fill phase runs on
+//! must sustain ≥ 1M evaluations/s.
+
+use std::collections::BTreeSet;
+
+use unicron::bench::Bencher;
+use unicron::placement::{assign, keep_or_move_score, ClusterView, Layout};
+use unicron::proto::{NodeId, TaskId};
+
+const N_NODES: u32 = 512;
+const GPN: u32 = 8;
+const NPD: u32 = 8; // 64 racks
+const N_TASKS: u32 = 8;
+
+fn main() {
+    let all: Vec<NodeId> = (0..N_NODES).map(NodeId).collect();
+    let view = ClusterView { nodes: &all, gpus_per_node: GPN, nodes_per_domain: NPD };
+    // every task wants 1/8th of the cluster
+    let demands: Vec<(TaskId, u32)> =
+        (0..N_TASKS).map(|t| (TaskId(t), N_NODES / N_TASKS * GPN)).collect();
+    let prev = assign(&Layout::default(), &demands, &view);
+    assert_eq!(prev.placed_nodes().count(), N_NODES as usize, "fresh assign fills the cluster");
+
+    let mut b = Bencher::new("placement").with_samples(5, 50);
+
+    // the fill-heavy worst case: an empty previous layout, every node
+    // placed through the domain-scored fill phase. Cold starts happen at
+    // bootstrap, not on the SEV1 path, so the bound is looser than the
+    // replan's — but still bounded, so a regression to per-node rescans
+    // (O(free²)) fails the build.
+    let stats = b
+        .bench("assign_512nodes_8tasks_cold_start", || {
+            let layout = assign(&Layout::default(), &demands, &view);
+            std::hint::black_box(layout.len());
+        })
+        .expect("benchmark filtered out");
+    println!("\n512-node / 8-task cold-start assignment: {:.3} ms", stats.median * 1e3);
+    assert!(
+        stats.median < 5e-3,
+        "a full fill must stay cheap (O(#domains) per pick): {:.3} ms > 5 ms",
+        stats.median * 1e3
+    );
+
+    // the replan scenario: one node per rack in the first 8 racks died —
+    // keeps absorb most demand and the fill tops up the shortfall
+    let healthy: Vec<NodeId> =
+        all.iter().copied().filter(|n| !(n.0 < 8 * NPD && n.0 % NPD == 0)).collect();
+    let view_after = ClusterView { nodes: &healthy, gpus_per_node: GPN, nodes_per_domain: NPD };
+    let shrunk: Vec<(TaskId, u32)> = demands.iter().map(|&(t, w)| (t, w - GPN)).collect();
+    let stats = b
+        .bench("assign_512nodes_8tasks_minchurn_replan", || {
+            let layout = assign(&prev, &shrunk, &view_after);
+            std::hint::black_box(layout.len());
+        })
+        .expect("benchmark filtered out");
+    println!("512-node / 8-task min-churn replan: {:.3} ms", stats.median * 1e3);
+    assert!(
+        stats.median < 1e-3,
+        "placement must stay off the SEV1 hot path: {:.3} ms > 1 ms",
+        stats.median * 1e3
+    );
+    // sanity: the solver actually kept the survivors in place
+    let layout = assign(&prev, &shrunk, &view_after);
+    let kept: usize = layout.diff(&prev).iter().map(|m| m.kept.len()).sum();
+    assert!(kept >= (N_NODES - 8 * NPD) as usize / 2, "min-churn must keep survivors: {kept}");
+
+    // keep-or-move scoring throughput: the fill phase's per-domain
+    // evaluation (two small-map lookups + a set min)
+    let domains: Vec<(u32, BTreeSet<NodeId>)> = (0..(N_NODES / NPD))
+        .map(|d| {
+            let nodes: BTreeSet<NodeId> =
+                (0..(1 + d % NPD)).map(|k| NodeId(d * NPD + k)).collect();
+            (d % 3, nodes)
+        })
+        .collect();
+    const EVALS: u32 = 1_000_000;
+    let n_domains = domains.len() as u32;
+    let stats = b
+        .bench("keep_or_move_score_1m_evals", || {
+            let mut acc = 0u64;
+            for i in 0..EVALS {
+                let (mine, free_set) = &domains[(i % n_domains) as usize];
+                let (m, f, tie) = keep_or_move_score(*mine, free_set);
+                acc = acc.wrapping_add(m as u64 + f as u64 + tie.0 .0 as u64);
+            }
+            std::hint::black_box(acc);
+        })
+        .expect("benchmark filtered out");
+    let rate = EVALS as f64 / stats.median;
+    println!("keep-or-move scoring: {:.2}M evaluations/s", rate / 1e6);
+    assert!(rate >= 1e6, "scoring must sustain ≥1M evals/s, got {rate:.0}/s");
+}

@@ -320,6 +320,12 @@ pub struct UnicronConfig {
     /// SEV1s in quick succession (~3.0 raw weight) cross the default; a
     /// single failure (1.5) never does.
     pub domain_batch_pressure: f64,
+    /// Layout strategy: `true` commits layouts from the min-churn,
+    /// domain-compact [`crate::placement::assign`] solver; `false` selects
+    /// the topology-blind contiguous reference
+    /// ([`crate::placement::assign_blind`]) — the `placement-frag`
+    /// experiment's baseline arm.
+    pub placement_min_churn: bool,
 }
 
 impl Default for UnicronConfig {
@@ -345,6 +351,7 @@ impl Default for UnicronConfig {
             max_spares: 2,
             domain_batch_window_s: 900.0,
             domain_batch_pressure: 2.5,
+            placement_min_churn: true,
         }
     }
 }

@@ -43,8 +43,13 @@ use crate::util::Clock;
 pub const STATUS_PREFIX: &str = "/status/";
 pub const CMD_PREFIX: &str = "/cmd/";
 /// Fleet-health report published by the loop (ROADMAP fleet follow-up):
-/// per-node history + the cluster-wide EWMA MTBF estimate, as JSON.
+/// per-node history, per-domain MTBF estimates, and the cluster-wide EWMA
+/// MTBF estimate, as JSON.
 pub const FLEET_HEALTH_KEY: &str = "/fleet/health";
+/// The coordinator's authoritative cluster map (per-task node sets),
+/// published beside the health report so operators and tooling see which
+/// concrete nodes serve which task (DESIGN.md §10).
+pub const LAYOUT_KEY: &str = "/fleet/layout";
 
 /// Timed work the live loop schedules on the shared engine queue.
 #[derive(Debug, Clone, Copy)]
@@ -149,6 +154,7 @@ impl CoordinatorLive {
                                 }
                             }
                             publish_fleet_health(&store2, &coord);
+                            publish_layout(&store2, &coord);
                             timers.schedule(clock2.now() + refresh_period, LoopTask::PlanRefresh);
                         }
                         LoopTask::ReplanFlush => {
@@ -309,11 +315,38 @@ fn publish_fleet_health(store: &Store, coord: &Coordinator) {
             v
         })
         .collect();
+    // per-domain MTBF estimates (EWMA, seeded from the cluster prior) —
+    // the ROADMAP PR-4 follow-up's per-domain column
+    let domains: Vec<Value> = coord
+        .fleet
+        .domains()
+        .map(|(&domain, stats)| {
+            Value::obj()
+                .with("domain", domain.0)
+                .with("pressure", coord.fleet.domain_pressure(domain))
+                .with("mtbf_est_s", stats.mtbf_estimate_s())
+                .with("mtbf_observations", stats.observations())
+        })
+        .collect();
     let report = Value::obj()
         .with("mtbf_per_gpu_est_s", coord.fleet.mtbf_per_gpu_estimate_s())
         .with("mtbf_observations", coord.fleet.mtbf_observations())
-        .with("nodes", Value::Arr(nodes));
+        .with("nodes", Value::Arr(nodes))
+        .with("domains", Value::Arr(domains));
     let _ = store.put(FLEET_HEALTH_KEY, &report.encode(), None);
+}
+
+/// Publish the authoritative cluster map under [`LAYOUT_KEY`]: the per-task
+/// node sets of the last committed plan, plus the placeable pool the next
+/// layout can draw from.
+fn publish_layout(store: &Store, coord: &Coordinator) {
+    let report = Value::obj()
+        .with("tasks", coord.layout().to_value())
+        .with(
+            "placeable",
+            coord.placeable_nodes().iter().map(|n| n.0).collect::<Vec<u32>>(),
+        );
+    let _ = store.put(LAYOUT_KEY, &report.encode(), None);
 }
 
 /// Publish agent-executable actions under `/cmd/<node>/<seq>`.
@@ -432,6 +465,17 @@ mod tests {
         let v = Value::parse(&health[0].1).expect("health report must be JSON");
         assert!(v.get("mtbf_per_gpu_est_s").and_then(Value::as_f64).unwrap_or(0.0) > 0.0);
         assert!(v.get("nodes").and_then(Value::as_arr).is_some());
+        assert!(v.get("domains").and_then(Value::as_arr).is_some(), "per-domain MTBF column");
+        // ...and the cluster map beside it
+        let layout = live.store.get_prefix(LAYOUT_KEY);
+        let layout =
+            layout.iter().find(|(k, _)| k == LAYOUT_KEY).expect("layout must be published");
+        let v = Value::parse(&layout.1).expect("layout report must be JSON");
+        assert!(v.get("tasks").and_then(Value::as_arr).is_some());
+        assert!(
+            !v.get("placeable").and_then(Value::as_arr).unwrap_or(&[]).is_empty(),
+            "the placeable pool must list the seeded nodes"
+        );
         live.shutdown();
     }
 }

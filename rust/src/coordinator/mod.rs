@@ -48,12 +48,13 @@
 
 pub mod live;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::UnicronConfig;
 use crate::cost::{CostModel, SpareTerms};
 use crate::failure::Severity;
 use crate::fleet::{DomainId, FleetModel, SpareDecision};
+use crate::placement::{self, ClusterView, Layout};
 use crate::planner::{solve, PlanTask, ScenarioLookup};
 pub use crate::proto::{
     Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId, WorkerCount,
@@ -133,6 +134,13 @@ impl CoordinatorBuilder {
     pub fn build(self) -> Coordinator {
         let fleet = FleetModel::from_config(&self.cfg);
         let cost = CostModel::from_config(&self.cfg);
+        let gpn = self.gpus_per_node.unwrap_or(WorkerCount(8)).0.max(1);
+        // The initial anonymous capacity is realized as concrete node ids
+        // 0..ceil(workers/gpn) — the convention every trace generator and
+        // the simulated cluster use; real deployments grow/replace the set
+        // through NodeJoined/NodeLost as agents register.
+        let placeable: BTreeSet<NodeId> =
+            (0..self.workers.0.div_ceil(gpn)).map(NodeId).collect();
         let mut coord = Coordinator {
             fleet,
             cost,
@@ -140,11 +148,13 @@ impl CoordinatorBuilder {
             tasks: BTreeMap::new(),
             available_workers: self.workers.0,
             peak_workers: self.workers.0,
-            gpus_per_node: self.gpus_per_node.unwrap_or(WorkerCount(8)).0,
+            gpus_per_node: gpn,
             isolated: Vec::new(),
             quarantined: Vec::new(),
             released: Vec::new(),
             pooled: Vec::new(),
+            placeable,
+            layout: Layout::default(),
             escalations: BTreeMap::new(),
             log: DecisionLog::new(),
             lookup: None,
@@ -190,6 +200,17 @@ pub struct Coordinator {
     /// duplicate repair announcement must not either. Initial anonymous
     /// capacity is not tracked here.
     pooled: Vec<NodeId>,
+    /// Concrete placeable node set — the universe [`placement::assign`]
+    /// maps plans onto. Seeded from the initial capacity, grown by joins /
+    /// retained repairs, shrunk by isolations, quarantines, and releases;
+    /// `available_workers ≤ gpus_per_node · |placeable|` is maintained by
+    /// construction (capacity only grows together with a node).
+    placeable: BTreeSet<NodeId>,
+    /// The authoritative cluster map: which concrete nodes serve each task
+    /// (DESIGN.md §10). Updated on every committed plan; rides the plan
+    /// onto the wire ([`crate::planner::Plan::layout`], v4) so recorded
+    /// sessions replay layouts bit-identically.
+    layout: Layout,
     /// Per-node lifetime health history — the lemon/quarantine and spare
     /// decisions' evidence base (fleet layer, DESIGN.md §8).
     pub fleet: FleetModel,
@@ -359,6 +380,18 @@ impl Coordinator {
         &self.cost
     }
 
+    /// The authoritative cluster map: which concrete nodes serve each task
+    /// (empty until the first plan commits).
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// The concrete placeable node set (ascending): healthy nodes the next
+    /// layout can use — quarantined, isolated, and released nodes excluded.
+    pub fn placeable_nodes(&self) -> Vec<NodeId> {
+        self.placeable.iter().copied().collect()
+    }
+
     /// Process one event with no new clock information: delivered at the
     /// last seen timestamp, so time-fed estimators see a zero gap and stay
     /// put. Clockless unit tests and tools use this; real drivers call
@@ -466,6 +499,7 @@ impl Coordinator {
                 self.isolated.retain(|&n| n != node);
                 self.released.retain(|&n| n != node);
                 self.pooled.push(node);
+                self.placeable.insert(node);
                 self.fleet.note_join(node);
                 self.available_workers += self.gpus_per_node;
                 self.peak_workers = self.peak_workers.max(self.available_workers);
@@ -543,6 +577,7 @@ impl Coordinator {
         self.quarantined.push(node);
         self.fleet.note_quarantine(node);
         self.pooled.retain(|&n| n != node);
+        self.placeable.remove(&node);
         let was_isolated = self.isolated.contains(&node);
         self.isolated.retain(|&n| n != node);
         if !was_isolated {
@@ -570,12 +605,14 @@ impl Coordinator {
             self.quarantined.push(node);
             self.fleet.note_quarantine(node);
             self.isolated.retain(|&n| n != node);
+            self.placeable.remove(&node);
             return vec![Action::NodeQuarantined { node }];
         }
         match self.spare_decision() {
             (SpareDecision::Retain, terms) => {
                 self.isolated.retain(|&n| n != node);
                 self.pooled.push(node);
+                self.placeable.insert(node);
                 self.fleet.note_join(node);
                 self.available_workers += self.gpus_per_node;
                 let mut actions = vec![Action::SpareRetained { node }];
@@ -595,6 +632,7 @@ impl Coordinator {
             (SpareDecision::Release, _) => {
                 self.isolated.retain(|&n| n != node);
                 self.released.push(node);
+                self.placeable.remove(&node);
                 self.fleet.note_release(node);
                 vec![Action::SpareReleased { node }]
             }
@@ -628,6 +666,7 @@ impl Coordinator {
         }
         self.isolated.push(node);
         self.pooled.retain(|&n| n != node);
+        self.placeable.remove(&node);
         self.available_workers = self.available_workers.saturating_sub(self.gpus_per_node);
         let mut actions = vec![
             Action::IsolateNode { node },
@@ -679,6 +718,7 @@ impl Coordinator {
             }
         }
         if self.tasks.is_empty() {
+            self.layout = Layout::default(); // nothing left to place
             return vec![];
         }
         // map faulted task ids to positions in id-ordered iteration
@@ -705,7 +745,7 @@ impl Coordinator {
                 .cloned(),
             _ => None,
         };
-        let plan = match precomputed {
+        let mut plan = match precomputed {
             Some(plan) => {
                 self.lookup_hits += 1;
                 plan
@@ -719,6 +759,26 @@ impl Coordinator {
                 solve(&ordered, self.available_workers, &self.cost)
             }
         };
+        // Placement: turn the plan's counts into the concrete cluster map.
+        // Both the table and the solver leave `plan.layout` empty, and the
+        // assignment solver reads only (previous layout, counts, placeable
+        // nodes) — so a table commit and a live solve produce bit-identical
+        // layouts for the same state.
+        let demands: Vec<(TaskId, u32)> =
+            self.tasks.keys().copied().zip(plan.assignment.iter().copied()).collect();
+        let nodes = self.placeable_nodes();
+        let view = ClusterView {
+            nodes: &nodes,
+            gpus_per_node: self.gpus_per_node,
+            nodes_per_domain: self.cfg.nodes_per_domain.max(1),
+        };
+        let layout = if self.cfg.placement_min_churn {
+            placement::assign(&self.layout, &demands, &view)
+        } else {
+            placement::assign_blind(&demands, &view)
+        };
+        self.layout = layout.clone();
+        plan.layout = layout;
         // commit the new assignments; clear fault flags (handled). The
         // precomputed table remains valid only if nothing actually moved.
         let mut changed = false;
@@ -1324,6 +1384,75 @@ mod tests {
             .expect("readmission must replan");
         assert_eq!(plan.breakdown.spare_value, 0.0);
         assert_eq!(plan.breakdown.spare_hold_cost, 0.0);
+    }
+
+    #[test]
+    fn layout_commits_are_concrete_min_churn_and_avoid_fenced_nodes() {
+        let mut c = coord(32);
+        assert_eq!(
+            c.placeable_nodes(),
+            vec![NodeId(0), NodeId(1), NodeId(2), NodeId(3)],
+            "initial capacity seeds concrete node ids"
+        );
+        assert!(c.layout().is_empty(), "no plan committed yet");
+        let a = c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        let plan = match &a[..] {
+            [Action::ApplyPlan { plan, .. }] => plan.clone(),
+            other => panic!("expected one ApplyPlan, got {other:?}"),
+        };
+        assert_eq!(&plan.layout, c.layout(), "the committed layout IS the coordinator's map");
+        assert!(!plan.layout.is_empty());
+        // disjoint, placeable-only
+        let placed: Vec<NodeId> = plan.layout.placed_nodes().collect();
+        let unique: std::collections::BTreeSet<NodeId> = placed.iter().copied().collect();
+        assert_eq!(placed.len(), unique.len());
+        assert!(placed.iter().all(|n| n.0 < 4), "only seeded nodes are placeable: {placed:?}");
+        let before = c.layout().clone();
+
+        // a SEV1 fences node 1: the new layout avoids it and keeps every
+        // surviving node in place (min-churn)
+        let a = c.handle(CoordEvent::ErrorReport {
+            node: NodeId(1),
+            task: TaskId(0),
+            kind: ErrorKind::EccError,
+        });
+        let plan = a
+            .iter()
+            .find_map(|x| match x {
+                Action::ApplyPlan { plan, .. } => Some(plan.clone()),
+                _ => None,
+            })
+            .expect("SEV1 must replan");
+        assert!(!c.placeable_nodes().contains(&NodeId(1)));
+        assert!(plan.layout.owner_of(NodeId(1)).is_none(), "fenced node must not be placed");
+        for moves in plan.layout.diff(&before) {
+            for lost in &moves.lost {
+                assert_eq!(*lost, NodeId(1), "only the fenced node may be lost: {moves:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn topology_blind_knob_selects_the_contiguous_reference() {
+        let blind = UnicronConfig { placement_min_churn: false, ..Default::default() };
+        let mut c = Coordinator::builder()
+            .config(blind)
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .task(plan_task(0, 2, 16, 48))
+            .task(plan_task(1, 2, 16, 48))
+            .build();
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        // contiguous in node-id order: both tasks get placed, and the first
+        // task's nodes all precede the second task's
+        let l = c.layout().clone();
+        let max0 = l.nodes_of(TaskId(0)).iter().map(|n| n.0).max();
+        let min1 = l.nodes_of(TaskId(1)).iter().map(|n| n.0).min();
+        let (max0, min1) = (
+            max0.expect("task 0 must be placed"),
+            min1.expect("task 1 must be placed"),
+        );
+        assert!(max0 < min1, "blind layouts are contiguous: {l}");
     }
 
     #[test]

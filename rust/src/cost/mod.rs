@@ -39,12 +39,42 @@
 //! bit-identically.
 
 use crate::config::{ClusterSpec, ModelSpec, UnicronConfig};
+use crate::failure::{DetectionMethod, ErrorKind};
 use crate::fleet::{SpareDecision, SparePool};
 use crate::transition::{migration_time_s, StateSource};
 
 /// Bytes of migratable training state per parameter: fp16 weights (2) +
 /// fp32 master weights (4) + fp32 Adam moments (8) + gradient slack (2).
 const STATE_BYTES_PER_PARAM: f64 = 16.0;
+
+// ---------------------------------------------------------------------------
+// Table 2 detection latencies
+// ---------------------------------------------------------------------------
+
+/// Table 2 case 1 — node health monitoring (lease TTL): the SEV1 node-drain
+/// path, and the latency the planner prices into every faulted task's
+/// reward (only SEV1-class faults reach a replan).
+pub const DETECT_NODE_HEALTH_S: f64 = 5.6;
+/// Table 2 case 2 — process supervision (agent poll).
+pub const DETECT_PROCESS_S: f64 = 1.8;
+/// Table 2 case 3 — exception propagation (immediate).
+pub const DETECT_EXCEPTION_S: f64 = 0.3;
+/// Table 2 case 4 — online statistical monitoring: 3 × D_iter at the
+/// paper's ~45 s iteration time.
+pub const DETECT_STATISTICAL_S: f64 = 3.0 * 45.0;
+
+/// Table 2 detection latency for one error kind — the per-error-kind time
+/// between the failure and the coordinator learning about it, by the §4.1
+/// method that catches the kind. Work done during this window is lost, so
+/// the ledger prices it into the reward ([`CostBreakdown::detection_penalty`]).
+pub fn detection_latency_s(kind: ErrorKind) -> f64 {
+    match kind.detector() {
+        DetectionMethod::NodeHealthMonitoring => DETECT_NODE_HEALTH_S,
+        DetectionMethod::ProcessSupervision => DETECT_PROCESS_S,
+        DetectionMethod::ExceptionPropagation => DETECT_EXCEPTION_S,
+        DetectionMethod::OnlineStatisticalMonitoring => DETECT_STATISTICAL_S,
+    }
+}
 
 /// Per-task transition pricing, seconds, one entry per §6.3 migration
 /// strategy (nearest first). Derived once per task from its model size and
@@ -180,6 +210,23 @@ impl CostModel {
         self.transition_base_s + profile.migration_s(faulted)
     }
 
+    /// Detection latency the planner prices into a *faulted* task's reward:
+    /// the Table 2 window between the failure and the coordinator learning
+    /// about it, during which the task's work is already lost.
+    ///
+    /// Deliberately **kind-independent** (the SEV1 node-health entry, the
+    /// severity class that ends a plan): the §5.2 scenario tables are
+    /// precomputed *before* the failure whose kind they will serve, so a
+    /// kind-dependent term would make a table hit price differently from
+    /// the live solve it must be bit-identical to. Replans escalated from
+    /// faster-detected kinds (e.g. a SEV2 lemon quarantine) are therefore
+    /// charged conservatively; the exact per-error-kind times remain
+    /// available as [`detection_latency_s`] for observability and the
+    /// environment model's timing ([`crate::simulator::PolicyParams`]).
+    pub fn detection_s(&self) -> f64 {
+        DETECT_NODE_HEALTH_S
+    }
+
     /// WAF one node carries: the proportional share of the cluster's
     /// current WAF attributed to `gpus_per_node` of `pool_gpus` workers.
     pub fn marginal_node_waf(&self, total_waf: f64, pool_gpus: u32, gpus_per_node: u32) -> f64 {
@@ -218,11 +265,12 @@ impl CostModel {
 
 /// Typed explanation of one committed plan, in the ledger's currency.
 /// Carried by every [`crate::planner::Plan`] and serialized with it (wire
-/// v3), so a replayed [`crate::proto::DecisionLog`] explains each decision
+/// v3+), so a replayed [`crate::proto::DecisionLog`] explains each decision
 /// term-by-term.
 ///
-/// Invariant: `objective() = running_reward − transition_penalty` equals
-/// the plan's DP objective to within 1e-9 relative error.
+/// Invariant: `objective() = running_reward − transition_penalty −
+/// detection_penalty` equals the plan's DP objective to within 1e-9
+/// relative error.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct CostBreakdown {
     /// Σ F(tᵢ, xᵢ') · D_running — weighted useful work the plan earns over
@@ -231,6 +279,10 @@ pub struct CostBreakdown {
     /// Σ 1_transition(tᵢ) · F(tᵢ, xᵢ) · d_transition(tᵢ) — work forfeited
     /// while transitioning tasks move state (FLOP·s).
     pub transition_penalty: f64,
+    /// Σ_{faulted i} F(tᵢ, xᵢ) · d_detect — work already lost between the
+    /// failure and its detection (Table 2, wire v4); zero for fault-free
+    /// replans (joins, launches, finishes).
+    pub detection_penalty: f64,
     /// The opportunity horizon `D_running(n)` the plan was priced with (s).
     pub horizon_s: f64,
     /// Effective per-GPU MTBF behind that horizon (s) — the prior, or the
@@ -245,9 +297,10 @@ pub struct CostBreakdown {
 }
 
 impl CostBreakdown {
-    /// The objective the terms reconcile to: reward minus penalty.
+    /// The objective the terms reconcile to: reward minus the transition
+    /// and detection penalties.
     pub fn objective(&self) -> f64 {
-        self.running_reward - self.transition_penalty
+        self.running_reward - self.transition_penalty - self.detection_penalty
     }
 }
 
@@ -340,16 +393,37 @@ mod tests {
     }
 
     #[test]
-    fn breakdown_objective_is_reward_minus_penalty() {
+    fn breakdown_objective_is_reward_minus_penalties() {
         let b = CostBreakdown {
             running_reward: 10.0,
             transition_penalty: 4.0,
+            detection_penalty: 1.0,
             horizon_s: 100.0,
             mtbf_per_gpu_s: 1e6,
             spare_value: 0.0,
             spare_hold_cost: 0.0,
         };
-        assert_eq!(b.objective(), 6.0);
+        assert_eq!(b.objective(), 5.0);
         assert_eq!(CostBreakdown::default().objective(), 0.0);
+    }
+
+    #[test]
+    fn table2_detection_latencies_per_error_kind() {
+        use crate::failure::Severity;
+        // the four §4.1 methods map to their Table 2 times
+        assert_eq!(detection_latency_s(ErrorKind::LostConnection), DETECT_NODE_HEALTH_S);
+        assert_eq!(detection_latency_s(ErrorKind::ExitedAbnormally), DETECT_PROCESS_S);
+        assert_eq!(detection_latency_s(ErrorKind::EccError), DETECT_EXCEPTION_S);
+        assert_eq!(detection_latency_s(ErrorKind::TaskHang), DETECT_STATISTICAL_S);
+        // total over the taxonomy: every kind has a finite positive latency,
+        // and in-band methods beat the 30-minute NCCL timeout by far
+        for &k in ErrorKind::all() {
+            let d = detection_latency_s(k);
+            assert!(d > 0.0 && d < 30.0 * 60.0, "{k:?}: {d}");
+        }
+        // the planner's faulted-task term is the SEV1 (node health) entry
+        let cost = CostModel::from_config(&cfg());
+        assert_eq!(cost.detection_s(), DETECT_NODE_HEALTH_S);
+        assert_eq!(ErrorKind::LostConnection.severity(), Severity::Sev1);
     }
 }

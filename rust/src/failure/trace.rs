@@ -238,6 +238,81 @@ impl Trace {
         self
     }
 
+    /// Fragmentation churn: `n_waves` waves of scattered SEV1s, each wave
+    /// failing one node in *every* failure domain at staggered times with
+    /// fast repairs. Replacement capacity is always in some *other* domain,
+    /// so a topology-blind assignment scatters tasks across racks wave
+    /// after wave — the scenario class the `placement` min-churn solver
+    /// exists to consolidate (`placement-frag` experiment).
+    pub fn with_fragmented_cluster(
+        mut self,
+        nodes_per_domain: u32,
+        n_waves: u32,
+        seed: u64,
+    ) -> Trace {
+        assert!(nodes_per_domain > 0);
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xF4A6_3A11);
+        let n_domains = self.config.n_nodes.div_ceil(nodes_per_domain);
+        let sev1_kinds: Vec<ErrorKind> = ErrorKind::all()
+            .iter()
+            .copied()
+            .filter(|k| k.severity() == Severity::Sev1)
+            .collect();
+        let wave_span = self.config.duration_s / (n_waves as f64 + 1.0);
+        for wave in 0..n_waves {
+            let t0 = (wave as f64 + 0.5) * wave_span;
+            for domain in 0..n_domains {
+                let first = domain * nodes_per_domain;
+                let span = nodes_per_domain.min(self.config.n_nodes - first);
+                let node = first + rng.below(span as u64) as u32;
+                self.events.push(FailureEvent {
+                    at_s: t0 + rng.uniform(0.0, 600.0),
+                    kind: *rng.choose(&sev1_kinds),
+                    node: NodeId(node),
+                    // fast repairs: the node is back well before the next
+                    // wave, so capacity churns instead of shrinking
+                    repair_after_s: rng.uniform(0.05, 0.25) * wave_span,
+                });
+            }
+        }
+        self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        self
+    }
+
+    /// Rack drain: every node of one failure domain SEV1s in sequence from
+    /// `start_s`, one every `interval_s` seconds, with repairs past the end
+    /// of the trace — the domain slowly empties and never comes back, so
+    /// layouts must migrate the hosted tasks off the dying rack. Seedless
+    /// and deterministic, like [`Trace::with_recurrent_lemon`].
+    pub fn with_rack_drain(
+        mut self,
+        domain: u32,
+        nodes_per_domain: u32,
+        start_s: f64,
+        interval_s: f64,
+    ) -> Trace {
+        assert!(nodes_per_domain > 0);
+        assert!(interval_s > 0.0, "drain interval must be positive");
+        let first = domain * nodes_per_domain;
+        assert!(first < self.config.n_nodes, "domain {domain} is outside the cluster");
+        let count = nodes_per_domain.min(self.config.n_nodes - first);
+        let never = 2.0 * self.config.duration_s; // repaired after the credits roll
+        for k in 0..count {
+            let at = start_s + k as f64 * interval_s;
+            if at >= self.config.duration_s {
+                break;
+            }
+            self.events.push(FailureEvent {
+                at_s: at,
+                kind: ErrorKind::GpuDriverError, // SEV1 node drain
+                node: NodeId(first + k),
+                repair_after_s: never,
+            });
+        }
+        self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        self
+    }
+
     /// Recurrent-lemon schedule: `node` fails with `kind` every `period_s`
     /// seconds from `start_s` until `until_s` (clamped to the trace
     /// duration) — the recurrent-failure pattern Meta's reliability study
@@ -450,6 +525,46 @@ mod tests {
         nodes.sort_unstable();
         nodes.dedup();
         assert_eq!(nodes.len(), 3);
+    }
+
+    #[test]
+    fn fragmented_cluster_hits_every_domain_each_wave_with_fast_repairs() {
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_fragmented_cluster(4, 3, 9);
+        // 16 nodes / 4 per domain = 4 domains; 3 waves × 4 domains
+        assert_eq!(t.events.len(), 12);
+        for e in &t.events {
+            assert_eq!(e.severity(), Severity::Sev1);
+            assert!(e.at_s < t.config.duration_s);
+            // fast repairs: back before the next wave
+            assert!(e.repair_after_s < t.config.duration_s / 4.0);
+        }
+        // each wave covers all four domains
+        let domains: std::collections::BTreeSet<u32> =
+            t.events[..4].iter().map(|e| e.node.0 / 4).collect();
+        assert_eq!(domains.len(), 4, "first wave must scatter across every domain");
+        // deterministic per seed, sorted
+        let again = Trace::generate(
+            TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() },
+            0,
+        )
+        .with_fragmented_cluster(4, 3, 9);
+        assert_eq!(t.events, again.events);
+        assert!(t.events.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+    }
+
+    #[test]
+    fn rack_drain_empties_one_domain_for_good() {
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_rack_drain(1, 4, 1000.0, 500.0);
+        assert_eq!(t.events.len(), 4);
+        let times: Vec<f64> = t.events.iter().map(|e| e.at_s).collect();
+        assert_eq!(times, vec![1000.0, 1500.0, 2000.0, 2500.0]);
+        for (k, e) in t.events.iter().enumerate() {
+            assert_eq!(e.node, NodeId(4 + k as u32), "drains domain 1's nodes in order");
+            assert_eq!(e.severity(), Severity::Sev1);
+            assert!(e.repair_after_s > t.config.duration_s, "the rack never comes back");
+        }
     }
 
     #[test]

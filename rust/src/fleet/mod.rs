@@ -130,13 +130,51 @@ impl NodeHealth {
     }
 }
 
+/// Per-domain failure statistics: the decayed burst pressure (event clock,
+/// decision-relevant) and an EWMA inter-failure-time MTBF estimate
+/// (wall-clock-fed, observability only — the `/fleet/health` report's
+/// per-domain column).
+#[derive(Debug, Clone)]
+pub struct DomainStats {
+    /// Decayed failure pressure (see [`FleetModel::domain_pressure`]).
+    pressure: f64,
+    /// Event-clock stamp of the last pressure update.
+    last_seq: u64,
+    /// EWMA of the domain's inter-failure times, seconds — seeded from the
+    /// cluster prior (see [`FleetModel::domain_mtbf_estimate_s`]).
+    ewma_ift_s: f64,
+    /// Wall-clock stamp of the domain's last observed failure.
+    last_failure_at_s: Option<f64>,
+    /// Inter-failure gaps the domain estimate has absorbed.
+    observations: u64,
+}
+
+impl DomainStats {
+    /// The domain's EWMA MTBF estimate, seconds (the seeded prior until
+    /// two failures with observed times have landed in the domain).
+    pub fn mtbf_estimate_s(&self) -> f64 {
+        self.ewma_ift_s
+    }
+
+    /// Inter-failure gaps absorbed so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+}
+
 /// Per-node lifetime state + per-domain failure pressure for the whole
 /// fleet. See the module docs for the scoring model and determinism rules.
 #[derive(Debug, Clone)]
 pub struct FleetModel {
     nodes: BTreeMap<NodeId, NodeHealth>,
-    /// Decayed failure pressure per domain: (score, last update seq).
-    domains: BTreeMap<DomainId, (f64, u64)>,
+    /// Per-domain statistics: burst pressure + EWMA MTBF.
+    domains: BTreeMap<DomainId, DomainStats>,
+    /// Seed for a fresh domain's MTBF estimate: the per-GPU cluster prior
+    /// scaled to node granularity (one failing unit per node) — a domain of
+    /// `nodes_per_domain` nodes is expected to fail that much more often
+    /// than a single GPU-group. Observability only, so the scaling
+    /// convention matters less than its consistency across domains.
+    domain_prior_s: f64,
     /// Event clock: one tick per coordinator event (not wall time).
     seq: u64,
     nodes_per_domain: u32,
@@ -154,11 +192,13 @@ pub struct FleetModel {
 
 impl FleetModel {
     pub fn from_config(cfg: &UnicronConfig) -> FleetModel {
+        let nodes_per_domain = cfg.nodes_per_domain.max(1);
         FleetModel {
             nodes: BTreeMap::new(),
             domains: BTreeMap::new(),
+            domain_prior_s: cfg.mtbf_per_gpu_s / nodes_per_domain as f64,
             seq: 0,
-            nodes_per_domain: cfg.nodes_per_domain.max(1),
+            nodes_per_domain,
             decay: cfg.lemon_decay,
             threshold: cfg.lemon_threshold,
             mtbf_per_gpu_est_s: cfg.mtbf_per_gpu_s,
@@ -201,16 +241,27 @@ impl FleetModel {
         h.failures += 1;
         let score = h.score;
         let domain = self.domain_of(node);
-        let d = self.domains.entry(domain).or_insert((0.0, seq));
-        let ddt = seq.saturating_sub(d.1);
-        d.0 = decayed(d.0, decay, ddt) + w;
-        d.1 = seq;
+        let d = self.domain_entry(domain);
+        let ddt = seq.saturating_sub(d.last_seq);
+        d.pressure = decayed(d.pressure, decay, ddt) + w;
+        d.last_seq = seq;
         score
     }
 
+    fn domain_entry(&mut self, domain: DomainId) -> &mut DomainStats {
+        let prior = self.domain_prior_s;
+        self.domains.entry(domain).or_insert_with(|| DomainStats {
+            pressure: 0.0,
+            last_seq: 0,
+            ewma_ift_s: prior,
+            last_failure_at_s: None,
+            observations: 0,
+        })
+    }
+
     /// Feed the wall-clock time of a failure on `node` (drivers that have a
-    /// clock). Updates the EWMA inter-failure-time MTBF estimate —
-    /// observability only, never read by decisions.
+    /// clock). Updates the node's *and its domain's* EWMA inter-failure-time
+    /// MTBF estimates — observability only, never read by decisions.
     pub fn observe_failure_time(&mut self, node: NodeId, at_s: f64) {
         let h = self.entry(node);
         if let Some(prev) = h.last_failure_at_s {
@@ -221,6 +272,20 @@ impl FleetModel {
             });
         }
         h.last_failure_at_s = Some(at_s);
+        // the domain's estimate: EWMA over the domain's own failure gaps,
+        // starting at the cluster-prior seed (zero/negative gaps — burst
+        // members, out-of-order feeds — are not independent samples)
+        let domain = self.domain_of(node);
+        let d = self.domain_entry(domain);
+        if let Some(prev) = d.last_failure_at_s {
+            let gap = at_s - prev;
+            if gap > 0.0 {
+                d.ewma_ift_s = EWMA_ALPHA * gap + (1.0 - EWMA_ALPHA) * d.ewma_ift_s;
+                d.observations += 1;
+            }
+        }
+        let anchor = d.last_failure_at_s.map_or(at_s, |p| p.max(at_s));
+        d.last_failure_at_s = Some(anchor);
     }
 
     /// Feed the wall-clock time of *any* failure in a pool of `pool_gpus`
@@ -300,9 +365,23 @@ impl FleetModel {
     /// what independent node failures produce.
     pub fn domain_pressure(&self, domain: DomainId) -> f64 {
         match self.domains.get(&domain) {
-            Some(&(score, last)) => decayed(score, self.decay, self.seq.saturating_sub(last)),
+            Some(d) => decayed(d.pressure, self.decay, self.seq.saturating_sub(d.last_seq)),
             None => 0.0,
         }
+    }
+
+    /// The domain's EWMA MTBF estimate, seconds: the cluster-prior seed
+    /// (`mtbf_per_gpu_s / nodes_per_domain`) until the domain has observed
+    /// failure gaps, then the EWMA-tightened value. Observability only —
+    /// the `/fleet/health` report's per-domain column (ROADMAP PR-4
+    /// follow-up).
+    pub fn domain_mtbf_estimate_s(&self, domain: DomainId) -> f64 {
+        self.domains.get(&domain).map_or(self.domain_prior_s, |d| d.ewma_ift_s)
+    }
+
+    /// All domains with recorded history, ascending id, with their stats.
+    pub fn domains(&self) -> impl Iterator<Item = (&DomainId, &DomainStats)> {
+        self.domains.iter()
     }
 
     /// True when a domain's pressure indicates a correlated (switch/rack)
@@ -600,6 +679,35 @@ mod tests {
         assert!(est < prior / 10.0, "estimate must tighten: {est} vs prior {prior}");
         assert!(est > 3600.0 * 128.0 * 0.99, "never below the observed rate: {est}");
         assert_eq!(f.mtbf_observations(), 40);
+    }
+
+    #[test]
+    fn domain_mtbf_seeds_from_the_cluster_prior_and_tightens_per_domain() {
+        let mut f = fleet();
+        let prior = cfg().mtbf_per_gpu_s / cfg().nodes_per_domain as f64;
+        let d0 = f.domain_of(NodeId(0));
+        let d1 = f.domain_of(NodeId(4));
+        // unseen domains report the seeded prior
+        assert_eq!(f.domain_mtbf_estimate_s(d0), prior);
+        // hourly failures across domain 0's nodes tighten d0's estimate;
+        // d1 never fails and keeps the prior
+        for k in 0..20u32 {
+            let node = NodeId(k % 4); // all of domain 0
+            f.tick();
+            f.note_failure(node, Severity::Sev2);
+            f.observe_failure_time(node, 3600.0 * k as f64);
+        }
+        let est = f.domain_mtbf_estimate_s(d0);
+        assert!(est < prior / 10.0, "domain estimate must tighten: {est} vs {prior}");
+        assert!(est > 3600.0 * 0.99, "never below the observed domain rate: {est}");
+        assert_eq!(f.domain_mtbf_estimate_s(d1), prior);
+        // zero-gap burst members are not independent samples
+        let stats = f.domains().find(|(&d, _)| d == d0).map(|(_, s)| s.clone()).unwrap();
+        let obs = stats.observations();
+        f.observe_failure_time(NodeId(1), 3600.0 * 19.0); // same instant as last
+        let stats = f.domains().find(|(&d, _)| d == d0).map(|(_, s)| s.clone()).unwrap();
+        assert_eq!(stats.observations(), obs);
+        assert_eq!(stats.mtbf_estimate_s(), est);
     }
 
     #[test]

@@ -23,6 +23,9 @@
 //!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
 //! * fleet economics: [`fleet`] — node health history, lemon detection,
 //!   and the cost-aware hot-spare pool (DESIGN.md §8)
+//! * topology: [`placement`] — the min-churn node-to-task assignment
+//!   solver and the [`placement::Layout`] cluster map every committed plan
+//!   carries (DESIGN.md §10)
 //! * execution: [`runtime`], [`trainer`], [`data`]
 //! * evaluation: [`simulator`] (environment model around the production
 //!   coordinator), [`repro`]
@@ -43,6 +46,7 @@ pub mod kvstore;
 pub mod membership;
 pub mod metrics;
 pub mod perfmodel;
+pub mod placement;
 pub mod planner;
 pub mod proptest;
 pub mod proto;

@@ -247,6 +247,17 @@ fn cmd_plan(argv: &[String]) -> Result<(), String> {
         );
     }
     println!("total WAF {}FLOP/s, workers used {}/{gpus}", fmt_si(plan.total_waf), plan.workers_used);
+    let b = &plan.breakdown;
+    println!(
+        "ledger: objective {}FLOP·s = running {}FLOP·s - transition {}FLOP·s - detection {}FLOP·s \
+         (horizon {}, MTBF/GPU {})",
+        fmt_si(plan.objective),
+        fmt_si(b.running_reward),
+        fmt_si(b.transition_penalty),
+        fmt_si(b.detection_penalty),
+        fmt_duration(b.horizon_s),
+        fmt_duration(b.mtbf_per_gpu_s),
+    );
     Ok(())
 }
 

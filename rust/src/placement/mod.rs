@@ -1,0 +1,684 @@
+//! Placement: topology-aware node-to-task assignment (DESIGN.md §10).
+//!
+//! The §5 planner decides *how many* workers each task gets and the §6.3
+//! transition strategy prices *how far* state must move — but until this
+//! module nothing decided *which* nodes serve which task:
+//! `Plan.assignment` was a bare count vector and every driver implicitly
+//! assumed free, topology-blind shuffling. Real clusters fail by rack and
+//! switch domain, and placement churn dominates restart cost, so the
+//! missing link between the cost ledger and the fleet model is a concrete,
+//! deterministic cluster map:
+//!
+//! * [`Layout`] — the coordinator's authoritative map from [`TaskId`] to
+//!   the sorted set of [`NodeId`]s serving it. Every committed
+//!   [`crate::planner::Plan`] carries one (wire v4), so layouts are
+//!   recorded in the decision log and replayed bit-identically.
+//! * [`assign`] — the min-churn solver: first **maximize nodes kept in
+//!   place** (a worker that stays put pays nothing), then prefer
+//!   **domain-compact** fills (new nodes drawn from domains where the task
+//!   already lives, else from the emptiest free domain so the task can
+//!   consolidate). Quarantined/isolated nodes are simply absent from the
+//!   [`ClusterView`] — the fleet's exclusion set is respected by
+//!   construction.
+//! * [`assign_blind`] — the topology-blind reference (contiguous
+//!   assignment in node-id order, ignoring the previous layout): the
+//!   pre-placement behaviour, kept as the `placement-frag` experiment's
+//!   baseline and selectable via `UnicronConfig::placement_min_churn`.
+//! * [`TaskMoves`] / [`Layout::diff`] — per-task move accounting feeding
+//!   the cost ledger real migration facts: kept nodes are free, gained
+//!   nodes pay the task's §6.3 strategy price
+//!   ([`TaskMoves::migration_s`]).
+//!
+//! # Determinism
+//!
+//! [`assign`] is a pure function of `(previous layout, demands in task-id
+//! order, placeable node list, domain geometry)` — all of which are
+//! functions of the recorded event stream — so a replayed
+//! [`crate::proto::DecisionLog`] reproduces every layout bit-identically,
+//! and a plan served from the §5.2 precomputed table commits the exact
+//! layout a live solve would (the counts are identical, and placement only
+//! reads the counts).
+//!
+//! # Optimality
+//!
+//! Because each node serves at most one task, the previous per-task node
+//! sets are disjoint; keeping is therefore contention-free and the greedy
+//! keep phase attains the true maximum-keep matching
+//! `Σᵢ min(needᵢ, |prevᵢ ∩ healthy|)` — pinned against brute-force
+//! matching on small instances by the property test below.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::cost::{CostModel, TransitionProfile};
+use crate::fleet::DomainId;
+use crate::proto::{NodeId, TaskId};
+use crate::ser::Value;
+
+/// The placement solver's view of the cluster: the placeable nodes (healthy,
+/// not quarantined/isolated/released — the fleet's exclusion set is applied
+/// by the caller), how many GPUs each contributes, and the rack/switch
+/// geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterView<'a> {
+    /// Placeable nodes, ascending id.
+    pub nodes: &'a [NodeId],
+    pub gpus_per_node: u32,
+    /// Failure-domain geometry: `domain = node / nodes_per_domain`, the same
+    /// mapping [`crate::fleet::FleetModel::domain_of`] uses.
+    pub nodes_per_domain: u32,
+}
+
+impl ClusterView<'_> {
+    pub fn domain_of(&self, node: NodeId) -> DomainId {
+        DomainId(node.0 / self.nodes_per_domain.max(1))
+    }
+
+    /// Whole nodes needed to host `workers` GPUs.
+    pub fn nodes_needed(&self, workers: u32) -> usize {
+        let gpn = self.gpus_per_node.max(1);
+        workers.div_ceil(gpn) as usize
+    }
+}
+
+/// The authoritative cluster map: which concrete nodes serve each task.
+/// Node lists are sorted ascending; every task the layout was solved for is
+/// present (possibly with an empty list when it was assigned zero workers
+/// or the pool ran dry). The default (empty) layout is what topology-blind
+/// policies (the §7 baselines) publish.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Layout {
+    tasks: BTreeMap<TaskId, Vec<NodeId>>,
+}
+
+impl Layout {
+    /// Build a layout from explicit per-task node sets (tests, tools).
+    pub fn new(entries: impl IntoIterator<Item = (TaskId, Vec<NodeId>)>) -> Layout {
+        let mut tasks: BTreeMap<TaskId, Vec<NodeId>> = entries.into_iter().collect();
+        for nodes in tasks.values_mut() {
+            nodes.sort_unstable();
+        }
+        Layout { tasks }
+    }
+
+    /// True when the layout holds no task entries at all (a topology-blind
+    /// plan). A layout whose tasks all have empty node lists is *not*
+    /// empty — it states that every task is unplaced.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Number of task entries.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Nodes serving `task` (empty if unknown).
+    pub fn nodes_of(&self, task: TaskId) -> &[NodeId] {
+        self.tasks.get(&task).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Which task `node` serves, if any.
+    pub fn owner_of(&self, node: NodeId) -> Option<TaskId> {
+        self.tasks
+            .iter()
+            .find(|(_, nodes)| nodes.binary_search(&node).is_ok())
+            .map(|(&task, _)| task)
+    }
+
+    /// `(task, nodes)` entries in ascending task-id order.
+    pub fn iter(&self) -> impl Iterator<Item = (TaskId, &[NodeId])> {
+        self.tasks.iter().map(|(&t, ns)| (t, ns.as_slice()))
+    }
+
+    /// All placed nodes across tasks (each node appears at most once — the
+    /// solver never double-books).
+    pub fn placed_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.tasks.values().flatten().copied()
+    }
+
+    /// Distinct failure domains `task` is spread over — the fragmentation
+    /// metric the `placement-frag` experiment reports.
+    pub fn domain_spread(&self, task: TaskId, nodes_per_domain: u32) -> usize {
+        let npd = nodes_per_domain.max(1);
+        let domains: BTreeSet<u32> =
+            self.nodes_of(task).iter().map(|n| n.0 / npd).collect();
+        domains.len()
+    }
+
+    /// Per-task move accounting against `prev`: which nodes were kept in
+    /// place, which were gained (state must be pulled in), which were lost.
+    pub fn diff(&self, prev: &Layout) -> Vec<TaskMoves> {
+        self.tasks
+            .iter()
+            .map(|(&task, nodes)| {
+                let before: BTreeSet<NodeId> = prev.nodes_of(task).iter().copied().collect();
+                let after: BTreeSet<NodeId> = nodes.iter().copied().collect();
+                TaskMoves {
+                    task,
+                    kept: after.intersection(&before).copied().collect(),
+                    gained: after.difference(&before).copied().collect(),
+                    lost: before.difference(&after).copied().collect(),
+                }
+            })
+            .collect()
+    }
+
+    /// Tagged-JSON encoding: an array of `{"task": id, "nodes": [ids]}` in
+    /// ascending task order (deterministic, replay-stable).
+    pub fn to_value(&self) -> Value {
+        Value::Arr(
+            self.tasks
+                .iter()
+                .map(|(t, ns)| {
+                    Value::obj()
+                        .with("task", t.0)
+                        .with("nodes", ns.iter().map(|n| n.0).collect::<Vec<u32>>())
+                })
+                .collect(),
+        )
+    }
+
+    /// Strict decode (inverse of [`Layout::to_value`]): malformed entries,
+    /// repeated tasks, and double-booked nodes (one node listed under two
+    /// tasks, or twice in one) are rejected, never repaired — a tampered
+    /// cluster map must not replay.
+    pub fn from_value(v: &Value) -> Result<Layout, String> {
+        let arr = v.as_arr().ok_or("layout is not an array")?;
+        let mut tasks = BTreeMap::new();
+        let mut booked: BTreeSet<NodeId> = BTreeSet::new();
+        for entry in arr {
+            let task = entry
+                .get("task")
+                .and_then(Value::as_u64)
+                .and_then(|x| u32::try_from(x).ok())
+                .ok_or("layout entry field \"task\" is not a u32")?;
+            let nodes = entry
+                .get("nodes")
+                .and_then(Value::as_arr)
+                .ok_or("layout entry field \"nodes\" is not an array")?
+                .iter()
+                .map(|n| {
+                    n.as_u64()
+                        .and_then(|x| u32::try_from(x).ok())
+                        .map(NodeId)
+                        .ok_or("layout node is not a u32")
+                })
+                .collect::<Result<Vec<NodeId>, &str>>()?;
+            if !nodes.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("layout nodes for task {task} are not strictly ascending"));
+            }
+            for &n in &nodes {
+                if !booked.insert(n) {
+                    return Err(format!("layout places node {n} twice"));
+                }
+            }
+            if tasks.insert(TaskId(task), nodes).is_some() {
+                return Err(format!("layout repeats task {task}"));
+            }
+        }
+        Ok(Layout::new(tasks))
+    }
+}
+
+impl fmt::Display for Layout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, (t, ns)) in self.tasks.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "task {t}: {:?}", ns.iter().map(|n| n.0).collect::<Vec<u32>>())?;
+        }
+        Ok(())
+    }
+}
+
+/// One task's placement delta between two layouts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskMoves {
+    pub task: TaskId,
+    /// Nodes serving the task in both layouts — their workers stay in place
+    /// and pay nothing.
+    pub kept: Vec<NodeId>,
+    /// Nodes newly serving the task — state must be pulled onto them.
+    pub gained: Vec<NodeId>,
+    /// Nodes the task no longer uses.
+    pub lost: Vec<NodeId>,
+}
+
+impl TaskMoves {
+    /// GPUs whose state must move onto the gained nodes: workers pack onto
+    /// the kept nodes first (they stay in place and pay nothing), so only
+    /// the overflow migrates — capped by the gained nodes' capacity.
+    pub fn gained_gpus(&self, gpus_per_node: u32, new_workers: u32) -> u32 {
+        let gpn = gpus_per_node.max(1);
+        let kept_capacity = self.kept.len() as u32 * gpn;
+        ((self.gained.len() as u32) * gpn).min(new_workers.saturating_sub(kept_capacity))
+    }
+
+    /// The migration fact this move feeds the ledger: a task whose every
+    /// worker stayed in place pays nothing; one that pulled state onto new
+    /// nodes (or lost its nearest replica — `faulted`) pays its §6.3
+    /// strategy price plus the flat orchestration overhead.
+    pub fn migration_s(&self, profile: &TransitionProfile, cost: &CostModel, faulted: bool) -> f64 {
+        if self.gained.is_empty() && !faulted {
+            0.0
+        } else {
+            cost.transition_s(profile, faulted)
+        }
+    }
+}
+
+/// Keep-or-move score of pulling a task's next node from one domain,
+/// higher wins: co-locate with the task's existing nodes first
+/// (`mine_in_domain`), else prefer the domain with the most free nodes (so
+/// the task can consolidate into it), ties to the domain holding the
+/// lowest free node id. Equivalent to scoring every free node individually
+/// — the best node is always the lowest-id free node of the best domain —
+/// but evaluated once per domain, which keeps a full fill O(#domains) per
+/// pick instead of O(#free). `benches/placement.rs` pins this evaluation
+/// at ≥ 1M/s.
+#[inline]
+pub fn keep_or_move_score(
+    mine_in_domain: u32,
+    free_in_domain: &BTreeSet<NodeId>,
+) -> (u32, usize, std::cmp::Reverse<NodeId>) {
+    (
+        mine_in_domain,
+        free_in_domain.len(),
+        std::cmp::Reverse(free_in_domain.first().copied().unwrap_or(NodeId(u32::MAX))),
+    )
+}
+
+/// The min-churn, domain-compact assignment solver. `demands` are
+/// `(task, workers)` in ascending task-id order — the same order every
+/// `Plan.assignment` uses. See the module docs for the objective.
+///
+/// Best-effort on infeasible packings: if whole-node demands exceed the
+/// placeable pool (worker counts that are not node-multiples can overbook
+/// nodes), earlier tasks are served first and the shortfall shows up as a
+/// shorter node list — never a shared or phantom node.
+pub fn assign(prev: &Layout, demands: &[(TaskId, u32)], view: &ClusterView) -> Layout {
+    let node_set: BTreeSet<NodeId> = view.nodes.iter().copied().collect();
+    let mut used: BTreeSet<NodeId> = BTreeSet::new();
+    let mut out: BTreeMap<TaskId, Vec<NodeId>> = BTreeMap::new();
+
+    // Phase 1 — keeps. Previous per-task sets are disjoint, so each task
+    // keeping its own healthy nodes (up to demand) is the maximum-keep
+    // matching. Within a task, keep the domain-compact subset: nodes from
+    // the domains where the task has the most survivors first.
+    let mut shortfall: Vec<(TaskId, usize)> = Vec::with_capacity(demands.len());
+    for &(task, workers) in demands {
+        let need = view.nodes_needed(workers);
+        let mut healthy: Vec<NodeId> =
+            prev.nodes_of(task).iter().copied().filter(|n| node_set.contains(n)).collect();
+        let mut per_domain: BTreeMap<DomainId, u32> = BTreeMap::new();
+        for &n in &healthy {
+            *per_domain.entry(view.domain_of(n)).or_insert(0) += 1;
+        }
+        healthy.sort_by_key(|&n| {
+            let d = view.domain_of(n);
+            (std::cmp::Reverse(per_domain[&d]), d, n)
+        });
+        healthy.truncate(need);
+        used.extend(healthy.iter().copied());
+        shortfall.push((task, need - healthy.len()));
+        healthy.sort_unstable();
+        out.insert(task, healthy);
+    }
+
+    // Phase 2 — fills from the free pool, domain-compact, task-id order.
+    let mut free: BTreeMap<DomainId, BTreeSet<NodeId>> = BTreeMap::new();
+    for &n in node_set.difference(&used) {
+        free.entry(view.domain_of(n)).or_default().insert(n);
+    }
+    for (task, need) in shortfall {
+        if need == 0 {
+            continue;
+        }
+        let assigned = out.get_mut(&task).expect("phase 1 inserted every task");
+        let mut mine: BTreeMap<DomainId, u32> = BTreeMap::new();
+        for &n in assigned.iter() {
+            *mine.entry(view.domain_of(n)).or_insert(0) += 1;
+        }
+        for _ in 0..need {
+            let best = free
+                .iter()
+                .filter(|&(_, nodes)| !nodes.is_empty())
+                .max_by_key(|&(d, nodes)| {
+                    keep_or_move_score(mine.get(d).copied().unwrap_or(0), nodes)
+                })
+                .map(|(&d, _)| d);
+            let Some(d) = best else {
+                break; // pool ran dry: honest shortfall
+            };
+            let nodes = free.get_mut(&d).expect("best domain came from the free map");
+            let pick = *nodes.first().expect("best domain is non-empty");
+            nodes.remove(&pick);
+            *mine.entry(d).or_insert(0) += 1;
+            assigned.push(pick);
+        }
+        assigned.sort_unstable();
+    }
+    Layout { tasks: out }
+}
+
+/// Topology-blind reference assignment: contiguous whole-node chunks in
+/// node-id order, ignoring the previous layout entirely — the convention
+/// the pre-placement simulator hard-coded. Every reconfiguration reshuffles
+/// everyone, which is exactly the churn [`assign`] exists to avoid; the
+/// `placement-frag` experiment pins the gap.
+pub fn assign_blind(demands: &[(TaskId, u32)], view: &ClusterView) -> Layout {
+    let mut cursor = 0usize;
+    let mut out = BTreeMap::new();
+    for &(task, workers) in demands {
+        let need = view.nodes_needed(workers);
+        let end = (cursor + need).min(view.nodes.len());
+        out.insert(task, view.nodes[cursor..end].to_vec());
+        cursor = end;
+    }
+    Layout { tasks: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::UnicronConfig;
+    use crate::proptest::{run, Config, Prop};
+    use crate::rng::{Rand, Xoshiro256};
+
+    fn nodes(ids: &[u32]) -> Vec<NodeId> {
+        ids.iter().copied().map(NodeId).collect()
+    }
+
+    fn view(ns: &[NodeId], gpn: u32, npd: u32) -> ClusterView<'_> {
+        ClusterView { nodes: ns, gpus_per_node: gpn, nodes_per_domain: npd }
+    }
+
+    /// Brute-force maximum-keep matching: every disjoint way of giving each
+    /// task *up to* its needed node count from the pool (under-assignment
+    /// allowed — the solver's honest-shortfall semantics), maximizing total
+    /// keeps over all of them.
+    fn brute_max_keeps(prev: &Layout, demands: &[(TaskId, u32)], v: &ClusterView) -> usize {
+        fn rec(
+            i: usize,
+            demands: &[(TaskId, usize)],
+            prev: &Layout,
+            free: &mut Vec<NodeId>,
+            chosen: &mut Vec<(TaskId, Vec<NodeId>)>,
+            best: &mut usize,
+        ) {
+            if i == demands.len() {
+                let keeps: usize = chosen
+                    .iter()
+                    .map(|(t, ns)| {
+                        ns.iter().filter(|n| prev.nodes_of(*t).contains(*n)).count()
+                    })
+                    .sum();
+                *best = (*best).max(keeps);
+                return;
+            }
+            let (task, need) = demands[i];
+            // enumerate all subsets of `free` with size 0..=need
+            fn subsets(
+                free: &[NodeId],
+                max_k: usize,
+                start: usize,
+                cur: &mut Vec<NodeId>,
+                out: &mut Vec<Vec<NodeId>>,
+            ) {
+                out.push(cur.clone());
+                if cur.len() == max_k {
+                    return;
+                }
+                for j in start..free.len() {
+                    cur.push(free[j]);
+                    subsets(free, max_k, j + 1, cur, out);
+                    cur.pop();
+                }
+            }
+            let mut subs = Vec::new();
+            subsets(free, need.min(free.len()), 0, &mut Vec::new(), &mut subs);
+            for sub in subs {
+                let saved = free.clone();
+                free.retain(|n| !sub.contains(n));
+                chosen.push((task, sub));
+                rec(i + 1, demands, prev, free, chosen, best);
+                chosen.pop();
+                *free = saved;
+            }
+        }
+        let demands: Vec<(TaskId, usize)> =
+            demands.iter().map(|&(t, w)| (t, v.nodes_needed(w))).collect();
+        let mut free: Vec<NodeId> = v.nodes.to_vec();
+        let mut best = 0;
+        rec(0, &demands, prev, &mut free, &mut Vec::new(), &mut best);
+        best
+    }
+
+    fn keeps_of(layout: &Layout, prev: &Layout) -> usize {
+        layout.diff(prev).iter().map(|m| m.kept.len()).sum()
+    }
+
+    #[test]
+    fn fresh_assignment_is_compact_and_disjoint() {
+        let ns = nodes(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        let v = view(&ns, 8, 4);
+        let layout = assign(
+            &Layout::default(),
+            &[(TaskId(0), 32), (TaskId(1), 32)],
+            &v,
+        );
+        assert_eq!(layout.nodes_of(TaskId(0)).len(), 4);
+        assert_eq!(layout.nodes_of(TaskId(1)).len(), 4);
+        // disjoint
+        let all: BTreeSet<NodeId> = layout.placed_nodes().collect();
+        assert_eq!(all.len(), 8);
+        // each task fits exactly one domain (4 nodes per domain)
+        assert_eq!(layout.domain_spread(TaskId(0), 4), 1);
+        assert_eq!(layout.domain_spread(TaskId(1), 4), 1);
+    }
+
+    #[test]
+    fn min_churn_keeps_surviving_nodes_in_place() {
+        let ns = nodes(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        let v = view(&ns, 8, 4);
+        let prev = Layout::new([
+            (TaskId(0), nodes(&[0, 1, 2, 3])),
+            (TaskId(1), nodes(&[4, 5, 6, 7])),
+        ]);
+        // node 5 dies and spare node 8 is placeable: task 1 must keep 4/6/7
+        // and pull exactly one new node
+        let healthy = nodes(&[0, 1, 2, 3, 4, 6, 7, 8]);
+        let v2 = view(&healthy, 8, 4);
+        let layout = assign(&prev, &[(TaskId(0), 32), (TaskId(1), 32)], &v2);
+        let moves = layout.diff(&prev);
+        assert_eq!(moves[0].kept, nodes(&[0, 1, 2, 3]), "untouched task keeps everything");
+        assert!(moves[0].gained.is_empty() && moves[0].lost.is_empty());
+        assert_eq!(moves[1].kept, nodes(&[4, 6, 7]));
+        assert_eq!(moves[1].lost, nodes(&[5]));
+        assert_eq!(moves[1].gained.len(), 1, "exactly the replacement moves");
+    }
+
+    #[test]
+    fn fills_prefer_the_tasks_existing_domain() {
+        // task 0 lives in domain 1 (nodes 4..8); a free node exists in both
+        // domain 0 and domain 1 — the fill must co-locate.
+        let ns = nodes(&[0, 4, 5, 6, 7]);
+        let v = view(&ns, 8, 4);
+        let prev = Layout::new([(TaskId(0), nodes(&[4, 5, 6]))]);
+        let layout = assign(&prev, &[(TaskId(0), 32)], &v);
+        assert_eq!(layout.nodes_of(TaskId(0)), nodes(&[4, 5, 6, 7]).as_slice());
+    }
+
+    #[test]
+    fn consolidation_prefers_the_emptiest_free_domain() {
+        // fresh task, free nodes: 1 in domain 0, 3 in domain 1 — picking the
+        // fuller domain lets the whole task fit one rack
+        let ns = nodes(&[0, 4, 5, 6]);
+        let v = view(&ns, 8, 4);
+        let layout = assign(&Layout::default(), &[(TaskId(0), 24)], &v);
+        assert_eq!(layout.nodes_of(TaskId(0)), nodes(&[4, 5, 6]).as_slice());
+        assert_eq!(layout.domain_spread(TaskId(0), 4), 1);
+    }
+
+    #[test]
+    fn blind_assignment_ignores_history() {
+        let ns = nodes(&[0, 1, 2, 3]);
+        let v = view(&ns, 8, 4);
+        let prev = Layout::new([(TaskId(0), nodes(&[2, 3])), (TaskId(1), nodes(&[0, 1]))]);
+        let layout = assign_blind(&[(TaskId(0), 16), (TaskId(1), 16)], &v);
+        // contiguous in id order, prev be damned
+        assert_eq!(layout.nodes_of(TaskId(0)), nodes(&[0, 1]).as_slice());
+        assert_eq!(layout.nodes_of(TaskId(1)), nodes(&[2, 3]).as_slice());
+        assert_eq!(keeps_of(&layout, &prev), 0);
+    }
+
+    #[test]
+    fn overbooked_pool_serves_earlier_tasks_first() {
+        let ns = nodes(&[0]);
+        let v = view(&ns, 8, 4);
+        let layout =
+            assign(&Layout::default(), &[(TaskId(0), 4), (TaskId(1), 4)], &v);
+        assert_eq!(layout.nodes_of(TaskId(0)).len(), 1);
+        assert_eq!(layout.nodes_of(TaskId(1)).len(), 0, "honest shortfall, no sharing");
+    }
+
+    #[test]
+    fn zero_worker_tasks_keep_an_empty_entry() {
+        let ns = nodes(&[0, 1]);
+        let v = view(&ns, 8, 4);
+        let layout = assign(&Layout::default(), &[(TaskId(0), 8), (TaskId(1), 0)], &v);
+        assert!(!layout.is_empty());
+        assert_eq!(layout.len(), 2);
+        assert!(layout.nodes_of(TaskId(1)).is_empty());
+        assert_eq!(layout.owner_of(NodeId(0)), Some(TaskId(0)));
+        assert_eq!(layout.owner_of(NodeId(1)), None);
+    }
+
+    #[test]
+    fn move_accounting_prices_kept_free_and_gained_at_strategy_price() {
+        let cost = CostModel::from_config(&UnicronConfig::default());
+        let profile = TransitionProfile { replica_s: 2.0, inmem_s: 40.0, remote_s: 300.0 };
+        let stay = TaskMoves { task: TaskId(0), kept: nodes(&[0, 1]), gained: vec![], lost: vec![] };
+        assert_eq!(stay.migration_s(&profile, &cost, false), 0.0, "staying is free");
+        let pull =
+            TaskMoves { task: TaskId(0), kept: nodes(&[0]), gained: nodes(&[5]), lost: nodes(&[1]) };
+        assert_eq!(
+            pull.migration_s(&profile, &cost, false),
+            cost.transition_base_s() + profile.replica_s,
+            "a planned pull pays the replica path"
+        );
+        assert_eq!(
+            pull.migration_s(&profile, &cost, true),
+            cost.transition_base_s() + profile.inmem_s,
+            "a faulted pull pays the in-memory checkpoint path"
+        );
+        // one kept node (8 slots) + one gained: at 12 workers only the 4
+        // that overflow the kept node migrate; at 3 everything fits in place
+        assert_eq!(pull.gained_gpus(8, 12), 4);
+        assert_eq!(pull.gained_gpus(8, 3), 0, "workers packing onto kept nodes never move");
+        let fresh = TaskMoves {
+            task: TaskId(1),
+            kept: vec![],
+            gained: nodes(&[0, 1]),
+            lost: vec![],
+        };
+        assert_eq!(fresh.gained_gpus(8, 12), 12, "a cold start moves every worker");
+    }
+
+    #[test]
+    fn layout_json_round_trips_and_rejects_tampering() {
+        let layout = Layout::new([
+            (TaskId(0), nodes(&[0, 3])),
+            (TaskId(2), nodes(&[])),
+            (TaskId(7), nodes(&[1, 2, 9])),
+        ]);
+        let text = layout.to_value().encode();
+        let back = Layout::from_value(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, layout);
+        // non-array, bad node, repeated task, double-booked node: rejected
+        assert!(Layout::from_value(&Value::obj()).is_err());
+        let bad = text.replace("\"nodes\":[0,3]", "\"nodes\":[0,-3]");
+        assert!(Layout::from_value(&Value::parse(&bad).unwrap()).is_err());
+        let bad = text.replace("\"task\":2", "\"task\":0");
+        assert!(Layout::from_value(&Value::parse(&bad).unwrap()).is_err());
+        // node 1 already serves task 7: listing it under task 2 as well is
+        // a corrupt map, not a decodable one
+        let bad = text.replace("\"nodes\":[],\"task\":2", "\"nodes\":[1],\"task\":2");
+        assert!(bad != text);
+        assert!(Layout::from_value(&Value::parse(&bad).unwrap()).is_err());
+        // ...and so is the same node twice within one task
+        let bad = text.replace("\"nodes\":[0,3]", "\"nodes\":[0,0,3]");
+        assert!(Layout::from_value(&Value::parse(&bad).unwrap()).is_err());
+        // non-canonical ordering is rejected, not silently re-sorted — a
+        // decode-then-reencode must reproduce the input bytes
+        let bad = text.replace("\"nodes\":[0,3]", "\"nodes\":[3,0]");
+        assert!(Layout::from_value(&Value::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn min_churn_matches_brute_force_matching_on_small_instances() {
+        // The acceptance property: the solver's keep count equals the
+        // brute-force maximum-keep matching, and the layout is well-formed.
+        run(
+            "placement_min_churn_vs_brute",
+            Config { cases: 60, ..Default::default() },
+            |rng: &mut Xoshiro256, _size| {
+                let n_nodes = 2 + rng.below(4) as u32; // ≤ 5 nodes (brute force is 2^n per task)
+                let npd = 1 + rng.below(3) as u32;
+                let gpn = 1 + rng.below(8) as u32;
+                let m = 1 + rng.below(3) as usize; // ≤ 3 tasks
+                let all: Vec<u32> = (0..n_nodes).collect();
+                // random disjoint previous sets + random survivor subset
+                let mut pool: Vec<u32> = all.clone();
+                rng.shuffle(&mut pool);
+                let mut prev: Vec<(TaskId, Vec<NodeId>)> = Vec::new();
+                for t in 0..m {
+                    let take = rng.below(pool.len() as u64 + 1) as usize;
+                    let picked: Vec<NodeId> =
+                        pool.drain(..take).map(NodeId).collect();
+                    prev.push((TaskId(t as u32), picked));
+                }
+                let healthy: Vec<u32> =
+                    all.into_iter().filter(|_| rng.f64() < 0.8).collect();
+                let demands: Vec<(TaskId, u32)> = (0..m)
+                    .map(|t| (TaskId(t as u32), rng.below(gpn as u64 * 4) as u32))
+                    .collect();
+                (prev, healthy, demands, gpn, npd)
+            },
+            |(prev, healthy, demands, gpn, npd)| {
+                let prev = Layout::new(prev.clone());
+                let ns = nodes(healthy);
+                let v = view(&ns, *gpn, *npd);
+                let layout = assign(&prev, demands, &v);
+                // well-formed: disjoint, placeable-only, demand-bounded
+                let mut seen = BTreeSet::new();
+                for (task, assigned) in layout.iter() {
+                    let (_, w) = demands.iter().find(|(t, _)| *t == task).unwrap();
+                    if assigned.len() > v.nodes_needed(*w) {
+                        return Prop::Fail(format!("task {task} over-assigned"));
+                    }
+                    for n in assigned {
+                        if !ns.contains(n) {
+                            return Prop::Fail(format!("unplaceable node {n}"));
+                        }
+                        if !seen.insert(*n) {
+                            return Prop::Fail(format!("node {n} double-booked"));
+                        }
+                    }
+                }
+                // deterministic
+                if assign(&prev, demands, &v) != layout {
+                    return Prop::Fail("nondeterministic assignment".into());
+                }
+                // min-churn: keep count equals the brute-force matching max
+                let got = keeps_of(&layout, &prev);
+                let best = brute_max_keeps(&prev, demands, &v);
+                Prop::check(got == best, || {
+                    format!("solver kept {got}, brute-force matching keeps {best}")
+                })
+            },
+        );
+    }
+}

@@ -18,6 +18,7 @@
 use crate::config::{ClusterSpec, ModelSpec, TaskSpec};
 use crate::cost::{CostBreakdown, CostModel, TransitionProfile};
 use crate::perfmodel::throughput_table;
+use crate::placement::Layout;
 use crate::proto::WorkerCount;
 
 /// Everything the solver needs to know about one task.
@@ -91,6 +92,13 @@ pub struct Plan {
     pub workers_used: u32,
     /// Term-by-term explanation of `objective` in the ledger's currency.
     pub breakdown: CostBreakdown,
+    /// Concrete node-to-task map realizing `assignment` (wire v4). The
+    /// solver leaves it empty — counts alone determine the optimum — and
+    /// the coordinator fills it at commit time via the
+    /// [`crate::placement`] min-churn solver, so a plan served from the
+    /// precomputed table commits the exact layout a live solve would.
+    /// Topology-blind policies (the §7 baselines) leave it empty.
+    pub layout: Layout,
 }
 
 /// One reward term `G(t, x')` given the task's hoisted penalty — THE
@@ -106,41 +114,53 @@ fn term(t: &PlanTask, x: u32, horizon: f64, penalty: f64) -> f64 {
 
 /// Reward `G(tᵢ, xᵢ → xᵢ')` — Eq. 3, priced by the ledger: the gain runs
 /// over `cost.horizon_s(n_workers)` and the penalty is this task's own
-/// transition price (`F(t, x) · d_transition(t)`).
+/// transition price (`F(t, x) · d_transition(t)`) plus, for faulted tasks,
+/// the Table 2 detection latency (work already lost before the coordinator
+/// even learned of the failure).
 pub fn reward(task: &PlanTask, x_new: u32, n_workers: u32, cost: &CostModel) -> f64 {
-    term(
-        task,
-        x_new,
-        cost.horizon_s(n_workers),
-        task.current_waf() * cost.transition_s(&task.profile, task.fault),
+    let (trans, detect) = penalty_terms(task, cost);
+    term(task, x_new, cost.horizon_s(n_workers), trans + detect)
+}
+
+/// A task's `(transition, detection)` penalty pair. Neither depends on the
+/// candidate `x'` (the detection window is paid iff the task is faulted,
+/// and a faulted task always transitions — Eq. 4), so both hoist out of
+/// the DP inner loop and, being constant offsets, never change the argmax.
+fn penalty_terms(t: &PlanTask, cost: &CostModel) -> (f64, f64) {
+    let waf = t.current_waf();
+    (
+        waf * cost.transition_s(&t.profile, t.fault),
+        if t.fault { waf * cost.detection_s() } else { 0.0 },
     )
 }
 
-/// Per-task terms hoisted out of the DP inner loop: the transition penalty
-/// `F(t, x)·d_transition(t)` does not depend on the candidate `x'`.
-fn hoisted_penalties(tasks: &[PlanTask], cost: &CostModel) -> Vec<f64> {
-    tasks.iter().map(|t| t.current_waf() * cost.transition_s(&t.profile, t.fault)).collect()
+/// Per-task penalty pairs hoisted out of the DP inner loop.
+fn hoisted_penalties(tasks: &[PlanTask], cost: &CostModel) -> Vec<(f64, f64)> {
+    tasks.iter().map(|t| penalty_terms(t, cost)).collect()
 }
 
 /// Build the [`CostBreakdown`] (and exact objective) for a final assignment.
 fn breakdown_for(
     tasks: &[PlanTask],
     assignment: &[u32],
-    penalties: &[f64],
+    penalties: &[(f64, f64)],
     horizon: f64,
     cost: &CostModel,
 ) -> CostBreakdown {
     let mut running = 0.0;
     let mut transition = 0.0;
-    for ((t, &x), &pen) in tasks.iter().zip(assignment).zip(penalties) {
+    let mut detection = 0.0;
+    for ((t, &x), &(trans, detect)) in tasks.iter().zip(assignment).zip(penalties) {
         running += t.waf(x) * horizon;
         if t.transitions_to(x) {
-            transition += pen;
+            transition += trans;
+            detection += detect;
         }
     }
     CostBreakdown {
         running_reward: running,
         transition_penalty: transition,
+        detection_penalty: detection,
         horizon_s: horizon,
         mtbf_per_gpu_s: cost.mtbf_per_gpu_s(),
         spare_value: 0.0,
@@ -162,7 +182,7 @@ pub fn solve(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan {
     let mut choice = vec![vec![0u32; n + 1]; m + 1];
     for i in 1..=m {
         let t = &tasks[i - 1];
-        let pen = penalties[i - 1];
+        let pen = penalties[i - 1].0 + penalties[i - 1].1;
         // G(t, 0) may be negative (losing a running task still pays its
         // penalty) but assigning zero is always *allowed*.
         for j in 0..=n {
@@ -194,10 +214,10 @@ pub fn solve(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan {
     let workers_used = assignment.iter().sum();
     let breakdown = breakdown_for(tasks, &assignment, &penalties, horizon, cost);
     let objective = breakdown.objective();
-    Plan { assignment, objective, total_waf, workers_used, breakdown }
+    Plan { assignment, objective, total_waf, workers_used, breakdown, layout: Layout::default() }
 }
 
-/// Brute-force reference solver (exponential; tests only — DESIGN.md §10).
+/// Brute-force reference solver (exponential; tests only — DESIGN.md §11).
 pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan {
     let horizon = cost.horizon_s(n_workers);
     let penalties = hoisted_penalties(tasks, cost);
@@ -211,7 +231,7 @@ pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan
         left: u32,
         tasks: &[PlanTask],
         horizon: f64,
-        penalties: &[f64],
+        penalties: &[(f64, f64)],
         assign: &mut Vec<u32>,
         best_val: &mut f64,
         best_assign: &mut Vec<u32>,
@@ -221,7 +241,7 @@ pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan
                 .iter()
                 .zip(assign.iter())
                 .zip(penalties.iter())
-                .map(|((t, &x), &pen)| term(t, x, horizon, pen))
+                .map(|((t, &x), &(trans, detect))| term(t, x, horizon, trans + detect))
                 .sum();
             if v > *best_val {
                 *best_val = v;
@@ -241,7 +261,14 @@ pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan
     let workers_used = best_assign.iter().sum();
     let breakdown = breakdown_for(tasks, &best_assign, &penalties, horizon, cost);
     let objective = breakdown.objective();
-    Plan { assignment: best_assign, objective, total_waf, workers_used, breakdown }
+    Plan {
+        assignment: best_assign,
+        objective,
+        total_waf,
+        workers_used,
+        breakdown,
+        layout: Layout::default(),
+    }
 }
 
 /// Precomputed lookup table (§5.2): plans for every cluster size the next
@@ -589,18 +616,21 @@ mod tests {
     }
 
     #[test]
-    fn faulted_transition_prices_the_farther_strategy() {
+    fn faulted_transition_prices_the_farther_strategy_plus_detection() {
         // Same heterogeneous profile; the faulted twin pays inmem_s instead
-        // of replica_s, so its reward is strictly lower at every size.
+        // of replica_s, plus the Table 2 detection window, so its reward is
+        // strictly lower at every size.
         let profile = TransitionProfile { replica_s: 2.0, inmem_s: 40.0, remote_s: 300.0 };
         let mut healthy = task(0, 1.0, 1, 10.0, 8, false, 16);
         healthy.profile = profile.clone();
         let mut faulted = healthy.clone();
         faulted.fault = true;
         let c = cost();
-        // both transition when resizing to 6 — only the strategy differs
+        // both transition when resizing to 6 — only the strategy (and the
+        // fault's detection latency) differs
         let diff = reward(&healthy, 6, 16, &c) - reward(&faulted, 6, 16, &c);
-        let expected = healthy.current_waf() * (profile.inmem_s - profile.replica_s);
+        let expected =
+            healthy.current_waf() * (profile.inmem_s - profile.replica_s + c.detection_s());
         assert!((diff - expected).abs() < 1e-6 * expected, "diff {diff} vs {expected}");
     }
 
@@ -619,7 +649,7 @@ mod tests {
             assert_eq!(b.horizon_s, c.horizon_s(n));
             assert_eq!(b.mtbf_per_gpu_s, c.mtbf_per_gpu_s());
             assert_eq!(b.spare_value, 0.0);
-            // manual recomputation of both terms
+            // manual recomputation of all three terms
             let running: f64 =
                 tasks.iter().zip(&plan.assignment).map(|(t, &x)| t.waf(x) * b.horizon_s).sum();
             let penalty: f64 = tasks
@@ -628,8 +658,14 @@ mod tests {
                 .filter(|(t, &x)| t.transitions_to(x))
                 .map(|(t, _)| t.current_waf() * c.transition_s(&t.profile, t.fault))
                 .sum();
+            let detection: f64 = tasks
+                .iter()
+                .filter(|t| t.fault)
+                .map(|t| t.current_waf() * c.detection_s())
+                .sum();
             assert!((b.running_reward - running).abs() <= 1e-9 * running.abs().max(1.0));
             assert!((b.transition_penalty - penalty).abs() <= 1e-9 * penalty.abs().max(1.0));
+            assert!((b.detection_penalty - detection).abs() <= 1e-9 * detection.abs().max(1.0));
         }
     }
 

@@ -3,7 +3,7 @@
 //! Provides seeded generators and a runner with greedy shrinking: on failure,
 //! the runner re-generates inputs with progressively smaller size hints and
 //! reports the smallest failing case it found. Used for the coordinator
-//! invariants DESIGN.md §10 lists (planner optimality, micro-batch
+//! invariants DESIGN.md §11 lists (planner optimality, micro-batch
 //! conservation, perfmodel feasibility, …).
 
 use crate::rng::{Rand, Xoshiro256};

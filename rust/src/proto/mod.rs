@@ -47,6 +47,7 @@ use std::fmt;
 
 use crate::cost::CostBreakdown;
 use crate::failure::ErrorKind;
+use crate::placement::Layout;
 use crate::planner::Plan;
 use crate::ser::{JsonError, Value};
 
@@ -63,7 +64,11 @@ use crate::ser::{JsonError, Value};
 ///   typed [`CostBreakdown`] explaining the plan objective term-by-term,
 ///   and the correlated-burst surface ([`CoordEvent::ReplanDue`] /
 ///   [`Action::ScheduleReplan`]) joins the vocabulary.
-pub const DECISION_LOG_VERSION: u64 = 3;
+/// * v4 — placement: every plan carries its concrete
+///   [`crate::placement::Layout`] (per-task node sets, the coordinator's
+///   authoritative cluster map), and the breakdown gains the Table 2
+///   detection-latency term ([`CostBreakdown::detection_penalty`]).
+pub const DECISION_LOG_VERSION: u64 = 4;
 
 // ---------------------------------------------------------------------------
 // Typed identifiers
@@ -365,6 +370,7 @@ fn breakdown_to_value(b: &CostBreakdown) -> Value {
     Value::obj()
         .with("running_reward", b.running_reward)
         .with("transition_penalty", b.transition_penalty)
+        .with("detection_penalty", b.detection_penalty)
         .with("horizon_s", b.horizon_s)
         .with("mtbf_per_gpu_s", b.mtbf_per_gpu_s)
         .with("spare_value", b.spare_value)
@@ -375,6 +381,7 @@ fn breakdown_from_value(v: &Value) -> Result<CostBreakdown, ProtoError> {
     Ok(CostBreakdown {
         running_reward: get_f64(v, "running_reward")?,
         transition_penalty: get_f64(v, "transition_penalty")?,
+        detection_penalty: get_f64(v, "detection_penalty")?,
         horizon_s: get_f64(v, "horizon_s")?,
         mtbf_per_gpu_s: get_f64(v, "mtbf_per_gpu_s")?,
         spare_value: get_f64(v, "spare_value")?,
@@ -389,6 +396,7 @@ fn plan_to_value(plan: &Plan) -> Value {
         .with("total_waf", plan.total_waf)
         .with("workers_used", plan.workers_used)
         .with("breakdown", breakdown_to_value(&plan.breakdown))
+        .with("layout", plan.layout.to_value())
 }
 
 fn plan_from_value(v: &Value) -> Result<Plan, ProtoError> {
@@ -410,6 +418,7 @@ fn plan_from_value(v: &Value) -> Result<Plan, ProtoError> {
         total_waf: get_f64(v, "total_waf")?,
         workers_used: get_u32(v, "workers_used")?,
         breakdown: breakdown_from_value(v.req("breakdown")?)?,
+        layout: Layout::from_value(v.req("layout")?).map_err(ProtoError::new)?,
     })
 }
 

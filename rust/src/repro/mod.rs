@@ -14,7 +14,7 @@ use crate::fleet::FleetModel;
 use crate::metrics::{Figure, Table};
 use crate::perfmodel::{best_config, throughput_table};
 use crate::planner::{baselines, solve, PlanTask};
-use crate::proto::{Action, CoordEvent, NodeId, PlanReason};
+use crate::proto::{Action, CoordEvent, NodeId, PlanReason, TaskId};
 use crate::simulator::{compare_policies, PolicyKind, PolicyParams, SimResult, Simulator};
 use crate::util::{fmt_duration, fmt_si};
 
@@ -100,6 +100,11 @@ pub const EXPERIMENTS: &[Experiment] = &[
         id: "fleet-lemon",
         description: "lemon quarantine on/off goodput on a recurrent-lemon trace (fleet)",
         run: fleet_lemon,
+    },
+    Experiment {
+        id: "placement-frag",
+        description: "fragmented cluster: min-churn placement vs topology-blind goodput",
+        run: placement_frag,
     },
     Experiment {
         id: "fig11a",
@@ -319,16 +324,36 @@ pub fn fig6(seed: u64) -> String {
     out
 }
 
-/// Table 2 (model view): detection times per method. The measured-over-TCP
-/// version is `cargo bench --bench detection`.
+/// Table 2 (model view): detection times per method — the same
+/// [`crate::cost`] constants the ledger prices `detection_penalty` with.
+/// The measured-over-TCP version is `cargo bench --bench detection`.
 pub fn table2_model() -> String {
-    let cfg = UnicronConfig::default();
-    let d_iter = 45.0;
+    use crate::cost::{detection_latency_s, DETECT_STATISTICAL_S};
     let mut t = Table::new(&["case", "method", "Unicron", "w/o Unicron"]);
-    t.row(&["1".into(), "Node health monitoring".into(), format!("~{:.1}s (lease TTL)", cfg.lease_ttl_s), "~5.7s".into()]);
-    t.row(&["2".into(), "Process supervision".into(), "~1.8s (poll)".into(), "D_timeout (30m)".into()]);
-    t.row(&["3".into(), "Exception propagation".into(), "~0.3s (immediate)".into(), "D_timeout (30m)".into()]);
-    t.row(&["4".into(), "Online statistical monitoring".into(), format!("3×D_iter = {}", fmt_duration(3.0 * d_iter)), "D_timeout (30m)".into()]);
+    t.row(&[
+        "1".into(),
+        "Node health monitoring".into(),
+        format!("~{:.1}s (lease TTL)", detection_latency_s(ErrorKind::LostConnection)),
+        "~5.7s".into(),
+    ]);
+    t.row(&[
+        "2".into(),
+        "Process supervision".into(),
+        format!("~{:.1}s (poll)", detection_latency_s(ErrorKind::ExitedAbnormally)),
+        "D_timeout (30m)".into(),
+    ]);
+    t.row(&[
+        "3".into(),
+        "Exception propagation".into(),
+        format!("~{:.1}s (immediate)", detection_latency_s(ErrorKind::CudaError)),
+        "D_timeout (30m)".into(),
+    ]);
+    t.row(&[
+        "4".into(),
+        "Online statistical monitoring".into(),
+        format!("3×D_iter = {}", fmt_duration(DETECT_STATISTICAL_S)),
+        "D_timeout (30m)".into(),
+    ]);
     format!("Table 2 — failure detection time (model; run the detection bench for live numbers)\n{}", t.render())
 }
 
@@ -452,6 +477,44 @@ pub fn fig10c() -> String {
     format!("Fig. 10c — cluster WAF across Table 3 cases (128 GPUs; ratios = Unicron/baseline)\n{}", t.render())
 }
 
+/// Sum one breakdown column over every committed plan in a decision log —
+/// the CLI's ledger view (the CostBreakdown rides every `ApplyPlan`).
+fn breakdown_total(r: &SimResult, term: fn(&crate::cost::CostBreakdown) -> f64) -> f64 {
+    r.decision_log
+        .actions()
+        .filter_map(|a| match a {
+            Action::ApplyPlan { plan, .. } => Some(term(&plan.breakdown)),
+            _ => None,
+        })
+        .sum()
+}
+
+/// Render the ledger columns (Σ over committed plans) for a set of runs —
+/// surfaces the wire-v4 `CostBreakdown` in the repro tables.
+fn ledger_table(rows: &[(&str, &SimResult)]) -> String {
+    let mut t = Table::new(&[
+        "system",
+        "plans",
+        "Σ running reward",
+        "Σ transition pen.",
+        "Σ detection pen.",
+        "Σ spare value",
+    ]);
+    for (label, r) in rows {
+        let plans =
+            r.decision_log.actions().filter(|a| matches!(a, Action::ApplyPlan { .. })).count();
+        t.row(&[
+            label.to_string(),
+            plans.to_string(),
+            format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.running_reward))),
+            format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.transition_penalty))),
+            format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.detection_penalty))),
+            format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.spare_value))),
+        ]);
+    }
+    t.render()
+}
+
 /// Fig. 11: overall training efficiency under a failure trace.
 pub fn fig11(tc: TraceConfig, seed: u64) -> String {
     let cluster = ClusterSpec::default();
@@ -492,6 +555,13 @@ pub fn fig11(tc: TraceConfig, seed: u64) -> String {
     }
     out.push_str(&t.render());
     out.push_str(&fig.ascii_chart(100, 16));
+    // the cost-ledger view of the same runs: Unicron's plans price their
+    // transitions and detection windows; the baselines optimize nothing
+    // (all-zero breakdowns)
+    let rows: Vec<(&str, &SimResult)> =
+        results.iter().map(|r| (r.policy.name(), r)).collect();
+    out.push_str("\ncost ledger (Σ over committed plans):\n");
+    out.push_str(&ledger_table(&rows));
     out
 }
 
@@ -656,9 +726,177 @@ pub fn fleet_lemon_render(trace: &Trace, on: &SimResult, off: &SimResult) -> Str
     out
 }
 
+/// The fragmented-cluster trace and its two Unicron runs: min-churn
+/// placement on vs the topology-blind reference. Split out so tests can pin
+/// the acceptance property — placement-aware goodput ≥ topology-blind —
+/// without re-parsing the rendered table.
+pub fn placement_frag_runs(seed: u64) -> (Trace, SimResult, SimResult) {
+    let cluster = ClusterSpec::default();
+    let specs = table3_case(5);
+    let cfg = UnicronConfig::default();
+    // moderate background noise + three full fragmentation waves: every
+    // domain loses a node per wave (fast repairs), so a topology-blind
+    // assignment reshuffles the whole cluster wave after wave while the
+    // min-churn solver moves only the replacements
+    let tc = TraceConfig {
+        name: "placement-frag".into(),
+        duration_s: 14.0 * 86400.0,
+        n_nodes: cluster.n_nodes,
+        expect_sev1: 2.0,
+        expect_other: 8.0,
+        repair_min_s: 0.5 * 86400.0,
+        repair_max_s: 2.0 * 86400.0,
+    };
+    let trace =
+        Trace::generate(tc, seed).with_fragmented_cluster(cfg.nodes_per_domain, 3, seed);
+    let run_with = |min_churn: bool| {
+        let cfg = UnicronConfig { placement_min_churn: min_churn, ..UnicronConfig::default() };
+        Simulator::builder()
+            .cluster(cluster.clone())
+            .config(cfg)
+            .policy(PolicyKind::Unicron)
+            .tasks(&specs)
+            .build()
+            .run(&trace)
+    };
+    let churn = run_with(true);
+    let blind = run_with(false);
+    (trace, churn, blind)
+}
+
+/// Per-run placement churn, read off the committed layouts of a decision
+/// log: how many nodes were *gained* across all replans (state pulled onto
+/// a node that did not already serve the task), the ledger-priced
+/// migration seconds those gains cost ([`TaskMoves::migration_s`] with each
+/// task's §6.3 profile), and the final cluster map.
+///
+/// [`TaskMoves::migration_s`]: crate::placement::TaskMoves::migration_s
+pub fn layout_churn(
+    r: &SimResult,
+    profiles: &std::collections::BTreeMap<TaskId, crate::cost::TransitionProfile>,
+    cost: &crate::cost::CostModel,
+) -> (usize, f64, crate::placement::Layout) {
+    let mut prev = crate::placement::Layout::default();
+    let mut gained = 0usize;
+    let mut priced_s = 0.0;
+    for a in r.decision_log.actions() {
+        if let Action::ApplyPlan { plan, .. } = a {
+            for m in plan.layout.diff(&prev) {
+                gained += m.gained.len();
+                if let Some(profile) = profiles.get(&m.task) {
+                    priced_s += m.migration_s(profile, cost, false);
+                }
+            }
+            prev = plan.layout.clone();
+        }
+    }
+    (gained, priced_s, prev)
+}
+
+/// The §6.3 transition profiles of the `placement-frag` task set, keyed by
+/// task id — the pricing `layout_churn` feeds [`crate::placement::TaskMoves`].
+fn placement_frag_profiles() -> std::collections::BTreeMap<TaskId, crate::cost::TransitionProfile> {
+    let cluster = ClusterSpec::default();
+    let n = cluster.total_gpus();
+    table3_case(5)
+        .iter()
+        .map(|spec| (spec.id, PlanTask::from_spec(spec, &cluster, n).profile))
+        .collect()
+}
+
+/// Placement under fragmentation: min-churn vs topology-blind layouts on
+/// the same trace — goodput, nodes moved, priced migration, and final rack
+/// spread, plus the ledger columns of both runs.
+pub fn placement_frag(seed: u64) -> String {
+    let (trace, churn, blind) = placement_frag_runs(seed);
+    let nodes_per_domain = UnicronConfig::default().nodes_per_domain;
+    let cost = crate::cost::CostModel::from_config(&UnicronConfig::default());
+    let profiles = placement_frag_profiles();
+
+    let mut t = Table::new(&[
+        "placement",
+        "accumulated WAF",
+        "mean WAF",
+        "nodes moved",
+        "Σ priced migration",
+        "final domains/task",
+    ]);
+    for (label, r) in [("min-churn", &churn), ("topology-blind", &blind)] {
+        let (gained, priced_s, last) = layout_churn(r, &profiles, &cost);
+        let spreads: Vec<usize> =
+            last.iter().map(|(task, _)| last.domain_spread(task, nodes_per_domain)).collect();
+        let mean_spread = if spreads.is_empty() {
+            0.0
+        } else {
+            spreads.iter().sum::<usize>() as f64 / spreads.len() as f64
+        };
+        t.row(&[
+            label.into(),
+            format!("{}FLOP·s", fmt_si(r.accumulated_waf)),
+            format!("{}FLOP/s", fmt_si(r.mean_waf())),
+            gained.to_string(),
+            fmt_duration(priced_s),
+            format!("{mean_spread:.2}"),
+        ]);
+    }
+    let mut out = format!(
+        "placement-frag — {} failures over {} ({} fragmentation waves across {} domains)\n{}",
+        trace.events.len(),
+        fmt_duration(trace.config.duration_s),
+        3,
+        ClusterSpec::default().n_nodes / nodes_per_domain,
+        t.render()
+    );
+    let _ = writeln!(
+        out,
+        "consolidation advantage: {:.3}× accumulated WAF",
+        churn.accumulated_waf / blind.accumulated_waf.max(1.0)
+    );
+    out.push_str("\ncost ledger (Σ over committed plans):\n");
+    out.push_str(&ledger_table(&[("min-churn", &churn), ("topology-blind", &blind)]));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn placement_frag_min_churn_beats_topology_blind() {
+        // the acceptance property: consolidation goodput ≥ topology-blind
+        // on the fragmented-cluster trace, with strictly fewer nodes moved
+        // and strictly less ledger-priced migration
+        let (_, churn, blind) = placement_frag_runs(42);
+        assert!(
+            churn.accumulated_waf >= blind.accumulated_waf,
+            "min-churn {} must be >= topology-blind {}",
+            churn.accumulated_waf,
+            blind.accumulated_waf
+        );
+        let cost = crate::cost::CostModel::from_config(&UnicronConfig::default());
+        let profiles = placement_frag_profiles();
+        let (moved_churn, priced_churn, _) = layout_churn(&churn, &profiles, &cost);
+        let (moved_blind, priced_blind, _) = layout_churn(&blind, &profiles, &cost);
+        assert!(
+            moved_churn < moved_blind,
+            "min-churn must move fewer nodes: {moved_churn} vs {moved_blind}"
+        );
+        assert!(
+            priced_churn < priced_blind,
+            "min-churn must price less migration: {priced_churn} vs {priced_blind}"
+        );
+        let out = placement_frag(42);
+        assert!(out.contains("consolidation advantage"));
+        assert!(out.contains("min-churn") && out.contains("topology-blind"));
+    }
+
+    #[test]
+    fn fig11_surfaces_the_ledger_columns() {
+        let out = fig11(TraceConfig::trace_a(), 42);
+        assert!(out.contains("cost ledger"), "breakdown columns must be rendered:\n{out}");
+        assert!(out.contains("Σ transition pen."));
+        assert!(out.contains("Σ detection pen."));
+    }
 
     #[test]
     fn every_experiment_runs() {

@@ -38,6 +38,7 @@ pub use policies::{
 use crate::config::{ClusterSpec, TaskSpec, UnicronConfig};
 use crate::engine::EventQueue;
 use crate::failure::{LifecycleKind, Severity, Trace};
+use crate::placement::{Layout, TaskMoves};
 use crate::planner::{Plan, PlanTask};
 use crate::proto::{Action, CoordEvent, DecisionLog, NodeId, TaskId, WorkerCount};
 
@@ -178,6 +179,13 @@ pub struct Simulator {
     /// node -> permanently out of the fleet (quarantined lemon or released
     /// spare): repairs are ignored and the node never carries work again.
     retired: Vec<bool>,
+    /// The executed cluster map — the last layout-carrying plan's
+    /// [`Layout`]. Empty until a policy publishes concrete layouts (the
+    /// Unicron coordinator, wire v4); once non-empty, failure attribution
+    /// reads it — a domain burst hits exactly the co-located tasks the
+    /// layout says it hits — instead of the legacy contiguous convention
+    /// the topology-blind baselines still use.
+    layout: Layout,
     available: u32,
     now: f64,
     queue: EventQueue<EnvEvent>,
@@ -263,6 +271,7 @@ impl SimulatorBuilder {
         Simulator {
             node_down: vec![false; cluster.n_nodes as usize],
             retired: vec![false; cluster.n_nodes as usize],
+            layout: Layout::default(),
             available: n,
             cluster,
             policy,
@@ -307,10 +316,21 @@ impl Simulator {
         self.series.push((self.now, self.last_waf));
     }
 
-    /// Which task owns `node` under the current assignment: active tasks
-    /// take nodes in id order, `ceil(workers/gpn)` nodes each, over the
-    /// healthy nodes. Returns a task *index*.
+    /// Which task owns `node`. When the policy publishes concrete layouts
+    /// (wire v4 Unicron), this IS the coordinator's own cluster map — the
+    /// environment and the policy can never disagree about which task a
+    /// node's failure hits. Topology-blind baselines fall back to the
+    /// legacy convention: active tasks take nodes in id order,
+    /// `ceil(workers/gpn)` nodes each, over the healthy nodes. Returns a
+    /// task *index*.
     fn owner_of(&self, node: NodeId) -> Option<usize> {
+        if !self.layout.is_empty() {
+            return self
+                .layout
+                .owner_of(node)
+                .and_then(|task| self.index_of(task))
+                .filter(|&ti| self.tasks[ti].active);
+        }
         let healthy: Vec<u32> =
             (0..self.cluster.n_nodes).filter(|&n| !self.node_down[n as usize]).collect();
         let gpn = self.cluster.gpus_per_node;
@@ -406,9 +426,16 @@ impl Simulator {
     }
 
     /// Reconfigure the cluster to `plan`. Each task whose worker count
-    /// changes (or that hosts the fault) goes down for detection + a
-    /// transition proportional to the GPUs it moves, then resumes at the new
-    /// size — the Fig. 9 cost model.
+    /// changes (or that hosts the fault, or that must pull state onto newly
+    /// gained nodes) goes down for detection + a transition proportional to
+    /// the GPUs it moves, then resumes at the new size — the Fig. 9 cost
+    /// model.
+    ///
+    /// With a layout-carrying plan (wire v4) the moved-GPU count is a real
+    /// migration fact: workers on *gained* nodes must receive state, workers
+    /// that stay in place pay nothing — so a min-churn layout transitions
+    /// strictly cheaper than a topology-blind reshuffle of the same counts
+    /// (the `placement-frag` experiment pins this).
     fn apply_plan(&mut self, plan: &Plan, ctx: &Ctx) {
         let active = self.active_indices();
         debug_assert_eq!(active.len(), plan.assignment.len(), "policy assignment order contract");
@@ -417,11 +444,27 @@ impl Simulator {
             _ => 0.0,
         };
         let gpn = self.cluster.gpus_per_node;
+        // Execute the concrete node assignment: diff the new map against
+        // the executed one (the placement layer's own move accounting),
+        // then install it.
+        let mut moves: Vec<Option<TaskMoves>> = vec![None; self.tasks.len()];
+        if !plan.layout.is_empty() {
+            for m in plan.layout.diff(&self.layout) {
+                if let Some(ti) = self.index_of(m.task) {
+                    moves[ti] = Some(m);
+                }
+            }
+            self.layout = plan.layout.clone();
+        }
         for (k, &ti) in active.iter().enumerate() {
             let new_w = plan.assignment.get(k).copied().unwrap_or(0);
             let old_w = self.tasks[ti].workers;
             let affected = ctx.affected == Some(ti);
-            if new_w == old_w && !affected {
+            // workers that must receive migrated state: the overflow that
+            // does not fit on the task's kept nodes (TaskMoves::gained_gpus)
+            let gained_gpus =
+                moves[ti].as_ref().map_or(0, |m| m.gained_gpus(gpn, new_w));
+            if new_w == old_w && !affected && gained_gpus == 0 {
                 continue;
             }
             if ctx.instant {
@@ -431,8 +474,12 @@ impl Simulator {
                 t.down_until = None;
                 continue;
             }
-            // the faulted task pays at least a node's worth of migration
-            let moved = old_w.abs_diff(new_w).max(if affected { gpn } else { 0 });
+            // layout plans move exactly the gained workers; legacy plans
+            // approximate with the count delta. The faulted task pays at
+            // least a node's worth of migration either way.
+            let base_moved =
+                if plan.layout.is_empty() { old_w.abs_diff(new_w) } else { gained_gpus };
+            let moved = base_moved.max(if affected { gpn } else { 0 });
             let trans = self.params.sev1_transition_s(moved);
             let until = self.now + detect + trans;
             let t = &mut self.tasks[ti];

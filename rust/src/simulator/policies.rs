@@ -98,8 +98,10 @@ impl PolicyParams {
                 efficiency: 1.0,
                 elastic: true,
                 global_replan: true,
-                detect_sev1_s: 5.6,   // Table 2 case 1
-                detect_sev23_s: 1.8,  // cases 2/3 (0.3–1.8 s); stalls: 3×D_iter ≈ 60 s handled upstream
+                // Table 2 case 1 / case 2 — the same constants the cost
+                // ledger prices into the reward (cost::detection_latency_s)
+                detect_sev1_s: crate::cost::DETECT_NODE_HEALTH_S,
+                detect_sev23_s: crate::cost::DETECT_PROCESS_S,
                 transition_base_s: 25.0,
                 transition_per_gpu_s: 0.4, // nearest-source state migration
                 restart_s: 15.0,           // in-place restart, state from DP replica
@@ -377,8 +379,10 @@ impl BaselinePolicy {
                 total_waf,
                 workers_used,
                 // baselines optimize nothing: an all-zero breakdown still
-                // reconciles (0 − 0 = objective 0)
+                // reconciles (0 − 0 − 0 = objective 0), and they are
+                // topology-blind — no layout is published
                 breakdown: CostBreakdown::default(),
+                layout: crate::placement::Layout::default(),
             },
             reason,
         }]

@@ -1,5 +1,5 @@
 //! Property-based tests (mini-proptest) on the coordinator-side invariants
-//! DESIGN.md §10 lists: DP-planner optimality vs brute force, worker
+//! DESIGN.md §11 lists: DP-planner optimality vs brute force, worker
 //! conservation, micro-batch conservation under arbitrary failure sequences,
 //! perfmodel feasibility, severity totality, JSON round-trips.
 

@@ -7,6 +7,7 @@ use unicron::config::{table3_case, ClusterSpec, TaskSpec, UnicronConfig};
 use unicron::coordinator::Coordinator;
 use unicron::cost::CostBreakdown;
 use unicron::failure::{ErrorKind, Trace, TraceConfig};
+use unicron::placement::Layout;
 use unicron::planner::{Plan, PlanTask};
 use unicron::proto::{Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId};
 use unicron::ser::Value;
@@ -64,10 +65,20 @@ fn every_action_variant_roundtrips() {
     for after_s in [0.0, 900.0, 0.1 + 0.2 /* 0.30000000000000004 */] {
         roundtrip_action(&Action::ScheduleReplan { after_s });
     }
-    // ApplyPlan with non-trivial floats — and a distinct CostBreakdown per
-    // variant (including the spare-retention terms) — for every reason
+    // ApplyPlan with non-trivial floats — and a distinct CostBreakdown and
+    // Layout per variant (including the spare-retention terms and an
+    // unplaced task's empty node set) — for every reason
     for (i, reason) in PlanReason::all().into_iter().enumerate() {
         let k = i as f64;
+        let layout = if i % 2 == 0 {
+            Layout::new([
+                (TaskId(0), vec![]),
+                (TaskId(1), vec![NodeId(i as u32), NodeId(8), NodeId(u32::MAX)]),
+                (TaskId(3), vec![NodeId(2)]),
+            ])
+        } else {
+            Layout::default() // topology-blind plans publish no layout
+        };
         roundtrip_action(&Action::ApplyPlan {
             plan: Plan {
                 assignment: vec![0, 8, 16, 104],
@@ -77,11 +88,13 @@ fn every_action_variant_roundtrips() {
                 breakdown: CostBreakdown {
                     running_reward: 1.234567890123e18 + k * 7.7e12,
                     transition_penalty: k * 7.7e12,
+                    detection_penalty: k * 5.6e11,
                     horizon_s: 148437.5 + k,
                     mtbf_per_gpu_s: 1.9e7 - k,
                     spare_value: if i % 2 == 0 { 0.0 } else { 4.2e14 + k },
                     spare_hold_cost: if i % 2 == 0 { 0.0 } else { 1.05e14 - k },
                 },
+                layout,
             },
             reason,
         });
@@ -140,24 +153,44 @@ fn tampered_breakdowns_are_rejected_not_skipped() {
                 breakdown: CostBreakdown {
                     running_reward: 8.25e17,
                     transition_penalty: 0.0,
+                    detection_penalty: 0.0,
                     horizon_s: 150000.0,
                     mtbf_per_gpu_s: 1.9e7,
                     spare_value: 0.0,
                     spare_hold_cost: 0.0,
                 },
+                layout: Layout::new([(TaskId(0), vec![NodeId(0)]), (TaskId(1), vec![NodeId(1)])]),
             },
             reason: PlanReason::TaskLaunched,
         }],
     );
     let text = String::from_utf8(log.to_bytes()).unwrap();
     assert!(text.contains("\"breakdown\""), "plan must serialize its breakdown: {text}");
+    assert!(text.contains("\"layout\""), "plan must serialize its layout: {text}");
     // renamed term -> reject
     let bad = text.replace("running_reward", "running_rewrd");
     assert!(bad != text && DecisionLog::from_bytes(bad.as_bytes()).is_err());
-    // missing term -> reject (transition_penalty sorts last in the object)
-    let bad = text.replace(",\"transition_penalty\":0}", "}");
+    // missing term -> reject
+    let bad = text.replace(",\"transition_penalty\":0", "");
     assert!(bad != text, "tamper must hit the penalty term: {text}");
     assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // detection_penalty sorts first in the breakdown object
+    let bad = text.replace("{\"detection_penalty\":0,", "{");
+    assert!(bad != text, "tamper must hit the detection term: {text}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // v4: a plan stripped of its layout is rejected, not defaulted —
+    // replaying it would silently commit different cluster maps
+    let layout_field = ",\"layout\":[{\"nodes\":[0],\"task\":0},{\"nodes\":[1],\"task\":1}]";
+    let bad = text.replace(layout_field, "");
+    assert!(bad != text, "tamper must hit the layout field: {text}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // a layout entry with a mangled node id is rejected too
+    let bad = text.replace("\"nodes\":[1]", "\"nodes\":[-1]");
+    assert!(bad != text && DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // ...and so is a double-booked node (task 0 already holds node 0):
+    // replaying a corrupt cluster map is exactly what strict decode forbids
+    let bad = text.replace("\"nodes\":[1]", "\"nodes\":[0]");
+    assert!(bad != text && DecisionLog::from_bytes(bad.as_bytes()).is_err());
     // the untampered artifact decodes and the terms reconcile
     let back = DecisionLog::from_bytes(text.as_bytes()).unwrap();
     assert_eq!(back, log);

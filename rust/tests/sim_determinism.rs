@@ -19,7 +19,11 @@ use unicron::simulator::{PolicyKind, SimResult, Simulator};
 /// `Lemon` overlays a recurrent-failure node (both fleet-layer scenario
 /// classes); `HeteroCost` runs trace-b over the size-heterogeneous Table 3
 /// case 2 task mix (1.3B/7B/13B), so per-task transition profiles differ
-/// and the cost ledger's per-strategy pricing steers every replan.
+/// and the cost ledger's per-strategy pricing steers every replan;
+/// `Fragmented` overlays fragmentation churn waves (one node per domain per
+/// wave, fast repairs) and `RackDrain` slowly empties one failure domain
+/// for good — both placement-layer scenario classes whose per-plan layouts
+/// must stay bit-reproducible.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Scenario {
     A,
@@ -27,13 +31,17 @@ enum Scenario {
     DomainBurst,
     Lemon,
     HeteroCost,
+    Fragmented,
+    RackDrain,
 }
 
 fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
     let mut trace = match scenario {
-        Scenario::A | Scenario::DomainBurst | Scenario::Lemon => {
-            Trace::generate(TraceConfig::trace_a(), seed)
-        }
+        Scenario::A
+        | Scenario::DomainBurst
+        | Scenario::Lemon
+        | Scenario::Fragmented
+        | Scenario::RackDrain => Trace::generate(TraceConfig::trace_a(), seed),
         Scenario::B | Scenario::HeteroCost => Trace::generate(TraceConfig::trace_b(), seed),
     };
     match scenario {
@@ -49,6 +57,12 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
                 120.0,
                 until,
             );
+        }
+        Scenario::Fragmented => {
+            trace = trace.with_fragmented_cluster(4, 4, seed);
+        }
+        Scenario::RackDrain => {
+            trace = trace.with_rack_drain((seed % 4) as u32, 4, 86400.0, 3600.0);
         }
         Scenario::A | Scenario::B | Scenario::HeteroCost => {}
     }
@@ -117,6 +131,11 @@ const CORPUS: &[(PolicyKind, Scenario, u64, bool)] = &[
     // bit-identically.
     (PolicyKind::Unicron, Scenario::HeteroCost, 11, true),
     (PolicyKind::Unicron, Scenario::DomainBurst, 2026, true),
+    // PR 5: placement era — fragmentation churn and a rack drain, whose
+    // per-plan wire-v4 layouts (and the layout-driven failure attribution
+    // and transition timing) must stay bit-reproducible.
+    (PolicyKind::Unicron, Scenario::Fragmented, 17, false),
+    (PolicyKind::Unicron, Scenario::RackDrain, 3, true),
 ];
 
 #[test]
@@ -147,6 +166,8 @@ fn determinism_property_over_random_seeds_and_policies() {
                 Scenario::HeteroCost,
                 Scenario::DomainBurst,
                 Scenario::Lemon,
+                Scenario::Fragmented,
+                Scenario::RackDrain,
             ]);
             (kind, scenario, rng.next_u64(), rng.f64() < 0.5)
         },

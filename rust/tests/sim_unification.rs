@@ -62,13 +62,39 @@ fn assert_unified(trace: &Trace) {
     // The simulated policy served its replans from the precomputed §5.2
     // table (the in-sim event-horizon refresh); the replay coordinator
     // above had no table and solved everything live. The replay equality
-    // therefore IS the proof that table and solver commits are identical.
+    // therefore IS the proof that table and solver commits — including the
+    // wire-v4 layouts riding every plan — are identical.
     assert!(
         sim.plan_lookup_hits > 0,
         "simulated SEV1/join replans must exercise the ScenarioLookup path"
     );
     assert_eq!(coord.lookup_hits, 0, "the replay twin must be the solver path");
     assert!(coord.solve_calls > 0);
+    // every committed Unicron plan carries a concrete, disjoint layout
+    let mut plans = 0;
+    for a in sim.decision_log.actions() {
+        if let Action::ApplyPlan { plan, .. } = a {
+            plans += 1;
+            assert!(!plan.layout.is_empty(), "v4 plans must carry their layout");
+            let placed: Vec<_> = plan.layout.placed_nodes().collect();
+            let unique: std::collections::BTreeSet<_> = placed.iter().copied().collect();
+            assert_eq!(placed.len(), unique.len(), "no node serves two tasks");
+        }
+    }
+    assert!(plans > 0, "a recovery session must commit at least one plan");
+    // the replayed coordinator's final cluster map equals the simulated one
+    assert_eq!(
+        coord.layout(),
+        sim.decision_log
+            .actions()
+            .filter_map(|a| match a {
+                Action::ApplyPlan { plan, .. } => Some(&plan.layout),
+                _ => None,
+            })
+            .last()
+            .expect("at least one plan"),
+        "replay must reproduce the authoritative layout bit-identically"
+    );
 }
 
 #[test]
@@ -208,6 +234,54 @@ fn tight_domain_burst_batches_replans() {
         );
     }
     // and the unification property holds across the new vocabulary
+    assert_unified(&trace);
+}
+
+#[test]
+fn fragmented_cluster_layouts_replay_bit_identically() {
+    // The placement acceptance property: a fragmentation-churn run — whose
+    // every plan carries a wire-v4 layout — replays bit-identically, so
+    // table-served and live-solved commits produce the same cluster maps.
+    let trace = Trace::generate(
+        TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() },
+        3,
+    )
+    .with_fragmented_cluster(4, 4, 17);
+    assert_unified(&trace);
+}
+
+#[test]
+fn rack_drain_migrates_layouts_off_the_dying_domain() {
+    // Quarantine-free rack drain: domain 0's nodes SEV1 one by one with
+    // repairs past the trace end. The final committed layout must place
+    // nothing in the drained domain — the placement layer migrated every
+    // hosted task off the dying rack.
+    let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+    let trace = Trace::generate(tc, 0).with_rack_drain(0, 4, 86400.0, 3600.0);
+    let cluster = ClusterSpec::default();
+    let specs = table3_case(5);
+    let sim = Simulator::builder()
+        .cluster(cluster)
+        .config(UnicronConfig::default())
+        .policy(PolicyKind::Unicron)
+        .tasks(&specs)
+        .build()
+        .run(&trace);
+    let final_layout = sim
+        .decision_log
+        .actions()
+        .filter_map(|a| match a {
+            Action::ApplyPlan { plan, .. } => Some(plan.layout.clone()),
+            _ => None,
+        })
+        .last()
+        .expect("the drain must force replans");
+    for (task, nodes) in final_layout.iter() {
+        for n in nodes {
+            assert!(n.0 >= 4, "task {task} still placed on drained domain 0 node {n}");
+        }
+    }
+    // and the whole exchange replays bit-identically
     assert_unified(&trace);
 }
 
