@@ -2,9 +2,13 @@
 //!
 //! No `criterion` in the vendored registry, so benches use this: warmup,
 //! fixed sample count, robust summary statistics (mean/median/p95/min), and
-//! an optional `BENCH_FILTER` env var to select benchmarks by substring.
-//! Results print in a criterion-like one-line format and can be dumped as
-//! JSON for EXPERIMENTS.md.
+//! an optional `BENCH_FILTER` env var to select benchmarks by substring
+//! (set `BENCH_FILTER=replan` to run only matching benches — CI's
+//! bench-smoke step uses it to bound runtime). Results print in a
+//! criterion-like one-line format and can be dumped as JSON for
+//! EXPERIMENTS.md; floor-gated benches additionally record a
+//! [`Trajectory`] row and write the perf-trajectory artifact
+//! (`BENCH_PR6.json`) that CI archives per run.
 
 use std::time::Instant;
 
@@ -155,6 +159,62 @@ impl Bencher {
     }
 }
 
+/// Recorded perf trajectory: one row per floor-gated bench — name, measured
+/// ns/op, the pinned floor, pass/fail — serialized as the `BENCH_PR6.json`
+/// artifact CI uploads per run. Floors are *ceilings on ns/op*; a
+/// throughput floor (≥ X ops/s) gates as `1e9 / X` ns/op.
+#[derive(Debug, Default)]
+pub struct Trajectory {
+    rows: Vec<Value>,
+    violations: Vec<String>,
+}
+
+impl Trajectory {
+    pub fn new() -> Trajectory {
+        Trajectory::default()
+    }
+
+    /// Gate one measurement against its floor (max ns per operation).
+    /// Records the row either way and returns whether the floor holds.
+    pub fn gate(&mut self, name: &str, ns_per_op: f64, floor_ns_per_op: f64) -> bool {
+        let pass = ns_per_op <= floor_ns_per_op;
+        self.rows.push(
+            Value::obj()
+                .with("name", name)
+                .with("ns_per_op", ns_per_op)
+                .with("floor_ns_per_op", floor_ns_per_op)
+                .with("pass", pass),
+        );
+        let verdict = if pass { "ok" } else { "FLOOR VIOLATED" };
+        println!(
+            "{name:<40} {:>12.1} ns/op  (floor {:.1} ns/op)  {verdict}",
+            ns_per_op, floor_ns_per_op
+        );
+        if !pass {
+            self.violations
+                .push(format!("{name}: {ns_per_op:.1} ns/op over floor {floor_ns_per_op:.1}"));
+        }
+        pass
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("benches", Value::Arr(self.rows.clone()))
+            .with("pass", self.violations.is_empty())
+    }
+
+    /// Write the artifact (path from `BENCH_JSON`, defaulting to `path`)
+    /// and panic on any recorded floor violation — `cargo bench` exits
+    /// non-zero and CI goes red. Call last, after every gate.
+    pub fn finish(self, path: &str) {
+        let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| path.to_string());
+        std::fs::write(&out, self.to_json().encode())
+            .unwrap_or_else(|e| panic!("writing {out}: {e}"));
+        println!("perf trajectory -> {out}");
+        assert!(self.violations.is_empty(), "perf floors violated: {:?}", self.violations);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +239,24 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         let report = b.report();
         assert_eq!(report.get("group").unwrap().as_str(), Some("test"));
+    }
+
+    #[test]
+    fn trajectory_gates_and_serializes() {
+        let mut t = Trajectory::new();
+        assert!(t.gate("fast_bench", 500.0, 1_000.0));
+        assert!(!t.gate("slow_bench", 2_000.0, 1_000.0));
+        let j = t.to_json();
+        assert_eq!(j.get("pass").unwrap().as_bool(), Some(false));
+        let rows = j.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("fast_bench"));
+        assert_eq!(rows[0].get("pass").unwrap().as_bool(), Some(true));
+        assert_eq!(rows[1].get("floor_ns_per_op").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(rows[1].get("pass").unwrap().as_bool(), Some(false));
+        // the artifact round-trips through the strict parser
+        let parsed = Value::parse(&j.encode()).unwrap();
+        assert_eq!(parsed, j);
     }
 
     #[test]

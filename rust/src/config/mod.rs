@@ -181,19 +181,44 @@ pub struct TaskSpec {
     pub weight: f64,
     /// Minimum workers (T_necessary): below this, F(t,x) = 0.
     pub min_workers: u32,
+    /// Worker ceiling: the planner never assigns more than this many
+    /// workers to the task (scaling saturates — batch-size and
+    /// parallelism limits cap useful world size long before fleet size
+    /// does). `u32::MAX` (the default) means uncapped; ceilings also
+    /// bound the planner DP's row widths at `Σ max_workers`, which is
+    /// what keeps replanning affordable on 16k–64k-node fleets.
+    pub max_workers: u32,
 }
 
 impl TaskSpec {
     pub fn new(id: impl Into<TaskId>, model: &str, weight: f64, min_workers: u32) -> TaskSpec {
-        TaskSpec { id: id.into(), model: model.to_string(), weight, min_workers }
+        TaskSpec {
+            id: id.into(),
+            model: model.to_string(),
+            weight,
+            min_workers,
+            max_workers: u32::MAX,
+        }
+    }
+
+    /// Builder: set the worker ceiling.
+    pub fn with_max_workers(mut self, max_workers: u32) -> TaskSpec {
+        self.max_workers = max_workers;
+        self
     }
 
     pub fn to_json(&self) -> Value {
-        Value::obj()
+        let v = Value::obj()
             .with("id", self.id.0 as u64)
             .with("model", self.model.as_str())
             .with("weight", self.weight)
-            .with("min_workers", self.min_workers as u64)
+            .with("min_workers", self.min_workers as u64);
+        // omit the vacuous default so pre-ceiling encodings stay stable
+        if self.max_workers == u32::MAX {
+            v
+        } else {
+            v.with("max_workers", self.max_workers as u64)
+        }
     }
 
     pub fn from_json(v: &Value) -> Result<TaskSpec, JsonError> {
@@ -202,6 +227,10 @@ impl TaskSpec {
             model: v.req("model")?.as_str().unwrap_or_default().to_string(),
             weight: v.req("weight")?.as_f64().unwrap_or(1.0),
             min_workers: v.req("min_workers")?.as_u64().unwrap_or(1) as u32,
+            max_workers: v
+                .get("max_workers")
+                .and_then(Value::as_u64)
+                .map_or(u32::MAX, |x| x as u32),
         })
     }
 }
@@ -415,6 +444,15 @@ mod tests {
         let t = TaskSpec::new(3u32, "gpt3-7b", 1.4, 8);
         let back = TaskSpec::from_json(&Value::parse(&t.to_json().encode()).unwrap()).unwrap();
         assert_eq!(t, back);
+        // the vacuous ceiling is omitted on the wire and restored on decode
+        assert!(t.to_json().get("max_workers").is_none());
+        assert_eq!(back.max_workers, u32::MAX);
+        // a real ceiling round-trips
+        let capped = TaskSpec::new(4u32, "gpt3-1.3b", 1.0, 8).with_max_workers(256);
+        let back =
+            TaskSpec::from_json(&Value::parse(&capped.to_json().encode()).unwrap()).unwrap();
+        assert_eq!(capped, back);
+        assert_eq!(back.max_workers, 256);
     }
 
     #[test]

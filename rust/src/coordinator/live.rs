@@ -10,9 +10,13 @@
 //!
 //! The plan refresh is the paper's "proactive plan generation": whenever the
 //! precomputed [`crate::planner::ScenarioLookup`] is stale (assignments
-//! moved, task set changed) the loop snapshots a
-//! [`super::PlanRefreshJob`] and runs the O(m·n²)-per-scenario rebuild on a
-//! *worker thread*, on the `UnicronConfig::plan_refresh_period_s` cadence.
+//! moved, task set changed, MTBF estimate re-priced) the loop snapshots a
+//! [`super::PlanRefreshJob`] — carrying the retired table as a delta donor —
+//! and refreshes the ≤ m+3 event-horizon rows on a *worker thread*, on the
+//! `UnicronConfig::plan_refresh_period_s` cadence; rows whose solve inputs
+//! did not change are copied instead of re-solved (DESIGN.md §12). An MTBF
+//! estimate update re-prices every row, so it re-solves the m+3 horizon —
+//! not, as before, the full (m+1)·(n+1) grid.
 //! The event loop never blocks on it — lease sweeps and detection keep
 //! their latency during the rebuild — and an epoch check on install drops
 //! results that raced a state change. SEV1 replans are O(1) table commits
@@ -36,7 +40,7 @@ use crate::engine::EventQueue;
 use crate::failure::ErrorKind;
 use crate::kvstore::{net, Event, Store};
 use crate::membership::{membership_event, MembershipEvent, NODES_PREFIX};
-use crate::planner::ScenarioLookup;
+use crate::planner::{RefreshStats, ScenarioLookup};
 use crate::ser::Value;
 use crate::util::Clock;
 
@@ -118,13 +122,13 @@ impl CoordinatorLive {
             timers.schedule(clock2.now(), LoopTask::LeaseSweep);
             timers.schedule(clock2.now(), LoopTask::PlanRefresh);
             // at most one background precompute in flight at a time
-            let mut inflight: Option<JoinHandle<(u64, ScenarioLookup)>> = None;
+            let mut inflight: Option<JoinHandle<(u64, ScenarioLookup, RefreshStats)>> = None;
             let mut refresh_broken = false;
             while !stop2.load(Ordering::Relaxed) {
                 // land a finished background rebuild (never blocks)
                 if inflight.as_ref().is_some_and(JoinHandle::is_finished) {
                     match inflight.take().unwrap().join() {
-                        Ok((epoch, lookup)) => {
+                        Ok((epoch, lookup, _stats)) => {
                             if coord.install_lookup(epoch, lookup) {
                                 refreshes2.fetch_add(1, Ordering::Relaxed);
                             }
@@ -192,11 +196,23 @@ impl CoordinatorLive {
                         }
                     }
                 }
-                for event in events {
+                if !events.is_empty() {
                     // the wall clock rides into the decision log (wire v3):
                     // it feeds the fleet's MTBF estimator and makes replays
                     // of live sessions reproduce time-fed decisions exactly
                     let now = clock2.now();
+                    // N events surfaced by one poll tick are simultaneous at
+                    // this clock resolution: deliver them as ONE
+                    // CoordEvent::Batch (wire v5) so the whole burst costs a
+                    // single dispatch/replan cycle and one recorded
+                    // decision. A lone event stays bare. Live detections
+                    // never carry TaskLaunched, so batch replays re-admit
+                    // nothing.
+                    let event = if events.len() == 1 {
+                        events.pop().expect("non-empty")
+                    } else {
+                        CoordEvent::Batch(std::mem::take(&mut events))
+                    };
                     let actions = coord.handle_at(event.clone(), now);
                     for a in &actions {
                         if let Action::ScheduleReplan { after_s } = a {
@@ -204,7 +220,22 @@ impl CoordinatorLive {
                         }
                     }
                     dispatch_actions(&store2, &seq2, &actions);
-                    det2.lock().unwrap().push(Detection { at_s: now, event, actions });
+                    // observability stays per member: a batch is recorded as
+                    // one Detection per member event, each carrying the
+                    // batch's full action list
+                    let mut dets = det2.lock().unwrap();
+                    match event {
+                        CoordEvent::Batch(members) => {
+                            for member in members {
+                                dets.push(Detection {
+                                    at_s: now,
+                                    event: member,
+                                    actions: actions.clone(),
+                                });
+                            }
+                        }
+                        event => dets.push(Detection { at_s: now, event, actions }),
+                    }
                 }
                 std::thread::sleep(Duration::from_millis(5));
             }

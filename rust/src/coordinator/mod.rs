@@ -54,8 +54,8 @@ use crate::config::UnicronConfig;
 use crate::cost::{CostModel, SpareTerms};
 use crate::failure::Severity;
 use crate::fleet::{DomainId, FleetModel, SpareDecision};
-use crate::placement::{self, ClusterView, Layout};
-use crate::planner::{solve, PlanTask, ScenarioLookup};
+use crate::placement::{self, AssignCache, ClusterView, Layout};
+use crate::planner::{solve, HorizonInputs, PlanTask, RefreshStats, ScenarioLookup};
 pub use crate::proto::{
     Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId, WorkerCount,
 };
@@ -74,20 +74,34 @@ struct EscalationState {
 #[derive(Debug, Clone)]
 pub struct PlanRefreshJob {
     tasks: Vec<PlanTask>,
-    ceiling: u32,
+    available: u32,
+    gpus_per_node: u32,
     /// Snapshot of the cost ledger (including the MTBF estimate) the table
     /// is priced with — a later estimate change bumps the epoch, so a job
     /// priced with a stale ledger can never land.
     cost: CostModel,
     epoch: u64,
+    /// The last table the coordinator retired, with the inputs it was solved
+    /// from: rows whose exact solve inputs are unchanged are copied instead
+    /// of re-solved. An MTBF estimate change re-prices every row's horizon,
+    /// so nothing is reusable then — but the refresh still solves only the
+    /// m+3 event-horizon rows instead of the old full (m+1)·(n+1) grid.
+    prev: Option<(HorizonInputs, ScenarioLookup)>,
 }
 
 impl PlanRefreshJob {
-    /// Run the expensive precompute (O((m+1)·n·m·n²)). CPU-bound — call it
-    /// off the event loop; hand the result to
-    /// [`Coordinator::install_lookup`].
-    pub fn compute(self) -> (u64, ScenarioLookup) {
-        (self.epoch, ScenarioLookup::precompute(&self.tasks, self.ceiling, &self.cost))
+    /// Run the event-horizon refresh (≤ m+3 solves, minus any rows delta-
+    /// reused from the retired table). CPU-bound — call it off the event
+    /// loop; hand the result to [`Coordinator::install_lookup`].
+    pub fn compute(self) -> (u64, ScenarioLookup, RefreshStats) {
+        let (lookup, stats) = ScenarioLookup::refresh_horizon(
+            &self.tasks,
+            self.available,
+            self.gpus_per_node,
+            &self.cost,
+            self.prev.as_ref().map(|(inputs, table)| (inputs, table)),
+        );
+        (self.epoch, lookup, stats)
     }
 }
 
@@ -158,9 +172,16 @@ impl CoordinatorBuilder {
             escalations: BTreeMap::new(),
             log: DecisionLog::new(),
             lookup: None,
+            lookup_inputs: None,
+            stale_lookup: None,
             plan_epoch: 0,
             lookup_hits: 0,
             solve_calls: 0,
+            lookup_rows_reused: 0,
+            lookup_rows_solved: 0,
+            place_cache: None,
+            batch_depth: 0,
+            batch_replan: None,
             last_at_s: 0.0,
             deferred_faults: None,
             last_domain_sev1: BTreeMap::new(),
@@ -221,6 +242,15 @@ pub struct Coordinator {
     /// §5.2 precomputed plan table; `None` when stale (assignments changed
     /// since the last [`Coordinator::precompute_plans`]).
     lookup: Option<ScenarioLookup>,
+    /// The exact solve inputs `lookup` was built from (fault-cleared tasks +
+    /// cost ledger) — what the delta refresh compares against to decide
+    /// which retired rows are still live solves.
+    lookup_inputs: Option<HorizonInputs>,
+    /// The last invalidated table, kept (with its inputs) as the delta-
+    /// refresh donor: rows whose solve inputs did not change are copied
+    /// instead of re-solved. Purely a cache — reuse is gated on input
+    /// bit-equality, so dropping it at any point only costs solves.
+    stale_lookup: Option<(HorizonInputs, ScenarioLookup)>,
     /// Bumped whenever the lookup goes stale — guards stale background
     /// [`PlanRefreshJob`] results against racing a state change.
     plan_epoch: u64,
@@ -228,6 +258,22 @@ pub struct Coordinator {
     pub lookup_hits: u64,
     /// Replans that fell back to a fresh DP solve.
     pub solve_calls: u64,
+    /// Table rows copied from a retired table by the delta refresh
+    /// (observability: the incremental-solving win).
+    pub lookup_rows_reused: u64,
+    /// Table rows the delta refresh actually re-solved.
+    pub lookup_rows_solved: u64,
+    /// Warm-start state for [`placement::assign_cached`]: the free-node map
+    /// carried between replans so an incremental solve touches only what
+    /// changed. Purely a cache — results are bit-identical to from-scratch
+    /// [`placement::assign`], so replays stay bit-identical.
+    place_cache: Option<AssignCache>,
+    /// Nesting depth of [`CoordEvent::Batch`] dispatch: while > 0, replans
+    /// are deferred so the whole batch costs one consolidated plan.
+    batch_depth: u32,
+    /// The latest replan reason owed by the current batch (last one wins);
+    /// committed once when the outermost batch closes.
+    batch_replan: Option<PlanReason>,
     /// The cost ledger every plan, transition, and spare decision is priced
     /// with (DESIGN.md §9). The effective MTBF inside tightens as
     /// [`Coordinator::handle_at`] observes real failure timestamps.
@@ -259,10 +305,16 @@ impl Coordinator {
         self.invalidate_lookup(); // task set changed: precomputed plans are stale
     }
 
-    /// The precomputed table is stale: drop it and bump the epoch so any
-    /// in-flight background rebuild for the old state cannot land.
+    /// The precomputed table is stale: retire it (it becomes the delta-
+    /// refresh donor — rows whose solve inputs are unchanged get copied, not
+    /// re-solved) and bump the epoch so any in-flight background rebuild for
+    /// the old state cannot land.
     fn invalidate_lookup(&mut self) {
+        if let (Some(inputs), Some(table)) = (self.lookup_inputs.take(), self.lookup.take()) {
+            self.stale_lookup = Some((inputs, table));
+        }
         self.lookup = None;
+        self.lookup_inputs = None;
         self.plan_epoch += 1;
     }
 
@@ -292,31 +344,54 @@ impl Coordinator {
     pub fn precompute_plans(&mut self) {
         if self.tasks.is_empty() {
             self.lookup = None;
+            self.lookup_inputs = None;
             return;
         }
         let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
         self.lookup =
             Some(ScenarioLookup::precompute(&ordered, self.capacity_ceiling(), &self.cost));
+        self.lookup_inputs = Some(HorizonInputs::capture(&ordered, &self.cost));
+        self.stale_lookup = None;
     }
 
     /// Precompute only the *event horizon* — the scenarios one event away
     /// from the current state (see
-    /// [`ScenarioLookup::precompute_horizon`]): m+3 solves instead of the
-    /// full grid's (m+1)·(n+1). Cheap enough to run synchronously after
-    /// every decision; the simulator's Unicron policy does exactly that, so
-    /// simulated SEV1 replans take the same table path production does.
+    /// [`ScenarioLookup::precompute_horizon`]): at most m+3 solves instead
+    /// of the full grid's (m+1)·(n+1). Cheap enough to run synchronously
+    /// after every decision; the simulator's Unicron policy does exactly
+    /// that, so simulated SEV1 replans take the same table path production
+    /// does.
+    ///
+    /// Incremental (tentpole, DESIGN.md §12): the refresh delta-reuses rows
+    /// from the previous table — the live one if it merely stopped covering
+    /// the horizon (a membership shift with unmoved assignments), or the
+    /// retired [`Coordinator::stale_lookup`] donor otherwise. Reuse is gated
+    /// on bit-equal solve inputs, so the result is exactly what a
+    /// from-scratch [`ScenarioLookup::precompute_horizon`] would build.
     pub fn precompute_event_plans(&mut self) {
         if self.tasks.is_empty() {
             self.lookup = None;
+            self.lookup_inputs = None;
+            self.stale_lookup = None;
             return;
         }
         let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
-        self.lookup = Some(ScenarioLookup::precompute_horizon(
+        let prev = match (self.lookup_inputs.take(), self.lookup.take()) {
+            (Some(inputs), Some(table)) => Some((inputs, table)),
+            _ => self.stale_lookup.take(),
+        };
+        let (lookup, stats) = ScenarioLookup::refresh_horizon(
             &ordered,
             self.available_workers,
             self.gpus_per_node,
             &self.cost,
-        ));
+            prev.as_ref().map(|(inputs, table)| (inputs, table)),
+        );
+        self.lookup_rows_reused += stats.reused as u64;
+        self.lookup_rows_solved += stats.solved as u64;
+        self.lookup = Some(lookup);
+        self.lookup_inputs = Some(HorizonInputs::capture(&ordered, &self.cost));
+        self.stale_lookup = None;
     }
 
     /// Snapshot the inputs for a *background* scenario-table rebuild — the
@@ -330,30 +405,40 @@ impl Coordinator {
         }
         Some(PlanRefreshJob {
             tasks: self.tasks.values().cloned().collect(),
-            ceiling: self.capacity_ceiling(),
+            available: self.available_workers,
+            gpus_per_node: self.gpus_per_node,
             cost: self.cost.clone(),
             epoch: self.plan_epoch,
+            prev: self.stale_lookup.clone(),
         })
     }
 
     /// Install a background-computed table. Returns `false` (dropping the
     /// table) if the assignments or task set changed since the job was
-    /// snapshotted — a stale table must never serve a replan.
+    /// snapshotted — a stale table must never serve a replan. On a matching
+    /// epoch the coordinator's state is exactly the job's snapshot (any
+    /// change bumps the epoch), so the inputs are recaptured from `self`.
     pub fn install_lookup(&mut self, epoch: u64, lookup: ScenarioLookup) -> bool {
         if epoch != self.plan_epoch {
             return false;
         }
+        let ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
+        self.lookup_inputs = Some(HorizonInputs::capture(&ordered, &self.cost));
         self.lookup = Some(lookup);
+        self.stale_lookup = None;
         true
     }
 
     /// True if the next replan will be served from the precomputed table:
-    /// the table matches the current task set and covers the current pool
-    /// size (a brand-new node joining past the precomputed ceiling falls
-    /// back to a live solve rather than silently clamping).
+    /// the table matches the current task set and covers a no-fault replan
+    /// at the current pool size. Coverage is exact per scenario key — an
+    /// event-horizon table answers only the states one event away, and a
+    /// pool size it never solved for falls back to a live solve rather than
+    /// silently clamping. Either way a hit is bit-identical to a live
+    /// solve, so the freshness check is purely a fast-path gate.
     pub fn lookup_is_fresh(&self) -> bool {
         self.lookup.as_ref().is_some_and(|l| {
-            l.n_tasks() == self.tasks.len() && self.available_workers <= l.max_workers()
+            l.n_tasks() == self.tasks.len() && l.covers(None, self.available_workers)
         })
     }
 
@@ -412,11 +497,24 @@ impl Coordinator {
     /// decision, and the stale table is invalidated.
     pub fn handle_at(&mut self, event: CoordEvent, at_s: f64) -> Vec<Action> {
         self.fleet.tick(); // the fleet's event clock (lemon-score decay)
+        let actions = self.apply_event(&event, at_s);
+        if at_s > self.last_at_s {
+            self.last_at_s = at_s;
+        }
+        self.log.record(at_s, event, actions.clone());
+        actions
+    }
+
+    /// Classify + dispatch + estimator feed for one event — everything
+    /// [`Coordinator::handle_at`] does except the fleet tick, the clock
+    /// update, and the audit record. A [`CoordEvent::Batch`] runs this once
+    /// per member but ticks, records, and replans exactly once.
+    fn apply_event(&mut self, event: &CoordEvent, at_s: f64) -> Vec<Action> {
         // Classify *before* dispatch: dispatch itself isolates the node, so
         // whether this report is fresh or a duplicate about an
         // already-fenced node must be decided up front.
-        let observation = self.classify_observation(&event);
-        let actions = self.dispatch(&event, at_s);
+        let observation = self.classify_observation(event);
+        let actions = self.dispatch(event, at_s);
         if let Some((node, plan_ending)) = observation {
             // per-node inter-failure estimate (fleet-health observability)
             self.fleet.observe_failure_time(node, at_s);
@@ -433,10 +531,6 @@ impl Coordinator {
                 }
             }
         }
-        if at_s > self.last_at_s {
-            self.last_at_s = at_s;
-        }
-        self.log.record(at_s, event, actions.clone());
         actions
     }
 
@@ -542,6 +636,31 @@ impl Coordinator {
                 } else {
                     vec![]
                 }
+            }
+            CoordEvent::Batch(ref events) => {
+                // N simultaneous events, ONE dispatch/replan cycle
+                // (tentpole, generalizing the PR-4 same-domain batch):
+                // every member is applied with replans deferred; when the
+                // outermost batch closes, the owed debt commits one
+                // consolidated plan for the merged state. Spare terms of a
+                // retention inside a batch do not ride a per-event plan
+                // (that plan is suppressed) — the consolidated breakdown
+                // prices the merged state instead. Drivers must only batch
+                // events whose tasks are already registered:
+                // [`DecisionLog::replay`] re-admits tasks for *top-level*
+                // `TaskLaunched` entries only.
+                self.batch_depth += 1;
+                let mut actions = Vec::new();
+                for ev in events {
+                    actions.extend(self.apply_event(ev, at_s));
+                }
+                self.batch_depth -= 1;
+                if self.batch_depth == 0 {
+                    if let Some(reason) = self.batch_replan.take() {
+                        actions.extend(self.reconfigure(reason, None));
+                    }
+                }
+                actions
             }
         }
     }
@@ -711,6 +830,19 @@ impl Coordinator {
     /// plan always settles everything owed, whether it was triggered by the
     /// [`CoordEvent::ReplanDue`] timer or by an unrelated event.
     fn reconfigure(&mut self, reason: PlanReason, faulted_task: Option<TaskId>) -> Vec<Action> {
+        if self.batch_depth > 0 {
+            // inside a CoordEvent::Batch: note the debt (the fault and the
+            // latest reason) and let the closing batch commit one
+            // consolidated plan for the merged state
+            let faults = self.deferred_faults.get_or_insert_with(Vec::new);
+            if let Some(t) = faulted_task {
+                if !faults.contains(&t) {
+                    faults.push(t);
+                }
+            }
+            self.batch_replan = Some(reason);
+            return vec![];
+        }
         let mut faults: Vec<TaskId> = self.deferred_faults.take().unwrap_or_default();
         if let Some(t) = faulted_task {
             if !faults.contains(&t) {
@@ -773,7 +905,10 @@ impl Coordinator {
             nodes_per_domain: self.cfg.nodes_per_domain.max(1),
         };
         let layout = if self.cfg.placement_min_churn {
-            placement::assign(&self.layout, &demands, &view)
+            // warm-started: the carried free-node map makes the incremental
+            // solve touch only what changed, with a result bit-identical to
+            // from-scratch `assign` (see placement::assign_cached)
+            placement::assign_cached(&mut self.place_cache, &self.layout, &demands, &view)
         } else {
             placement::assign_blind(&demands, &view)
         };
@@ -1011,11 +1146,11 @@ mod tests {
         let job = c.plan_refresh_job().expect("stale table must produce a job");
         // assignments move before the job lands: the install must be rejected
         c.handle(CoordEvent::NodeLost { node: NodeId(5) });
-        let (epoch, lookup) = job.compute();
+        let (epoch, lookup, _) = job.compute();
         assert!(!c.install_lookup(epoch, lookup), "stale table must not land");
         assert!(!c.lookup_is_fresh());
         // a job snapshotted from the new state installs fine
-        let (epoch, lookup) = c.plan_refresh_job().unwrap().compute();
+        let (epoch, lookup, _) = c.plan_refresh_job().unwrap().compute();
         assert!(c.install_lookup(epoch, lookup));
         assert!(c.lookup_is_fresh());
         // and a fresh table means there is nothing left to rebuild
@@ -1264,6 +1399,90 @@ mod tests {
             .filter(|a| matches!(a, Action::ApplyPlan { reason: PlanReason::Sev1Failure, .. }))
             .count();
         assert_eq!(sev1_replans, 2);
+    }
+
+    #[test]
+    fn batched_events_cost_one_replan_cycle() {
+        // A CoordEvent::Batch of two simultaneous node losses: both nodes
+        // are fenced, but the whole burst commits ONE consolidated plan —
+        // and the batch is one recorded decision that replays bit-
+        // identically.
+        let mut c = coord(32);
+        c.handle_at(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
+        let a = c.handle_at(
+            CoordEvent::Batch(vec![
+                CoordEvent::NodeLost { node: NodeId(0) },
+                CoordEvent::NodeLost { node: NodeId(2) },
+            ]),
+            50.0,
+        );
+        assert!(a.iter().any(|x| matches!(x, Action::IsolateNode { node: NodeId(0) })));
+        assert!(a.iter().any(|x| matches!(x, Action::IsolateNode { node: NodeId(2) })));
+        assert_eq!(c.available_workers(), WorkerCount(16));
+        let plans: Vec<_> = a
+            .iter()
+            .filter_map(|x| match x {
+                Action::ApplyPlan { plan, reason } => Some((plan, reason)),
+                _ => None,
+            })
+            .collect();
+        let (plan, reason) = match &plans[..] {
+            [one] => *one,
+            other => panic!("a batch must commit exactly one plan, got {}", other.len()),
+        };
+        assert_eq!(*reason, PlanReason::Sev1Failure);
+        assert!(plan.workers_used <= 16, "the consolidated plan fits the surviving pool");
+        assert!(plan.layout.owner_of(NodeId(0)).is_none());
+        assert!(plan.layout.owner_of(NodeId(2)).is_none());
+        // the batch debt is settled: a stray timer is a stale no-op
+        assert!(c.handle_at(CoordEvent::ReplanDue, 1000.0).is_empty());
+        // one log entry for the whole burst, and the log replays
+        let mut twin = coord(32);
+        let steps =
+            c.log.replay(&mut twin, |_| None).unwrap_or_else(|d| panic!("replay diverged: {d}"));
+        assert_eq!(steps, c.log.len());
+        assert_eq!(steps, 3, "launch + batch + stale timer");
+    }
+
+    #[test]
+    fn horizon_refresh_reuses_rows_when_assignments_hold_still() {
+        // Capped tasks on surplus capacity: a node loss does not move the
+        // optimum, so the committed table survives, and the next horizon
+        // refresh re-solves only the rows the membership shift changed.
+        fn capped(id: u32, cap: u32, n: u32) -> PlanTask {
+            let mut t = plan_task(id, 2, cap, n);
+            t.spec.max_workers = cap;
+            t
+        }
+        // per-node failure domains: back-to-back losses on this 4-node pool
+        // must replan immediately, not defer as a correlated same-domain burst
+        let cfg = UnicronConfig { nodes_per_domain: 1, ..Default::default() };
+        let mut c = Coordinator::builder()
+            .config(cfg)
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .task(capped(0, 4, 48))
+            .task(capped(1, 4, 48))
+            .build();
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        c.precompute_event_plans();
+        assert_eq!(c.lookup_rows_reused, 0, "nothing to delta against yet");
+        let cold_rows = c.lookup_rows_solved;
+        assert_eq!(cold_rows, 2 + 3, "m+3 event-horizon rows");
+        // SEV1 shrinks the pool 32 -> 24, but the caps bind: the replan is
+        // a table hit and the committed counts do not move
+        c.handle(CoordEvent::NodeLost { node: NodeId(3) });
+        assert_eq!(c.task_assignment(TaskId(0)), Some(WorkerCount(4)));
+        assert_eq!(c.task_assignment(TaskId(1)), Some(WorkerCount(4)));
+        c.precompute_event_plans();
+        // the shifted horizon shares two no-fault keys (24, 32) with the
+        // previous one — copied, not re-solved
+        assert_eq!(c.lookup_rows_reused, 2, "overlapping rows must be reused");
+        assert_eq!(c.lookup_rows_solved, cold_rows + 3);
+        // and the refreshed table still serves the next replan exactly
+        let before = c.lookup_hits;
+        c.handle(CoordEvent::NodeLost { node: NodeId(2) });
+        assert_eq!(c.lookup_hits, before + 1);
     }
 
     #[test]

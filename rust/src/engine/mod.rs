@@ -160,6 +160,38 @@ impl<E> EventQueue<E> {
         None
     }
 
+    /// Earliest pending event — time and a borrow of its payload — without
+    /// popping. Canceled head entries are pruned, exactly like
+    /// [`EventQueue::peek_time`]. Lets a consumer decide whether the next
+    /// event belongs to the batch it is currently draining.
+    pub fn peek(&mut self) -> Option<(f64, &E)> {
+        self.peek_time()?; // prune tombstones off the head
+        self.heap.peek().map(|s| (s.at, &s.ev))
+    }
+
+    /// Schedule a burst of events at the same instant. They pop in iterator
+    /// order (FIFO seqs), and [`EventQueue::pop_simultaneous`] returns the
+    /// whole burst in one call. Returns the cancelation handles in order.
+    pub fn schedule_batch(&mut self, at: f64, evs: impl IntoIterator<Item = E>) -> Vec<EventId> {
+        evs.into_iter().map(|ev| self.schedule(at, ev)).collect()
+    }
+
+    /// Pop the earliest live event *and* every further live event due at the
+    /// bit-identical instant (`total_cmp` equality), in seq order — the
+    /// engine half of batched dispatch: a burst of N simultaneous events
+    /// costs its consumer one dispatch cycle instead of N. Returns an empty
+    /// vec when the queue is drained.
+    pub fn pop_simultaneous(&mut self) -> Vec<(f64, E)> {
+        let Some((at, ev)) = self.pop() else { return Vec::new() };
+        let mut batch = vec![(at, ev)];
+        while matches!(self.peek_time(), Some(t) if t.total_cmp(&at) == CmpOrdering::Equal) {
+            if let Some(e) = self.pop() {
+                batch.push(e);
+            }
+        }
+        batch
+    }
+
     /// Drain every event due at or before `deadline`, in order. Used by the
     /// live loop: each tick collects the work that has come due.
     pub fn pop_due(&mut self, deadline: f64) -> Vec<(f64, E)> {
@@ -299,6 +331,46 @@ mod tests {
             out
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn peek_shows_head_without_popping() {
+        let mut q = EventQueue::new();
+        let a = q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.peek(), Some((1.0, &"a")));
+        assert_eq!(q.len(), 2, "peek must not consume");
+        q.cancel(a);
+        assert_eq!(q.peek(), Some((2.0, &"b")), "canceled head is pruned");
+        q.pop();
+        assert_eq!(q.peek(), None);
+    }
+
+    #[test]
+    fn schedule_batch_pops_fifo_and_cancels_individually() {
+        let mut q = EventQueue::new();
+        q.schedule(0.5, "early");
+        let ids = q.schedule_batch(3.0, ["x", "y", "z"]);
+        assert_eq!(ids.len(), 3);
+        assert!(q.cancel(ids[1]));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["early", "x", "z"]);
+    }
+
+    #[test]
+    fn pop_simultaneous_returns_bitwise_equal_bursts() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 10u32);
+        q.schedule_batch(4.0, [1u32, 2, 3]);
+        // -0.0 and +0.0 are distinct under total_cmp: NOT the same burst
+        q.schedule(0.0, 20u32);
+        q.schedule(-0.0, 21u32);
+        assert_eq!(q.pop_simultaneous(), vec![(-0.0, 21)]);
+        assert_eq!(q.pop_simultaneous(), vec![(0.0, 20)]);
+        assert_eq!(q.pop_simultaneous(), vec![(1.0, 10)]);
+        assert_eq!(q.pop_simultaneous(), vec![(4.0, 1), (4.0, 2), (4.0, 3)]);
+        assert_eq!(q.now(), 4.0, "now advances to the burst instant");
+        assert!(q.pop_simultaneous().is_empty());
     }
 
     #[test]

@@ -71,6 +71,27 @@ impl TraceConfig {
             repair_max_s: 0.5 * 86400.0,
         }
     }
+
+    /// Large-fleet scaling study: trace-a's *per-node* failure rates on an
+    /// `n_nodes`-node fleet over 30 minutes, cloud-tier repairs (4–24 h).
+    /// At 16k nodes that is ≈3.8 expected SEV1s and ≈12.6 others in the
+    /// window — enough churn to exercise the replan pipeline, short enough
+    /// to simulate at 64k-node scale.
+    pub fn large_fleet(n_nodes: u32) -> TraceConfig {
+        let a = Self::trace_a();
+        let duration_s = 1800.0;
+        let node_seconds = n_nodes as f64 * duration_s;
+        let per_node_s = |expect: f64| expect / (a.n_nodes as f64 * a.duration_s);
+        TraceConfig {
+            name: format!("large-fleet-{n_nodes}"),
+            duration_s,
+            n_nodes,
+            expect_sev1: per_node_s(a.expect_sev1) * node_seconds,
+            expect_other: per_node_s(a.expect_other) * node_seconds,
+            repair_min_s: 4.0 * 3600.0,
+            repair_max_s: 24.0 * 3600.0,
+        }
+    }
 }
 
 /// Whether a task enters or leaves the cluster (Fig. 7 triggers ⑥ and ⑤).
@@ -157,6 +178,41 @@ impl Trace {
 
         events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
         Trace { config, events, lifecycle: Vec::new() }
+    }
+
+    /// Large-fleet scaling trace (16k/64k nodes): background failures at
+    /// trace-a's per-node rates ([`TraceConfig::large_fleet`]) plus
+    /// `n_bursts` *bitwise-simultaneous* SEV1 bursts — each hits
+    /// `burst_size` distinct nodes with one shared `at_s` bit pattern, the
+    /// shape that drives the batched dispatch path (a burst of N costs one
+    /// decide/replan cycle, not N). Ordinary Poisson draws never collide
+    /// bitwise; these collisions are deliberate.
+    pub fn with_large_fleet(n_nodes: u32, n_bursts: u32, burst_size: u32, seed: u64) -> Trace {
+        assert!(burst_size >= 1 && burst_size <= n_nodes);
+        let mut trace = Trace::generate(TraceConfig::large_fleet(n_nodes), seed);
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xB16_F1EE7);
+        let sev1_kinds: Vec<ErrorKind> = ErrorKind::all()
+            .iter()
+            .copied()
+            .filter(|k| k.severity() == Severity::Sev1)
+            .collect();
+        let d = trace.config.duration_s;
+        for _ in 0..n_bursts {
+            let at = rng.uniform(0.0, d);
+            let first = rng.below((n_nodes - burst_size + 1) as u64) as u32;
+            for k in 0..burst_size {
+                trace.events.push(FailureEvent {
+                    at_s: at, // identical bit pattern across the burst
+                    kind: *rng.choose(&sev1_kinds),
+                    node: NodeId(first + k),
+                    repair_after_s: rng
+                        .uniform(trace.config.repair_min_s, trace.config.repair_max_s),
+                });
+            }
+        }
+        // stable sort: burst members keep node order at their shared instant
+        trace.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        trace
     }
 
     /// Attach a task arrival/departure schedule (Fig. 7 ⑤⑥ — the multi-task
@@ -593,6 +649,60 @@ mod tests {
         let mid = 0.5 * (t.config.repair_min_s + t.config.repair_max_s);
         assert!(t.events.iter().all(|e| e.repair_after_s == mid));
         assert!(!t.events.is_empty());
+    }
+
+    #[test]
+    fn large_fleet_scales_trace_a_per_node_rates() {
+        let a = TraceConfig::trace_a();
+        for n in [16384u32, 65536] {
+            let c = TraceConfig::large_fleet(n);
+            assert_eq!(c.n_nodes, n);
+            // per-node-second rates match trace-a's exactly
+            let rate = |e: f64, cfg: &TraceConfig| e / (cfg.n_nodes as f64 * cfg.duration_s);
+            assert!((rate(c.expect_sev1, &c) - rate(a.expect_sev1, &a)).abs() < 1e-15);
+            assert!((rate(c.expect_other, &c) - rate(a.expect_other, &a)).abs() < 1e-15);
+        }
+        // 16k nodes for 30 min: a handful of failures, not thousands
+        let c = TraceConfig::large_fleet(16384);
+        assert!((3.0..5.0).contains(&c.expect_sev1), "{}", c.expect_sev1);
+        assert!((10.0..16.0).contains(&c.expect_other), "{}", c.expect_other);
+    }
+
+    #[test]
+    fn large_fleet_bursts_are_bitwise_simultaneous() {
+        let t = Trace::with_large_fleet(16384, 2, 4, 11);
+        // each burst shares ONE timestamp bit pattern across distinct nodes
+        let mut by_time: std::collections::BTreeMap<u64, Vec<u32>> = Default::default();
+        for e in &t.events {
+            by_time.entry(e.at_s.to_bits()).or_default().push(e.node.0);
+        }
+        let bursts: Vec<&Vec<u32>> = by_time.values().filter(|v| v.len() > 1).collect();
+        assert_eq!(bursts.len(), 2, "two simultaneous bursts");
+        for nodes in bursts {
+            assert_eq!(nodes.len(), 4);
+            let mut uniq = nodes.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 4, "burst nodes are distinct");
+        }
+        // everything in bounds and sorted
+        let mut prev = 0.0;
+        for e in &t.events {
+            assert!(e.at_s >= prev && e.at_s < t.config.duration_s);
+            assert!(e.node.0 < 16384);
+            prev = e.at_s;
+        }
+        // deterministic per seed — the corpus contract
+        let again = Trace::with_large_fleet(16384, 2, 4, 11);
+        assert_eq!(t.events, again.events);
+    }
+
+    #[test]
+    fn large_fleet_generates_at_64k_nodes() {
+        let t = Trace::with_large_fleet(65536, 1, 8, 3);
+        assert!(t.events.iter().all(|e| e.node.0 < 65536));
+        assert!(t.events.len() >= 8, "at least the burst itself");
+        assert!(t.lifecycle.is_empty());
     }
 
     #[test]

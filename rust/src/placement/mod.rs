@@ -300,14 +300,38 @@ pub fn keep_or_move_score(
 /// shorter node list — never a shared or phantom node.
 pub fn assign(prev: &Layout, demands: &[(TaskId, u32)], view: &ClusterView) -> Layout {
     let node_set: BTreeSet<NodeId> = view.nodes.iter().copied().collect();
-    let mut used: BTreeSet<NodeId> = BTreeSet::new();
-    let mut out: BTreeMap<TaskId, Vec<NodeId>> = BTreeMap::new();
+    let (mut out, shortfall, _dropped) = keep_phase(prev, demands, &node_set, view);
+    if shortfall.iter().all(|&(_, need)| need == 0) {
+        // every task was served entirely by keeps — phase 2 never consults
+        // the free pool, so skip building it (the common steady-state
+        // replan, and the reason a no-shortfall solve is O(placed) not
+        // O(fleet))
+        return Layout { tasks: out };
+    }
+    let used: BTreeSet<NodeId> = out.values().flatten().copied().collect();
+    let mut free: BTreeMap<DomainId, BTreeSet<NodeId>> = BTreeMap::new();
+    for &n in node_set.difference(&used) {
+        free.entry(view.domain_of(n)).or_default().insert(n);
+    }
+    fill_phase(&mut out, &shortfall, &mut free, view);
+    Layout { tasks: out }
+}
 
-    // Phase 1 — keeps. Previous per-task sets are disjoint, so each task
-    // keeping its own healthy nodes (up to demand) is the maximum-keep
-    // matching. Within a task, keep the domain-compact subset: nodes from
-    // the domains where the task has the most survivors first.
+/// Phase 1 — keeps. Previous per-task sets are disjoint, so each task
+/// keeping its own healthy nodes (up to demand) is the maximum-keep
+/// matching. Within a task, keep the domain-compact subset: nodes from
+/// the domains where the task has the most survivors first. Returns the
+/// per-task keeps, per-task shortfalls (task-id order), and the surviving
+/// previous nodes that were *not* kept because the task's demand shrank.
+fn keep_phase(
+    prev: &Layout,
+    demands: &[(TaskId, u32)],
+    node_set: &BTreeSet<NodeId>,
+    view: &ClusterView,
+) -> (BTreeMap<TaskId, Vec<NodeId>>, Vec<(TaskId, usize)>, Vec<NodeId>) {
+    let mut out: BTreeMap<TaskId, Vec<NodeId>> = BTreeMap::new();
     let mut shortfall: Vec<(TaskId, usize)> = Vec::with_capacity(demands.len());
+    let mut dropped: Vec<NodeId> = Vec::new();
     for &(task, workers) in demands {
         let need = view.nodes_needed(workers);
         let mut healthy: Vec<NodeId> =
@@ -320,19 +344,24 @@ pub fn assign(prev: &Layout, demands: &[(TaskId, u32)], view: &ClusterView) -> L
             let d = view.domain_of(n);
             (std::cmp::Reverse(per_domain[&d]), d, n)
         });
-        healthy.truncate(need);
-        used.extend(healthy.iter().copied());
+        dropped.extend(healthy.drain(need.min(healthy.len())..));
         shortfall.push((task, need - healthy.len()));
         healthy.sort_unstable();
         out.insert(task, healthy);
     }
+    (out, shortfall, dropped)
+}
 
-    // Phase 2 — fills from the free pool, domain-compact, task-id order.
-    let mut free: BTreeMap<DomainId, BTreeSet<NodeId>> = BTreeMap::new();
-    for &n in node_set.difference(&used) {
-        free.entry(view.domain_of(n)).or_default().insert(n);
-    }
-    for (task, need) in shortfall {
+/// Phase 2 — fills from the free pool, domain-compact, task-id order.
+/// Picked nodes are consumed from `free`; emptied domains keep their (now
+/// empty) entry, which the pick filter ignores.
+fn fill_phase(
+    out: &mut BTreeMap<TaskId, Vec<NodeId>>,
+    shortfall: &[(TaskId, usize)],
+    free: &mut BTreeMap<DomainId, BTreeSet<NodeId>>,
+    view: &ClusterView,
+) {
+    for &(task, need) in shortfall {
         if need == 0 {
             continue;
         }
@@ -360,7 +389,151 @@ pub fn assign(prev: &Layout, demands: &[(TaskId, u32)], view: &ClusterView) -> L
         }
         assigned.sort_unstable();
     }
-    Layout { tasks: out }
+}
+
+/// Warm-start state for [`assign_cached`]: the previous solve's inputs,
+/// its result, and the maintained free pool
+/// (`free == node_set − result.placed_nodes()`), so the next solve in a
+/// replan chain touches only the membership/demand delta instead of
+/// rebuilding O(fleet) structures.
+///
+/// The cache is pure acceleration — [`assign_cached`] returns exactly what
+/// [`assign`] returns for the same `(prev, demands, view)` — so holding or
+/// dropping it never changes a committed layout, only the time to compute
+/// it (replay-safe by construction).
+#[derive(Debug, Clone)]
+pub struct AssignCache {
+    nodes: Vec<NodeId>,
+    gpus_per_node: u32,
+    nodes_per_domain: u32,
+    prev: Layout,
+    demands: Vec<(TaskId, u32)>,
+    node_set: BTreeSet<NodeId>,
+    /// Invariant between calls: exactly the placeable nodes the cached
+    /// result leaves unplaced, grouped by domain (no empty domain entries).
+    free: BTreeMap<DomainId, BTreeSet<NodeId>>,
+    result: Layout,
+}
+
+impl AssignCache {
+    fn geometry_matches(&self, view: &ClusterView) -> bool {
+        self.gpus_per_node == view.gpus_per_node
+            && self.nodes_per_domain == view.nodes_per_domain
+    }
+}
+
+/// [`assign`], warm-started from the previous solve.
+///
+/// Bit-identical to [`assign`] on every input (the
+/// `warm_start_assign_equals_from_scratch` property pins this); the cache
+/// only changes *how much work* the solve does:
+///
+/// * same `(prev, demands, nodes)` as the cached call — the cached layout
+///   is returned as-is;
+/// * `prev` is the cached call's *result* (the normal replan chain: commit,
+///   then replan after the next event) — `node_set` and the free pool are
+///   updated by the sorted-merge membership delta, phase 1 re-keeps only
+///   the O(placed) previous nodes, and a no-shortfall solve never touches
+///   an O(fleet) structure at all;
+/// * anything else — cold start, identical to [`assign`] plus snapshotting
+///   the cache for the next call.
+///
+/// Like [`assign`], `prev`'s per-task node sets must be disjoint (every
+/// committed layout's are — the solver never double-books).
+pub fn assign_cached(
+    cache: &mut Option<AssignCache>,
+    prev: &Layout,
+    demands: &[(TaskId, u32)],
+    view: &ClusterView,
+) -> Layout {
+    if let Some(c) = cache.as_ref() {
+        if c.geometry_matches(view)
+            && c.nodes == view.nodes
+            && c.prev == *prev
+            && c.demands == demands
+        {
+            return c.result.clone();
+        }
+    }
+    let warm = cache.take().filter(|c| c.geometry_matches(view) && c.result == *prev);
+    // Establish `free == node_set − (surviving nodes `prev` still places)`.
+    let (mut node_set, mut free) = match warm {
+        Some(c) => {
+            // prev == the cached result, so the cached free pool already
+            // satisfies the invariant over the *old* membership; apply the
+            // sorted-merge delta between the old and new placeable lists.
+            let (mut node_set, mut free) = (c.node_set, c.free);
+            let (old, new) = (c.nodes.as_slice(), view.nodes);
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < old.len() || j < new.len() {
+                let (o, n) = (old.get(i).copied(), new.get(j).copied());
+                if o.is_some() && o == n {
+                    i += 1;
+                    j += 1;
+                } else if o.is_some() && (n.is_none() || o < n) {
+                    let o = o.expect("checked is_some");
+                    node_set.remove(&o);
+                    if let Some(d) = free.get_mut(&view.domain_of(o)) {
+                        d.remove(&o); // placed nodes are not in the pool
+                    }
+                    i += 1;
+                } else {
+                    // a joined node was never placed by the cached result
+                    let n = n.expect("merge walk not done");
+                    node_set.insert(n);
+                    free.entry(view.domain_of(n)).or_default().insert(n);
+                    j += 1;
+                }
+            }
+            (node_set, free)
+        }
+        None => {
+            let node_set: BTreeSet<NodeId> = view.nodes.iter().copied().collect();
+            let mut free: BTreeMap<DomainId, BTreeSet<NodeId>> = BTreeMap::new();
+            for &n in &node_set {
+                free.entry(view.domain_of(n)).or_default().insert(n);
+            }
+            for (_, placed) in prev.iter() {
+                for n in placed {
+                    if let Some(d) = free.get_mut(&view.domain_of(*n)) {
+                        d.remove(n);
+                    }
+                }
+            }
+            (node_set, free)
+        }
+    };
+    let (mut out, shortfall, dropped) = keep_phase(prev, demands, &node_set, view);
+    // Nodes `prev` placed but this solve keeps nowhere join the pool:
+    // survivors a shrinking task dropped, plus every surviving node of a
+    // task that left the demand list. With them, free == node_set − keeps —
+    // exactly the pool [`assign`] builds from scratch.
+    for n in dropped {
+        free.entry(view.domain_of(n)).or_default().insert(n);
+    }
+    for (task, placed) in prev.iter() {
+        if demands.binary_search_by_key(&task, |&(t, _)| t).is_err() {
+            for &n in placed {
+                if node_set.contains(&n) {
+                    free.entry(view.domain_of(n)).or_default().insert(n);
+                }
+            }
+        }
+    }
+    fill_phase(&mut out, &shortfall, &mut free, view);
+    free.retain(|_, nodes| !nodes.is_empty());
+    let result = Layout { tasks: out };
+    *cache = Some(AssignCache {
+        nodes: view.nodes.to_vec(),
+        gpus_per_node: view.gpus_per_node,
+        nodes_per_domain: view.nodes_per_domain,
+        prev: prev.clone(),
+        demands: demands.to_vec(),
+        node_set,
+        free,
+        result: result.clone(),
+    });
+    result
 }
 
 /// Topology-blind reference assignment: contiguous whole-node chunks in
@@ -615,6 +788,68 @@ mod tests {
         // decode-then-reencode must reproduce the input bytes
         let bad = text.replace("\"nodes\":[0,3]", "\"nodes\":[3,0]");
         assert!(Layout::from_value(&Value::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cached_assign_tracks_a_replan_chain_bit_identically() {
+        // Scripted chain: cold start → node loss → join → demand shrink →
+        // task departure → repeat call. Every step must equal the
+        // from-scratch solver exactly, with `prev` always the previous
+        // committed layout (the production replan chain).
+        let gpn = 8u32;
+        let npd = 4u32;
+        let mut cache: Option<AssignCache> = None;
+        let mut prev = Layout::default();
+        let steps: Vec<(Vec<u32>, Vec<(TaskId, u32)>)> = vec![
+            ((0..12).collect(), vec![(TaskId(0), 32), (TaskId(1), 32)]),
+            // node 5 lost: task holding it must pull a replacement
+            (vec![0, 1, 2, 3, 4, 6, 7, 8, 9, 10, 11], vec![(TaskId(0), 32), (TaskId(1), 32)]),
+            // node 5 repaired + spare 12 joins
+            ((0..13).collect(), vec![(TaskId(0), 32), (TaskId(1), 32)]),
+            // task 0 shrinks (drops survivors), task 1 grows
+            ((0..13).collect(), vec![(TaskId(0), 16), (TaskId(1), 48)]),
+            // task 0 leaves the cluster entirely
+            ((0..13).collect(), vec![(TaskId(1), 48)]),
+            // steady state: identical inputs again
+            ((0..13).collect(), vec![(TaskId(1), 48)]),
+        ];
+        for (ids, demands) in steps {
+            let ns = nodes(&ids);
+            let v = view(&ns, gpn, npd);
+            let warm = assign_cached(&mut cache, &prev, &demands, &v);
+            assert_eq!(warm, assign(&prev, &demands, &v), "demands {demands:?}");
+            // the maintained pool must be exactly the unplaced placeables
+            let c = cache.as_ref().unwrap();
+            let placed: BTreeSet<NodeId> = warm.placed_nodes().collect();
+            let expect: BTreeSet<NodeId> =
+                ns.iter().copied().filter(|n| !placed.contains(n)).collect();
+            let got: BTreeSet<NodeId> = c.free.values().flatten().copied().collect();
+            assert_eq!(got, expect, "free-pool invariant");
+            assert!(c.free.values().all(|s| !s.is_empty()), "no empty domain entries");
+            prev = warm;
+        }
+    }
+
+    #[test]
+    fn cached_assign_cold_starts_on_geometry_or_history_changes() {
+        // A cache built under one geometry must not poison a solve under
+        // another, and an unrelated `prev` (not the cached result) must
+        // fall back to a cold start — still equal to from-scratch.
+        let ns = nodes(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        let mut cache: Option<AssignCache> = None;
+        let demands = [(TaskId(0), 16), (TaskId(1), 16)];
+        let v8 = view(&ns, 8, 4);
+        let first = assign_cached(&mut cache, &Layout::default(), &demands, &v8);
+        assert_eq!(first, assign(&Layout::default(), &demands, &v8));
+        // same nodes, different domain geometry
+        let v2 = view(&ns, 8, 2);
+        let regrouped = assign_cached(&mut cache, &first, &demands, &v2);
+        assert_eq!(regrouped, assign(&first, &demands, &v2));
+        // a prev that is not the cached result (e.g. after a replayed log
+        // truncated differently)
+        let foreign = Layout::new([(TaskId(0), nodes(&[6, 7]))]);
+        let cold = assign_cached(&mut cache, &foreign, &demands, &v2);
+        assert_eq!(cold, assign(&foreign, &demands, &v2));
     }
 
     #[test]

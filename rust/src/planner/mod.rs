@@ -22,7 +22,13 @@ use crate::placement::Layout;
 use crate::proto::WorkerCount;
 
 /// Everything the solver needs to know about one task.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares the *exact solve inputs* — spec (including the
+/// worker ceiling), calibrated throughput table, transition profile,
+/// current count, and fault flag — which is what the delta-refresh path
+/// ([`ScenarioLookup::refresh_horizon`]) uses to prove a cached row is
+/// bit-reusable.
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlanTask {
     pub spec: TaskSpec,
     /// Calibrated `T(t, x)` table, FLOP/s, indexed by worker count
@@ -170,42 +176,70 @@ fn breakdown_for(
 
 /// Solve Eq. 3 for `n_workers` available workers via the Eq. 5 DP.
 ///
-/// Complexity O(m·n²) (m tasks, n workers), as analyzed in §5.2.
+/// Complexity O(m·W·K) where `W = min(n, Σ caps)` and `K = max cap`
+/// (`cap_i` = the task's [`crate::config::TaskSpec::max_workers`] ceiling
+/// clamped to the budget). Uncapped tasks give `W = K = n` — the classic
+/// O(m·n²) of §5.2 — and in that case the row layout, the candidate
+/// iteration order, and therefore every tie-break and output bit are
+/// identical to the uncapped DP. With ceilings, budget beyond `Σ caps` can
+/// never be spent, so DP rows stay `Σ caps` wide no matter how large the
+/// fleet is — this is what keeps replanning affordable at 16k/64k nodes.
 pub fn solve(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan {
     let n = n_workers as usize;
     let m = tasks.len();
     let horizon = cost.horizon_s(n_workers);
     let penalties = hoisted_penalties(tasks, cost);
 
+    // Per-task ceilings and cumulative row widths. Row `i` is constant
+    // ("saturated") for budgets ≥ widths[i] = min(n, Σ_{i'≤i} cap_{i'}),
+    // so reads past a row's stored width clamp to its last cell — exactly
+    // equal to the full-width DP (the saturated cells all hold the same
+    // value and the same first-argmax choice).
+    let caps: Vec<usize> = tasks.iter().map(|t| (t.spec.max_workers as usize).min(n)).collect();
+    let mut widths = Vec::with_capacity(m + 1);
+    widths.push(0usize);
+    for &cap in &caps {
+        let prev = *widths.last().expect("widths starts non-empty");
+        widths.push(n.min(prev + cap));
+    }
+
     // S[i][j]: best value of first i tasks with j workers; choice[i][j] = k.
-    let mut s = vec![vec![0.0f64; n + 1]; m + 1];
-    let mut choice = vec![vec![0u32; n + 1]; m + 1];
+    let mut s: Vec<Vec<f64>> = vec![vec![0.0f64]];
+    let mut choice: Vec<Vec<u32>> = vec![vec![0u32]];
     for i in 1..=m {
         let t = &tasks[i - 1];
+        let cap = caps[i - 1];
+        let (w, w_prev) = (widths[i], widths[i - 1]);
         let pen = penalties[i - 1].0 + penalties[i - 1].1;
+        let prev_row = &s[i - 1];
+        let mut row = vec![0.0f64; w + 1];
+        let mut crow = vec![0u32; w + 1];
         // G(t, 0) may be negative (losing a running task still pays its
         // penalty) but assigning zero is always *allowed*.
-        for j in 0..=n {
+        for j in 0..=w {
             let mut best = f64::NEG_INFINITY;
             let mut best_k = 0;
-            for k in 0..=j {
+            for k in 0..=j.min(cap) {
                 let x = k as u32;
-                let v = s[i - 1][j - k] + term(t, x, horizon, pen);
+                let v = prev_row[(j - k).min(w_prev)] + term(t, x, horizon, pen);
                 if v > best {
                     best = v;
                     best_k = x;
                 }
             }
-            s[i][j] = best;
-            choice[i][j] = best_k;
+            row[j] = best;
+            crow[j] = best_k;
         }
+        s.push(row);
+        choice.push(crow);
     }
 
-    // Traceback from S(m, n).
+    // Traceback from S(m, n); budgets past a row's width read its
+    // saturated last cell.
     let mut assignment = vec![0u32; m];
     let mut j = n;
     for i in (1..=m).rev() {
-        let k = choice[i][j];
+        let k = choice[i][j.min(widths[i])];
         assignment[i - 1] = k;
         j -= k as usize;
     }
@@ -249,7 +283,7 @@ pub fn solve_brute(tasks: &[PlanTask], n_workers: u32, cost: &CostModel) -> Plan
             }
             return;
         }
-        for k in 0..=left {
+        for k in 0..=left.min(tasks[i].spec.max_workers) {
             assign[i] = k;
             rec(i + 1, left - k, tasks, horizon, penalties, assign, best_val, best_assign);
         }
@@ -344,6 +378,38 @@ enum Grid {
     },
 }
 
+/// Snapshot of the solve inputs a [`ScenarioLookup`] was built from, used
+/// by [`ScenarioLookup::refresh_horizon`] to prove which rows of a previous
+/// table are bit-reusable. Holds the *fault-cleared* task vector (fault
+/// flags are part of the row key, not the snapshot) and the cost model;
+/// `available`/`gpn` are deliberately absent — rows are keyed by absolute
+/// capacity, so a membership change reuses whatever keys still overlap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HorizonInputs {
+    tasks: Vec<PlanTask>,
+    cost: CostModel,
+}
+
+impl HorizonInputs {
+    /// Capture the snapshot a table built from `(tasks, cost)` depends on.
+    pub fn capture(tasks: &[PlanTask], cost: &CostModel) -> HorizonInputs {
+        let mut tasks = tasks.to_vec();
+        for t in &mut tasks {
+            t.fault = false;
+        }
+        HorizonInputs { tasks, cost: cost.clone() }
+    }
+}
+
+/// How a [`ScenarioLookup::refresh_horizon`] call split its m+3 rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RefreshStats {
+    /// Rows copied bit-for-bit from the previous table.
+    pub reused: usize,
+    /// Rows recomputed by a live [`solve`].
+    pub solved: usize,
+}
+
 impl ScenarioLookup {
     /// Precompute plans for every fault scenario × worker count 0..=max.
     ///
@@ -380,22 +446,81 @@ impl ScenarioLookup {
         gpn: u32,
         cost: &CostModel,
     ) -> ScenarioLookup {
+        Self::refresh_horizon(tasks, available, gpn, cost, None).0
+    }
+
+    /// Delta-maintained event-horizon table: rebuild the m+3 scenario rows,
+    /// but copy any row whose exact solve inputs are unchanged from a
+    /// previous `(inputs, table)` snapshot instead of re-solving it.
+    ///
+    /// A row is reusable iff the previous snapshot was captured over a
+    /// bit-equal fault-cleared task vector and a bit-equal [`CostModel`] —
+    /// which are the *only* inputs to [`solve`] besides the worker count
+    /// already encoded in the row key. So reuse is exact: a copied row is
+    /// the row a fresh [`precompute_horizon`] would have produced, bit for
+    /// bit (`tests/properties.rs` pins this against randomized event
+    /// sequences).
+    ///
+    /// What each kind of change costs:
+    /// * **membership change** (node lost/joined/repaired): `available`
+    ///   shifts by one node's workers, so the three no-fault keys overlap
+    ///   the previous three in ≤ 2 entries and every fault row moves to a
+    ///   new `lo` — typically 1–2 of m+3 rows reused. When `available` is
+    ///   unchanged (same-size replan after a launch confirm), all m+3 rows
+    ///   reuse and the refresh is free.
+    /// * **MTBF estimate update**: every row's [`crate::cost::CostBreakdown`]
+    ///   stamps `mtbf_per_gpu_s` and the horizon, so under bit-equality *no*
+    ///   row survives a cost change — the refresh honestly degrades to the
+    ///   full m+3 solves rather than serving stale economics.
+    /// * **task set / assignment commit**: the fault-cleared vector differs
+    ///   (different `current` counts), zero reuse — correct, because every
+    ///   row's transition penalties depend on the currents.
+    ///
+    /// [`precompute_horizon`]: ScenarioLookup::precompute_horizon
+    pub fn refresh_horizon(
+        tasks: &[PlanTask],
+        available: u32,
+        gpn: u32,
+        cost: &CostModel,
+        prev: Option<(&HorizonInputs, &ScenarioLookup)>,
+    ) -> (ScenarioLookup, RefreshStats) {
         let mut scenario: Vec<PlanTask> = tasks.to_vec();
         for t in &mut scenario {
             t.fault = false;
         }
+        let reusable = prev.filter(|(inp, _)| inp.cost == *cost && inp.tasks == scenario);
+        let mut stats = RefreshStats::default();
+        let mut reuse_or_solve = |table_row: Option<&Plan>, scenario: &[PlanTask], w: u32| {
+            match table_row {
+                Some(p) => {
+                    stats.reused += 1;
+                    p.clone()
+                }
+                None => {
+                    stats.solved += 1;
+                    solve(scenario, w, cost)
+                }
+            }
+        };
         let lo = available.saturating_sub(gpn);
         let hi = available + gpn;
         let mut plans = std::collections::BTreeMap::new();
         for w in [lo, available, hi] {
-            plans.entry((0usize, w)).or_insert_with(|| solve(&scenario, w, cost));
+            if !plans.contains_key(&(0usize, w)) {
+                let row = reusable.and_then(|(_, t)| t.get(None, w));
+                plans.insert((0usize, w), reuse_or_solve(row, &scenario, w));
+            }
         }
         for f in 1..=tasks.len() {
             scenario[f - 1].fault = true;
-            plans.insert((f, lo), solve(&scenario, lo, cost));
+            let row = reusable.and_then(|(_, t)| t.get(Some(f - 1), lo));
+            let plan = reuse_or_solve(row, &scenario, lo);
+            plans.insert((f, lo), plan);
             scenario[f - 1].fault = false;
         }
-        ScenarioLookup { grid: Grid::Sparse { n_tasks: tasks.len(), max_workers: hi, plans } }
+        let lookup =
+            ScenarioLookup { grid: Grid::Sparse { n_tasks: tasks.len(), max_workers: hi, plans } };
+        (lookup, stats)
     }
 
     fn fault_row(&self, faulted: Option<usize>) -> Option<usize> {
@@ -810,6 +935,174 @@ mod tests {
         }
         let w = baselines::weighted(&tasks, n);
         assert!(w[2] > w[0]);
+    }
+
+    #[test]
+    fn capped_dp_matches_brute_force() {
+        // Worker ceilings clamp DP row widths; the clamped reads must stay
+        // exactly optimal, including when caps bind, don't bind, or are 0.
+        let mut tasks = vec![
+            task(0, 1.0, 2, 10.0, 4, false, 12),
+            task(1, 2.0, 3, 8.0, 4, true, 12),
+            task(2, 0.5, 1, 20.0, 4, false, 12),
+        ];
+        tasks[0].spec = tasks[0].spec.clone().with_max_workers(3);
+        tasks[1].spec = tasks[1].spec.clone().with_max_workers(5);
+        for n in [0u32, 3, 7, 12] {
+            let dp = solve(&tasks, n, &cost());
+            let bf = solve_brute(&tasks, n, &cost());
+            assert_eq!(dp.assignment, bf.assignment, "n={n}");
+            assert!((dp.objective - bf.objective).abs() < 1e-6 * bf.objective.abs().max(1.0));
+        }
+        tasks[2].spec = tasks[2].spec.clone().with_max_workers(0);
+        let dp = solve(&tasks, 12, &cost());
+        assert_eq!(dp.assignment[2], 0, "cap 0 forbids any allocation");
+        assert_eq!(dp.assignment, solve_brute(&tasks, 12, &cost()).assignment);
+    }
+
+    #[test]
+    fn caps_above_the_budget_never_change_the_plan() {
+        // A ceiling ≥ n is vacuous: row widths all equal n, so the capped
+        // DP runs the exact classic recurrence, bit for bit.
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 16),
+            task(1, 1.3, 2, 9.0, 6, true, 16),
+        ];
+        let mut capped = tasks.clone();
+        for t in &mut capped {
+            t.spec = t.spec.clone().with_max_workers(16);
+        }
+        for n in [0u32, 9, 16] {
+            assert_eq!(solve(&tasks, n, &cost()), solve(&capped, n, &cost()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn capped_assignments_respect_the_ceiling() {
+        let mut tasks = vec![
+            task(0, 2.0, 1, 14.0, 0, false, 32),
+            task(1, 1.0, 1, 6.0, 0, false, 32),
+        ];
+        tasks[0].spec = tasks[0].spec.clone().with_max_workers(4);
+        let plan = solve(&tasks, 32, &cost());
+        assert!(plan.assignment[0] <= 4);
+        // the budget the capped task can't take flows to the other task
+        assert!(plan.assignment[1] > plan.assignment[0]);
+    }
+
+    /// Row-by-row bit equality of two horizon tables over their m+3 keys.
+    fn assert_horizon_eq(a: &ScenarioLookup, b: &ScenarioLookup, avail: u32, gpn: u32) {
+        assert_eq!(a.n_tasks(), b.n_tasks());
+        assert_eq!(a.max_workers(), b.max_workers());
+        for w in [avail.saturating_sub(gpn), avail, avail + gpn] {
+            assert_eq!(a.get(None, w), b.get(None, w), "no-fault w={w}");
+        }
+        for f in 0..a.n_tasks() {
+            let lo = avail.saturating_sub(gpn);
+            assert_eq!(a.get(Some(f), lo), b.get(Some(f), lo), "fault {f}");
+        }
+    }
+
+    #[test]
+    fn refresh_horizon_with_no_previous_table_solves_everything() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 32),
+            task(1, 1.3, 2, 9.0, 6, false, 32),
+        ];
+        let c = cost();
+        let (lut, stats) = ScenarioLookup::refresh_horizon(&tasks, 24, 8, &c, None);
+        assert_eq!(stats, RefreshStats { reused: 0, solved: tasks.len() + 3 });
+        assert_horizon_eq(&lut, &ScenarioLookup::precompute_horizon(&tasks, 24, 8, &c), 24, 8);
+    }
+
+    #[test]
+    fn refresh_horizon_reuses_all_rows_when_nothing_changed() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 32),
+            task(1, 1.3, 2, 9.0, 6, false, 32),
+            task(2, 0.7, 4, 12.0, 4, false, 32),
+        ];
+        let c = cost();
+        let prev = ScenarioLookup::precompute_horizon(&tasks, 24, 8, &c);
+        let inputs = HorizonInputs::capture(&tasks, &c);
+        let (lut, stats) =
+            ScenarioLookup::refresh_horizon(&tasks, 24, 8, &c, Some((&inputs, &prev)));
+        assert_eq!(stats, RefreshStats { reused: tasks.len() + 3, solved: 0 });
+        assert_horizon_eq(&lut, &prev, 24, 8);
+    }
+
+    #[test]
+    fn refresh_horizon_after_membership_change_reuses_overlapping_rows() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 32),
+            task(1, 1.3, 2, 9.0, 6, false, 32),
+        ];
+        let c = cost();
+        let (avail, gpn) = (24u32, 8u32);
+        let prev = ScenarioLookup::precompute_horizon(&tasks, avail, gpn, &c);
+        let inputs = HorizonInputs::capture(&tasks, &c);
+        // one node lost: available drops by gpn, no-fault keys {8,16,24}
+        // overlap the old {16,24,32} in two entries; fault rows move to a
+        // fresh lo and must be re-solved
+        let (lut, stats) =
+            ScenarioLookup::refresh_horizon(&tasks, avail - gpn, gpn, &c, Some((&inputs, &prev)));
+        assert_eq!(stats, RefreshStats { reused: 2, solved: tasks.len() + 1 });
+        assert_horizon_eq(
+            &lut,
+            &ScenarioLookup::precompute_horizon(&tasks, avail - gpn, gpn, &c),
+            avail - gpn,
+            gpn,
+        );
+    }
+
+    #[test]
+    fn refresh_horizon_solves_fresh_after_cost_or_task_changes() {
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 32),
+            task(1, 1.3, 2, 9.0, 6, false, 32),
+        ];
+        let c = cost();
+        let prev = ScenarioLookup::precompute_horizon(&tasks, 24, 8, &c);
+        let inputs = HorizonInputs::capture(&tasks, &c);
+        // MTBF estimate moved: every breakdown stamps the horizon, so bit
+        // equality forbids any reuse
+        let mut tighter = c.clone();
+        assert!(tighter.set_mtbf_per_gpu_s(9e5));
+        let (lut, stats) =
+            ScenarioLookup::refresh_horizon(&tasks, 24, 8, &tighter, Some((&inputs, &prev)));
+        assert_eq!(stats, RefreshStats { reused: 0, solved: tasks.len() + 3 });
+        assert_horizon_eq(
+            &lut,
+            &ScenarioLookup::precompute_horizon(&tasks, 24, 8, &tighter),
+            24,
+            8,
+        );
+        // committed assignments changed: transition penalties depend on the
+        // current counts, zero reuse again
+        let mut moved = tasks.clone();
+        moved[0].current = WorkerCount(7);
+        let (lut, stats) =
+            ScenarioLookup::refresh_horizon(&moved, 24, 8, &c, Some((&inputs, &prev)));
+        assert_eq!(stats, RefreshStats { reused: 0, solved: tasks.len() + 3 });
+        assert_horizon_eq(&lut, &ScenarioLookup::precompute_horizon(&moved, 24, 8, &c), 24, 8);
+    }
+
+    #[test]
+    fn refresh_horizon_ignores_stale_fault_flags_when_matching() {
+        // fault flags are cleared on both sides of the input comparison, so
+        // a snapshot captured mid-fault still proves reuse
+        let tasks = vec![
+            task(0, 1.0, 2, 10.0, 6, false, 32),
+            task(1, 1.3, 2, 9.0, 6, false, 32),
+        ];
+        let c = cost();
+        let prev = ScenarioLookup::precompute_horizon(&tasks, 24, 8, &c);
+        let mut flagged = tasks.clone();
+        flagged[1].fault = true;
+        let inputs = HorizonInputs::capture(&flagged, &c);
+        let (_, stats) =
+            ScenarioLookup::refresh_horizon(&flagged, 24, 8, &c, Some((&inputs, &prev)));
+        assert_eq!(stats, RefreshStats { reused: tasks.len() + 3, solved: 0 });
     }
 
     #[test]

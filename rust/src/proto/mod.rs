@@ -68,7 +68,10 @@ use crate::ser::{JsonError, Value};
 ///   [`crate::placement::Layout`] (per-task node sets, the coordinator's
 ///   authoritative cluster map), and the breakdown gains the Table 2
 ///   detection-latency term ([`CostBreakdown::detection_penalty`]).
-pub const DECISION_LOG_VERSION: u64 = 4;
+/// * v5 — batched dispatch: [`CoordEvent::Batch`] delivers N simultaneous
+///   events as one recorded decision, so a burst costs one dispatch/replan
+///   cycle and replays as one step.
+pub const DECISION_LOG_VERSION: u64 = 5;
 
 // ---------------------------------------------------------------------------
 // Typed identifiers
@@ -138,6 +141,13 @@ pub enum CoordEvent {
     /// correlated-burst replan is still deferred, commit it now (one
     /// consolidated plan instead of N sequential commits).
     ReplanDue,
+    /// N simultaneous events delivered as **one** decision: the coordinator
+    /// applies the members in order but defers any replan they trigger
+    /// until the whole batch is absorbed, so a burst costs one
+    /// dispatch/replan cycle instead of N (the generalization of the
+    /// correlated same-domain burst path to arbitrary co-arriving events).
+    /// Recorded and replayed as a single [`LogEntry`].
+    Batch(Vec<CoordEvent>),
 }
 
 /// Why a reconfiguration plan was generated — the Fig. 7 trigger class.
@@ -334,6 +344,9 @@ impl CoordEvent {
                 .with("task", task.0)
                 .with("ok", *ok),
             CoordEvent::ReplanDue => Value::obj().with("event", "replan_due"),
+            CoordEvent::Batch(events) => Value::obj()
+                .with("event", "batch")
+                .with("events", Value::Arr(events.iter().map(CoordEvent::to_value).collect())),
         }
     }
 
@@ -361,6 +374,16 @@ impl CoordEvent {
                 ok: get_bool(v, "ok")?,
             }),
             "replan_due" => Ok(CoordEvent::ReplanDue),
+            "batch" => {
+                let members = v
+                    .req("events")?
+                    .as_arr()
+                    .ok_or_else(|| ProtoError::new("field \"events\" is not an array"))?
+                    .iter()
+                    .map(CoordEvent::from_value)
+                    .collect::<Result<Vec<CoordEvent>, ProtoError>>()?;
+                Ok(CoordEvent::Batch(members))
+            }
             other => Err(ProtoError::new(format!("unknown event type {other:?}"))),
         }
     }
@@ -750,6 +773,32 @@ mod tests {
         let a = Action::ScheduleReplan { after_s: 900.0 };
         let back = Action::from_value(&Value::parse(&a.to_value().encode()).unwrap()).unwrap();
         assert_eq!(a, back);
+    }
+
+    #[test]
+    fn batch_events_round_trip() {
+        let ev = CoordEvent::Batch(vec![
+            CoordEvent::NodeLost { node: NodeId(3) },
+            CoordEvent::ErrorReport {
+                node: NodeId(4),
+                task: TaskId(1),
+                kind: ErrorKind::EccError,
+            },
+            CoordEvent::NodeJoined { node: NodeId(9) },
+        ]);
+        let back = CoordEvent::from_value(&Value::parse(&ev.to_value().encode()).unwrap()).unwrap();
+        assert_eq!(ev, back);
+        // the empty batch is legal (a no-op decision) and round-trips too
+        let empty = CoordEvent::Batch(vec![]);
+        let back =
+            CoordEvent::from_value(&Value::parse(&empty.to_value().encode()).unwrap()).unwrap();
+        assert_eq!(empty, back);
+        // a corrupt member poisons the whole batch — strict, never skipped
+        let v = Value::obj().with(
+            "events",
+            Value::Arr(vec![Value::obj().with("event", "warp_core_breach")]),
+        );
+        assert!(CoordEvent::from_value(&v.with("event", "batch")).is_err());
     }
 
     #[test]

@@ -566,7 +566,27 @@ impl Simulator {
             }
             self.now = at;
             match ev {
-                EnvEvent::Failure(i) => self.on_trace_failure(trace, i),
+                EnvEvent::Failure(i) => {
+                    // Batched dispatch: further SEV1 trace failures due at
+                    // the bit-identical instant (total_cmp equality) drain
+                    // into one CoordEvent::Batch — the whole burst costs one
+                    // decide/replan cycle. Independent trace failures never
+                    // collide bitwise (exponential inter-arrivals), so this
+                    // path only fires for deliberately correlated bursts.
+                    if trace.events[i].severity() == Severity::Sev1 {
+                        let mut burst = vec![i];
+                        while let Some(j) = self.pop_simultaneous_sev1(trace, at) {
+                            burst.push(j);
+                        }
+                        if burst.len() > 1 {
+                            self.on_trace_failure_burst(trace, &burst);
+                        } else {
+                            self.on_trace_failure(trace, i);
+                        }
+                    } else {
+                        self.on_trace_failure(trace, i);
+                    }
+                }
                 EnvEvent::Lifecycle(i) => self.on_lifecycle(trace, i),
                 EnvEvent::Repair { node } => self.on_repair(node),
                 EnvEvent::RecoveryDone { task, workers, epoch } => {
@@ -669,6 +689,67 @@ impl Simulator {
                 self.execute(&actions, &Ctx::failure(sev, Some(ti)));
             }
         }
+    }
+
+    /// Pop the next queued event only if it is another SEV1 trace failure
+    /// due at the bit-identical instant `at` — the drain step of batched
+    /// dispatch. Anything else (later time, other event kind, SEV2/SEV3)
+    /// stays queued and takes the one-event-at-a-time path.
+    fn pop_simultaneous_sev1(&mut self, trace: &Trace, at: f64) -> Option<usize> {
+        let j = match self.queue.peek() {
+            Some((t, &EnvEvent::Failure(j)))
+                if t.total_cmp(&at) == std::cmp::Ordering::Equal
+                    && trace.events[j].severity() == Severity::Sev1 =>
+            {
+                j
+            }
+            _ => return None,
+        };
+        self.queue.pop();
+        Some(j)
+    }
+
+    /// N SEV1 trace failures at the bit-identical instant, ONE
+    /// decide/execute cycle: hardware effects land per node, every affected
+    /// task is pre-shrunk by its lost capacity (it limps on via §6.2
+    /// partial-iteration reuse — the same semantics the deferred
+    /// burst-batch path established), and the policy sees a single
+    /// [`CoordEvent::Batch`] that commits one consolidated plan for the
+    /// merged loss.
+    fn on_trace_failure_burst(&mut self, trace: &Trace, idxs: &[usize]) {
+        let gpn = self.cluster.gpus_per_node;
+        let mut members = Vec::new();
+        for &idx in idxs {
+            let ev = &trace.events[idx];
+            let node = ev.node;
+            if self.node_down[node.0 as usize] {
+                continue; // already out; no additional effect
+            }
+            let affected = self.owner_of(node);
+            self.node_down[node.0 as usize] = true;
+            self.available = self.available.saturating_sub(gpn);
+            self.queue.schedule(self.now + ev.repair_after_s, EnvEvent::Repair { node });
+            if let Some(ti) = affected {
+                // the consolidated plan prices the merged post-burst state,
+                // so the shrink lands up front, not via the deferred path
+                let t = &mut self.tasks[ti];
+                t.workers = t.workers.saturating_sub(gpn);
+                t.pending_workers = t.pending_workers.saturating_sub(gpn);
+            }
+            members.push(match affected {
+                Some(ti) => CoordEvent::ErrorReport {
+                    node,
+                    task: self.tasks[ti].spec.id,
+                    kind: ev.kind,
+                },
+                None => CoordEvent::NodeLost { node },
+            });
+        }
+        if members.is_empty() {
+            return; // every node in the burst was already down
+        }
+        let actions = self.decide(CoordEvent::Batch(members));
+        self.execute(&actions, &Ctx::failure(Severity::Sev1, None));
     }
 
     /// Repair completed. The environment no longer re-admits the node on

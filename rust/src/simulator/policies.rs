@@ -602,6 +602,12 @@ impl RecoveryPolicy for BaselinePolicy {
             // baselines never defer a replan, so a stray timer is a no-op
             CoordEvent::ReplanDue => vec![],
             CoordEvent::ReattemptResult { .. } | CoordEvent::RestartResult { .. } => vec![],
+            // baselines have no consolidated-dispatch path: a burst is the
+            // member events delivered back to back — the behavioural gap
+            // under simultaneous failures (one replan vs N) is Unicron's
+            CoordEvent::Batch(events) => {
+                events.into_iter().flat_map(|e| self.on_event(e, _now_s)).collect()
+            }
         }
     }
 }

@@ -5,8 +5,9 @@
 
 use unicron::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
 use unicron::cost::{CostModel, TransitionProfile};
-use unicron::planner::{solve, solve_brute, PlanTask};
-use unicron::proto::WorkerCount;
+use unicron::placement::{self, ClusterView, Layout};
+use unicron::planner::{solve, solve_brute, HorizonInputs, PlanTask, ScenarioLookup};
+use unicron::proto::{NodeId, TaskId, WorkerCount};
 use unicron::proptest::{run, Config, Prop};
 use rand_core::RngCore as _;
 use unicron::rng::{Rand, Xoshiro256};
@@ -32,8 +33,14 @@ fn gen_planner(rng: &mut Xoshiro256, size: usize) -> (Vec<PlanTask>, u32) {
             // DP must stay optimal when every task prices moves differently
             let replica_s = rng.uniform(0.0, 120.0);
             let inmem_s = replica_s + rng.uniform(0.0, 120.0);
+            // half the tasks carry a worker ceiling (the 16k/64k-node
+            // scale-out shape) — the capped DP must stay optimal either way
+            let mut spec = TaskSpec::new(i as u32, "synthetic", weight, min);
+            if rng.f64() < 0.5 {
+                spec = spec.with_max_workers(min.max(1 + rng.below(n as u64) as u32));
+            }
             PlanTask {
-                spec: TaskSpec::new(i as u32, "synthetic", weight, min),
+                spec,
                 throughput,
                 profile: TransitionProfile {
                     replica_s,
@@ -100,6 +107,145 @@ fn planner_respects_worker_budget_and_minimums() {
                 if x > 0 && x < t.spec.min_workers && t.waf(x) != 0.0 {
                     return Prop::Fail(format!("waf below minimum for {x} workers"));
                 }
+                if x > t.spec.max_workers {
+                    return Prop::Fail(format!("{x} workers over cap {}", t.spec.max_workers));
+                }
+            }
+            Prop::Pass
+        },
+    );
+}
+
+#[test]
+fn horizon_refresh_equals_full_precompute() {
+    // Delta-maintained ScenarioLookup ≡ full precompute_horizon across
+    // randomized event sequences: after every membership shift, assignment
+    // commit, MTBF re-estimate, or stray fault flag, the table refreshed
+    // from the previous snapshot must hold exactly the plans a from-scratch
+    // precompute produces, on every horizon key.
+    run(
+        "horizon_refresh_equivalence",
+        Config { cases: 40, ..Default::default() },
+        |rng: &mut Xoshiro256, size| {
+            let (tasks, n) = gen_planner(rng, size);
+            let gpn = 1 + rng.below(4) as u32;
+            let steps = 1 + rng.below(6) as usize;
+            let script: Vec<u64> = (0..steps * 3).map(|_| rng.next_u64()).collect();
+            (tasks, n, gpn, script)
+        },
+        |(tasks, n, gpn, script)| {
+            let mut tasks = tasks.clone();
+            let mut available = *n;
+            let mut cost = CostModel::from_config(&UnicronConfig::default());
+            let (mut table, _) =
+                ScenarioLookup::refresh_horizon(&tasks, available, *gpn, &cost, None);
+            let mut inputs = HorizonInputs::capture(&tasks, &cost);
+            for step in script.chunks(3) {
+                match step[0] % 5 {
+                    0 => available = available.saturating_sub(*gpn), // node lost
+                    1 => available += *gpn,                          // node joined
+                    2 => {
+                        // assignment commit: a task's current count moved
+                        let i = (step[1] % tasks.len() as u64) as usize;
+                        tasks[i].current = WorkerCount((step[2] % (*n as u64 + 1)) as u32);
+                    }
+                    3 => {
+                        // MTBF estimate update (PR-4 fleet feed)
+                        cost.set_mtbf_per_gpu_s(1e5 + (step[1] % 1_000_000) as f64);
+                    }
+                    _ => {
+                        // stale fault flag left behind by a dispatch: the
+                        // horizon solves over fault-cleared tasks, so this
+                        // must change nothing
+                        let i = (step[1] % tasks.len() as u64) as usize;
+                        tasks[i].fault = !tasks[i].fault;
+                    }
+                }
+                let full = ScenarioLookup::precompute_horizon(&tasks, available, *gpn, &cost);
+                let (delta, stats) = ScenarioLookup::refresh_horizon(
+                    &tasks,
+                    available,
+                    *gpn,
+                    &cost,
+                    Some((&inputs, &table)),
+                );
+                let lo = available.saturating_sub(*gpn);
+                let keys: Vec<(Option<usize>, u32)> = [lo, available, available + *gpn]
+                    .iter()
+                    .map(|&w| (None::<usize>, w))
+                    .chain((0..tasks.len()).map(|f| (Some(f), lo)))
+                    .collect();
+                for (f, w) in keys {
+                    let want = full.get(f, w);
+                    let got = delta.get(f, w);
+                    if want.is_none() {
+                        return Prop::Fail(format!("key ({f:?}, {w}) missing from full table"));
+                    }
+                    if got != want {
+                        return Prop::Fail(format!(
+                            "key ({f:?}, {w}): delta-refreshed row != full precompute \
+                             (reused {}, solved {})",
+                            stats.reused, stats.solved
+                        ));
+                    }
+                }
+                table = delta;
+                inputs = HorizonInputs::capture(&tasks, &cost);
+            }
+            Prop::Pass
+        },
+    );
+}
+
+#[test]
+fn warm_start_assign_equals_from_scratch() {
+    // Warm-start assign_cached ≡ from-scratch assign across randomized
+    // event sequences: nodes flap up and down, demands move, and the
+    // cached path must commit the exact layout the cold path commits at
+    // every step (the cache is pure acceleration).
+    run(
+        "warm_start_assign_equivalence",
+        Config { cases: 60, ..Default::default() },
+        |rng: &mut Xoshiro256, _| {
+            let n_nodes = 4 + rng.below(20) as u32;
+            let gpn = *rng.choose(&[1u32, 2, 4]);
+            let npd = 1 + rng.below(4) as u32;
+            let n_tasks = 1 + rng.below(3) as usize;
+            let n_steps = 2 + rng.below(5) as usize;
+            let script: Vec<u64> = (0..n_steps * (n_tasks + 2)).map(|_| rng.next_u64()).collect();
+            (n_nodes, gpn, npd, n_tasks, script)
+        },
+        |(n_nodes, gpn, npd, n_tasks, script)| {
+            let all: Vec<NodeId> = (0..*n_nodes).map(NodeId).collect();
+            let mut down = vec![false; *n_nodes as usize];
+            let mut scratch_prev = Layout::default();
+            let mut cached_prev = Layout::default();
+            let mut cache = None;
+            for step in script.chunks(*n_tasks + 2) {
+                // maybe toggle one node's membership, then redraw demands
+                if step[1] % 3 == 0 {
+                    let i = (step[0] % *n_nodes as u64) as usize;
+                    down[i] = !down[i];
+                }
+                let nodes: Vec<NodeId> =
+                    all.iter().copied().filter(|n| !down[n.0 as usize]).collect();
+                let view =
+                    ClusterView { nodes: &nodes, gpus_per_node: *gpn, nodes_per_domain: *npd };
+                let half = *n_nodes as u64 * *gpn as u64 / 2;
+                let demands: Vec<(TaskId, u32)> = (0..*n_tasks)
+                    .map(|t| (TaskId(t as u32), (step[2 + t] % (half + 1)) as u32))
+                    .collect();
+                let scratch = placement::assign(&scratch_prev, &demands, &view);
+                let warm = placement::assign_cached(&mut cache, &cached_prev, &demands, &view);
+                if scratch != warm {
+                    return Prop::Fail(format!(
+                        "warm-start diverged from scratch for demands {demands:?} \
+                         over {} nodes",
+                        nodes.len()
+                    ));
+                }
+                scratch_prev = scratch;
+                cached_prev = warm;
             }
             Prop::Pass
         },

@@ -7,7 +7,7 @@
 //! becomes a permanent regression test. Entries are never removed.
 
 use rand_core::RngCore as _;
-use unicron::config::{table3_case, ClusterSpec, UnicronConfig};
+use unicron::config::{table3_case, ClusterSpec, TaskSpec, UnicronConfig};
 use unicron::failure::{ErrorKind, Trace, TraceConfig};
 use unicron::proptest::{run, Config, Prop};
 use unicron::proto::NodeId;
@@ -23,7 +23,10 @@ use unicron::simulator::{PolicyKind, SimResult, Simulator};
 /// `Fragmented` overlays fragmentation churn waves (one node per domain per
 /// wave, fast repairs) and `RackDrain` slowly empties one failure domain
 /// for good — both placement-layer scenario classes whose per-plan layouts
-/// must stay bit-reproducible.
+/// must stay bit-reproducible; `LargeFleetBurst` runs a 16k-node
+/// single-GPU fleet with bitwise-simultaneous SEV1 bursts, so the batched
+/// `CoordEvent::Batch` dispatch path (one consolidated replan per burst)
+/// is pinned at scale.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Scenario {
     A,
@@ -33,6 +36,7 @@ enum Scenario {
     HeteroCost,
     Fragmented,
     RackDrain,
+    LargeFleetBurst,
 }
 
 fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
@@ -43,6 +47,10 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
         | Scenario::Fragmented
         | Scenario::RackDrain => Trace::generate(TraceConfig::trace_a(), seed),
         Scenario::B | Scenario::HeteroCost => Trace::generate(TraceConfig::trace_b(), seed),
+        // three 6-node SEV1 bursts at bit-identical instants on a 16k-node
+        // fleet — the shape pop_simultaneous/Batch dispatch exists for;
+        // lifecycle churn doesn't apply to the synthetic large fleet
+        Scenario::LargeFleetBurst => return Trace::with_large_fleet(16_384, 3, 6, seed),
     };
     match scenario {
         Scenario::DomainBurst => {
@@ -64,7 +72,7 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
         Scenario::RackDrain => {
             trace = trace.with_rack_drain((seed % 4) as u32, 4, 86400.0, 3600.0);
         }
-        Scenario::A | Scenario::B | Scenario::HeteroCost => {}
+        Scenario::A | Scenario::B | Scenario::HeteroCost | Scenario::LargeFleetBurst => {}
     }
     if churn {
         // exercise the ⑤⑥ lifecycle path: two late arrivals, one departure
@@ -74,12 +82,25 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
 }
 
 fn simulate(kind: PolicyKind, scenario: Scenario, seed: u64, churn: bool) -> SimResult {
-    let cluster = ClusterSpec::default();
+    // LargeFleetBurst scales the fleet, not the tasks: 16k single-GPU nodes
+    // with two worker-capped tasks keep every replan affordable (capped DP
+    // width, delta table refresh) while the burst overlay drives the
+    // batched dispatch path.
+    let cluster = match scenario {
+        Scenario::LargeFleetBurst => {
+            ClusterSpec { n_nodes: 16_384, gpus_per_node: 1, ..ClusterSpec::default() }
+        }
+        _ => ClusterSpec::default(),
+    };
     let cfg = UnicronConfig::default();
     // HeteroCost: mixed model sizes at equal weight — replans are steered
     // by per-task transition pricing rather than priority
     let specs = match scenario {
         Scenario::HeteroCost => table3_case(2),
+        Scenario::LargeFleetBurst => vec![
+            TaskSpec::new(0, "gpt3-1.3b", 1.0, 8).with_max_workers(256),
+            TaskSpec::new(1, "gpt3-1.3b", 1.5, 8).with_max_workers(256),
+        ],
         _ => table3_case(5),
     };
     let trace = make_trace(scenario, seed, churn);
@@ -136,6 +157,10 @@ const CORPUS: &[(PolicyKind, Scenario, u64, bool)] = &[
     // and transition timing) must stay bit-reproducible.
     (PolicyKind::Unicron, Scenario::Fragmented, 17, false),
     (PolicyKind::Unicron, Scenario::RackDrain, 3, true),
+    // PR 6: incremental-replanning era — 16k-node fleet, bitwise-
+    // simultaneous SEV1 bursts: one consolidated CoordEvent::Batch replan
+    // per burst, replayed bit-identically at scale.
+    (PolicyKind::Unicron, Scenario::LargeFleetBurst, 6, false),
 ];
 
 #[test]
