@@ -60,6 +60,8 @@ fn main() {
                 spec,
                 current: WorkerCount(16),
                 fault: false,
+                fault_source: unicron::transition::StateSource::InMemoryCheckpoint,
+                fault_restore_s: None,
             }
         })
         .collect();

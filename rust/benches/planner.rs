@@ -21,6 +21,8 @@ fn tasks(case: u32, n: u32) -> Vec<PlanTask> {
                 spec,
                 current: WorkerCount(8),
                 fault: false,
+                fault_source: unicron::transition::StateSource::InMemoryCheckpoint,
+                fault_restore_s: None,
             }
         })
         .collect()
@@ -46,6 +48,8 @@ fn main() {
                 profile: TransitionProfile::flat(60.0),
                 current: WorkerCount(32),
                 fault: false,
+                fault_source: unicron::transition::StateSource::InMemoryCheckpoint,
+                fault_restore_s: None,
             }
         })
         .collect();
@@ -96,6 +100,8 @@ fn main() {
                 spec,
                 current: WorkerCount(16),
                 fault: false,
+                fault_source: unicron::transition::StateSource::InMemoryCheckpoint,
+                fault_restore_s: None,
             }
         })
         .collect();

@@ -32,6 +32,8 @@ fn capped_task(id: u32, min: u32, cap: u32) -> PlanTask {
         profile: TransitionProfile::flat(5.0),
         current: WorkerCount(0),
         fault: false,
+        fault_source: unicron::transition::StateSource::InMemoryCheckpoint,
+        fault_restore_s: None,
     }
 }
 

@@ -1,0 +1,83 @@
+//! Snapshot-store hot paths (DESIGN.md §13). Two floors:
+//!
+//! 1. chunk + content-address throughput ≥ 1 GiB/s — the store must keep up
+//!    with checkpoint streams, not become the checkpoint bottleneck;
+//! 2. a delta snapshot of a 1%-changed state costs ≤ 5% of a full re-chunk —
+//!    the property that makes frequent checkpoints of a slowly-changing
+//!    optimizer state near-free.
+
+use unicron::bench::{Bencher, Trajectory};
+use unicron::proto::TaskId;
+use unicron::store::Manifest;
+
+const STATE_BYTES: usize = 64 << 20; // 64 MiB synthetic optimizer state
+const CHUNK_BYTES: usize = 64 << 10; // 1024 chunks
+const N_CHUNKS: usize = STATE_BYTES / CHUNK_BYTES;
+
+/// Deterministic xorshift fill — incompressible enough that addressing does
+/// real work, with no RNG dependency in the bench.
+fn state() -> Vec<u8> {
+    let mut x = 0x9e37_79b9_7f4a_7c15u64;
+    let mut out = vec![0u8; STATE_BYTES];
+    for w in out.chunks_mut(8) {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        w.copy_from_slice(&x.to_le_bytes()[..w.len()]);
+    }
+    out
+}
+
+fn main() {
+    let mut traj = Trajectory::new();
+    let data = state();
+    let mut b = Bencher::new("store").with_samples(2, 10);
+
+    // Floor 1: full chunk + address pass over the 64 MiB state
+    const GIB_PER_S: f64 = (1u64 << 30) as f64;
+    let full_stats = b.bench("chunk_address_64mib", || {
+        let m = Manifest::build(TaskId(0), 1, &data, CHUNK_BYTES);
+        assert_eq!(m.chunks.len(), N_CHUNKS);
+        std::hint::black_box(m.total_bytes);
+    });
+    if let Some(st) = &full_stats {
+        traj.gate(
+            "store_chunk_address_ns_per_byte",
+            st.median * 1e9 / STATE_BYTES as f64,
+            1e9 / GIB_PER_S, // ≥ 1 GiB/s
+        );
+    }
+
+    // Floor 2: delta snapshot with ~1% of chunks dirty vs the full pass.
+    // Scattered dirty chunks (not one contiguous run) — the optimizer-state
+    // shape where a few hot tensors move every step.
+    let prev = Manifest::build(TaskId(0), 1, &data, CHUNK_BYTES);
+    let mut next = data.clone();
+    let dirty: Vec<std::ops::Range<usize>> = (0..N_CHUNKS / 100)
+        .map(|k| {
+            let start = (k * 97 % N_CHUNKS) * CHUNK_BYTES;
+            for byte in &mut next[start..start + 16] {
+                *byte ^= 0xa5;
+            }
+            start..start + CHUNK_BYTES
+        })
+        .collect();
+    // delta is an acceleration, never a different answer
+    assert_eq!(
+        Manifest::delta_from(&prev, 2, &next, &dirty),
+        Manifest::build(TaskId(0), 2, &next, CHUNK_BYTES),
+    );
+    let delta_stats = b.bench("delta_manifest_1pct_dirty", || {
+        let m = Manifest::delta_from(&prev, 2, &next, &dirty);
+        std::hint::black_box(m.chunks.len());
+    });
+    if let (Some(full), Some(delta)) = (&full_stats, &delta_stats) {
+        traj.gate(
+            "store_delta_1pct_vs_full_snapshot",
+            delta.median * 1e9,
+            full.median * 1e9 * 0.05, // ≤ 5% of the full-snapshot cost
+        );
+    }
+
+    traj.finish("BENCH_PR7.json");
+}

@@ -25,6 +25,8 @@ fn main() {
                     spec,
                     current: WorkerCount(0),
                     fault: false,
+                    fault_source: unicron::transition::StateSource::InMemoryCheckpoint,
+                    fault_restore_s: None,
                 }
             })
             .collect();

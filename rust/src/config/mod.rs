@@ -114,6 +114,9 @@ pub struct ClusterSpec {
     pub intra_bw_gbs: f64,
     /// Inter-node NIC bandwidth per node, GB/s (4×200 Gbps = 100 GB/s).
     pub inter_bw_gbs: f64,
+    /// Node-local disk (NVMe) bandwidth, GB/s — the snapshot store's
+    /// middle tier between peer memory and remote storage.
+    pub local_disk_bw_gbs: f64,
     /// Remote persistent checkpoint storage bandwidth, GB/s (paper: 20).
     pub remote_ckpt_bw_gbs: f64,
 }
@@ -127,6 +130,7 @@ impl Default for ClusterSpec {
             hbm_gib: 80.0,
             intra_bw_gbs: 400.0,
             inter_bw_gbs: 100.0,
+            local_disk_bw_gbs: 8.0,
             remote_ckpt_bw_gbs: 20.0,
         }
     }
@@ -154,6 +158,7 @@ impl ClusterSpec {
             .with("hbm_gib", self.hbm_gib)
             .with("intra_bw_gbs", self.intra_bw_gbs)
             .with("inter_bw_gbs", self.inter_bw_gbs)
+            .with("local_disk_bw_gbs", self.local_disk_bw_gbs)
             .with("remote_ckpt_bw_gbs", self.remote_ckpt_bw_gbs)
     }
 
@@ -167,6 +172,7 @@ impl ClusterSpec {
             hbm_gib: f("hbm_gib", d.hbm_gib),
             intra_bw_gbs: f("intra_bw_gbs", d.intra_bw_gbs),
             inter_bw_gbs: f("inter_bw_gbs", d.inter_bw_gbs),
+            local_disk_bw_gbs: f("local_disk_bw_gbs", d.local_disk_bw_gbs),
             remote_ckpt_bw_gbs: f("remote_ckpt_bw_gbs", d.remote_ckpt_bw_gbs),
         })
     }
@@ -355,6 +361,17 @@ pub struct UnicronConfig {
     /// ([`crate::placement::assign_blind`]) — the `placement-frag`
     /// experiment's baseline arm.
     pub placement_min_churn: bool,
+    /// Execute checkpoint writes/evictions/restores against the snapshot
+    /// store ([`crate::store::SnapshotStore`]) so SEV1 failover timing
+    /// reflects *actual* tier residency (warm peer replica → sub-second)
+    /// instead of the closed-form §6.3 transition formula. Off by default:
+    /// the formula path is the long-standing calibrated baseline and the
+    /// `warm-peer` experiment compares the two arms.
+    pub store_aware_recovery: bool,
+    /// Fraction of a task's state assumed dirty between two consecutive
+    /// checkpoint ticks (simulated delta snapshots; FFTrainer-style
+    /// slowly-changing optimizer state ≈ 1 %).
+    pub store_delta_fraction: f64,
 }
 
 impl Default for UnicronConfig {
@@ -381,6 +398,8 @@ impl Default for UnicronConfig {
             domain_batch_window_s: 900.0,
             domain_batch_pressure: 2.5,
             placement_min_churn: true,
+            store_aware_recovery: false,
+            store_delta_fraction: 0.01,
         }
     }
 }

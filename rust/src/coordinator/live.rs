@@ -35,6 +35,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::{Action, CoordEvent, Coordinator, NodeId, TaskId};
+use crate::config::ClusterSpec;
 use crate::detect::classify_exception;
 use crate::engine::EventQueue;
 use crate::failure::ErrorKind;
@@ -42,6 +43,7 @@ use crate::kvstore::{net, Event, Store};
 use crate::membership::{membership_event, MembershipEvent, NODES_PREFIX};
 use crate::planner::{RefreshStats, ScenarioLookup};
 use crate::ser::Value;
+use crate::store::{ChunkId, Manifest, SnapshotStore, Tier};
 use crate::util::Clock;
 
 pub const STATUS_PREFIX: &str = "/status/";
@@ -54,6 +56,10 @@ pub const FLEET_HEALTH_KEY: &str = "/fleet/health";
 /// published beside the health report so operators and tooling see which
 /// concrete nodes serve which task (DESIGN.md §10).
 pub const LAYOUT_KEY: &str = "/fleet/layout";
+/// The state-tier report (DESIGN.md §13), published beside health and
+/// layout: per-tier occupancy and measured transfer stats, the dedup ratio
+/// the delta checkpoints achieve, and restore hit/miss counters.
+pub const STORE_KEY: &str = "/fleet/store";
 
 /// Timed work the live loop schedules on the shared engine queue.
 #[derive(Debug, Clone, Copy)]
@@ -124,6 +130,11 @@ impl CoordinatorLive {
             // at most one background precompute in flight at a time
             let mut inflight: Option<JoinHandle<(u64, ScenarioLookup, RefreshStats)>> = None;
             let mut refresh_broken = false;
+            // the fleet's view of snapshot residency: agents announce
+            // finished checkpoint writes (class "checkpoint" status keys)
+            // and the loop tracks occupancy/dedup per tier, publishing the
+            // report under /fleet/store on the refresh cadence
+            let mut state_tier = SnapshotStore::new(&ClusterSpec::default());
             while !stop2.load(Ordering::Relaxed) {
                 // land a finished background rebuild (never blocks)
                 if inflight.as_ref().is_some_and(JoinHandle::is_finished) {
@@ -159,6 +170,7 @@ impl CoordinatorLive {
                             }
                             publish_fleet_health(&store2, &coord);
                             publish_layout(&store2, &coord);
+                            publish_store(&store2, &state_tier);
                             timers.schedule(clock2.now() + refresh_period, LoopTask::PlanRefresh);
                         }
                         LoopTask::ReplanFlush => {
@@ -191,6 +203,12 @@ impl CoordinatorLive {
                 }
                 for ev in status_rx.try_iter() {
                     if let Event::Put { key, value, .. } = ev {
+                        // checkpoint announcements feed the state tier, not
+                        // the detection path
+                        if let Some((tier, host, manifest)) = parse_checkpoint(&key, &value) {
+                            state_tier.put_manifest(tier, host, &manifest);
+                            continue;
+                        }
                         if let Some(e) = parse_status(&key, &value) {
                             events.push(e);
                         }
@@ -367,6 +385,40 @@ fn publish_fleet_health(store: &Store, coord: &Coordinator) {
     let _ = store.put(FLEET_HEALTH_KEY, &report.encode(), None);
 }
 
+/// `/status/<node>/<seq>` checkpoint announcement -> a manifest for the
+/// state tier. After a snapshot lands, the writing agent reports
+/// `{"class":"checkpoint","task":..,"step":..,"bytes":..}` (optional
+/// `chunk_bytes`, and `tier` of "peer"/"disk"/"remote"). Chunk ids are
+/// synthetic per (task, index, step): content addressing happens
+/// agent-side; the coordinator tracks residency, occupancy, and dedup.
+fn parse_checkpoint(key: &str, value: &str) -> Option<(Tier, Option<NodeId>, Manifest)> {
+    let rest = key.strip_prefix(STATUS_PREFIX)?;
+    let node = NodeId(rest.split('/').next()?.parse().ok()?);
+    let v = Value::parse(value).ok()?;
+    if v.get("class").and_then(Value::as_str) != Some("checkpoint") {
+        return None;
+    }
+    let task = TaskId(v.get("task").and_then(Value::as_u64)? as u32);
+    let step = v.get("step").and_then(Value::as_u64)?;
+    let bytes = v.get("bytes").and_then(Value::as_u64)?;
+    let chunk_bytes = v.get("chunk_bytes").and_then(Value::as_u64).unwrap_or(64 << 20).max(1);
+    let tier = match v.get("tier").and_then(Value::as_str).unwrap_or("peer") {
+        "disk" => Tier::LocalDisk,
+        "remote" => Tier::Remote,
+        _ => Tier::PeerMemory,
+    };
+    let n = bytes.div_ceil(chunk_bytes).max(1);
+    let chunks = (0..n).map(|i| ChunkId::synthetic(task, i, step)).collect();
+    // remote is cluster-external: no hosting node to fence or lose
+    let host = if tier == Tier::Remote { None } else { Some(node) };
+    Some((tier, host, Manifest { task, step, total_bytes: bytes, chunk_bytes, chunks }))
+}
+
+/// Publish the state-tier report under [`STORE_KEY`].
+fn publish_store(store: &Store, state_tier: &SnapshotStore) {
+    let _ = store.put(STORE_KEY, &state_tier.report().encode(), None);
+}
+
 /// Publish the authoritative cluster map under [`LAYOUT_KEY`]: the per-task
 /// node sets of the last committed plan, plus the placeable pool the next
 /// layout can draw from.
@@ -473,6 +525,8 @@ mod tests {
             profile: crate::cost::TransitionProfile::flat(5.0),
             current: WorkerCount(0),
             fault: false,
+            fault_source: crate::transition::StateSource::InMemoryCheckpoint,
+            fault_restore_s: None,
         };
         let coord = Coordinator::builder()
             .config(cfg)
@@ -507,6 +561,39 @@ mod tests {
             !v.get("placeable").and_then(Value::as_arr).unwrap_or(&[]).is_empty(),
             "the placeable pool must list the seeded nodes"
         );
+        // an agent announces a finished checkpoint write: the loop ingests
+        // it into the state tier and the /fleet/store report shows the
+        // occupancy on the next refresh tick
+        live.store
+            .put("/status/3/7", r#"{"task":0,"class":"checkpoint","step":1,"bytes":1048576}"#, None)
+            .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let occupied = loop {
+            let mut bytes = 0;
+            if let Some((_, raw)) =
+                live.store.get_prefix(STORE_KEY).iter().find(|(k, _)| k == STORE_KEY)
+            {
+                let v = Value::parse(raw).expect("store report must be JSON");
+                for key in ["tiers", "dedup_ratio", "hits", "misses"] {
+                    assert!(v.get(key).is_some(), "store report missing {key}");
+                }
+                bytes = v
+                    .get("tiers")
+                    .and_then(|t| t.get("peer_memory"))
+                    .and_then(|t| t.get("occupancy_bytes"))
+                    .and_then(Value::as_u64)
+                    .unwrap_or(0);
+            }
+            if bytes > 0 {
+                break bytes;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "store report never showed the announced checkpoint"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert_eq!(occupied, 1048576, "one announced megabyte resident in peer memory");
         live.shutdown();
     }
 }

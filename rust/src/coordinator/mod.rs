@@ -637,6 +637,25 @@ impl Coordinator {
                     vec![]
                 }
             }
+            CoordEvent::StateResidency { task, source, restore_s } => {
+                // Snapshot-store bookkeeping (wire v6): remember where this
+                // task restores from (and how fast) if it faults. No actions
+                // result, but any precomputed fault row was priced with the
+                // old tier, so the table must go stale on a change.
+                let restore = Some(restore_s);
+                let changed = match self.tasks.get_mut(&task) {
+                    Some(t) if t.fault_source != source || t.fault_restore_s != restore => {
+                        t.fault_source = source;
+                        t.fault_restore_s = restore;
+                        true
+                    }
+                    _ => false,
+                };
+                if changed {
+                    self.invalidate_lookup();
+                }
+                vec![]
+            }
             CoordEvent::Batch(ref events) => {
                 // N simultaneous events, ONE dispatch/replan cycle
                 // (tentpole, generalizing the PR-4 same-domain batch):
@@ -945,6 +964,8 @@ mod tests {
             profile: TransitionProfile::flat(5.0),
             current: WorkerCount(current),
             fault: false,
+            fault_source: crate::transition::StateSource::InMemoryCheckpoint,
+            fault_restore_s: None,
         }
     }
 
@@ -1672,6 +1693,51 @@ mod tests {
             min1.expect("task 1 must be placed"),
         );
         assert!(max0 < min1, "blind layouts are contiguous: {l}");
+    }
+
+    #[test]
+    fn state_residency_reprices_the_sev1_replan() {
+        use crate::transition::StateSource;
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        c.precompute_plans();
+        assert!(c.lookup_is_fresh());
+        // the store reports task 0's nearest snapshot moved to local disk
+        let a = c.handle(CoordEvent::StateResidency {
+            task: TaskId(0),
+            source: StateSource::LocalDiskCheckpoint,
+            restore_s: 0.8,
+        });
+        assert!(a.is_empty(), "residency is bookkeeping, not an action");
+        assert!(!c.lookup_is_fresh(), "fault rows were priced with the old tier");
+        // a duplicate report changes nothing and keeps the rebuilt table
+        c.precompute_plans();
+        c.handle(CoordEvent::StateResidency {
+            task: TaskId(0),
+            source: StateSource::LocalDiskCheckpoint,
+            restore_s: 0.8,
+        });
+        assert!(c.lookup_is_fresh(), "unchanged residency must not invalidate");
+        // SEV1 on task 0: the committed plan stamps the resolved tier
+        let a = c.handle(CoordEvent::ErrorReport {
+            node: NodeId(0),
+            task: TaskId(0),
+            kind: ErrorKind::EccError,
+        });
+        let plan = a
+            .iter()
+            .find_map(|x| match x {
+                Action::ApplyPlan { plan, .. } => Some(plan),
+                _ => None,
+            })
+            .expect("SEV1 must replan");
+        assert_eq!(plan.breakdown.state_source, StateSource::LocalDiskCheckpoint);
+        // recorded residency replays bit-identically through a fresh twin
+        let mut twin = coord(32);
+        let steps =
+            c.log.replay(&mut twin, |_| None).unwrap_or_else(|d| panic!("replay diverged: {d}"));
+        assert_eq!(steps, c.log.len());
+        assert_eq!(twin.log, c.log);
     }
 
     #[test]

@@ -41,11 +41,12 @@
 use crate::config::{ClusterSpec, ModelSpec, UnicronConfig};
 use crate::failure::{DetectionMethod, ErrorKind};
 use crate::fleet::{SpareDecision, SparePool};
+use crate::store::{SnapshotStore, Tier};
 use crate::transition::{migration_time_s, StateSource};
 
 /// Bytes of migratable training state per parameter: fp16 weights (2) +
 /// fp32 master weights (4) + fp32 Adam moments (8) + gradient slack (2).
-const STATE_BYTES_PER_PARAM: f64 = 16.0;
+pub const STATE_BYTES_PER_PARAM: f64 = 16.0;
 
 // ---------------------------------------------------------------------------
 // Table 2 detection latencies
@@ -87,18 +88,22 @@ pub struct TransitionProfile {
     /// Faulted transition: the nearest replica died with the node; state
     /// reloads from a GEMINI-style in-memory checkpoint on a peer.
     pub inmem_s: f64,
+    /// Middle tier: checkpoint on a surviving node's local disk (the
+    /// snapshot store's demotion target when peer memory fills).
+    pub local_s: f64,
     /// Cold fallback: remote persistent checkpoint (worst case; priced for
     /// observability, the planner's fault path uses `inmem_s`).
     pub remote_s: f64,
 }
 
 impl TransitionProfile {
-    /// Price the three §6.3 strategies for `state_bytes` of training state
-    /// on `cluster`.
+    /// Price the §6.3 strategies for `state_bytes` of training state on
+    /// `cluster` — the closed-form formula (the cold-start prior).
     pub fn from_state_bytes(state_bytes: u64, cluster: &ClusterSpec) -> TransitionProfile {
         TransitionProfile {
             replica_s: migration_time_s(StateSource::DpReplica, state_bytes, cluster, 1),
             inmem_s: migration_time_s(StateSource::InMemoryCheckpoint, state_bytes, cluster, 1),
+            local_s: migration_time_s(StateSource::LocalDiskCheckpoint, state_bytes, cluster, 1),
             remote_s: migration_time_s(StateSource::RemoteCheckpoint, state_bytes, cluster, 1),
         }
     }
@@ -111,10 +116,51 @@ impl TransitionProfile {
         )
     }
 
+    /// Price the checkpoint-tier strategies from the snapshot store's
+    /// *measured* per-tier latency/bandwidth statistics. Tiers with no
+    /// observed transfers keep the closed-form formula as their cold-start
+    /// prior — so a fresh store prices identically to
+    /// [`TransitionProfile::from_state_bytes`], and measurements only ever
+    /// refine, never destabilize, the planner's inputs. The replica path
+    /// never touches the store (a healthy DP replica is a live process,
+    /// not a snapshot), so `replica_s` is always the formula.
+    pub fn from_store(
+        state_bytes: u64,
+        cluster: &ClusterSpec,
+        store: &SnapshotStore,
+    ) -> TransitionProfile {
+        let formula = TransitionProfile::from_state_bytes(state_bytes, cluster);
+        let measured = |tier: Tier, prior: f64| {
+            let stats = store.tier_stats(tier);
+            if stats.transfers == 0 || state_bytes == 0 {
+                prior
+            } else {
+                stats.time_s(state_bytes)
+            }
+        };
+        TransitionProfile {
+            replica_s: formula.replica_s,
+            inmem_s: measured(Tier::PeerMemory, formula.inmem_s),
+            local_s: measured(Tier::LocalDisk, formula.local_s),
+            remote_s: measured(Tier::Remote, formula.remote_s),
+        }
+    }
+
     /// Uniform profile: every strategy costs `d_s` seconds (synthetic tasks
     /// and tests that want the pre-ledger flat pricing).
     pub fn flat(d_s: f64) -> TransitionProfile {
-        TransitionProfile { replica_s: d_s, inmem_s: d_s, remote_s: d_s }
+        TransitionProfile { replica_s: d_s, inmem_s: d_s, local_s: d_s, remote_s: d_s }
+    }
+
+    /// Migration seconds when state pulls from `source` — the store-aware
+    /// fault path prices exactly the tier the state will restore from.
+    pub fn source_s(&self, source: StateSource) -> f64 {
+        match source {
+            StateSource::DpReplica => self.replica_s,
+            StateSource::InMemoryCheckpoint => self.inmem_s,
+            StateSource::LocalDiskCheckpoint => self.local_s,
+            StateSource::RemoteCheckpoint => self.remote_s,
+        }
     }
 
     /// Migration seconds for the strategy a transition actually uses:
@@ -210,6 +256,21 @@ impl CostModel {
         self.transition_base_s + profile.migration_s(faulted)
     }
 
+    /// Store-aware variant of [`CostModel::transition_s`] for faulted
+    /// tasks: the fixed overhead plus the migration time of the *resolved*
+    /// state source — a measured per-restore estimate when the store has
+    /// one (`measured_s`), otherwise the profile's price for that source.
+    /// With the default resolution (`InMemoryCheckpoint`, no measurement)
+    /// this equals `transition_s(profile, true)` exactly.
+    pub fn transition_from_s(
+        &self,
+        profile: &TransitionProfile,
+        source: StateSource,
+        measured_s: Option<f64>,
+    ) -> f64 {
+        self.transition_base_s + measured_s.unwrap_or_else(|| profile.source_s(source))
+    }
+
     /// Detection latency the planner prices into a *faulted* task's reward:
     /// the Table 2 window between the failure and the coordinator learning
     /// about it, during which the task's work is already lost.
@@ -294,6 +355,12 @@ pub struct CostBreakdown {
     /// Matching holding cost (`hold_frac · F_node · W`, FLOP·s); zero
     /// unless the plan resolves a spare retention.
     pub spare_hold_cost: f64,
+    /// The §6.3 state source the faulted task's transition was priced
+    /// against (wire v6): [`StateSource::DpReplica`] — the default — for
+    /// fault-free replans, otherwise the tier the snapshot store resolved
+    /// (or the formula's in-memory assumption when store-aware recovery is
+    /// off). Fault-free plans and pre-v6 logs both read as `DpReplica`.
+    pub state_source: StateSource,
 }
 
 impl CostBreakdown {
@@ -343,6 +410,7 @@ mod tests {
         // §6.3 nearest-principle ordering per model
         for p in [&ps, &pb] {
             assert!(p.replica_s < p.inmem_s && p.inmem_s < p.remote_s, "{p:?}");
+            assert!(p.inmem_s < p.local_s, "peer memory beats local disk: {p:?}");
         }
         // the faulted strategy is the in-memory checkpoint
         assert_eq!(pb.migration_s(true), pb.inmem_s);
@@ -358,12 +426,53 @@ mod tests {
         let cost = CostModel::from_config(&cfg());
         let p = TransitionProfile::flat(5.0);
         assert_eq!(cost.transition_s(&p, false), cfg().transition_base_s + 5.0);
-        let hetero = TransitionProfile { replica_s: 1.0, inmem_s: 3.0, remote_s: 9.0 };
+        let hetero =
+            TransitionProfile { replica_s: 1.0, inmem_s: 3.0, local_s: 6.0, remote_s: 9.0 };
         assert_eq!(
             cost.transition_s(&hetero, true) - cost.transition_s(&hetero, false),
             2.0,
             "a faulted transition pays the farther strategy"
         );
+        // the store-aware fault path prices exactly the resolved source…
+        let base = cfg().transition_base_s;
+        assert_eq!(
+            cost.transition_from_s(&hetero, StateSource::LocalDiskCheckpoint, None),
+            base + 6.0
+        );
+        // …and a measured restore estimate overrides the profile
+        assert_eq!(
+            cost.transition_from_s(&hetero, StateSource::LocalDiskCheckpoint, Some(0.4)),
+            base + 0.4
+        );
+        // default resolution reproduces the formula fault path bit-for-bit
+        assert_eq!(
+            cost.transition_from_s(&hetero, StateSource::InMemoryCheckpoint, None),
+            cost.transition_s(&hetero, true)
+        );
+    }
+
+    #[test]
+    fn from_store_keeps_the_formula_until_transfers_are_measured() {
+        let cluster = ClusterSpec::default();
+        let bytes = 50_000_000_000u64; // 50 GB
+        let mut store = SnapshotStore::new(&cluster);
+        // cold store: identical to the closed form, bit for bit
+        assert_eq!(
+            TransitionProfile::from_store(bytes, &cluster, &store),
+            TransitionProfile::from_state_bytes(bytes, &cluster)
+        );
+        // a fast measured peer-memory transfer undercuts the formula's
+        // 1 s lookup assumption; unmeasured tiers keep the prior
+        store.observe_transfer(Tier::PeerMemory, bytes, 0.3 + bytes as f64 / 1e9 / 200.0);
+        let p = TransitionProfile::from_store(bytes, &cluster, &store);
+        let f = TransitionProfile::from_state_bytes(bytes, &cluster);
+        assert!(p.inmem_s < f.inmem_s, "measured {} vs formula {}", p.inmem_s, f.inmem_s);
+        assert_eq!(p.local_s, f.local_s);
+        assert_eq!(p.remote_s, f.remote_s);
+        assert_eq!(p.replica_s, f.replica_s, "the replica path never touches the store");
+        // degenerate size stays degenerate even with measurements
+        let z = TransitionProfile::from_store(0, &cluster, &store);
+        assert_eq!(z, TransitionProfile::flat(0.0));
     }
 
     #[test]
@@ -402,9 +511,12 @@ mod tests {
             mtbf_per_gpu_s: 1e6,
             spare_value: 0.0,
             spare_hold_cost: 0.0,
+            state_source: StateSource::InMemoryCheckpoint,
         };
         assert_eq!(b.objective(), 5.0);
         assert_eq!(CostBreakdown::default().objective(), 0.0);
+        // fault-free default: the replica source
+        assert_eq!(CostBreakdown::default().state_source, StateSource::DpReplica);
     }
 
     #[test]

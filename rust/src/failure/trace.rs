@@ -398,6 +398,28 @@ impl Trace {
         self
     }
 
+    /// Inject one precisely-timed failure at `at_s` on `node` — the
+    /// controlled-scenario builder for failover-latency experiments
+    /// (`warm-peer`): a quiet trace plus one injected SEV1 isolates the
+    /// restore path under test. Seedless and deterministic like
+    /// [`Trace::with_recurrent_lemon`]; SEV1 kinds repair at the midpoint
+    /// of the trace's bounds.
+    pub fn with_injected_failure(mut self, node: NodeId, at_s: f64, kind: ErrorKind) -> Trace {
+        assert!(node.0 < self.config.n_nodes, "node {} outside the cluster", node.0);
+        assert!(
+            (0.0..self.config.duration_s).contains(&at_s),
+            "injection time {at_s} outside the trace"
+        );
+        let repair = if kind.severity() == Severity::Sev1 {
+            0.5 * (self.config.repair_min_s + self.config.repair_max_s)
+        } else {
+            0.0
+        };
+        self.events.push(FailureEvent { at_s, kind, node, repair_after_s: repair });
+        self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        self
+    }
+
     /// Task indices that are active at t = 0 (no pending Arrival event).
     pub fn initially_active(&self, n_tasks: usize) -> Vec<bool> {
         let mut active = vec![true; n_tasks];
@@ -649,6 +671,38 @@ mod tests {
         let mid = 0.5 * (t.config.repair_min_s + t.config.repair_max_s);
         assert!(t.events.iter().all(|e| e.repair_after_s == mid));
         assert!(!t.events.is_empty());
+    }
+
+    #[test]
+    fn injected_failure_lands_exactly_where_asked() {
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_injected_failure(
+            NodeId(3),
+            7200.0,
+            ErrorKind::LostConnection,
+        );
+        assert_eq!(t.events.len(), 1);
+        let e = &t.events[0];
+        assert_eq!((e.node, e.at_s), (NodeId(3), 7200.0));
+        assert_eq!(e.severity(), Severity::Sev1);
+        let mid = 0.5 * (t.config.repair_min_s + t.config.repair_max_s);
+        assert_eq!(e.repair_after_s, mid);
+        // SEV2 injections carry no repair slot
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_injected_failure(
+            NodeId(0),
+            100.0,
+            ErrorKind::CudaError,
+        );
+        assert_eq!(t.events[0].repair_after_s, 0.0);
+        // injections merge time-sorted into a busy trace
+        let busy = Trace::generate(TraceConfig::trace_a(), 5).with_injected_failure(
+            NodeId(1),
+            1234.5,
+            ErrorKind::EccError,
+        );
+        assert!(busy.events.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        assert!(busy.events.iter().any(|e| e.at_s == 1234.5 && e.node == NodeId(1)));
     }
 
     #[test]

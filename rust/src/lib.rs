@@ -19,6 +19,8 @@
 //!   decision (plan reward, transition pricing, spare economics) is priced
 //!   against (DESIGN.md §9)
 //! * distributed plumbing: [`kvstore`], [`rpc`], [`membership`], [`checkpoint`]
+//! * the state tier: [`store`] — content-addressed, deduplicating, tiered
+//!   snapshot store the transition/cost layers price against (DESIGN.md §13)
 //! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
 //!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
 //! * fleet economics: [`fleet`] — node health history, lemon detection,
@@ -56,6 +58,7 @@ pub mod rpc;
 pub mod runtime;
 pub mod ser;
 pub mod simulator;
+pub mod store;
 pub mod trainer;
 pub mod transition;
 pub mod util;

@@ -20,6 +20,7 @@ use crate::cost::{CostBreakdown, CostModel, TransitionProfile};
 use crate::perfmodel::throughput_table;
 use crate::placement::Layout;
 use crate::proto::WorkerCount;
+use crate::transition::StateSource;
 
 /// Everything the solver needs to know about one task.
 ///
@@ -42,6 +43,15 @@ pub struct PlanTask {
     /// transition penalty even when the worker count stays the same (Eq. 4),
     /// and selects the faulted migration strategy in the profile.
     pub fault: bool,
+    /// Which state tier this task restores from *if* faulted — resolved
+    /// from snapshot-store residency ([`crate::transition::resolve_source`])
+    /// when the store is live, [`StateSource::InMemoryCheckpoint`] as the
+    /// cold-start default (the pre-store assumption, so pricing is
+    /// unchanged until residency says otherwise).
+    pub fault_source: StateSource,
+    /// Measured restore time from the store's tier stats, seconds. `None`
+    /// prices the fault through the §6.3 formula for `fault_source`.
+    pub fault_restore_s: Option<f64>,
 }
 
 impl PlanTask {
@@ -59,6 +69,8 @@ impl PlanTask {
             spec: spec.clone(),
             current: WorkerCount(0),
             fault: false,
+            fault_source: StateSource::InMemoryCheckpoint,
+            fault_restore_s: None,
         }
     }
 
@@ -134,10 +146,16 @@ pub fn reward(task: &PlanTask, x_new: u32, n_workers: u32, cost: &CostModel) -> 
 /// the DP inner loop and, being constant offsets, never change the argmax.
 fn penalty_terms(t: &PlanTask, cost: &CostModel) -> (f64, f64) {
     let waf = t.current_waf();
-    (
-        waf * cost.transition_s(&t.profile, t.fault),
-        if t.fault { waf * cost.detection_s() } else { 0.0 },
-    )
+    // A faulted task pays the restore path the store says it actually has
+    // (tier + optional measured time); at the defaults
+    // (`InMemoryCheckpoint`, no measurement) this is exactly the old
+    // `transition_s(profile, true)` formula price.
+    let trans_s = if t.fault {
+        cost.transition_from_s(&t.profile, t.fault_source, t.fault_restore_s)
+    } else {
+        cost.transition_s(&t.profile, false)
+    };
+    (waf * trans_s, if t.fault { waf * cost.detection_s() } else { 0.0 })
 }
 
 /// Per-task penalty pairs hoisted out of the DP inner loop.
@@ -163,6 +181,14 @@ fn breakdown_for(
             detection += detect;
         }
     }
+    // The plan's chosen restore tier: the first faulted task's resolved
+    // source (a SEV1 replan faults exactly one task), DpReplica for
+    // fault-free plans — the same default pre-v6 logs decode to.
+    let state_source = tasks
+        .iter()
+        .find(|t| t.fault)
+        .map(|t| t.fault_source)
+        .unwrap_or(StateSource::DpReplica);
     CostBreakdown {
         running_reward: running,
         transition_penalty: transition,
@@ -171,6 +197,7 @@ fn breakdown_for(
         mtbf_per_gpu_s: cost.mtbf_per_gpu_s(),
         spare_value: 0.0,
         spare_hold_cost: 0.0,
+        state_source,
     }
 }
 
@@ -381,7 +408,9 @@ enum Grid {
 /// Snapshot of the solve inputs a [`ScenarioLookup`] was built from, used
 /// by [`ScenarioLookup::refresh_horizon`] to prove which rows of a previous
 /// table are bit-reusable. Holds the *fault-cleared* task vector (fault
-/// flags are part of the row key, not the snapshot) and the cost model;
+/// flags are part of the row key, not the snapshot — but the restore-source
+/// fields stay, so a store-residency change honestly invalidates every
+/// row) and the cost model;
 /// `available`/`gpn` are deliberately absent — rows are keyed by absolute
 /// capacity, so a membership change reuses whatever keys still overlap.
 #[derive(Debug, Clone, PartialEq)]
@@ -658,6 +687,8 @@ mod tests {
             profile: TransitionProfile::flat(5.0),
             current: WorkerCount(current),
             fault,
+            fault_source: StateSource::InMemoryCheckpoint,
+            fault_restore_s: None,
         }
     }
 
@@ -745,7 +776,8 @@ mod tests {
         // Same heterogeneous profile; the faulted twin pays inmem_s instead
         // of replica_s, plus the Table 2 detection window, so its reward is
         // strictly lower at every size.
-        let profile = TransitionProfile { replica_s: 2.0, inmem_s: 40.0, remote_s: 300.0 };
+        let profile =
+            TransitionProfile { replica_s: 2.0, inmem_s: 40.0, local_s: 80.0, remote_s: 300.0 };
         let mut healthy = task(0, 1.0, 1, 10.0, 8, false, 16);
         healthy.profile = profile.clone();
         let mut faulted = healthy.clone();
@@ -791,7 +823,44 @@ mod tests {
             assert!((b.running_reward - running).abs() <= 1e-9 * running.abs().max(1.0));
             assert!((b.transition_penalty - penalty).abs() <= 1e-9 * penalty.abs().max(1.0));
             assert!((b.detection_penalty - detection).abs() <= 1e-9 * detection.abs().max(1.0));
+            // the faulted task (task 1) resolves to the default in-memory
+            // checkpoint tier, and the breakdown records the choice
+            assert_eq!(b.state_source, StateSource::InMemoryCheckpoint, "n={n}");
         }
+        // fault-free plans stamp the replica source
+        let quiet: Vec<PlanTask> = tasks
+            .iter()
+            .cloned()
+            .map(|mut t| {
+                t.fault = false;
+                t
+            })
+            .collect();
+        assert_eq!(solve(&quiet, 8, &c).breakdown.state_source, StateSource::DpReplica);
+    }
+
+    #[test]
+    fn measured_restore_reprices_the_faulted_penalty() {
+        // Same faulted task, three pricings: formula inmem (default), formula
+        // local disk (residency resolved a slower tier), and a measured
+        // sub-second peer restore. The reward must move with the price.
+        let base = task(0, 1.0, 1, 10.0, 8, true, 16);
+        let profile =
+            TransitionProfile { replica_s: 2.0, inmem_s: 40.0, local_s: 80.0, remote_s: 300.0 };
+        let c = cost();
+        let mut inmem = base.clone();
+        inmem.profile = profile.clone();
+        let mut local = inmem.clone();
+        local.fault_source = StateSource::LocalDiskCheckpoint;
+        let mut measured = inmem.clone();
+        measured.fault_restore_s = Some(0.4);
+        let (g_in, g_loc, g_meas) =
+            (reward(&inmem, 6, 16, &c), reward(&local, 6, 16, &c), reward(&measured, 6, 16, &c));
+        assert!(g_loc < g_in, "farther tier must cost more: {g_loc} vs {g_in}");
+        assert!(g_meas > g_in, "a measured fast restore must cost less: {g_meas} vs {g_in}");
+        let waf = inmem.current_waf();
+        assert!((g_in - g_loc - waf * (profile.local_s - profile.inmem_s)).abs() < 1e-6);
+        assert!((g_meas - g_in - waf * (profile.inmem_s - 0.4)).abs() < 1e-6);
     }
 
     #[test]

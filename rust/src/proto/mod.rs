@@ -50,6 +50,7 @@ use crate::failure::ErrorKind;
 use crate::placement::Layout;
 use crate::planner::Plan;
 use crate::ser::{JsonError, Value};
+use crate::transition::StateSource;
 
 /// Format version stamped into every serialized [`DecisionLog`]. Bump on
 /// any variant/field change to the protocol types (see the module docs).
@@ -71,7 +72,11 @@ use crate::ser::{JsonError, Value};
 /// * v5 — batched dispatch: [`CoordEvent::Batch`] delivers N simultaneous
 ///   events as one recorded decision, so a burst costs one dispatch/replan
 ///   cycle and replays as one step.
-pub const DECISION_LOG_VERSION: u64 = 5;
+/// * v6 — the state tier: [`CoordEvent::StateResidency`] reports where a
+///   task's snapshot actually lives (and the measured restore time), and
+///   every [`CostBreakdown`] stamps the restore tier the plan priced
+///   ([`CostBreakdown::state_source`]).
+pub const DECISION_LOG_VERSION: u64 = 6;
 
 // ---------------------------------------------------------------------------
 // Typed identifiers
@@ -148,6 +153,13 @@ pub enum CoordEvent {
     /// correlated same-domain burst path to arbitrary co-arriving events).
     /// Recorded and replayed as a single [`LogEntry`].
     Batch(Vec<CoordEvent>),
+    /// The snapshot store's residency for `task` changed (wire v6): if this
+    /// task faults now, it restores from `source` in an estimated
+    /// `restore_s` seconds (store tier stats — measured when transfers have
+    /// been observed, the §6.3 prior otherwise). The coordinator updates
+    /// its planner inputs and invalidates the precomputed table; no actions
+    /// result, but the event is recorded so replays re-price identically.
+    StateResidency { task: TaskId, source: StateSource, restore_s: f64 },
 }
 
 /// Why a reconfiguration plan was generated — the Fig. 7 trigger class.
@@ -347,6 +359,11 @@ impl CoordEvent {
             CoordEvent::Batch(events) => Value::obj()
                 .with("event", "batch")
                 .with("events", Value::Arr(events.iter().map(CoordEvent::to_value).collect())),
+            CoordEvent::StateResidency { task, source, restore_s } => Value::obj()
+                .with("event", "state_residency")
+                .with("task", task.0)
+                .with("source", source.name())
+                .with("restore_s", *restore_s),
         }
     }
 
@@ -384,6 +401,17 @@ impl CoordEvent {
                     .collect::<Result<Vec<CoordEvent>, ProtoError>>()?;
                 Ok(CoordEvent::Batch(members))
             }
+            "state_residency" => {
+                let name = get_str(v, "source")?;
+                let source = StateSource::from_name(name).ok_or_else(|| {
+                    ProtoError::new(format!("unknown state source {name:?}"))
+                })?;
+                Ok(CoordEvent::StateResidency {
+                    task: get_task(v)?,
+                    source,
+                    restore_s: get_f64(v, "restore_s")?,
+                })
+            }
             other => Err(ProtoError::new(format!("unknown event type {other:?}"))),
         }
     }
@@ -398,6 +426,7 @@ fn breakdown_to_value(b: &CostBreakdown) -> Value {
         .with("mtbf_per_gpu_s", b.mtbf_per_gpu_s)
         .with("spare_value", b.spare_value)
         .with("spare_hold_cost", b.spare_hold_cost)
+        .with("state_source", b.state_source.name())
 }
 
 fn breakdown_from_value(v: &Value) -> Result<CostBreakdown, ProtoError> {
@@ -409,6 +438,11 @@ fn breakdown_from_value(v: &Value) -> Result<CostBreakdown, ProtoError> {
         mtbf_per_gpu_s: get_f64(v, "mtbf_per_gpu_s")?,
         spare_value: get_f64(v, "spare_value")?,
         spare_hold_cost: get_f64(v, "spare_hold_cost")?,
+        state_source: {
+            let name = get_str(v, "state_source")?;
+            StateSource::from_name(name)
+                .ok_or_else(|| ProtoError::new(format!("unknown state source {name:?}")))?
+        },
     })
 }
 
@@ -799,6 +833,28 @@ mod tests {
             Value::Arr(vec![Value::obj().with("event", "warp_core_breach")]),
         );
         assert!(CoordEvent::from_value(&v.with("event", "batch")).is_err());
+    }
+
+    #[test]
+    fn state_residency_round_trips() {
+        for source in [
+            StateSource::DpReplica,
+            StateSource::InMemoryCheckpoint,
+            StateSource::LocalDiskCheckpoint,
+            StateSource::RemoteCheckpoint,
+        ] {
+            let ev = CoordEvent::StateResidency { task: TaskId(2), source, restore_s: 0.75 };
+            let back =
+                CoordEvent::from_value(&Value::parse(&ev.to_value().encode()).unwrap()).unwrap();
+            assert_eq!(ev, back);
+        }
+        // unknown source is rejected, never defaulted
+        let v = Value::obj()
+            .with("event", "state_residency")
+            .with("task", 2u32)
+            .with("source", "tape_vault")
+            .with("restore_s", 1.0);
+        assert!(CoordEvent::from_value(&v).is_err());
     }
 
     #[test]

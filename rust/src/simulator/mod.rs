@@ -35,12 +35,19 @@ pub use policies::{
     build as build_policy, BaselinePolicy, PolicyKind, PolicyParams, RecoveryPolicy, UnicronPolicy,
 };
 
-use crate::config::{ClusterSpec, TaskSpec, UnicronConfig};
+use crate::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
 use crate::engine::EventQueue;
 use crate::failure::{LifecycleKind, Severity, Trace};
 use crate::placement::{Layout, TaskMoves};
 use crate::planner::{Plan, PlanTask};
 use crate::proto::{Action, CoordEvent, DecisionLog, NodeId, TaskId, WorkerCount};
+use crate::store::{ChunkId, Manifest, SnapshotStore, Tier};
+use crate::transition::resolve_source;
+
+/// Chunk granularity for *synthetic* simulated snapshots (the environment
+/// never materializes state bytes; 64 MiB keeps manifests of a 100+ GB
+/// optimizer state at a few thousand ids).
+const SIM_CHUNK_BYTES: u64 = 64 << 20;
 
 /// Per-task environment state (what is physically running, not what the
 /// policy has decided — decisions live in the policy).
@@ -94,6 +101,10 @@ enum EnvEvent {
     /// A policy-requested [`Action::ScheduleReplan`] timer: deliver
     /// [`CoordEvent::ReplanDue`] so a deferred burst replan can commit.
     ReplanTimer,
+    /// Periodic checkpoint: every active task writes a (synthetic, delta)
+    /// snapshot into the [`SnapshotStore`]. Only scheduled under
+    /// `store_aware_recovery`; reschedules itself each firing.
+    CheckpointTick,
 }
 
 /// Execution context for a batch of policy actions: what triggered them and
@@ -144,6 +155,13 @@ pub struct SimResult {
     pub plan_lookup_hits: u64,
     /// Replans the policy solved live.
     pub plan_solve_calls: u64,
+    /// SEV1 restores executed against the snapshot store instead of the
+    /// closed-form transition model: (time, restore seconds). Empty unless
+    /// `store_aware_recovery` is on.
+    pub store_restores: Vec<(f64, f64)>,
+    /// Final [`SnapshotStore::report`] (occupancy, dedup ratio, hit/miss),
+    /// `None` unless `store_aware_recovery` is on.
+    pub store_report: Option<crate::ser::Value>,
 }
 
 impl SimResult {
@@ -199,6 +217,28 @@ pub struct Simulator {
     transitions: Vec<(f64, f64)>,
     decision_log: DecisionLog,
     alerts: usize,
+    /// The state tier (DESIGN.md §13). Always constructed (priors from the
+    /// cluster spec), but written/consulted only under `store_aware`.
+    store: SnapshotStore,
+    /// `cfg.store_aware_recovery`: execute checkpoints/evictions/restores
+    /// against the store and let failover timing reflect residency.
+    store_aware: bool,
+    /// Checkpoint cadence (`cfg.ckpt_interval_s`).
+    ckpt_interval_s: f64,
+    /// Fraction of a task's chunks that change between ticks
+    /// (`cfg.store_delta_fraction`).
+    store_delta_fraction: f64,
+    /// Optimizer+model state bytes per task ([`ModelSpec`]-derived).
+    state_bytes: Vec<u64>,
+    /// Per-task synthetic chunk content versions: a tick bumps a rotating
+    /// dirty window, every unchanged chunk re-addresses identically.
+    chunk_version: Vec<Vec<u64>>,
+    /// Checkpoint ticks taken (every 4th also persists to remote).
+    ckpt_ticks: u64,
+    /// Last `(source, restore_s)` reported per task via
+    /// [`CoordEvent::StateResidency`] — only changes are re-emitted.
+    last_residency: Vec<Option<(crate::transition::StateSource, f64)>>,
+    store_restores: Vec<(f64, f64)>,
 }
 
 /// Staged construction of a [`Simulator`] — replaces the old positional
@@ -255,6 +295,20 @@ impl SimulatorBuilder {
         let n = cluster.total_gpus();
         let plan_inputs: Vec<PlanTask> =
             specs.iter().map(|spec| PlanTask::from_spec(spec, &cluster, n)).collect();
+        // Optimizer+model state per task: params × 16 B (fp16 weights +
+        // fp32 master + Adam moments); unknown models get a nominal 1 GiB.
+        let state_bytes: Vec<u64> = specs
+            .iter()
+            .map(|spec| {
+                ModelSpec::gpt3(&spec.model)
+                    .map(|m| (m.n_params * crate::cost::STATE_BYTES_PER_PARAM) as u64)
+                    .unwrap_or(1 << 30)
+            })
+            .collect();
+        let chunk_version: Vec<Vec<u64>> = state_bytes
+            .iter()
+            .map(|&b| vec![0u64; b.div_ceil(SIM_CHUNK_BYTES) as usize])
+            .collect();
         let tasks = plan_inputs
             .iter()
             .map(|pt| SimTask {
@@ -268,11 +322,21 @@ impl SimulatorBuilder {
             })
             .collect();
         let params = policy.params().clone();
+        let n_tasks = tasks.len();
         Simulator {
             node_down: vec![false; cluster.n_nodes as usize],
             retired: vec![false; cluster.n_nodes as usize],
             layout: Layout::default(),
             available: n,
+            store: SnapshotStore::new(&cluster),
+            store_aware: cfg.store_aware_recovery,
+            ckpt_interval_s: cfg.ckpt_interval_s,
+            store_delta_fraction: cfg.store_delta_fraction,
+            state_bytes,
+            chunk_version,
+            ckpt_ticks: 0,
+            last_residency: vec![None; n_tasks],
+            store_restores: Vec::new(),
             cluster,
             policy,
             params,
@@ -425,6 +489,108 @@ impl Simulator {
         }
     }
 
+    /// Peer host for a task's node-local snapshot tiers: the lowest-id
+    /// healthy node *outside* the task's own layout (so losing a training
+    /// node does not take the replica with it), falling back to the lowest
+    /// healthy node when the task spans the whole fleet.
+    fn checkpoint_peer(&self, ti: usize) -> Option<NodeId> {
+        let task = self.tasks[ti].spec.id;
+        let own = self.layout.nodes_of(task);
+        let mut fallback = None;
+        for n in (0..self.cluster.n_nodes).map(NodeId) {
+            if self.node_down[n.0 as usize] || self.retired[n.0 as usize] {
+                continue;
+            }
+            if fallback.is_none() {
+                fallback = Some(n);
+            }
+            if !own.contains(&n) {
+                return Some(n);
+            }
+        }
+        fallback
+    }
+
+    /// One checkpoint cadence firing: every running task writes a synthetic
+    /// delta snapshot. A rotating `store_delta_fraction` window of chunks
+    /// bumps its content version; everything else re-addresses identically
+    /// and deduplicates — the FFTrainer-style near-zero steady-state cost.
+    /// Peer-memory and local-disk copies land on the checkpoint peer; every
+    /// 4th tick also persists to remote (the always-survives baseline).
+    fn on_checkpoint_tick(&mut self) {
+        self.ckpt_ticks += 1;
+        let step = self.ckpt_ticks;
+        for ti in self.active_indices() {
+            if self.tasks[ti].workers == 0 {
+                continue;
+            }
+            let task = self.tasks[ti].spec.id;
+            let n = self.chunk_version[ti].len();
+            if n == 0 {
+                continue;
+            }
+            let dirty = (((n as f64) * self.store_delta_fraction).ceil() as usize).clamp(1, n);
+            let start = ((step - 1) as usize).wrapping_mul(dirty) % n;
+            for k in 0..dirty {
+                self.chunk_version[ti][(start + k) % n] += 1;
+            }
+            let chunks: Vec<ChunkId> = self.chunk_version[ti]
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| ChunkId::synthetic(task, i as u64, v))
+                .collect();
+            let manifest = Manifest {
+                task,
+                step,
+                total_bytes: self.state_bytes[ti],
+                chunk_bytes: SIM_CHUNK_BYTES,
+                chunks,
+            };
+            let peer = self.checkpoint_peer(ti);
+            self.store.put_manifest(Tier::PeerMemory, peer, &manifest);
+            self.store.put_manifest(Tier::LocalDisk, peer, &manifest);
+            if step % 4 == 0 {
+                self.store.put_manifest(Tier::Remote, None, &manifest);
+            }
+        }
+    }
+
+    /// Bytes a replacement node must pull to rejoin `ti` at `workers`
+    /// workers: the per-node shard of the task's state.
+    fn shard_bytes(&self, ti: usize, workers: u32) -> u64 {
+        let gpn = self.cluster.gpus_per_node as u64;
+        (self.state_bytes[ti].saturating_mul(gpn) / (workers.max(1) as u64))
+            .min(self.state_bytes[ti])
+    }
+
+    /// Report residency changes to the policy (wire v6): after the store's
+    /// contents moved (peer loss), any task whose nearest resident tier or
+    /// restore estimate changed gets a [`CoordEvent::StateResidency`]
+    /// *before* the failure event, so the SEV1 replan prices the true
+    /// restore path (the coordinator invalidates and rebuilds its table).
+    fn emit_residency_updates(&mut self) {
+        if !self.store_aware {
+            return;
+        }
+        for ti in self.active_indices() {
+            let task = self.tasks[ti].spec.id;
+            let shard = self.shard_bytes(ti, self.tasks[ti].workers);
+            let source = resolve_source(false, &self.store, task);
+            let restore_s = match self.store.restore_estimate_s(task, shard) {
+                Some((_, est)) => est,
+                // nothing resident anywhere: price the always-there remote
+                // persistent baseline from its tier stats
+                None => self.store.tier_stats(Tier::Remote).time_s(shard),
+            };
+            if self.last_residency[ti] == Some((source, restore_s)) {
+                continue;
+            }
+            self.last_residency[ti] = Some((source, restore_s));
+            let actions = self.decide(CoordEvent::StateResidency { task, source, restore_s });
+            self.execute(&actions, &Ctx::quiet());
+        }
+    }
+
     /// Reconfigure the cluster to `plan`. Each task whose worker count
     /// changes (or that hosts the fault, or that must pull state onto newly
     /// gained nodes) goes down for detection + a transition proportional to
@@ -480,7 +646,21 @@ impl Simulator {
             let base_moved =
                 if plan.layout.is_empty() { old_w.abs_diff(new_w) } else { gained_gpus };
             let moved = base_moved.max(if affected { gpn } else { 0 });
-            let trans = self.params.sev1_transition_s(moved);
+            let mut trans = self.params.sev1_transition_s(moved);
+            // Store-aware failover: when the faulted task has a resident
+            // snapshot, the transition is the actual restore from its
+            // nearest tier — latency plus the replacement node's shard over
+            // tier bandwidth — not the closed-form migration model. The
+            // executed transfer feeds the tier's measured-bandwidth EWMA.
+            if self.store_aware && affected {
+                let task = self.tasks[ti].spec.id;
+                let shard = self.shard_bytes(ti, new_w);
+                if let Some((tier, restore_s)) = self.store.restore(task, shard) {
+                    trans = restore_s;
+                    self.store.observe_transfer(tier, shard, restore_s);
+                    self.store_restores.push((self.now, restore_s));
+                }
+            }
             let until = self.now + detect + trans;
             let t = &mut self.tasks[ti];
             t.down_until = Some(until);
@@ -548,6 +728,9 @@ impl Simulator {
         for (i, l) in trace.lifecycle.iter().enumerate() {
             self.queue.schedule(l.at_s, EnvEvent::Lifecycle(i));
         }
+        if self.store_aware && self.ckpt_interval_s > 0.0 {
+            self.queue.schedule(self.ckpt_interval_s, EnvEvent::CheckpointTick);
+        }
 
         // Bootstrap: the initial assignment is itself a policy decision (a
         // TaskLaunched replan), applied instantly — §7.5 starts every policy
@@ -613,6 +796,10 @@ impl Simulator {
                     let actions = self.decide(CoordEvent::ReplanDue);
                     self.execute(&actions, &Ctx::failure(Severity::Sev1, None));
                 }
+                EnvEvent::CheckpointTick => {
+                    self.on_checkpoint_tick();
+                    self.queue.schedule(self.now + self.ckpt_interval_s, EnvEvent::CheckpointTick);
+                }
             }
             self.record();
         }
@@ -631,6 +818,8 @@ impl Simulator {
             alerts: self.alerts,
             plan_lookup_hits,
             plan_solve_calls,
+            store_restores: self.store_restores,
+            store_report: if self.store_aware { Some(self.store.report()) } else { None },
         }
     }
 
@@ -649,6 +838,13 @@ impl Simulator {
                 self.node_down[node.0 as usize] = true;
                 self.available = self.available.saturating_sub(self.cluster.gpus_per_node);
                 self.queue.schedule(self.now + ev.repair_after_s, EnvEvent::Repair { node });
+                if self.store_aware {
+                    // the node's peer-memory replicas and local disk die
+                    // with it; residency falls down the ladder, and the
+                    // policy hears about it before the failure itself
+                    self.store.drop_peer(node);
+                    self.emit_residency_updates();
+                }
                 let coord_ev = match affected {
                     Some(ti) => CoordEvent::ErrorReport {
                         node,
@@ -729,6 +925,9 @@ impl Simulator {
             self.node_down[node.0 as usize] = true;
             self.available = self.available.saturating_sub(gpn);
             self.queue.schedule(self.now + ev.repair_after_s, EnvEvent::Repair { node });
+            if self.store_aware {
+                self.store.drop_peer(node);
+            }
             if let Some(ti) = affected {
                 // the consolidated plan prices the merged post-burst state,
                 // so the shrink lands up front, not via the deferred path
@@ -748,6 +947,7 @@ impl Simulator {
         if members.is_empty() {
             return; // every node in the burst was already down
         }
+        self.emit_residency_updates();
         let actions = self.decide(CoordEvent::Batch(members));
         self.execute(&actions, &Ctx::failure(Severity::Sev1, None));
     }
@@ -1064,6 +1264,53 @@ mod tests {
             "fencing the lemon must not lose goodput: on {} vs off {}",
             on.accumulated_waf,
             off.accumulated_waf
+        );
+    }
+
+    #[test]
+    fn store_aware_recovery_is_gated_and_executes_restores() {
+        let (cluster, cfg, specs) = setup();
+        // gate off (the default): no ticks, no restores, no report — the
+        // pinned ratio bands and the determinism corpus never see the store
+        let off = run(PolicyKind::Unicron, &Trace::generate(TraceConfig::trace_a(), 42));
+        assert!(off.store_restores.is_empty());
+        assert!(off.store_report.is_none());
+        // gate on: a quiet 6 h window with one injected SEV1 after four
+        // checkpoint ticks — the failover restores from the store, and the
+        // synthetic 1%-delta checkpoints deduplicate heavily
+        let mut on_cfg = cfg.clone();
+        on_cfg.store_aware_recovery = true;
+        let tc = TraceConfig {
+            name: "store-gate".into(),
+            duration_s: 6.0 * 3600.0,
+            n_nodes: cluster.n_nodes,
+            expect_sev1: 0.0,
+            expect_other: 0.0,
+            repair_min_s: 86400.0,
+            repair_max_s: 86400.0,
+        };
+        let trace = Trace::generate(tc, 1).with_injected_failure(
+            crate::proto::NodeId(0),
+            2.5 * 3600.0,
+            crate::failure::ErrorKind::LostConnection,
+        );
+        let r = Simulator::builder()
+            .cluster(cluster)
+            .config(on_cfg)
+            .policy(PolicyKind::Unicron)
+            .tasks(&specs)
+            .build()
+            .run(&trace);
+        assert_eq!(r.store_restores.len(), 1, "the injected SEV1 restores from the store");
+        let (at, d) = r.store_restores[0];
+        assert!((at - 2.5 * 3600.0).abs() < 1e-6 && d > 0.0 && d.is_finite());
+        let rep = r.store_report.expect("store report");
+        let dedup = rep.get("dedup_ratio").and_then(crate::ser::Value::as_f64).unwrap();
+        assert!(dedup > 3.0, "1%-delta checkpoints must dedup heavily: {dedup}");
+        // residency reports reached the decision log (wire v6)
+        assert!(
+            r.decision_log.events().any(|e| matches!(e, CoordEvent::StateResidency { .. })),
+            "peer loss must surface residency changes"
         );
     }
 

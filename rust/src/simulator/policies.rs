@@ -601,6 +601,10 @@ impl RecoveryPolicy for BaselinePolicy {
             },
             // baselines never defer a replan, so a stray timer is a no-op
             CoordEvent::ReplanDue => vec![],
+            // baselines are store-blind: they always restart from the
+            // persistent checkpoint (priced via restart_s/recompute_s), so
+            // residency reports change nothing for them
+            CoordEvent::StateResidency { .. } => vec![],
             CoordEvent::ReattemptResult { .. } | CoordEvent::RestartResult { .. } => vec![],
             // baselines have no consolidated-dispatch path: a burst is the
             // member events delivered back to back — the behavioural gap
@@ -688,6 +692,8 @@ mod tests {
             profile: TransitionProfile::flat(5.0),
             current: WorkerCount(0),
             fault: false,
+            fault_source: crate::transition::StateSource::InMemoryCheckpoint,
+            fault_restore_s: None,
         }
     }
 

@@ -1,0 +1,227 @@
+//! Blob manifests — the recipe that reassembles a snapshot from chunks.
+//!
+//! A [`Manifest`] records which [`ChunkId`]s, in order, make up one task's
+//! snapshot at one step. Manifests are tiny (32 B per chunk) and are the
+//! unit of deduplication: two manifests naming the same chunk share its
+//! storage, and a *delta* snapshot of a slowly-changing optimizer state is
+//! a new manifest that re-addresses only the dirty chunks
+//! ([`Manifest::delta_from`]) — everything else is a reference.
+//!
+//! The wire encoding follows `checkpoint`'s discipline: magic, fixed-width
+//! little-endian fields, and a trailing 32-byte integrity digest; decode
+//! rejects corruption instead of loading it.
+
+use anyhow::{bail, Result};
+
+use super::chunk::{address, split, ChunkId};
+use crate::proto::TaskId;
+
+/// Manifest wire magic — format v1.
+const MAGIC: &[u8; 8] = b"UNISNAP1";
+
+/// One snapshot's chunk recipe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Task whose state this snapshot captures.
+    pub task: TaskId,
+    /// Training step the snapshot was taken at.
+    pub step: u64,
+    /// Logical size of the reassembled state in bytes.
+    pub total_bytes: u64,
+    /// Chunk granularity the state was split at (last chunk may be short).
+    pub chunk_bytes: u64,
+    /// Content addresses, in reassembly order.
+    pub chunks: Vec<ChunkId>,
+}
+
+impl Manifest {
+    /// Full snapshot: chunk and address all of `data`.
+    pub fn build(task: TaskId, step: u64, data: &[u8], chunk_bytes: usize) -> Manifest {
+        let chunk_bytes = chunk_bytes.max(1);
+        Manifest {
+            task,
+            step,
+            total_bytes: data.len() as u64,
+            chunk_bytes: chunk_bytes as u64,
+            chunks: split(data, chunk_bytes).map(address).collect(),
+        }
+    }
+
+    /// Delta snapshot: re-address only the chunks overlapping a dirty byte
+    /// range; every other chunk is inherited from `prev` untouched. Falls
+    /// back to a full [`Manifest::build`] when the state changed shape
+    /// (different length), so the result is *always* exactly what `build`
+    /// would produce — delta is an acceleration, not a different answer.
+    pub fn delta_from(
+        prev: &Manifest,
+        step: u64,
+        data: &[u8],
+        dirty: &[std::ops::Range<usize>],
+    ) -> Manifest {
+        let chunk_bytes = prev.chunk_bytes.max(1) as usize;
+        if data.len() as u64 != prev.total_bytes {
+            return Manifest::build(prev.task, step, data, chunk_bytes);
+        }
+        let mut chunks = prev.chunks.clone();
+        for range in dirty {
+            let lo = range.start.min(data.len()) / chunk_bytes;
+            let hi = (range.end.min(data.len()).saturating_sub(1)) / chunk_bytes;
+            for ci in lo..=hi {
+                if range.is_empty() {
+                    break;
+                }
+                let start = ci * chunk_bytes;
+                if start >= data.len() {
+                    break;
+                }
+                let end = (start + chunk_bytes).min(data.len());
+                if let Some(slot) = chunks.get_mut(ci) {
+                    *slot = address(&data[start..end]);
+                }
+            }
+        }
+        Manifest {
+            task: prev.task,
+            step,
+            total_bytes: prev.total_bytes,
+            chunk_bytes: prev.chunk_bytes,
+            chunks,
+        }
+    }
+
+    /// Size in bytes of chunk `i` (the last chunk may be short).
+    pub fn chunk_len(&self, i: usize) -> u64 {
+        let start = (i as u64).saturating_mul(self.chunk_bytes);
+        self.total_bytes.saturating_sub(start).min(self.chunk_bytes)
+    }
+
+    /// Serialize: magic, fixed-width fields, chunk ids, trailing digest.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(72 + 32 * self.chunks.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.task.0.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.total_bytes.to_le_bytes());
+        out.extend_from_slice(&self.chunk_bytes.to_le_bytes());
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for c in &self.chunks {
+            out.extend_from_slice(&c.0);
+        }
+        let digest = address(&out);
+        out.extend_from_slice(&digest.0);
+        out
+    }
+
+    /// Strict inverse of [`Manifest::encode`]: any corruption — flipped
+    /// bits, truncation, trailing garbage — is an error, never a load.
+    pub fn decode(bytes: &[u8]) -> Result<Manifest> {
+        const HEADER: usize = 8 + 4 + 8 + 8 + 8 + 4;
+        if bytes.len() < HEADER + 32 {
+            bail!("manifest too short: {} bytes", bytes.len());
+        }
+        let (body, digest) = bytes.split_at(bytes.len() - 32);
+        if address(body).0 != digest {
+            bail!("manifest digest mismatch");
+        }
+        if &body[..8] != MAGIC {
+            bail!("bad manifest magic");
+        }
+        let mut pos = 8;
+        let mut take = |n: usize| -> Result<&[u8]> {
+            if pos + n > body.len() {
+                bail!("manifest truncated at offset {pos}");
+            }
+            let s = &body[pos..pos + n];
+            pos += n;
+            Ok(s)
+        };
+        let task = TaskId(u32::from_le_bytes(take(4)?.try_into().unwrap()));
+        let step = u64::from_le_bytes(take(8)?.try_into().unwrap());
+        let total_bytes = u64::from_le_bytes(take(8)?.try_into().unwrap());
+        let chunk_bytes = u64::from_le_bytes(take(8)?.try_into().unwrap());
+        let n_chunks = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let mut chunks = Vec::with_capacity(n_chunks.min(1 << 20));
+        for _ in 0..n_chunks {
+            let mut id = [0u8; 32];
+            id.copy_from_slice(take(32)?);
+            chunks.push(ChunkId(id));
+        }
+        if pos != body.len() {
+            bail!("manifest has {} trailing bytes", body.len() - pos);
+        }
+        Ok(Manifest { task, step, total_bytes, chunk_bytes, chunks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_data(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i as u32).wrapping_mul(2654435761) as u8).collect()
+    }
+
+    #[test]
+    fn build_chunks_the_whole_state() {
+        let data = sample_data(1000);
+        let m = Manifest::build(TaskId(1), 5, &data, 256);
+        assert_eq!(m.total_bytes, 1000);
+        assert_eq!(m.chunks.len(), 4);
+        assert_eq!(m.chunk_len(0), 256);
+        assert_eq!(m.chunk_len(3), 232);
+        // empty state: zero chunks, still encodable
+        let e = Manifest::build(TaskId(1), 5, b"", 256);
+        assert_eq!(e.chunks.len(), 0);
+        assert_eq!(Manifest::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn delta_equals_full_when_dirty_ranges_cover_the_changes() {
+        let old = sample_data(4096);
+        let m0 = Manifest::build(TaskId(2), 0, &old, 512);
+        let mut new = old.clone();
+        for b in &mut new[700..900] {
+            *b ^= 0xa5;
+        }
+        new[4000] = 0;
+        let delta = Manifest::delta_from(&m0, 1, &new, &[700..900, 4000..4001]);
+        let full = Manifest::build(TaskId(2), 1, &new, 512);
+        assert_eq!(delta, full, "delta is a pure acceleration of build");
+        // only the dirty chunks re-addressed: untouched ids are shared
+        let shared = delta.chunks.iter().zip(&m0.chunks).filter(|(a, b)| a == b).count();
+        assert_eq!(shared, 8 - 2, "chunk 1 (bytes 700..900) and chunk 7 (byte 4000) changed");
+    }
+
+    #[test]
+    fn delta_with_resized_state_falls_back_to_full() {
+        let old = sample_data(1024);
+        let m0 = Manifest::build(TaskId(2), 0, &old, 256);
+        let new = sample_data(1500);
+        let delta = Manifest::delta_from(&m0, 1, &new, &[0..10]);
+        assert_eq!(delta, Manifest::build(TaskId(2), 1, &new, 256));
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let data = sample_data(3000);
+        let m = Manifest::build(TaskId(7), 42, &data, 1024);
+        let bytes = m.encode();
+        assert_eq!(Manifest::decode(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let m = Manifest::build(TaskId(7), 42, &sample_data(3000), 1024);
+        let good = m.encode();
+        for i in [0, 9, 40, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[i] ^= 1;
+            assert!(Manifest::decode(&bad).is_err(), "flip at {i} must be rejected");
+        }
+        assert!(Manifest::decode(&good[..good.len() - 1]).is_err(), "truncation rejected");
+        let mut extended = good.clone();
+        extended.push(0);
+        assert!(Manifest::decode(&extended).is_err(), "extension rejected");
+        assert!(Manifest::decode(b"short").is_err());
+    }
+}

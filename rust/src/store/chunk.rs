@@ -1,0 +1,152 @@
+//! Content addressing — fixed-size chunking and digest chunk identities.
+//!
+//! A [`ChunkId`] is the 32-byte identity of one chunk of snapshot state:
+//! the chunk length (8 bytes, little-endian) followed by three independent
+//! 64-bit multiply-rotate word hashes computed in a single pass over the
+//! data. Like `checkpoint`'s `digest32`, this defends against *faults*
+//! (bit-flips, truncation, mixed-up buffers), not adversaries: three
+//! independently-seeded lanes plus the explicit length make accidental
+//! collisions vanishingly unlikely while keeping addressing fast enough to
+//! chunk multi-GiB optimizer states at memory-bandwidth-class speed (the
+//! `benches/store.rs` floor pins ≥ 1 GiB/s).
+
+use crate::proto::TaskId;
+
+/// Default chunk granularity for real blobs: 1 MiB — small enough that a
+/// 1 %-changed optimizer state re-addresses ~1 % of its chunks, large
+/// enough that manifest overhead (32 B/chunk) stays below 0.01 %.
+pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
+
+/// 32-byte content address of one chunk (length + triple-lane digest).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ChunkId(pub [u8; 32]);
+
+impl std::fmt::Debug for ChunkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // first 8 bytes are the length; show it plus a digest prefix
+        let len = u64::from_le_bytes(self.0[..8].try_into().unwrap());
+        write!(f, "ChunkId[{len}B ")?;
+        for b in &self.0[8..12] {
+            write!(f, "{b:02x}")?;
+        }
+        write!(f, "..]")
+    }
+}
+
+/// Per-lane (seed, multiplier) pairs — arbitrary odd constants; the three
+/// lanes share one pass over the data but never mix with each other.
+const LANES: [(u64, u64); 3] = [
+    (0x243f_6a88_85a3_08d3, 0x9e37_79b9_7f4a_7c15),
+    (0x1319_8a2e_0370_7344, 0xc2b2_ae3d_27d4_eb4f),
+    (0xa409_3822_299f_31d0, 0x2545_f491_4f6c_dd1d),
+];
+
+/// Final avalanche (the 64-bit finalizer popularized by MurmurHash3).
+fn fin(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^ (x >> 33)
+}
+
+/// Content address of `data`: one pass, three independent lanes.
+pub fn address(data: &[u8]) -> ChunkId {
+    let len = data.len() as u64;
+    let mut h = [LANES[0].0 ^ len, LANES[1].0 ^ len, LANES[2].0 ^ len];
+    let mut words = data.chunks_exact(8);
+    for w in &mut words {
+        let w = u64::from_le_bytes(w.try_into().unwrap());
+        h[0] = (h[0] ^ w).wrapping_mul(LANES[0].1).rotate_left(31);
+        h[1] = (h[1] ^ w).wrapping_mul(LANES[1].1).rotate_left(29);
+        h[2] = (h[2] ^ w).wrapping_mul(LANES[2].1).rotate_left(27);
+    }
+    let rem = words.remainder();
+    if !rem.is_empty() {
+        let mut buf = [0u8; 8];
+        buf[..rem.len()].copy_from_slice(rem);
+        let w = u64::from_le_bytes(buf);
+        h[0] = (h[0] ^ w).wrapping_mul(LANES[0].1).rotate_left(31);
+        h[1] = (h[1] ^ w).wrapping_mul(LANES[1].1).rotate_left(29);
+        h[2] = (h[2] ^ w).wrapping_mul(LANES[2].1).rotate_left(27);
+    }
+    let mut out = [0u8; 32];
+    out[..8].copy_from_slice(&len.to_le_bytes());
+    for (i, lane) in h.iter().enumerate() {
+        out[8 + i * 8..16 + i * 8].copy_from_slice(&fin(*lane).to_le_bytes());
+    }
+    ChunkId(out)
+}
+
+/// Split `data` into fixed-size chunks (the last may be short). A zero
+/// `chunk_bytes` is treated as 1 — degenerate inputs never panic.
+pub fn split(data: &[u8], chunk_bytes: usize) -> impl Iterator<Item = &[u8]> {
+    data.chunks(chunk_bytes.max(1))
+}
+
+impl ChunkId {
+    /// Deterministic identity for *simulated* state the environment model
+    /// never materializes: chunk `index` of `task`'s shard at content
+    /// `version`. Two ticks where a chunk's version is unchanged produce
+    /// the same id — that is what makes simulated delta snapshots dedup.
+    pub fn synthetic(task: TaskId, index: u64, version: u64) -> ChunkId {
+        let mut out = [0u8; 32];
+        // length field 0 marks a synthetic id (real chunks are never empty
+        // because `split` yields no chunks for empty data)
+        out[8..16].copy_from_slice(&fin(0x5359_4e54_u64 ^ u64::from(task.0)).to_le_bytes());
+        out[16..24].copy_from_slice(&fin(index.wrapping_mul(LANES[1].1) ^ version).to_le_bytes());
+        let lane3 = fin(version.wrapping_mul(LANES[2].1) ^ index.rotate_left(17));
+        out[24..32].copy_from_slice(&lane3.to_le_bytes());
+        ChunkId(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_is_deterministic_and_length_prefixed() {
+        let data = vec![7u8; 1000];
+        let a = address(&data);
+        let b = address(&data);
+        assert_eq!(a, b);
+        assert_eq!(u64::from_le_bytes(a.0[..8].try_into().unwrap()), 1000);
+    }
+
+    #[test]
+    fn address_distinguishes_content_length_and_tail() {
+        let base = vec![1u8; 64];
+        let a = address(&base);
+        let mut flipped = base.clone();
+        flipped[63] ^= 1;
+        assert_ne!(a, address(&flipped), "single bit flip must change the address");
+        assert_ne!(a, address(&base[..63]), "truncation must change the address");
+        let mut tail = base.clone();
+        tail.push(0);
+        assert_ne!(a, address(&tail), "zero-extension must change the address");
+        assert_ne!(address(b""), address(&[0u8]), "length is part of the identity");
+    }
+
+    #[test]
+    fn split_covers_data_exactly() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let chunks: Vec<&[u8]> = split(&data, 32).collect();
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(chunks[3].len(), 4);
+        let rejoined: Vec<u8> = chunks.concat();
+        assert_eq!(rejoined, data);
+        // degenerate chunk size never panics
+        assert_eq!(split(&data, 0).count(), 100);
+        assert_eq!(split(b"", 32).count(), 0);
+    }
+
+    #[test]
+    fn synthetic_ids_track_version() {
+        let t = TaskId(3);
+        assert_eq!(ChunkId::synthetic(t, 0, 1), ChunkId::synthetic(t, 0, 1));
+        assert_ne!(ChunkId::synthetic(t, 0, 1), ChunkId::synthetic(t, 0, 2));
+        assert_ne!(ChunkId::synthetic(t, 0, 1), ChunkId::synthetic(t, 1, 1));
+        assert_ne!(ChunkId::synthetic(TaskId(4), 0, 1), ChunkId::synthetic(t, 0, 1));
+    }
+}

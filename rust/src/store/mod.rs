@@ -1,0 +1,527 @@
+//! The fast-failover state tier — a content-addressed, deduplicating,
+//! tiered snapshot store (ROADMAP `[speed]`; FFTrainer's observation that
+//! failover cost is dominated by state *movement*, not planning).
+//!
+//! Three layers:
+//!
+//! 1. [`chunk`] — fixed-size chunking and 32-byte content addresses
+//!    ([`ChunkId`]), `checkpoint::digest32`-style integrity at
+//!    memory-bandwidth-class speed;
+//! 2. [`blob`] — [`Manifest`]s, the ordered chunk recipes that reassemble
+//!    a snapshot; delta manifests re-address only dirty chunks so repeated
+//!    checkpoints of a slowly-changing optimizer state cost near zero;
+//! 3. [`SnapshotStore`] (this module) — tiered placement over the §6.3
+//!    nearest-principle ladder: peer-replica in-memory → local disk →
+//!    remote, with per-tier dedup accounting, occupancy/eviction, and
+//!    *measured* latency/bandwidth statistics (EWMA over observed
+//!    transfers, formula priors before the first observation).
+//!
+//! The rest of the stack consumes the store instead of assuming tiers:
+//! `transition::resolve_source` maps residency to a `StateSource`,
+//! `cost::TransitionProfile::from_store` prices strategies from tier
+//! stats, and the simulator executes checkpoint writes / peer loss /
+//! restores against it so failover timing reflects what is actually
+//! resident where.
+
+pub mod blob;
+pub mod chunk;
+
+pub use blob::Manifest;
+pub use chunk::{address, split, ChunkId, DEFAULT_CHUNK_BYTES};
+
+use std::collections::BTreeMap;
+
+use crate::config::ClusterSpec;
+use crate::proto::{NodeId, TaskId};
+use crate::ser::Value;
+
+/// Storage tiers, nearest (cheapest to restore from) first — the §6.3
+/// ladder the nearest principle walks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// Replica held in a peer node's memory (GEMINI-style).
+    PeerMemory,
+    /// Checkpoint on a surviving node's local disk.
+    LocalDisk,
+    /// Remote persistent checkpoint storage (always survives node loss).
+    Remote,
+}
+
+impl Tier {
+    /// All tiers, nearest first.
+    pub const ALL: [Tier; 3] = [Tier::PeerMemory, Tier::LocalDisk, Tier::Remote];
+
+    /// Stable wire/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::PeerMemory => "peer_memory",
+            Tier::LocalDisk => "local_disk",
+            Tier::Remote => "remote",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Tier::PeerMemory => 0,
+            Tier::LocalDisk => 1,
+            Tier::Remote => 2,
+        }
+    }
+}
+
+/// EWMA weight for observed transfer bandwidth (matches the fleet layer's
+/// preference for recent evidence without whiplash).
+const BW_EWMA_ALPHA: f64 = 0.3;
+
+/// Per-tier transfer statistics: a formula prior (latency + bandwidth)
+/// that measured transfers progressively replace.
+#[derive(Debug, Clone)]
+pub struct TierStats {
+    /// Fixed per-restore setup latency, seconds (prior; not re-estimated).
+    pub latency_s: f64,
+    /// Cold-start bandwidth prior, GB/s — the closed-form §6.3 number.
+    pub prior_bw_gbs: f64,
+    /// EWMA of observed transfer bandwidth, GB/s (None until observed).
+    measured_bw_gbs: Option<f64>,
+    /// Transfers observed (restores and writes both count).
+    pub transfers: u64,
+}
+
+impl TierStats {
+    fn new(latency_s: f64, prior_bw_gbs: f64) -> TierStats {
+        TierStats { latency_s, prior_bw_gbs, measured_bw_gbs: None, transfers: 0 }
+    }
+
+    /// Bandwidth used for pricing: measured when available, prior before.
+    pub fn effective_bw_gbs(&self) -> f64 {
+        self.measured_bw_gbs.unwrap_or(self.prior_bw_gbs)
+    }
+
+    /// Predicted transfer time for `bytes` through this tier.
+    pub fn time_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / 1e9 / self.effective_bw_gbs().max(1e-9)
+    }
+
+    fn observe(&mut self, bytes: u64, seconds: f64) {
+        if bytes == 0 || seconds <= 0.0 {
+            return;
+        }
+        let bw = bytes as f64 / 1e9 / seconds;
+        self.measured_bw_gbs = Some(match self.measured_bw_gbs {
+            None => bw,
+            Some(old) => (1.0 - BW_EWMA_ALPHA) * old + BW_EWMA_ALPHA * bw,
+        });
+        self.transfers += 1;
+    }
+}
+
+/// One resident snapshot: its recipe, where it physically lives, and its
+/// admission order (for oldest-first eviction).
+#[derive(Debug, Clone)]
+struct Snapshot {
+    manifest: Manifest,
+    /// Hosting node for node-local tiers (`None` for [`Tier::Remote`]).
+    host: Option<NodeId>,
+    seq: u64,
+}
+
+/// Result of one snapshot write: how much was genuinely new versus
+/// deduplicated against chunks the tier already held.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PutStats {
+    pub new_chunks: usize,
+    pub dup_chunks: usize,
+    pub new_bytes: u64,
+    pub dup_bytes: u64,
+}
+
+/// The tiered snapshot store. Deterministic: iteration orders are
+/// `BTreeMap`s, eviction is oldest-admission-first, and every price is a
+/// pure function of recorded state — simulator runs embedding a store
+/// replay bit-identically.
+#[derive(Debug, Clone)]
+pub struct SnapshotStore {
+    stats: [TierStats; 3],
+    /// Per tier: chunk → (bytes, refcount across resident snapshots).
+    chunks: [BTreeMap<ChunkId, (u64, u64)>; 3],
+    /// Latest resident snapshot per (task, tier).
+    snapshots: BTreeMap<(TaskId, Tier), Snapshot>,
+    /// Per-tier physical capacity in bytes (`None` = unbounded).
+    capacity: [Option<u64>; 3],
+    /// Per-tier physical occupancy (sum of unique chunk bytes).
+    physical: [u64; 3],
+    seq: u64,
+    hits: u64,
+    misses: u64,
+    /// Logical bytes written (sum of manifest sizes across all puts).
+    logical_bytes: u64,
+    /// Physical bytes newly stored (chunks not already resident).
+    new_bytes: u64,
+    /// Bytes deduplicated away (chunks already resident at put time).
+    dup_bytes: u64,
+}
+
+impl SnapshotStore {
+    /// Store with formula priors derived from the cluster's bandwidths —
+    /// the same numbers `transition::migration_time_s` uses, so pricing is
+    /// identical to the closed form until transfers are observed.
+    pub fn new(cluster: &ClusterSpec) -> SnapshotStore {
+        SnapshotStore {
+            stats: [
+                TierStats::new(0.2, cluster.inter_bw_gbs),
+                TierStats::new(0.05, cluster.local_disk_bw_gbs),
+                TierStats::new(5.0, cluster.remote_ckpt_bw_gbs),
+            ],
+            chunks: [BTreeMap::new(), BTreeMap::new(), BTreeMap::new()],
+            snapshots: BTreeMap::new(),
+            capacity: [None; 3],
+            physical: [0; 3],
+            seq: 0,
+            hits: 0,
+            misses: 0,
+            logical_bytes: 0,
+            new_bytes: 0,
+            dup_bytes: 0,
+        }
+    }
+
+    /// Bound a tier's physical occupancy; writes evict oldest snapshots
+    /// first to fit (the newest write itself is never evicted).
+    pub fn set_capacity(&mut self, tier: Tier, bytes: Option<u64>) {
+        self.capacity[tier.idx()] = bytes;
+    }
+
+    /// Record a snapshot into `tier`, deduplicating against chunks the
+    /// tier already holds. Replaces the task's previous snapshot in that
+    /// tier (its chunks are released; shared chunks survive via refcount).
+    pub fn put_manifest(
+        &mut self,
+        tier: Tier,
+        host: Option<NodeId>,
+        manifest: &Manifest,
+    ) -> PutStats {
+        let task = manifest.task;
+        self.release(task, tier);
+        let ti = tier.idx();
+        let mut put = PutStats::default();
+        for (i, c) in manifest.chunks.iter().enumerate() {
+            let bytes = manifest.chunk_len(i).max(1);
+            let entry = self.chunks[ti].entry(*c).or_insert((bytes, 0));
+            if entry.1 == 0 {
+                put.new_chunks += 1;
+                put.new_bytes += entry.0;
+                self.physical[ti] += entry.0;
+            } else {
+                put.dup_chunks += 1;
+                put.dup_bytes += entry.0;
+            }
+            entry.1 += 1;
+        }
+        self.logical_bytes += manifest.total_bytes;
+        self.new_bytes += put.new_bytes;
+        self.dup_bytes += put.dup_bytes;
+        self.seq += 1;
+        let seq = self.seq;
+        self.snapshots.insert((task, tier), Snapshot { manifest: manifest.clone(), host, seq });
+        self.evict_to_fit(tier, seq);
+        put
+    }
+
+    /// Convenience real-data path: chunk, address, and store `data`.
+    pub fn put_bytes(
+        &mut self,
+        tier: Tier,
+        host: Option<NodeId>,
+        task: TaskId,
+        step: u64,
+        data: &[u8],
+        chunk_bytes: usize,
+    ) -> (Manifest, PutStats) {
+        let m = Manifest::build(task, step, data, chunk_bytes);
+        let put = self.put_manifest(tier, host, &m);
+        (m, put)
+    }
+
+    /// Drop every snapshot released by losing `node`: its peer-memory
+    /// replicas and its local disk. Remote snapshots survive node loss.
+    pub fn drop_peer(&mut self, node: NodeId) {
+        let doomed: Vec<(TaskId, Tier)> = self
+            .snapshots
+            .iter()
+            .filter(|((_, tier), s)| *tier != Tier::Remote && s.host == Some(node))
+            .map(|(&k, _)| k)
+            .collect();
+        for (task, tier) in doomed {
+            self.release(task, tier);
+        }
+    }
+
+    /// Nearest tier holding a snapshot of `task`, if any.
+    pub fn residency(&self, task: TaskId) -> Option<Tier> {
+        Tier::ALL.into_iter().find(|&t| self.snapshots.contains_key(&(task, t)))
+    }
+
+    /// Node hosting `task`'s snapshot in `tier` (None for remote/absent).
+    pub fn host_of(&self, task: TaskId, tier: Tier) -> Option<NodeId> {
+        self.snapshots.get(&(task, tier)).and_then(|s| s.host)
+    }
+
+    /// Predicted restore time for `shard_bytes` of `task` from its nearest
+    /// resident tier (no counters touched — pricing is read-only).
+    pub fn restore_estimate_s(&self, task: TaskId, shard_bytes: u64) -> Option<(Tier, f64)> {
+        let tier = self.residency(task)?;
+        Some((tier, self.stats[tier.idx()].time_s(shard_bytes)))
+    }
+
+    /// Resolve a restore: returns the nearest tier and its predicted time,
+    /// counting a hit; a task with no resident snapshot counts a miss.
+    pub fn restore(&mut self, task: TaskId, shard_bytes: u64) -> Option<(Tier, f64)> {
+        match self.restore_estimate_s(task, shard_bytes) {
+            Some(r) => {
+                self.hits += 1;
+                Some(r)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Feed a measured transfer into the tier's EWMA bandwidth estimate.
+    pub fn observe_transfer(&mut self, tier: Tier, bytes: u64, seconds: f64) {
+        self.stats[tier.idx()].observe(bytes, seconds);
+    }
+
+    /// Transfer statistics for `tier` (pricing reads these).
+    pub fn tier_stats(&self, tier: Tier) -> &TierStats {
+        &self.stats[tier.idx()]
+    }
+
+    /// Physical bytes resident in `tier`.
+    pub fn occupancy(&self, tier: Tier) -> u64 {
+        self.physical[tier.idx()]
+    }
+
+    /// Logical bytes written ÷ physical bytes newly stored — how much the
+    /// content addressing saved (1.0 = no dedup; grows with stable state).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.new_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.new_bytes as f64
+        }
+    }
+
+    /// `/fleet/store` report: per-tier occupancy + stats, dedup ratio,
+    /// hit/miss counters — deterministic key order via [`Value`].
+    pub fn report(&self) -> Value {
+        let mut tiers = Value::obj();
+        for tier in Tier::ALL {
+            let ti = tier.idx();
+            let n_snaps = self.snapshots.keys().filter(|(_, t)| *t == tier).count();
+            tiers.set(
+                tier.name(),
+                Value::obj()
+                    .with("occupancy_bytes", self.physical[ti])
+                    .with(
+                        "capacity_bytes",
+                        self.capacity[ti].map(Value::from).unwrap_or(Value::Null),
+                    )
+                    .with("snapshots", n_snaps)
+                    .with("chunks", self.chunks[ti].len())
+                    .with("latency_s", self.stats[ti].latency_s)
+                    .with("effective_bw_gbs", self.stats[ti].effective_bw_gbs())
+                    .with("transfers", self.stats[ti].transfers),
+            );
+        }
+        Value::obj()
+            .with("tiers", tiers)
+            .with("dedup_ratio", self.dedup_ratio())
+            .with("hits", self.hits)
+            .with("misses", self.misses)
+            .with("logical_bytes", self.logical_bytes)
+            .with("new_bytes", self.new_bytes)
+            .with("dup_bytes", self.dup_bytes)
+    }
+
+    /// Release `task`'s snapshot in `tier`, dropping chunks whose refcount
+    /// reaches zero.
+    fn release(&mut self, task: TaskId, tier: Tier) {
+        let Some(snap) = self.snapshots.remove(&(task, tier)) else { return };
+        let ti = tier.idx();
+        for c in &snap.manifest.chunks {
+            if let Some(entry) = self.chunks[ti].get_mut(c) {
+                entry.1 = entry.1.saturating_sub(1);
+                if entry.1 == 0 {
+                    let bytes = entry.0;
+                    self.chunks[ti].remove(c);
+                    self.physical[ti] = self.physical[ti].saturating_sub(bytes);
+                }
+            }
+        }
+    }
+
+    /// Evict oldest-admitted snapshots from `tier` until occupancy fits
+    /// its capacity. The snapshot admitted as `keep_seq` is exempt: the
+    /// write that triggered the eviction always lands. Peer-memory
+    /// eviction is a demotion, not a loss — any local-disk or remote copy
+    /// of the same task is untouched and residency falls back to it.
+    fn evict_to_fit(&mut self, tier: Tier, keep_seq: u64) {
+        let Some(cap) = self.capacity[tier.idx()] else { return };
+        while self.physical[tier.idx()] > cap {
+            let victim = self
+                .snapshots
+                .iter()
+                .filter(|((_, t), s)| *t == tier && s.seq != keep_seq)
+                .min_by_key(|(_, s)| s.seq)
+                .map(|(&k, _)| k);
+            let Some((task, tier)) = victim else { return };
+            self.release(task, tier);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> SnapshotStore {
+        SnapshotStore::new(&ClusterSpec::default())
+    }
+
+    fn data(n: usize, salt: u8) -> Vec<u8> {
+        (0..n).map(|i| (i as u8).wrapping_mul(31).wrapping_add(salt)).collect()
+    }
+
+    #[test]
+    fn identical_snapshots_deduplicate_fully() {
+        let mut s = store();
+        let d = data(4096, 1);
+        let (m, first) = s.put_bytes(Tier::Remote, None, TaskId(0), 0, &d, 512);
+        assert_eq!(first.new_chunks, 8);
+        assert_eq!(first.dup_chunks, 0);
+        // same content at the next step: the old snapshot is replaced but
+        // every chunk is already resident
+        let m2 = Manifest { step: 1, ..m };
+        let second = s.put_manifest(Tier::Remote, None, &m2);
+        assert_eq!(second.new_chunks, 0);
+        assert_eq!(second.dup_chunks, 8);
+        assert_eq!(s.occupancy(Tier::Remote), 4096);
+        assert!(s.dedup_ratio() > 1.9, "two logical writes, one physical: {}", s.dedup_ratio());
+    }
+
+    #[test]
+    fn delta_snapshot_stores_only_dirty_chunks() {
+        let mut s = store();
+        let old = data(4096, 2);
+        let (m0, _) = s.put_bytes(Tier::LocalDisk, Some(NodeId(3)), TaskId(1), 0, &old, 512);
+        let mut new = old.clone();
+        new[1000] ^= 0xff;
+        let m1 = Manifest::delta_from(&m0, 1, &new, &[1000..1001]);
+        let put = s.put_manifest(Tier::LocalDisk, Some(NodeId(3)), &m1);
+        assert_eq!(put.new_chunks, 1, "only the dirty chunk is new");
+        assert_eq!(put.dup_chunks, 7);
+    }
+
+    #[test]
+    fn residency_walks_the_nearest_ladder() {
+        let mut s = store();
+        let t = TaskId(2);
+        assert_eq!(s.residency(t), None);
+        let d = data(1024, 3);
+        s.put_bytes(Tier::Remote, None, t, 0, &d, 256);
+        assert_eq!(s.residency(t), Some(Tier::Remote));
+        s.put_bytes(Tier::LocalDisk, Some(NodeId(1)), t, 0, &d, 256);
+        assert_eq!(s.residency(t), Some(Tier::LocalDisk));
+        s.put_bytes(Tier::PeerMemory, Some(NodeId(2)), t, 0, &d, 256);
+        assert_eq!(s.residency(t), Some(Tier::PeerMemory));
+        assert_eq!(s.host_of(t, Tier::PeerMemory), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn losing_the_peer_falls_back_down_the_ladder() {
+        let mut s = store();
+        let t = TaskId(3);
+        let d = data(1024, 4);
+        s.put_bytes(Tier::Remote, None, t, 0, &d, 256);
+        s.put_bytes(Tier::LocalDisk, Some(NodeId(5)), t, 0, &d, 256);
+        s.put_bytes(Tier::PeerMemory, Some(NodeId(5)), t, 0, &d, 256);
+        s.drop_peer(NodeId(5));
+        assert_eq!(s.residency(t), Some(Tier::Remote), "node 5 held both local tiers");
+        assert_eq!(s.occupancy(Tier::PeerMemory), 0);
+        assert_eq!(s.occupancy(Tier::LocalDisk), 0);
+        // remote snapshots never die with a node
+        assert_eq!(s.occupancy(Tier::Remote), 1024);
+    }
+
+    #[test]
+    fn restore_counts_hits_and_misses_and_orders_tiers_by_speed() {
+        let mut s = store();
+        let t = TaskId(4);
+        assert_eq!(s.restore(t, 1 << 30), None);
+        let d = data(512, 5);
+        s.put_bytes(Tier::Remote, None, t, 0, &d, 256);
+        let (tier_r, time_r) = s.restore(t, 1 << 30).unwrap();
+        s.put_bytes(Tier::PeerMemory, Some(NodeId(0)), t, 0, &d, 256);
+        let (tier_p, time_p) = s.restore(t, 1 << 30).unwrap();
+        assert_eq!((tier_r, tier_p), (Tier::Remote, Tier::PeerMemory));
+        assert!(time_p < time_r, "peer memory restores faster: {time_p} vs {time_r}");
+        let rep = s.report();
+        assert_eq!(rep.get("hits").and_then(Value::as_u64), Some(2));
+        assert_eq!(rep.get("misses").and_then(Value::as_u64), Some(1));
+    }
+
+    #[test]
+    fn observed_transfers_update_pricing() {
+        let mut s = store();
+        let prior = s.tier_stats(Tier::Remote).time_s(10_000_000_000);
+        // observe a transfer 4x faster than the prior bandwidth
+        let bw = s.tier_stats(Tier::Remote).prior_bw_gbs * 4.0;
+        s.observe_transfer(Tier::Remote, 10_000_000_000, 10.0 / bw);
+        let measured = s.tier_stats(Tier::Remote).time_s(10_000_000_000);
+        assert!(measured < prior, "measured {measured} must undercut prior {prior}");
+        assert_eq!(s.tier_stats(Tier::Remote).transfers, 1);
+        // degenerate observations are ignored
+        s.observe_transfer(Tier::Remote, 0, 1.0);
+        s.observe_transfer(Tier::Remote, 100, 0.0);
+        assert_eq!(s.tier_stats(Tier::Remote).transfers, 1);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_first_and_never_the_new_write() {
+        let mut s = store();
+        s.set_capacity(Tier::PeerMemory, Some(2048));
+        let host = Some(NodeId(9));
+        s.put_bytes(Tier::PeerMemory, host, TaskId(0), 0, &data(1024, 10), 256);
+        s.put_bytes(Tier::PeerMemory, host, TaskId(1), 0, &data(1024, 11), 256);
+        assert_eq!(s.occupancy(Tier::PeerMemory), 2048);
+        // third write exceeds capacity: task 0 (oldest) is demoted out
+        s.put_bytes(Tier::PeerMemory, host, TaskId(2), 0, &data(1024, 12), 256);
+        assert_eq!(s.residency(TaskId(0)), None);
+        assert_eq!(s.residency(TaskId(1)), Some(Tier::PeerMemory));
+        assert_eq!(s.residency(TaskId(2)), Some(Tier::PeerMemory));
+        // an over-capacity write still lands (exempt from its own eviction)
+        s.put_bytes(Tier::PeerMemory, host, TaskId(3), 0, &data(4096, 13), 256);
+        assert_eq!(s.residency(TaskId(3)), Some(Tier::PeerMemory));
+    }
+
+    #[test]
+    fn report_shape_is_complete() {
+        let mut s = store();
+        s.put_bytes(Tier::Remote, None, TaskId(0), 0, &data(512, 1), 128);
+        let rep = s.report();
+        let tiers = rep.get("tiers").expect("tiers");
+        for tier in Tier::ALL {
+            let t = tiers.get(tier.name()).expect("tier entry");
+            for key in
+                ["occupancy_bytes", "snapshots", "chunks", "latency_s", "effective_bw_gbs"]
+            {
+                assert!(t.get(key).is_some(), "missing {key} in {}", tier.name());
+            }
+        }
+        assert!(rep.get("dedup_ratio").and_then(Value::as_f64).unwrap() >= 1.0);
+        let encoded = rep.encode();
+        assert_eq!(Value::parse(&encoded).unwrap(), rep);
+    }
+}

@@ -8,9 +8,12 @@
 //!   all-reduce: the dead rank's accumulated gradients are lost, its whole
 //!   share is recomputed) from scenario #2 (failure after the all-reduce
 //!   started: only unreduced gradient segments are recomputed).
-//! * [`StateSource`] / [`migration`] — §6.3's nearest principle: DP replica
-//!   (in-cluster copy) → GEMINI in-memory checkpoint → remote persistent
-//!   checkpoint, with transition-time estimates used by Fig. 9.
+//! * [`StateSource`] / [`migration_time_s`] — §6.3's nearest principle: DP
+//!   replica (in-cluster copy) → GEMINI in-memory checkpoint → local-disk
+//!   checkpoint → remote persistent checkpoint, with transition-time
+//!   estimates used by Fig. 9. [`resolve_source`] consults the snapshot
+//!   store's *actual* residency ([`crate::store::SnapshotStore`]) instead
+//!   of assuming which tiers exist.
 
 use std::collections::BTreeSet;
 
@@ -178,14 +181,41 @@ impl IterationTracker {
 // ---------------------------------------------------------------------------
 
 /// Source a joining/restarted worker pulls training state from, nearest first.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum StateSource {
     /// A healthy DP replica already holds the full state (fastest).
+    #[default]
     DpReplica,
     /// GEMINI-style in-memory checkpoint on a peer node.
     InMemoryCheckpoint,
+    /// Checkpoint on a surviving node's local disk (the store's middle tier).
+    LocalDiskCheckpoint,
     /// Remote persistent storage (slowest; paper: 20 GB/s shared).
     RemoteCheckpoint,
+}
+
+impl StateSource {
+    /// Stable snake_case wire name (the [`crate::proto`] serialization).
+    pub fn name(self) -> &'static str {
+        match self {
+            StateSource::DpReplica => "dp_replica",
+            StateSource::InMemoryCheckpoint => "inmem_ckpt",
+            StateSource::LocalDiskCheckpoint => "local_ckpt",
+            StateSource::RemoteCheckpoint => "remote_ckpt",
+        }
+    }
+
+    /// Inverse of [`StateSource::name`]; unknown names are rejected.
+    pub fn from_name(s: &str) -> Option<StateSource> {
+        [
+            StateSource::DpReplica,
+            StateSource::InMemoryCheckpoint,
+            StateSource::LocalDiskCheckpoint,
+            StateSource::RemoteCheckpoint,
+        ]
+        .into_iter()
+        .find(|src| src.name() == s)
+    }
 }
 
 /// Pick the nearest available source (§6.3 decision chain).
@@ -196,6 +226,26 @@ pub fn choose_source(healthy_replica: bool, inmem_ckpt: bool) -> StateSource {
         StateSource::InMemoryCheckpoint
     } else {
         StateSource::RemoteCheckpoint
+    }
+}
+
+/// Store-aware §6.3 resolution: consult the snapshot store's *actual*
+/// residency instead of assuming which tiers exist. A healthy DP replica
+/// still wins (it needs no store at all); otherwise the nearest resident
+/// tier decides, and a task with nothing resident anywhere falls back to
+/// the remote persistent checkpoint (the paper's always-there baseline).
+pub fn resolve_source(
+    healthy_replica: bool,
+    store: &crate::store::SnapshotStore,
+    task: crate::proto::TaskId,
+) -> StateSource {
+    if healthy_replica {
+        return StateSource::DpReplica;
+    }
+    match store.residency(task) {
+        Some(crate::store::Tier::PeerMemory) => StateSource::InMemoryCheckpoint,
+        Some(crate::store::Tier::LocalDisk) => StateSource::LocalDiskCheckpoint,
+        Some(crate::store::Tier::Remote) | None => StateSource::RemoteCheckpoint,
     }
 }
 
@@ -215,6 +265,14 @@ pub fn migration_time_s(
     cluster: &crate::config::ClusterSpec,
     pullers: u32,
 ) -> f64 {
+    // Degenerate sizes, explicitly: nothing to move costs nothing (a task
+    // with zero state — or a shard fully covered by survivors — must not
+    // be charged a tier's fixed lookup latency for a transfer that never
+    // happens), and zero concurrent pullers means *this* puller still
+    // pulls alone, not a division by zero.
+    if state_bytes == 0 {
+        return 0.0;
+    }
     let gb = state_bytes as f64 / 1e9;
     let pullers = pullers.max(1) as f64;
     match source {
@@ -222,6 +280,8 @@ pub fn migration_time_s(
         StateSource::DpReplica => gb / cluster.inter_bw_gbs,
         // in-memory checkpoint also peer-to-peer, plus a small lookup cost
         StateSource::InMemoryCheckpoint => 1.0 + gb / cluster.inter_bw_gbs,
+        // local disk: short seek/open latency, node-local disk bandwidth
+        StateSource::LocalDiskCheckpoint => 0.05 + gb / cluster.local_disk_bw_gbs,
         // remote storage is shared by all pullers
         StateSource::RemoteCheckpoint => gb * pullers / cluster.remote_ckpt_bw_gbs,
     }
@@ -338,9 +398,72 @@ mod tests {
         let bytes = 100e9 as u64; // 100 GB of optimizer state
         let t_rep = migration_time_s(StateSource::DpReplica, bytes, &c, 1);
         let t_mem = migration_time_s(StateSource::InMemoryCheckpoint, bytes, &c, 1);
+        let t_loc = migration_time_s(StateSource::LocalDiskCheckpoint, bytes, &c, 1);
         let t_rem = migration_time_s(StateSource::RemoteCheckpoint, bytes, &c, 1);
         assert!(t_rep < t_mem && t_mem < t_rem, "{t_rep} {t_mem} {t_rem}");
+        assert!(t_mem < t_loc, "peer memory beats local disk: {t_mem} vs {t_loc}");
         // concurrent pullers hurt remote the most
         assert!(migration_time_s(StateSource::RemoteCheckpoint, bytes, &c, 8) > 7.9 * t_rem);
+        // local disk isn't shared: once a few pullers contend for the remote
+        // store, the node-local tier wins
+        assert!(t_loc < migration_time_s(StateSource::RemoteCheckpoint, bytes, &c, 3));
+    }
+
+    #[test]
+    fn migration_degenerate_sizes_are_explicit() {
+        let c = ClusterSpec::default();
+        // zero-byte state: no transfer, no latency charge, for every source
+        for src in [
+            StateSource::DpReplica,
+            StateSource::InMemoryCheckpoint,
+            StateSource::LocalDiskCheckpoint,
+            StateSource::RemoteCheckpoint,
+        ] {
+            assert_eq!(migration_time_s(src, 0, &c, 1), 0.0, "{src:?}");
+            assert_eq!(migration_time_s(src, 0, &c, 0), 0.0, "{src:?} with 0 pullers");
+        }
+        // zero survivors reported: this puller still pulls alone — same as 1
+        let bytes = 10e9 as u64;
+        for src in [StateSource::DpReplica, StateSource::RemoteCheckpoint] {
+            let t0 = migration_time_s(src, bytes, &c, 0);
+            let t1 = migration_time_s(src, bytes, &c, 1);
+            assert_eq!(t0, t1, "{src:?}");
+            assert!(t0.is_finite() && t0 > 0.0);
+        }
+    }
+
+    #[test]
+    fn state_source_wire_names_round_trip() {
+        for src in [
+            StateSource::DpReplica,
+            StateSource::InMemoryCheckpoint,
+            StateSource::LocalDiskCheckpoint,
+            StateSource::RemoteCheckpoint,
+        ] {
+            assert_eq!(StateSource::from_name(src.name()), Some(src));
+        }
+        assert_eq!(StateSource::from_name("floppy_disk"), None);
+        assert_eq!(StateSource::default(), StateSource::DpReplica);
+    }
+
+    #[test]
+    fn resolve_source_consults_store_residency() {
+        use crate::proto::{NodeId, TaskId};
+        use crate::store::{SnapshotStore, Tier};
+        let mut store = SnapshotStore::new(&ClusterSpec::default());
+        let t = TaskId(1);
+        // healthy replica needs no store at all
+        assert_eq!(resolve_source(true, &store, t), StateSource::DpReplica);
+        // nothing resident: fall back to the remote persistent baseline
+        assert_eq!(resolve_source(false, &store, t), StateSource::RemoteCheckpoint);
+        store.put_bytes(Tier::Remote, None, t, 0, &[1u8; 64], 32);
+        assert_eq!(resolve_source(false, &store, t), StateSource::RemoteCheckpoint);
+        store.put_bytes(Tier::LocalDisk, Some(NodeId(2)), t, 0, &[1u8; 64], 32);
+        assert_eq!(resolve_source(false, &store, t), StateSource::LocalDiskCheckpoint);
+        store.put_bytes(Tier::PeerMemory, Some(NodeId(2)), t, 0, &[1u8; 64], 32);
+        assert_eq!(resolve_source(false, &store, t), StateSource::InMemoryCheckpoint);
+        // losing the hosting peer walks back down the ladder
+        store.drop_peer(NodeId(2));
+        assert_eq!(resolve_source(false, &store, t), StateSource::RemoteCheckpoint);
     }
 }

@@ -11,8 +11,10 @@ use unicron::proto::{NodeId, TaskId, WorkerCount};
 use unicron::proptest::{run, Config, Prop};
 use rand_core::RngCore as _;
 use unicron::rng::{Rand, Xoshiro256};
+use unicron::runtime::TrainState;
 use unicron::ser::Value;
-use unicron::transition::IterationTracker;
+use unicron::store::Manifest;
+use unicron::transition::{IterationTracker, StateSource};
 
 /// Random small planner instance: up to 4 tasks, up to 10 workers.
 fn gen_planner(rng: &mut Xoshiro256, size: usize) -> (Vec<PlanTask>, u32) {
@@ -39,6 +41,15 @@ fn gen_planner(rng: &mut Xoshiro256, size: usize) -> (Vec<PlanTask>, u32) {
             if rng.f64() < 0.5 {
                 spec = spec.with_max_workers(min.max(1 + rng.below(n as u64) as u32));
             }
+            // store-resolved fault sources, half with a measured restore
+            // estimate (wire v6): DP optimality must hold under per-tier
+            // pricing exactly as under the closed-form prior
+            let sources = [
+                StateSource::DpReplica,
+                StateSource::InMemoryCheckpoint,
+                StateSource::LocalDiskCheckpoint,
+                StateSource::RemoteCheckpoint,
+            ];
             PlanTask {
                 spec,
                 throughput,
@@ -49,6 +60,12 @@ fn gen_planner(rng: &mut Xoshiro256, size: usize) -> (Vec<PlanTask>, u32) {
                 },
                 current: WorkerCount(current),
                 fault,
+                fault_source: sources[rng.below(4) as usize],
+                fault_restore_s: if rng.f64() < 0.5 {
+                    Some(rng.uniform(0.05, 600.0))
+                } else {
+                    None
+                },
             }
         })
         .collect();
@@ -381,6 +398,135 @@ fn json_roundtrip_fuzz() {
                 Ok(back) => Prop::Fail(format!("{enc} reparsed as {}", back.encode())),
                 Err(e) => Prop::Fail(format!("{enc}: {e}")),
             }
+        },
+    );
+}
+
+#[test]
+fn checkpoint_decode_rejects_mutations_cleanly() {
+    // The store satellite property: decode on arbitrarily mutated,
+    // truncated, extended, or spliced checkpoint bytes must reject with an
+    // error — never panic, never silently load. Bounded cases keep this a
+    // CI smoke, not a fuzz campaign.
+    fn gen(rng: &mut Xoshiro256, size: usize) -> (TrainState, u64) {
+        let n = 1 + rng.below(3) as usize;
+        let shapes: Vec<usize> = (0..n).map(|_| rng.below(1 + size as u64) as usize).collect();
+        let group = |rng: &mut Xoshiro256| -> Vec<Vec<f32>> {
+            shapes
+                .iter()
+                .map(|&len| (0..len).map(|_| rng.uniform(-2.0, 2.0) as f32).collect())
+                .collect()
+        };
+        let state = TrainState {
+            params: group(rng),
+            m: group(rng),
+            v: group(rng),
+            step: rng.next_u64(),
+        };
+        (state, rng.next_u64())
+    }
+    run(
+        "checkpoint_mutation_rejection",
+        Config { cases: 64, ..Default::default() },
+        gen,
+        |(state, seed)| {
+            let original = unicron::checkpoint::encode(state);
+            match unicron::checkpoint::decode(&original) {
+                Ok(back) if &back == state => {}
+                Ok(_) => return Prop::Fail("pristine roundtrip mismatch".into()),
+                Err(e) => return Prop::Fail(format!("pristine checkpoint rejected: {e}")),
+            }
+            let mut rng = Xoshiro256::seed_from_u64(*seed);
+            for _ in 0..16 {
+                let mut bytes = original.clone();
+                match rng.below(4) {
+                    0 => {
+                        // single bit flip anywhere (header, body, digest)
+                        let i = rng.below(bytes.len() as u64) as usize;
+                        bytes[i] ^= 1 << rng.below(8);
+                    }
+                    1 => {
+                        // truncate to a random prefix (possibly empty)
+                        let keep = rng.below(bytes.len() as u64) as usize;
+                        bytes.truncate(keep);
+                    }
+                    2 => {
+                        // extend with trailing junk
+                        let extra = 1 + rng.below(16);
+                        bytes.extend((0..extra).map(|_| rng.next_u64() as u8));
+                    }
+                    _ => {
+                        // splice a random window with junk
+                        let start = rng.below(bytes.len() as u64) as usize;
+                        let end = (start + 1 + rng.below(8) as usize).min(bytes.len());
+                        for b in &mut bytes[start..end] {
+                            *b = rng.next_u64() as u8;
+                        }
+                    }
+                }
+                if bytes == original {
+                    continue; // the splice happened to rewrite identical bytes
+                }
+                if unicron::checkpoint::decode(&bytes).is_ok() {
+                    return Prop::Fail(format!(
+                        "mutated checkpoint ({} -> {} bytes) silently decoded",
+                        original.len(),
+                        bytes.len()
+                    ));
+                }
+            }
+            Prop::Pass
+        },
+    );
+}
+
+#[test]
+fn delta_manifests_equal_full_rechunk() {
+    // Store equivalence property: a delta snapshot built from dirty ranges
+    // is purely an optimization — its chunk addressing must equal a full
+    // re-chunk of the new state, byte for byte, so restore paths never see
+    // a difference.
+    fn gen(rng: &mut Xoshiro256, size: usize) -> (usize, Vec<u8>, Vec<(usize, usize)>, u64) {
+        let chunk = 8 + rng.below(56) as usize;
+        let len = rng.below((size as u64 + 2) * 64) as usize;
+        let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let dirty: Vec<(usize, usize)> = (0..rng.below(4))
+            .filter(|_| len > 0)
+            .map(|_| {
+                let s = rng.below(len as u64) as usize;
+                (s, (s + 1 + rng.below(32) as usize).min(len))
+            })
+            .collect();
+        (chunk, data, dirty, rng.next_u64())
+    }
+    run(
+        "delta_manifest_equivalence",
+        Config { cases: 80, ..Default::default() },
+        gen,
+        |(chunk, data, dirty, seed)| {
+            let prev = Manifest::build(TaskId(1), 1, data, *chunk);
+            let mut rng = Xoshiro256::seed_from_u64(*seed);
+            let mut next = data.clone();
+            let ranges: Vec<std::ops::Range<usize>> = dirty.iter().map(|&(s, e)| s..e).collect();
+            for r in &ranges {
+                for b in &mut next[r.clone()] {
+                    *b = rng.next_u64() as u8;
+                }
+            }
+            let delta = Manifest::delta_from(&prev, 2, &next, &ranges);
+            let full = Manifest::build(TaskId(1), 2, &next, *chunk);
+            if delta != full {
+                return Prop::Fail(format!(
+                    "delta over {} dirty ranges diverged from full re-chunk \
+                     ({} vs {} chunks, {} bytes, {}-byte chunks)",
+                    ranges.len(),
+                    delta.chunks.len(),
+                    full.chunks.len(),
+                    next.len(),
+                    chunk
+                ));
+            }
+            Prop::Pass
         },
     );
 }

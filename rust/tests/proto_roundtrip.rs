@@ -12,6 +12,14 @@ use unicron::planner::{Plan, PlanTask};
 use unicron::proto::{Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId};
 use unicron::ser::Value;
 use unicron::simulator::{PolicyKind, Simulator};
+use unicron::transition::StateSource;
+
+const SOURCES: [StateSource; 4] = [
+    StateSource::DpReplica,
+    StateSource::InMemoryCheckpoint,
+    StateSource::LocalDiskCheckpoint,
+    StateSource::RemoteCheckpoint,
+];
 
 fn roundtrip_event(ev: &CoordEvent) {
     let text = ev.to_value().encode();
@@ -50,6 +58,13 @@ fn every_event_variant_roundtrips_for_every_error_kind() {
         }
     }
     roundtrip_event(&CoordEvent::ReplanDue);
+    // wire v6: store residency updates, across every tier vocabulary entry
+    // and non-trivial restore estimates
+    for source in SOURCES {
+        for restore_s in [0.0, 0.334, 0.1 + 0.2 /* 0.30000000000000004 */] {
+            roundtrip_event(&CoordEvent::StateResidency { task: TaskId(3), source, restore_s });
+        }
+    }
 }
 
 #[test]
@@ -93,6 +108,7 @@ fn every_action_variant_roundtrips() {
                     mtbf_per_gpu_s: 1.9e7 - k,
                     spare_value: if i % 2 == 0 { 0.0 } else { 4.2e14 + k },
                     spare_hold_cost: if i % 2 == 0 { 0.0 } else { 1.05e14 - k },
+                    state_source: SOURCES[i % SOURCES.len()],
                 },
                 layout,
             },
@@ -158,6 +174,7 @@ fn tampered_breakdowns_are_rejected_not_skipped() {
                     mtbf_per_gpu_s: 1.9e7,
                     spare_value: 0.0,
                     spare_hold_cost: 0.0,
+                    state_source: StateSource::InMemoryCheckpoint,
                 },
                 layout: Layout::new([(TaskId(0), vec![NodeId(0)]), (TaskId(1), vec![NodeId(1)])]),
             },
@@ -184,6 +201,14 @@ fn tampered_breakdowns_are_rejected_not_skipped() {
     let bad = text.replace(layout_field, "");
     assert!(bad != text, "tamper must hit the layout field: {text}");
     assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // v6: a breakdown with an unknown state source is rejected — a replayed
+    // plan must restore from a tier this build understands
+    let bad = text.replace("\"state_source\":\"inmem_ckpt\"", "\"state_source\":\"tape_vault\"");
+    assert!(bad != text, "tamper must hit the state source: {text}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // ...and one stripped of the field entirely is rejected, not defaulted
+    let bad = text.replace(",\"state_source\":\"inmem_ckpt\"", "");
+    assert!(bad != text && DecisionLog::from_bytes(bad.as_bytes()).is_err());
     // a layout entry with a mangled node id is rejected too
     let bad = text.replace("\"nodes\":[1]", "\"nodes\":[-1]");
     assert!(bad != text && DecisionLog::from_bytes(bad.as_bytes()).is_err());

@@ -26,7 +26,10 @@ use unicron::simulator::{PolicyKind, SimResult, Simulator};
 /// must stay bit-reproducible; `LargeFleetBurst` runs a 16k-node
 /// single-GPU fleet with bitwise-simultaneous SEV1 bursts, so the batched
 /// `CoordEvent::Batch` dispatch path (one consolidated replan per burst)
-/// is pinned at scale.
+/// is pinned at scale; `WarmPeerFailover` runs store-aware recovery on a
+/// quiet trace with one injected SEV1 after several checkpoint ticks, so
+/// the snapshot-store execution path (delta checkpoints, residency events,
+/// measured-tier restores) is pinned bit-for-bit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Scenario {
     A,
@@ -37,6 +40,7 @@ enum Scenario {
     Fragmented,
     RackDrain,
     LargeFleetBurst,
+    WarmPeerFailover,
 }
 
 fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
@@ -51,6 +55,22 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
         // fleet — the shape pop_simultaneous/Batch dispatch exists for;
         // lifecycle churn doesn't apply to the synthetic large fleet
         Scenario::LargeFleetBurst => return Trace::with_large_fleet(16_384, 3, 6, seed),
+        // a short quiet trace with one injected SEV1 at 2.5 h — four
+        // checkpoint ticks precede it, so the failover restores from a
+        // warm store tier; churn doesn't apply to the pinned scenario
+        Scenario::WarmPeerFailover => {
+            let tc = TraceConfig {
+                duration_s: 6.0 * 3600.0,
+                expect_sev1: 0.0,
+                expect_other: 0.0,
+                ..TraceConfig::trace_a()
+            };
+            return Trace::generate(tc, seed).with_injected_failure(
+                NodeId((seed % 16) as u32),
+                2.5 * 3600.0,
+                ErrorKind::LostConnection,
+            );
+        }
     };
     match scenario {
         Scenario::DomainBurst => {
@@ -72,7 +92,11 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
         Scenario::RackDrain => {
             trace = trace.with_rack_drain((seed % 4) as u32, 4, 86400.0, 3600.0);
         }
-        Scenario::A | Scenario::B | Scenario::HeteroCost | Scenario::LargeFleetBurst => {}
+        Scenario::A
+        | Scenario::B
+        | Scenario::HeteroCost
+        | Scenario::LargeFleetBurst
+        | Scenario::WarmPeerFailover => {}
     }
     if churn {
         // exercise the ⑤⑥ lifecycle path: two late arrivals, one departure
@@ -92,7 +116,12 @@ fn simulate(kind: PolicyKind, scenario: Scenario, seed: u64, churn: bool) -> Sim
         }
         _ => ClusterSpec::default(),
     };
-    let cfg = UnicronConfig::default();
+    // WarmPeerFailover is the store-aware scenario: checkpoints execute
+    // against the snapshot store and SEV1 failovers restore from it
+    let cfg = UnicronConfig {
+        store_aware_recovery: scenario == Scenario::WarmPeerFailover,
+        ..UnicronConfig::default()
+    };
     // HeteroCost: mixed model sizes at equal weight — replans are steered
     // by per-task transition pricing rather than priority
     let specs = match scenario {
@@ -123,6 +152,12 @@ fn diverges(a: &SimResult, b: &SimResult) -> Option<&'static str> {
     }
     if a.alerts != b.alerts {
         return Some("alerts");
+    }
+    if a.store_restores != b.store_restores {
+        return Some("store_restores");
+    }
+    if a.store_report != b.store_report {
+        return Some("store_report");
     }
     None
 }
@@ -161,6 +196,10 @@ const CORPUS: &[(PolicyKind, Scenario, u64, bool)] = &[
     // simultaneous SEV1 bursts: one consolidated CoordEvent::Batch replan
     // per burst, replayed bit-identically at scale.
     (PolicyKind::Unicron, Scenario::LargeFleetBurst, 6, false),
+    // PR 7: state-tier era — store-aware recovery (delta checkpoints,
+    // StateResidency events, measured-tier restore timing) must replay
+    // bit-identically, including the store report itself.
+    (PolicyKind::Unicron, Scenario::WarmPeerFailover, 8, false),
 ];
 
 #[test]

@@ -286,6 +286,63 @@ fn rack_drain_migrates_layouts_off_the_dying_domain() {
 }
 
 #[test]
+fn warm_peer_store_aware_run_replays_bit_identically() {
+    // Wire v6: a store-aware run — whose log carries StateResidency events
+    // and tier-priced breakdowns — replays bit-identically through a fresh
+    // Coordinator fed the same events. Short quiet trace + one injected
+    // SEV1 after several checkpoint ticks, so the store is warm.
+    let tc = TraceConfig {
+        duration_s: 6.0 * 3600.0,
+        expect_sev1: 0.0,
+        expect_other: 0.0,
+        ..TraceConfig::trace_a()
+    };
+    let trace = Trace::generate(tc, 5).with_injected_failure(
+        unicron::proto::NodeId(0),
+        2.5 * 3600.0,
+        unicron::failure::ErrorKind::LostConnection,
+    );
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig { store_aware_recovery: true, ..UnicronConfig::default() };
+    let specs = table3_case(5);
+    let inputs = plan_inputs(&cluster, &specs);
+    let sim = Simulator::builder()
+        .cluster(cluster.clone())
+        .config(cfg.clone())
+        .policy(PolicyKind::Unicron)
+        .tasks(&specs)
+        .build()
+        .run(&trace);
+    assert!(
+        sim.decision_log.events().any(|e| matches!(e, CoordEvent::StateResidency { .. })),
+        "store-aware runs must log residency updates"
+    );
+    let active = trace.initially_active(specs.len());
+    let mut coord = Coordinator::builder()
+        .config(cfg)
+        .workers(cluster.total_gpus())
+        .gpus_per_node(cluster.gpus_per_node)
+        .tasks(inputs.iter().zip(&active).filter(|(_, &a)| a).map(|(pt, _)| pt.clone()))
+        .build();
+    let steps = sim
+        .decision_log
+        .replay(&mut coord, |task| inputs.get(task.0 as usize).cloned())
+        .unwrap_or_else(|d| panic!("store-aware run diverged: {d}"));
+    assert_eq!(steps, sim.decision_log.len());
+    assert_eq!(coord.log, sim.decision_log);
+    // the SEV1 replan was priced from the resolved tier, and the tier rode
+    // the wire inside the plan's breakdown
+    assert!(
+        sim.decision_log.actions().any(|a| matches!(
+            a,
+            Action::ApplyPlan { plan, .. }
+                if plan.breakdown.state_source != unicron::transition::StateSource::DpReplica
+        )),
+        "the failover plan must carry the resolved state source"
+    );
+}
+
+#[test]
 fn decision_log_survives_the_wire() {
     // The unification property must hold across serialization: log → bytes
     // → log replays identically (the proto layer's reason for existing).
