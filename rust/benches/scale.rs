@@ -80,8 +80,8 @@ fn bench_replan_64k(traj: &mut Trajectory) {
     if let Some(st) = stats {
         // the table path carried the load: replans were mostly hits, and
         // the refreshes reused prior rows instead of re-solving the world
-        assert!(c.lookup_hits > 0, "64k replans should hit the precomputed table");
-        assert!(c.lookup_rows_reused > 0, "refreshes should reuse unchanged rows");
+        assert!(c.lookup_hits() > 0, "64k replans should hit the precomputed table");
+        assert!(c.lookup_rows_reused() > 0, "refreshes should reuse unchanged rows");
         traj.gate("replan_to_layout_64k_nodes", st.median * 1e9, FLOOR_NS);
     }
 }

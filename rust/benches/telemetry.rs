@@ -1,0 +1,121 @@
+//! Telemetry floors (observability PR): instrumentation must be near-free.
+//! Two gates, recorded as the `BENCH_PR8.json` perf-trajectory artifact
+//! (override the path with `BENCH_JSON`):
+//!
+//! * counter updates ≥ 1M/s — the hot-path `Registry::inc` is a `Cell` add
+//!   behind a pre-registered id, no hashing, no locking, no formatting;
+//! * the fully instrumented decide path (spans + phases + counters +
+//!   timeline) ≤ 1.05× the tracing-off path over the same SEV1/rejoin event
+//!   sequence — tracing reads a handful of monotonic timestamps per
+//!   decision, everything else is the decision itself.
+
+use unicron::bench::{Bencher, Trajectory};
+use unicron::config::{TaskSpec, UnicronConfig};
+use unicron::coordinator::Coordinator;
+use unicron::cost::TransitionProfile;
+use unicron::planner::PlanTask;
+use unicron::proto::{CoordEvent, NodeId, TaskId, WorkerCount};
+use unicron::telemetry::Telemetry;
+
+fn capped_task(id: u32, min: u32, cap: u32) -> PlanTask {
+    let throughput = (0..=2 * cap)
+        .map(|x| if x >= min { 1e12 * (x as f64).powf(0.9) } else { 0.0 })
+        .collect();
+    PlanTask {
+        spec: TaskSpec::new(id, "synthetic", 1.0, min).with_max_workers(cap),
+        throughput,
+        profile: TransitionProfile::flat(5.0),
+        current: WorkerCount(0),
+        fault: false,
+        fault_source: unicron::transition::StateSource::InMemoryCheckpoint,
+        fault_restore_s: None,
+    }
+}
+
+fn decide_coordinator(tracing: bool) -> Coordinator {
+    let cfg = UnicronConfig {
+        domain_batch_window_s: 0.0, // measure every event's full cycle
+        // the same nodes are lost and rejoined for thousands of iterations;
+        // quarantining them would degrade later events into no-op decides
+        // and skew the overhead ratio toward pure span cost
+        lemon_quarantine: false,
+        ..Default::default()
+    };
+    let mut c = Coordinator::builder()
+        .config(cfg)
+        .workers(256)
+        .gpus_per_node(8u32)
+        .task(capped_task(0, 8, 64))
+        .task(capped_task(1, 8, 64))
+        .telemetry(tracing)
+        .build();
+    c.handle_at(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
+    c
+}
+
+/// Floor 1: ≥ 1M counter updates/s through the public `Telemetry::inc`
+/// path — the rate every decide-path counter bump pays.
+fn bench_counter_updates(traj: &mut Trajectory) {
+    const UPDATES: u64 = 100_000;
+    const FLOOR_NS: f64 = 1_000.0; // 1 µs/update = 1M updates/s
+
+    let mut telemetry = Telemetry::new();
+    let id = telemetry.registry_mut().counter("bench.updates");
+    let mut b = Bencher::new("telemetry").with_samples(3, 20);
+    let mut expected = 0u64;
+    let stats = b.bench("counter_updates_100k", || {
+        for _ in 0..UPDATES {
+            telemetry.inc(id, 1);
+        }
+        expected += UPDATES;
+        assert_eq!(telemetry.registry().counter_value(id), expected);
+    });
+    if let Some(st) = stats {
+        traj.gate("counter_update", st.median * 1e9 / UPDATES as f64, FLOOR_NS);
+    }
+}
+
+/// Floor 2: the instrumented decide path stays within 5% of the
+/// uninstrumented one. Both coordinators replay the same lose/rejoin cycle
+/// — each event a full classify → solve/lookup → place → commit decision —
+/// and the gate is the ratio of medians (scaled ×1000 so the trajectory row
+/// stays in integral ns-style units: 1050 = 1.05×).
+fn bench_decide_overhead(traj: &mut Trajectory) {
+    const EVENTS_PER_SAMPLE: usize = 32;
+    const FLOOR_RATIO_X1000: f64 = 1_050.0; // 1.05× the uninstrumented path
+
+    let run_cycle = |tracing: bool| {
+        let mut c = decide_coordinator(tracing);
+        let mut b = Bencher::new("telemetry").with_samples(3, 20);
+        let name = if tracing {
+            "decide_cycle_instrumented"
+        } else {
+            "decide_cycle_uninstrumented"
+        };
+        let mut t = 100.0;
+        let stats = b.bench(name, || {
+            for i in 0..EVENTS_PER_SAMPLE as u32 {
+                let node = NodeId(i % 8);
+                t += 10.0;
+                let lost = c.handle_at(CoordEvent::NodeLost { node }, t);
+                assert!(!lost.is_empty(), "a SEV1 must produce actions");
+                t += 10.0;
+                c.handle_at(CoordEvent::NodeJoined { node }, t);
+            }
+        });
+        stats.map(|st| st.median)
+    };
+
+    let instrumented = run_cycle(true);
+    let uninstrumented = run_cycle(false);
+    if let (Some(on), Some(off)) = (instrumented, uninstrumented) {
+        traj.gate("decide_overhead_ratio_x1000", on / off * 1_000.0, FLOOR_RATIO_X1000);
+    }
+}
+
+fn main() {
+    let mut traj = Trajectory::new();
+    bench_counter_updates(&mut traj);
+    bench_decide_overhead(&mut traj);
+    traj.finish("BENCH_PR8.json");
+}

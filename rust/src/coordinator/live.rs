@@ -44,10 +44,14 @@ use crate::membership::{membership_event, MembershipEvent, NODES_PREFIX};
 use crate::planner::{RefreshStats, ScenarioLookup};
 use crate::ser::Value;
 use crate::store::{ChunkId, Manifest, SnapshotStore, Tier};
-use crate::util::Clock;
+use crate::util::{Clock, Level};
 
 pub const STATUS_PREFIX: &str = "/status/";
 pub const CMD_PREFIX: &str = "/cmd/";
+/// Schema version stamped (as `report_version`, beside `at_s`) on every
+/// `/fleet/*` report the loop publishes — one envelope for health, layout,
+/// store, and metrics, so tooling can parse any of them uniformly.
+pub const REPORT_VERSION: u64 = 1;
 /// Fleet-health report published by the loop (ROADMAP fleet follow-up):
 /// per-node history, per-domain MTBF estimates, and the cluster-wide EWMA
 /// MTBF estimate, as JSON.
@@ -60,6 +64,10 @@ pub const LAYOUT_KEY: &str = "/fleet/layout";
 /// layout: per-tier occupancy and measured transfer stats, the dedup ratio
 /// the delta checkpoints achieve, and restore hit/miss counters.
 pub const STORE_KEY: &str = "/fleet/store";
+/// The telemetry report (DESIGN.md §14): instrument registry snapshot,
+/// recent decision spans, the incident timeline, and the structured log
+/// ring — what `unicron obs --addr` renders into an incident narrative.
+pub const METRICS_KEY: &str = "/fleet/metrics";
 
 /// Timed work the live loop schedules on the shared engine queue.
 #[derive(Debug, Clone, Copy)]
@@ -139,9 +147,13 @@ impl CoordinatorLive {
                 // land a finished background rebuild (never blocks)
                 if inflight.as_ref().is_some_and(JoinHandle::is_finished) {
                     match inflight.take().unwrap().join() {
-                        Ok((epoch, lookup, _stats)) => {
+                        Ok((epoch, lookup, stats)) => {
                             if coord.install_lookup(epoch, lookup) {
                                 refreshes2.fetch_add(1, Ordering::Relaxed);
+                                // the background path's row accounting lands
+                                // in the same registry the synchronous
+                                // refresh feeds
+                                coord.note_refresh_stats(&stats);
                             }
                         }
                         Err(_) => {
@@ -149,9 +161,11 @@ impl CoordinatorLive {
                             // it once and stop respawning the identical job
                             // every period (replans fall back to live solves)
                             refresh_broken = true;
-                            eprintln!(
-                                "coordinator: background plan refresh panicked; \
-                                 disabling background precompute"
+                            coord.telemetry().log(
+                                Level::Error,
+                                "live.plan_refresh",
+                                "background plan refresh panicked; disabling \
+                                 background precompute (replans fall back to live solves)",
                             );
                         }
                     }
@@ -168,9 +182,11 @@ impl CoordinatorLive {
                                     inflight = Some(std::thread::spawn(move || job.compute()));
                                 }
                             }
-                            publish_fleet_health(&store2, &coord);
-                            publish_layout(&store2, &coord);
-                            publish_store(&store2, &state_tier);
+                            let now = clock2.now();
+                            publish_fleet_health(&store2, &coord, now);
+                            publish_layout(&store2, &coord, now);
+                            publish_store(&store2, &state_tier, now);
+                            publish_metrics(&store2, &coord, now);
                             timers.schedule(clock2.now() + refresh_period, LoopTask::PlanRefresh);
                         }
                         LoopTask::ReplanFlush => {
@@ -340,12 +356,21 @@ fn parse_status(key: &str, value: &str) -> Option<CoordEvent> {
     Some(CoordEvent::ErrorReport { node, task, kind })
 }
 
+/// Stamp the shared `/fleet/*` envelope ([`REPORT_VERSION`] +
+/// publication time) onto a report body and put it under `key`. Every
+/// fleet report goes through here, so every one parses with the same two
+/// fields — `background_plan_refresh_keeps_lookup_warm` asserts it.
+fn publish_report(store: &Store, key: &str, report: Value, at_s: f64) {
+    let report = report.with("report_version", REPORT_VERSION).with("at_s", at_s);
+    let _ = store.put(key, &report.encode(), None);
+}
+
 /// Publish the fleet-health report under [`FLEET_HEALTH_KEY`]: the
 /// cluster-wide EWMA MTBF estimate the cost ledger prices horizons with,
 /// plus each node's lifetime history (failures, repairs, lemon score,
 /// quarantine/release flags, per-node MTBF estimate). Operators and
 /// tooling read it straight from the kvstore.
-fn publish_fleet_health(store: &Store, coord: &Coordinator) {
+fn publish_fleet_health(store: &Store, coord: &Coordinator, at_s: f64) {
     let nodes: Vec<Value> = coord
         .fleet
         .nodes()
@@ -382,7 +407,7 @@ fn publish_fleet_health(store: &Store, coord: &Coordinator) {
         .with("mtbf_observations", coord.fleet.mtbf_observations())
         .with("nodes", Value::Arr(nodes))
         .with("domains", Value::Arr(domains));
-    let _ = store.put(FLEET_HEALTH_KEY, &report.encode(), None);
+    publish_report(store, FLEET_HEALTH_KEY, report, at_s);
 }
 
 /// `/status/<node>/<seq>` checkpoint announcement -> a manifest for the
@@ -415,21 +440,28 @@ fn parse_checkpoint(key: &str, value: &str) -> Option<(Tier, Option<NodeId>, Man
 }
 
 /// Publish the state-tier report under [`STORE_KEY`].
-fn publish_store(store: &Store, state_tier: &SnapshotStore) {
-    let _ = store.put(STORE_KEY, &state_tier.report().encode(), None);
+fn publish_store(store: &Store, state_tier: &SnapshotStore, at_s: f64) {
+    publish_report(store, STORE_KEY, state_tier.report(), at_s);
+}
+
+/// Publish the telemetry report under [`METRICS_KEY`]: the coordinator's
+/// instrument registry, recent decision spans, the incident timeline, and
+/// the structured log ring (DESIGN.md §14).
+fn publish_metrics(store: &Store, coord: &Coordinator, at_s: f64) {
+    publish_report(store, METRICS_KEY, coord.telemetry().metrics_value(), at_s);
 }
 
 /// Publish the authoritative cluster map under [`LAYOUT_KEY`]: the per-task
 /// node sets of the last committed plan, plus the placeable pool the next
 /// layout can draw from.
-fn publish_layout(store: &Store, coord: &Coordinator) {
+fn publish_layout(store: &Store, coord: &Coordinator, at_s: f64) {
     let report = Value::obj()
         .with("tasks", coord.layout().to_value())
         .with(
             "placeable",
             coord.placeable_nodes().iter().map(|n| n.0).collect::<Vec<u32>>(),
         );
-    let _ = store.put(LAYOUT_KEY, &report.encode(), None);
+    publish_report(store, LAYOUT_KEY, report, at_s);
 }
 
 /// Publish agent-executable actions under `/cmd/<node>/<seq>`.
@@ -594,6 +626,30 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         };
         assert_eq!(occupied, 1048576, "one announced megabyte resident in peer memory");
+        // one schema for every /fleet/* report: each value parses as JSON
+        // and carries the shared envelope (report_version + at_s)
+        let reports = live.store.get_prefix("/fleet/");
+        for key in [FLEET_HEALTH_KEY, LAYOUT_KEY, STORE_KEY, METRICS_KEY] {
+            assert!(reports.iter().any(|(k, _)| k == key), "{key} must be published");
+        }
+        for (key, raw) in &reports {
+            let v = Value::parse(raw).unwrap_or_else(|e| panic!("{key} is not JSON: {e}"));
+            assert_eq!(
+                v.get("report_version").and_then(Value::as_u64),
+                Some(REPORT_VERSION),
+                "{key} missing the shared report_version"
+            );
+            assert!(
+                v.get("at_s").and_then(Value::as_f64).is_some_and(|t| t >= 0.0),
+                "{key} missing the shared at_s stamp"
+            );
+        }
+        // the metrics report carries the telemetry sections obs renders
+        let (_, raw) = reports.iter().find(|(k, _)| k == METRICS_KEY).unwrap();
+        let v = Value::parse(raw).unwrap();
+        for key in ["registry", "spans", "timeline", "logs"] {
+            assert!(v.get(key).is_some(), "metrics report missing {key}");
+        }
         live.shutdown();
     }
 }

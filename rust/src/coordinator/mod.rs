@@ -59,6 +59,7 @@ use crate::planner::{solve, HorizonInputs, PlanTask, RefreshStats, ScenarioLooku
 pub use crate::proto::{
     Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId, WorkerCount,
 };
+use crate::telemetry::{CounterId, GaugeId, Phase, SpanPlan, Telemetry};
 
 /// Per-(task, node) escalation bookkeeping.
 #[derive(Debug, Default, Clone)]
@@ -105,6 +106,29 @@ impl PlanRefreshJob {
     }
 }
 
+/// The coordinator's instrument handles in the telemetry [`Registry`](crate::telemetry::Registry)
+/// — registered once at build time, bumped on the hot path (DESIGN.md §14).
+#[derive(Debug, Clone, Copy)]
+struct CoordMetrics {
+    /// Events dispatched through [`Coordinator::handle_at`].
+    events: CounterId,
+    /// Plans committed ([`Action::ApplyPlan`]).
+    replans: CounterId,
+    /// Replans served from the precomputed table (the §5.2 hot path).
+    lookup_hits: CounterId,
+    /// Replans that fell back to a fresh DP solve.
+    solve_calls: CounterId,
+    /// Table rows copied from a retired table by the delta refresh.
+    rows_reused: CounterId,
+    /// Table rows the delta refresh actually re-solved.
+    rows_solved: CounterId,
+    /// Members delivered inside [`CoordEvent::Batch`] envelopes.
+    batch_members: CounterId,
+    /// The fleet's effective per-GPU MTBF estimate (already an EWMA —
+    /// alpha 1.0 makes the gauge a last-value mirror).
+    mtbf_gauge: GaugeId,
+}
+
 /// Staged construction of a [`Coordinator`] — replaces the old positional
 /// `Coordinator::new(cfg, workers, gpus_per_node)` (DESIGN.md §7).
 #[derive(Debug, Default)]
@@ -113,6 +137,7 @@ pub struct CoordinatorBuilder {
     workers: WorkerCount,
     gpus_per_node: Option<WorkerCount>,
     tasks: Vec<PlanTask>,
+    tracing: Option<bool>,
 }
 
 impl CoordinatorBuilder {
@@ -145,6 +170,15 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Switch per-decision span/timeline tracing (default on). Counters and
+    /// gauges stay live either way; tracing is observe-only, so decisions
+    /// are bit-identical with it on or off
+    /// (`rust/tests/telemetry_replay.rs` pins this).
+    pub fn telemetry(mut self, tracing: bool) -> Self {
+        self.tracing = Some(tracing);
+        self
+    }
+
     pub fn build(self) -> Coordinator {
         let fleet = FleetModel::from_config(&self.cfg);
         let cost = CostModel::from_config(&self.cfg);
@@ -155,6 +189,18 @@ impl CoordinatorBuilder {
         // through NodeJoined/NodeLost as agents register.
         let placeable: BTreeSet<NodeId> =
             (0..self.workers.0.div_ceil(gpn)).map(NodeId).collect();
+        let mut telemetry = Telemetry::with_tracing(self.tracing.unwrap_or(true));
+        let reg = telemetry.registry_mut();
+        let metrics = CoordMetrics {
+            events: reg.counter("coord.events"),
+            replans: reg.counter("coord.replans"),
+            lookup_hits: reg.counter("plan.lookup_hits"),
+            solve_calls: reg.counter("plan.solve_calls"),
+            rows_reused: reg.counter("plan.lookup_rows_reused"),
+            rows_solved: reg.counter("plan.lookup_rows_solved"),
+            batch_members: reg.counter("coord.batch_members"),
+            mtbf_gauge: reg.gauge("fleet.mtbf_per_gpu_s", 1.0),
+        };
         let mut coord = Coordinator {
             fleet,
             cost,
@@ -175,10 +221,8 @@ impl CoordinatorBuilder {
             lookup_inputs: None,
             stale_lookup: None,
             plan_epoch: 0,
-            lookup_hits: 0,
-            solve_calls: 0,
-            lookup_rows_reused: 0,
-            lookup_rows_solved: 0,
+            telemetry,
+            metrics,
             place_cache: None,
             batch_depth: 0,
             batch_replan: None,
@@ -254,15 +298,14 @@ pub struct Coordinator {
     /// Bumped whenever the lookup goes stale — guards stale background
     /// [`PlanRefreshJob`] results against racing a state change.
     plan_epoch: u64,
-    /// Replans served from the precomputed table (observability/benches).
-    pub lookup_hits: u64,
-    /// Replans that fell back to a fresh DP solve.
-    pub solve_calls: u64,
-    /// Table rows copied from a retired table by the delta refresh
-    /// (observability: the incremental-solving win).
-    pub lookup_rows_reused: u64,
-    /// Table rows the delta refresh actually re-solved.
-    pub lookup_rows_solved: u64,
+    /// The observability subsystem (DESIGN.md §14): instrument registry
+    /// (which absorbed the old ad-hoc `lookup_hits`/`solve_calls`/
+    /// `lookup_rows_*` counter fields), per-decision spans, the incident
+    /// timeline, and the structured log ring. Strictly observe-only:
+    /// nothing in it feeds back into a decision.
+    telemetry: Telemetry,
+    /// Instrument handles registered at build time.
+    metrics: CoordMetrics,
     /// Warm-start state for [`placement::assign_cached`]: the free-node map
     /// carried between replans so an incremental solve touches only what
     /// changed. Purely a cache — results are bit-identical to from-scratch
@@ -387,8 +430,7 @@ impl Coordinator {
             &self.cost,
             prev.as_ref().map(|(inputs, table)| (inputs, table)),
         );
-        self.lookup_rows_reused += stats.reused as u64;
-        self.lookup_rows_solved += stats.solved as u64;
+        self.note_refresh_stats(&stats);
         self.lookup = Some(lookup);
         self.lookup_inputs = Some(HorizonInputs::capture(&ordered, &self.cost));
         self.stale_lookup = None;
@@ -465,6 +507,47 @@ impl Coordinator {
         &self.cost
     }
 
+    /// The observability subsystem: instrument registry, decision spans,
+    /// incident timeline, structured log (DESIGN.md §14).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// Mutable telemetry access (instrument registration, driver wiring).
+    pub fn telemetry_mut(&mut self) -> &mut Telemetry {
+        &mut self.telemetry
+    }
+
+    /// Replans served from the precomputed table (the §5.2 hot path).
+    pub fn lookup_hits(&self) -> u64 {
+        self.telemetry.registry().counter_value(self.metrics.lookup_hits)
+    }
+
+    /// Replans that fell back to a fresh DP solve.
+    pub fn solve_calls(&self) -> u64 {
+        self.telemetry.registry().counter_value(self.metrics.solve_calls)
+    }
+
+    /// Table rows copied from a retired table by the delta refresh
+    /// (observability: the incremental-solving win).
+    pub fn lookup_rows_reused(&self) -> u64 {
+        self.telemetry.registry().counter_value(self.metrics.rows_reused)
+    }
+
+    /// Table rows the delta refresh actually re-solved.
+    pub fn lookup_rows_solved(&self) -> u64 {
+        self.telemetry.registry().counter_value(self.metrics.rows_solved)
+    }
+
+    /// Fold a table refresh's row accounting into the registry — the
+    /// synchronous [`Coordinator::precompute_event_plans`] path does this
+    /// itself; the live driver calls it when a background
+    /// [`PlanRefreshJob`] lands.
+    pub fn note_refresh_stats(&self, stats: &RefreshStats) {
+        self.telemetry.inc(self.metrics.rows_reused, stats.reused as u64);
+        self.telemetry.inc(self.metrics.rows_solved, stats.solved as u64);
+    }
+
     /// The authoritative cluster map: which concrete nodes serve each task
     /// (empty until the first plan commits).
     pub fn layout(&self) -> &Layout {
@@ -496,11 +579,17 @@ impl Coordinator {
     /// (and therefore the ledger's horizon) tightens for the *next*
     /// decision, and the stale table is invalidated.
     pub fn handle_at(&mut self, event: CoordEvent, at_s: f64) -> Vec<Action> {
+        self.telemetry.inc(self.metrics.events, 1);
+        self.telemetry.span_begin(event.label(), at_s);
         self.fleet.tick(); // the fleet's event clock (lemon-score decay)
         let actions = self.apply_event(&event, at_s);
         if at_s > self.last_at_s {
             self.last_at_s = at_s;
         }
+        // Observe-only: the span and timeline read the decision, never feed
+        // it — `tests/telemetry_replay.rs` pins tracing-on ≡ tracing-off.
+        let span = self.telemetry.span_end(self.plan_epoch, actions.len());
+        self.telemetry.timeline_record(at_s, &event, &actions, span.as_ref());
         self.log.record(at_s, event, actions.clone());
         actions
     }
@@ -513,8 +602,11 @@ impl Coordinator {
         // Classify *before* dispatch: dispatch itself isolates the node, so
         // whether this report is fresh or a duplicate about an
         // already-fenced node must be decided up front.
+        self.telemetry.phase_begin(Phase::Detect);
         let observation = self.classify_observation(event);
+        self.telemetry.phase_end(Phase::Detect);
         let actions = self.dispatch(event, at_s);
+        self.telemetry.phase_begin(Phase::Price);
         if let Some((node, plan_ending)) = observation {
             // per-node inter-failure estimate (fleet-health observability)
             self.fleet.observe_failure_time(node, at_s);
@@ -526,11 +618,13 @@ impl Coordinator {
                 && self.fleet.observe_cluster_failure(at_s, self.available_workers.max(1))
             {
                 let est = self.fleet.mtbf_per_gpu_estimate_s();
+                self.telemetry.observe_gauge(self.metrics.mtbf_gauge, est);
                 if self.cost.set_mtbf_per_gpu_s(est) {
                     self.invalidate_lookup(); // plans priced with the old horizon
                 }
             }
         }
+        self.telemetry.phase_end(Phase::Price);
         actions
     }
 
@@ -669,6 +763,7 @@ impl Coordinator {
                 // [`DecisionLog::replay`] re-admits tasks for *top-level*
                 // `TaskLaunched` entries only.
                 self.batch_depth += 1;
+                self.telemetry.inc(self.metrics.batch_members, events.len() as u64);
                 let mut actions = Vec::new();
                 for ev in events {
                     actions.extend(self.apply_event(ev, at_s));
@@ -746,7 +841,10 @@ impl Coordinator {
             self.placeable.remove(&node);
             return vec![Action::NodeQuarantined { node }];
         }
-        match self.spare_decision() {
+        self.telemetry.phase_begin(Phase::Price);
+        let decision = self.spare_decision();
+        self.telemetry.phase_end(Phase::Price);
+        match decision {
             (SpareDecision::Retain, terms) => {
                 self.isolated.retain(|&n| n != node);
                 self.pooled.push(node);
@@ -888,6 +986,7 @@ impl Coordinator {
         // grids cover everything in range; event-horizon tables exactly the
         // one-event-away scenarios) — anything else re-solves live. Both
         // paths produce bit-identical plans for the same state.
+        self.telemetry.phase_begin(Phase::Lookup);
         let precomputed = match single_fault {
             Some(fault_idx) if self.lookup_is_fresh() => self
                 .lookup
@@ -896,18 +995,23 @@ impl Coordinator {
                 .cloned(),
             _ => None,
         };
+        self.telemetry.phase_end(Phase::Lookup);
+        let lookup_hit = precomputed.is_some();
         let mut plan = match precomputed {
             Some(plan) => {
-                self.lookup_hits += 1;
+                self.telemetry.inc(self.metrics.lookup_hits, 1);
                 plan
             }
             None => {
-                self.solve_calls += 1;
+                self.telemetry.inc(self.metrics.solve_calls, 1);
+                self.telemetry.phase_begin(Phase::Solve);
                 let mut ordered: Vec<PlanTask> = self.tasks.values().cloned().collect();
                 for &i in &fault_indices {
                     ordered[i].fault = true;
                 }
-                solve(&ordered, self.available_workers, &self.cost)
+                let plan = solve(&ordered, self.available_workers, &self.cost);
+                self.telemetry.phase_end(Phase::Solve);
+                plan
             }
         };
         // Placement: turn the plan's counts into the concrete cluster map.
@@ -915,6 +1019,7 @@ impl Coordinator {
         // assignment solver reads only (previous layout, counts, placeable
         // nodes) — so a table commit and a live solve produce bit-identical
         // layouts for the same state.
+        self.telemetry.phase_begin(Phase::Place);
         let demands: Vec<(TaskId, u32)> =
             self.tasks.keys().copied().zip(plan.assignment.iter().copied()).collect();
         let nodes = self.placeable_nodes();
@@ -933,6 +1038,7 @@ impl Coordinator {
         };
         self.layout = layout.clone();
         plan.layout = layout;
+        self.telemetry.phase_end(Phase::Place);
         // commit the new assignments; clear fault flags (handled). The
         // precomputed table remains valid only if nothing actually moved.
         let mut changed = false;
@@ -944,6 +1050,18 @@ impl Coordinator {
         if changed {
             self.invalidate_lookup();
         }
+        self.telemetry.inc(self.metrics.replans, 1);
+        self.telemetry.note_plan(SpanPlan {
+            reason: reason.name(),
+            objective: plan.objective,
+            running_reward: plan.breakdown.running_reward,
+            transition_penalty: plan.breakdown.transition_penalty,
+            detection_penalty: plan.breakdown.detection_penalty,
+            state_source: plan.breakdown.state_source.name(),
+            workers_used: plan.workers_used,
+            transition_s: plan.transition_seconds(),
+            lookup_hit,
+        });
         vec![Action::ApplyPlan { plan, reason }]
     }
 }
@@ -1125,11 +1243,11 @@ mod tests {
             assert_eq!(a, b, "divergence at {ev:?}");
         }
         assert_eq!(warm.log, cold.log);
-        assert!(warm.lookup_hits >= 6, "replans should hit the table: {}", warm.lookup_hits);
+        assert!(warm.lookup_hits() >= 6, "replans should hit the table: {}", warm.lookup_hits());
         // the one allowed miss: TaskFinished shrinks the task set between the
         // precompute and the replan, so that replan must re-solve
-        assert!(warm.solve_calls <= 1, "unexpected hot-path solves: {}", warm.solve_calls);
-        assert!(cold.lookup_hits == 0 && cold.solve_calls > 0);
+        assert!(warm.solve_calls() <= 1, "unexpected hot-path solves: {}", warm.solve_calls());
+        assert!(cold.lookup_hits() == 0 && cold.solve_calls() > 0);
     }
 
     #[test]
@@ -1178,7 +1296,7 @@ mod tests {
         assert!(c.plan_refresh_job().is_none());
         // the installed table serves the next replan from the hot path
         c.handle(CoordEvent::NodeJoined { node: NodeId(5) });
-        assert!(c.lookup_hits >= 1, "installed table must serve replans");
+        assert!(c.lookup_hits() >= 1, "installed table must serve replans");
     }
 
     #[test]
@@ -1369,9 +1487,9 @@ mod tests {
         }
         assert_eq!(warm.log, cold.log);
         // the bootstrap launch solves (no table yet); everything after hits
-        assert!(warm.lookup_hits >= 3, "horizon hits: {}", warm.lookup_hits);
-        assert!(warm.solve_calls <= 1, "horizon misses: {}", warm.solve_calls);
-        assert!(cold.lookup_hits == 0 && cold.solve_calls >= 4);
+        assert!(warm.lookup_hits() >= 3, "horizon hits: {}", warm.lookup_hits());
+        assert!(warm.solve_calls() <= 1, "horizon misses: {}", warm.solve_calls());
+        assert!(cold.lookup_hits() == 0 && cold.solve_calls() >= 4);
     }
 
     #[test]
@@ -1487,8 +1605,8 @@ mod tests {
             .build();
         c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
         c.precompute_event_plans();
-        assert_eq!(c.lookup_rows_reused, 0, "nothing to delta against yet");
-        let cold_rows = c.lookup_rows_solved;
+        assert_eq!(c.lookup_rows_reused(), 0, "nothing to delta against yet");
+        let cold_rows = c.lookup_rows_solved();
         assert_eq!(cold_rows, 2 + 3, "m+3 event-horizon rows");
         // SEV1 shrinks the pool 32 -> 24, but the caps bind: the replan is
         // a table hit and the committed counts do not move
@@ -1498,12 +1616,12 @@ mod tests {
         c.precompute_event_plans();
         // the shifted horizon shares two no-fault keys (24, 32) with the
         // previous one — copied, not re-solved
-        assert_eq!(c.lookup_rows_reused, 2, "overlapping rows must be reused");
-        assert_eq!(c.lookup_rows_solved, cold_rows + 3);
+        assert_eq!(c.lookup_rows_reused(), 2, "overlapping rows must be reused");
+        assert_eq!(c.lookup_rows_solved(), cold_rows + 3);
         // and the refreshed table still serves the next replan exactly
-        let before = c.lookup_hits;
+        let before = c.lookup_hits();
         c.handle(CoordEvent::NodeLost { node: NodeId(2) });
-        assert_eq!(c.lookup_hits, before + 1);
+        assert_eq!(c.lookup_hits(), before + 1);
     }
 
     #[test]
@@ -1748,5 +1866,58 @@ mod tests {
         assert_eq!(c.gpus_per_node(), WorkerCount(8), "default GPUs per node");
         assert!(c.has_tasks());
         assert_eq!(c.task_assignment(TaskId(4)), Some(WorkerCount(0)));
+    }
+
+    #[test]
+    fn sev1_decision_records_a_span_and_an_incident() {
+        // DESIGN.md §14: every handle_at cycle leaves a DecisionSpan, and a
+        // SEV1 failure opens an incident that the replan closes — with the
+        // committed plan's terms riding both.
+        let mut c = coord(32);
+        c.handle_at(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
+        c.handle_at(
+            CoordEvent::ErrorReport { node: NodeId(1), task: TaskId(0), kind: ErrorKind::EccError },
+            100.0,
+        );
+        let spans = c.telemetry().spans();
+        assert_eq!(spans.len(), 2, "one span per decision");
+        let sev1 = &spans[1];
+        assert_eq!(sev1.event, "error_report");
+        assert_eq!(sev1.at_s, 100.0);
+        assert!(sev1.actions >= 2, "isolate + alert + replan: {}", sev1.actions);
+        let plan = sev1.plan.as_ref().expect("the SEV1 replan rides the span");
+        assert_eq!(plan.reason, "sev1_failure");
+        assert!(plan.objective > 0.0);
+        assert!(!plan.lookup_hit, "no table was precomputed");
+        let timeline = c.telemetry().timeline();
+        assert!(timeline.open_incidents().is_empty(), "the replan closed the incident");
+        let incidents = timeline.incidents();
+        assert_eq!(incidents.len(), 1);
+        let inc = &incidents[0];
+        assert_eq!(inc.node, NodeId(1));
+        assert_eq!(inc.kind, "ecc_error");
+        assert!(inc.replan.is_some() && inc.recovered_at_s.is_some());
+        // the narrative renders without error from live state
+        let text = timeline.render().expect("timeline must render");
+        assert!(text.contains("ecc_error"), "{text}");
+
+        // tracing off: decisions identical, nothing recorded
+        let mut quiet = Coordinator::builder()
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .task(plan_task(0, 2, 16, 48))
+            .task(plan_task(1, 2, 16, 48))
+            .telemetry(false)
+            .build();
+        quiet.handle_at(CoordEvent::TaskLaunched { task: TaskId(0) }, 0.0);
+        quiet.handle_at(
+            CoordEvent::ErrorReport { node: NodeId(1), task: TaskId(0), kind: ErrorKind::EccError },
+            100.0,
+        );
+        assert!(quiet.telemetry().spans().is_empty());
+        assert!(quiet.telemetry().timeline().incidents().is_empty());
+        assert_eq!(quiet.log, c.log, "tracing must not change decisions");
+        // counters stay live either way
+        assert_eq!(quiet.solve_calls(), c.solve_calls());
     }
 }

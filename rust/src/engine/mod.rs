@@ -103,6 +103,13 @@ impl<E> EventQueue<E> {
         self.heap.len() - self.canceled.len()
     }
 
+    /// Lifetime count of events ever scheduled (including popped and
+    /// canceled ones) — with [`EventQueue::len`], the queue's contribution
+    /// to a `/fleet/metrics` report: total throughput and current depth.
+    pub fn scheduled_total(&self) -> u64 {
+        self.seq
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -371,6 +378,19 @@ mod tests {
         assert_eq!(q.pop_simultaneous(), vec![(4.0, 1), (4.0, 2), (4.0, 3)]);
         assert_eq!(q.now(), 4.0, "now advances to the burst instant");
         assert!(q.pop_simultaneous().is_empty());
+    }
+
+    #[test]
+    fn scheduled_total_counts_lifetime_events() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.scheduled_total(), 0);
+        let a = q.schedule(1.0, ());
+        q.schedule(2.0, ());
+        q.cancel(a);
+        q.pop();
+        // cancels and pops shrink the depth, never the lifetime count
+        assert_eq!(q.scheduled_total(), 2);
+        assert_eq!(q.len(), 0);
     }
 
     #[test]

@@ -28,6 +28,8 @@
 //! * topology: [`placement`] — the min-churn node-to-task assignment
 //!   solver and the [`placement::Layout`] cluster map every committed plan
 //!   carries (DESIGN.md §10)
+//! * observability: [`telemetry`] — typed instruments, per-decision span
+//!   tracing, and the incident timeline (DESIGN.md §14)
 //! * execution: [`runtime`], [`trainer`], [`data`]
 //! * evaluation: [`simulator`] (environment model around the production
 //!   coordinator), [`repro`]
@@ -59,6 +61,7 @@ pub mod runtime;
 pub mod ser;
 pub mod simulator;
 pub mod store;
+pub mod telemetry;
 pub mod trainer;
 pub mod transition;
 pub mod util;

@@ -7,17 +7,22 @@
 //!   plan             solve a multi-task reconfiguration plan (Table 3 cases)
 //!   perfmodel        query the Megatron cost model T(t, x)
 //!   coordinator      start a live coordinator (TCP kvstore + event loop)
+//!   obs              render an incident timeline from a recorded
+//!                    DecisionLog or a live session's /fleet/metrics
 
 use std::process::ExitCode;
 use std::sync::Arc;
 
 use unicron::cli::{usage, Args, OptSpec};
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
-use unicron::coordinator::live::CoordinatorLive;
-use unicron::coordinator::Coordinator;
+use unicron::coordinator::live::{CoordinatorLive, METRICS_KEY, REPORT_VERSION};
+use unicron::coordinator::{Coordinator, DecisionLog};
 use unicron::failure::{Trace, TraceConfig};
+use unicron::kvstore::net::KvClient;
 use unicron::perfmodel::best_config;
+use unicron::ser::Value;
 use unicron::simulator::{PolicyKind, Simulator};
+use unicron::telemetry::Timeline;
 use unicron::trainer::{DpTrainer, LrSchedule, TrainerConfig};
 use unicron::util::{fmt_duration, fmt_si, RealClock};
 
@@ -39,6 +44,7 @@ fn main() -> ExitCode {
         "plan" => cmd_plan(&rest),
         "perfmodel" => cmd_perfmodel(&rest),
         "coordinator" => cmd_coordinator(&rest),
+        "obs" => cmd_obs(&rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -64,6 +70,7 @@ fn print_help() {
     println!("  plan               multi-task WAF plan for a Table 3 case");
     println!("  perfmodel          query T(model, gpus) and the best 3D config");
     println!("  coordinator        start a live coordinator (TCP)");
+    println!("  obs                render an incident timeline (--log file | --addr host:port)");
 }
 
 fn cmd_repro(argv: &[String]) -> Result<(), String> {
@@ -173,6 +180,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         OptSpec { name: "policy", help: "unicron|megatron|oobleck|varuna|bamboo|all", takes_value: true, default: Some("all") },
         OptSpec { name: "case", help: "Table 3 case (1-5)", takes_value: true, default: Some("5") },
         OptSpec { name: "seed", help: "trace seed", takes_value: true, default: Some("42") },
+        OptSpec { name: "record", help: "write the run's DecisionLog JSON here (single policy)", takes_value: true, default: None },
     ];
     let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
     let tc = match args.str("trace").unwrap() {
@@ -190,6 +198,10 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         "all" => PolicyKind::all().to_vec(),
         name => vec![parse_policy(name)?],
     };
+    let record = args.get("record");
+    if record.is_some() && kinds.len() != 1 {
+        return Err("--record needs a single --policy (the log is one policy's run)".into());
+    }
     for kind in kinds {
         let r = Simulator::builder()
             .cluster(cluster.clone())
@@ -206,6 +218,11 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             r.reduction() * 100.0,
             r.transitions.len()
         );
+        if let Some(path) = record {
+            std::fs::write(path, r.decision_log.to_bytes())
+                .map_err(|e| format!("write {path}: {e}"))?;
+            println!("recorded {} decisions to {path}", r.decision_log.len());
+        }
     }
     Ok(())
 }
@@ -284,6 +301,51 @@ fn cmd_perfmodel(argv: &[String]) -> Result<(), String> {
         }
         None => println!("infeasible: {} does not fit on {gpus} GPUs", model.name),
     }
+    Ok(())
+}
+
+/// `unicron obs` — reconstruct the incident narrative (failure → detection
+/// → replan → transition → recovered) either from a recorded
+/// [`DecisionLog`] (`--log`) or from a live session's `/fleet/metrics`
+/// report (`--addr`). Render errors (non-reconciling cost terms, bad
+/// timestamps) exit non-zero — the CI smoke run relies on that.
+fn cmd_obs(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "log", help: "recorded DecisionLog JSON file", takes_value: true, default: None },
+        OptSpec { name: "addr", help: "live coordinator host:port (reads /fleet/metrics)", takes_value: true, default: None },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let timeline = match (args.get("log"), args.get("addr")) {
+        (Some(path), None) => {
+            let bytes = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+            let log = DecisionLog::from_bytes(&bytes).map_err(|e| e.to_string())?;
+            println!("replaying {} recorded decisions from {path}\n", log.len());
+            Timeline::from_log(&log)
+        }
+        (None, Some(addr)) => {
+            let mut kv = KvClient::connect(addr).map_err(|e| e.to_string())?;
+            let pairs = kv.get_prefix(METRICS_KEY).map_err(|e| e.to_string())?;
+            let (_, raw) = pairs
+                .iter()
+                .find(|(k, _)| k == METRICS_KEY)
+                .ok_or("no /fleet/metrics report published yet")?;
+            let v = Value::parse(raw).map_err(|e| e.to_string())?;
+            let version = v
+                .get("report_version")
+                .and_then(Value::as_u64)
+                .ok_or("metrics report missing report_version")?;
+            if version != REPORT_VERSION {
+                return Err(format!(
+                    "metrics report_version {version} (this binary speaks {REPORT_VERSION})"
+                ));
+            }
+            let at = v.get("at_s").and_then(Value::as_f64).unwrap_or(0.0);
+            println!("live /fleet/metrics from {addr} (published at t={at:.1}s)\n");
+            Timeline::from_value(v.get("timeline").ok_or("metrics report missing timeline")?)?
+        }
+        _ => return Err("obs needs exactly one of --log <path> or --addr <host:port>".into()),
+    };
+    print!("{}", timeline.render()?);
     Ok(())
 }
 

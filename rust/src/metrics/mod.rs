@@ -118,7 +118,10 @@ impl Figure {
     }
 
     /// Terminal line chart (one char per column, one glyph per series).
+    /// Degenerate dimensions are clamped to a 1×1 plot area rather than
+    /// underflowing the grid math.
     pub fn ascii_chart(&self, width: usize, height: usize) -> String {
+        let (width, height) = (width.max(1), height.max(1));
         let glyphs = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
         let all: Vec<(f64, f64)> = self.series.iter().flat_map(|s| s.points.iter().copied()).collect();
         if all.is_empty() {
@@ -248,6 +251,53 @@ mod tests {
         let art = f.ascii_chart(40, 10);
         assert!(art.contains('*') && art.contains('+'));
         assert!(art.contains("up") && art.contains("down"));
+    }
+
+    #[test]
+    fn integral_and_mean_of_degenerate_series() {
+        // no points: both reductions are defined (0), not NaN
+        let empty = Series::new("e");
+        assert_eq!(empty.integral(), 0.0);
+        assert_eq!(empty.mean_y(), 0.0);
+        // one point: no interval to integrate over, mean is the point
+        let mut one = Series::new("o");
+        one.push(2.0, 7.0);
+        assert_eq!(one.integral(), 0.0);
+        assert_eq!(one.mean_y(), 7.0);
+        assert_eq!(one.max_y(), 7.0);
+    }
+
+    #[test]
+    fn ragged_series_leave_empty_csv_cells() {
+        // series with disjoint x supports: each row fills only the columns
+        // that have a sample there, and the union of xs stays sorted
+        let mut f = Figure::new("t", "x", "y");
+        f.series_mut("a").push(0.0, 1.0);
+        f.series_mut("a").push(2.0, 3.0);
+        f.series_mut("b").push(1.0, 5.0);
+        let csv = f.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines, vec!["x,a,b", "0,1,", "1,,5", "2,3,"]);
+        // a figure with no series still emits a (header-only) CSV
+        let bare = Figure::new("t", "x", "y");
+        assert_eq!(bare.to_csv(), "x\n");
+    }
+
+    #[test]
+    fn ascii_chart_degenerate_dimensions_do_not_panic() {
+        let mut f = Figure::new("tiny", "t", "v");
+        f.series_mut("a").push(0.0, 1.0);
+        // zero-sized plot areas clamp to 1x1 instead of underflowing
+        for (w, h) in [(0, 0), (0, 5), (5, 0), (1, 1)] {
+            let art = f.ascii_chart(w, h);
+            assert!(art.contains('*'), "the single point must plot at {w}x{h}:\n{art}");
+        }
+        // a single point spans zero x/y range: still one glyph, no NaN cells
+        let art = f.ascii_chart(10, 3);
+        assert_eq!(art.matches('*').count(), 2, "one plotted point + one legend glyph");
+        // and an empty figure short-circuits whatever the dims are
+        let none = Figure::new("void", "t", "v");
+        assert_eq!(none.ascii_chart(0, 0), "void (no data)\n");
     }
 
     #[test]

@@ -137,6 +137,14 @@ impl Layout {
         self.tasks.values().flatten().copied()
     }
 
+    /// One-line shape summary ("3 tasks on 12 nodes") — what the incident
+    /// narrative and the `/fleet/metrics` tooling print for a layout
+    /// without dumping the node lists.
+    pub fn summary(&self) -> String {
+        let nodes = self.placed_nodes().count();
+        format!("{} task{} on {} node{}", self.len(), plural(self.len()), nodes, plural(nodes))
+    }
+
     /// Distinct failure domains `task` is spread over — the fragmentation
     /// metric the `placement-frag` experiment reports.
     pub fn domain_spread(&self, task: TaskId, nodes_per_domain: u32) -> usize {
@@ -218,6 +226,14 @@ impl Layout {
             }
         }
         Ok(Layout::new(tasks))
+    }
+}
+
+fn plural(n: usize) -> &'static str {
+    if n == 1 {
+        ""
+    } else {
+        "s"
     }
 }
 
@@ -566,6 +582,15 @@ mod tests {
 
     fn view(ns: &[NodeId], gpn: u32, npd: u32) -> ClusterView<'_> {
         ClusterView { nodes: ns, gpus_per_node: gpn, nodes_per_domain: npd }
+    }
+
+    #[test]
+    fn layout_summary_counts_tasks_and_nodes() {
+        assert_eq!(Layout::default().summary(), "0 tasks on 0 nodes");
+        let one = Layout::new([(TaskId(0), nodes(&[3]))]);
+        assert_eq!(one.summary(), "1 task on 1 node");
+        let l = Layout::new([(TaskId(0), nodes(&[0, 1])), (TaskId(1), nodes(&[2]))]);
+        assert_eq!(l.summary(), "2 tasks on 3 nodes");
     }
 
     /// Brute-force maximum-keep matching: every disjoint way of giving each

@@ -119,6 +119,21 @@ pub struct Plan {
     pub layout: Layout,
 }
 
+impl Plan {
+    /// WAF-weighted transition duration estimate (seconds): the breakdown's
+    /// transition penalty (FLOP·s) divided back by the cluster WAF the plan
+    /// earns. This is the duration the penalty priced, so the telemetry
+    /// timeline can report a recovery estimate without re-deriving §6.3
+    /// migration times. Zero when the plan moves nothing or earns nothing.
+    pub fn transition_seconds(&self) -> f64 {
+        if self.total_waf > 0.0 {
+            self.breakdown.transition_penalty / self.total_waf
+        } else {
+            0.0
+        }
+    }
+}
+
 /// One reward term `G(t, x')` given the task's hoisted penalty — THE
 /// pricing expression. Every consumer (the DP inner loop, the brute-force
 /// reference, the public [`reward`], and [`CostBreakdown`] via

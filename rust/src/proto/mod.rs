@@ -162,6 +162,27 @@ pub enum CoordEvent {
     StateResidency { task: TaskId, source: StateSource, restore_s: f64 },
 }
 
+impl CoordEvent {
+    /// Stable event-kind tag — the same strings the wire format uses as
+    /// type discriminators. Telemetry spans and counters key on this;
+    /// it is NOT part of the serialized log (no version impact).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CoordEvent::ErrorReport { .. } => "error_report",
+            CoordEvent::NodeLost { .. } => "node_lost",
+            CoordEvent::NodeJoined { .. } => "node_joined",
+            CoordEvent::NodeRepaired { .. } => "node_repaired",
+            CoordEvent::TaskFinished { .. } => "task_finished",
+            CoordEvent::TaskLaunched { .. } => "task_launched",
+            CoordEvent::ReattemptResult { .. } => "reattempt_result",
+            CoordEvent::RestartResult { .. } => "restart_result",
+            CoordEvent::ReplanDue => "replan_due",
+            CoordEvent::Batch(_) => "batch",
+            CoordEvent::StateResidency { .. } => "state_residency",
+        }
+    }
+}
+
 /// Why a reconfiguration plan was generated — the Fig. 7 trigger class.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PlanReason {

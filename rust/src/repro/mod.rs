@@ -16,6 +16,7 @@ use crate::perfmodel::{best_config, throughput_table};
 use crate::planner::{baselines, solve, PlanTask};
 use crate::proto::{Action, CoordEvent, NodeId, PlanReason, TaskId};
 use crate::simulator::{compare_policies, PolicyKind, PolicyParams, SimResult, Simulator};
+use crate::telemetry::Timeline;
 use crate::util::{fmt_duration, fmt_si};
 
 /// One reproducible experiment: a stable id, a one-line description, and a
@@ -110,6 +111,11 @@ pub const EXPERIMENTS: &[Experiment] = &[
         id: "warm-peer",
         description: "warm peer-replica failover: store-aware recovery vs formula-priced (state tier)",
         run: warm_peer,
+    },
+    Experiment {
+        id: "sev1-timeline",
+        description: "incident narratives reconstructed from a recorded DecisionLog (telemetry)",
+        run: sev1_timeline,
     },
     Experiment {
         id: "fig11a",
@@ -731,6 +737,49 @@ pub fn fleet_lemon_render(trace: &Trace, on: &SimResult, off: &SimResult) -> Str
     out
 }
 
+/// `sev1-timeline` — the observability loop closed end to end: run the
+/// Unicron policy on a SEV1-heavy trace, then reconstruct the incident
+/// narratives (failure → detection latency → replan economics → recovery)
+/// from the recorded [`DecisionLog`](crate::coordinator::DecisionLog)
+/// *alone*, exactly as `unicron obs --log` would. A timeline that fails to
+/// render (non-reconciling cost terms, malformed spans) panics, so both
+/// `every_experiment_runs` and the CI repro smoke catch telemetry drift.
+pub fn sev1_timeline(seed: u64) -> String {
+    let cluster = ClusterSpec::default();
+    let cfg = UnicronConfig::default();
+    let specs = table3_case(5);
+    let tc = TraceConfig {
+        name: "sev1-timeline".into(),
+        duration_s: 7.0 * 86400.0,
+        n_nodes: cluster.n_nodes,
+        expect_sev1: 4.0,
+        expect_other: 6.0,
+        repair_min_s: 0.5 * 86400.0,
+        repair_max_s: 2.0 * 86400.0,
+    };
+    let trace = Trace::generate(tc.clone(), seed);
+    let r = Simulator::builder()
+        .cluster(cluster)
+        .config(cfg)
+        .policy(PolicyKind::Unicron)
+        .tasks(&specs)
+        .build()
+        .run(&trace);
+    let timeline = Timeline::from_log(&r.decision_log);
+    let rendered = timeline
+        .render()
+        .unwrap_or_else(|e| panic!("sev1-timeline: recorded log failed to render: {e}"));
+    let incidents = timeline.incidents().count();
+    format!(
+        "sev1-timeline — {} incident{} reconstructed from {} recorded decisions over {}\n{}",
+        incidents,
+        if incidents == 1 { "" } else { "s" },
+        r.decision_log.len(),
+        fmt_duration(tc.duration_s),
+        rendered
+    )
+}
+
 /// The fragmented-cluster trace and its two Unicron runs: min-churn
 /// placement on vs the topology-blind reference. Split out so tests can pin
 /// the acceptance property — placement-aware goodput ≥ topology-blind —
@@ -1031,6 +1080,14 @@ mod tests {
         assert!(out.contains("cost ledger"), "breakdown columns must be rendered:\n{out}");
         assert!(out.contains("Σ transition pen."));
         assert!(out.contains("Σ detection pen."));
+    }
+
+    #[test]
+    fn sev1_timeline_renders_an_incident_narrative() {
+        let out = sev1_timeline(42);
+        assert!(out.starts_with("sev1-timeline —"), "header missing:\n{out}");
+        assert!(out.contains("incident timeline —"), "rendered timeline missing:\n{out}");
+        assert!(out.contains("recent events:"), "event tail missing:\n{out}");
     }
 
     #[test]

@@ -290,7 +290,7 @@ impl RecoveryPolicy for UnicronPolicy {
 
     fn plan_stats(&self) -> (u64, u64) {
         match &self.coord {
-            Some(c) => (c.lookup_hits, c.solve_calls),
+            Some(c) => (c.lookup_hits(), c.solve_calls()),
             None => (0, 0),
         }
     }

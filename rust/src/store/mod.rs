@@ -298,6 +298,13 @@ impl SnapshotStore {
         &self.stats[tier.idx()]
     }
 
+    /// Typed `(hits, misses)` restore counters — the same numbers the
+    /// `/fleet/store` report publishes, without a JSON round-trip, so a
+    /// telemetry [`crate::telemetry::Registry`] can mirror them directly.
+    pub fn restore_hit_miss(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
     /// Physical bytes resident in `tier`.
     pub fn occupancy(&self, tier: Tier) -> u64 {
         self.physical[tier.idx()]
@@ -470,6 +477,8 @@ mod tests {
         let rep = s.report();
         assert_eq!(rep.get("hits").and_then(Value::as_u64), Some(2));
         assert_eq!(rep.get("misses").and_then(Value::as_u64), Some(1));
+        // the typed accessor mirrors the report without a JSON round-trip
+        assert_eq!(s.restore_hit_miss(), (2, 1));
     }
 
     #[test]

@@ -1,0 +1,778 @@
+//! Telemetry: low-overhead, replay-safe observability for the decide path
+//! (DESIGN.md §14).
+//!
+//! Three layers:
+//!
+//! * a [`Registry`] of typed instruments — monotonic counters, EWMA gauges,
+//!   fixed-bucket latency histograms — that absorbs the ad-hoc counters the
+//!   coordinator, planner refresh, and store used to scatter around.
+//!   Registration takes `&mut self` and returns a cheap index handle
+//!   ([`CounterId`] / [`GaugeId`] / [`HistogramId`]); updates take `&self`
+//!   through [`std::cell::Cell`], so the hot path is a load+store with no
+//!   locking (the owning coordinator is single-threaded per decision; `Cell`
+//!   keeps the whole registry `Send` so it rides into the live loop thread).
+//!   `benches/telemetry.rs` pins counter updates at ≥ 1M/s.
+//! * per-decision **span tracing**: every [`crate::coordinator::Coordinator::handle_at`]
+//!   cycle records a [`DecisionSpan`] with wall-clock phase timings
+//!   (detect → lookup/solve → place → price → dispatch), the event kind,
+//!   the plan epoch, and the committed plan's cost terms.
+//! * the **incident [`Timeline`]** (see [`timeline`]): spans plus
+//!   fleet/store state changes fold into a queryable narrative — failure →
+//!   detection latency → replan → transition → recovered — published live
+//!   under `/fleet/metrics` and rendered by `unicron obs`.
+//!
+//! **The replay-safety rule** (same as the MTBF EWMA): telemetry is
+//! *observe-only*. Nothing here may feed back into a decision — decisions
+//! remain a pure function of the event/timestamp stream, so a recorded
+//! [`crate::proto::DecisionLog`] replays bit-identically whether tracing is
+//! on or off. Span timings use the wall clock and are therefore
+//! nondeterministic; that is fine *because* nothing reads them back.
+//! `rust/tests/telemetry_replay.rs` pins telemetry-on ≡ telemetry-off.
+
+pub mod timeline;
+
+pub use timeline::{Incident, IncidentReplan, Timeline, TimelineEntry};
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::proto::{Action, CoordEvent};
+use crate::ser::Value;
+use crate::util::{log_line, Level};
+
+// ---------------------------------------------------------------------------
+// Registry: typed counters / gauges / histograms
+// ---------------------------------------------------------------------------
+
+/// Handle to a monotonic counter in a [`Registry`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to an EWMA gauge in a [`Registry`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle to a fixed-bucket latency histogram in a [`Registry`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramId(usize);
+
+#[derive(Debug, Default)]
+struct Ewma {
+    alpha: f64,
+    value: Cell<f64>,
+    primed: Cell<bool>,
+}
+
+#[derive(Debug)]
+struct Hist {
+    /// Ascending bucket upper bounds (seconds); one implicit overflow bucket.
+    bounds: Vec<f64>,
+    counts: Vec<Cell<u64>>,
+    total: Cell<u64>,
+    sum: Cell<f64>,
+}
+
+/// Log-spaced (1-2-5 per decade) latency bucket bounds, 100 ns .. 10 s.
+fn latency_bounds() -> Vec<f64> {
+    let mut bounds = Vec::with_capacity(27);
+    for decade in -7..=0i32 {
+        for step in [1.0, 2.0, 5.0] {
+            bounds.push(step * 10f64.powi(decade));
+        }
+    }
+    bounds.push(10.0);
+    bounds
+}
+
+/// A registry of typed instruments. Names are unique per kind; registering
+/// an existing name returns the existing handle, so instrument ownership can
+/// be spread across modules without coordination.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Vec<(String, Cell<u64>)>,
+    gauges: Vec<(String, Ewma)>,
+    hists: Vec<(String, Hist)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register (or look up) a monotonic counter.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.counters.iter().position(|(n, _)| n == name) {
+            return CounterId(i);
+        }
+        self.counters.push((name.to_string(), Cell::new(0)));
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register (or look up) an EWMA gauge. `alpha` is the blend weight of
+    /// a new observation (1.0 = plain last-value gauge); the first
+    /// observation primes the gauge directly.
+    pub fn gauge(&mut self, name: &str, alpha: f64) -> GaugeId {
+        if let Some(i) = self.gauges.iter().position(|(n, _)| n == name) {
+            return GaugeId(i);
+        }
+        self.gauges.push((
+            name.to_string(),
+            Ewma { alpha: alpha.clamp(0.0, 1.0), value: Cell::new(0.0), primed: Cell::new(false) },
+        ));
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register (or look up) a latency histogram (log-spaced buckets,
+    /// 100 ns .. 10 s, plus an overflow bucket).
+    pub fn histogram(&mut self, name: &str) -> HistogramId {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == name) {
+            return HistogramId(i);
+        }
+        let bounds = latency_bounds();
+        let counts = (0..=bounds.len()).map(|_| Cell::new(0)).collect();
+        self.hists.push((
+            name.to_string(),
+            Hist { bounds, counts, total: Cell::new(0), sum: Cell::new(0.0) },
+        ));
+        HistogramId(self.hists.len() - 1)
+    }
+
+    /// Bump a counter. The ≥1M updates/s hot path: one load, one store.
+    #[inline]
+    pub fn inc(&self, id: CounterId, n: u64) {
+        let c = &self.counters[id.0].1;
+        c.set(c.get() + n);
+    }
+
+    /// Observe a gauge sample (EWMA-blended per the gauge's alpha).
+    pub fn observe_gauge(&self, id: GaugeId, x: f64) {
+        let g = &self.gauges[id.0].1;
+        if g.primed.get() {
+            g.value.set(g.alpha * x + (1.0 - g.alpha) * g.value.get());
+        } else {
+            g.value.set(x);
+            g.primed.set(true);
+        }
+    }
+
+    /// Observe a latency sample (seconds).
+    pub fn observe(&self, id: HistogramId, seconds: f64) {
+        let h = &self.hists[id.0].1;
+        let i = h.bounds.partition_point(|&b| b < seconds);
+        let c = &h.counts[i];
+        c.set(c.get() + 1);
+        h.total.set(h.total.get() + 1);
+        h.sum.set(h.sum.get() + seconds);
+    }
+
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].1.get()
+    }
+
+    /// Read a counter by name (for consumers without the handle).
+    pub fn counter_named(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, c)| c.get())
+    }
+
+    /// Current gauge value (`None` until the first observation).
+    pub fn gauge_value(&self, id: GaugeId) -> Option<f64> {
+        let g = &self.gauges[id.0].1;
+        g.primed.get().then(|| g.value.get())
+    }
+
+    pub fn histogram_count(&self, id: HistogramId) -> u64 {
+        self.hists[id.0].1.total.get()
+    }
+
+    /// Approximate quantile: the upper bound of the bucket where the
+    /// cumulative count crosses `q` (`None` while empty). Overflow samples
+    /// report the largest finite bound.
+    pub fn quantile(&self, id: HistogramId, q: f64) -> Option<f64> {
+        let h = &self.hists[id.0].1;
+        let total = h.total.get();
+        if total == 0 {
+            return None;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in h.counts.iter().enumerate() {
+            cum += c.get();
+            if cum >= target {
+                return Some(*h.bounds.get(i).unwrap_or(h.bounds.last().expect("non-empty")));
+            }
+        }
+        h.bounds.last().copied()
+    }
+
+    /// JSON snapshot of every instrument — the `/fleet/metrics` registry
+    /// section.
+    pub fn to_value(&self) -> Value {
+        let mut counters = Value::obj();
+        for (name, c) in &self.counters {
+            counters.set(name, c.get());
+        }
+        let mut gauges = Value::obj();
+        for (i, (name, _)) in self.gauges.iter().enumerate() {
+            match self.gauge_value(GaugeId(i)) {
+                Some(v) => gauges.set(name, v),
+                None => gauges.set(name, Value::Null),
+            }
+        }
+        let mut hists = Value::obj();
+        for (i, (name, h)) in self.hists.iter().enumerate() {
+            let id = HistogramId(i);
+            let total = h.total.get();
+            let mut v = Value::obj().with("count", total).with("sum_s", h.sum.get());
+            if total > 0 {
+                v.set("mean_s", h.sum.get() / total as f64);
+                for (key, q) in [("p50_s", 0.5), ("p95_s", 0.95), ("p99_s", 0.99)] {
+                    if let Some(x) = self.quantile(id, q) {
+                        v.set(key, x);
+                    }
+                }
+            }
+            hists.set(name, v);
+        }
+        Value::obj().with("counters", counters).with("gauges", gauges).with("histograms", hists)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decision spans
+// ---------------------------------------------------------------------------
+
+/// Number of instrumented decide phases.
+pub const N_PHASES: usize = 6;
+
+/// The decide-path phases a [`DecisionSpan`] attributes time to, in pipeline
+/// order. `Dispatch` is the residual — total minus the measured phases —
+/// covering action assembly and everything un-instrumented.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Observation classification (fresh-vs-duplicate, severity).
+    Detect = 0,
+    /// §5.2 precomputed-table probe.
+    Lookup = 1,
+    /// Live DP solve fallback.
+    Solve = 2,
+    /// Min-churn node-to-task assignment.
+    Place = 3,
+    /// Estimator feeds + spare economics (the pricing side).
+    Price = 4,
+    /// Residual: action assembly, bookkeeping, everything else.
+    Dispatch = 5,
+}
+
+impl Phase {
+    pub fn all() -> [Phase; N_PHASES] {
+        [Phase::Detect, Phase::Lookup, Phase::Solve, Phase::Place, Phase::Price, Phase::Dispatch]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Detect => "detect",
+            Phase::Lookup => "lookup",
+            Phase::Solve => "solve",
+            Phase::Place => "place",
+            Phase::Price => "price",
+            Phase::Dispatch => "dispatch",
+        }
+    }
+}
+
+/// The committed plan's reference carried on a span: reason, cost terms, and
+/// which path (table hit vs live solve) produced it. Plain strings/floats so
+/// the telemetry layer stays dependency-light and serializes trivially.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanPlan {
+    /// [`crate::proto::PlanReason::name`] wire tag.
+    pub reason: &'static str,
+    pub objective: f64,
+    pub running_reward: f64,
+    pub transition_penalty: f64,
+    pub detection_penalty: f64,
+    /// [`crate::transition::StateSource::name`] wire tag.
+    pub state_source: &'static str,
+    pub workers_used: u32,
+    /// WAF-weighted transition duration estimate
+    /// ([`crate::planner::Plan::transition_seconds`]).
+    pub transition_s: f64,
+    /// Served from the precomputed table (vs a live DP solve).
+    pub lookup_hit: bool,
+}
+
+/// One `handle_at` cycle: what arrived, how long each phase took, and what
+/// was committed. Observe-only — spans never ride the [`crate::proto::DecisionLog`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionSpan {
+    /// Monotone per-session span number.
+    pub seq: u64,
+    /// Delivery timestamp on the driver's clock (the event's `at_s`).
+    pub at_s: f64,
+    /// Event wire tag ([`crate::proto::CoordEvent::label`]).
+    pub event: &'static str,
+    /// Coordinator plan epoch after the decision.
+    pub plan_epoch: u64,
+    /// Wall-clock decide latency (seconds).
+    pub total_s: f64,
+    /// Per-phase wall-clock seconds, indexed by [`Phase`].
+    pub phase_s: [f64; N_PHASES],
+    /// Number of actions emitted.
+    pub actions: usize,
+    /// The committed plan's reference, when the decision replanned.
+    pub plan: Option<SpanPlan>,
+}
+
+impl DecisionSpan {
+    pub fn to_value(&self) -> Value {
+        let mut phases = Value::obj();
+        for p in Phase::all() {
+            phases.set(p.name(), self.phase_s[p as usize]);
+        }
+        let mut v = Value::obj()
+            .with("seq", self.seq)
+            .with("at_s", self.at_s)
+            .with("event", self.event)
+            .with("plan_epoch", self.plan_epoch)
+            .with("total_s", self.total_s)
+            .with("phases", phases)
+            .with("actions", self.actions);
+        if let Some(p) = &self.plan {
+            v.set(
+                "plan",
+                Value::obj()
+                    .with("reason", p.reason)
+                    .with("objective", p.objective)
+                    .with("running_reward", p.running_reward)
+                    .with("transition_penalty", p.transition_penalty)
+                    .with("detection_penalty", p.detection_penalty)
+                    .with("state_source", p.state_source)
+                    .with("workers_used", p.workers_used)
+                    .with("transition_s", p.transition_s)
+                    .with("lookup_hit", p.lookup_hit),
+            );
+        }
+        v
+    }
+}
+
+/// In-flight span scratch (one per `handle_at` cycle).
+#[derive(Debug)]
+struct SpanScratch {
+    started: Instant,
+    event: &'static str,
+    at_s: f64,
+    phase_open: Option<(Phase, Instant)>,
+    phase_s: [f64; N_PHASES],
+    plan: Option<SpanPlan>,
+}
+
+/// One structured log event (leveled, targeted, ring-buffered).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEvent {
+    pub seq: u64,
+    pub level: Level,
+    pub target: String,
+    pub message: String,
+}
+
+impl LogEvent {
+    pub fn to_value(&self) -> Value {
+        Value::obj()
+            .with("seq", self.seq)
+            .with("level", self.level.name())
+            .with("target", self.target.as_str())
+            .with("message", self.message.as_str())
+    }
+}
+
+/// How many spans / log events the ring buffers retain.
+const SPAN_CAP: usize = 1024;
+const LOG_CAP: usize = 256;
+/// How many recent spans ride the `/fleet/metrics` report.
+const REPORT_SPANS: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Telemetry facade
+// ---------------------------------------------------------------------------
+
+/// The per-coordinator telemetry facade: the instrument [`Registry`], span
+/// machinery, the incident [`Timeline`], and the structured log ring.
+///
+/// Counters and gauges are always live (they are the observability the tests
+/// and benches read). The `tracing` knob gates the *span/timeline/log
+/// recording* — the part with per-decision allocation — which is what
+/// `benches/telemetry.rs` holds to ≤1.05× of the untraced decide path.
+#[derive(Debug)]
+pub struct Telemetry {
+    tracing: bool,
+    registry: Registry,
+    decide_hist: HistogramId,
+    next_span: Cell<u64>,
+    next_log: Cell<u64>,
+    scratch: RefCell<Option<SpanScratch>>,
+    spans: RefCell<VecDeque<DecisionSpan>>,
+    timeline: RefCell<Timeline>,
+    logs: RefCell<VecDeque<LogEvent>>,
+}
+
+impl Telemetry {
+    /// Telemetry with span tracing on (the default).
+    pub fn new() -> Telemetry {
+        Telemetry::with_tracing(true)
+    }
+
+    /// Telemetry with span/timeline recording switched by `tracing`;
+    /// counters and gauges stay live either way.
+    pub fn with_tracing(tracing: bool) -> Telemetry {
+        let mut registry = Registry::new();
+        let decide_hist = registry.histogram("decide.latency_s");
+        Telemetry {
+            tracing,
+            registry,
+            decide_hist,
+            next_span: Cell::new(0),
+            next_log: Cell::new(0),
+            scratch: RefCell::new(None),
+            spans: RefCell::new(VecDeque::new()),
+            timeline: RefCell::new(Timeline::default()),
+            logs: RefCell::new(VecDeque::new()),
+        }
+    }
+
+    /// Is span/timeline recording on?
+    pub fn tracing(&self) -> bool {
+        self.tracing
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Register new instruments (construction-time wiring).
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+
+    /// Counter bump, delegated (hot path).
+    #[inline]
+    pub fn inc(&self, id: CounterId, n: u64) {
+        self.registry.inc(id, n);
+    }
+
+    /// Gauge observation, delegated.
+    pub fn observe_gauge(&self, id: GaugeId, x: f64) {
+        self.registry.observe_gauge(id, x);
+    }
+
+    /// Open the span for one decide cycle.
+    pub fn span_begin(&self, event: &'static str, at_s: f64) {
+        if !self.tracing {
+            return;
+        }
+        *self.scratch.borrow_mut() = Some(SpanScratch {
+            started: Instant::now(),
+            event,
+            at_s,
+            phase_open: None,
+            phase_s: [0.0; N_PHASES],
+            plan: None,
+        });
+    }
+
+    /// Enter a phase. A still-open phase is closed first (phases never
+    /// overlap on the synchronous decide path).
+    pub fn phase_begin(&self, phase: Phase) {
+        if !self.tracing {
+            return;
+        }
+        if let Some(s) = self.scratch.borrow_mut().as_mut() {
+            if let Some((prev, started)) = s.phase_open.take() {
+                s.phase_s[prev as usize] += started.elapsed().as_secs_f64();
+            }
+            s.phase_open = Some((phase, Instant::now()));
+        }
+    }
+
+    /// Leave a phase, accumulating its elapsed time.
+    pub fn phase_end(&self, phase: Phase) {
+        if !self.tracing {
+            return;
+        }
+        if let Some(s) = self.scratch.borrow_mut().as_mut() {
+            if let Some((open, started)) = s.phase_open.take() {
+                debug_assert_eq!(open, phase, "mismatched phase_end");
+                s.phase_s[open as usize] += started.elapsed().as_secs_f64();
+            }
+        }
+    }
+
+    /// Attach the committed plan's reference to the open span.
+    pub fn note_plan(&self, plan: SpanPlan) {
+        if !self.tracing {
+            return;
+        }
+        if let Some(s) = self.scratch.borrow_mut().as_mut() {
+            s.plan = Some(plan);
+        }
+    }
+
+    /// Close the span: compute the dispatch residual, ring-buffer the span,
+    /// and feed the decide-latency histogram. Returns the finished span so
+    /// the caller can fold it into the timeline.
+    pub fn span_end(&self, plan_epoch: u64, actions: usize) -> Option<DecisionSpan> {
+        if !self.tracing {
+            return None;
+        }
+        let mut s = self.scratch.borrow_mut().take()?;
+        if let Some((open, started)) = s.phase_open.take() {
+            s.phase_s[open as usize] += started.elapsed().as_secs_f64();
+        }
+        let total_s = s.started.elapsed().as_secs_f64();
+        let measured: f64 = s.phase_s.iter().sum();
+        s.phase_s[Phase::Dispatch as usize] += (total_s - measured).max(0.0);
+        let seq = self.next_span.get();
+        self.next_span.set(seq + 1);
+        let span = DecisionSpan {
+            seq,
+            at_s: s.at_s,
+            event: s.event,
+            plan_epoch,
+            total_s,
+            phase_s: s.phase_s,
+            actions,
+            plan: s.plan,
+        };
+        self.registry.observe(self.decide_hist, total_s);
+        let mut spans = self.spans.borrow_mut();
+        if spans.len() == SPAN_CAP {
+            spans.pop_front();
+        }
+        spans.push_back(span.clone());
+        Some(span)
+    }
+
+    /// Recorded spans, oldest first (bounded ring).
+    pub fn spans(&self) -> Vec<DecisionSpan> {
+        self.spans.borrow().iter().cloned().collect()
+    }
+
+    /// Fold one decision into the incident timeline.
+    pub fn timeline_record(
+        &self,
+        at_s: f64,
+        event: &CoordEvent,
+        actions: &[Action],
+        span: Option<&DecisionSpan>,
+    ) {
+        if !self.tracing {
+            return;
+        }
+        self.timeline.borrow_mut().record(at_s, event, actions, span);
+    }
+
+    /// Snapshot of the incident timeline.
+    pub fn timeline(&self) -> Timeline {
+        self.timeline.borrow().clone()
+    }
+
+    /// Leveled structured log: ring-buffered for the `/fleet/metrics` report
+    /// and echoed through [`crate::util::log_line`] (respecting the global
+    /// level filter). Always on — errors must surface even with tracing off.
+    pub fn log(&self, level: Level, target: &str, message: &str) {
+        let seq = self.next_log.get();
+        self.next_log.set(seq + 1);
+        let mut logs = self.logs.borrow_mut();
+        if logs.len() == LOG_CAP {
+            logs.pop_front();
+        }
+        logs.push_back(LogEvent {
+            seq,
+            level,
+            target: target.to_string(),
+            message: message.to_string(),
+        });
+        drop(logs);
+        log_line(level, target, message);
+    }
+
+    /// Recorded log events, oldest first (bounded ring).
+    pub fn log_events(&self) -> Vec<LogEvent> {
+        self.logs.borrow().iter().cloned().collect()
+    }
+
+    /// The `/fleet/metrics` core: registry snapshot, recent spans, the
+    /// incident timeline, and recent structured log events.
+    pub fn metrics_value(&self) -> Value {
+        let spans = self.spans.borrow();
+        let skip = spans.len().saturating_sub(REPORT_SPANS);
+        let recent: Vec<Value> = spans.iter().skip(skip).map(DecisionSpan::to_value).collect();
+        let logs: Vec<Value> = self.logs.borrow().iter().map(LogEvent::to_value).collect();
+        Value::obj()
+            .with("registry", self.registry.to_value())
+            .with("spans", Value::Arr(recent))
+            .with("timeline", self.timeline.borrow().to_value())
+            .with("logs", Value::Arr(logs))
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_register_once_and_count() {
+        let mut r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        assert_eq!(a, b, "same name, same handle");
+        r.inc(a, 3);
+        r.inc(b, 2);
+        assert_eq!(r.counter_value(a), 5);
+        assert_eq!(r.counter_named("x"), Some(5));
+        assert_eq!(r.counter_named("y"), None);
+    }
+
+    #[test]
+    fn gauge_ewma_blends() {
+        let mut r = Registry::new();
+        let g = r.gauge("g", 0.5);
+        assert_eq!(r.gauge_value(g), None);
+        r.observe_gauge(g, 10.0); // primes directly
+        assert_eq!(r.gauge_value(g), Some(10.0));
+        r.observe_gauge(g, 20.0);
+        assert_eq!(r.gauge_value(g), Some(15.0));
+        // alpha=1.0 is a plain last-value gauge
+        let last = r.gauge("last", 1.0);
+        r.observe_gauge(last, 1.0);
+        r.observe_gauge(last, 9.0);
+        assert_eq!(r.gauge_value(last), Some(9.0));
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut r = Registry::new();
+        let h = r.histogram("lat");
+        assert_eq!(r.quantile(h, 0.5), None, "empty histogram has no quantiles");
+        for _ in 0..90 {
+            r.observe(h, 0.8e-3); // lands in the ≤1ms bucket
+        }
+        for _ in 0..10 {
+            r.observe(h, 0.9); // ≤1s bucket
+        }
+        assert_eq!(r.histogram_count(h), 100);
+        assert_eq!(r.quantile(h, 0.5), Some(1e-3));
+        assert_eq!(r.quantile(h, 0.99), Some(1.0));
+        // overflow samples report the largest finite bound
+        r.observe(h, 1e6);
+        assert_eq!(r.quantile(h, 1.0), Some(10.0));
+    }
+
+    #[test]
+    fn registry_snapshot_carries_every_instrument() {
+        let mut r = Registry::new();
+        let c = r.counter("decide.events");
+        let g = r.gauge("mtbf", 1.0);
+        let h = r.histogram("lat");
+        r.inc(c, 7);
+        r.observe_gauge(g, 3600.0);
+        r.observe(h, 0.25);
+        let v = r.to_value();
+        assert_eq!(
+            v.get("counters").and_then(|c| c.get("decide.events")).and_then(Value::as_u64),
+            Some(7)
+        );
+        assert_eq!(
+            v.get("gauges").and_then(|g| g.get("mtbf")).and_then(Value::as_f64),
+            Some(3600.0)
+        );
+        let lat = v.get("histograms").and_then(|h| h.get("lat")).expect("lat histogram");
+        assert_eq!(lat.get("count").and_then(Value::as_u64), Some(1));
+        assert!(lat.get("p50_s").and_then(Value::as_f64).is_some());
+    }
+
+    #[test]
+    fn span_lifecycle_accumulates_phases_and_residual() {
+        let tel = Telemetry::new();
+        tel.span_begin("node_lost", 42.0);
+        tel.phase_begin(Phase::Detect);
+        tel.phase_end(Phase::Detect);
+        tel.phase_begin(Phase::Lookup);
+        tel.phase_end(Phase::Lookup);
+        tel.note_plan(SpanPlan {
+            reason: "sev1_failure",
+            objective: 1.0,
+            running_reward: 1.5,
+            transition_penalty: 0.4,
+            detection_penalty: 0.1,
+            state_source: "dp_replica",
+            workers_used: 8,
+            transition_s: 12.0,
+            lookup_hit: true,
+        });
+        let span = tel.span_end(3, 2).expect("tracing on records a span");
+        assert_eq!(span.seq, 0);
+        assert_eq!(span.at_s, 42.0);
+        assert_eq!(span.event, "node_lost");
+        assert_eq!(span.plan_epoch, 3);
+        assert_eq!(span.actions, 2);
+        assert!(span.plan.as_ref().is_some_and(|p| p.lookup_hit));
+        // total covers the phases; dispatch carries the residual
+        let measured: f64 = span.phase_s.iter().sum();
+        assert!(span.total_s > 0.0);
+        assert!((measured - span.total_s).abs() < 1e-9, "{measured} vs {}", span.total_s);
+        assert_eq!(tel.spans().len(), 1);
+        assert_eq!(tel.registry().histogram_count(tel.decide_hist), 1);
+        // the span serializes with every phase keyed by name
+        let v = span.to_value();
+        let phases = v.get("phases").expect("phases");
+        for p in Phase::all() {
+            assert!(phases.get(p.name()).is_some(), "missing phase {}", p.name());
+        }
+        assert!(v.get("plan").is_some());
+    }
+
+    #[test]
+    fn tracing_off_records_nothing_but_counters_stay_live() {
+        let mut tel = Telemetry::with_tracing(false);
+        let c = tel.registry_mut().counter("decide.events");
+        tel.span_begin("node_lost", 1.0);
+        tel.phase_begin(Phase::Detect);
+        tel.phase_end(Phase::Detect);
+        tel.inc(c, 1);
+        assert!(tel.span_end(0, 0).is_none());
+        assert!(tel.spans().is_empty());
+        assert_eq!(tel.registry().counter_value(c), 1, "counters are always on");
+    }
+
+    #[test]
+    fn log_ring_buffers_and_serializes() {
+        let tel = Telemetry::new();
+        tel.log(Level::Error, "live.plan_refresh", "background refresh panicked");
+        let events = tel.log_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].level, Level::Error);
+        let v = events[0].to_value();
+        assert_eq!(v.get("level").and_then(Value::as_str), Some("error"));
+        assert_eq!(v.get("target").and_then(Value::as_str), Some("live.plan_refresh"));
+    }
+
+    #[test]
+    fn metrics_value_has_all_sections() {
+        let tel = Telemetry::new();
+        tel.span_begin("replan_due", 0.0);
+        tel.span_end(0, 0);
+        let v = tel.metrics_value();
+        for key in ["registry", "spans", "timeline", "logs"] {
+            assert!(v.get(key).is_some(), "metrics missing {key}");
+        }
+        assert_eq!(v.get("spans").and_then(Value::as_arr).map(<[Value]>::len), Some(1));
+    }
+}

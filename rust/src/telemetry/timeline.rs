@@ -1,0 +1,766 @@
+//! The incident timeline (DESIGN.md §14): decisions and their spans fold
+//! into a queryable, renderable narrative of what happened to the cluster —
+//! failure → detection latency → replan (with its cost terms and decide
+//! phases) → transition → recovered.
+//!
+//! A [`Timeline`] is built two ways, producing the same structure:
+//!
+//! * live: [`Telemetry::timeline_record`](super::Telemetry::timeline_record)
+//!   folds every `handle_at` decision in as it happens (spans attached);
+//! * post-hoc: [`Timeline::from_log`] replays a recorded
+//!   [`DecisionLog`]'s entries (no spans — wall-clock phase data does not
+//!   ride the log, by the replay-safety rule).
+//!
+//! The live driver publishes it under `/fleet/metrics`; `unicron obs`
+//! renders either source into the human-readable narrative.
+
+use crate::cost;
+use crate::failure::Severity;
+use crate::proto::{Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId};
+use crate::ser::Value;
+use crate::util::{fmt_duration, fmt_si};
+
+use super::{DecisionSpan, Phase, N_PHASES};
+
+/// Entry/incident ring caps — a week-long session must not grow unbounded.
+const MAX_ENTRIES: usize = 4096;
+const MAX_CLOSED: usize = 512;
+
+/// One timestamped line of cluster history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEntry {
+    pub at_s: f64,
+    /// Short machine-ish label (e.g. `node_joined`, `replan`).
+    pub label: String,
+    /// Human-readable detail.
+    pub detail: String,
+}
+
+/// The replan that resolved an incident: the committed plan's cost terms
+/// (they must reconcile to the objective — [`Timeline::render`] checks) and,
+/// when recorded live, the decide span's latency attribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IncidentReplan {
+    pub at_s: f64,
+    /// [`PlanReason::name`] tag.
+    pub reason: String,
+    pub objective: f64,
+    pub running_reward: f64,
+    pub transition_penalty: f64,
+    pub detection_penalty: f64,
+    /// [`crate::transition::StateSource::name`] tag.
+    pub state_source: String,
+    pub workers_used: u32,
+    /// WAF-weighted transition duration estimate (s).
+    pub transition_s: f64,
+    /// Table hit vs live solve (`None` when rebuilt from a log without spans).
+    pub lookup_hit: Option<bool>,
+    /// Decide latency (s), when a live span was attached.
+    pub decide_s: Option<f64>,
+    /// Per-phase decide seconds, when a live span was attached.
+    pub phase_s: Option<[f64; N_PHASES]>,
+}
+
+/// One SEV1-class incident: a node leaving service (isolation or lemon
+/// quarantine), through the replan that re-planned around it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Incident {
+    pub node: NodeId,
+    /// The task the failing node was reported against, when known.
+    pub task: Option<TaskId>,
+    /// Failure kind tag (`ErrorKind::name`, `node_lost`, `lemon_quarantine`,
+    /// `restart_escalation`).
+    pub kind: String,
+    /// When the coordinator learned of the failure.
+    pub detected_at_s: f64,
+    /// Table 2 detection latency for the kind's detector (s).
+    pub detection_s: f64,
+    pub replan: Option<IncidentReplan>,
+    /// Detection + transition end: when capacity is serving again.
+    pub recovered_at_s: Option<f64>,
+}
+
+impl Incident {
+    /// When the failure physically occurred (detection time backed out).
+    pub fn failed_at_s(&self) -> f64 {
+        self.detected_at_s - self.detection_s
+    }
+}
+
+/// The queryable incident timeline. Entries and closed incidents are
+/// bounded rings; open incidents (awaiting their replan) are kept until
+/// closed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Timeline {
+    entries: Vec<TimelineEntry>,
+    closed: Vec<Incident>,
+    open: Vec<Incident>,
+}
+
+impl Timeline {
+    /// Rebuild the timeline from a recorded [`DecisionLog`] — the post-hoc
+    /// path `unicron obs --log` uses. No spans: wall-clock phase data never
+    /// rides the log.
+    pub fn from_log(log: &DecisionLog) -> Timeline {
+        let mut t = Timeline::default();
+        for e in &log.entries {
+            t.record(e.at_s, &e.event, &e.actions, None);
+        }
+        t
+    }
+
+    /// Fold one decision (event, actions, optional span) into the timeline.
+    pub fn record(
+        &mut self,
+        at_s: f64,
+        event: &CoordEvent,
+        actions: &[Action],
+        span: Option<&DecisionSpan>,
+    ) {
+        self.record_event(at_s, event, actions);
+        let replans = actions
+            .iter()
+            .any(|a| matches!(a, Action::ApplyPlan { reason: PlanReason::Sev1Failure, .. }));
+        for a in actions {
+            match a {
+                Action::IsolateNode { node } => {
+                    let (kind, detection_s, task) = isolation_cause(event, *node);
+                    self.open.push(Incident {
+                        node: *node,
+                        task,
+                        kind,
+                        detected_at_s: at_s,
+                        detection_s,
+                        replan: None,
+                        recovered_at_s: None,
+                    });
+                }
+                Action::NodeQuarantined { node } => {
+                    if replans {
+                        // proactive lemon fence: capacity leaves now; the
+                        // consolidated plan in this same action list closes it
+                        let task = isolation_cause(event, *node).2;
+                        self.open.push(Incident {
+                            node: *node,
+                            task,
+                            kind: "lemon_quarantine".into(),
+                            detected_at_s: at_s,
+                            detection_s: 0.0,
+                            replan: None,
+                            recovered_at_s: None,
+                        });
+                    } else {
+                        // a repaired lemon refused readmission: no capacity
+                        // change, no replan — history only
+                        self.push_entry(at_s, "quarantine", format!("node {node} fenced as lemon"));
+                    }
+                }
+                Action::ScheduleReplan { after_s } => {
+                    self.push_entry(
+                        at_s,
+                        "replan_deferred",
+                        format!("burst continuation: consolidated replan due in {after_s:.0}s"),
+                    );
+                }
+                Action::ApplyPlan { plan, reason } => {
+                    self.push_entry(
+                        at_s,
+                        "replan",
+                        format!(
+                            "plan committed ({}): {} workers, objective {}",
+                            reason.name(),
+                            plan.workers_used,
+                            fmt_si(plan.objective)
+                        ),
+                    );
+                    if *reason == PlanReason::Sev1Failure {
+                        let replan = IncidentReplan {
+                            at_s,
+                            reason: reason.name().into(),
+                            objective: plan.objective,
+                            running_reward: plan.breakdown.running_reward,
+                            transition_penalty: plan.breakdown.transition_penalty,
+                            detection_penalty: plan.breakdown.detection_penalty,
+                            state_source: plan.breakdown.state_source.name().into(),
+                            workers_used: plan.workers_used,
+                            transition_s: plan.transition_seconds(),
+                            lookup_hit: span
+                                .and_then(|s| s.plan.as_ref())
+                                .map(|p| p.lookup_hit),
+                            decide_s: span.map(|s| s.total_s),
+                            phase_s: span.map(|s| s.phase_s),
+                        };
+                        // one consolidated plan settles everything owed —
+                        // every open incident closes on it
+                        for mut inc in self.open.drain(..) {
+                            inc.recovered_at_s = Some(at_s + replan.transition_s);
+                            inc.replan = Some(replan.clone());
+                            self.closed.push(inc);
+                        }
+                        if self.closed.len() > MAX_CLOSED {
+                            let overflow = self.closed.len() - MAX_CLOSED;
+                            self.closed.drain(..overflow);
+                        }
+                    }
+                }
+                Action::SpareRetained { node } => {
+                    self.push_entry(at_s, "spare_retained", format!("node {node} retained"));
+                }
+                Action::SpareReleased { node } => {
+                    self.push_entry(
+                        at_s,
+                        "spare_released",
+                        format!("node {node} released to provider"),
+                    );
+                }
+                Action::InstructReattempt { .. }
+                | Action::InstructRestart { .. }
+                | Action::AlertOps { .. } => {}
+            }
+        }
+    }
+
+    /// Event-side history lines (batch members flattened).
+    fn record_event(&mut self, at_s: f64, event: &CoordEvent, actions: &[Action]) {
+        match event {
+            CoordEvent::Batch(members) => {
+                for m in members {
+                    self.record_event(at_s, m, actions);
+                }
+            }
+            CoordEvent::ErrorReport { node, task, kind } => {
+                let sev = match kind.severity() {
+                    Severity::Sev1 => "SEV1",
+                    Severity::Sev2 => "SEV2",
+                    Severity::Sev3 => "SEV3",
+                };
+                self.push_entry(
+                    at_s,
+                    "error_report",
+                    format!("{sev} {} on node {node} (task {})", kind.name(), task.0),
+                );
+            }
+            CoordEvent::NodeLost { node } => {
+                self.push_entry(at_s, "node_lost", format!("node {node} lease expired"));
+            }
+            CoordEvent::NodeJoined { node } => {
+                self.push_entry(at_s, "node_joined", format!("node {node} joined the pool"));
+            }
+            CoordEvent::NodeRepaired { node } => {
+                self.push_entry(at_s, "node_repaired", format!("node {node} repair finished"));
+            }
+            CoordEvent::TaskFinished { task } => {
+                self.push_entry(at_s, "task_finished", format!("task {} finished", task.0));
+            }
+            CoordEvent::TaskLaunched { task } => {
+                self.push_entry(at_s, "task_launched", format!("task {} launched", task.0));
+            }
+            CoordEvent::ReattemptResult { node, task, ok } => {
+                let verdict = if *ok { "succeeded" } else { "failed" };
+                self.push_entry(
+                    at_s,
+                    "reattempt_result",
+                    format!("reattempt on node {node} (task {}) {verdict}", task.0),
+                );
+            }
+            CoordEvent::RestartResult { node, task, ok } => {
+                let verdict = if *ok { "succeeded" } else { "failed" };
+                self.push_entry(
+                    at_s,
+                    "restart_result",
+                    format!("restart on node {node} (task {}) {verdict}", task.0),
+                );
+            }
+            CoordEvent::ReplanDue => {
+                self.push_entry(at_s, "replan_due", "burst-batch timer fired".into());
+            }
+            CoordEvent::StateResidency { task, source, restore_s } => {
+                self.push_entry(
+                    at_s,
+                    "state_residency",
+                    format!(
+                        "task {} snapshot now in {} (restore ~{restore_s:.1}s)",
+                        task.0,
+                        source.name()
+                    ),
+                );
+            }
+        }
+    }
+
+    fn push_entry(&mut self, at_s: f64, label: &str, detail: String) {
+        if self.entries.len() == MAX_ENTRIES {
+            self.entries.remove(0);
+        }
+        self.entries.push(TimelineEntry { at_s, label: label.into(), detail });
+    }
+
+    /// Every recorded history line, oldest first.
+    pub fn entries(&self) -> &[TimelineEntry] {
+        &self.entries
+    }
+
+    /// All incidents, resolved first, then any still awaiting their replan.
+    pub fn incidents(&self) -> impl Iterator<Item = &Incident> {
+        self.closed.iter().chain(self.open.iter())
+    }
+
+    /// Incidents still awaiting a consolidated replan (deferred bursts).
+    pub fn open_incidents(&self) -> &[Incident] {
+        &self.open
+    }
+
+    /// Serialize for the `/fleet/metrics` report.
+    pub fn to_value(&self) -> Value {
+        let entries: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Value::obj()
+                    .with("at_s", e.at_s)
+                    .with("label", e.label.as_str())
+                    .with("detail", e.detail.as_str())
+            })
+            .collect();
+        let incident = |inc: &Incident, open: bool| {
+            let mut v = Value::obj()
+                .with("node", inc.node.0)
+                .with("kind", inc.kind.as_str())
+                .with("detected_at_s", inc.detected_at_s)
+                .with("detection_s", inc.detection_s)
+                .with("open", open);
+            if let Some(t) = inc.task {
+                v.set("task", t.0);
+            }
+            if let Some(r) = &inc.recovered_at_s {
+                v.set("recovered_at_s", *r);
+            }
+            if let Some(rp) = &inc.replan {
+                let mut p = Value::obj()
+                    .with("at_s", rp.at_s)
+                    .with("reason", rp.reason.as_str())
+                    .with("objective", rp.objective)
+                    .with("running_reward", rp.running_reward)
+                    .with("transition_penalty", rp.transition_penalty)
+                    .with("detection_penalty", rp.detection_penalty)
+                    .with("state_source", rp.state_source.as_str())
+                    .with("workers_used", rp.workers_used)
+                    .with("transition_s", rp.transition_s);
+                if let Some(hit) = rp.lookup_hit {
+                    p.set("lookup_hit", hit);
+                }
+                if let Some(d) = rp.decide_s {
+                    p.set("decide_s", d);
+                }
+                if let Some(ph) = &rp.phase_s {
+                    let mut phases = Value::obj();
+                    for phase in Phase::all() {
+                        phases.set(phase.name(), ph[phase as usize]);
+                    }
+                    p.set("phases", phases);
+                }
+                v.set("replan", p);
+            }
+            v
+        };
+        let incidents: Vec<Value> = self
+            .closed
+            .iter()
+            .map(|i| incident(i, false))
+            .chain(self.open.iter().map(|i| incident(i, true)))
+            .collect();
+        Value::obj().with("entries", Value::Arr(entries)).with("incidents", Value::Arr(incidents))
+    }
+
+    /// Inverse of [`Timeline::to_value`] — how `unicron obs --addr` rebuilds
+    /// the timeline from a published `/fleet/metrics` report. Strict:
+    /// missing required fields are an error, not a default.
+    pub fn from_value(v: &Value) -> Result<Timeline, String> {
+        let mut t = Timeline::default();
+        let entries = v
+            .get("entries")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "timeline: missing entries".to_string())?;
+        for e in entries {
+            t.entries.push(TimelineEntry {
+                at_s: need_f64(e, "at_s")?,
+                label: need_str(e, "label")?,
+                detail: need_str(e, "detail")?,
+            });
+        }
+        let incidents = v
+            .get("incidents")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "timeline: missing incidents".to_string())?;
+        for i in incidents {
+            let replan = match i.get("replan") {
+                None => None,
+                Some(p) => {
+                    let phase_s = match p.get("phases") {
+                        None => None,
+                        Some(ph) => {
+                            let mut arr = [0.0; N_PHASES];
+                            for phase in Phase::all() {
+                                arr[phase as usize] = need_f64(ph, phase.name())?;
+                            }
+                            Some(arr)
+                        }
+                    };
+                    Some(IncidentReplan {
+                        at_s: need_f64(p, "at_s")?,
+                        reason: need_str(p, "reason")?,
+                        objective: need_f64(p, "objective")?,
+                        running_reward: need_f64(p, "running_reward")?,
+                        transition_penalty: need_f64(p, "transition_penalty")?,
+                        detection_penalty: need_f64(p, "detection_penalty")?,
+                        state_source: need_str(p, "state_source")?,
+                        workers_used: need_f64(p, "workers_used")? as u32,
+                        transition_s: need_f64(p, "transition_s")?,
+                        lookup_hit: p.get("lookup_hit").and_then(Value::as_bool),
+                        decide_s: p.get("decide_s").and_then(Value::as_f64),
+                        phase_s,
+                    })
+                }
+            };
+            let inc = Incident {
+                node: NodeId(need_f64(i, "node")? as u32),
+                task: i.get("task").and_then(Value::as_u64).map(|x| TaskId(x as u32)),
+                kind: need_str(i, "kind")?,
+                detected_at_s: need_f64(i, "detected_at_s")?,
+                detection_s: need_f64(i, "detection_s")?,
+                replan,
+                recovered_at_s: i.get("recovered_at_s").and_then(Value::as_f64),
+            };
+            if i.get("open").and_then(Value::as_bool).unwrap_or(false) {
+                t.open.push(inc);
+            } else {
+                t.closed.push(inc);
+            }
+        }
+        Ok(t)
+    }
+
+    /// Render the human-readable incident narrative. Errors when the data
+    /// is inconsistent — a replan whose cost terms do not reconcile to its
+    /// objective, or a non-finite duration — so `unicron obs` (and the CI
+    /// smoke) fail loudly on malformed telemetry instead of printing
+    /// plausible nonsense.
+    pub fn render(&self) -> Result<String, String> {
+        let mut out = String::new();
+        let n_inc = self.closed.len() + self.open.len();
+        out.push_str(&format!(
+            "incident timeline — {n_inc} incident(s), {} event(s)\n",
+            self.entries.len()
+        ));
+        if n_inc == 0 {
+            out.push_str("no SEV1 incidents recorded\n");
+        }
+        for (i, inc) in self.incidents().enumerate() {
+            out.push_str(&render_incident(i + 1, inc)?);
+        }
+        if !self.entries.is_empty() {
+            out.push_str("\nrecent events:\n");
+            let skip = self.entries.len().saturating_sub(20);
+            for e in &self.entries[skip..] {
+                out.push_str(&format!("  t={:<10} {:<16} {}\n", sec(e.at_s), e.label, e.detail));
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn need_f64(v: &Value, key: &str) -> Result<f64, String> {
+    v.get(key).and_then(Value::as_f64).ok_or_else(|| format!("timeline: missing {key}"))
+}
+
+fn need_str(v: &Value, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("timeline: missing {key}"))
+}
+
+/// What caused `node`'s isolation, read off the triggering event (batch
+/// members flattened): failure-kind tag, Table 2 detection latency, task.
+fn isolation_cause(event: &CoordEvent, node: NodeId) -> (String, f64, Option<TaskId>) {
+    match event {
+        CoordEvent::ErrorReport { node: n, task, kind } if *n == node => {
+            (kind.name().into(), cost::detection_latency_s(*kind), Some(*task))
+        }
+        CoordEvent::NodeLost { node: n } if *n == node => {
+            ("node_lost".into(), cost::DETECT_NODE_HEALTH_S, None)
+        }
+        CoordEvent::RestartResult { node: n, task, ok: false } if *n == node => {
+            // escalation of an already-detected failure: the restart outcome
+            // arrives via process supervision
+            ("restart_escalation".into(), cost::DETECT_PROCESS_S, Some(*task))
+        }
+        CoordEvent::ReattemptResult { node: n, task, ok: false } if *n == node => {
+            ("reattempt_escalation".into(), cost::DETECT_PROCESS_S, Some(*task))
+        }
+        CoordEvent::Batch(members) => members
+            .iter()
+            .map(|m| isolation_cause(m, node))
+            .find(|(kind, _, _)| kind != "unknown")
+            .unwrap_or_else(|| ("unknown".into(), 0.0, None)),
+        _ => ("unknown".into(), 0.0, None),
+    }
+}
+
+fn render_incident(n: usize, inc: &Incident) -> Result<String, String> {
+    let mut out = String::new();
+    let task = inc.task.map(|t| format!(", task {}", t.0)).unwrap_or_default();
+    out.push_str(&format!("\n== incident {n}: node {} ({}{task}) ==\n", inc.node, inc.kind));
+    if !inc.detected_at_s.is_finite() || !inc.detection_s.is_finite() {
+        return Err(format!("incident {n}: non-finite timestamps"));
+    }
+    if inc.detection_s > 0.0 {
+        out.push_str(&format!(
+            "  t={:<10} failure occurs (inferred: detection latency {})\n",
+            sec(inc.failed_at_s()),
+            fmt_duration(inc.detection_s)
+        ));
+    }
+    out.push_str(&format!(
+        "  t={:<10} detected; node {} fenced out of the pool\n",
+        sec(inc.detected_at_s),
+        inc.node
+    ));
+    let Some(rp) = &inc.replan else {
+        out.push_str("  (unresolved: consolidated replan still pending)\n");
+        return Ok(out);
+    };
+    // the standing invariant, enforced at render time: breakdown terms
+    // reconcile exactly (within float tolerance) to the plan objective
+    let recon = rp.running_reward - rp.transition_penalty - rp.detection_penalty;
+    let tol = 1e-6 * rp.objective.abs().max(1.0);
+    if (recon - rp.objective).abs() > tol {
+        return Err(format!(
+            "incident {n}: cost terms do not reconcile: {} − {} − {} = {} ≠ objective {}",
+            rp.running_reward, rp.transition_penalty, rp.detection_penalty, recon, rp.objective
+        ));
+    }
+    if !rp.transition_s.is_finite() || rp.transition_s < 0.0 {
+        return Err(format!("incident {n}: bad transition estimate {}", rp.transition_s));
+    }
+    let path = match rp.lookup_hit {
+        Some(true) => ", table hit",
+        Some(false) => ", live solve",
+        None => "",
+    };
+    out.push_str(&format!(
+        "  t={:<10} replan committed ({}): {} workers, state from {}{path}\n",
+        sec(rp.at_s),
+        rp.reason,
+        rp.workers_used,
+        rp.state_source
+    ));
+    out.push_str(&format!(
+        "             objective {} = reward {} − transition {} − detection {}\n",
+        fmt_si(rp.objective),
+        fmt_si(rp.running_reward),
+        fmt_si(rp.transition_penalty),
+        fmt_si(rp.detection_penalty)
+    ));
+    if let Some(d) = rp.decide_s {
+        let phases = rp
+            .phase_s
+            .map(|ph| {
+                let parts: Vec<String> = Phase::all()
+                    .iter()
+                    .filter(|&&p| ph[p as usize] > 0.0)
+                    .map(|&p| format!("{} {}", p.name(), lat(ph[p as usize])))
+                    .collect();
+                format!(" ({})", parts.join(", "))
+            })
+            .unwrap_or_default();
+        out.push_str(&format!("             decide latency {}{phases}\n", lat(d)));
+    }
+    if let Some(rec) = inc.recovered_at_s {
+        let downtime = rec - inc.failed_at_s();
+        out.push_str(&format!(
+            "  t={:<10} transition complete (est. {}) — recovered; downtime {}\n",
+            sec(rec),
+            fmt_duration(rp.transition_s),
+            fmt_duration(downtime)
+        ));
+    }
+    Ok(out)
+}
+
+/// `123.456 -> "123.5s"` — timeline timestamps.
+fn sec(s: f64) -> String {
+    format!("{s:.1}s")
+}
+
+/// Sub-millisecond-friendly latency formatting (decide phases are µs-scale).
+fn lat(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.0}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::ErrorKind;
+    use crate::planner::Plan;
+
+    fn sev1_plan(objective: f64) -> Plan {
+        let mut plan = Plan {
+            assignment: vec![8],
+            objective,
+            total_waf: 1e12,
+            workers_used: 8,
+            breakdown: Default::default(),
+            layout: Default::default(),
+        };
+        plan.breakdown.running_reward = objective + 3e10;
+        plan.breakdown.transition_penalty = 2e10;
+        plan.breakdown.detection_penalty = 1e10;
+        plan
+    }
+
+    #[test]
+    fn error_report_isolation_opens_and_replan_closes() {
+        let mut t = Timeline::default();
+        let event = CoordEvent::ErrorReport {
+            node: NodeId(3),
+            task: TaskId(0),
+            kind: ErrorKind::EccError,
+        };
+        let actions = vec![
+            Action::IsolateNode { node: NodeId(3) },
+            Action::AlertOps { message: "SEV1".into() },
+            Action::ApplyPlan { plan: sev1_plan(1e12), reason: PlanReason::Sev1Failure },
+        ];
+        t.record(100.0, &event, &actions, None);
+        let incs: Vec<&Incident> = t.incidents().collect();
+        assert_eq!(incs.len(), 1);
+        let inc = incs[0];
+        assert_eq!(inc.node, NodeId(3));
+        assert_eq!(inc.kind, "ecc_error");
+        assert_eq!(inc.task, Some(TaskId(0)));
+        assert_eq!(inc.detection_s, cost::detection_latency_s(ErrorKind::EccError));
+        assert!(inc.failed_at_s() < inc.detected_at_s);
+        let rp = inc.replan.as_ref().expect("closed by the replan");
+        assert_eq!(rp.workers_used, 8);
+        assert_eq!(
+            inc.recovered_at_s,
+            Some(100.0 + rp.transition_s),
+            "recovery = replan + transition"
+        );
+        assert!(t.open_incidents().is_empty());
+        let text = t.render().expect("consistent timeline renders");
+        assert!(text.contains("incident 1: node 3 (ecc_error, task 0)"), "{text}");
+        assert!(text.contains("detection latency"), "{text}");
+        assert!(text.contains("recovered"), "{text}");
+    }
+
+    #[test]
+    fn deferred_burst_stays_open_until_the_consolidated_replan() {
+        let mut t = Timeline::default();
+        t.record(
+            10.0,
+            &CoordEvent::NodeLost { node: NodeId(1) },
+            &[
+                Action::IsolateNode { node: NodeId(1) },
+                Action::ScheduleReplan { after_s: 900.0 },
+            ],
+            None,
+        );
+        assert_eq!(t.open_incidents().len(), 1);
+        assert!(t.render().unwrap().contains("unresolved"), "open incident renders as pending");
+        t.record(
+            910.0,
+            &CoordEvent::ReplanDue,
+            &[Action::ApplyPlan { plan: sev1_plan(5e11), reason: PlanReason::Sev1Failure }],
+            None,
+        );
+        assert!(t.open_incidents().is_empty(), "the consolidated replan settles the burst");
+        let incs: Vec<&Incident> = t.incidents().collect();
+        assert_eq!(incs[0].kind, "node_lost");
+        assert_eq!(incs[0].detection_s, cost::DETECT_NODE_HEALTH_S);
+        assert_eq!(incs[0].replan.as_ref().unwrap().at_s, 910.0);
+    }
+
+    #[test]
+    fn non_reconciling_terms_fail_the_render() {
+        let mut t = Timeline::default();
+        let mut plan = sev1_plan(1e12);
+        plan.breakdown.running_reward = 0.0; // terms no longer sum to objective
+        t.record(
+            5.0,
+            &CoordEvent::NodeLost { node: NodeId(0) },
+            &[
+                Action::IsolateNode { node: NodeId(0) },
+                Action::ApplyPlan { plan, reason: PlanReason::Sev1Failure },
+            ],
+            None,
+        );
+        let err = t.render().expect_err("inconsistent terms must not render");
+        assert!(err.contains("reconcile"), "{err}");
+    }
+
+    #[test]
+    fn value_round_trip_preserves_the_timeline() {
+        let mut t = Timeline::default();
+        t.record(
+            1.0,
+            &CoordEvent::TaskLaunched { task: TaskId(0) },
+            &[Action::ApplyPlan { plan: sev1_plan(1e12), reason: PlanReason::TaskLaunched }],
+            None,
+        );
+        t.record(
+            50.0,
+            &CoordEvent::ErrorReport {
+                node: NodeId(2),
+                task: TaskId(0),
+                kind: ErrorKind::LostConnection,
+            },
+            &[
+                Action::IsolateNode { node: NodeId(2) },
+                Action::ApplyPlan { plan: sev1_plan(9e11), reason: PlanReason::Sev1Failure },
+            ],
+            None,
+        );
+        t.record(
+            60.0,
+            &CoordEvent::NodeLost { node: NodeId(4) },
+            &[Action::IsolateNode { node: NodeId(4) }, Action::ScheduleReplan { after_s: 900.0 }],
+            None,
+        );
+        let back = Timeline::from_value(&t.to_value()).expect("round trip");
+        assert_eq!(back, t);
+        assert_eq!(back.open_incidents().len(), 1);
+        // strictness: a report missing required fields is an error
+        assert!(Timeline::from_value(&Value::obj()).is_err());
+        let broken = Value::obj().with("entries", Value::Arr(vec![Value::obj()]));
+        assert!(Timeline::from_value(&broken).is_err());
+    }
+
+    #[test]
+    fn batch_members_flatten_into_history() {
+        let mut t = Timeline::default();
+        let batch = CoordEvent::Batch(vec![
+            CoordEvent::NodeLost { node: NodeId(0) },
+            CoordEvent::NodeLost { node: NodeId(2) },
+        ]);
+        let actions = vec![
+            Action::IsolateNode { node: NodeId(0) },
+            Action::IsolateNode { node: NodeId(2) },
+            Action::ApplyPlan { plan: sev1_plan(4e11), reason: PlanReason::Sev1Failure },
+        ];
+        t.record(30.0, &batch, &actions, None);
+        assert_eq!(t.incidents().count(), 2, "one incident per lost node");
+        assert!(
+            t.incidents().all(|i| i.replan.is_some()),
+            "the one consolidated plan closes both"
+        );
+        assert_eq!(t.entries().iter().filter(|e| e.label == "node_lost").count(), 2);
+    }
+}

@@ -17,6 +17,18 @@ pub enum Level {
     Error = 3,
 }
 
+impl Level {
+    /// Stable lowercase tag — what structured log events serialize as.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
 static LOG_LEVEL: AtomicUsize = AtomicUsize::new(1);
 
 /// Set the global log level.

@@ -68,8 +68,8 @@ fn assert_unified(trace: &Trace) {
         sim.plan_lookup_hits > 0,
         "simulated SEV1/join replans must exercise the ScenarioLookup path"
     );
-    assert_eq!(coord.lookup_hits, 0, "the replay twin must be the solver path");
-    assert!(coord.solve_calls > 0);
+    assert_eq!(coord.lookup_hits(), 0, "the replay twin must be the solver path");
+    assert!(coord.solve_calls() > 0);
     // every committed Unicron plan carries a concrete, disjoint layout
     let mut plans = 0;
     for a in sim.decision_log.actions() {

@@ -1,0 +1,132 @@
+//! Replay-safety property for the telemetry layer (DESIGN.md §14): tracing
+//! is observe-only. For randomized event sequences, a coordinator with span
+//! and timeline tracing enabled must make *bit-identical* decisions to one
+//! with tracing disabled — same per-event action lists, same serialized
+//! [`DecisionLog`] bytes — and the recorded log must replay cleanly through
+//! a fresh coordinator. If instrumentation ever feeds back into the decide
+//! path (a counter read steering a branch, a span allocation reordering a
+//! plan), this test is the tripwire.
+
+use unicron::config::TaskSpec;
+use unicron::coordinator::Coordinator;
+use unicron::cost::TransitionProfile;
+use unicron::failure::ErrorKind;
+use unicron::planner::PlanTask;
+use unicron::proptest::{run, Config, Prop};
+use unicron::proto::{CoordEvent, NodeId, TaskId, WorkerCount};
+use unicron::rng::{Rand, Xoshiro256};
+use unicron::transition::StateSource;
+
+const WORKERS: u32 = 32;
+
+fn plan_task(id: u32, min: u32, current: u32, n: u32) -> PlanTask {
+    let throughput =
+        (0..=n).map(|x| if x >= min { 1e12 * (x as f64).powf(0.9) } else { 0.0 }).collect();
+    PlanTask {
+        spec: TaskSpec::new(id, "m", 1.0, min),
+        throughput,
+        profile: TransitionProfile::flat(5.0),
+        current: WorkerCount(current),
+        fault: false,
+        fault_source: StateSource::InMemoryCheckpoint,
+        fault_restore_s: None,
+    }
+}
+
+fn coordinator(tracing: bool) -> Coordinator {
+    Coordinator::builder()
+        .workers(WORKERS)
+        .gpus_per_node(8u32)
+        .task(plan_task(0, 2, WORKERS / 2, WORKERS + 16))
+        .task(plan_task(1, 2, WORKERS / 2, WORKERS + 16))
+        .telemetry(tracing)
+        .build()
+}
+
+/// One random coordinator event over the two admitted tasks and a node pool
+/// slightly larger than the fleet (so joins/losses of unknown nodes are
+/// exercised too).
+fn gen_event(rng: &mut Xoshiro256) -> CoordEvent {
+    let node = NodeId(rng.below(6) as u32);
+    let task = TaskId(rng.below(2) as u32);
+    let kinds = ErrorKind::all();
+    let kind = kinds[rng.below(kinds.len() as u64) as usize];
+    match rng.below(8) {
+        0 | 1 | 2 => CoordEvent::ErrorReport { node, task, kind },
+        3 => CoordEvent::NodeLost { node },
+        4 => CoordEvent::NodeJoined { node },
+        5 => CoordEvent::NodeRepaired { node },
+        6 => CoordEvent::ReplanDue,
+        _ => {
+            // burst: two simultaneous reports, the batched-dispatch path
+            let other = NodeId(rng.below(6) as u32);
+            CoordEvent::Batch(vec![
+                CoordEvent::ErrorReport { node, task, kind },
+                CoordEvent::NodeLost { node: other },
+            ])
+        }
+    }
+}
+
+/// Event sequence with strictly increasing timestamps.
+fn gen_sequence(rng: &mut Xoshiro256, size: usize) -> Vec<(f64, CoordEvent)> {
+    let len = 1 + rng.below(size as u64 + 1) as usize;
+    let mut at_s = 0.0;
+    (0..len)
+        .map(|_| {
+            at_s += rng.uniform(0.5, 600.0);
+            (at_s, gen_event(rng))
+        })
+        .collect()
+}
+
+#[test]
+fn tracing_on_is_bit_identical_to_tracing_off() {
+    run(
+        "telemetry_replay_safe",
+        Config { cases: 40, max_size: 40, ..Default::default() },
+        gen_sequence,
+        |events| {
+            let mut traced = coordinator(true);
+            let mut quiet = coordinator(false);
+            for (at_s, event) in events {
+                let a = traced.handle_at(event.clone(), *at_s);
+                let b = quiet.handle_at(event.clone(), *at_s);
+                if a != b {
+                    return Prop::Fail(format!(
+                        "actions diverged at t={at_s} on {event:?}:\n  traced: {a:?}\n  quiet:  {b:?}"
+                    ));
+                }
+            }
+
+            // the audit trail — the thing replay and `unicron obs` consume —
+            // must be byte-identical, not merely logically equal
+            if traced.log.to_bytes() != quiet.log.to_bytes() {
+                return Prop::Fail("DecisionLog bytes differ between tracing on/off".into());
+            }
+
+            // tracing actually traced (and only where enabled)
+            if traced.telemetry().spans().len() != events.len() {
+                return Prop::Fail(format!(
+                    "traced coordinator recorded {} spans for {} events",
+                    traced.telemetry().spans().len(),
+                    events.len()
+                ));
+            }
+            if !quiet.telemetry().spans().is_empty() {
+                return Prop::Fail("tracing-off coordinator recorded spans".into());
+            }
+
+            // and the recorded log replays decision-for-decision through a
+            // fresh traced coordinator (no tasks launch mid-sequence, so the
+            // admit callback is never consulted)
+            let mut fresh = coordinator(true);
+            match traced.log.replay(&mut fresh, |_| None) {
+                Ok(steps) => Prop::check(steps == traced.log.len(), || {
+                    format!("replay covered {steps} of {} entries", traced.log.len())
+                }),
+                Err(d) => Prop::Fail(format!("replay diverged: {d}")),
+            }
+        },
+    );
+}
