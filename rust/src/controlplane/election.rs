@@ -1,0 +1,282 @@
+//! Lease-based leader election over the shared [`Store`] (DESIGN.md §15).
+//!
+//! Protocol (etcd-style lock with a fencing token):
+//!
+//! 1. [`TERM_KEY`] is a monotonic counter. Before a candidate may claim
+//!    leadership it CAS-bumps the counter; the new value is its *term*.
+//!    Terms only move forward — even a candidate that loses the key race
+//!    below has already fenced every older leader.
+//! 2. [`LEADER_KEY`] holds `{term, addr}` and is attached to a TTL lease.
+//!    Claiming is a put-if-absent CAS: exactly one candidate per vacancy
+//!    wins. The winner heartbeats the lease; when the process dies or
+//!    stalls past the TTL, the key expires and the next sweep frees it.
+//! 3. Every participant tracks the highest term it has observed. Writes
+//!    (replication frames, ingests) stamped with an older term are stale —
+//!    they come from a deposed leader — and are refused.
+//!
+//! The substrate is the repo's own `kvstore`, reached either in-process
+//! ([`Store`]) or over the wire ([`KvClient`]) via the [`ElectionKv`] trait,
+//! so a single-host test and a multi-host deployment run the same protocol.
+
+use anyhow::{anyhow, Result};
+
+use crate::kvstore::net::KvClient;
+use crate::kvstore::Store;
+use crate::ser::Value;
+
+/// Holds `{term, addr}` under the winner's lease.
+pub const LEADER_KEY: &str = "/election/leader";
+/// Monotonic fencing counter; CAS-bumped by every acquisition attempt.
+pub const TERM_KEY: &str = "/election/term";
+
+/// What the leader key holds: the fencing term and the service address
+/// standbys replicate from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeaderInfo {
+    pub term: u64,
+    pub addr: String,
+}
+
+impl LeaderInfo {
+    pub fn to_value(&self) -> Value {
+        Value::obj().with("term", self.term).with("addr", self.addr.as_str())
+    }
+
+    pub fn from_value(v: &Value) -> Option<LeaderInfo> {
+        Some(LeaderInfo {
+            term: v.get("term")?.as_u64()?,
+            addr: v.get("addr")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// The five store operations the election needs, over either an in-process
+/// [`Store`] handle or a remote [`KvClient`].
+pub trait ElectionKv: Send {
+    fn get(&mut self, key: &str) -> Result<Option<(String, u64)>>;
+    fn cas(
+        &mut self,
+        key: &str,
+        expected: Option<u64>,
+        value: &str,
+        lease: Option<u64>,
+    ) -> Result<Option<u64>>;
+    fn grant_lease(&mut self, ttl_s: f64) -> Result<u64>;
+    fn keepalive(&mut self, lease: u64) -> Result<()>;
+    fn revoke_lease(&mut self, lease: u64) -> Result<()>;
+    /// Drive lease expiry. An in-process store is swept by whoever holds
+    /// it, so the local impl ticks; a remote store is swept by its serving
+    /// process, so the client impl is a no-op.
+    fn tick(&mut self) {}
+}
+
+impl ElectionKv for Store {
+    fn get(&mut self, key: &str) -> Result<Option<(String, u64)>> {
+        Ok(Store::get(self, key))
+    }
+
+    fn cas(
+        &mut self,
+        key: &str,
+        expected: Option<u64>,
+        value: &str,
+        lease: Option<u64>,
+    ) -> Result<Option<u64>> {
+        Store::cas(self, key, expected, value, lease).map_err(|e| anyhow!(e))
+    }
+
+    fn grant_lease(&mut self, ttl_s: f64) -> Result<u64> {
+        Ok(Store::grant_lease(self, ttl_s))
+    }
+
+    fn keepalive(&mut self, lease: u64) -> Result<()> {
+        Store::keepalive(self, lease).map_err(|e| anyhow!(e))
+    }
+
+    fn revoke_lease(&mut self, lease: u64) -> Result<()> {
+        Store::revoke_lease(self, lease);
+        Ok(())
+    }
+
+    fn tick(&mut self) {
+        let _ = Store::tick(self);
+    }
+}
+
+impl ElectionKv for KvClient {
+    fn get(&mut self, key: &str) -> Result<Option<(String, u64)>> {
+        KvClient::get_rev(self, key)
+    }
+
+    fn cas(
+        &mut self,
+        key: &str,
+        expected: Option<u64>,
+        value: &str,
+        lease: Option<u64>,
+    ) -> Result<Option<u64>> {
+        KvClient::cas(self, key, expected, value, lease)
+    }
+
+    fn grant_lease(&mut self, ttl_s: f64) -> Result<u64> {
+        KvClient::lease_grant(self, ttl_s)
+    }
+
+    fn keepalive(&mut self, lease: u64) -> Result<()> {
+        KvClient::keepalive(self, lease)
+    }
+
+    fn revoke_lease(&mut self, lease: u64) -> Result<()> {
+        KvClient::lease_revoke(self, lease)
+    }
+}
+
+/// One participant's view of the election.
+pub struct Election {
+    kv: Box<dyn ElectionKv>,
+    ttl_s: f64,
+    lease: Option<u64>,
+    observed_term: u64,
+}
+
+impl Election {
+    pub fn new(kv: Box<dyn ElectionKv>, ttl_s: f64) -> Election {
+        Election { kv, ttl_s, lease: None, observed_term: 0 }
+    }
+
+    /// Who currently holds the lease, if anyone. Also advances lease
+    /// expiry on in-process stores and folds the key's term into this
+    /// participant's observed maximum.
+    pub fn current_leader(&mut self) -> Result<Option<LeaderInfo>> {
+        self.kv.tick();
+        let Some((raw, _)) = self.kv.get(LEADER_KEY)? else {
+            return Ok(None);
+        };
+        let v = Value::parse(&raw).map_err(|e| anyhow!("bad leader key: {e}"))?;
+        let info = LeaderInfo::from_value(&v).ok_or_else(|| anyhow!("bad leader key: {raw}"))?;
+        self.observed_term = self.observed_term.max(info.term);
+        Ok(Some(info))
+    }
+
+    /// Highest term seen so far (from the key, or from a won election).
+    pub fn observed_term(&self) -> u64 {
+        self.observed_term
+    }
+
+    /// Try to become leader: fence (CAS-bump [`TERM_KEY`]), then claim
+    /// [`LEADER_KEY`] under a fresh lease. Returns the won term, or `None`
+    /// when another participant holds — or just won — the key.
+    pub fn try_acquire(&mut self, addr: &str) -> Result<Option<u64>> {
+        if self.current_leader()?.is_some() {
+            return Ok(None);
+        }
+        let (cur, rev) = match self.kv.get(TERM_KEY)? {
+            Some((raw, rev)) => {
+                (raw.parse::<u64>().map_err(|_| anyhow!("bad term key: {raw}"))?, Some(rev))
+            }
+            None => (0, None),
+        };
+        let term = cur.max(self.observed_term) + 1;
+        if self.kv.cas(TERM_KEY, rev, &term.to_string(), None)?.is_none() {
+            return Ok(None); // a racing candidate fenced first; retry later
+        }
+        let lease = self.kv.grant_lease(self.ttl_s)?;
+        let info = LeaderInfo { term, addr: addr.to_string() };
+        match self.kv.cas(LEADER_KEY, None, &info.to_value().encode(), Some(lease))? {
+            Some(_) => {
+                self.lease = Some(lease);
+                self.observed_term = term;
+                Ok(Some(term))
+            }
+            None => {
+                // lost the key race; don't leave an orphan lease behind
+                self.kv.revoke_lease(lease)?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Leader heartbeat: refresh the lease. An error means leadership is
+    /// lost — the lease expired, e.g. the process stalled past the TTL —
+    /// and the caller must demote itself immediately.
+    pub fn heartbeat(&mut self) -> Result<()> {
+        match self.lease {
+            Some(l) => self.kv.keepalive(l),
+            None => Err(anyhow!("not leader: no lease held")),
+        }
+    }
+
+    /// Voluntarily give up leadership (clean shutdown): revoke the lease
+    /// so the key frees immediately instead of after a TTL.
+    pub fn resign(&mut self) -> Result<()> {
+        if let Some(l) = self.lease.take() {
+            self.kv.revoke_lease(l)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SimClock;
+    use std::sync::Arc;
+
+    fn shared_store() -> (Store, Arc<SimClock>) {
+        let clock = SimClock::new();
+        (Store::new(clock.clone()), clock)
+    }
+
+    #[test]
+    fn first_candidate_wins_term_one() {
+        let (store, _clock) = shared_store();
+        let mut e = Election::new(Box::new(store.clone()), 5.0);
+        assert_eq!(e.try_acquire("10.0.0.1:7000").unwrap(), Some(1));
+        let leader = e.current_leader().unwrap().unwrap();
+        assert_eq!(leader, LeaderInfo { term: 1, addr: "10.0.0.1:7000".into() });
+    }
+
+    #[test]
+    fn second_candidate_defers_then_succeeds_with_higher_term() {
+        let (store, clock) = shared_store();
+        let mut a = Election::new(Box::new(store.clone()), 5.0);
+        let mut b = Election::new(Box::new(store.clone()), 5.0);
+        assert_eq!(a.try_acquire("a:1").unwrap(), Some(1));
+        assert_eq!(b.try_acquire("b:1").unwrap(), None);
+        // leader dies: no more heartbeats, lease expires, key frees
+        clock.advance(6.0);
+        assert_eq!(b.try_acquire("b:1").unwrap(), Some(2));
+        assert_eq!(b.current_leader().unwrap().unwrap().addr, "b:1");
+        // the deposed leader's heartbeat now fails: its lease is gone
+        assert!(a.heartbeat().is_err());
+    }
+
+    #[test]
+    fn resign_frees_the_key_immediately() {
+        let (store, _clock) = shared_store();
+        let mut a = Election::new(Box::new(store.clone()), 60.0);
+        let mut b = Election::new(Box::new(store.clone()), 60.0);
+        assert_eq!(a.try_acquire("a:1").unwrap(), Some(1));
+        a.resign().unwrap();
+        // no TTL wait needed: the revoke deleted the lease-attached key
+        assert_eq!(b.try_acquire("b:1").unwrap(), Some(2));
+    }
+
+    #[test]
+    fn terms_are_monotonic_across_reigns() {
+        let (store, _clock) = shared_store();
+        let mut e = Election::new(Box::new(store.clone()), 60.0);
+        for expect in 1..=3u64 {
+            assert_eq!(e.try_acquire("x:1").unwrap(), Some(expect));
+            e.resign().unwrap();
+        }
+    }
+
+    #[test]
+    fn leader_info_roundtrip_and_strict_parse() {
+        let info = LeaderInfo { term: 7, addr: "h:9".into() };
+        assert_eq!(LeaderInfo::from_value(&info.to_value()), Some(info));
+        assert_eq!(LeaderInfo::from_value(&Value::obj().with("term", 7u64)), None);
+        assert_eq!(LeaderInfo::from_value(&Value::Null), None);
+    }
+}

@@ -1,0 +1,36 @@
+//! High-availability control plane (DESIGN.md §15): the networked
+//! coordinator service, decision-log replication, and leader election.
+//!
+//! The [`crate::coordinator::Coordinator`] is the single brain that
+//! minimizes failure cost across the cluster (§4 of the paper) — which
+//! also makes it the one unreplicated single point of failure in the live
+//! driver. This subsystem closes that gap with classic state-machine
+//! replication, exploiting an invariant the repo has maintained since the
+//! decision log landed: the coordinator is *deterministic*, so a follower
+//! that replays the same committed [`crate::proto::DecisionLog`] prefix
+//! holds bit-identical state. No snapshot shipping, no state diffing —
+//! the log IS the replication payload.
+//!
+//! Three layers, one per module:
+//!
+//! * [`service`] — the RPC surface (`ingest_event`, `get_report`,
+//!   `query_plan`, `subscribe_log`) with bounded-queue backpressure and
+//!   registry-backed telemetry (`cp.*` instruments).
+//! * [`replication`] — sequence-numbered, strictly-decoded commit frames
+//!   (wire v7) and the follower's replay-and-verify apply path.
+//! * [`election`] — lease-based leader election over the shared
+//!   [`crate::kvstore::Store`]: a monotonic fencing term plus a TTL lease
+//!   kept alive by heartbeats. A standby that wins the lease finishes
+//!   applying its stream and takes over mid-incident; writes stamped with
+//!   a deposed leader's term are refused.
+
+pub mod election;
+pub mod replication;
+pub mod service;
+
+pub use election::{Election, ElectionKv, LeaderInfo, LEADER_KEY, TERM_KEY};
+pub use replication::{ack_seq, ack_value, apply_frame, LogFrame, ReplicaError};
+pub use service::{
+    ControlPlane, ControlPlaneConfig, CpClient, Role, CODE_BACKPRESSURE, CODE_BAD_REQUEST,
+    CODE_NOT_LEADER, CODE_STALE_TERM,
+};

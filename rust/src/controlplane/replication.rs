@@ -1,0 +1,213 @@
+//! Decision-log replication frames (wire v7) and the follower apply path.
+//!
+//! Every entry the leader commits streams to standbys as a [`LogFrame`]:
+//! the leader's fencing term plus the committed [`LogEntry`] (which carries
+//! its own dense `seq` since wire v7). Decoding is strict — an unknown
+//! frame kind, a missing field, or a malformed entry is an error, never a
+//! skip — because a replica that guesses at a commit silently diverges.
+//!
+//! Applying is *replay*, not state transfer: [`apply_frame`] feeds the
+//! entry's event through the follower's own [`Coordinator`] at the recorded
+//! clock and insists the actions match what the leader recorded. Because
+//! the coordinator is deterministic (the invariant PRs 2–8 maintain), a
+//! follower that applies the same prefix holds bit-identical state — so
+//! takeover needs no snapshot shipping, only the log.
+
+use std::fmt;
+
+use crate::coordinator::Coordinator;
+use crate::proto::{LogEntry, ProtoError};
+use crate::ser::Value;
+
+/// One replicated commit: the leader's fencing term plus the entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogFrame {
+    pub term: u64,
+    pub entry: LogEntry,
+}
+
+impl LogFrame {
+    pub fn to_value(&self) -> Value {
+        Value::obj()
+            .with("frame", "entry")
+            .with("term", self.term)
+            .with("entry", self.entry.to_value())
+    }
+
+    /// Strict decode: unknown kinds and malformed entries are errors.
+    pub fn from_value(v: &Value) -> Result<LogFrame, ProtoError> {
+        match v.get("frame").and_then(Value::as_str) {
+            Some("entry") => {}
+            Some(other) => return Err(ProtoError::new(format!("unknown frame kind {other:?}"))),
+            None => return Err(ProtoError::new("missing field \"frame\"")),
+        }
+        let term = v
+            .req("term")?
+            .as_u64()
+            .ok_or_else(|| ProtoError::new("field \"term\" is not an unsigned integer"))?;
+        Ok(LogFrame { term, entry: LogEntry::from_value(v.req("entry")?)? })
+    }
+}
+
+/// The standby's ack for a fully applied commit: `{"ack": seq}`.
+pub fn ack_value(seq: u64) -> Value {
+    Value::obj().with("ack", seq)
+}
+
+/// Parse an ack frame back into the applied sequence number.
+pub fn ack_seq(v: &Value) -> Option<u64> {
+    v.get("ack").and_then(Value::as_u64)
+}
+
+/// Why a replica refused (or failed) to apply a frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplicaError {
+    /// Frame from a deposed leader: its term is older than the replica's
+    /// observed term. Refused outright — the fencing guarantee.
+    StaleTerm { frame_term: u64, current_term: u64 },
+    /// Sequence gap or reorder: commits must apply densely, in order.
+    SeqGap { expected: u64, got: u64 },
+    /// The follower's replay decided differently than the leader recorded —
+    /// a determinism bug or divergent initial state. Never apply past it.
+    Diverged(String),
+}
+
+impl fmt::Display for ReplicaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplicaError::StaleTerm { frame_term, current_term } => {
+                write!(f, "stale term {frame_term} (current {current_term}): frame refused")
+            }
+            ReplicaError::SeqGap { expected, got } => {
+                write!(f, "sequence gap: expected seq {expected}, got {got}")
+            }
+            ReplicaError::Diverged(msg) => write!(f, "replay diverged: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ReplicaError {}
+
+/// Apply one replicated commit to a follower coordinator by replaying the
+/// event at its recorded clock. The follower's own `handle_at` records the
+/// entry into its log (with the same `seq`, by density), so after `Ok` the
+/// follower's log prefix — and therefore its state — matches the leader's.
+pub fn apply_frame(
+    coord: &mut Coordinator,
+    current_term: u64,
+    frame: &LogFrame,
+) -> Result<(), ReplicaError> {
+    if frame.term < current_term {
+        return Err(ReplicaError::StaleTerm { frame_term: frame.term, current_term });
+    }
+    let expected = coord.log.next_seq();
+    if frame.entry.seq != expected {
+        return Err(ReplicaError::SeqGap { expected, got: frame.entry.seq });
+    }
+    let got = coord.handle_at(frame.entry.event.clone(), frame.entry.at_s);
+    if got != frame.entry.actions {
+        return Err(ReplicaError::Diverged(format!(
+            "seq {}: leader recorded {:?}, replay produced {:?}",
+            frame.entry.seq, frame.entry.actions, got
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::UnicronConfig;
+    use crate::cost::TransitionProfile;
+    use crate::perfmodel::TaskSpec;
+    use crate::planner::PlanTask;
+    use crate::proto::{CoordEvent, NodeId, WorkerCount};
+    use crate::transition::StateSource;
+
+    fn coord() -> Coordinator {
+        let mut c = Coordinator::builder()
+            .config(UnicronConfig::default())
+            .workers(8)
+            .gpus_per_node(8)
+            .build();
+        c.add_task(PlanTask {
+            spec: TaskSpec::new(0u32, "m", 1.0, 1),
+            throughput: (0..=8u32).map(|x| 1e12 * x as f64).collect(),
+            profile: TransitionProfile::flat(5.0),
+            current: WorkerCount(8),
+            fault: false,
+            fault_source: StateSource::InMemoryCheckpoint,
+            fault_restore_s: None,
+        });
+        c
+    }
+
+    #[test]
+    fn frame_roundtrip_is_exact() {
+        let mut leader = coord();
+        leader.handle_at(CoordEvent::NodeLost { node: NodeId(1) }, 10.0);
+        let frame = LogFrame { term: 3, entry: leader.log.entries[0].clone() };
+        let decoded = LogFrame::from_value(&frame.to_value()).unwrap();
+        assert_eq!(decoded, frame);
+    }
+
+    #[test]
+    fn strict_decode_rejects_bad_frames() {
+        let mut leader = coord();
+        leader.handle_at(CoordEvent::NodeLost { node: NodeId(1) }, 10.0);
+        let good = LogFrame { term: 1, entry: leader.log.entries[0].clone() }.to_value();
+        assert!(LogFrame::from_value(&good).is_ok());
+        // unknown kind
+        let bad = good.clone().with("frame", "snapshot");
+        assert!(LogFrame::from_value(&bad).is_err());
+        // missing term
+        let enc = good.encode().replace("\"term\":1,", "");
+        assert!(LogFrame::from_value(&Value::parse(&enc).unwrap()).is_err());
+        // tampered entry (seq became a string)
+        let enc = good.encode().replace("\"seq\":0", "\"seq\":\"0\"");
+        assert!(LogFrame::from_value(&Value::parse(&enc).unwrap()).is_err());
+        assert!(LogFrame::from_value(&Value::Null).is_err());
+    }
+
+    #[test]
+    fn follower_replay_matches_leader_log() {
+        let mut leader = coord();
+        let mut follower = coord();
+        let events = [
+            (CoordEvent::NodeLost { node: NodeId(1) }, 10.0),
+            (CoordEvent::NodeJoined { node: NodeId(1) }, 40.0),
+            (CoordEvent::NodeLost { node: NodeId(2) }, 55.0),
+        ];
+        for (ev, at) in events {
+            leader.handle_at(ev, at);
+            let e = leader.log.entries.last().unwrap().clone();
+            apply_frame(&mut follower, 1, &LogFrame { term: 1, entry: e }).unwrap();
+        }
+        assert_eq!(follower.log, leader.log);
+        assert_eq!(follower.log.next_seq(), 3);
+    }
+
+    #[test]
+    fn gap_and_stale_term_are_refused() {
+        let mut leader = coord();
+        let mut follower = coord();
+        leader.handle_at(CoordEvent::NodeLost { node: NodeId(1) }, 10.0);
+        leader.handle_at(CoordEvent::NodeLost { node: NodeId(2) }, 20.0);
+        let e0 = leader.log.entries[0].clone();
+        let e1 = leader.log.entries[1].clone();
+        // seq 1 before seq 0: gap
+        assert_eq!(
+            apply_frame(&mut follower, 1, &LogFrame { term: 1, entry: e1.clone() }),
+            Err(ReplicaError::SeqGap { expected: 0, got: 1 })
+        );
+        // stale term: a term-1 frame against a term-2 replica
+        assert_eq!(
+            apply_frame(&mut follower, 2, &LogFrame { term: 1, entry: e0.clone() }),
+            Err(ReplicaError::StaleTerm { frame_term: 1, current_term: 2 })
+        );
+        // in order and current-term: applies
+        apply_frame(&mut follower, 1, &LogFrame { term: 1, entry: e0 }).unwrap();
+        apply_frame(&mut follower, 1, &LogFrame { term: 1, entry: e1 }).unwrap();
+        assert_eq!(follower.log, leader.log);
+    }
+}

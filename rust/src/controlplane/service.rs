@@ -1,0 +1,699 @@
+//! The networked coordinator service (DESIGN.md §15): what grows
+//! [`crate::coordinator::live::CoordinatorLive`]'s single-process loop into
+//! a survivable control plane.
+//!
+//! One [`ControlPlane`] node serves four RPC methods over the repo's
+//! framed-JSON transport:
+//!
+//! * `ingest_event` — submit a [`CoordEvent`] for the leader to commit.
+//!   Decoded strictly, then queued on a *bounded* inbound queue; a full
+//!   queue answers a typed `backpressure` reject instead of growing
+//!   without limit. Standbys answer `not_leader`; requests stamped with an
+//!   older term than the node's answer `stale_term` (fencing).
+//! * `get_report` — the four `/fleet/*` report bodies (`health`, `layout`,
+//!   `store`, `metrics`), stamped with the same versioned envelope the
+//!   live loop publishes to the kvstore.
+//! * `query_plan` — role, term, committed sequence, current layout and
+//!   placeable pool, available workers.
+//! * `subscribe_log` — the connection becomes a push stream of
+//!   [`LogFrame`]s from a requested sequence onward; the subscriber acks
+//!   applied entries so the leader can measure replication lag.
+//!
+//! A worker thread drains the inbound queue through the node's own
+//! [`Coordinator`]; an election thread runs the lease protocol
+//! ([`super::election`]) and, on a standby, follows the current leader's
+//! log stream, applying each frame by deterministic replay
+//! ([`super::replication`]). A standby that wins the lease has — by
+//! construction — finished applying every frame it received before the
+//! election ran, so it takes over mid-incident with bit-identical state
+//! and continues the log without a seq gap.
+
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::election::Election;
+use super::replication::{self, LogFrame, ReplicaError};
+use crate::config::ClusterSpec;
+use crate::coordinator::live::{envelope, fleet_health_report, layout_report};
+use crate::coordinator::Coordinator;
+use crate::proto::{CoordEvent, DecisionLog};
+use crate::rpc::{self, err_response, ok_response, Client};
+use crate::ser::Value;
+use crate::store::SnapshotStore;
+use crate::telemetry::{CounterId, GaugeId};
+use crate::util::{Clock, Level};
+
+/// Typed reject code: the inbound queue is full; retry with backoff.
+pub const CODE_BACKPRESSURE: &str = "backpressure";
+/// Typed reject code: the request's term is older than the node's.
+pub const CODE_STALE_TERM: &str = "stale_term";
+/// Typed reject code: this node is a standby; ingest at the leader.
+pub const CODE_NOT_LEADER: &str = "not_leader";
+/// Typed reject code: the event (or report name) failed strict decoding.
+pub const CODE_BAD_REQUEST: &str = "bad_request";
+
+#[derive(Debug, Clone)]
+pub struct ControlPlaneConfig {
+    /// Bound on the inbound event queue; a full queue rejects with
+    /// [`CODE_BACKPRESSURE`] instead of growing without limit.
+    pub queue_capacity: usize,
+    /// Leader lease TTL: how long a crashed leader fences the cluster.
+    pub lease_ttl_s: f64,
+    /// Leader heartbeat / standby election-poll period.
+    pub heartbeat_period_s: f64,
+}
+
+impl Default for ControlPlaneConfig {
+    fn default() -> ControlPlaneConfig {
+        ControlPlaneConfig { queue_capacity: 256, lease_ttl_s: 2.0, heartbeat_period_s: 0.5 }
+    }
+}
+
+/// Which side of the replication stream this node is on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Leader,
+    Standby,
+}
+
+impl Role {
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Leader => "leader",
+            Role::Standby => "standby",
+        }
+    }
+}
+
+/// Instrument ids, registered once in the coordinator's own registry so
+/// they surface in `/fleet/metrics` beside every other counter (standing
+/// invariant: no ad-hoc counters).
+#[derive(Clone, Copy)]
+struct CpMetrics {
+    sessions: CounterId,
+    events_ingested: CounterId,
+    rejects_backpressure: CounterId,
+    queue_depth: GaugeId,
+    replication_lag: GaugeId,
+}
+
+/// Everything guarded by the node mutex: the coordinator (and its log —
+/// the replicated state machine), plus the HA identity.
+struct Node {
+    coord: Coordinator,
+    term: u64,
+    role: Role,
+    metrics: CpMetrics,
+    /// State-tier view for the `store` report (agent checkpoint traffic
+    /// rides the kvstore plane; a service-only node reports empty tiers).
+    state_tier: SnapshotStore,
+}
+
+/// Bounded inbound event queue (the per-connection backpressure point).
+/// Hand-rolled over `Mutex<VecDeque>` + `Condvar` because the drain side
+/// needs a timeout and the push side must *fail fast* when full.
+struct Inbound {
+    q: Mutex<VecDeque<CoordEvent>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl Inbound {
+    fn new(cap: usize) -> Inbound {
+        Inbound { q: Mutex::new(VecDeque::new()), cv: Condvar::new(), cap: cap.max(1) }
+    }
+
+    /// Queue an event; `Err` when full (the caller answers backpressure).
+    /// Returns the depth after the push.
+    fn try_push(&self, ev: CoordEvent) -> Result<usize, ()> {
+        let mut g = self.q.lock().unwrap();
+        if g.len() >= self.cap {
+            return Err(());
+        }
+        g.push_back(ev);
+        let depth = g.len();
+        self.cv.notify_one();
+        Ok(depth)
+    }
+
+    /// Pop with a bounded wait — unless `paused` at pop time. The pause
+    /// check happens under the queue lock, *after* the wait, so a pause
+    /// flipped while the worker was parked still holds back the event a
+    /// concurrent push just notified about.
+    fn pop_timeout(&self, d: Duration, paused: &AtomicBool) -> Option<CoordEvent> {
+        let mut g = self.q.lock().unwrap();
+        if g.is_empty() {
+            let (g2, _) = self.cv.wait_timeout(g, d).unwrap();
+            g = g2;
+        }
+        if paused.load(Ordering::Relaxed) {
+            return None;
+        }
+        g.pop_front()
+    }
+
+    fn depth(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+}
+
+struct Shared {
+    node: Mutex<Node>,
+    /// Signaled on every commit and role change so log subscribers wake
+    /// without polling the mutex.
+    commit_cv: Condvar,
+}
+
+/// A running control-plane node (leader or standby).
+pub struct ControlPlane {
+    /// Bound service address (advertised in the leader key when this node
+    /// wins an election).
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    inbound: Arc<Inbound>,
+    paused: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    crash: Arc<AtomicBool>,
+    server: Option<rpc::Server>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ControlPlane {
+    /// Start a node around a built [`Coordinator`]: RPC service on `addr`,
+    /// the queue-drain worker, and the election/replication thread.
+    ///
+    /// `election` supplies the shared election substrate (an in-process
+    /// [`crate::kvstore::Store`] clone, or a [`crate::kvstore::net::KvClient`]
+    /// to a remote one). `join` is a bootstrap hint: a leader address to
+    /// follow before the leader key has ever been observed.
+    pub fn start(
+        mut coord: Coordinator,
+        clock: Arc<dyn Clock>,
+        addr: &str,
+        cfg: ControlPlaneConfig,
+        election: Election,
+        join: Option<String>,
+    ) -> Result<ControlPlane> {
+        let reg = coord.telemetry_mut().registry_mut();
+        let metrics = CpMetrics {
+            sessions: reg.counter("cp.sessions"),
+            events_ingested: reg.counter("cp.events_ingested"),
+            rejects_backpressure: reg.counter("cp.rejects_backpressure"),
+            queue_depth: reg.gauge("cp.queue_depth", 1.0),
+            replication_lag: reg.gauge("cp.replication_lag_entries", 1.0),
+        };
+        let shared = Arc::new(Shared {
+            node: Mutex::new(Node {
+                coord,
+                term: 0,
+                role: Role::Standby,
+                metrics,
+                state_tier: SnapshotStore::new(&ClusterSpec::default()),
+            }),
+            commit_cv: Condvar::new(),
+        });
+        let inbound = Arc::new(Inbound::new(cfg.queue_capacity));
+        let paused = Arc::new(AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
+        let crash = Arc::new(AtomicBool::new(false));
+
+        let server = {
+            let shared = shared.clone();
+            let inbound = inbound.clone();
+            let clock = clock.clone();
+            let stop = stop.clone();
+            rpc::Server::serve(addr, move |req, stream| {
+                let method = req.get("method").and_then(Value::as_str).unwrap_or("");
+                match method {
+                    "ingest_event" => Some(handle_ingest(&shared, &inbound, &req)),
+                    "get_report" => Some(handle_report(&shared, clock.now(), &req)),
+                    "query_plan" => Some(handle_query_plan(&shared)),
+                    "subscribe_log" => {
+                        run_log_subscription(&shared, &stop, &req, stream);
+                        None
+                    }
+                    other => Some(err_response(&format!("unknown method {other:?}"))),
+                }
+            })?
+        };
+        let bound = server.addr;
+
+        let mut threads = Vec::new();
+        {
+            let shared = shared.clone();
+            let inbound = inbound.clone();
+            let paused = paused.clone();
+            let stop = stop.clone();
+            let clock = clock.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("cp-apply".into())
+                    .spawn(move || drain_loop(&shared, &inbound, &paused, &stop, &clock))
+                    .expect("spawn cp-apply"),
+            );
+        }
+        {
+            let shared = shared.clone();
+            let stop = stop.clone();
+            let crash = crash.clone();
+            let my_addr = bound.to_string();
+            let heartbeat = Duration::from_secs_f64(cfg.heartbeat_period_s.max(0.01));
+            threads.push(
+                std::thread::Builder::new()
+                    .name("cp-election".into())
+                    .spawn(move || {
+                        election_loop(&shared, &stop, &crash, election, &my_addr, join, heartbeat)
+                    })
+                    .expect("spawn cp-election"),
+            );
+        }
+
+        Ok(ControlPlane {
+            addr: bound,
+            shared,
+            inbound,
+            paused,
+            stop,
+            crash,
+            server: Some(server),
+            threads,
+        })
+    }
+
+    pub fn role(&self) -> Role {
+        self.shared.node.lock().unwrap().role
+    }
+
+    pub fn term(&self) -> u64 {
+        self.shared.node.lock().unwrap().term
+    }
+
+    /// Committed log length (== the next sequence number).
+    pub fn committed(&self) -> u64 {
+        self.shared.node.lock().unwrap().coord.log.next_seq()
+    }
+
+    /// Snapshot of the node's decision log (the replicated state machine).
+    pub fn log_snapshot(&self) -> DecisionLog {
+        self.shared.node.lock().unwrap().coord.log.clone()
+    }
+
+    /// Read a registered counter by name (testing/observability).
+    pub fn counter(&self, name: &str) -> u64 {
+        let node = self.shared.node.lock().unwrap();
+        node.coord.telemetry().registry().counter_named(name).unwrap_or(0)
+    }
+
+    /// Poll until this node reports `role` (testing helper for election
+    /// convergence); `false` on timeout.
+    pub fn wait_for_role(&self, role: Role, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while std::time::Instant::now() < deadline {
+            if self.role() == role {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.role() == role
+    }
+
+    /// Pause/resume the queue-drain worker. Operational drain hook — and
+    /// what the backpressure tests use to fill the bounded queue
+    /// deterministically.
+    pub fn set_drain_paused(&self, paused: bool) {
+        self.paused.store(paused, Ordering::Relaxed);
+    }
+
+    /// Graceful shutdown: resign leadership (the key frees immediately) and
+    /// stop serving.
+    pub fn shutdown(&mut self) {
+        self.stop_threads();
+    }
+
+    /// Crash-style kill: stop serving *without* resigning, so the leader
+    /// key lingers until the lease TTL expires — the failover path a real
+    /// process death exercises.
+    pub fn kill(&mut self) {
+        self.crash.store(true, Ordering::Relaxed);
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.shared.commit_cv.notify_all();
+        self.inbound.cv.notify_one();
+        if let Some(mut s) = self.server.take() {
+            s.shutdown();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ControlPlane {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+fn reject(code: &str, msg: &str) -> Value {
+    err_response(msg).with("code", code)
+}
+
+/// True when a transport error is just an idle read timeout (retry), not a
+/// disconnect or frame desync (drop the stream).
+fn is_idle_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(io.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+    })
+}
+
+fn handle_ingest(shared: &Shared, inbound: &Inbound, req: &Value) -> Value {
+    // decode strictly first — a malformed event must never occupy queue space
+    let event = match req.get("event") {
+        Some(v) => match CoordEvent::from_value(v) {
+            Ok(e) => e,
+            Err(e) => return reject(CODE_BAD_REQUEST, &format!("bad event: {}", e.msg)),
+        },
+        None => return reject(CODE_BAD_REQUEST, "missing field \"event\""),
+    };
+    let node = shared.node.lock().unwrap();
+    if node.role != Role::Leader {
+        return reject(CODE_NOT_LEADER, "this node is a standby; ingest at the leader")
+            .with("term", node.term);
+    }
+    if let Some(term) = req.get("term").and_then(Value::as_u64) {
+        if term < node.term {
+            let msg = format!("stale term {term} (current {})", node.term);
+            return reject(CODE_STALE_TERM, &msg).with("term", node.term);
+        }
+    }
+    match inbound.try_push(event) {
+        Ok(depth) => {
+            let t = node.coord.telemetry();
+            t.observe_gauge(node.metrics.queue_depth, depth as f64);
+            ok_response().with("queued", true).with("depth", depth).with("term", node.term)
+        }
+        Err(()) => {
+            node.coord.telemetry().inc(node.metrics.rejects_backpressure, 1);
+            reject(CODE_BACKPRESSURE, "inbound queue full; retry with backoff")
+        }
+    }
+}
+
+fn handle_report(shared: &Shared, at_s: f64, req: &Value) -> Value {
+    let which = req.get("report").and_then(Value::as_str).unwrap_or("");
+    let node = shared.node.lock().unwrap();
+    let body = match which {
+        "health" => fleet_health_report(&node.coord),
+        "layout" => layout_report(&node.coord),
+        "store" => node.state_tier.report(),
+        "metrics" => node.coord.telemetry().metrics_value(),
+        other => return reject(CODE_BAD_REQUEST, &format!("unknown report {other:?}")),
+    };
+    ok_response().with("report", envelope(body, at_s))
+}
+
+fn handle_query_plan(shared: &Shared) -> Value {
+    let node = shared.node.lock().unwrap();
+    ok_response()
+        .with("role", node.role.name())
+        .with("term", node.term)
+        .with("committed", node.coord.log.next_seq())
+        .with("available_workers", node.coord.available_workers().0)
+        .with("layout", layout_report(&node.coord))
+}
+
+/// The `subscribe_log` connection: push committed [`LogFrame`]s from
+/// `from_seq` onward, reading acks back to measure replication lag.
+fn run_log_subscription(shared: &Shared, stop: &AtomicBool, req: &Value, stream: &mut TcpStream) {
+    let mut next = req.get("from_seq").and_then(Value::as_u64).unwrap_or(0);
+    {
+        let node = shared.node.lock().unwrap();
+        node.coord.telemetry().inc(node.metrics.sessions, 1);
+        let committed = node.coord.log.next_seq();
+        let ack = ok_response().with("term", node.term).with("committed", committed);
+        if rpc::send_msg(stream, &ack).is_err() {
+            return;
+        }
+    }
+    // short poll for acks so a silent subscriber never blocks the stream
+    stream.set_read_timeout(Some(Duration::from_millis(10))).ok();
+    let mut acked = next;
+    while !stop.load(Ordering::Relaxed) {
+        let frames: Vec<Value> = {
+            let mut node = shared.node.lock().unwrap();
+            if node.coord.log.next_seq() <= next {
+                let wait = Duration::from_millis(200);
+                let (g, _) = shared.commit_cv.wait_timeout(node, wait).unwrap();
+                node = g;
+            }
+            let term = node.term;
+            let start = (next as usize).min(node.coord.log.entries.len());
+            node.coord.log.entries[start..]
+                .iter()
+                .map(|e| LogFrame { term, entry: e.clone() }.to_value())
+                .collect()
+        };
+        for f in &frames {
+            if rpc::send_msg(stream, f).is_err() {
+                return; // subscriber went away
+            }
+            next += 1;
+        }
+        loop {
+            match rpc::recv_msg(stream) {
+                Ok(v) => {
+                    if let Some(seq) = replication::ack_seq(&v) {
+                        acked = acked.max(seq + 1);
+                    }
+                }
+                Err(e) => {
+                    if is_idle_timeout(&e) {
+                        break;
+                    }
+                    return; // disconnect or frame desync
+                }
+            }
+        }
+        let node = shared.node.lock().unwrap();
+        let lag = node.coord.log.next_seq().saturating_sub(acked);
+        node.coord.telemetry().observe_gauge(node.metrics.replication_lag, lag as f64);
+    }
+}
+
+/// The queue-drain worker: pops ingested events and commits them through
+/// the coordinator (leader only — a demoted node discards queued events;
+/// they were never acknowledged as committed).
+fn drain_loop(
+    shared: &Shared,
+    inbound: &Inbound,
+    paused: &AtomicBool,
+    stop: &AtomicBool,
+    clock: &Arc<dyn Clock>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        if paused.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        let Some(ev) = inbound.pop_timeout(Duration::from_millis(50), paused) else {
+            continue;
+        };
+        let mut node = shared.node.lock().unwrap();
+        if node.role != Role::Leader {
+            continue;
+        }
+        let now = clock.now();
+        let _actions = node.coord.handle_at(ev, now);
+        let t = node.coord.telemetry();
+        t.inc(node.metrics.events_ingested, 1);
+        t.observe_gauge(node.metrics.queue_depth, inbound.depth() as f64);
+        drop(node);
+        shared.commit_cv.notify_all();
+    }
+}
+
+/// The election/replication thread: leaders heartbeat their lease;
+/// standbys follow the current leader's log stream and, when the lease
+/// frees, run for election themselves.
+fn election_loop(
+    shared: &Shared,
+    stop: &AtomicBool,
+    crash: &AtomicBool,
+    mut election: Election,
+    my_addr: &str,
+    join: Option<String>,
+    heartbeat: Duration,
+) {
+    let mut last_leader_addr = join;
+    while !stop.load(Ordering::Relaxed) {
+        let role = shared.node.lock().unwrap().role;
+        match role {
+            Role::Leader => {
+                if let Err(e) = election.heartbeat() {
+                    let mut node = shared.node.lock().unwrap();
+                    node.role = Role::Standby;
+                    let msg = format!("leader lease lost: {e}; demoting to standby");
+                    node.coord.telemetry().log(Level::Error, "cp.election", &msg);
+                    drop(node);
+                    shared.commit_cv.notify_all();
+                }
+                std::thread::sleep(heartbeat);
+            }
+            Role::Standby => match election.current_leader() {
+                Ok(Some(info)) if info.addr != my_addr => {
+                    {
+                        let mut node = shared.node.lock().unwrap();
+                        node.term = node.term.max(info.term);
+                    }
+                    last_leader_addr = Some(info.addr.clone());
+                    follow_leader(shared, stop, &info.addr);
+                    // session over: leader died or stream desynced; the
+                    // loop re-reads the election state
+                }
+                Ok(Some(_)) => {
+                    // the key still names *us* from a previous reign —
+                    // wait for the lease sweep to free it
+                    std::thread::sleep(heartbeat);
+                }
+                Ok(None) => match election.try_acquire(my_addr) {
+                    Ok(Some(term)) => {
+                        let mut node = shared.node.lock().unwrap();
+                        node.role = Role::Leader;
+                        node.term = term;
+                        let committed = node.coord.log.next_seq();
+                        let msg = format!("won term {term} with {committed} entries replayed");
+                        node.coord.telemetry().log(Level::Info, "cp.election", &msg);
+                        drop(node);
+                        shared.commit_cv.notify_all();
+                    }
+                    Ok(None) => std::thread::sleep(heartbeat),
+                    Err(_) => {
+                        // election store unreachable: keep following the
+                        // last known leader rather than flapping
+                        if let Some(a) = last_leader_addr.clone() {
+                            follow_leader(shared, stop, &a);
+                        }
+                        std::thread::sleep(heartbeat);
+                    }
+                },
+                Err(_) => std::thread::sleep(heartbeat),
+            },
+        }
+    }
+    if !crash.load(Ordering::Relaxed) {
+        let _ = election.resign();
+    }
+}
+
+/// One standby replication session: subscribe from our own committed
+/// sequence and apply every received frame by deterministic replay,
+/// acking as we go. Returns when the stream ends (leader death), a frame
+/// fails strict decoding, or the node stops being a standby.
+fn follow_leader(shared: &Shared, stop: &AtomicBool, addr: &str) {
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(_) => {
+            // leader key present but service gone: lease not yet expired
+            std::thread::sleep(Duration::from_millis(50));
+            return;
+        }
+    };
+    let from = shared.node.lock().unwrap().coord.log.next_seq();
+    let sub = rpc::request("subscribe_log").with("from_seq", from);
+    let ack = match client.call(&sub) {
+        Ok(v) if rpc::is_ok(&v) => v,
+        _ => return,
+    };
+    if let Some(t) = ack.get("term").and_then(Value::as_u64) {
+        let mut node = shared.node.lock().unwrap();
+        node.term = node.term.max(t);
+    }
+    client.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    while !stop.load(Ordering::Relaxed) {
+        let v = match client.next_push() {
+            Ok(v) => v,
+            Err(e) => {
+                if is_idle_timeout(&e) {
+                    continue;
+                }
+                return; // leader gone
+            }
+        };
+        let Ok(frame) = LogFrame::from_value(&v) else {
+            return; // desync: strict decode failed; resubscribe fresh
+        };
+        let mut node = shared.node.lock().unwrap();
+        if node.role != Role::Standby {
+            return;
+        }
+        let current = node.term;
+        match replication::apply_frame(&mut node.coord, current, &frame) {
+            Ok(()) => {
+                node.term = node.term.max(frame.term);
+                let seq = frame.entry.seq;
+                drop(node);
+                if client.send(&replication::ack_value(seq)).is_err() {
+                    return;
+                }
+            }
+            Err(ReplicaError::StaleTerm { .. }) => return, // deposed leader: refuse + drop
+            Err(e) => {
+                let msg = format!("replication apply failed: {e}");
+                node.coord.telemetry().log(Level::Error, "cp.replication", &msg);
+                return; // resubscribe resyncs from our committed seq
+            }
+        }
+    }
+}
+
+/// Typed client for the control-plane RPC methods.
+pub struct CpClient {
+    client: Client,
+}
+
+impl CpClient {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<CpClient> {
+        Ok(CpClient { client: Client::connect(addr)? })
+    }
+
+    /// Submit an event; `term` (if given) is checked against the leader's
+    /// fencing term. Returns the full response frame — check
+    /// [`crate::rpc::is_ok`] and the `code` field on rejects.
+    pub fn ingest_event(&mut self, event: &CoordEvent, term: Option<u64>) -> Result<Value> {
+        let mut req = rpc::request("ingest_event").with("event", event.to_value());
+        if let Some(t) = term {
+            req.set("term", t);
+        }
+        self.client.call(&req)
+    }
+
+    /// Fetch one of the four `/fleet/*` report bodies (`health`, `layout`,
+    /// `store`, `metrics`), wrapped in the standard versioned envelope.
+    pub fn get_report(&mut self, which: &str) -> Result<Value> {
+        let resp = self.client.call(&rpc::request("get_report").with("report", which))?;
+        if !rpc::is_ok(&resp) {
+            return Err(anyhow!(
+                "get_report: {}",
+                resp.get("error").and_then(Value::as_str).unwrap_or("unknown")
+            ));
+        }
+        resp.get("report").cloned().ok_or_else(|| anyhow!("get_report: no report in response"))
+    }
+
+    /// Role, term, committed sequence, layout, and capacity of the node.
+    pub fn query_plan(&mut self) -> Result<Value> {
+        let resp = self.client.call(&rpc::request("query_plan"))?;
+        if !rpc::is_ok(&resp) {
+            return Err(anyhow!("query_plan failed"));
+        }
+        Ok(resp)
+    }
+}

@@ -356,21 +356,25 @@ fn parse_status(key: &str, value: &str) -> Option<CoordEvent> {
     Some(CoordEvent::ErrorReport { node, task, kind })
 }
 
-/// Stamp the shared `/fleet/*` envelope ([`REPORT_VERSION`] +
-/// publication time) onto a report body and put it under `key`. Every
-/// fleet report goes through here, so every one parses with the same two
-/// fields — `background_plan_refresh_keeps_lookup_warm` asserts it.
-fn publish_report(store: &Store, key: &str, report: Value, at_s: f64) {
-    let report = report.with("report_version", REPORT_VERSION).with("at_s", at_s);
-    let _ = store.put(key, &report.encode(), None);
+/// Stamp the shared `/fleet/*` envelope ([`REPORT_VERSION`] + publication
+/// time) onto a report body. Every fleet report — whether published to the
+/// kvstore by this loop or served over RPC by the control plane — goes
+/// through here, so every one parses with the same two fields —
+/// `background_plan_refresh_keeps_lookup_warm` asserts it.
+pub fn envelope(report: Value, at_s: f64) -> Value {
+    report.with("report_version", REPORT_VERSION).with("at_s", at_s)
 }
 
-/// Publish the fleet-health report under [`FLEET_HEALTH_KEY`]: the
-/// cluster-wide EWMA MTBF estimate the cost ledger prices horizons with,
-/// plus each node's lifetime history (failures, repairs, lemon score,
-/// quarantine/release flags, per-node MTBF estimate). Operators and
-/// tooling read it straight from the kvstore.
-fn publish_fleet_health(store: &Store, coord: &Coordinator, at_s: f64) {
+fn publish_report(store: &Store, key: &str, report: Value, at_s: f64) {
+    let _ = store.put(key, &envelope(report, at_s).encode(), None);
+}
+
+/// Build the fleet-health report body (the [`FLEET_HEALTH_KEY`] payload):
+/// the cluster-wide EWMA MTBF estimate the cost ledger prices horizons
+/// with, plus each node's lifetime history (failures, repairs, lemon
+/// score, quarantine/release flags, per-node MTBF estimate). Shared by
+/// the live loop's kvstore publisher and the control plane's `get_report`.
+pub fn fleet_health_report(coord: &Coordinator) -> Value {
     let nodes: Vec<Value> = coord
         .fleet
         .nodes()
@@ -402,12 +406,16 @@ fn publish_fleet_health(store: &Store, coord: &Coordinator, at_s: f64) {
                 .with("mtbf_observations", stats.observations())
         })
         .collect();
-    let report = Value::obj()
+    Value::obj()
         .with("mtbf_per_gpu_est_s", coord.fleet.mtbf_per_gpu_estimate_s())
         .with("mtbf_observations", coord.fleet.mtbf_observations())
         .with("nodes", Value::Arr(nodes))
-        .with("domains", Value::Arr(domains));
-    publish_report(store, FLEET_HEALTH_KEY, report, at_s);
+        .with("domains", Value::Arr(domains))
+}
+
+/// Publish the fleet-health report under [`FLEET_HEALTH_KEY`].
+fn publish_fleet_health(store: &Store, coord: &Coordinator, at_s: f64) {
+    publish_report(store, FLEET_HEALTH_KEY, fleet_health_report(coord), at_s);
 }
 
 /// `/status/<node>/<seq>` checkpoint announcement -> a manifest for the
@@ -451,17 +459,19 @@ fn publish_metrics(store: &Store, coord: &Coordinator, at_s: f64) {
     publish_report(store, METRICS_KEY, coord.telemetry().metrics_value(), at_s);
 }
 
-/// Publish the authoritative cluster map under [`LAYOUT_KEY`]: the per-task
-/// node sets of the last committed plan, plus the placeable pool the next
-/// layout can draw from.
-fn publish_layout(store: &Store, coord: &Coordinator, at_s: f64) {
-    let report = Value::obj()
+/// Build the authoritative cluster-map report body (the [`LAYOUT_KEY`]
+/// payload): the per-task node sets of the last committed plan, plus the
+/// placeable pool the next layout can draw from. Shared by the live loop's
+/// kvstore publisher and the control plane's `get_report`.
+pub fn layout_report(coord: &Coordinator) -> Value {
+    Value::obj()
         .with("tasks", coord.layout().to_value())
-        .with(
-            "placeable",
-            coord.placeable_nodes().iter().map(|n| n.0).collect::<Vec<u32>>(),
-        );
-    publish_report(store, LAYOUT_KEY, report, at_s);
+        .with("placeable", coord.placeable_nodes().iter().map(|n| n.0).collect::<Vec<u32>>())
+}
+
+/// Publish the cluster map under [`LAYOUT_KEY`].
+fn publish_layout(store: &Store, coord: &Coordinator, at_s: f64) {
+    publish_report(store, LAYOUT_KEY, layout_report(coord), at_s);
 }
 
 /// Publish agent-executable actions under `/cmd/<node>/<seq>`.

@@ -103,6 +103,35 @@ impl Store {
         g.map.get(key).map(|e| (e.value.clone(), e.mod_revision))
     }
 
+    /// Atomic compare-and-swap on a key's `mod_revision`: the put happens
+    /// only if the key's current revision equals `expected` (`None` = the
+    /// key must be absent). Returns the new revision on success, `None` on
+    /// a lost race. This is the election primitive — two candidates racing
+    /// for a leader key serialize on the store lock, and exactly one wins.
+    pub fn cas(
+        &self,
+        key: &str,
+        expected: Option<u64>,
+        value: &str,
+        lease: Option<u64>,
+    ) -> Result<Option<u64>, String> {
+        let mut g = self.inner.lock().unwrap();
+        if g.map.get(key).map(|e| e.mod_revision) != expected {
+            return Ok(None);
+        }
+        if let Some(id) = lease {
+            let l = g.leases.get_mut(&id).ok_or_else(|| format!("no such lease {id}"))?;
+            if !l.keys.iter().any(|k| k == key) {
+                l.keys.push(key.to_string());
+            }
+        }
+        g.revision += 1;
+        let rev = g.revision;
+        g.map.insert(key.to_string(), Entry { value: value.to_string(), lease, mod_revision: rev });
+        notify(&mut g, Event::Put { key: key.into(), value: value.into(), revision: rev });
+        Ok(Some(rev))
+    }
+
     /// All key/value pairs under a prefix (sorted by key).
     pub fn get_prefix(&self, prefix: &str) -> Vec<(String, String)> {
         let g = self.inner.lock().unwrap();
@@ -293,6 +322,36 @@ mod tests {
         assert!(matches!(&events[1], Event::Delete { key, expired: false, .. } if key == "/status/n1"));
         assert!(matches!(&events[2], Event::Put { key, .. } if key == "/status/n2"));
         assert!(matches!(&events[3], Event::Delete { key, expired: true, .. } if key == "/status/n2"));
+    }
+
+    #[test]
+    fn cas_put_if_absent_wins_exactly_once() {
+        let (s, _) = store();
+        let r1 = s.cas("/leader", None, "a", None).unwrap();
+        assert!(r1.is_some(), "first candidate must win the absent key");
+        assert_eq!(s.cas("/leader", None, "b", None).unwrap(), None, "second must lose");
+        assert_eq!(s.get("/leader").unwrap().0, "a");
+    }
+
+    #[test]
+    fn cas_requires_current_revision() {
+        let (s, _) = store();
+        let rev = s.put("/term", "1", None).unwrap();
+        let newer = s.cas("/term", Some(rev), "2", None).unwrap().expect("matching rev swaps");
+        assert_eq!(s.cas("/term", Some(rev), "3", None).unwrap(), None, "stale rev must lose");
+        assert_eq!(s.get("/term"), Some(("2".into(), newer)));
+    }
+
+    #[test]
+    fn cas_key_expires_with_its_lease() {
+        let (s, clock) = store();
+        let lease = s.grant_lease(1.0);
+        assert!(s.cas("/leader", None, "a", Some(lease)).unwrap().is_some());
+        clock.advance(2.0);
+        s.tick();
+        assert_eq!(s.get("/leader"), None, "lease expiry must free the key");
+        assert!(s.cas("/leader", None, "b", None).unwrap().is_some(), "successor acquires");
+        assert!(s.cas("/x", None, "v", Some(lease)).is_err(), "expired lease is an error");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! TCP wire protocol for [`Store`]: what makes the status monitor a
 //! *distributed* KV store the agents can reach from other machines.
 //!
-//! Methods: `put`, `get`, `get_prefix`, `delete`, `lease_grant`,
+//! Methods: `put`, `get`, `get_prefix`, `delete`, `cas`, `lease_grant`,
 //! `keepalive`, `lease_revoke`, `watch` (the connection switches to a push
 //! stream of events after the ack).
 
@@ -48,6 +48,17 @@ pub fn serve(store: Store, addr: impl ToSocketAddrs) -> Result<rpc::Server> {
             "delete" => {
                 let key = req.get("key").and_then(Value::as_str).unwrap_or("");
                 Some(ok_response().with("deleted", store.delete(key)))
+            }
+            "cas" => {
+                let key = req.get("key").and_then(Value::as_str).unwrap_or("");
+                let value = req.get("value").and_then(Value::as_str).unwrap_or("");
+                let expected = req.get("expected").and_then(Value::as_u64);
+                let lease = req.get("lease").and_then(Value::as_u64);
+                Some(match store.cas(key, expected, value, lease) {
+                    Ok(Some(rev)) => ok_response().with("swapped", true).with("revision", rev),
+                    Ok(None) => ok_response().with("swapped", false),
+                    Err(e) => err_response(&e),
+                })
             }
             "lease_grant" => {
                 let ttl = req.get("ttl_s").and_then(Value::as_f64).unwrap_or(5.0);
@@ -147,6 +158,24 @@ impl KvClient {
         Ok(KvClient { client: Client::connect(addr)? })
     }
 
+    /// Replace the underlying connection (after a server restart or a
+    /// transport error). Granted leases and watches do NOT survive a
+    /// reconnect — they belong to the server-side session; re-grant and
+    /// re-subscribe after this returns. Any configured read timeout is
+    /// reset too.
+    pub fn reconnect(&mut self, addr: impl ToSocketAddrs) -> Result<()> {
+        self.client = Client::connect(addr)?;
+        Ok(())
+    }
+
+    /// Bound how long calls wait for a response (a slow or hung server
+    /// surfaces as a timeout `io::Error` instead of blocking forever).
+    /// After a timeout the request/response stream may be desynced —
+    /// [`KvClient::reconnect`] before reusing the client.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.client.set_read_timeout(t)
+    }
+
     fn expect_ok(resp: Value) -> Result<Value> {
         if rpc::is_ok(&resp) {
             Ok(resp)
@@ -168,9 +197,46 @@ impl KvClient {
     }
 
     pub fn get(&mut self, key: &str) -> Result<Option<String>> {
+        Ok(self.get_rev(key)?.map(|(v, _)| v))
+    }
+
+    /// Like [`KvClient::get`] but keeps the `mod_revision`, which is the
+    /// expectation token [`KvClient::cas`] swaps against.
+    pub fn get_rev(&mut self, key: &str) -> Result<Option<(String, u64)>> {
         let resp = Self::expect_ok(self.client.call(&rpc::request("get").with("key", key))?)?;
         if resp.get("found").and_then(Value::as_bool).unwrap_or(false) {
-            Ok(resp.get("value").and_then(Value::as_str).map(String::from))
+            let value = resp
+                .get("value")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("get: no value"))?
+                .to_string();
+            let rev = resp.get("revision").and_then(Value::as_u64);
+            Ok(Some((value, rev.ok_or_else(|| anyhow!("no revision"))?)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Compare-and-swap over the wire (see [`Store::cas`]): returns the new
+    /// revision when the swap happened, `None` on a lost race.
+    pub fn cas(
+        &mut self,
+        key: &str,
+        expected: Option<u64>,
+        value: &str,
+        lease: Option<u64>,
+    ) -> Result<Option<u64>> {
+        let mut req = rpc::request("cas").with("key", key).with("value", value);
+        if let Some(rev) = expected {
+            req.set("expected", rev);
+        }
+        if let Some(l) = lease {
+            req.set("lease", l);
+        }
+        let resp = Self::expect_ok(self.client.call(&req)?)?;
+        if resp.get("swapped").and_then(Value::as_bool).unwrap_or(false) {
+            let rev = resp.get("revision").and_then(Value::as_u64);
+            Ok(Some(rev.ok_or_else(|| anyhow!("no revision"))?))
         } else {
             Ok(None)
         }

@@ -19,6 +19,8 @@
 //!   decision (plan reward, transition pricing, spare economics) is priced
 //!   against (DESIGN.md §9)
 //! * distributed plumbing: [`kvstore`], [`rpc`], [`membership`], [`checkpoint`]
+//! * high availability: [`controlplane`] — the networked coordinator
+//!   service, leader election, and decision-log replication (DESIGN.md §15)
 //! * the state tier: [`store`] — content-addressed, deduplicating, tiered
 //!   snapshot store the transition/cost layers price against (DESIGN.md §13)
 //! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
@@ -39,6 +41,7 @@ pub mod bench;
 pub mod checkpoint;
 pub mod cli;
 pub mod config;
+pub mod controlplane;
 pub mod coordinator;
 pub mod cost;
 pub mod data;

@@ -15,10 +15,12 @@ use std::sync::Arc;
 
 use unicron::cli::{usage, Args, OptSpec};
 use unicron::config::{table3_case, ClusterSpec, ModelSpec, UnicronConfig};
+use unicron::controlplane::{ControlPlane, ControlPlaneConfig, Election, ElectionKv};
 use unicron::coordinator::live::{CoordinatorLive, METRICS_KEY, REPORT_VERSION};
 use unicron::coordinator::{Coordinator, DecisionLog};
 use unicron::failure::{Trace, TraceConfig};
 use unicron::kvstore::net::KvClient;
+use unicron::kvstore::Store;
 use unicron::perfmodel::best_config;
 use unicron::ser::Value;
 use unicron::simulator::{PolicyKind, Simulator};
@@ -44,6 +46,7 @@ fn main() -> ExitCode {
         "plan" => cmd_plan(&rest),
         "perfmodel" => cmd_perfmodel(&rest),
         "coordinator" => cmd_coordinator(&rest),
+        "serve" => cmd_serve(&rest),
         "obs" => cmd_obs(&rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -70,6 +73,7 @@ fn print_help() {
     println!("  plan               multi-task WAF plan for a Table 3 case");
     println!("  perfmodel          query T(model, gpus) and the best 3D config");
     println!("  coordinator        start a live coordinator (TCP)");
+    println!("  serve              start an HA control-plane node (leader or standby)");
     println!("  obs                render an incident timeline (--log file | --addr host:port)");
 }
 
@@ -300,6 +304,57 @@ fn cmd_perfmodel(argv: &[String]) -> Result<(), String> {
             println!("samples/s {:.2}   memory {:.1} GiB/GPU", e.samples_per_s, e.memory_gib);
         }
         None => println!("infeasible: {} does not fit on {gpus} GPUs", model.name),
+    }
+    Ok(())
+}
+
+/// `unicron serve` — start one HA control-plane node (DESIGN.md §15):
+/// the coordinator behind the RPC service, with lease-based election over
+/// a shared kvstore (`--election`) and log replication from the current
+/// leader (`--join` as a bootstrap hint). With neither flag the node runs
+/// standalone: it elects itself over a private in-process store.
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "addr", help: "bind address for the control-plane RPC service", takes_value: true, default: Some("127.0.0.1:7080") },
+        OptSpec { name: "join", help: "leader address to replicate from (standby bootstrap hint)", takes_value: true, default: None },
+        OptSpec { name: "election", help: "shared election kvstore host:port (omit = standalone)", takes_value: true, default: None },
+        OptSpec { name: "workers", help: "initial healthy workers", takes_value: true, default: Some("128") },
+        OptSpec { name: "lease-ttl", help: "leader lease TTL seconds", takes_value: true, default: Some("2.0") },
+        OptSpec { name: "duration", help: "seconds to run (0 = forever)", takes_value: true, default: Some("0") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
+    let clock: Arc<RealClock> = Arc::new(RealClock::new());
+    let coord = Coordinator::builder()
+        .config(UnicronConfig::default())
+        .workers(args.u64("workers").map_err(|e| e.to_string())? as u32)
+        .gpus_per_node(8u32)
+        .build();
+    let kv: Box<dyn ElectionKv> = match args.get("election") {
+        Some(addr) => {
+            Box::new(KvClient::connect(addr).map_err(|e| format!("election store: {e}"))?)
+        }
+        None => Box::new(Store::new(clock.clone())),
+    };
+    let ttl = args.f64("lease-ttl").map_err(|e| e.to_string())?;
+    let cfg = ControlPlaneConfig { lease_ttl_s: ttl, ..ControlPlaneConfig::default() };
+    let cp = ControlPlane::start(
+        coord,
+        clock,
+        args.str("addr").unwrap(),
+        cfg,
+        Election::new(kv, ttl),
+        args.get("join").map(String::from),
+    )
+    .map_err(|e| e.to_string())?;
+    println!("control plane on {} (role converges via election)", cp.addr);
+    let duration = args.f64("duration").map_err(|e| e.to_string())?;
+    if duration > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+        println!("served {duration}s as {} (term {})", cp.role().name(), cp.term());
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
     }
     Ok(())
 }

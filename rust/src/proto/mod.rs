@@ -76,7 +76,12 @@ use crate::transition::StateSource;
 ///   task's snapshot actually lives (and the measured restore time), and
 ///   every [`CostBreakdown`] stamps the restore tier the plan priced
 ///   ([`CostBreakdown::state_source`]).
-pub const DECISION_LOG_VERSION: u64 = 6;
+/// * v7 — replication: every entry carries its commit sequence number
+///   ([`LogEntry::seq`], assigned densely from 0 at record time). The
+///   control plane streams committed entries to standbys as
+///   sequence-numbered frames, and a decoded log must be seq-gapless —
+///   a gap or reorder is a strict decode error, not a skip.
+pub const DECISION_LOG_VERSION: u64 = 7;
 
 // ---------------------------------------------------------------------------
 // Typed identifiers
@@ -280,7 +285,7 @@ pub struct ProtoError {
 }
 
 impl ProtoError {
-    fn new(msg: impl Into<String>) -> ProtoError {
+    pub(crate) fn new(msg: impl Into<String>) -> ProtoError {
         ProtoError { msg: msg.into() }
     }
 }
@@ -576,12 +581,48 @@ impl Action {
 /// recorded `at_s` to reproduce decisions bit-identically.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LogEntry {
+    /// Commit sequence number (wire v7): dense from 0, assigned by
+    /// [`DecisionLog::record`]. This is the replication cursor — a standby
+    /// acks by `seq`, and a decoded log must be gapless in it.
+    pub seq: u64,
     /// Delivery timestamp, seconds on the recording driver's clock
     /// (simulated time in the environment model, wall clock in the live
     /// driver; `0.0` for clockless unit-test sessions).
     pub at_s: f64,
     pub event: CoordEvent,
     pub actions: Vec<Action>,
+}
+
+impl LogEntry {
+    /// Encode one committed entry — the same shape `DecisionLog::to_json`
+    /// nests under `"entries"` and the control plane ships as a
+    /// replication frame body.
+    pub fn to_value(&self) -> Value {
+        Value::obj()
+            .with("seq", self.seq)
+            .with("at", self.at_s)
+            .with("event", self.event.to_value())
+            .with("actions", Value::Arr(self.actions.iter().map(Action::to_value).collect()))
+    }
+
+    /// Strict decode of one entry: missing `seq`, an unknown event/action
+    /// variant, or a malformed field is an error, never a skip.
+    pub fn from_value(v: &Value) -> Result<LogEntry, ProtoError> {
+        let seq = v
+            .req("seq")?
+            .as_u64()
+            .ok_or_else(|| ProtoError::new("field \"seq\" is not an unsigned integer"))?;
+        let at_s = get_f64(v, "at")?;
+        let event = CoordEvent::from_value(v.req("event")?)?;
+        let actions = v
+            .req("actions")?
+            .as_arr()
+            .ok_or_else(|| ProtoError::new("field \"actions\" is not an array"))?
+            .iter()
+            .map(Action::from_value)
+            .collect::<Result<Vec<Action>, ProtoError>>()?;
+        Ok(LogEntry { seq, at_s, event, actions })
+    }
 }
 
 /// The ordered record of every decision a coordinator (or a simulated
@@ -625,9 +666,18 @@ impl DecisionLog {
         DecisionLog::default()
     }
 
-    /// Append one decision with its delivery timestamp.
+    /// Append one decision with its delivery timestamp. The entry's
+    /// [`LogEntry::seq`] is assigned here (dense from 0), so two recorders
+    /// fed the same event stream produce byte-identical logs.
     pub fn record(&mut self, at_s: f64, event: CoordEvent, actions: Vec<Action>) {
-        self.entries.push(LogEntry { at_s, event, actions });
+        let seq = self.entries.len() as u64;
+        self.entries.push(LogEntry { seq, at_s, event, actions });
+    }
+
+    /// The sequence number the next recorded entry will get — the
+    /// replication layer's "committed up to" cursor.
+    pub fn next_seq(&self) -> u64 {
+        self.entries.len() as u64
     }
 
     pub fn len(&self) -> usize {
@@ -654,23 +704,12 @@ impl DecisionLog {
 
     /// Encode with the format version (see the module docs).
     pub fn to_json(&self) -> Value {
-        let entries: Vec<Value> = self
-            .entries
-            .iter()
-            .map(|e| {
-                Value::obj()
-                    .with("at", e.at_s)
-                    .with("event", e.event.to_value())
-                    .with(
-                        "actions",
-                        Value::Arr(e.actions.iter().map(Action::to_value).collect()),
-                    )
-            })
-            .collect();
+        let entries: Vec<Value> = self.entries.iter().map(LogEntry::to_value).collect();
         Value::obj().with("version", DECISION_LOG_VERSION).with("entries", Value::Arr(entries))
     }
 
-    /// Strict decode: wrong version or any unknown variant is an error.
+    /// Strict decode: wrong version, any unknown variant, or a seq gap /
+    /// reorder (wire v7: entry `i` must carry `seq == i`) is an error.
     pub fn from_json(v: &Value) -> Result<DecisionLog, ProtoError> {
         let version = v
             .req("version")?
@@ -687,22 +726,15 @@ impl DecisionLog {
             .ok_or_else(|| ProtoError::new("field \"entries\" is not an array"))?;
         let mut log = DecisionLog::new();
         for (i, entry) in entries.iter().enumerate() {
-            let at_s = get_f64(entry, "at")
+            let entry = LogEntry::from_value(entry)
                 .map_err(|e| ProtoError::new(format!("entry {i}: {}", e.msg)))?;
-            let event = CoordEvent::from_value(
-                entry.req("event").map_err(|e| ProtoError::new(format!("entry {i}: {e}")))?,
-            )
-            .map_err(|e| ProtoError::new(format!("entry {i}: {}", e.msg)))?;
-            let actions = entry
-                .req("actions")
-                .map_err(|e| ProtoError::new(format!("entry {i}: {e}")))?
-                .as_arr()
-                .ok_or_else(|| ProtoError::new(format!("entry {i}: \"actions\" is not an array")))?
-                .iter()
-                .map(Action::from_value)
-                .collect::<Result<Vec<Action>, ProtoError>>()
-                .map_err(|e| ProtoError::new(format!("entry {i}: {}", e.msg)))?;
-            log.record(at_s, event, actions);
+            if entry.seq != i as u64 {
+                return Err(ProtoError::new(format!(
+                    "entry {i}: seq {} breaks the gapless sequence (expected {i})",
+                    entry.seq
+                )));
+            }
+            log.entries.push(entry);
         }
         Ok(log)
     }

@@ -6,7 +6,8 @@
 //! Frame format: `u32` little-endian payload length, then that many bytes of
 //! UTF-8 JSON. Max frame 64 MiB (guards against corrupt length prefixes).
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
+use std::fmt;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -16,31 +17,109 @@ use std::time::Duration;
 
 use crate::ser::Value;
 
-const MAX_FRAME: u32 = 64 * 1024 * 1024;
+/// Maximum frame body length — guards against corrupt length prefixes on
+/// receive and runaway payloads on send.
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
 
-/// Write one JSON frame.
+/// How many consecutive zero-progress read timeouts mid-frame we tolerate
+/// before declaring the frame [`FrameError::Truncated`]. With the server's
+/// 200 ms poll timeout this bounds a stalled peer to ~30 s instead of
+/// holding the connection thread forever.
+const MAX_MIDFRAME_STALLS: u32 = 150;
+
+/// Typed frame-codec failure: the two ways a length-prefixed frame can be
+/// structurally bad on the wire. Transport failures (reset, refused, poll
+/// timeouts between frames) stay `std::io::Error`; a `FrameError` always
+/// means the connection is desynced and must be dropped. Retrieve from an
+/// [`anyhow::Error`] with `e.downcast_ref::<FrameError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// The length prefix (or outgoing body) exceeds [`MAX_FRAME`].
+    Oversized { len: u64, max: u32 },
+    /// The peer closed (or stalled) mid-frame: `got` of `want` bytes read.
+    Truncated { got: usize, want: usize },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame oversized: {len} bytes (max {max})")
+            }
+            FrameError::Truncated { got, want } => {
+                write!(f, "frame truncated: got {got} of {want} bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Write one JSON frame. An oversized body is refused before any bytes hit
+/// the wire ([`FrameError::Oversized`]).
 pub fn send_msg(stream: &mut TcpStream, msg: &Value) -> Result<()> {
     let body = msg.encode();
-    let len = body.len() as u32;
-    if len > MAX_FRAME {
-        bail!("frame too large: {len} bytes");
+    if body.len() as u64 > MAX_FRAME as u64 {
+        return Err(FrameError::Oversized { len: body.len() as u64, max: MAX_FRAME }.into());
     }
+    let len = body.len() as u32;
     stream.write_all(&len.to_le_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()?;
     Ok(())
 }
 
+/// Fill `buf`, counting progress. A read timeout with **zero** bytes read
+/// so far is surfaced as the underlying `io::Error` only when `idle_ok`
+/// (the between-frames poll position); once any byte of a frame has
+/// arrived, timeouts keep waiting (bounded by [`MAX_MIDFRAME_STALLS`]) and
+/// EOF or a stall bound becomes a typed [`FrameError::Truncated`] — never
+/// a silent partial read.
+fn read_exact_counted(stream: &mut TcpStream, buf: &mut [u8], idle_ok: bool) -> Result<usize> {
+    let mut got = 0usize;
+    let mut stalls = 0u32;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(FrameError::Truncated { got, want: buf.len() }.into()),
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if got == 0 && idle_ok {
+                    return Err(e.into());
+                }
+                stalls += 1;
+                if stalls >= MAX_MIDFRAME_STALLS {
+                    return Err(FrameError::Truncated { got, want: buf.len() }.into());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(got)
+}
+
 /// Read one JSON frame (blocking; respects the stream's read timeout).
+/// Structural failures — a length prefix beyond [`MAX_FRAME`], a peer that
+/// closes or stalls mid-frame — come back as typed [`FrameError`]s; an idle
+/// poll timeout before any byte arrives stays an `io::Error` so server
+/// loops can keep polling.
 pub fn recv_msg(stream: &mut TcpStream) -> Result<Value> {
     let mut len_buf = [0u8; 4];
-    stream.read_exact(&mut len_buf)?;
+    read_exact_counted(stream, &mut len_buf, true)?;
     let len = u32::from_le_bytes(len_buf);
     if len > MAX_FRAME {
-        bail!("frame too large: {len} bytes");
+        return Err(FrameError::Oversized { len: len as u64, max: MAX_FRAME }.into());
     }
     let mut body = vec![0u8; len as usize];
-    stream.read_exact(&mut body)?;
+    read_exact_counted(stream, &mut body, false)?;
     let text = String::from_utf8(body)?;
     Value::parse(&text).map_err(|e| anyhow!("bad frame: {e}"))
 }
@@ -188,6 +267,11 @@ impl Client {
         recv_msg(&mut self.stream)
     }
 
+    /// One-way frame with no response read (subscription acks).
+    pub fn send(&mut self, msg: &Value) -> Result<()> {
+        send_msg(&mut self.stream, msg)
+    }
+
     pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
         self.stream.set_read_timeout(t)?;
         Ok(())
@@ -253,6 +337,87 @@ mod tests {
             let _ = listener.accept();
         });
         let mut stream = TcpStream::connect(addr).unwrap();
-        assert!(send_msg(&mut stream, &v).is_err());
+        let err = send_msg(&mut stream, &v).unwrap_err();
+        match err.downcast_ref::<FrameError>() {
+            Some(FrameError::Oversized { len, max }) => {
+                assert!(*len > MAX_FRAME as u64);
+                assert_eq!(*max, MAX_FRAME);
+            }
+            other => panic!("expected typed Oversized, got {other:?} ({err})"),
+        }
+    }
+
+    /// A loopback (client, server-side) stream pair for codec tests.
+    fn stream_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_typed_error() {
+        let (mut client, mut server) = stream_pair();
+        // a corrupt length prefix claiming a frame beyond MAX_FRAME: the
+        // receiver must refuse it *before* allocating or reading the body
+        let bad_len = MAX_FRAME + 1;
+        client.write_all(&bad_len.to_le_bytes()).unwrap();
+        client.flush().unwrap();
+        let err = recv_msg(&mut server).unwrap_err();
+        match err.downcast_ref::<FrameError>() {
+            Some(FrameError::Oversized { len, max }) => {
+                assert_eq!(*len, bad_len as u64);
+                assert_eq!(*max, MAX_FRAME);
+            }
+            other => panic!("expected typed Oversized, got {other:?} ({err})"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_typed_error() {
+        let (mut client, mut server) = stream_pair();
+        // announce a 100-byte body, deliver 10, then close the connection
+        client.write_all(&100u32.to_le_bytes()).unwrap();
+        client.write_all(&[b'x'; 10]).unwrap();
+        client.flush().unwrap();
+        drop(client);
+        let err = recv_msg(&mut server).unwrap_err();
+        match err.downcast_ref::<FrameError>() {
+            Some(FrameError::Truncated { got, want }) => {
+                assert_eq!(*got, 10);
+                assert_eq!(*want, 100);
+            }
+            other => panic!("expected typed Truncated, got {other:?} ({err})"),
+        }
+    }
+
+    #[test]
+    fn truncated_length_prefix_is_typed_error() {
+        let (mut client, mut server) = stream_pair();
+        // even the 4-byte header is covered: 2 bytes then EOF
+        client.write_all(&[1u8, 0]).unwrap();
+        client.flush().unwrap();
+        drop(client);
+        let err = recv_msg(&mut server).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<FrameError>(),
+            Some(&FrameError::Truncated { got: 2, want: 4 })
+        );
+    }
+
+    #[test]
+    fn idle_poll_timeout_stays_io_error() {
+        // between frames, a read timeout is the server loop's poll tick —
+        // it must stay an io::Error (retry), not a typed FrameError (drop)
+        let (_client, mut server) = stream_pair();
+        server.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let err = recv_msg(&mut server).unwrap_err();
+        assert!(err.downcast_ref::<FrameError>().is_none());
+        let ioe = err.downcast_ref::<std::io::Error>().expect("io error");
+        assert!(matches!(
+            ioe.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ));
     }
 }

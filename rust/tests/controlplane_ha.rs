@@ -1,0 +1,255 @@
+//! Integration: the HA control plane over real TCP (DESIGN.md §15) — a
+//! leader and a standby on loopback, decision-log replication, and a
+//! mid-incident leader kill with standby takeover.
+//!
+//! The acceptance bar this file holds (ISSUE 9):
+//! * after a mid-incident leader kill, the standby's replayed coordinator
+//!   state matches the leader's last committed entry bit-identically;
+//! * the takeover emits no duplicate or reordered actions — the combined
+//!   log stays seq-gapless and replays cleanly through a fresh
+//!   [`Coordinator`];
+//! * writes stamped with the deposed leader's term are refused.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unicron::config::UnicronConfig;
+use unicron::controlplane::{
+    ControlPlane, ControlPlaneConfig, CpClient, Election, Role, CODE_BACKPRESSURE,
+    CODE_STALE_TERM,
+};
+use unicron::coordinator::live::REPORT_VERSION;
+use unicron::coordinator::Coordinator;
+use unicron::cost::TransitionProfile;
+use unicron::kvstore::Store;
+use unicron::perfmodel::TaskSpec;
+use unicron::planner::PlanTask;
+use unicron::proto::{CoordEvent, DecisionLog, NodeId, TaskId, WorkerCount};
+use unicron::rpc;
+use unicron::ser::Value;
+use unicron::transition::StateSource;
+use unicron::util::{Clock, RealClock};
+
+fn coord() -> Coordinator {
+    let mut c = Coordinator::builder()
+        .config(UnicronConfig::default())
+        .workers(16)
+        .gpus_per_node(8)
+        .build();
+    c.add_task(PlanTask {
+        spec: TaskSpec::new(0u32, "m", 1.0, 1),
+        throughput: (0..=16u32).map(|x| 1e12 * x as f64).collect(),
+        profile: TransitionProfile::flat(5.0),
+        current: WorkerCount(16),
+        fault: false,
+        fault_source: StateSource::InMemoryCheckpoint,
+        fault_restore_s: None,
+    });
+    c
+}
+
+/// Fast-failover config for loopback tests.
+fn cfg() -> ControlPlaneConfig {
+    ControlPlaneConfig { queue_capacity: 8, lease_ttl_s: 0.6, heartbeat_period_s: 0.15 }
+}
+
+fn start_node(election_store: &Store, join: Option<String>) -> ControlPlane {
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let election = Election::new(Box::new(election_store.clone()), cfg().lease_ttl_s);
+    ControlPlane::start(coord(), clock, "127.0.0.1:0", cfg(), election, join).unwrap()
+}
+
+fn election_store() -> Store {
+    Store::new(Arc::new(RealClock::new()))
+}
+
+/// Poll until the node has committed `n` entries (replication is async).
+fn wait_committed(cp: &ControlPlane, n: u64, timeout: Duration) -> bool {
+    let deadline = std::time::Instant::now() + timeout;
+    while std::time::Instant::now() < deadline {
+        if cp.committed() >= n {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cp.committed() >= n
+}
+
+#[test]
+fn standalone_node_elects_itself_and_serves() {
+    let mut cp = start_node(&election_store(), None);
+    assert!(cp.wait_for_role(Role::Leader, Duration::from_secs(5)), "no self-election");
+    assert_eq!(cp.term(), 1);
+
+    let mut client = CpClient::connect(cp.addr).unwrap();
+    // ingest one SEV1 event and wait for the commit
+    let resp = client.ingest_event(&CoordEvent::NodeLost { node: NodeId(1) }, None).unwrap();
+    assert!(rpc::is_ok(&resp), "ingest rejected: {}", resp.encode());
+    assert!(wait_committed(&cp, 1, Duration::from_secs(5)));
+
+    // all four reports come back in the shared versioned envelope
+    for which in ["health", "layout", "store", "metrics"] {
+        let report = client.get_report(which).unwrap();
+        assert_eq!(
+            report.get("report_version").and_then(Value::as_u64),
+            Some(REPORT_VERSION),
+            "report {which} missing the envelope"
+        );
+        assert!(report.get("at_s").and_then(Value::as_f64).is_some());
+    }
+    // cp.* instruments are registry-backed and ride the metrics report
+    let metrics = client.get_report("metrics").unwrap();
+    let counters = metrics.get("registry").and_then(|r| r.get("counters")).cloned();
+    let counters = counters.expect("metrics report carries the registry");
+    assert_eq!(counters.get("cp.events_ingested").and_then(Value::as_u64), Some(1));
+    assert!(counters.get("cp.sessions").and_then(Value::as_u64).is_some());
+    assert!(counters.get("cp.rejects_backpressure").and_then(Value::as_u64).is_some());
+
+    let plan = client.query_plan().unwrap();
+    assert_eq!(plan.get("role").and_then(Value::as_str), Some("leader"));
+    assert_eq!(plan.get("committed").and_then(Value::as_u64), Some(1));
+    assert!(plan.get("layout").is_some());
+    cp.shutdown();
+}
+
+#[test]
+fn full_queue_answers_typed_backpressure_reject() {
+    let mut cp = start_node(&election_store(), None);
+    assert!(cp.wait_for_role(Role::Leader, Duration::from_secs(5)));
+    cp.set_drain_paused(true); // fill the bounded queue deterministically
+
+    let mut client = CpClient::connect(cp.addr).unwrap();
+    let mut rejected = 0;
+    for i in 0..20u32 {
+        let ev = CoordEvent::NodeLost { node: NodeId(i % 4) };
+        let resp = client.ingest_event(&ev, None).unwrap();
+        if !rpc::is_ok(&resp) {
+            assert_eq!(
+                resp.get("code").and_then(Value::as_str),
+                Some(CODE_BACKPRESSURE),
+                "reject must be typed: {}",
+                resp.encode()
+            );
+            rejected += 1;
+        }
+    }
+    assert_eq!(rejected, 12, "queue of 8 must reject the overflow");
+    assert_eq!(cp.counter("cp.rejects_backpressure"), 12);
+    cp.set_drain_paused(false);
+    assert!(wait_committed(&cp, 8, Duration::from_secs(5)), "drain resumes");
+    cp.shutdown();
+}
+
+#[test]
+fn malformed_event_rejected_before_queueing() {
+    let mut cp = start_node(&election_store(), None);
+    assert!(cp.wait_for_role(Role::Leader, Duration::from_secs(5)));
+    let mut client = rpc::Client::connect(cp.addr).unwrap();
+    let req = rpc::request("ingest_event")
+        .with("event", Value::obj().with("type", "node_lost").with("node", "not-a-number"));
+    let resp = client.call(&req).unwrap();
+    assert!(!rpc::is_ok(&resp));
+    assert_eq!(resp.get("code").and_then(Value::as_str), Some("bad_request"));
+    assert_eq!(cp.committed(), 0);
+    cp.shutdown();
+}
+
+#[test]
+fn mid_incident_leader_kill_standby_takes_over() {
+    // shared election substrate: both nodes race for the same lease
+    let shared = election_store();
+    let mut leader = start_node(&shared, None);
+    assert!(leader.wait_for_role(Role::Leader, Duration::from_secs(5)), "leader bootstrap");
+    let mut standby = start_node(&shared, Some(leader.addr.to_string()));
+
+    // SEV1 burst mid-incident: node losses + an error report + a rejoin
+    let mut client = CpClient::connect(leader.addr).unwrap();
+    let burst = [
+        CoordEvent::NodeLost { node: NodeId(1) },
+        CoordEvent::NodeLost { node: NodeId(2) },
+        CoordEvent::ErrorReport {
+            node: NodeId(3),
+            task: TaskId(0),
+            kind: unicron::failure::ErrorKind::EccError,
+        },
+        CoordEvent::NodeJoined { node: NodeId(1) },
+    ];
+    for ev in &burst {
+        let resp = client.ingest_event(ev, None).unwrap();
+        assert!(rpc::is_ok(&resp), "ingest rejected: {}", resp.encode());
+    }
+    let n = burst.len() as u64;
+    assert!(wait_committed(&leader, n, Duration::from_secs(5)), "leader commits the burst");
+    assert!(wait_committed(&standby, n, Duration::from_secs(5)), "standby replays the burst");
+
+    // the leader's last committed state, then the crash (no resign: the
+    // lease must expire on its own, as a real process death would)
+    let leader_log = leader.log_snapshot();
+    let leader_term = leader.term();
+    leader.kill();
+
+    assert!(
+        standby.wait_for_role(Role::Leader, Duration::from_secs(10)),
+        "standby must win the expired lease"
+    );
+    assert!(standby.term() > leader_term, "takeover must fence with a higher term");
+
+    // bit-identical prefix: the standby replayed to exactly the leader's
+    // last committed entry (serialized bytes compared, not just Eq)
+    let taken_over = standby.log_snapshot();
+    assert_eq!(taken_over.entries.len(), leader_log.entries.len());
+    assert_eq!(
+        taken_over.to_bytes(),
+        leader_log.to_bytes(),
+        "standby state diverged from the leader's last commit"
+    );
+
+    // the incident continues on the new leader: more events commit with
+    // no seq gap and no duplicates
+    let mut client2 = CpClient::connect(standby.addr).unwrap();
+    let resp = client2.ingest_event(&CoordEvent::NodeLost { node: NodeId(4) }, None).unwrap();
+    assert!(rpc::is_ok(&resp), "new leader refuses ingest: {}", resp.encode());
+    assert!(wait_committed(&standby, n + 1, Duration::from_secs(5)));
+    let continued = standby.log_snapshot();
+    for (i, e) in continued.entries.iter().enumerate() {
+        assert_eq!(e.seq, i as u64, "seq gap or reorder at {i}");
+    }
+
+    // the continued log replays cleanly through a fresh coordinator —
+    // the determinism invariant survived the failover
+    let bytes = continued.to_bytes();
+    let decoded = DecisionLog::from_bytes(&bytes).unwrap();
+    let mut fresh = coord();
+    decoded.replay(&mut fresh, |_| None).unwrap();
+    assert_eq!(fresh.log.to_bytes(), bytes, "replay of the continued log diverged");
+
+    // a stale-term ex-leader's write is refused with a typed reject
+    let resp = client2
+        .ingest_event(&CoordEvent::NodeLost { node: NodeId(5) }, Some(leader_term))
+        .unwrap();
+    assert!(!rpc::is_ok(&resp), "stale-term write must be refused");
+    assert_eq!(resp.get("code").and_then(Value::as_str), Some(CODE_STALE_TERM));
+    // current-term writes still flow
+    let resp = client2
+        .ingest_event(&CoordEvent::NodeLost { node: NodeId(5) }, Some(standby.term()))
+        .unwrap();
+    assert!(rpc::is_ok(&resp));
+    standby.shutdown();
+}
+
+#[test]
+fn standby_refuses_direct_ingest() {
+    let shared = election_store();
+    let mut leader = start_node(&shared, None);
+    assert!(leader.wait_for_role(Role::Leader, Duration::from_secs(5)));
+    let mut standby = start_node(&shared, Some(leader.addr.to_string()));
+    assert_eq!(standby.role(), Role::Standby);
+
+    let mut client = CpClient::connect(standby.addr).unwrap();
+    let resp = client.ingest_event(&CoordEvent::NodeLost { node: NodeId(1) }, None).unwrap();
+    assert!(!rpc::is_ok(&resp));
+    assert_eq!(resp.get("code").and_then(Value::as_str), Some("not_leader"));
+    assert_eq!(standby.committed(), 0);
+    standby.shutdown();
+    leader.shutdown();
+}

@@ -82,6 +82,68 @@ fn watch_stream_over_wire() {
 }
 
 #[test]
+fn cas_over_wire_wins_exactly_once() {
+    let (_store, addr, _srv) = start();
+    let mut a = KvClient::connect(addr).unwrap();
+    let mut b = KvClient::connect(addr).unwrap();
+    // put-if-absent: exactly one of two racing clients swaps
+    let ra = a.cas("/election/leader", None, "a", None).unwrap();
+    let rb = b.cas("/election/leader", None, "b", None).unwrap();
+    assert!(ra.is_some());
+    assert!(rb.is_none());
+    assert_eq!(b.get("/election/leader").unwrap(), Some("a".into()));
+    // revision-guarded replace: a stale expectation loses
+    let (_, rev) = b.get_rev("/election/leader").unwrap().unwrap();
+    assert!(b.cas("/election/leader", Some(rev), "b", None).unwrap().is_some());
+    assert!(a.cas("/election/leader", Some(rev), "a2", None).unwrap().is_none());
+    assert_eq!(a.get("/election/leader").unwrap(), Some("b".into()));
+}
+
+#[test]
+fn client_reconnects_after_server_restart() {
+    let (store, addr, srv) = start();
+    let mut kv = KvClient::connect(addr).unwrap();
+    kv.put("/a", "1", None).unwrap();
+    // server restarts on a fresh port; the store handle (and its data)
+    // survives, the TCP connection does not
+    drop(srv);
+    // connection threads poll the stop flag on a 200ms read timeout —
+    // wait for ours to notice and hang up before asserting
+    std::thread::sleep(Duration::from_millis(450));
+    assert!(kv.get("/a").is_err(), "call on a dead connection must error");
+    let srv2 = serve(store, "127.0.0.1:0").unwrap();
+    kv.reconnect(srv2.addr).unwrap();
+    assert_eq!(kv.get("/a").unwrap(), Some("1".into()));
+    kv.put("/b", "2", None).unwrap();
+    assert_eq!(kv.get("/b").unwrap(), Some("2".into()));
+}
+
+#[test]
+fn read_timeout_then_reconnect_recovers() {
+    // a listener that accepts but never responds: the client must time
+    // out instead of hanging forever
+    let silent = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let silent_addr = silent.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        let conn = silent.accept().map(|(s, _)| s);
+        std::thread::sleep(Duration::from_millis(600));
+        drop(conn);
+    });
+    let mut kv = KvClient::connect(silent_addr).unwrap();
+    kv.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let err = kv.get("/a").unwrap_err();
+    let io = err.downcast_ref::<std::io::Error>().expect("timeout surfaces as io::Error");
+    assert!(matches!(io.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut));
+    // after a timeout the stream may be desynced: reconnect, then the
+    // client works against a real server again
+    let (_store, addr, _srv) = start();
+    kv.reconnect(addr).unwrap();
+    kv.put("/a", "recovered", None).unwrap();
+    assert_eq!(kv.get("/a").unwrap(), Some("recovered".into()));
+    hold.join().unwrap();
+}
+
+#[test]
 fn many_concurrent_wire_clients() {
     let (_store, addr, _srv) = start();
     let mut handles = Vec::new();

@@ -152,6 +152,36 @@ fn tampered_artifacts_are_rejected_not_skipped() {
     assert_eq!(DecisionLog::from_bytes(text.as_bytes()).unwrap(), log);
 }
 
+/// The wire-v7 contract: entries carry their commit sequence number, the
+/// artifact's sequence is dense from 0, and any tampering with it —
+/// gaps, duplicates, or a stripped field — is rejected, never repaired.
+/// Replication (controlplane) relies on this: a decoded log's seqs are
+/// trustworthy, so a follower can detect dropped or reordered commits.
+#[test]
+fn v7_seq_tampering_is_rejected_not_renumbered() {
+    assert_eq!(unicron::proto::DECISION_LOG_VERSION, 7);
+    let mut log = DecisionLog::new();
+    log.record(1.0, CoordEvent::NodeLost { node: NodeId(1) }, vec![]);
+    log.record(2.0, CoordEvent::NodeJoined { node: NodeId(1) }, vec![]);
+    assert_eq!((log.entries[0].seq, log.entries[1].seq), (0, 1));
+    let text = String::from_utf8(log.to_bytes()).unwrap();
+    assert!(text.contains("\"seq\":0") && text.contains("\"seq\":1"), "{text}");
+    // a gap is rejected, not resequenced
+    let bad = text.replace("\"seq\":1", "\"seq\":5");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // a duplicate (a reordered/replayed commit) is rejected too
+    let bad = text.replace("\"seq\":1", "\"seq\":0");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // an entry stripped of its seq is rejected, not defaulted
+    let bad = text.replace(",\"seq\":1", "");
+    assert!(bad != text, "tamper must hit the seq field: {text}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // the untampered artifact decodes with its dense sequence intact
+    let back = DecisionLog::from_bytes(text.as_bytes()).unwrap();
+    assert_eq!(back, log);
+    assert!(back.entries.iter().enumerate().all(|(i, e)| e.seq == i as u64));
+}
+
 #[test]
 fn tampered_breakdowns_are_rejected_not_skipped() {
     // an ApplyPlan whose CostBreakdown is renamed or missing must fail
