@@ -147,12 +147,14 @@ impl Agent {
             let mut kv = KvClient::connect(coord_addr)?;
             let warn = cfg.stat_warn_factor;
             let fail = cfg.stat_fail_factor;
+            let step_period = cfg.step_report_period_s;
             threads.push(
                 std::thread::Builder::new().name(format!("agent{node_id}-mon{gpu_idx}")).spawn(
                     move || {
                         let mut stat = StatMonitor::new(warn, fail);
                         let mut reported_dead = false;
                         let mut reported_stall = false;
+                        let mut last_step_report = f64::NEG_INFINITY;
                         let mut fed = 0usize;
                         while !stop.load(Ordering::Relaxed) {
                             // exception propagation: immediate
@@ -176,6 +178,16 @@ impl Agent {
                                     stat.record(d);
                                     fed += 1;
                                     reported_stall = false;
+                                    // in-band health observation (wire v8):
+                                    // ship the raw step wall time on the
+                                    // report cadence — the coordinator's
+                                    // streaming baseline, not the agent,
+                                    // decides whether it is out of band
+                                    let now = clock.now();
+                                    if now - last_step_report >= step_period {
+                                        last_step_report = now;
+                                        report_step(&mut kv, node_id, &seq, proc_.task, d);
+                                    }
                                 }
                                 let _ = fed;
                                 let started = *proc_.iter_started.lock().unwrap();
@@ -248,6 +260,17 @@ impl Drop for Agent {
 fn report(kv: &mut KvClient, node: NodeId, seq: &AtomicU32, task: TaskId, class: &str, msg: &str) {
     let n = seq.fetch_add(1, Ordering::Relaxed);
     let body = Value::obj().with("task", task.0 as u64).with("class", class).with("msg", msg);
+    let _ = kv.put(&format!("/status/{node}/{n}"), &body.encode(), None);
+}
+
+/// In-band step-timing report (`{"class":"step"}` →
+/// [`crate::proto::CoordEvent::StepTiming`]).
+fn report_step(kv: &mut KvClient, node: NodeId, seq: &AtomicU32, task: TaskId, duration_s: f64) {
+    let n = seq.fetch_add(1, Ordering::Relaxed);
+    let body = Value::obj()
+        .with("task", task.0 as u64)
+        .with("class", "step")
+        .with("duration_s", duration_s);
     let _ = kv.put(&format!("/status/{node}/{n}"), &body.encode(), None);
 }
 

@@ -372,6 +372,24 @@ pub struct UnicronConfig {
     /// checkpoint ticks (simulated delta snapshots; FFTrainer-style
     /// slowly-changing optimizer state ≈ 1 %).
     pub store_delta_fraction: f64,
+    /// In-band degradation detection (DESIGN.md §16): feed per-step timing
+    /// reports through the [`crate::health::HealthMonitor`] and let the
+    /// coordinator evict sustained stragglers when the ledger says eviction
+    /// beats tolerating the drag. Off = observations are ignored (the
+    /// degradation-oblivious arm of the `straggler-evict` experiment).
+    pub degradation_detection: bool,
+    /// Cadence (seconds) at which agents report per-step timings — the
+    /// simulator emits `StepTiming` events on this period while a
+    /// degradation scenario is active.
+    pub step_report_period_s: f64,
+    /// Slow fraction (1 − baseline/duration) above which a sustained
+    /// excursion is gray degradation (partial bandwidth).
+    pub degradation_warn_frac: f64,
+    /// Slow fraction above which a sustained excursion is a straggler.
+    pub degradation_fail_frac: f64,
+    /// Consecutive out-of-band samples before a verdict (also the per-node
+    /// warm-up length of the health baseline).
+    pub degradation_min_samples: u32,
 }
 
 impl Default for UnicronConfig {
@@ -400,6 +418,11 @@ impl Default for UnicronConfig {
             placement_min_churn: true,
             store_aware_recovery: false,
             store_delta_fraction: 0.01,
+            degradation_detection: true,
+            step_report_period_s: 60.0,
+            degradation_warn_frac: 0.05,
+            degradation_fail_frac: 0.20,
+            degradation_min_samples: 6,
         }
     }
 }
@@ -509,5 +532,20 @@ mod tests {
         // a single SEV1 (weight 1.5) must never read as a burst; two in
         // quick succession (~2.9 decayed) must
         assert!((1.5..3.0).contains(&u.domain_batch_pressure));
+    }
+
+    #[test]
+    fn degradation_knobs_have_sane_defaults() {
+        let u = UnicronConfig::default();
+        assert!(u.degradation_detection, "in-band health observation on by default");
+        // warn strictly below fail, both proper fractions — the health
+        // monitor's constructor refuses anything else
+        assert!(0.0 < u.degradation_warn_frac && u.degradation_warn_frac < u.degradation_fail_frac);
+        assert!(u.degradation_fail_frac < 1.0);
+        // a verdict needs several sustained samples, but detection latency
+        // (min_samples × report period) stays within minutes
+        assert!(u.degradation_min_samples >= 3);
+        assert!(u.step_report_period_s > 0.0);
+        assert!(u.degradation_min_samples as f64 * u.step_report_period_s <= 900.0);
     }
 }

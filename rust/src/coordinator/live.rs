@@ -351,6 +351,13 @@ fn parse_status(key: &str, value: &str) -> Option<CoordEvent> {
         // maintenance tooling announces a finished repair; the fleet layer
         // decides whether the node rejoins, is held, or is quarantined
         "repaired" => return Some(CoordEvent::NodeRepaired { node }),
+        // in-band step-timing report (wire v8): agents sample their own
+        // training-step wall time and the coordinator's health monitor
+        // turns the stream into straggler / gray-failure verdicts
+        "step" => {
+            let duration_s = v.get("duration_s").and_then(Value::as_f64)?;
+            return Some(CoordEvent::StepTiming { node, task, duration_s });
+        }
         _ => return None,
     };
     Some(CoordEvent::ErrorReport { node, task, kind })
@@ -385,6 +392,8 @@ pub fn fleet_health_report(coord: &Coordinator) -> Value {
                 .with("failures", h.failures)
                 .with("repairs", h.repairs)
                 .with("lemon_score", coord.fleet.lemon_score(node))
+                .with("degradation_score", coord.fleet.degradation_score(node))
+                .with("hazard_mtbf_s", coord.fleet.hazard_adjusted_mtbf_s(node))
                 .with("quarantined", h.quarantined)
                 .with("released", h.released);
             if let Some(m) = h.mtbf_estimate_s() {
@@ -540,6 +549,17 @@ mod tests {
             parse_status("/status/7/repaired", r#"{"task":0,"class":"repaired","msg":""}"#),
             Some(CoordEvent::NodeRepaired { node: NodeId(7) })
         );
+        // in-band step timing (wire v8): agents sample step wall time
+        assert_eq!(
+            parse_status("/status/5/11", r#"{"task":2,"class":"step","duration_s":47.5}"#),
+            Some(CoordEvent::StepTiming {
+                node: NodeId(5),
+                task: TaskId(2),
+                duration_s: 47.5
+            })
+        );
+        // a step report without a measured duration carries no signal
+        assert_eq!(parse_status("/status/5/11", r#"{"task":2,"class":"step"}"#), None);
         assert_eq!(parse_status("/status/2/9", r#"{"class":"bogus"}"#), None);
         assert_eq!(parse_status("/other/2", "{}"), None);
     }
@@ -591,7 +611,19 @@ mod tests {
         assert!(!health.is_empty(), "fleet health must be published");
         let v = Value::parse(&health[0].1).expect("health report must be JSON");
         assert!(v.get("mtbf_per_gpu_est_s").and_then(Value::as_f64).unwrap_or(0.0) > 0.0);
-        assert!(v.get("nodes").and_then(Value::as_arr).is_some());
+        let nodes = v.get("nodes").and_then(Value::as_arr).expect("nodes column");
+        // wire v8: every node row carries its degradation score and the
+        // hazard-adjusted MTBF column beside the flat EWMA estimate
+        for n in nodes {
+            assert!(
+                n.get("degradation_score").and_then(Value::as_f64).is_some_and(|s| s >= 0.0),
+                "node row missing degradation_score"
+            );
+            assert!(
+                n.get("hazard_mtbf_s").and_then(Value::as_f64).is_some_and(|m| m > 0.0),
+                "node row missing hazard_mtbf_s"
+            );
+        }
         assert!(v.get("domains").and_then(Value::as_arr).is_some(), "per-domain MTBF column");
         // ...and the cluster map beside it
         let layout = live.store.get_prefix(LAYOUT_KEY);

@@ -54,6 +54,7 @@ use crate::config::UnicronConfig;
 use crate::cost::{CostModel, SpareTerms};
 use crate::failure::Severity;
 use crate::fleet::{DomainId, FleetModel, SpareDecision};
+use crate::health::{DegradationKind, HealthMonitor};
 use crate::placement::{self, AssignCache, ClusterView, Layout};
 use crate::planner::{solve, HorizonInputs, PlanTask, RefreshStats, ScenarioLookup};
 pub use crate::proto::{
@@ -201,9 +202,12 @@ impl CoordinatorBuilder {
             batch_members: reg.counter("coord.batch_members"),
             mtbf_gauge: reg.gauge("fleet.mtbf_per_gpu_s", 1.0),
         };
+        let health = HealthMonitor::from_config(&self.cfg);
         let mut coord = Coordinator {
             fleet,
             cost,
+            health,
+            pending_degradation: None,
             cfg: self.cfg,
             tasks: BTreeMap::new(),
             available_workers: self.workers.0,
@@ -279,6 +283,16 @@ pub struct Coordinator {
     /// Per-node lifetime health history — the lemon/quarantine and spare
     /// decisions' evidence base (fleet layer, DESIGN.md §8).
     pub fleet: FleetModel,
+    /// In-band streaming health estimators (wire v8, DESIGN.md §16):
+    /// per-node step-duration baselines fed by [`CoordEvent::StepTiming`].
+    /// State evolves only from the recorded event stream, so replays
+    /// rebuild identical estimators and identical degradation verdicts.
+    health: HealthMonitor,
+    /// Degradation detection-latency penalty owed to the next committed
+    /// plan (`slow_frac · F(t, x) · d_degradation`, FLOP·s): stamped by a
+    /// degradation eviction and drained when its replan commits — after
+    /// plan selection, so a table hit prices identically to a live solve.
+    pending_degradation: Option<f64>,
     escalations: BTreeMap<(TaskId, NodeId), EscalationState>,
     /// Audit log of (event, actions) — the tests' and benches' ground
     /// truth, and a serializable [`crate::proto::DecisionLog`] artifact.
@@ -750,6 +764,35 @@ impl Coordinator {
                 }
                 vec![]
             }
+            CoordEvent::StepTiming { node, task, duration_s } => {
+                // In-band per-step sample (wire v8): feed the node's
+                // streaming baseline; a sustained out-of-band run produces
+                // a verdict here, everything else is silent bookkeeping.
+                // Fenced nodes and disabled detection are no-ops — the
+                // sample is still recorded in the log, so replays agree.
+                if !self.cfg.degradation_detection
+                    || self.isolated.contains(&node)
+                    || self.quarantined.contains(&node)
+                {
+                    return vec![];
+                }
+                match self.health.observe_step(node, duration_s) {
+                    Some((kind, slow_frac)) => self.on_degraded(node, task, kind, slow_frac),
+                    None => vec![],
+                }
+            }
+            CoordEvent::NodeDegraded { node, task, kind, slow_frac } => {
+                // External degradation verdict (a provider preemption
+                // notice, an out-of-band prober): same path as an internal
+                // one, same gating.
+                if !self.cfg.degradation_detection
+                    || self.isolated.contains(&node)
+                    || self.quarantined.contains(&node)
+                {
+                    return vec![];
+                }
+                self.on_degraded(node, task, kind, slow_frac)
+            }
             CoordEvent::Batch(ref events) => {
                 // N simultaneous events, ONE dispatch/replan cycle
                 // (tentpole, generalizing the PR-4 same-domain batch):
@@ -777,6 +820,68 @@ impl Coordinator {
                 actions
             }
         }
+    }
+
+    /// One degradation verdict about `node` (running `task`): fold it into
+    /// the fleet's degradation score, then let the ledger decide
+    /// evict-vs-tolerate ([`CostModel::degradation_decision`]). An eviction
+    /// has the same capacity mechanics as a SEV1 isolation — the node goes
+    /// to maintenance and a repair can return it — plus the degradation
+    /// detection-latency penalty stamped onto the replan's breakdown.
+    fn on_degraded(
+        &mut self,
+        node: NodeId,
+        task: TaskId,
+        kind: DegradationKind,
+        slow_frac: f64,
+    ) -> Vec<Action> {
+        self.fleet.note_degradation(node, slow_frac);
+        if kind == DegradationKind::ChurnRisk {
+            // a churn forecast is not a measured slowdown: it informs the
+            // fleet history (degradation score, hazard column) but evicting
+            // a healthy node on a prophecy is never a ledger win
+            return vec![];
+        }
+        self.telemetry.phase_begin(Phase::Price);
+        let task_waf = self.tasks.get(&task).map_or(0.0, |t| t.waf(t.current.0));
+        let node_waf = self.cost.marginal_node_waf(
+            self.current_waf(),
+            self.available_workers.max(1),
+            self.gpus_per_node,
+        );
+        let transition_s = self
+            .tasks
+            .get(&task)
+            .map_or(self.cost.transition_base_s(), |t| self.cost.transition_s(&t.profile, true));
+        let evict = self.cost.degradation_decision(
+            slow_frac,
+            task_waf,
+            node_waf,
+            self.available_workers.max(1),
+            transition_s,
+        );
+        self.telemetry.phase_end(Phase::Price);
+        if !evict {
+            return vec![]; // tolerating the slowdown is the cheaper side
+        }
+        self.health.forget(node); // a repaired node starts a fresh baseline
+        self.isolated.push(node);
+        self.pooled.retain(|&n| n != node);
+        self.placeable.remove(&node);
+        self.available_workers = self.available_workers.saturating_sub(self.gpus_per_node);
+        self.pending_degradation = Some(slow_frac * task_waf * self.cost.degradation_s());
+        let mut actions = vec![
+            Action::IsolateNode { node },
+            Action::AlertOps {
+                message: format!(
+                    "DEGRADED: node {node} {} (running {:.0}% slow); evicting",
+                    kind.name(),
+                    slow_frac * 100.0
+                ),
+            },
+        ];
+        actions.extend(self.reconfigure(PlanReason::Sev1Failure, Some(task)));
+        actions
     }
 
     fn on_sev3(&mut self, node: NodeId, task: TaskId, at_s: f64) -> Vec<Action> {
@@ -1014,6 +1119,14 @@ impl Coordinator {
                 plan
             }
         };
+        // A degradation eviction owes its detection-latency penalty to the
+        // plan that settles it. Stamped *after* plan selection (identically
+        // on the table and solve paths), so lookup hits stay bit-identical
+        // to live solves and the breakdown still reconciles.
+        if let Some(dp) = self.pending_degradation.take() {
+            plan.breakdown.degradation_penalty = dp;
+            plan.objective -= dp;
+        }
         // Placement: turn the plan's counts into the concrete cluster map.
         // Both the table and the solver leave `plan.layout` empty, and the
         // assignment solver reads only (previous layout, counts, placeable
@@ -1057,6 +1170,7 @@ impl Coordinator {
             running_reward: plan.breakdown.running_reward,
             transition_penalty: plan.breakdown.transition_penalty,
             detection_penalty: plan.breakdown.detection_penalty,
+            degradation_penalty: plan.breakdown.degradation_penalty,
             state_source: plan.breakdown.state_source.name(),
             workers_used: plan.workers_used,
             transition_s: plan.transition_seconds(),
@@ -1856,6 +1970,149 @@ mod tests {
             c.log.replay(&mut twin, |_| None).unwrap_or_else(|d| panic!("replay diverged: {d}"));
         assert_eq!(steps, c.log.len());
         assert_eq!(twin.log, c.log);
+    }
+
+    #[test]
+    fn sustained_straggler_is_evicted_by_the_ledger() {
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        // warm-up: the first steps build node 1's baseline silently
+        for _ in 0..6 {
+            let a = c.handle(CoordEvent::StepTiming {
+                node: NodeId(1),
+                task: TaskId(0),
+                duration_s: 45.0,
+            });
+            assert!(a.is_empty(), "warm-up samples must be silent");
+        }
+        // the node turns into a 3x straggler (slow_frac = 2/3, well past
+        // the ledger's break-even): after min_samples sustained slow steps
+        // the verdict fires and the ledger evicts
+        let mut evicted = None;
+        for i in 0..12 {
+            let a = c.handle(CoordEvent::StepTiming {
+                node: NodeId(1),
+                task: TaskId(0),
+                duration_s: 135.0,
+            });
+            if !a.is_empty() {
+                evicted = Some((i, a));
+                break;
+            }
+        }
+        let (i, a) = evicted.expect("a sustained straggler must be evicted");
+        assert!(i >= 5, "the verdict needs min_samples sustained steps, fired at {i}");
+        assert!(matches!(a[0], Action::IsolateNode { node: NodeId(1) }));
+        match &a[1] {
+            Action::AlertOps { message } => {
+                assert!(
+                    message.contains("DEGRADED") && message.contains("straggler"),
+                    "{message}"
+                );
+            }
+            other => panic!("expected the degradation page, got {other:?}"),
+        }
+        let plan = a
+            .iter()
+            .find_map(|x| match x {
+                Action::ApplyPlan { plan, reason: PlanReason::Sev1Failure } => Some(plan),
+                _ => None,
+            })
+            .expect("eviction must replan around the lost node");
+        assert!(plan.breakdown.degradation_penalty > 0.0, "{:?}", plan.breakdown);
+        // the breakdown still reconciles with the penalty subtracted
+        assert!(
+            (plan.breakdown.objective() - plan.objective).abs()
+                <= 1e-9 * plan.objective.abs().max(1.0)
+        );
+        assert_eq!(c.available_workers(), WorkerCount(24), "eviction costs the node's GPUs");
+        assert!(c.isolated.contains(&NodeId(1)), "same mechanics as a SEV1 isolation");
+        assert!(plan.layout.owner_of(NodeId(1)).is_none());
+        // the fleet history remembers the degradation
+        assert!(c.fleet.degradation_score(NodeId(1)) > 0.0);
+        // replays rebuild the estimators from the recorded StepTiming
+        // stream, so the whole session is bit-identical through a twin
+        let mut twin = coord(32);
+        let steps =
+            c.log.replay(&mut twin, |_| None).unwrap_or_else(|d| panic!("replay diverged: {d}"));
+        assert_eq!(steps, c.log.len());
+        assert_eq!(twin.log, c.log);
+    }
+
+    #[test]
+    fn mild_degradation_is_tolerated_and_churn_risk_never_evicts() {
+        let mut c = coord(32);
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        // an externally-delivered verdict below the ledger's break-even:
+        // the fleet records it, the node stays
+        let a = c.handle(CoordEvent::NodeDegraded {
+            node: NodeId(2),
+            task: TaskId(0),
+            kind: DegradationKind::PartialBandwidth,
+            slow_frac: 0.10,
+        });
+        assert!(a.is_empty(), "tolerating must be silent: {a:?}");
+        assert!(c.fleet.degradation_score(NodeId(2)) > 0.0, "scored even when tolerated");
+        assert_eq!(c.available_workers(), WorkerCount(32), "the node stays");
+        // churn risk is a forecast, not a measured slowdown: recorded,
+        // never evicted — even at a severe predicted fraction
+        let a = c.handle(CoordEvent::NodeDegraded {
+            node: NodeId(3),
+            task: TaskId(0),
+            kind: DegradationKind::ChurnRisk,
+            slow_frac: 0.9,
+        });
+        assert!(a.is_empty());
+        assert_eq!(c.available_workers(), WorkerCount(32));
+        assert!(c.fleet.degradation_score(NodeId(3)) > 0.0);
+        // a severe external verdict takes the same eviction path the
+        // internal estimators do
+        let a = c.handle(CoordEvent::NodeDegraded {
+            node: NodeId(2),
+            task: TaskId(0),
+            kind: DegradationKind::Straggler,
+            slow_frac: 0.9,
+        });
+        assert!(matches!(a[0], Action::IsolateNode { node: NodeId(2) }), "{a:?}");
+        assert_eq!(c.available_workers(), WorkerCount(24));
+        // duplicate verdicts about the fenced node are stale no-ops
+        let a = c.handle(CoordEvent::NodeDegraded {
+            node: NodeId(2),
+            task: TaskId(0),
+            kind: DegradationKind::Straggler,
+            slow_frac: 0.9,
+        });
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn degradation_detection_can_be_disabled() {
+        let off = UnicronConfig { degradation_detection: false, ..Default::default() };
+        let mut c = Coordinator::builder()
+            .config(off)
+            .workers(32u32)
+            .gpus_per_node(8u32)
+            .task(plan_task(0, 2, 16, 48))
+            .task(plan_task(1, 2, 16, 48))
+            .build();
+        c.handle(CoordEvent::TaskLaunched { task: TaskId(0) });
+        for _ in 0..30 {
+            let a = c.handle(CoordEvent::StepTiming {
+                node: NodeId(1),
+                task: TaskId(0),
+                duration_s: 450.0,
+            });
+            assert!(a.is_empty(), "detection off: timing samples are inert");
+        }
+        let a = c.handle(CoordEvent::NodeDegraded {
+            node: NodeId(1),
+            task: TaskId(0),
+            kind: DegradationKind::Straggler,
+            slow_frac: 0.9,
+        });
+        assert!(a.is_empty(), "detection off: external verdicts are inert too");
+        assert_eq!(c.available_workers(), WorkerCount(32));
+        assert_eq!(c.fleet.degradation_score(NodeId(1)), 0.0);
     }
 
     #[test]

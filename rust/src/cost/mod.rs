@@ -63,6 +63,13 @@ pub const DETECT_EXCEPTION_S: f64 = 0.3;
 /// Table 2 case 4 — online statistical monitoring: 3 × D_iter at the
 /// paper's ~45 s iteration time.
 pub const DETECT_STATISTICAL_S: f64 = 3.0 * 45.0;
+/// Gray-degradation detection window (wire v8): the streaming estimators
+/// need `degradation_min_samples` (default 6) consecutive out-of-band
+/// per-step samples at the paper's ~45 s iteration time before a
+/// [`crate::proto::CoordEvent::NodeDegraded`] verdict fires — work during
+/// that window ran at the degraded rate, so the ledger prices it into the
+/// eviction plan ([`CostBreakdown::degradation_penalty`]).
+pub const DETECT_DEGRADATION_S: f64 = 6.0 * 45.0;
 
 /// Table 2 detection latency for one error kind — the per-error-kind time
 /// between the failure and the coordinator learning about it, by the §4.1
@@ -288,6 +295,40 @@ impl CostModel {
         DETECT_NODE_HEALTH_S
     }
 
+    /// Detection latency charged when a plan is triggered by a gray
+    /// degradation verdict rather than a fail-stop SEV1: the streaming
+    /// estimators' verdict window (see [`DETECT_DEGRADATION_S`]). Like
+    /// [`CostModel::detection_s`] this is deliberately **kind-independent**
+    /// so a precomputed table hit prices identically to the live solve.
+    pub fn degradation_s(&self) -> f64 {
+        DETECT_DEGRADATION_S
+    }
+
+    /// The evict-vs-tolerate ledger verdict for a degraded node (wire v8):
+    /// evict iff the goodput the degradation forfeits over the opportunity
+    /// horizon exceeds what the eviction itself costs.
+    ///
+    /// Tolerating a node that runs `slow_frac` below baseline loses
+    /// `slow_frac · task_waf · H` FLOP·s over the horizon
+    /// `H = D_running(n)`. Evicting pays the task's transition
+    /// (`task_waf · transition_s`) and gives up the node's marginal share
+    /// (`node_waf · H`) until a repair returns it. Both sides are in the
+    /// planner's WAF currency, so a degradation eviction and a plan
+    /// objective are directly comparable.
+    pub fn degradation_decision(
+        &self,
+        slow_frac: f64,
+        task_waf: f64,
+        node_waf: f64,
+        n_workers: u32,
+        transition_s: f64,
+    ) -> bool {
+        let horizon_s = self.horizon_s(n_workers);
+        let tolerate_loss = slow_frac * task_waf * horizon_s;
+        let evict_cost = task_waf * transition_s + node_waf * horizon_s;
+        tolerate_loss > evict_cost
+    }
+
     /// WAF one node carries: the proportional share of the cluster's
     /// current WAF attributed to `gpus_per_node` of `pool_gpus` workers.
     pub fn marginal_node_waf(&self, total_waf: f64, pool_gpus: u32, gpus_per_node: u32) -> f64 {
@@ -330,8 +371,8 @@ impl CostModel {
 /// term-by-term.
 ///
 /// Invariant: `objective() = running_reward − transition_penalty −
-/// detection_penalty` equals the plan's DP objective to within 1e-9
-/// relative error.
+/// detection_penalty − degradation_penalty` equals the plan's DP objective
+/// to within 1e-9 relative error.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct CostBreakdown {
     /// Σ F(tᵢ, xᵢ') · D_running — weighted useful work the plan earns over
@@ -344,6 +385,10 @@ pub struct CostBreakdown {
     /// failure and its detection (Table 2, wire v4); zero for fault-free
     /// replans (joins, launches, finishes).
     pub detection_penalty: f64,
+    /// `slow_frac · F(t, x) · d_degradation` — work the degraded node
+    /// silently forfeited during the streaming estimators' verdict window
+    /// (wire v8); zero unless the plan evicts a gray-degraded node.
+    pub degradation_penalty: f64,
     /// The opportunity horizon `D_running(n)` the plan was priced with (s).
     pub horizon_s: f64,
     /// Effective per-GPU MTBF behind that horizon (s) — the prior, or the
@@ -364,10 +409,13 @@ pub struct CostBreakdown {
 }
 
 impl CostBreakdown {
-    /// The objective the terms reconcile to: reward minus the transition
-    /// and detection penalties.
+    /// The objective the terms reconcile to: reward minus the transition,
+    /// detection, and degradation penalties.
     pub fn objective(&self) -> f64 {
-        self.running_reward - self.transition_penalty - self.detection_penalty
+        self.running_reward
+            - self.transition_penalty
+            - self.detection_penalty
+            - self.degradation_penalty
     }
 }
 
@@ -507,16 +555,39 @@ mod tests {
             running_reward: 10.0,
             transition_penalty: 4.0,
             detection_penalty: 1.0,
+            degradation_penalty: 2.0,
             horizon_s: 100.0,
             mtbf_per_gpu_s: 1e6,
             spare_value: 0.0,
             spare_hold_cost: 0.0,
             state_source: StateSource::InMemoryCheckpoint,
         };
-        assert_eq!(b.objective(), 5.0);
+        assert_eq!(b.objective(), 3.0);
         assert_eq!(CostBreakdown::default().objective(), 0.0);
         // fault-free default: the replica source
         assert_eq!(CostBreakdown::default().state_source, StateSource::DpReplica);
+    }
+
+    #[test]
+    fn degradation_eviction_is_a_ledger_verdict() {
+        let cost = CostModel::from_config(&cfg());
+        // the verdict window is the 6-sample streaming-estimator default
+        assert_eq!(cost.degradation_s(), DETECT_DEGRADATION_S);
+        assert_eq!(DETECT_DEGRADATION_S, 6.0 * 45.0);
+        let total_waf = 1e16;
+        let node_waf = cost.marginal_node_waf(total_waf, 32, 8);
+        // a severe straggler (50 % slow) forfeits more over the horizon
+        // than the eviction costs — evict
+        assert!(cost.degradation_decision(0.5, total_waf, node_waf, 32, 100.0));
+        // a mild 10 % degradation is cheaper to tolerate than to lose a
+        // quarter of the pool's marginal share — tolerate
+        assert!(!cost.degradation_decision(0.10, total_waf, node_waf, 32, 100.0));
+        // the break-even slope is node_waf/task_waf + transition_s/H:
+        // losing the node entirely (slow_frac = 1.0) always beats keeping
+        // a fully-stalled node when the transition is cheap
+        assert!(cost.degradation_decision(1.0, total_waf, node_waf, 32, 100.0));
+        // degenerate pool: horizon 0 means only the transition cost counts
+        assert!(!cost.degradation_decision(0.9, total_waf, node_waf, 0, 100.0));
     }
 
     #[test]

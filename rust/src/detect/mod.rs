@@ -7,6 +7,14 @@
 //!   `3×` (both configurable; §4.1 found 3× the practical balance).
 //! * [`classify_exception`] — exception propagation: map a raised exception
 //!   string to the Table 1 [`ErrorKind`].
+//!
+//! The agent-local window monitor here answers "is *my* step late?" with a
+//! hard verdict. The coordinator-side complement is [`crate::health`]: it
+//! ingests the whole fleet's step-timing streams (wire v8
+//! `CoordEvent::StepTiming`), holds a per-node EWMA/MAD baseline, and
+//! classifies *gray* degradation — stragglers and partial-bandwidth nodes
+//! that never trip a hard failure — so eviction can be priced through the
+//! cost ledger instead of declared here.
 
 use std::collections::VecDeque;
 

@@ -5,6 +5,7 @@
 //! similar rate. Arrivals are Poisson; all draws are seeded.
 
 use crate::failure::{ErrorKind, Severity};
+use crate::health::DegradationKind;
 use crate::proto::{NodeId, TaskId};
 use crate::rng::{Rand, Xoshiro256};
 
@@ -94,6 +95,24 @@ impl TraceConfig {
     }
 }
 
+/// One degradation episode in a trace: the node keeps running but slower —
+/// a straggler, a gray partial-bandwidth link, or an elevated preemption
+/// (churn) risk. Unlike [`FailureEvent`]s these are *not* fail-stop: the
+/// environment keeps the node in the pool and drags its task's goodput by
+/// `slow_frac` until the episode ends or the coordinator evicts the node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradationEvent {
+    /// Seconds from trace start when the degradation begins.
+    pub at_s: f64,
+    /// Node that degrades.
+    pub node: NodeId,
+    pub kind: DegradationKind,
+    /// Fraction of the node's contribution lost while degraded (0..1).
+    pub slow_frac: f64,
+    /// How long the episode lasts if nobody intervenes, seconds.
+    pub duration_s: f64,
+}
+
 /// Whether a task enters or leaves the cluster (Fig. 7 triggers ⑥ and ⑤).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LifecycleKind {
@@ -126,6 +145,8 @@ pub struct Trace {
     pub config: TraceConfig,
     pub events: Vec<FailureEvent>,
     pub lifecycle: Vec<TaskLifecycle>,
+    /// Non-fail-stop degradation episodes (empty for the stock traces).
+    pub degradations: Vec<DegradationEvent>,
 }
 
 impl Trace {
@@ -177,7 +198,7 @@ impl Trace {
         emit(&other_kinds, config.expect_other, &mut rng, &mut events);
 
         events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
-        Trace { config, events, lifecycle: Vec::new() }
+        Trace { config, events, lifecycle: Vec::new(), degradations: Vec::new() }
     }
 
     /// Large-fleet scaling trace (16k/64k nodes): background failures at
@@ -417,6 +438,93 @@ impl Trace {
         };
         self.events.push(FailureEvent { at_s, kind, node, repair_after_s: repair });
         self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        self
+    }
+
+    /// Straggler onset: from `at_s`, `node` keeps running but every step on
+    /// it takes `1/(1-slow_frac)`× the healthy duration for `duration_s`
+    /// seconds — the compute gray failure the in-band health observers
+    /// exist to catch (the node never reports an error, it just drags the
+    /// whole data-parallel cohort). Seedless and deterministic like
+    /// [`Trace::with_injected_failure`].
+    pub fn with_straggler_onset(
+        mut self,
+        node: NodeId,
+        at_s: f64,
+        slow_frac: f64,
+        duration_s: f64,
+    ) -> Trace {
+        assert!(node.0 < self.config.n_nodes, "node {} outside the cluster", node.0);
+        assert!((0.0..1.0).contains(&slow_frac), "slow_frac {slow_frac} outside [0, 1)");
+        self.degradations.push(DegradationEvent {
+            at_s: at_s.clamp(0.0, self.config.duration_s),
+            node,
+            kind: DegradationKind::Straggler,
+            slow_frac,
+            duration_s: duration_s.max(0.0),
+        });
+        self.degradations.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.node.cmp(&b.node)));
+        self
+    }
+
+    /// Gray partial-bandwidth episode: `node`'s NIC or its ToR uplink
+    /// degrades (flapping link, ECN storm) so collectives stall and steps
+    /// stretch by `1/(1-slow_frac)`× for `duration_s` seconds. Same
+    /// seedless mechanics as [`Trace::with_straggler_onset`], different
+    /// [`DegradationKind`] so detectors and dashboards can tell the two
+    /// root-cause classes apart.
+    pub fn with_gray_bandwidth(
+        mut self,
+        node: NodeId,
+        at_s: f64,
+        slow_frac: f64,
+        duration_s: f64,
+    ) -> Trace {
+        assert!(node.0 < self.config.n_nodes, "node {} outside the cluster", node.0);
+        assert!((0.0..1.0).contains(&slow_frac), "slow_frac {slow_frac} outside [0, 1)");
+        self.degradations.push(DegradationEvent {
+            at_s: at_s.clamp(0.0, self.config.duration_s),
+            node,
+            kind: DegradationKind::PartialBandwidth,
+            slow_frac,
+            duration_s: duration_s.max(0.0),
+        });
+        self.degradations.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.node.cmp(&b.node)));
+        self
+    }
+
+    /// Spot/preemption churn: `n_events` seeded preemptions, each preceded
+    /// by a [`DegradationKind::ChurnRisk`] advisory `notice_s` seconds
+    /// before the node is yanked with a SEV1 `LostConnection` (the cloud
+    /// two-minute-warning shape). The advisory's `slow_frac` carries the
+    /// predicted preemption probability, not a measured slowdown; its
+    /// `duration_s` is the remaining notice window.
+    pub fn with_spot_churn(mut self, n_events: u32, notice_s: f64, seed: u64) -> Trace {
+        assert!(notice_s >= 0.0);
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x0DE6_AADE);
+        let d = self.config.duration_s;
+        for _ in 0..n_events {
+            let node = NodeId(rng.below(self.config.n_nodes as u64) as u32);
+            let at = rng.uniform(notice_s, d.max(notice_s + 1.0));
+            self.degradations.push(DegradationEvent {
+                at_s: (at - notice_s).max(0.0),
+                node,
+                kind: DegradationKind::ChurnRisk,
+                slow_frac: rng.uniform(0.5, 0.95),
+                duration_s: notice_s,
+            });
+            if at < d {
+                self.events.push(FailureEvent {
+                    at_s: at,
+                    kind: ErrorKind::LostConnection,
+                    node,
+                    repair_after_s: rng
+                        .uniform(self.config.repair_min_s, self.config.repair_max_s),
+                });
+            }
+        }
+        self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        self.degradations.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.node.cmp(&b.node)));
         self
     }
 
@@ -757,6 +865,66 @@ mod tests {
         assert!(t.events.iter().all(|e| e.node.0 < 65536));
         assert!(t.events.len() >= 8, "at least the burst itself");
         assert!(t.lifecycle.is_empty());
+    }
+
+    #[test]
+    fn straggler_and_gray_builders_schedule_degradations_not_failures() {
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0)
+            .with_straggler_onset(NodeId(3), 4000.0, 0.6, 20000.0)
+            .with_gray_bandwidth(NodeId(7), 9000.0, 0.3, 5000.0);
+        assert!(t.events.is_empty(), "degradations are not fail-stop events");
+        assert_eq!(t.degradations.len(), 2);
+        let s = &t.degradations[0];
+        assert_eq!(
+            (s.node, s.at_s, s.kind, s.slow_frac, s.duration_s),
+            (NodeId(3), 4000.0, DegradationKind::Straggler, 0.6, 20000.0)
+        );
+        let g = &t.degradations[1];
+        assert_eq!(g.kind, DegradationKind::PartialBandwidth);
+        assert_eq!(g.node, NodeId(7));
+        // time-sorted regardless of builder order
+        let swapped = Trace::generate(
+            TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() },
+            0,
+        )
+        .with_gray_bandwidth(NodeId(7), 9000.0, 0.3, 5000.0)
+        .with_straggler_onset(NodeId(3), 4000.0, 0.6, 20000.0);
+        assert_eq!(t.degradations, swapped.degradations);
+    }
+
+    #[test]
+    fn spot_churn_warns_before_every_preemption() {
+        let tc = TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() };
+        let t = Trace::generate(tc, 0).with_spot_churn(5, 120.0, 13);
+        assert_eq!(t.degradations.len(), 5);
+        for w in &t.degradations {
+            assert_eq!(w.kind, DegradationKind::ChurnRisk);
+            assert!((0.5..0.95).contains(&w.slow_frac), "predicted probability {}", w.slow_frac);
+            assert_eq!(w.duration_s, 120.0);
+            // the preemption itself lands notice_s after the advisory
+            let hit = t.events.iter().find(|e| {
+                e.node == w.node && (e.at_s - (w.at_s + 120.0)).abs() < 1e-6
+            });
+            assert!(hit.is_some(), "advisory for node {} has no preemption", w.node.0);
+            assert_eq!(hit.unwrap().kind, ErrorKind::LostConnection);
+        }
+        // deterministic per seed — the corpus contract
+        let again = Trace::generate(
+            TraceConfig { expect_sev1: 0.0, expect_other: 0.0, ..TraceConfig::trace_a() },
+            0,
+        )
+        .with_spot_churn(5, 120.0, 13);
+        assert_eq!(t.degradations, again.degradations);
+        assert_eq!(t.events, again.events);
+        assert!(t.events.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        assert!(t.degradations.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+    }
+
+    #[test]
+    fn stock_traces_have_no_degradations() {
+        assert!(Trace::generate(TraceConfig::trace_a(), 1).degradations.is_empty());
+        assert!(Trace::with_large_fleet(16384, 1, 4, 2).degradations.is_empty());
     }
 
     #[test]

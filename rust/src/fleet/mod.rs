@@ -120,6 +120,10 @@ pub struct NodeHealth {
     /// Observability only; decisions never read it (determinism note).
     ewma_ift_s: Option<f64>,
     last_failure_at_s: Option<f64>,
+    /// EWMA of observed degradation slow fractions (wire v8) — the
+    /// `/fleet/health` per-node degradation-score column. 0 for a node
+    /// never seen degraded; rises toward the sustained slow fraction.
+    degradation: f64,
 }
 
 impl NodeHealth {
@@ -340,6 +344,56 @@ impl FleetModel {
 
     pub fn note_quarantine(&mut self, node: NodeId) {
         self.entry(node).quarantined = true;
+    }
+
+    /// Record a gray-degradation observation on `node` (wire v8): the
+    /// measured slow fraction blends into the node's EWMA degradation
+    /// score. Clamped to [0, 1] so a wild sample cannot poison the score.
+    pub fn note_degradation(&mut self, node: NodeId, slow_frac: f64) {
+        let s = slow_frac.clamp(0.0, 1.0);
+        let h = self.entry(node);
+        h.degradation = EWMA_ALPHA * s + (1.0 - EWMA_ALPHA) * h.degradation;
+    }
+
+    /// The node's EWMA degradation score in [0, 1] — 0 for a node with no
+    /// history or one never observed degraded.
+    pub fn degradation_score(&self, node: NodeId) -> f64 {
+        self.nodes.get(&node).map_or(0.0, |h| h.degradation)
+    }
+
+    /// Hazard-aware MTBF (seconds): the node's EWMA inter-failure-time
+    /// estimate (or the cluster-wide per-GPU estimate when the node has no
+    /// history of its own) scaled by a Weibull-shaped age multiplier with
+    /// shape k < 1 — the infant-mortality regime both datacenter
+    /// characterization studies measure: a barely-exercised node carries a
+    /// hazard rate well above the fleet average, and the rate settles
+    /// toward baseline as the node survives more lifecycle events.
+    ///
+    /// The age proxy is the node's lifecycle event count
+    /// (joins + repairs + failures) — event-clock data, not wall time.
+    /// The multiplier `(age / AGE_SCALE)^(1 − k)` is clamped to
+    /// [0.25, 4.0] so the column stays interpretable next to the raw
+    /// estimate. **Observability only** — the `/fleet/health` report's
+    /// hazard column; decisions keep pricing with the flat EWMA estimate
+    /// (determinism: replays would otherwise have to reproduce the age
+    /// proxy exactly, and the cost ledger's horizon stays a pure EWMA).
+    pub fn hazard_adjusted_mtbf_s(&self, node: NodeId) -> f64 {
+        /// Weibull shape: k < 1 means decreasing hazard with age.
+        const WEIBULL_K: f64 = 0.7;
+        /// Lifecycle events at which a node reaches the fleet baseline.
+        const AGE_SCALE: f64 = 8.0;
+        let base = self
+            .nodes
+            .get(&node)
+            .and_then(|h| h.ewma_ift_s)
+            .unwrap_or(self.mtbf_per_gpu_est_s);
+        let age = self
+            .nodes
+            .get(&node)
+            .map_or(0, |h| h.joins + h.repairs + h.failures)
+            .max(1) as f64;
+        let multiplier = (age / AGE_SCALE).powf(1.0 - WEIBULL_K).clamp(0.25, 4.0);
+        base * multiplier
     }
 
     pub fn note_release(&mut self, node: NodeId) {
@@ -722,6 +776,55 @@ mod tests {
         // the clock anchor did not move backwards
         assert!(f.observe_cluster_failure(160.0, 64), "60 s gap must count");
         assert_eq!(f.mtbf_observations(), 1);
+    }
+
+    #[test]
+    fn degradation_score_blends_toward_the_sustained_slow_fraction() {
+        let mut f = fleet();
+        assert_eq!(f.degradation_score(NodeId(3)), 0.0, "no history means no score");
+        for _ in 0..30 {
+            f.note_degradation(NodeId(3), 0.4);
+        }
+        let s = f.degradation_score(NodeId(3));
+        assert!((s - 0.4).abs() < 1e-3, "sustained 40 % slow converges: {s}");
+        // other nodes are untouched
+        assert_eq!(f.degradation_score(NodeId(4)), 0.0);
+        // wild samples are clamped, never poisoning the score
+        f.note_degradation(NodeId(3), 50.0);
+        assert!(f.degradation_score(NodeId(3)) <= 1.0);
+        f.note_degradation(NodeId(3), -7.0);
+        assert!(f.degradation_score(NodeId(3)) >= 0.0);
+    }
+
+    #[test]
+    fn hazard_mtbf_penalizes_young_nodes_and_settles_with_age() {
+        let mut f = fleet();
+        let base = f.mtbf_per_gpu_estimate_s();
+        // a brand-new node (no lifecycle history) is in the infant-mortality
+        // regime: its hazard-adjusted MTBF sits below the flat estimate
+        let young = f.hazard_adjusted_mtbf_s(NodeId(0));
+        assert!(young < base, "young {young} vs base {base}");
+        assert!(young >= base * 0.25, "clamp floor holds");
+        // the multiplier rises monotonically with lifecycle age
+        let mut prev = young;
+        for _ in 0..20 {
+            f.note_join(NodeId(0));
+            let h = f.hazard_adjusted_mtbf_s(NodeId(0));
+            assert!(h >= prev, "hazard MTBF never falls with age: {h} < {prev}");
+            prev = h;
+        }
+        // a long-serving node earns a multiplier above 1 (clamped at 4)
+        assert!(prev > base && prev <= base * 4.0);
+        // a node with its own inter-failure history scales that estimate
+        let mut g = fleet();
+        for k in 0..10u32 {
+            g.tick();
+            g.note_failure(NodeId(2), Severity::Sev2);
+            g.observe_failure_time(NodeId(2), 100.0 * k as f64);
+        }
+        let own = g.health(NodeId(2)).unwrap().mtbf_estimate_s().unwrap();
+        let h = g.hazard_adjusted_mtbf_s(NodeId(2));
+        assert!(h >= own * 0.25 && h <= own * 4.0, "{h} vs own estimate {own}");
     }
 
     #[test]

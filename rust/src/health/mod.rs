@@ -1,0 +1,369 @@
+//! In-band health observation (DESIGN.md §16): bounded-memory streaming
+//! statistics over per-node per-step durations, turning the paper's
+//! fail-stop detection ladder (§4.1) into one that also sees the *quiet*
+//! failures the datacenter characterization studies blame for most lost
+//! goodput — stragglers and gray degradation (a sick NVLink/NIC silently
+//! slowing a whole DP group).
+//!
+//! Three pieces:
+//!
+//! * [`DegradationKind`] — the typed vocabulary of the wire-v8
+//!   `NodeDegraded` event (straggler / partial-bandwidth / churn-risk).
+//! * [`StreamStats`] — an O(1)-per-sample online estimator: EWMA mean plus
+//!   an EWMA of absolute deviation (a robust MAD-style scale), no
+//!   allocation after construction. `score` is the robust z-score the
+//!   outlier gate uses.
+//! * [`HealthMonitor`] — per-node streams behind one observe call. Each
+//!   node's *baseline* folds in only in-band samples (outliers are scored,
+//!   never absorbed, so a sustained slowdown cannot drag its own reference
+//!   up), and sustained excursions classify: `slow_frac ≥ fail` for
+//!   `min_samples` consecutive steps is a [`DegradationKind::Straggler`];
+//!   a longer streak in the warn band is gray
+//!   [`DegradationKind::PartialBandwidth`].
+//!
+//! The monitor is deterministic state driven purely by the recorded
+//! [`CoordEvent::StepTiming`](crate::proto::CoordEvent) stream, so replays
+//! of a [`DecisionLog`](crate::proto::DecisionLog) rebuild identical
+//! classifications — detection stays inside the standing
+//! `Trace` → `CoordEvent` → `RecoveryPolicy` → `Action` flow.
+
+use std::collections::BTreeMap;
+
+use crate::config::UnicronConfig;
+use crate::proto::NodeId;
+
+/// Robust z-score above which a sample is an outlier the baseline refuses
+/// to absorb (1.4826·MAD ≈ one σ under normality; 3σ is the usual gate).
+const OUTLIER_SCORE: f64 = 3.0;
+
+/// Typed degradation vocabulary of the wire-v8 `NodeDegraded` event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradationKind {
+    /// Sustained per-step slowdown past the fail fraction: the node drags
+    /// its whole task (the classic straggler).
+    Straggler,
+    /// Sustained warn-band slowdown: gray partial-bandwidth loss — the
+    /// node still completes steps, just consistently slower.
+    PartialBandwidth,
+    /// An external churn signal (spot/preemption notice): no slowdown yet,
+    /// but the hazard of imminent loss is elevated.
+    ChurnRisk,
+}
+
+impl DegradationKind {
+    pub fn all() -> &'static [DegradationKind] {
+        &[
+            DegradationKind::Straggler,
+            DegradationKind::PartialBandwidth,
+            DegradationKind::ChurnRisk,
+        ]
+    }
+
+    /// Stable wire name (the tagged-JSON `kind` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradationKind::Straggler => "straggler",
+            DegradationKind::PartialBandwidth => "partial_bandwidth",
+            DegradationKind::ChurnRisk => "churn_risk",
+        }
+    }
+
+    /// Strict inverse of [`name`](Self::name): unknown names are `None`
+    /// (the proto layer turns that into a decode error, never a default).
+    pub fn from_name(name: &str) -> Option<DegradationKind> {
+        DegradationKind::all().iter().copied().find(|k| k.name() == name)
+    }
+}
+
+/// Bounded-memory online estimator: EWMA mean + EWMA absolute deviation.
+/// O(1) per sample, no allocation, four words of state.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    count: u64,
+    mean: f64,
+    abs_dev: f64,
+    alpha: f64,
+}
+
+impl StreamStats {
+    /// `alpha` is the EWMA weight of the newest sample (0 < alpha ≤ 1).
+    pub fn new(alpha: f64) -> StreamStats {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]: {alpha}");
+        StreamStats { count: 0, mean: 0.0, abs_dev: 0.0, alpha }
+    }
+
+    /// Fold one sample into the estimator.
+    pub fn observe(&mut self, x: f64) {
+        if self.count == 0 {
+            self.mean = x;
+            self.abs_dev = 0.0;
+        } else {
+            let dev = (x - self.mean).abs();
+            self.abs_dev += self.alpha * (dev - self.abs_dev);
+            self.mean += self.alpha * (x - self.mean);
+        }
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Robust MAD-style scale (EWMA of absolute deviation).
+    pub fn mad(&self) -> f64 {
+        self.abs_dev
+    }
+
+    /// Robust z-score of `x` against the stream: deviation over
+    /// 1.4826·MAD (the normal-consistency factor), floored so a perfectly
+    /// constant warm-up stream still scores spikes as outliers.
+    pub fn score(&self, x: f64) -> f64 {
+        let scale = (1.4826 * self.abs_dev).max(1e-3 * self.mean.abs()).max(1e-12);
+        (x - self.mean).abs() / scale
+    }
+}
+
+/// Per-node stream state: the in-band baseline plus excursion streaks.
+#[derive(Debug, Clone, Default)]
+struct NodeStream {
+    baseline: StreamStats,
+    warn_streak: u32,
+    fail_streak: u32,
+}
+
+/// Per-node per-step duration ingestion with slow-node / gray-degradation
+/// classification. One [`observe_step`](Self::observe_step) call per
+/// sample; the steady-state hot path is a small-map lookup plus a handful
+/// of multiply-adds (allocation happens only on a node's *first* sample).
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    nodes: BTreeMap<NodeId, NodeStream>,
+    alpha: f64,
+    warn_frac: f64,
+    fail_frac: f64,
+    min_samples: u32,
+}
+
+impl HealthMonitor {
+    pub fn from_config(cfg: &UnicronConfig) -> HealthMonitor {
+        assert!(
+            cfg.degradation_fail_frac > cfg.degradation_warn_frac
+                && cfg.degradation_warn_frac > 0.0
+                && cfg.degradation_fail_frac < 1.0,
+            "degradation fractions must satisfy 0 < warn < fail < 1"
+        );
+        HealthMonitor {
+            nodes: BTreeMap::new(),
+            // the baseline adapts slowly on purpose: it is the reference a
+            // sustained excursion is judged against
+            alpha: 0.05,
+            warn_frac: cfg.degradation_warn_frac,
+            fail_frac: cfg.degradation_fail_frac,
+            min_samples: cfg.degradation_min_samples.max(1),
+        }
+    }
+
+    /// Ingest one per-step duration for `node`. Returns a classification
+    /// once an excursion is *sustained*: `Straggler` after `min_samples`
+    /// consecutive steps past the fail fraction, `PartialBandwidth` after
+    /// `2×min_samples` consecutive steps past the warn fraction. While
+    /// degraded the classification repeats every step (the caller decides
+    /// once and isolates, or keeps tolerating), and the baseline never
+    /// absorbs out-of-band samples.
+    pub fn observe_step(&mut self, node: NodeId, duration_s: f64) -> Option<(DegradationKind, f64)> {
+        if !(duration_s.is_finite() && duration_s > 0.0) {
+            return None;
+        }
+        let alpha = self.alpha;
+        let min_samples = self.min_samples;
+        let s = self.nodes.entry(node).or_insert_with(|| NodeStream {
+            baseline: StreamStats::new(alpha),
+            ..Default::default()
+        });
+        if s.baseline.count() < u64::from(min_samples) {
+            s.baseline.observe(duration_s); // warm-up: build the reference
+            return None;
+        }
+        let base = s.baseline.mean();
+        // how much of the step the node wastes vs its own healthy baseline
+        let slow_frac = (1.0 - base / duration_s).max(0.0);
+        let outlier = s.baseline.score(duration_s) >= OUTLIER_SCORE;
+        if slow_frac >= self.fail_frac {
+            s.fail_streak += 1;
+            s.warn_streak += 1;
+        } else if slow_frac >= self.warn_frac && outlier {
+            s.fail_streak = 0;
+            s.warn_streak += 1;
+        } else {
+            s.fail_streak = 0;
+            s.warn_streak = 0;
+            s.baseline.observe(duration_s); // in-band: refresh the baseline
+        }
+        if s.fail_streak >= min_samples {
+            Some((DegradationKind::Straggler, slow_frac))
+        } else if s.warn_streak >= 2 * min_samples {
+            Some((DegradationKind::PartialBandwidth, slow_frac))
+        } else {
+            None
+        }
+    }
+
+    /// The node's healthy-baseline step duration, once warmed up.
+    pub fn baseline_s(&self, node: NodeId) -> Option<f64> {
+        let s = self.nodes.get(&node)?;
+        (s.baseline.count() > 0).then(|| s.baseline.mean())
+    }
+
+    /// Number of nodes with at least one ingested sample.
+    pub fn nodes_observed(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Drop a node's stream (evicted/isolated nodes stop being judged; a
+    /// repaired node re-warms from scratch).
+    pub fn forget(&mut self, node: NodeId) {
+        self.nodes.remove(&node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor() -> HealthMonitor {
+        HealthMonitor::from_config(&UnicronConfig::default())
+    }
+
+    #[test]
+    fn kind_names_round_trip_strictly() {
+        for &k in DegradationKind::all() {
+            assert_eq!(DegradationKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(DegradationKind::from_name("bogus"), None);
+        assert_eq!(DegradationKind::from_name("Straggler"), None, "names are exact");
+        assert_eq!(DegradationKind::all().len(), 3);
+    }
+
+    #[test]
+    fn stream_stats_track_mean_and_deviation() {
+        let mut s = StreamStats::new(0.3);
+        for _ in 0..50 {
+            s.observe(10.0);
+        }
+        assert!((s.mean() - 10.0).abs() < 1e-9);
+        assert!(s.mad() < 1e-9);
+        assert_eq!(s.count(), 50);
+        // a constant stream scores any excursion as a huge outlier
+        assert!(s.score(11.0) > OUTLIER_SCORE);
+        // jittered stream: mean tracks, score of in-band sample is small
+        let mut j = StreamStats::new(0.3);
+        for i in 0..200 {
+            j.observe(10.0 + 0.2 * ((i % 5) as f64 - 2.0));
+        }
+        assert!((j.mean() - 10.0).abs() < 0.5);
+        assert!(j.score(10.1) < OUTLIER_SCORE);
+        assert!(j.score(20.0) > OUTLIER_SCORE);
+    }
+
+    #[test]
+    fn warm_up_is_silent() {
+        let mut m = monitor();
+        let n = NodeId(3);
+        // even wildly slow samples during warm-up produce no verdict
+        for _ in 0..UnicronConfig::default().degradation_min_samples - 1 {
+            assert_eq!(m.observe_step(n, 500.0), None);
+        }
+        assert!(m.baseline_s(n).is_some());
+        assert_eq!(m.nodes_observed(), 1);
+    }
+
+    #[test]
+    fn sustained_straggler_is_classified_with_its_slow_fraction() {
+        let mut m = monitor();
+        let n = NodeId(1);
+        for _ in 0..20 {
+            assert_eq!(m.observe_step(n, 45.0), None, "healthy stream stays silent");
+        }
+        // node slows to 2× (slow_frac = 0.5): silent until sustained,
+        // then classified as a straggler every subsequent step
+        let min = UnicronConfig::default().degradation_min_samples;
+        let mut verdicts = 0;
+        for i in 0..min + 3 {
+            match m.observe_step(n, 90.0) {
+                Some((kind, frac)) => {
+                    verdicts += 1;
+                    assert_eq!(kind, DegradationKind::Straggler);
+                    assert!((frac - 0.5).abs() < 0.05, "slow_frac ≈ 0.5, got {frac}");
+                    assert!(i + 1 >= min, "must not fire before {min} sustained samples");
+                }
+                None => assert!(i + 1 < min, "must fire from sample {min}, silent at {}", i + 1),
+            }
+        }
+        assert_eq!(verdicts, 4);
+        // the baseline never absorbed the degraded samples
+        assert!((m.baseline_s(n).unwrap() - 45.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn warn_band_is_gray_partial_bandwidth_and_below_warn_is_silent() {
+        let mut m = monitor();
+        let cfg = UnicronConfig::default();
+        let gray = NodeId(2);
+        let fine = NodeId(4);
+        for _ in 0..20 {
+            assert_eq!(m.observe_step(gray, 45.0), None);
+            assert_eq!(m.observe_step(fine, 45.0), None);
+        }
+        // 12% sustained loss: warn-band (below fail_frac), classified gray
+        // only after the longer 2×min_samples streak
+        let slow = 45.0 / (1.0 - 0.12);
+        let mut first = None;
+        for i in 0..3 * cfg.degradation_min_samples {
+            if let Some((kind, frac)) = m.observe_step(gray, slow) {
+                assert_eq!(kind, DegradationKind::PartialBandwidth);
+                assert!((frac - 0.12).abs() < 0.03, "slow_frac ≈ 0.12, got {frac}");
+                first.get_or_insert(i + 1);
+            }
+            // sub-warn jitter on the healthy node never classifies
+            assert_eq!(m.observe_step(fine, 45.0 * 1.02), None);
+        }
+        assert_eq!(first, Some(2 * cfg.degradation_min_samples), "gray needs a longer streak");
+    }
+
+    #[test]
+    fn recovery_resets_the_streaks() {
+        let mut m = monitor();
+        let n = NodeId(7);
+        for _ in 0..10 {
+            m.observe_step(n, 45.0);
+        }
+        let min = UnicronConfig::default().degradation_min_samples;
+        for _ in 0..min - 1 {
+            m.observe_step(n, 90.0); // one short of sustained
+        }
+        assert_eq!(m.observe_step(n, 45.0), None, "back in band: streak resets");
+        for i in 0..min {
+            let v = m.observe_step(n, 90.0);
+            assert_eq!(v.is_some(), i + 1 >= min, "streak must restart from zero");
+        }
+        m.forget(n);
+        assert_eq!(m.baseline_s(n), None);
+        assert_eq!(m.nodes_observed(), 0);
+    }
+
+    #[test]
+    fn estimator_is_constant_memory_over_a_million_samples() {
+        let mut m = monitor();
+        let n = NodeId(0);
+        for i in 0..1_000_000u64 {
+            m.observe_step(n, 45.0 + 0.01 * ((i % 11) as f64));
+        }
+        assert_eq!(m.nodes_observed(), 1, "one node = one bounded stream");
+        let base = m.baseline_s(n).unwrap();
+        assert!((base - 45.05).abs() < 0.2, "baseline converged: {base}");
+    }
+}

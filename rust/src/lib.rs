@@ -23,7 +23,8 @@
 //!   service, leader election, and decision-log replication (DESIGN.md §15)
 //! * the state tier: [`store`] — content-addressed, deduplicating, tiered
 //!   snapshot store the transition/cost layers price against (DESIGN.md §13)
-//! * the paper's contribution: [`failure`] + [`detect`] (§4), [`perfmodel`] +
+//! * the paper's contribution: [`failure`] + [`detect`] + [`health`] (§4),
+//!   [`perfmodel`] +
 //!   [`planner`] (§5), [`transition`] (§6), [`agent`] + [`coordinator`] (§3)
 //! * fleet economics: [`fleet`] — node health history, lemon detection,
 //!   and the cost-aware hot-spare pool (DESIGN.md §8)
@@ -49,6 +50,7 @@ pub mod detect;
 pub mod engine;
 pub mod failure;
 pub mod fleet;
+pub mod health;
 pub mod kvstore;
 pub mod membership;
 pub mod metrics;

@@ -185,6 +185,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         OptSpec { name: "case", help: "Table 3 case (1-5)", takes_value: true, default: Some("5") },
         OptSpec { name: "seed", help: "trace seed", takes_value: true, default: Some("42") },
         OptSpec { name: "record", help: "write the run's DecisionLog JSON here (single policy)", takes_value: true, default: None },
+        OptSpec { name: "straggler", help: "overlay a straggler onset: node:at_s:slow_frac:duration_s", takes_value: true, default: None },
     ];
     let args = Args::parse(argv, &specs).map_err(|e| e.to_string())?;
     let tc = match args.str("trace").unwrap() {
@@ -194,7 +195,23 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     };
     let seed = args.u64("seed").map_err(|e| e.to_string())?;
     let case = args.u64("case").map_err(|e| e.to_string())? as u32;
-    let trace = Trace::generate(tc, seed);
+    let mut trace = Trace::generate(tc, seed);
+    if let Some(s) = args.get("straggler") {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 4 {
+            return Err("--straggler expects node:at_s:slow_frac:duration_s".into());
+        }
+        let node: u32 = parts[0].parse().map_err(|_| "bad straggler node")?;
+        let at_s: f64 = parts[1].parse().map_err(|_| "bad straggler at_s")?;
+        let slow_frac: f64 = parts[2].parse().map_err(|_| "bad straggler slow_frac")?;
+        let duration_s: f64 = parts[3].parse().map_err(|_| "bad straggler duration_s")?;
+        trace = trace.with_straggler_onset(
+            unicron::proto::NodeId(node),
+            at_s,
+            slow_frac,
+            duration_s,
+        );
+    }
     let cluster = ClusterSpec::default();
     let cfg = UnicronConfig::default();
     let tasks = table3_case(case);

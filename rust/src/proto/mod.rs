@@ -47,6 +47,7 @@ use std::fmt;
 
 use crate::cost::CostBreakdown;
 use crate::failure::ErrorKind;
+use crate::health::DegradationKind;
 use crate::placement::Layout;
 use crate::planner::Plan;
 use crate::ser::{JsonError, Value};
@@ -81,7 +82,13 @@ use crate::transition::StateSource;
 ///   control plane streams committed entries to standbys as
 ///   sequence-numbered frames, and a decoded log must be seq-gapless —
 ///   a gap or reorder is a strict decode error, not a skip.
-pub const DECISION_LOG_VERSION: u64 = 7;
+/// * v8 — in-band health observation: [`CoordEvent::StepTiming`] carries a
+///   per-node per-step duration sample into the coordinator's streaming
+///   estimators, [`CoordEvent::NodeDegraded`] is the resulting SEV-class
+///   verdict (typed [`crate::health::DegradationKind`] + measured slow
+///   fraction), and every [`CostBreakdown`] gains the degradation
+///   detection-latency term ([`CostBreakdown::degradation_penalty`]).
+pub const DECISION_LOG_VERSION: u64 = 8;
 
 // ---------------------------------------------------------------------------
 // Typed identifiers
@@ -165,6 +172,22 @@ pub enum CoordEvent {
     /// its planner inputs and invalidates the precomputed table; no actions
     /// result, but the event is recorded so replays re-price identically.
     StateResidency { task: TaskId, source: StateSource, restore_s: f64 },
+    /// In-band per-step timing sample (wire v8): the agent on `node`
+    /// measured one training step of `task` taking `duration_s` seconds.
+    /// This is the raw observation the paper's "no extra overhead"
+    /// detection pillar runs on — it feeds the coordinator's per-node
+    /// streaming estimators ([`crate::health::HealthMonitor`]) and usually
+    /// decides nothing; it is recorded so replays rebuild the identical
+    /// estimator state and hence the identical degradation verdicts.
+    StepTiming { node: NodeId, task: TaskId, duration_s: f64 },
+    /// SEV-class degradation verdict (wire v8): `node` (running `task`) is
+    /// classified as quietly degraded — a straggler, a partial-bandwidth
+    /// gray failure, or a churn-risk spot instance — running at a measured
+    /// `slow_frac` goodput deficit (0.25 = 25 % slower than its own
+    /// baseline). Emitted internally when the streaming estimators cross
+    /// their verdict thresholds, and accepted externally so out-of-band
+    /// observers (provider preemption notices) share the same path.
+    NodeDegraded { node: NodeId, task: TaskId, kind: DegradationKind, slow_frac: f64 },
 }
 
 impl CoordEvent {
@@ -184,6 +207,8 @@ impl CoordEvent {
             CoordEvent::ReplanDue => "replan_due",
             CoordEvent::Batch(_) => "batch",
             CoordEvent::StateResidency { .. } => "state_residency",
+            CoordEvent::StepTiming { .. } => "step_timing",
+            CoordEvent::NodeDegraded { .. } => "node_degraded",
         }
     }
 }
@@ -390,6 +415,17 @@ impl CoordEvent {
                 .with("task", task.0)
                 .with("source", source.name())
                 .with("restore_s", *restore_s),
+            CoordEvent::StepTiming { node, task, duration_s } => Value::obj()
+                .with("event", "step_timing")
+                .with("node", node.0)
+                .with("task", task.0)
+                .with("duration_s", *duration_s),
+            CoordEvent::NodeDegraded { node, task, kind, slow_frac } => Value::obj()
+                .with("event", "node_degraded")
+                .with("node", node.0)
+                .with("task", task.0)
+                .with("kind", kind.name())
+                .with("slow_frac", *slow_frac),
         }
     }
 
@@ -438,6 +474,23 @@ impl CoordEvent {
                     restore_s: get_f64(v, "restore_s")?,
                 })
             }
+            "step_timing" => Ok(CoordEvent::StepTiming {
+                node: get_node(v)?,
+                task: get_task(v)?,
+                duration_s: get_f64(v, "duration_s")?,
+            }),
+            "node_degraded" => {
+                let name = get_str(v, "kind")?;
+                let kind = DegradationKind::from_name(name).ok_or_else(|| {
+                    ProtoError::new(format!("unknown degradation kind {name:?}"))
+                })?;
+                Ok(CoordEvent::NodeDegraded {
+                    node: get_node(v)?,
+                    task: get_task(v)?,
+                    kind,
+                    slow_frac: get_f64(v, "slow_frac")?,
+                })
+            }
             other => Err(ProtoError::new(format!("unknown event type {other:?}"))),
         }
     }
@@ -448,6 +501,7 @@ fn breakdown_to_value(b: &CostBreakdown) -> Value {
         .with("running_reward", b.running_reward)
         .with("transition_penalty", b.transition_penalty)
         .with("detection_penalty", b.detection_penalty)
+        .with("degradation_penalty", b.degradation_penalty)
         .with("horizon_s", b.horizon_s)
         .with("mtbf_per_gpu_s", b.mtbf_per_gpu_s)
         .with("spare_value", b.spare_value)
@@ -460,6 +514,7 @@ fn breakdown_from_value(v: &Value) -> Result<CostBreakdown, ProtoError> {
         running_reward: get_f64(v, "running_reward")?,
         transition_penalty: get_f64(v, "transition_penalty")?,
         detection_penalty: get_f64(v, "detection_penalty")?,
+        degradation_penalty: get_f64(v, "degradation_penalty")?,
         horizon_s: get_f64(v, "horizon_s")?,
         mtbf_per_gpu_s: get_f64(v, "mtbf_per_gpu_s")?,
         spare_value: get_f64(v, "spare_value")?,
@@ -907,6 +962,32 @@ mod tests {
             .with("task", 2u32)
             .with("source", "tape_vault")
             .with("restore_s", 1.0);
+        assert!(CoordEvent::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn health_variants_round_trip() {
+        let ev = CoordEvent::StepTiming { node: NodeId(5), task: TaskId(1), duration_s: 47.25 };
+        let back = CoordEvent::from_value(&Value::parse(&ev.to_value().encode()).unwrap()).unwrap();
+        assert_eq!(ev, back);
+        for kind in DegradationKind::all() {
+            let ev = CoordEvent::NodeDegraded {
+                node: NodeId(12),
+                task: TaskId(0),
+                kind,
+                slow_frac: 0.375,
+            };
+            let back =
+                CoordEvent::from_value(&Value::parse(&ev.to_value().encode()).unwrap()).unwrap();
+            assert_eq!(ev, back);
+        }
+        // unknown degradation kind is rejected, never defaulted
+        let v = Value::obj()
+            .with("event", "node_degraded")
+            .with("node", 12u32)
+            .with("task", 0u32)
+            .with("kind", "quantum_jitter")
+            .with("slow_frac", 0.5);
         assert!(CoordEvent::from_value(&v).is_err());
     }
 

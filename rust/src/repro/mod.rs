@@ -118,6 +118,11 @@ pub const EXPERIMENTS: &[Experiment] = &[
         run: sev1_timeline,
     },
     Experiment {
+        id: "straggler-evict",
+        description: "in-band straggler detection: detect-and-evict vs oblivious goodput (health)",
+        run: straggler_evict,
+    },
+    Experiment {
         id: "fig11a",
         description: "training efficiency under failure trace-a (Fig. 11)",
         run: |seed| fig11(TraceConfig::trace_a(), seed),
@@ -509,6 +514,7 @@ fn ledger_table(rows: &[(&str, &SimResult)]) -> String {
         "Σ running reward",
         "Σ transition pen.",
         "Σ detection pen.",
+        "Σ degradation pen.",
         "Σ spare value",
     ]);
     for (label, r) in rows {
@@ -520,6 +526,7 @@ fn ledger_table(rows: &[(&str, &SimResult)]) -> String {
             format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.running_reward))),
             format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.transition_penalty))),
             format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.detection_penalty))),
+            format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.degradation_penalty))),
             format!("{}FLOP·s", fmt_si(breakdown_total(r, |b| b.spare_value))),
         ]);
     }
@@ -1012,6 +1019,98 @@ pub fn warm_peer(seed: u64) -> String {
     warm_peer_render(&trace, &on, &off)
 }
 
+/// The straggler trace and its two Unicron runs: in-band degradation
+/// detection on (per-step timing streams feed [`crate::health`], the
+/// verdict is priced through the cost ledger, the straggler is evicted)
+/// vs off (degradation-oblivious — the slow node drags its cohort for the
+/// whole five-hour window). Split out so tests can pin the acceptance
+/// property — detect-and-evict goodput ≥ oblivious — without re-parsing
+/// the rendered table.
+pub fn straggler_evict_runs(seed: u64) -> (Trace, SimResult, SimResult) {
+    let cluster = ClusterSpec::default();
+    let specs = table3_case(5);
+    let tc = TraceConfig {
+        name: "straggler-evict".into(),
+        duration_s: 6.0 * 3600.0,
+        n_nodes: cluster.n_nodes,
+        expect_sev1: 0.0,
+        expect_other: 0.0,
+        repair_min_s: 0.25 * 86400.0,
+        repair_max_s: 86400.0,
+    };
+    // Node 3 starts running ~70% slow at t≈1.1h and stays degraded for five
+    // hours. No hard failure ever fires — the gray-failure gap: heartbeats
+    // stay green while the slowest data-parallel worker gates its whole
+    // cohort. Only the in-band step-timing stream can see it.
+    let trace =
+        Trace::generate(tc, seed).with_straggler_onset(NodeId(3), 4000.0, 0.7, 18000.0);
+    let run_with = |detect: bool| {
+        let cfg =
+            UnicronConfig { degradation_detection: detect, ..UnicronConfig::default() };
+        Simulator::builder()
+            .cluster(cluster.clone())
+            .config(cfg)
+            .policy(PolicyKind::Unicron)
+            .tasks(&specs)
+            .build()
+            .run(&trace)
+    };
+    let on = run_with(true);
+    let off = run_with(false);
+    (trace, on, off)
+}
+
+/// Render the `straggler-evict` report from already-computed runs.
+pub fn straggler_evict_render(trace: &Trace, on: &SimResult, off: &SimResult) -> String {
+    let count =
+        |r: &SimResult, f: fn(&Action) -> bool| r.decision_log.actions().filter(|&a| f(a)).count();
+    let steps = |r: &SimResult| {
+        r.decision_log
+            .events()
+            .filter(|e| matches!(e, CoordEvent::StepTiming { .. }))
+            .count()
+    };
+    let mut t = Table::new(&[
+        "degradation detection",
+        "accumulated WAF",
+        "mean WAF",
+        "step reports",
+        "evictions",
+        "alerts",
+    ]);
+    for (label, r) in [("detect-and-evict", on), ("oblivious", off)] {
+        t.row(&[
+            label.into(),
+            format!("{}FLOP·s", fmt_si(r.accumulated_waf)),
+            format!("{}FLOP/s", fmt_si(r.mean_waf())),
+            steps(r).to_string(),
+            count(r, |a| matches!(a, Action::IsolateNode { .. })).to_string(),
+            count(r, |a| matches!(a, Action::AlertOps { .. })).to_string(),
+        ]);
+    }
+    let mut out = format!(
+        "straggler-evict — node 3 runs 70% slow from t=1.1h for 5h ({} hard failures over {})\n{}",
+        trace.events.len(),
+        fmt_duration(trace.config.duration_s),
+        t.render()
+    );
+    let _ = writeln!(
+        out,
+        "detection advantage: {:.3}× accumulated WAF",
+        on.accumulated_waf / off.accumulated_waf.max(1.0)
+    );
+    out.push_str("\ncost ledger (Σ over committed plans):\n");
+    out.push_str(&ledger_table(&[("detect-and-evict", on), ("oblivious", off)]));
+    out
+}
+
+/// In-band health observation: detect-and-evict vs degradation-oblivious
+/// goodput on the gray straggler trace, with the ledger columns of both.
+pub fn straggler_evict(seed: u64) -> String {
+    let (trace, on, off) = straggler_evict_runs(seed);
+    straggler_evict_render(&trace, &on, &off)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1143,6 +1242,43 @@ mod tests {
         let out = fleet_lemon_render(&trace, &on, &off);
         assert!(out.contains("LEMON"), "the health report must flag node 5:\n{out}");
         assert!(out.contains("quarantine advantage"));
+    }
+
+    #[test]
+    fn straggler_evict_detection_beats_oblivious() {
+        // the acceptance property: pricing the gray straggler through the
+        // ledger and evicting it must beat tolerating it for five hours
+        let (trace, on, off) = straggler_evict_runs(42);
+        assert!(
+            on.accumulated_waf > off.accumulated_waf,
+            "detect-and-evict {} must beat oblivious {}",
+            on.accumulated_waf,
+            off.accumulated_waf
+        );
+        // the eviction is a ledger decision: the committed plan reconciles
+        // with a positive degradation penalty
+        assert!(
+            on.decision_log.actions().any(|a| matches!(
+                a,
+                Action::ApplyPlan { plan, .. } if plan.breakdown.degradation_penalty > 0.0
+            )),
+            "eviction replan must carry the degradation term"
+        );
+        assert!(
+            on.decision_log
+                .actions()
+                .any(|a| matches!(a, Action::IsolateNode { node } if *node == NodeId(3))),
+            "the straggler must be evicted"
+        );
+        // the oblivious run never sees a verdict, so it never isolates
+        assert!(
+            !off.decision_log.actions().any(|a| matches!(a, Action::IsolateNode { .. })),
+            "degradation-oblivious run must not evict"
+        );
+        let out = straggler_evict_render(&trace, &on, &off);
+        assert!(out.contains("detection advantage"));
+        assert!(out.contains("detect-and-evict") && out.contains("oblivious"));
+        assert!(out.contains("Σ degradation pen."));
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub use policies::{
 use crate::config::{ClusterSpec, ModelSpec, TaskSpec, UnicronConfig};
 use crate::engine::EventQueue;
 use crate::failure::{LifecycleKind, Severity, Trace};
+use crate::health::DegradationKind;
 use crate::placement::{Layout, TaskMoves};
 use crate::planner::{Plan, PlanTask};
 use crate::proto::{Action, CoordEvent, DecisionLog, NodeId, TaskId, WorkerCount};
@@ -48,6 +49,11 @@ use crate::transition::resolve_source;
 /// never materializes state bytes; 64 MiB keeps manifests of a 100+ GB
 /// optimizer state at a few thousand ids).
 const SIM_CHUNK_BYTES: u64 = 64 << 20;
+
+/// Nominal healthy per-step duration for in-band timing reports, seconds —
+/// the baseline the coordinator's streaming estimators learn. A node
+/// degraded by `slow_frac` reports `SIM_STEP_S / (1 - slow_frac)` instead.
+const SIM_STEP_S: f64 = 45.0;
 
 /// Per-task environment state (what is physically running, not what the
 /// policy has decided — decisions live in the policy).
@@ -105,6 +111,15 @@ enum EnvEvent {
     /// snapshot into the [`SnapshotStore`]. Only scheduled under
     /// `store_aware_recovery`; reschedules itself each firing.
     CheckpointTick,
+    /// index into `trace.degradations`: the episode begins.
+    DegradationStart(usize),
+    /// A degradation episode's natural end — the node recovers on its own
+    /// (if the policy never evicted it).
+    DegradationEnd { node: NodeId },
+    /// In-band step-timing report for a watched node (index into
+    /// `trace.degradations`). Scheduled only around degradation episodes,
+    /// so degradation-free traces carry zero extra events.
+    StepReport { di: usize },
 }
 
 /// Execution context for a batch of policy actions: what triggered them and
@@ -239,6 +254,16 @@ pub struct Simulator {
     /// [`CoordEvent::StateResidency`] — only changes are re-emitted.
     last_residency: Vec<Option<(crate::transition::StateSource, f64)>>,
     store_restores: Vec<(f64, f64)>,
+    /// Currently-degraded nodes → `slow_frac`. While a node is here (and
+    /// up), its owner task's WAF is dragged by `1 - slow_frac` — the
+    /// slowest data-parallel worker gates the whole cohort. Empty unless
+    /// the trace schedules degradations.
+    degraded: std::collections::BTreeMap<NodeId, f64>,
+    /// In-band step-report cadence (`cfg.step_report_period_s`).
+    step_period_s: f64,
+    /// Healthy reports emitted before an episode so the coordinator's
+    /// estimators have a warm baseline (`cfg.degradation_min_samples + 2`).
+    health_warm_samples: u32,
 }
 
 /// Staged construction of a [`Simulator`] — replaces the old positional
@@ -337,6 +362,9 @@ impl SimulatorBuilder {
             ckpt_ticks: 0,
             last_residency: vec![None; n_tasks],
             store_restores: Vec::new(),
+            degraded: std::collections::BTreeMap::new(),
+            step_period_s: cfg.step_report_period_s,
+            health_warm_samples: cfg.degradation_min_samples + 2,
             cluster,
             policy,
             params,
@@ -369,7 +397,23 @@ impl Simulator {
     }
 
     fn total_waf(&self) -> f64 {
-        self.tasks.iter().map(|t| t.waf(self.now, self.params.efficiency)).sum()
+        if self.degraded.is_empty() {
+            return self.tasks.iter().map(|t| t.waf(self.now, self.params.efficiency)).sum();
+        }
+        // a degraded (but up) node gates its whole task: the cohort runs at
+        // the slowest worker's pace until the episode ends or the policy
+        // evicts the node
+        let mut waf: Vec<f64> =
+            self.tasks.iter().map(|t| t.waf(self.now, self.params.efficiency)).collect();
+        for (&node, &slow) in &self.degraded {
+            if self.node_down[node.0 as usize] {
+                continue;
+            }
+            if let Some(ti) = self.owner_of(node) {
+                waf[ti] *= 1.0 - slow;
+            }
+        }
+        waf.iter().sum()
     }
 
     fn record(&mut self) {
@@ -731,6 +775,23 @@ impl Simulator {
         if self.store_aware && self.ckpt_interval_s > 0.0 {
             self.queue.schedule(self.ckpt_interval_s, EnvEvent::CheckpointTick);
         }
+        for (i, d) in trace.degradations.iter().enumerate() {
+            self.queue.schedule(d.at_s, EnvEvent::DegradationStart(i));
+            if d.kind != DegradationKind::ChurnRisk {
+                self.queue
+                    .schedule(d.at_s + d.duration_s, EnvEvent::DegradationEnd { node: d.node });
+                // in-band step reports: a healthy warm-up run-in so the
+                // coordinator's estimators have a baseline, then reports
+                // through the episode at the configured cadence
+                let period = self.step_period_s.max(1.0);
+                let warm = self.health_warm_samples as f64 * period;
+                let mut t = (d.at_s - warm).max(0.0);
+                while t < d.at_s + d.duration_s {
+                    self.queue.schedule(t, EnvEvent::StepReport { di: i });
+                    t += period;
+                }
+            }
+        }
 
         // Bootstrap: the initial assignment is itself a policy decision (a
         // TaskLaunched replan), applied instantly — §7.5 starts every policy
@@ -800,6 +861,11 @@ impl Simulator {
                     self.on_checkpoint_tick();
                     self.queue.schedule(self.now + self.ckpt_interval_s, EnvEvent::CheckpointTick);
                 }
+                EnvEvent::DegradationStart(i) => self.on_degradation_start(trace, i),
+                EnvEvent::DegradationEnd { node } => {
+                    self.degraded.remove(&node);
+                }
+                EnvEvent::StepReport { di } => self.on_step_report(trace, di),
             }
             self.record();
         }
@@ -952,7 +1018,64 @@ impl Simulator {
         self.execute(&actions, &Ctx::failure(Severity::Sev1, None));
     }
 
-    /// Repair completed. The environment no longer re-admits the node on
+    /// A degradation episode begins. Measured slowdowns (straggler, gray
+    /// bandwidth) start dragging the owner task's WAF and are *not*
+    /// reported to the policy directly — the policy only ever sees the
+    /// in-band [`CoordEvent::StepTiming`] stream, exactly like production.
+    /// [`DegradationKind::ChurnRisk`] advisories are the opposite: there is
+    /// nothing to measure (the provider pushed a warning), so the verdict
+    /// itself is forwarded as [`CoordEvent::NodeDegraded`].
+    fn on_degradation_start(&mut self, trace: &Trace, idx: usize) {
+        let d = &trace.degradations[idx];
+        let ni = d.node.0 as usize;
+        if ni >= self.node_down.len() || self.node_down[ni] || self.retired[ni] {
+            return; // a dead node cannot degrade
+        }
+        if d.kind == DegradationKind::ChurnRisk {
+            let Some(ti) = self.owner_of(d.node) else { return };
+            let ev = CoordEvent::NodeDegraded {
+                node: d.node,
+                task: self.tasks[ti].spec.id,
+                kind: d.kind,
+                slow_frac: d.slow_frac,
+            };
+            let actions = self.decide(ev);
+            self.execute(&actions, &Ctx::quiet());
+        } else {
+            self.degraded.insert(d.node, d.slow_frac.clamp(0.0, 0.999));
+        }
+    }
+
+    /// One in-band step-timing report: the watched node tells the policy how
+    /// long its last step took. Healthy nodes report [`SIM_STEP_S`];
+    /// degraded ones report the stretched duration. If the policy reacts
+    /// (detection verdict crossed the ledger's break-even), the eviction
+    /// executes with SEV1 recovery mechanics — the node is policy-fenced,
+    /// its task replans without it, and the WAF drag ends.
+    fn on_step_report(&mut self, trace: &Trace, di: usize) {
+        let node = trace.degradations[di].node;
+        let ni = node.0 as usize;
+        if ni >= self.node_down.len() || self.node_down[ni] || self.retired[ni] {
+            return; // fenced or dead nodes run no steps
+        }
+        let Some(ti) = self.owner_of(node) else { return };
+        let t = &self.tasks[ti];
+        if !t.active || t.workers == 0 || t.down_until.is_some_and(|u| self.now < u) {
+            return; // no steps while the task is down or gone
+        }
+        let duration_s = match self.degraded.get(&node) {
+            Some(&slow) => SIM_STEP_S / (1.0 - slow),
+            None => SIM_STEP_S,
+        };
+        let ev = CoordEvent::StepTiming { node, task: self.tasks[ti].spec.id, duration_s };
+        let actions = self.decide(ev);
+        if !actions.is_empty() {
+            self.execute(&actions, &Ctx::failure(Severity::Sev1, Some(ti)));
+            self.degraded.remove(&node);
+        }
+    }
+
+    /// Repair completed. The environment no longer re-admits a node on
     /// its own: it reports [`CoordEvent::NodeRepaired`] and executes
     /// whatever the policy decides — rejoin (`SpareRetained`), return to
     /// the provider (`SpareReleased`), or fence for good
@@ -1312,6 +1435,159 @@ mod tests {
             r.decision_log.events().any(|e| matches!(e, CoordEvent::StateResidency { .. })),
             "peer loss must surface residency changes"
         );
+    }
+
+    #[test]
+    fn straggler_is_detected_in_band_and_eviction_beats_tolerating() {
+        let (cluster, cfg, specs) = setup();
+        let tc = TraceConfig {
+            name: "straggler".into(),
+            duration_s: 6.0 * 3600.0,
+            n_nodes: cluster.n_nodes,
+            expect_sev1: 0.0,
+            expect_other: 0.0,
+            repair_min_s: 86400.0,
+            repair_max_s: 86400.0,
+        };
+        let trace = Trace::generate(tc, 1).with_straggler_onset(
+            crate::proto::NodeId(3),
+            4000.0,
+            0.7,
+            18000.0,
+        );
+        let mut off_cfg = cfg.clone();
+        off_cfg.degradation_detection = false;
+        let run_with = |c: &UnicronConfig| {
+            Simulator::builder()
+                .cluster(cluster.clone())
+                .config(c.clone())
+                .policy(PolicyKind::Unicron)
+                .tasks(&specs)
+                .build()
+                .run(&trace)
+        };
+        let on = run_with(&cfg);
+        let off = run_with(&off_cfg);
+        // the policy only ever saw the in-band timing stream
+        assert!(on.decision_log.events().any(|e| matches!(e, CoordEvent::StepTiming { .. })));
+        assert!(
+            !on.decision_log.events().any(|e| matches!(e, CoordEvent::NodeDegraded { .. })),
+            "measured slowdowns are detected, not announced"
+        );
+        // detection-on evicts the straggler and pages ops about it
+        let evicted = on
+            .decision_log
+            .iter()
+            .any(|en| {
+                matches!(en.event, CoordEvent::StepTiming { .. })
+                    && en.actions.iter().any(
+                        |a| matches!(a, Action::IsolateNode { node: crate::proto::NodeId(3) }),
+                    )
+            });
+        assert!(evicted, "the sustained straggler must be evicted");
+        assert!(on.alerts >= 1);
+        // detection-off drags the whole cohort for the full episode
+        assert!(
+            !off.decision_log.actions().any(|a| matches!(a, Action::IsolateNode { .. })),
+            "oblivious run must not evict"
+        );
+        assert!(
+            on.accumulated_waf > off.accumulated_waf,
+            "detect-and-evict must beat tolerating: on {} vs off {}",
+            on.accumulated_waf,
+            off.accumulated_waf
+        );
+        // deterministic — the corpus contract extends to degradations
+        let again = run_with(&cfg);
+        assert_eq!(on.decision_log, again.decision_log);
+        assert_eq!(on.accumulated_waf, again.accumulated_waf);
+    }
+
+    #[test]
+    fn mild_gray_bandwidth_is_tolerated_but_costs_goodput() {
+        let (cluster, cfg, specs) = setup();
+        let tc = TraceConfig {
+            name: "gray".into(),
+            duration_s: 6.0 * 3600.0,
+            n_nodes: cluster.n_nodes,
+            expect_sev1: 0.0,
+            expect_other: 0.0,
+            repair_min_s: 86400.0,
+            repair_max_s: 86400.0,
+        };
+        let quiet = Trace::generate(tc.clone(), 1);
+        let gray = Trace::generate(tc, 1).with_gray_bandwidth(
+            crate::proto::NodeId(2),
+            5000.0,
+            0.10,
+            8000.0,
+        );
+        let run_with = |t: &Trace| {
+            Simulator::builder()
+                .cluster(cluster.clone())
+                .config(cfg.clone())
+                .policy(PolicyKind::Unicron)
+                .tasks(&specs)
+                .build()
+                .run(t)
+        };
+        let healthy = run_with(&quiet);
+        let r = run_with(&gray);
+        // a 10% slowdown sits below the ledger's break-even: no eviction,
+        // but the drag is real while the episode lasts
+        assert!(!r.decision_log.actions().any(|a| matches!(a, Action::IsolateNode { .. })));
+        assert!(
+            r.accumulated_waf < healthy.accumulated_waf,
+            "gray episode must cost goodput: {} vs {}",
+            r.accumulated_waf,
+            healthy.accumulated_waf
+        );
+        // and it ends on its own — the final WAF level is back to healthy
+        assert_eq!(r.waf_series.last().unwrap().1, healthy.waf_series.last().unwrap().1);
+    }
+
+    #[test]
+    fn churn_advisories_flow_as_node_degraded_verdicts() {
+        let (cluster, cfg, specs) = setup();
+        let tc = TraceConfig {
+            name: "churn".into(),
+            duration_s: 6.0 * 3600.0,
+            n_nodes: cluster.n_nodes,
+            expect_sev1: 0.0,
+            expect_other: 0.0,
+            repair_min_s: 3600.0,
+            repair_max_s: 7200.0,
+        };
+        let trace = Trace::generate(tc, 1).with_spot_churn(3, 120.0, 9);
+        let r = Simulator::builder()
+            .cluster(cluster)
+            .config(cfg)
+            .policy(PolicyKind::Unicron)
+            .tasks(&specs)
+            .build()
+            .run(&trace);
+        assert!(
+            r.decision_log.events().any(|e| matches!(
+                e,
+                CoordEvent::NodeDegraded { kind: DegradationKind::ChurnRisk, .. }
+            )),
+            "churn advisories must reach the policy as typed verdicts"
+        );
+        // and the preemptions themselves still land as SEV1s
+        assert!(r
+            .decision_log
+            .events()
+            .any(|e| matches!(e, CoordEvent::ErrorReport { .. } | CoordEvent::NodeLost { .. })));
+    }
+
+    #[test]
+    fn degradation_free_traces_emit_no_timing_events() {
+        let trace = Trace::generate(TraceConfig::trace_a(), 42);
+        let r = run(PolicyKind::Unicron, &trace);
+        assert!(!r.decision_log.events().any(|e| matches!(
+            e,
+            CoordEvent::StepTiming { .. } | CoordEvent::NodeDegraded { .. }
+        )));
     }
 
     #[test]

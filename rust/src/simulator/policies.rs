@@ -606,6 +606,10 @@ impl RecoveryPolicy for BaselinePolicy {
             // residency reports change nothing for them
             CoordEvent::StateResidency { .. } => vec![],
             CoordEvent::ReattemptResult { .. } | CoordEvent::RestartResult { .. } => vec![],
+            // baselines have no in-band health observers: timing streams and
+            // degradation verdicts fall on the floor — the gray-failure gap
+            // the `straggler-evict` experiment measures is Unicron's alone
+            CoordEvent::StepTiming { .. } | CoordEvent::NodeDegraded { .. } => vec![],
             // baselines have no consolidated-dispatch path: a burst is the
             // member events delivered back to back — the behavioural gap
             // under simultaneous failures (one replan vs N) is Unicron's

@@ -292,6 +292,9 @@ pub struct SpanPlan {
     pub running_reward: f64,
     pub transition_penalty: f64,
     pub detection_penalty: f64,
+    /// Detection-latency cost of the degradation eviction this plan
+    /// executes (0 for plans not triggered by a degradation verdict).
+    pub degradation_penalty: f64,
     /// [`crate::transition::StateSource::name`] wire tag.
     pub state_source: &'static str,
     pub workers_used: u32,
@@ -347,6 +350,7 @@ impl DecisionSpan {
                     .with("running_reward", p.running_reward)
                     .with("transition_penalty", p.transition_penalty)
                     .with("detection_penalty", p.detection_penalty)
+                    .with("degradation_penalty", p.degradation_penalty)
                     .with("state_source", p.state_source)
                     .with("workers_used", p.workers_used)
                     .with("transition_s", p.transition_s)
@@ -712,6 +716,7 @@ mod tests {
             running_reward: 1.5,
             transition_penalty: 0.4,
             detection_penalty: 0.1,
+            degradation_penalty: 0.0,
             state_source: "dp_replica",
             workers_used: 8,
             transition_s: 12.0,

@@ -48,6 +48,9 @@ pub struct IncidentReplan {
     pub running_reward: f64,
     pub transition_penalty: f64,
     pub detection_penalty: f64,
+    /// Degradation detection-latency cost (0 unless the replan evicted a
+    /// degraded node — the wire-v8 health observation path).
+    pub degradation_penalty: f64,
     /// [`crate::transition::StateSource::name`] tag.
     pub state_source: String,
     pub workers_used: u32,
@@ -181,6 +184,7 @@ impl Timeline {
                             running_reward: plan.breakdown.running_reward,
                             transition_penalty: plan.breakdown.transition_penalty,
                             detection_penalty: plan.breakdown.detection_penalty,
+                            degradation_penalty: plan.breakdown.degradation_penalty,
                             state_source: plan.breakdown.state_source.name().into(),
                             workers_used: plan.workers_used,
                             transition_s: plan.transition_seconds(),
@@ -285,6 +289,22 @@ impl Timeline {
                     ),
                 );
             }
+            // per-step timing observations are the raw health stream — far
+            // too chatty for the narrative ring (one per node per step);
+            // they surface only when a verdict or eviction comes of them
+            CoordEvent::StepTiming { .. } => {}
+            CoordEvent::NodeDegraded { node, task, kind, slow_frac } => {
+                self.push_entry(
+                    at_s,
+                    "node_degraded",
+                    format!(
+                        "node {node} degraded: {} (task {}, running {:.0}% slow)",
+                        kind.name(),
+                        task.0,
+                        slow_frac * 100.0
+                    ),
+                );
+            }
         }
     }
 
@@ -343,6 +363,7 @@ impl Timeline {
                     .with("running_reward", rp.running_reward)
                     .with("transition_penalty", rp.transition_penalty)
                     .with("detection_penalty", rp.detection_penalty)
+                    .with("degradation_penalty", rp.degradation_penalty)
                     .with("state_source", rp.state_source.as_str())
                     .with("workers_used", rp.workers_used)
                     .with("transition_s", rp.transition_s);
@@ -413,6 +434,7 @@ impl Timeline {
                         running_reward: need_f64(p, "running_reward")?,
                         transition_penalty: need_f64(p, "transition_penalty")?,
                         detection_penalty: need_f64(p, "detection_penalty")?,
+                        degradation_penalty: need_f64(p, "degradation_penalty")?,
                         state_source: need_str(p, "state_source")?,
                         workers_used: need_f64(p, "workers_used")? as u32,
                         transition_s: need_f64(p, "transition_s")?,
@@ -498,6 +520,15 @@ fn isolation_cause(event: &CoordEvent, node: NodeId) -> (String, f64, Option<Tas
         CoordEvent::ReattemptResult { node: n, task, ok: false } if *n == node => {
             ("reattempt_escalation".into(), cost::DETECT_PROCESS_S, Some(*task))
         }
+        // in-band health evictions: the verdict (or the timing stream that
+        // produced one) fenced the node; detection took the configured
+        // observation window, not a Table 2 detector
+        CoordEvent::NodeDegraded { node: n, task, kind, .. } if *n == node => {
+            (format!("degraded:{}", kind.name()), cost::DETECT_DEGRADATION_S, Some(*task))
+        }
+        CoordEvent::StepTiming { node: n, task, .. } if *n == node => {
+            ("degraded".into(), cost::DETECT_DEGRADATION_S, Some(*task))
+        }
         CoordEvent::Batch(members) => members
             .iter()
             .map(|m| isolation_cause(m, node))
@@ -532,12 +563,20 @@ fn render_incident(n: usize, inc: &Incident) -> Result<String, String> {
     };
     // the standing invariant, enforced at render time: breakdown terms
     // reconcile exactly (within float tolerance) to the plan objective
-    let recon = rp.running_reward - rp.transition_penalty - rp.detection_penalty;
+    let recon = rp.running_reward
+        - rp.transition_penalty
+        - rp.detection_penalty
+        - rp.degradation_penalty;
     let tol = 1e-6 * rp.objective.abs().max(1.0);
     if (recon - rp.objective).abs() > tol {
         return Err(format!(
-            "incident {n}: cost terms do not reconcile: {} − {} − {} = {} ≠ objective {}",
-            rp.running_reward, rp.transition_penalty, rp.detection_penalty, recon, rp.objective
+            "incident {n}: cost terms do not reconcile: {} − {} − {} − {} = {} ≠ objective {}",
+            rp.running_reward,
+            rp.transition_penalty,
+            rp.detection_penalty,
+            rp.degradation_penalty,
+            recon,
+            rp.objective
         ));
     }
     if !rp.transition_s.is_finite() || rp.transition_s < 0.0 {
@@ -555,8 +594,13 @@ fn render_incident(n: usize, inc: &Incident) -> Result<String, String> {
         rp.workers_used,
         rp.state_source
     ));
+    let degradation = if rp.degradation_penalty != 0.0 {
+        format!(" − degradation {}", fmt_si(rp.degradation_penalty))
+    } else {
+        String::new()
+    };
     out.push_str(&format!(
-        "             objective {} = reward {} − transition {} − detection {}\n",
+        "             objective {} = reward {} − transition {} − detection {}{degradation}\n",
         fmt_si(rp.objective),
         fmt_si(rp.running_reward),
         fmt_si(rp.transition_penalty),
@@ -741,6 +785,61 @@ mod tests {
         assert!(Timeline::from_value(&Value::obj()).is_err());
         let broken = Value::obj().with("entries", Value::Arr(vec![Value::obj()]));
         assert!(Timeline::from_value(&broken).is_err());
+    }
+
+    #[test]
+    fn degradation_eviction_renders_as_an_incident() {
+        let mut t = Timeline::default();
+        // the raw stream stays off the narrative ring
+        t.record(
+            90.0,
+            &CoordEvent::StepTiming { node: NodeId(5), task: TaskId(1), duration_s: 45.0 },
+            &[],
+            None,
+        );
+        assert!(t.entries().is_empty(), "timing samples are too chatty for history");
+        // a verdict shows up as history even when tolerated
+        t.record(
+            95.0,
+            &CoordEvent::NodeDegraded {
+                node: NodeId(6),
+                task: TaskId(1),
+                kind: crate::health::DegradationKind::ChurnRisk,
+                slow_frac: 0.8,
+            },
+            &[],
+            None,
+        );
+        assert_eq!(t.entries().len(), 1);
+        assert!(t.entries()[0].detail.contains("churn_risk"), "{:?}", t.entries()[0]);
+        // the eviction path: a timing sample crosses the ledger's break-even
+        let mut plan = sev1_plan(1e12);
+        plan.breakdown.degradation_penalty = 5e9;
+        plan.breakdown.running_reward += 5e9; // keep the ledger reconciling
+        t.record(
+            120.0,
+            &CoordEvent::StepTiming { node: NodeId(5), task: TaskId(1), duration_s: 135.0 },
+            &[
+                Action::IsolateNode { node: NodeId(5) },
+                Action::AlertOps { message: "DEGRADED".into() },
+                Action::ApplyPlan { plan, reason: PlanReason::Sev1Failure },
+            ],
+            None,
+        );
+        let incs: Vec<&Incident> = t.incidents().collect();
+        assert_eq!(incs.len(), 1);
+        let inc = incs[0];
+        assert_eq!(inc.kind, "degraded");
+        assert_eq!(inc.task, Some(TaskId(1)));
+        assert_eq!(inc.detection_s, cost::DETECT_DEGRADATION_S);
+        let rp = inc.replan.as_ref().unwrap();
+        assert_eq!(rp.degradation_penalty, 5e9);
+        let text = t.render().expect("degradation incidents must reconcile and render");
+        assert!(text.contains("degraded"), "{text}");
+        assert!(text.contains("− degradation"), "{text}");
+        // and the value round trip keeps the new term
+        let back = Timeline::from_value(&t.to_value()).expect("round trip");
+        assert_eq!(back, t);
     }
 
     #[test]

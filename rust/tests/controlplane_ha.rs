@@ -86,6 +86,12 @@ fn standalone_node_elects_itself_and_serves() {
     let resp = client.ingest_event(&CoordEvent::NodeLost { node: NodeId(1) }, None).unwrap();
     assert!(rpc::is_ok(&resp), "ingest rejected: {}", resp.encode());
     assert!(wait_committed(&cp, 1, Duration::from_secs(5)));
+    // an in-band step-timing report (wire v8) commits through the same path
+    let step =
+        CoordEvent::StepTiming { node: NodeId(0), task: TaskId(0), duration_s: 45.0 };
+    let resp = client.ingest_event(&step, None).unwrap();
+    assert!(rpc::is_ok(&resp), "step timing rejected: {}", resp.encode());
+    assert!(wait_committed(&cp, 2, Duration::from_secs(5)));
 
     // all four reports come back in the shared versioned envelope
     for which in ["health", "layout", "store", "metrics"] {
@@ -97,17 +103,32 @@ fn standalone_node_elects_itself_and_serves() {
         );
         assert!(report.get("at_s").and_then(Value::as_f64).is_some());
     }
+    // the health report's node rows carry the wire-v8 observability
+    // columns: per-node degradation score + hazard-adjusted MTBF
+    let health = client.get_report("health").unwrap();
+    let nodes = health.get("nodes").and_then(Value::as_arr).expect("nodes column");
+    assert!(!nodes.is_empty(), "fleet must list the seeded nodes");
+    for n in nodes {
+        assert!(
+            n.get("degradation_score").and_then(Value::as_f64).is_some_and(|s| s >= 0.0),
+            "node row missing degradation_score"
+        );
+        assert!(
+            n.get("hazard_mtbf_s").and_then(Value::as_f64).is_some_and(|m| m > 0.0),
+            "node row missing hazard_mtbf_s"
+        );
+    }
     // cp.* instruments are registry-backed and ride the metrics report
     let metrics = client.get_report("metrics").unwrap();
     let counters = metrics.get("registry").and_then(|r| r.get("counters")).cloned();
     let counters = counters.expect("metrics report carries the registry");
-    assert_eq!(counters.get("cp.events_ingested").and_then(Value::as_u64), Some(1));
+    assert_eq!(counters.get("cp.events_ingested").and_then(Value::as_u64), Some(2));
     assert!(counters.get("cp.sessions").and_then(Value::as_u64).is_some());
     assert!(counters.get("cp.rejects_backpressure").and_then(Value::as_u64).is_some());
 
     let plan = client.query_plan().unwrap();
     assert_eq!(plan.get("role").and_then(Value::as_str), Some("leader"));
-    assert_eq!(plan.get("committed").and_then(Value::as_u64), Some(1));
+    assert_eq!(plan.get("committed").and_then(Value::as_u64), Some(2));
     assert!(plan.get("layout").is_some());
     cp.shutdown();
 }

@@ -7,6 +7,7 @@ use unicron::config::{table3_case, ClusterSpec, TaskSpec, UnicronConfig};
 use unicron::coordinator::Coordinator;
 use unicron::cost::CostBreakdown;
 use unicron::failure::{ErrorKind, Trace, TraceConfig};
+use unicron::health::DegradationKind;
 use unicron::placement::Layout;
 use unicron::planner::{Plan, PlanTask};
 use unicron::proto::{Action, CoordEvent, DecisionLog, NodeId, PlanReason, TaskId};
@@ -65,6 +66,26 @@ fn every_event_variant_roundtrips_for_every_error_kind() {
             roundtrip_event(&CoordEvent::StateResidency { task: TaskId(3), source, restore_s });
         }
     }
+    // wire v8: in-band health observation — step-timing samples with
+    // non-representable f64s, and degradation verdicts across the full
+    // typed kind vocabulary
+    for duration_s in [45.0, 0.1 + 0.2 /* 0.30000000000000004 */, 1e9] {
+        roundtrip_event(&CoordEvent::StepTiming {
+            node: NodeId(3),
+            task: TaskId(1),
+            duration_s,
+        });
+    }
+    for &kind in DegradationKind::all() {
+        for slow_frac in [0.0, 1.0 / 3.0, 0.95] {
+            roundtrip_event(&CoordEvent::NodeDegraded {
+                node: NodeId(7),
+                task: TaskId(2),
+                kind,
+                slow_frac,
+            });
+        }
+    }
 }
 
 #[test]
@@ -104,6 +125,7 @@ fn every_action_variant_roundtrips() {
                     running_reward: 1.234567890123e18 + k * 7.7e12,
                     transition_penalty: k * 7.7e12,
                     detection_penalty: k * 5.6e11,
+                    degradation_penalty: k * 3.3e11,
                     horizon_s: 148437.5 + k,
                     mtbf_per_gpu_s: 1.9e7 - k,
                     spare_value: if i % 2 == 0 { 0.0 } else { 4.2e14 + k },
@@ -150,6 +172,33 @@ fn tampered_artifacts_are_rejected_not_skipped() {
     assert!(DecisionLog::from_bytes(b"\xff\xfe not json").is_err());
     // the untampered artifact still decodes
     assert_eq!(DecisionLog::from_bytes(text.as_bytes()).unwrap(), log);
+
+    // wire v8: a degradation verdict with an unknown kind is rejected, not
+    // defaulted — a replayed eviction must mean what this build thinks it
+    // means
+    let mut log8 = DecisionLog::new();
+    log8.record(
+        3.0,
+        CoordEvent::NodeDegraded {
+            node: NodeId(2),
+            task: TaskId(0),
+            kind: DegradationKind::Straggler,
+            slow_frac: 0.4,
+        },
+        vec![],
+    );
+    let text8 = String::from_utf8(log8.to_bytes()).unwrap();
+    let bad = text8.replace("\"straggler\"", "\"cosmic_ray\"");
+    assert!(bad != text8, "tamper must hit the kind field: {text8}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // unknown v8-era event variants reject the same way
+    let bad = text8.replace("node_degraded", "node_enlightened");
+    assert!(bad != text8 && DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // a verdict stripped of its measured slow fraction is rejected too
+    let bad = text8.replace(",\"slow_frac\":0.4", "");
+    assert!(bad != text8, "tamper must hit the slow_frac field: {text8}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    assert_eq!(DecisionLog::from_bytes(text8.as_bytes()).unwrap(), log8);
 }
 
 /// The wire-v7 contract: entries carry their commit sequence number, the
@@ -159,7 +208,9 @@ fn tampered_artifacts_are_rejected_not_skipped() {
 /// trustworthy, so a follower can detect dropped or reordered commits.
 #[test]
 fn v7_seq_tampering_is_rejected_not_renumbered() {
-    assert_eq!(unicron::proto::DECISION_LOG_VERSION, 7);
+    // v8 added the health variants + the degradation ledger term; the v7
+    // seq contract is unchanged
+    assert_eq!(unicron::proto::DECISION_LOG_VERSION, 8);
     let mut log = DecisionLog::new();
     log.record(1.0, CoordEvent::NodeLost { node: NodeId(1) }, vec![]);
     log.record(2.0, CoordEvent::NodeJoined { node: NodeId(1) }, vec![]);
@@ -200,6 +251,7 @@ fn tampered_breakdowns_are_rejected_not_skipped() {
                     running_reward: 8.25e17,
                     transition_penalty: 0.0,
                     detection_penalty: 0.0,
+                    degradation_penalty: 0.0,
                     horizon_s: 150000.0,
                     mtbf_per_gpu_s: 1.9e7,
                     spare_value: 0.0,
@@ -221,8 +273,13 @@ fn tampered_breakdowns_are_rejected_not_skipped() {
     let bad = text.replace(",\"transition_penalty\":0", "");
     assert!(bad != text, "tamper must hit the penalty term: {text}");
     assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
-    // detection_penalty sorts first in the breakdown object
-    let bad = text.replace("{\"detection_penalty\":0,", "{");
+    // degradation_penalty (wire v8) sorts first in the breakdown object —
+    // stripping the leading term is rejected, not defaulted
+    let bad = text.replace("{\"degradation_penalty\":0,", "{");
+    assert!(bad != text, "tamper must hit the degradation term: {text}");
+    assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
+    // ...and so is a mid-object strip of the detection term
+    let bad = text.replace(",\"detection_penalty\":0,", ",");
     assert!(bad != text, "tamper must hit the detection term: {text}");
     assert!(DecisionLog::from_bytes(bad.as_bytes()).is_err());
     // v4: a plan stripped of its layout is rejected, not defaulted —

@@ -29,7 +29,12 @@ use unicron::simulator::{PolicyKind, SimResult, Simulator};
 /// is pinned at scale; `WarmPeerFailover` runs store-aware recovery on a
 /// quiet trace with one injected SEV1 after several checkpoint ticks, so
 /// the snapshot-store execution path (delta checkpoints, residency events,
-/// measured-tier restores) is pinned bit-for-bit.
+/// measured-tier restores) is pinned bit-for-bit; `StragglerOnset` overlays
+/// a sustained gray straggler (in-band step-timing streams, a
+/// ledger-priced eviction) and `GrayBandwidth` a mild partial-bandwidth
+/// degradation the ledger tolerates — both health-layer scenario classes
+/// whose wire-v8 StepTiming/NodeDegraded surface must replay
+/// bit-identically.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Scenario {
     A,
@@ -41,6 +46,8 @@ enum Scenario {
     RackDrain,
     LargeFleetBurst,
     WarmPeerFailover,
+    StragglerOnset,
+    GrayBandwidth,
 }
 
 fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
@@ -49,7 +56,9 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
         | Scenario::DomainBurst
         | Scenario::Lemon
         | Scenario::Fragmented
-        | Scenario::RackDrain => Trace::generate(TraceConfig::trace_a(), seed),
+        | Scenario::RackDrain
+        | Scenario::StragglerOnset
+        | Scenario::GrayBandwidth => Trace::generate(TraceConfig::trace_a(), seed),
         Scenario::B | Scenario::HeteroCost => Trace::generate(TraceConfig::trace_b(), seed),
         // three 6-node SEV1 bursts at bit-identical instants on a 16k-node
         // fleet — the shape pop_simultaneous/Batch dispatch exists for;
@@ -91,6 +100,16 @@ fn make_trace(scenario: Scenario, seed: u64, churn: bool) -> Trace {
         }
         Scenario::RackDrain => {
             trace = trace.with_rack_drain((seed % 4) as u32, 4, 86400.0, 3600.0);
+        }
+        // a sustained straggler: one node runs ~65% slow for five hours —
+        // the in-band step-timing stream detects it and the ledger evicts
+        Scenario::StragglerOnset => {
+            trace = trace.with_straggler_onset(NodeId((seed % 16) as u32), 4000.0, 0.65, 18000.0);
+        }
+        // mild partial bandwidth: above the warn band, below break-even —
+        // the ledger tolerates, so the drag itself must be reproducible
+        Scenario::GrayBandwidth => {
+            trace = trace.with_gray_bandwidth(NodeId((seed % 16) as u32), 3000.0, 0.1, 14400.0);
         }
         Scenario::A
         | Scenario::B
@@ -200,6 +219,11 @@ const CORPUS: &[(PolicyKind, Scenario, u64, bool)] = &[
     // StateResidency events, measured-tier restore timing) must replay
     // bit-identically, including the store report itself.
     (PolicyKind::Unicron, Scenario::WarmPeerFailover, 8, false),
+    // PR 10: health-observation era — the wire-v8 StepTiming/NodeDegraded
+    // surface: a ledger-priced straggler eviction and a tolerated gray
+    // bandwidth drag must both replay bit-identically.
+    (PolicyKind::Unicron, Scenario::StragglerOnset, 21, false),
+    (PolicyKind::Unicron, Scenario::GrayBandwidth, 4, true),
 ];
 
 #[test]
@@ -232,6 +256,8 @@ fn determinism_property_over_random_seeds_and_policies() {
                 Scenario::Lemon,
                 Scenario::Fragmented,
                 Scenario::RackDrain,
+                Scenario::StragglerOnset,
+                Scenario::GrayBandwidth,
             ]);
             (kind, scenario, rng.next_u64(), rng.f64() < 0.5)
         },

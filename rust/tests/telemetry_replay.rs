@@ -51,12 +51,16 @@ fn gen_event(rng: &mut Xoshiro256) -> CoordEvent {
     let task = TaskId(rng.below(2) as u32);
     let kinds = ErrorKind::all();
     let kind = kinds[rng.below(kinds.len() as u64) as usize];
-    match rng.below(8) {
+    match rng.below(9) {
         0 | 1 | 2 => CoordEvent::ErrorReport { node, task, kind },
         3 => CoordEvent::NodeLost { node },
         4 => CoordEvent::NodeJoined { node },
         5 => CoordEvent::NodeRepaired { node },
         6 => CoordEvent::ReplanDue,
+        // wire v8: in-band step timing — the health monitor's streaming
+        // stats update inside the decide path, so tracing on/off equality
+        // covers degradation detection too
+        7 => CoordEvent::StepTiming { node, task, duration_s: rng.uniform(40.0, 80.0) },
         _ => {
             // burst: two simultaneous reports, the batched-dispatch path
             let other = NodeId(rng.below(6) as u32);
